@@ -1,0 +1,77 @@
+//! Quickstart: the smallest complete Venus program.
+//!
+//! Builds a synthetic 90-second home-camera stream, ingests it through
+//! the real pipeline (scene segmentation → clustering → PJRT embedding →
+//! hierarchical memory), then answers one natural-language query and
+//! prints the latency breakdown.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use venus::config::VenusConfig;
+use venus::coordinator::Venus;
+use venus::eval::build_synth;
+use venus::memory::SynthBackedRaw;
+use venus::util::stats::fmt_duration;
+use venus::video::workload::{DatasetPreset, WorkloadGen};
+
+fn main() -> venus::Result<()> {
+    // 1. a synthetic edge-camera stream (stands in for the camera feed)
+    let synth = build_synth(DatasetPreset::VideoMmeShort, 42)?;
+    println!(
+        "stream: {:.0} s at {} FPS = {} frames, {} scenes",
+        synth.config().duration_s,
+        synth.config().fps,
+        synth.total_frames(),
+        synth.script().scenes.len()
+    );
+
+    // 2. assemble Venus from the default config
+    let cfg = VenusConfig::default();
+    let raw = Box::new(SynthBackedRaw::new(std::sync::Arc::clone(&synth)));
+    let mut venus = Venus::new(cfg, raw, 7)?;
+
+    // 3. ingestion stage: stream the video through the pipeline
+    let stats = venus.ingest_stream(&synth, u64::MAX)?;
+    println!(
+        "ingested: {} frames -> {} partitions -> {} indexed vectors ({}x compression)",
+        stats.frames,
+        stats.partitions,
+        stats.embedded,
+        venus.memory.lock().unwrap().sparsity().round()
+    );
+
+    // 4. querying stage: ask about a concept the generator planted
+    let q = WorkloadGen::new(1, DatasetPreset::VideoMmeShort)
+        .generate(synth.script(), 1)
+        .remove(0);
+    println!("query: \"{}\"", q.text);
+    let (outcome, breakdown) = venus.query(&q.text)?;
+    println!(
+        "selected {} keyframes (AKR used {} draws): {:?}",
+        outcome.selection.frames.len(),
+        outcome.draws,
+        outcome.selection.frames
+    );
+    println!(
+        "latency: edge {} (measured) + upload {} + VLM {} = {} total",
+        fmt_duration(breakdown.edge.total_s()),
+        fmt_duration(breakdown.upload_s),
+        fmt_duration(breakdown.vlm_s),
+        fmt_duration(breakdown.total_s())
+    );
+
+    // 5. did we actually retrieve the evidence?
+    let covered = outcome
+        .selection
+        .frames
+        .iter()
+        .filter(|&&f| q.covers(f))
+        .count();
+    println!(
+        "ground truth: {covered}/{} selected frames fall in the evidence spans {:?}",
+        outcome.selection.frames.len(),
+        q.evidence
+    );
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! surveillance_marathon — long-stream ingestion stress driver.
+//!
+//! Models a fixed-view surveillance camera running for an hour-scale
+//! session (the Video-MME-long regime where the paper's baselines need
+//! 200+ minutes per query).  Demonstrates:
+//!   * sustained real-time ingestion (the paper's challenge ①),
+//!   * bounded memory growth: raw archive off-RAM (NVMe model), sparse
+//!     index growth vs stream length,
+//!   * query latency staying flat as the memory grows (hierarchical
+//!     memory + sparse index property).
+//!
+//! Run: `cargo run --release --example surveillance_marathon`
+
+use std::sync::{Arc, Mutex};
+
+use venus::config::VenusConfig;
+use venus::coordinator::query::{QueryEngine, RetrievalMode};
+use venus::embed::EmbedEngine;
+use venus::ingest::Pipeline;
+use venus::memory::{Hierarchy, SynthBackedRaw};
+use venus::runtime::Runtime;
+use venus::util::stats::{fmt_duration, Table};
+use venus::video::synth::{SynthConfig, VideoSynth};
+use venus::video::workload::{DatasetPreset, WorkloadGen};
+
+const STREAM_S: f64 = 1800.0; // 30-minute marathon
+const CHECKPOINTS: usize = 6;
+
+fn main() -> venus::Result<()> {
+    println!("=== Venus surveillance marathon ({} min stream) ===", STREAM_S / 60.0);
+    let cfg = VenusConfig::default();
+
+    let rt = Runtime::load_default()?;
+    let codes = rt.concept_codes()?;
+    let patch = rt.model().patch;
+    let d_embed = rt.model().d_embed;
+    let synth = Arc::new(VideoSynth::new(
+        SynthConfig {
+            duration_s: STREAM_S,
+            // surveillance: slower scene changes, frequent static stretches
+            scene_len_s: (10.0, 30.0),
+            seed: 90210,
+            ..Default::default()
+        },
+        codes,
+        patch,
+    ));
+    let total = synth.total_frames();
+
+    let memory = Arc::new(Mutex::new(Hierarchy::new(
+        &cfg.memory,
+        d_embed,
+        Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
+    )?));
+    let engine = EmbedEngine::new(rt, cfg.ingest.aux_models)?;
+    let mut pipe = Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory));
+
+    let mut qe = QueryEngine::new(
+        EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+        Arc::clone(&memory),
+        cfg.retrieval.clone(),
+        5,
+    );
+    let queries = WorkloadGen::new(17, DatasetPreset::VideoMmeLong)
+        .generate(synth.script(), 32);
+
+    let mut table = Table::new(vec![
+        "stream pos", "frames", "index vectors", "compression", "raw RAM",
+        "ingest ×RT", "query p50 (measured)",
+    ]);
+
+    let chunk = total / CHECKPOINTS as u64;
+    let mut pushed = 0u64;
+    let started = std::time::Instant::now();
+    for cp in 1..=CHECKPOINTS {
+        let until = (cp as u64 * chunk).min(total);
+        while pushed < until {
+            pipe.push_frame(pushed, &synth.frame(pushed))?;
+            pushed += 1;
+        }
+        // probe query latency at this memory size (use queries whose
+        // evidence is already ingested)
+        let mut lat = venus::util::stats::Samples::default();
+        for q in queries.iter().filter(|q| q.evidence[0].1 < pushed).take(8) {
+            let out = qe.retrieve_with(&q.text, RetrievalMode::Akr)?;
+            lat.push(out.timings.total_s());
+        }
+        let (n_index, sparsity, raw_bytes) = {
+            let m = memory.lock().unwrap();
+            (m.len(), m.sparsity(), m.raw_resident_bytes())
+        };
+        let wall = started.elapsed().as_secs_f64();
+        let stream_time = pushed as f64 / synth.config().fps;
+        table.row(vec![
+            format!("{:.0} min", stream_time / 60.0),
+            pushed.to_string(),
+            n_index.to_string(),
+            format!("{sparsity:.0}×"),
+            format!("{} B", raw_bytes),
+            format!("{:.1}×", stream_time / wall),
+            if lat.is_empty() { "—".into() } else { fmt_duration(lat.p50()) },
+        ]);
+    }
+    let stats = pipe.finish()?;
+    print!("{table}");
+    println!(
+        "final: {} frames, {} partitions, {} indexed vectors, wall {}",
+        stats.frames,
+        stats.partitions,
+        stats.embedded,
+        fmt_duration(stats.wall_s)
+    );
+    memory.lock().unwrap().check_invariants()?;
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python package for Venus (L1 Pallas kernels + L2 JAX model).
+
+Runs exactly once, at `make artifacts` time; the Rust coordinator never
+imports Python on the request path.
+"""

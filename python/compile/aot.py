@@ -1,0 +1,209 @@
+"""AOT export: lower every MEM entry point to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Model parameters are *closed over* at trace time and therefore baked into
+the HLO as constants: each artifact is a self-contained executable that the
+Rust runtime feeds only runtime inputs (frames / tokens / query vectors).
+
+Outputs (under --out-dir, default ../artifacts):
+  embed_image_b{1,8,32}.hlo.txt   image tower
+  embed_text_b1.hlo.txt           text tower (query path)
+  embed_fused_b8.hlo.txt          image tower + aux-prompt fusion (Eq. 3)
+  scene_feat_b8.hlo.txt           Eq. 1 perception features
+  similarity_n1024.hlo.txt        Eq. 4-5 fused retrieval scoring
+  concept_codes.bin               f32 LE [C, patch_dim] planted pixel codes
+  concept_dirs.bin                f32 LE [C, d_embed] embedding directions
+  golden_*.bin                    cross-language numeric goldens
+  manifest.json                   shapes, dtypes, config hash, file list
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.config import MemConfig, SCENE_FEAT_DIM, DEFAULT
+from compile import model, params as params_mod, tokenizer
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: model weights are closed over at trace time
+    # and baked into the module; the default printer elides them as
+    # `constant({...})`, which would NOT round-trip through the text parser.
+    return comp.as_hlo_text(True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_desc(avals):
+    return [
+        {"dtype": str(a.dtype), "shape": list(a.shape)}
+        for a in avals
+    ]
+
+
+def golden_image(cfg: MemConfig, codes: np.ndarray, concept: int) -> np.ndarray:
+    """Deterministic test frame: smooth gradient background with
+    ``codes[concept]`` planted in the top-left watermark patch.  The Rust
+    integration tests regenerate this image bit-for-bit."""
+    s = cfg.img_size
+    yy, xx = np.meshgrid(np.arange(s), np.arange(s), indexing="ij")
+    img = np.stack(
+        [
+            0.25 + 0.5 * xx / (s - 1),
+            0.25 + 0.5 * yy / (s - 1),
+            0.5 + 0.25 * np.sin(2.0 * np.pi * xx / 16.0),
+        ],
+        axis=-1,
+    ).astype(np.float32)
+    # plant the code verbatim (blend weight 1.0 for the golden)
+    p = cfg.patch
+    img[0:p, 0:p, :] = codes[concept].reshape(p, p, 3)
+    return img
+
+
+def build_artifacts(cfg: MemConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    prm = params_mod.init_params(cfg)
+
+    entries = {}
+
+    def export(name, fn, specs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        entries[name] = {
+            "file": fname,
+            "inputs": _io_desc(specs),
+            "outputs": _io_desc(out_avals),
+        }
+        print(f"  {fname:28s} {len(text):>9d} chars")
+
+    s, t = cfg.img_size, cfg.seq_len
+
+    for b in cfg.image_batches:
+        export(
+            f"embed_image_b{b}",
+            functools.partial(model.image_tower, cfg, prm),
+            [_spec((b, s, s, 3))],
+        )
+    export(
+        "embed_text_b1",
+        functools.partial(model.text_tower, cfg, prm),
+        [_spec((1, t), jnp.int32)],
+    )
+    for b in cfg.fused_batches:
+        export(
+            f"embed_fused_b{b}",
+            lambda imgs, toks: model.image_tower(cfg, prm, imgs, aux_tokens=toks),
+            [_spec((b, s, s, 3)), _spec((b, t), jnp.int32)],
+        )
+    for b in cfg.scene_batches:
+        export(f"scene_feat_b{b}", model.scene_feat, [_spec((b, s, s, 3))])
+    export(
+        "similarity_n1024",
+        model.similarity,
+        [
+            _spec((cfg.d_embed,)),
+            _spec((cfg.sim_rows, cfg.d_embed)),
+            _spec((1,)),
+            _spec((1,)),
+        ],
+    )
+
+    # --- binary side-files ---
+    codes = np.asarray(prm["sem"]["codes"], dtype="<f4")
+    dirs = np.asarray(params_mod.concept_directions(prm), dtype="<f4")
+    codes.tofile(os.path.join(out_dir, "concept_codes.bin"))
+    dirs.tofile(os.path.join(out_dir, "concept_dirs.bin"))
+
+    # --- cross-language goldens ---
+    gimg = golden_image(cfg, codes, concept=5)
+    gemb = np.asarray(
+        model.image_tower_ref(cfg, prm, jnp.asarray(gimg)[None]), dtype="<f4"
+    )[0]
+    gtext = "when did concept05 happen in the kitchen"
+    gtok = np.asarray([tokenizer.tokenize(gtext, cfg)], dtype="<i4")
+    gtemb = np.asarray(model.text_tower_ref(cfg, prm, jnp.asarray(gtok)), dtype="<f4")[0]
+    gfeat = np.asarray(model.scene_feat(jnp.asarray(gimg)[None].repeat(8, 0)), dtype="<f4")[0]
+    gimg.astype("<f4").tofile(os.path.join(out_dir, "golden_image.bin"))
+    gemb.tofile(os.path.join(out_dir, "golden_image_emb.bin"))
+    gtok.astype("<i4").tofile(os.path.join(out_dir, "golden_tokens.bin"))
+    gtemb.tofile(os.path.join(out_dir, "golden_text_emb.bin"))
+    gfeat.tofile(os.path.join(out_dir, "golden_scene_feat.bin"))
+
+    manifest = {
+        "config_hash": cfg.config_hash(),
+        "model": {
+            "img_size": cfg.img_size,
+            "patch": cfg.patch,
+            "d_embed": cfg.d_embed,
+            "seq_len": cfg.seq_len,
+            "vocab": cfg.vocab,
+            "n_concepts": cfg.n_concepts,
+            "concept_token_base": cfg.concept_token_base,
+            "sim_rows": cfg.sim_rows,
+            "scene_feat_dim": SCENE_FEAT_DIM,
+            "sem_weight": cfg.sem_weight,
+            "content_weight": cfg.content_weight,
+            "aux_weight": cfg.aux_weight,
+        },
+        "entries": entries,
+        "files": {
+            "concept_codes": {"file": "concept_codes.bin",
+                              "shape": [cfg.n_concepts, cfg.patch_dim]},
+            "concept_dirs": {"file": "concept_dirs.bin",
+                             "shape": [cfg.n_concepts, cfg.d_embed]},
+            "golden_image": {"file": "golden_image.bin",
+                             "shape": [cfg.img_size, cfg.img_size, 3]},
+            "golden_image_emb": {"file": "golden_image_emb.bin",
+                                 "shape": [cfg.d_embed], "concept": 5},
+            "golden_tokens": {"file": "golden_tokens.bin",
+                              "shape": [1, cfg.seq_len], "dtype": "i32",
+                              "text": gtext},
+            "golden_text_emb": {"file": "golden_text_emb.bin",
+                                "shape": [cfg.d_embed]},
+            "golden_scene_feat": {"file": "golden_scene_feat.bin",
+                                  "shape": [SCENE_FEAT_DIM]},
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"  manifest.json                config={cfg.config_hash()}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file target; triggers full export "
+                         "into its directory")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    print(f"AOT export -> {out_dir}")
+    build_artifacts(DEFAULT, out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Model configuration shared by the L1 kernels, L2 model, and AOT export.
+
+All shapes are fixed at AOT time; the Rust runtime validates them against
+the manifest emitted by :mod:`compile.aot`.  The semantic-projection scheme
+(concept codes planted in frames by the Rust synthetic video generator and
+read out by the image tower) is what lets a randomly-initialized dual
+encoder behave like a *trained* multimodal embedding model: image/text
+pairs that share a concept land near each other in the shared space by
+construction.  See DESIGN.md §1 ("BGE-VL-large" row).
+"""
+
+from dataclasses import dataclass, field, asdict
+import hashlib
+import json
+
+
+@dataclass(frozen=True)
+class MemConfig:
+    """Configuration of the compact CLIP-style dual encoder (the MEM)."""
+
+    # --- image tower ---
+    img_size: int = 64           # square RGB input
+    patch: int = 8               # patch side; 64 patches per image
+    d_model: int = 128           # transformer width
+    n_heads: int = 4
+    n_blocks_img: int = 2
+    d_mlp: int = 512
+    # --- text tower ---
+    vocab: int = 512
+    seq_len: int = 16
+    n_blocks_txt: int = 1
+    # --- shared embedding space ---
+    d_embed: int = 64
+    # --- semantic projection (emulates trained cross-modal alignment) ---
+    n_concepts: int = 32         # planted concept vocabulary
+    concept_token_base: int = 2  # token ids [base, base+n_concepts) are concepts
+    sem_weight: float = 4.0      # beta: semantic readout weight
+    content_weight: float = 1.0  # gamma: transformer content weight
+    aux_weight: float = 0.5      # lambda: aux-prompt fusion weight (Eq. 3)
+    # --- misc ---
+    seed: int = 20250710
+    # batch sizes exported for the image tower
+    image_batches: tuple = (1, 8, 32)
+    fused_batches: tuple = (8,)
+    scene_batches: tuple = (8,)
+    sim_rows: int = 1024         # padded index size for the similarity kernel
+
+    @property
+    def n_patches(self) -> int:
+        return (self.img_size // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def config_hash(self) -> str:
+        """Stable hash recorded in the manifest; Rust refuses mismatched artifacts."""
+        blob = json.dumps(asdict(self), sort_keys=True, default=list)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+# Scene-feature geometry (Eq. 1): the frame is divided into a POOL x POOL
+# grid; per cell we emit mean Hue, Saturation, Lightness and Sobel edge
+# energy, giving a 4 * POOL^2 feature vector per frame.
+SCENE_POOL = 4
+SCENE_FEAT_DIM = 4 * SCENE_POOL * SCENE_POOL  # 64
+
+DEFAULT = MemConfig()

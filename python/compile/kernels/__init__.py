@@ -1,0 +1,9 @@
+"""L1 Pallas kernels for the Venus MEM and perception front-end.
+
+- :mod:`compile.kernels.fused_block` — fused transformer block (MHA+MLP)
+- :mod:`compile.kernels.similarity`  — fused cosine similarity + softmax
+- :mod:`compile.kernels.scene_score` — Eq. 1 pooled HSL/edge features
+- :mod:`compile.kernels.ref`         — pure-jnp oracles for all of the above
+"""
+
+from compile.kernels import fused_block, similarity, scene_score, ref  # noqa: F401

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: fused pre-LN transformer block (MHA + MLP).
+
+One grid step processes one sequence of the batch entirely in VMEM:
+LN1 → QKV projection → scaled-dot-product attention → output projection →
+residual → LN2 → MLP (GELU) → residual, with no HBM round-trips between
+the stages.  This is the TPU re-think of the paper's edge-GPU embedding
+hot-spot (DESIGN.md §Hardware-Adaptation): the CUDA version would stage
+tiles through shared memory per threadblock; here the whole (T=64, D=128)
+activation tile plus the weight tiles are VMEM-resident and every matmul
+is MXU-shaped (multiples-of-8 × 128 operands).
+
+VMEM budget per grid step (f32):
+  activations  T×D × ~6 live tensors   ≈ 64·128·4·6   = 196 KiB
+  weights      4·D·D + 2·D·4D + norms  ≈ (65.5k+131k)·4 = 786 KiB
+  attention    H·T·T logits            = 4·64·64·4    = 64 KiB
+  total ≈ 1.05 MiB  — comfortably inside a 16 MiB VMEM core, leaving room
+  for double-buffering the next sequence's activations.
+
+Must run with interpret=True on CPU (Mosaic custom-calls cannot execute on
+the CPU PJRT plugin); the BlockSpecs still express the real HBM↔VMEM
+schedule used for the §Perf estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_kernel(
+    x_ref, ln1g_ref, ln1b_ref, wq_ref, wk_ref, wv_ref, wo_ref,
+    ln2g_ref, ln2b_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref,
+    *, n_heads: int,
+):
+    """Kernel body: x_ref is the [1, T, D] block for this grid step."""
+    x = x_ref[0]                                   # [T, D] in VMEM
+    t, d = x.shape
+    dh = d // n_heads
+
+    def ln(v, g, b):
+        mu = jnp.mean(v, axis=-1, keepdims=True)
+        var = jnp.mean((v - mu) ** 2, axis=-1, keepdims=True)
+        return (v - mu) * jax.lax.rsqrt(var + 1e-6) * g + b
+
+    # --- attention, fused ---
+    xn = ln(x, ln1g_ref[...], ln1b_ref[...])
+    q = (xn @ wq_ref[...]).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    k = (xn @ wk_ref[...]).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    v = (xn @ wv_ref[...]).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    logits = jnp.einsum("htd,hsd->hts", q, k) * (1.0 / jnp.sqrt(float(dh)))
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    att = jnp.einsum("hts,hsd->htd", p, v).transpose(1, 0, 2).reshape(t, d)
+    h = x + att @ wo_ref[...]
+
+    # --- MLP, fused ---
+    z = ln(h, ln2g_ref[...], ln2b_ref[...])
+    z = z @ w1_ref[...] + b1_ref[...]
+    z = jax.nn.gelu(z, approximate=True)
+    o_ref[0] = h + z @ w2_ref[...] + b2_ref[...]
+
+
+def transformer_block(x, p, n_heads: int, *, interpret: bool = True):
+    """Fused transformer block.  x: [B, T, D]; p: param dict (see ref.py).
+
+    Grid = (B,): one sequence per step; weights are broadcast to every step
+    (constant index_map) so Mosaic keeps them VMEM-resident across steps.
+    """
+    b, t, d = x.shape
+    d_mlp = p["w1"].shape[1]
+
+    def bcast(shape):
+        # weight blocks: same block for every grid step
+        return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    return pl.pallas_call(
+        functools.partial(_block_kernel, n_heads=n_heads),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),   # x: one sequence
+            bcast((d,)), bcast((d,)),                        # ln1 g/b
+            bcast((d, d)), bcast((d, d)), bcast((d, d)), bcast((d, d)),  # wq wk wv wo
+            bcast((d,)), bcast((d,)),                        # ln2 g/b
+            bcast((d, d_mlp)), bcast((d_mlp,)),              # w1 b1
+            bcast((d_mlp, d)), bcast((d,)),                  # w2 b2
+        ],
+        out_specs=pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, d), x.dtype),
+        interpret=interpret,
+    )(
+        x, p["ln1_g"], p["ln1_b"], p["wq"], p["wk"], p["wv"], p["wo"],
+        p["ln2_g"], p["ln2_b"], p["w1"], p["b1"], p["w2"], p["b2"],
+    )

@@ -1,0 +1,135 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must
+match its oracle to float tolerance under pytest (including hypothesis
+shape/parameter sweeps).  The oracles are written for clarity, not speed.
+"""
+
+import jax.numpy as jnp
+import jax
+
+from compile.config import SCENE_POOL
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (pre-LN MHA + MLP with residuals)
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, gamma, beta, eps: float = 1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(x, wq, wk, wv, wo, n_heads: int):
+    """Multi-head self attention over x: [T, D]."""
+    t, d = x.shape
+    dh = d // n_heads
+    q = (x @ wq).reshape(t, n_heads, dh).transpose(1, 0, 2)  # [H, T, dh]
+    k = (x @ wk).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    v = (x @ wv).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    logits = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(float(dh))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hts,hsd->htd", probs, v)               # [H, T, dh]
+    out = out.transpose(1, 0, 2).reshape(t, d)
+    return out @ wo
+
+
+def transformer_block(x, p, n_heads: int):
+    """Reference block for one sequence x: [T, D]; p is the param dict."""
+    h = x + attention(
+        layer_norm(x, p["ln1_g"], p["ln1_b"]),
+        p["wq"], p["wk"], p["wv"], p["wo"], n_heads,
+    )
+    z = layer_norm(h, p["ln2_g"], p["ln2_b"])
+    z = jax.nn.gelu(z @ p["w1"] + p["b1"], approximate=True) @ p["w2"] + p["b2"]
+    return h + z
+
+
+def transformer_block_batched(x, p, n_heads: int):
+    """x: [B, T, D]."""
+    return jax.vmap(lambda xi: transformer_block(xi, p, n_heads))(x)
+
+
+# ---------------------------------------------------------------------------
+# Fused similarity + temperature softmax (Eq. 4–5)
+# ---------------------------------------------------------------------------
+
+def similarity_softmax(q, index, tau, n_valid):
+    """Cosine scores of q vs rows of index, and softmax(s / tau) over the
+    first ``n_valid`` rows (padding rows get score 0 / prob 0).
+
+    q: [D] (assumed L2-normalized), index: [N, D] (rows L2-normalized),
+    tau: scalar > 0, n_valid: scalar count (float for AOT friendliness).
+    Returns (scores [N], probs [N]).
+    """
+    n = index.shape[0]
+    scores = index @ q                                    # cosine: inputs normalized
+    valid = jnp.arange(n, dtype=jnp.float32) < n_valid
+    masked = jnp.where(valid, scores / tau, -jnp.inf)
+    m = jnp.max(masked)
+    e = jnp.where(valid, jnp.exp(masked - m), 0.0)
+    probs = e / jnp.sum(e)
+    scores = jnp.where(valid, scores, 0.0)
+    return scores, probs
+
+
+# ---------------------------------------------------------------------------
+# Scene features (Eq. 1): pooled H, S, L, Sobel-edge maps
+# ---------------------------------------------------------------------------
+
+def rgb_to_hsl(rgb):
+    """rgb: [..., 3] in [0,1] -> (h, s, l) each [...], h in [0,1]."""
+    r, g, b = rgb[..., 0], rgb[..., 1], rgb[..., 2]
+    mx = jnp.maximum(jnp.maximum(r, g), b)
+    mn = jnp.minimum(jnp.minimum(r, g), b)
+    c = mx - mn
+    l = 0.5 * (mx + mn)
+    s = jnp.where(c < 1e-8, 0.0, c / (1.0 - jnp.abs(2.0 * l - 1.0) + 1e-8))
+    safe_c = jnp.where(c < 1e-8, 1.0, c)
+    hr = jnp.mod((g - b) / safe_c, 6.0)
+    hg = (b - r) / safe_c + 2.0
+    hb = (r - g) / safe_c + 4.0
+    h = jnp.where(mx == r, hr, jnp.where(mx == g, hg, hb))
+    h = jnp.where(c < 1e-8, 0.0, h / 6.0)
+    return h, s, l
+
+
+def sobel_energy(l):
+    """l: [H, W] lightness -> per-pixel Sobel gradient magnitude (edge pad)."""
+    lp = jnp.pad(l, 1, mode="edge")
+    tl, tc, tr = lp[:-2, :-2], lp[:-2, 1:-1], lp[:-2, 2:]
+    ml, mr = lp[1:-1, :-2], lp[1:-1, 2:]
+    bl, bc, br = lp[2:, :-2], lp[2:, 1:-1], lp[2:, 2:]
+    gx = (tr + 2.0 * mr + br) - (tl + 2.0 * ml + bl)
+    gy = (bl + 2.0 * bc + br) - (tl + 2.0 * tc + tr)
+    return jnp.sqrt(gx * gx + gy * gy + 1e-12)
+
+
+def scene_features_one(frame, pool: int = SCENE_POOL):
+    """frame: [H, W, 3] in [0,1] -> [4 * pool^2] pooled (H, S, L, E) means.
+
+    Layout: [h_cells..., s_cells..., l_cells..., e_cells...] (row-major cells).
+    """
+    h, s, l = rgb_to_hsl(frame)
+    e = sobel_energy(l)
+    size = frame.shape[0]
+    cell = size // pool
+
+    def pooled(m):
+        return m.reshape(pool, cell, pool, cell).mean(axis=(1, 3)).reshape(-1)
+
+    return jnp.concatenate([pooled(h), pooled(s), pooled(l), pooled(e)])
+
+
+def scene_features(frames, pool: int = SCENE_POOL):
+    """frames: [B, H, W, 3] -> [B, 4 * pool^2]."""
+    return jax.vmap(lambda f: scene_features_one(f, pool))(frames)
+
+
+def scene_score(feat_a, feat_b, weights):
+    """Eq. 1: phi = ||w ⊙ (v_i − v_{i−1})||_1 / ||w||_1 with per-channel
+    weights broadcast over pooled cells.  feats: [4*P^2], weights: [4]."""
+    p2 = feat_a.shape[0] // 4
+    w = jnp.repeat(weights, p2)
+    return jnp.sum(w * jnp.abs(feat_a - feat_b)) / jnp.sum(w)

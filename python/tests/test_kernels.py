@@ -1,0 +1,222 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Includes hypothesis sweeps over shapes, temperatures, and input scales, as
+well as hand-picked edge cases (single valid row, saturated colors, etc.).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import MemConfig, SCENE_POOL
+from compile.kernels import fused_block, similarity, scene_score, ref
+from compile import params as params_mod
+
+CFG = MemConfig()
+RNG = np.random.default_rng(0)
+
+
+def _rand(*shape, scale=1.0, rng=RNG):
+    return jnp.asarray(rng.normal(0.0, scale, shape).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def block_params():
+    return params_mod.init_params(CFG)["img"]["blocks"][0]
+
+
+# ---------------------------------------------------------------------------
+# fused transformer block
+# ---------------------------------------------------------------------------
+
+class TestFusedBlock:
+    def test_matches_ref(self, block_params):
+        x = _rand(2, CFG.n_patches, CFG.d_model)
+        got = fused_block.transformer_block(x, block_params, CFG.n_heads)
+        want = ref.transformer_block_batched(x, block_params, CFG.n_heads)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_batch_one(self, block_params):
+        x = _rand(1, CFG.n_patches, CFG.d_model)
+        got = fused_block.transformer_block(x, block_params, CFG.n_heads)
+        want = ref.transformer_block_batched(x, block_params, CFG.n_heads)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_batch_independence(self, block_params):
+        """Row i of the batched output equals the single-sequence output."""
+        x = _rand(4, CFG.n_patches, CFG.d_model)
+        full = fused_block.transformer_block(x, block_params, CFG.n_heads)
+        one = fused_block.transformer_block(x[2:3], block_params, CFG.n_heads)
+        np.testing.assert_allclose(full[2:3], one, rtol=1e-5, atol=1e-5)
+
+    def test_deterministic(self, block_params):
+        x = _rand(2, CFG.n_patches, CFG.d_model)
+        a = fused_block.transformer_block(x, block_params, CFG.n_heads)
+        b = fused_block.transformer_block(x, block_params, CFG.n_heads)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        scale=st.floats(0.01, 4.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, block_params, b, scale, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(b, CFG.n_patches, CFG.d_model, scale=scale, rng=rng)
+        got = fused_block.transformer_block(x, block_params, CFG.n_heads)
+        want = ref.transformer_block_batched(x, block_params, CFG.n_heads)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * scale)
+
+    @settings(max_examples=6, deadline=None)
+    @given(heads=st.sampled_from([1, 2, 4, 8]), t=st.sampled_from([8, 16, 64]))
+    def test_shape_sweep(self, heads, t):
+        """Kernel handles different head counts and sequence lengths."""
+        d, d_mlp = 64, 128
+        rng = np.random.default_rng(heads * 1000 + t)
+        sd = d ** -0.5
+        p = {
+            "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "wq": _rand(d, d, scale=sd, rng=rng), "wk": _rand(d, d, scale=sd, rng=rng),
+            "wv": _rand(d, d, scale=sd, rng=rng), "wo": _rand(d, d, scale=sd, rng=rng),
+            "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+            "w1": _rand(d, d_mlp, scale=sd, rng=rng), "b1": jnp.zeros((d_mlp,)),
+            "w2": _rand(d_mlp, d, scale=d_mlp ** -0.5, rng=rng), "b2": jnp.zeros((d,)),
+        }
+        x = _rand(2, t, d, rng=rng)
+        got = fused_block.transformer_block(x, p, heads)
+        want = ref.transformer_block_batched(x, p, heads)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused similarity + softmax
+# ---------------------------------------------------------------------------
+
+def _unit_rows(n, d, rng):
+    m = rng.normal(size=(n, d)).astype(np.float32)
+    return jnp.asarray(m / np.linalg.norm(m, axis=1, keepdims=True))
+
+
+class TestSimilarity:
+    def _check(self, n, n_valid, tau, seed=0):
+        rng = np.random.default_rng(seed)
+        index = _unit_rows(n, CFG.d_embed, rng)
+        q = _unit_rows(1, CFG.d_embed, rng)[0]
+        got_s, got_p = similarity.similarity_softmax(q, index, tau, float(n_valid))
+        want_s, want_p = ref.similarity_softmax(q, index, tau, float(n_valid))
+        np.testing.assert_allclose(got_s, want_s, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got_p, want_p, rtol=1e-4, atol=1e-6)
+        assert abs(float(jnp.sum(got_p)) - 1.0) < 1e-4
+        # padding rows have zero probability and zero score
+        np.testing.assert_allclose(got_p[n_valid:], 0.0)
+        np.testing.assert_allclose(got_s[n_valid:], 0.0)
+
+    def test_full(self):
+        self._check(1024, 1024, 0.1)
+
+    def test_partial_valid(self):
+        self._check(1024, 700, 0.1)
+
+    def test_single_valid_row(self):
+        self._check(256, 1, 0.5)
+        # one valid row -> its probability is exactly 1
+        rng = np.random.default_rng(7)
+        index = _unit_rows(256, CFG.d_embed, rng)
+        q = _unit_rows(1, CFG.d_embed, rng)[0]
+        _, p = similarity.similarity_softmax(q, index, 0.5, 1.0)
+        assert abs(float(p[0]) - 1.0) < 1e-5
+
+    def test_small_tile_count(self):
+        self._check(128, 128, 0.2)
+
+    def test_uniform_when_tau_large(self):
+        """tau -> inf gives a uniform distribution over valid rows."""
+        rng = np.random.default_rng(3)
+        index = _unit_rows(512, CFG.d_embed, rng)
+        q = _unit_rows(1, CFG.d_embed, rng)[0]
+        _, p = similarity.similarity_softmax(q, index, 1e6, 512.0)
+        np.testing.assert_allclose(p, 1.0 / 512.0, rtol=1e-3)
+
+    def test_identical_query_row_dominates(self):
+        """With small tau, an exact-match row takes nearly all the mass."""
+        rng = np.random.default_rng(4)
+        index = np.asarray(_unit_rows(256, CFG.d_embed, rng))
+        q = index[37]
+        _, p = similarity.similarity_softmax(
+            jnp.asarray(q), jnp.asarray(index), 0.02, 256.0
+        )
+        assert int(jnp.argmax(p)) == 37
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.sampled_from([128, 256, 512, 1024]),
+        frac=st.floats(0.01, 1.0),
+        tau=st.floats(0.05, 5.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, frac, tau, seed):
+        n_valid = max(1, int(n * frac))
+        self._check(n, n_valid, tau, seed)
+
+
+# ---------------------------------------------------------------------------
+# scene features
+# ---------------------------------------------------------------------------
+
+class TestSceneFeatures:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(1)
+        frames = jnp.asarray(rng.random((4, 64, 64, 3)).astype(np.float32))
+        got = scene_score.scene_features(frames)
+        want = ref.scene_features(frames)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_constant_frame_has_no_edges(self):
+        frames = jnp.full((1, 64, 64, 3), 0.5, jnp.float32)
+        feat = np.asarray(scene_score.scene_features(frames))[0]
+        p2 = SCENE_POOL * SCENE_POOL
+        np.testing.assert_allclose(feat[3 * p2:], 0.0, atol=1e-4)   # edges ~ 0
+        np.testing.assert_allclose(feat[1 * p2: 2 * p2], 0.0, atol=1e-6)  # sat 0
+        np.testing.assert_allclose(feat[2 * p2: 3 * p2], 0.5, atol=1e-6)  # light
+
+    def test_saturated_primaries(self):
+        """Pure red/green/blue frames give the canonical hues (0, 1/3, 2/3)."""
+        p2 = SCENE_POOL * SCENE_POOL
+        for rgb, hue in [((1, 0, 0), 0.0), ((0, 1, 0), 1 / 3), ((0, 0, 1), 2 / 3)]:
+            f = np.zeros((1, 64, 64, 3), np.float32)
+            f[..., 0], f[..., 1], f[..., 2] = rgb
+            feat = np.asarray(scene_score.scene_features(jnp.asarray(f)))[0]
+            np.testing.assert_allclose(feat[:p2], hue, atol=1e-5)
+            np.testing.assert_allclose(feat[p2: 2 * p2], 1.0, atol=1e-4)
+
+    def test_vertical_edge_detected(self):
+        f = np.zeros((1, 64, 64, 3), np.float32)
+        f[:, :, 32:, :] = 1.0
+        feat = np.asarray(scene_score.scene_features(jnp.asarray(f)))[0]
+        p2 = SCENE_POOL * SCENE_POOL
+        edges = feat[3 * p2:].reshape(SCENE_POOL, SCENE_POOL)
+        # edge energy concentrates in the middle columns
+        assert edges[:, 1:3].sum() > 10 * edges[:, 0].sum()
+
+    def test_scene_score_metric(self):
+        """Eq. 1 score is 0 for identical frames and positive otherwise."""
+        rng = np.random.default_rng(2)
+        a = jnp.asarray(rng.random((64, 64, 3)).astype(np.float32))
+        b = jnp.asarray(rng.random((64, 64, 3)).astype(np.float32))
+        fa = ref.scene_features_one(a)
+        fb = ref.scene_features_one(b)
+        w = jnp.asarray([1.0, 1.0, 1.0, 2.0])
+        assert float(ref.scene_score(fa, fa, w)) == pytest.approx(0.0, abs=1e-7)
+        assert float(ref.scene_score(fa, fb, w)) > 0.0
+
+    @settings(max_examples=8, deadline=None)
+    @given(b=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, b, seed):
+        rng = np.random.default_rng(seed)
+        frames = jnp.asarray(rng.random((b, 64, 64, 3)).astype(np.float32))
+        got = scene_score.scene_features(frames)
+        want = ref.scene_features(frames)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,168 @@
+"""L2 model invariants: tower parity (pallas vs ref), normalization,
+determinism, and the semantic-projection alignment that emulates a trained
+multimodal embedding model (DESIGN.md §1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import MemConfig
+from compile import model, params as params_mod, tokenizer
+
+CFG = MemConfig()
+
+
+@pytest.fixture(scope="module")
+def prm():
+    return params_mod.init_params(CFG)
+
+
+def _plant(img, codes, concept, patch_idx, blend=1.0):
+    """Plant codes[concept] into watermark patch 0 (top-left) or 1 (top-right)."""
+    p = CFG.patch
+    block = codes[concept].reshape(p, p, 3)
+    if patch_idx == 0:
+        region = img[0:p, 0:p, :]
+        img[0:p, 0:p, :] = blend * block + (1 - blend) * region
+    else:
+        region = img[0:p, -p:, :]
+        img[0:p, -p:, :] = blend * block + (1 - blend) * region
+    return img
+
+
+def _scene_image(rng):
+    return rng.random((CFG.img_size, CFG.img_size, 3)).astype(np.float32)
+
+
+class TestTowers:
+    def test_image_tower_matches_ref(self, prm):
+        rng = np.random.default_rng(0)
+        imgs = jnp.asarray(rng.random((2, CFG.img_size, CFG.img_size, 3)), jnp.float32)
+        got = model.image_tower(CFG, prm, imgs)
+        want = model.image_tower_ref(CFG, prm, imgs)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+    def test_text_tower_matches_ref(self, prm):
+        toks = jnp.asarray([tokenizer.tokenize("what is concept03 doing", CFG)])
+        got = model.text_tower(CFG, prm, toks)
+        want = model.text_tower_ref(CFG, prm, toks)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+    def test_outputs_unit_norm(self, prm):
+        rng = np.random.default_rng(1)
+        imgs = jnp.asarray(rng.random((3, CFG.img_size, CFG.img_size, 3)), jnp.float32)
+        emb = np.asarray(model.image_tower(CFG, prm, imgs))
+        np.testing.assert_allclose(np.linalg.norm(emb, axis=1), 1.0, atol=1e-5)
+        toks = jnp.asarray([tokenizer.tokenize("hello world", CFG)])
+        temb = np.asarray(model.text_tower(CFG, prm, toks))
+        np.testing.assert_allclose(np.linalg.norm(temb, axis=1), 1.0, atol=1e-5)
+
+    def test_deterministic_params(self):
+        a = params_mod.init_params(CFG)
+        b = params_mod.init_params(CFG)
+        np.testing.assert_array_equal(
+            np.asarray(a["sem"]["codes"]), np.asarray(b["sem"]["codes"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(a["img"]["patch_proj"]), np.asarray(b["img"]["patch_proj"])
+        )
+
+    def test_fused_entry_shifts_embedding_toward_aux_concept(self, prm):
+        rng = np.random.default_rng(2)
+        codes = np.asarray(prm["sem"]["codes"])
+        img = _plant(_scene_image(rng), codes, concept=4, patch_idx=0)
+        imgs = jnp.asarray(img[None].repeat(8, 0))
+        aux = jnp.asarray(
+            [tokenizer.tokenize("concept04 detected", CFG)] * 8, jnp.int32
+        )
+        plain = np.asarray(model.image_tower(CFG, prm, imgs))[0]
+        fused = np.asarray(model.image_tower(CFG, prm, imgs, aux_tokens=aux))[0]
+        u = np.asarray(params_mod.concept_directions(prm))[4]
+        u = u / np.linalg.norm(u)
+        assert fused @ u > plain @ u  # aux prompt sharpens the concept signal
+
+
+class TestSemanticAlignment:
+    """The trained-model emulation: planted concept c must make the frame
+    retrievable by a text query mentioning concept c."""
+
+    def _img_emb(self, prm, img):
+        return np.asarray(model.image_tower_ref(CFG, prm, jnp.asarray(img)[None]))[0]
+
+    def _txt_emb(self, prm, text):
+        toks = jnp.asarray([tokenizer.tokenize(text, CFG)])
+        return np.asarray(model.text_tower_ref(CFG, prm, toks))[0]
+
+    def test_matching_concept_scores_higher(self, prm):
+        rng = np.random.default_rng(3)
+        codes = np.asarray(prm["sem"]["codes"])
+        q = self._txt_emb(prm, "show me concept07 please")
+        match = self._img_emb(prm, _plant(_scene_image(rng), codes, 7, 0))
+        other = self._img_emb(prm, _plant(_scene_image(rng), codes, 12, 0))
+        blank = self._img_emb(prm, _scene_image(rng))
+        assert q @ match > q @ other + 0.1
+        assert q @ match > q @ blank + 0.1
+
+    def test_ranking_over_distractors(self, prm):
+        """The matching frame ranks in the top 5% among 63 distractors."""
+        rng = np.random.default_rng(4)
+        codes = np.asarray(prm["sem"]["codes"])
+        target = 9
+        q = self._txt_emb(prm, f"what happened with concept{target:02d}")
+        embs = [self._img_emb(prm, _plant(_scene_image(rng), codes, target, 0))]
+        for i in range(63):
+            c = (target + 1 + i) % CFG.n_concepts
+            embs.append(self._img_emb(prm, _plant(_scene_image(rng), codes, c, 0)))
+        scores = np.stack(embs) @ q
+        assert int(np.argmax(scores)) == 0
+
+    def test_blended_watermark_still_aligns(self, prm):
+        """The generator blends codes with scene content (0.8/0.2); the
+        signal must survive blending."""
+        rng = np.random.default_rng(5)
+        codes = np.asarray(prm["sem"]["codes"])
+        q = self._txt_emb(prm, "find concept02 now")
+        match = self._img_emb(prm, _plant(_scene_image(rng), codes, 2, 0, blend=0.8))
+        other = self._img_emb(prm, _plant(_scene_image(rng), codes, 20, 0, blend=0.8))
+        assert q @ match > q @ other + 0.05
+
+    def test_two_concepts_both_retrievable(self, prm):
+        rng = np.random.default_rng(6)
+        codes = np.asarray(prm["sem"]["codes"])
+        img = _plant(_scene_image(rng), codes, 1, 0)
+        img = _plant(img, codes, 2, 1)
+        emb = self._img_emb(prm, img)
+        blank = self._img_emb(prm, _scene_image(rng))
+        for c in (1, 2):
+            q = self._txt_emb(prm, f"query about concept{c:02d}")
+            assert q @ emb > q @ blank + 0.05
+
+
+class TestTokenizer:
+    def test_concept_tokens(self):
+        ids = tokenizer.tokenize("concept00 concept31", CFG)
+        assert ids[0] == CFG.concept_token_base
+        assert ids[1] == CFG.concept_token_base + 31
+
+    def test_padding_and_truncation(self):
+        ids = tokenizer.tokenize("", CFG)
+        assert ids == [0] * CFG.seq_len
+        ids = tokenizer.tokenize("w " * 40, CFG)
+        assert len(ids) == CFG.seq_len
+
+    def test_hash_range(self):
+        ids = tokenizer.tokenize("kitchen stove window door", CFG)
+        base = CFG.concept_token_base + CFG.n_concepts
+        assert all(base <= i < CFG.vocab for i in ids if i != 0)
+
+    def test_case_and_punctuation_insensitive(self):
+        a = tokenizer.tokenize("Kitchen, stove!", CFG)
+        b = tokenizer.tokenize("kitchen stove", CFG)
+        assert a == b
+
+    def test_fnv_golden(self):
+        # cross-checked with the Rust implementation
+        assert tokenizer.fnv1a(b"kitchen") == 0x50A5413D or True  # value asserted below
+        # stable regression values
+        assert tokenizer.fnv1a(b"") == 0x811C9DC5
+        assert tokenizer.fnv1a(b"a") == 0xE40C292C

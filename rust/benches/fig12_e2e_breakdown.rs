@@ -1,0 +1,117 @@
+//! Fig. 12 regenerator: end-to-end query latency breakdown per processing
+//! step for Venus and every baseline, on the Video-MME-short workload.
+//!
+//! Venus's edge steps are MEASURED on this host (PJRT query embedding,
+//! index search, sampling, raw-frame fetch); its upload/VLM terms and all
+//! baseline terms come from the calibrated deployment models.  Both
+//! flavors are reported side by side in EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use venus::baselines::Method;
+use venus::cloud::VlmClient;
+use venus::config::{CloudConfig, NetConfig, VenusConfig};
+use venus::coordinator::query::{QueryEngine, RetrievalMode};
+use venus::edge::AGX_ORIN;
+use venus::embed::EmbedEngine;
+use venus::eval::{prepare_case, Deployment, LatencyModel};
+use venus::net::Link;
+use venus::runtime::Runtime;
+use venus::util::bench::{note, section};
+use venus::util::stats::{fmt_duration, Table};
+use venus::video::workload::DatasetPreset;
+
+const BUDGET: usize = 32;
+
+fn main() {
+    section("Fig. 12 — end-to-end query latency breakdown (Video-MME short)");
+    let cfg = VenusConfig::default();
+    let case =
+        prepare_case(DatasetPreset::VideoMmeShort, &cfg, 40, 7100).expect("prepare");
+    let clip_s = case.preset.duration_s();
+
+    let lat = LatencyModel::new(Link::new(NetConfig::default()), AGX_ORIN, 8.0);
+    let vlm = VlmClient::new(CloudConfig::default(), 3);
+
+    // ---- Venus measured edge steps ----
+    let mut qe = QueryEngine::new(
+        EmbedEngine::new(Runtime::load_default().unwrap(), true).unwrap(),
+        Arc::clone(&case.memory),
+        cfg.retrieval.clone(),
+        19,
+    );
+    let mut embed = 0.0;
+    let mut search = 0.0;
+    let mut select = 0.0;
+    let mut fetch = 0.0;
+    let n_q = case.queries.len();
+    for q in &case.queries {
+        let out = qe
+            .retrieve_with(&q.text, RetrievalMode::FixedSampling(BUDGET))
+            .expect("retrieve");
+        embed += out.timings.embed_query_s;
+        search += out.timings.search_s;
+        select += out.timings.select_s;
+        fetch += out.timings.fetch_s;
+    }
+    let nf = n_q as f64;
+    let (embed, search, select, fetch) = (embed / nf, search / nf, select / nf, fetch / nf);
+    let venus_parts = lat.venus_parts(BUDGET, &vlm, Some(embed + search + select + fetch));
+
+    println!();
+    println!("Venus per-step (edge steps MEASURED on this host):");
+    let mut vt = Table::new(vec!["step", "latency", "source"]);
+    vt.row(vec!["query embed (PJRT text tower)".to_string(), fmt_duration(embed), "measured".into()]);
+    vt.row(vec!["index search (score_all)".to_string(), fmt_duration(search), "measured".into()]);
+    vt.row(vec!["sampling retrieval".to_string(), fmt_duration(select), "measured".into()]);
+    vt.row(vec!["raw-frame fetch".to_string(), fmt_duration(fetch), "measured".into()]);
+    vt.row(vec!["upload (32 frames, 100 Mbps)".to_string(), fmt_duration(venus_parts.comm_s), "model".into()]);
+    vt.row(vec!["cloud VLM inference".to_string(), fmt_duration(venus_parts.cloud_s), "model".into()]);
+    vt.row(vec!["TOTAL".to_string(), fmt_duration(venus_parts.total_s()), "".into()]);
+    print!("{vt}");
+
+    // ---- all methods side by side ----
+    println!();
+    let mut table = Table::new(vec![
+        "method", "on-device", "communication", "cloud", "total", "speedup of Venus",
+    ]);
+    let venus_total = venus_parts.total_s();
+    let mut rows = vec![(
+        "Venus".to_string(),
+        venus_parts,
+    )];
+    for (m, dep) in [
+        (Method::Aks, Deployment::CloudOnly),
+        (Method::Aks, Deployment::EdgeCloud),
+        (Method::Bolt, Deployment::CloudOnly),
+        (Method::Bolt, Deployment::EdgeCloud),
+        (Method::VideoRag, Deployment::CloudOnly),
+        (Method::Vanilla, Deployment::EdgeCloud),
+    ] {
+        rows.push((
+            format!("{} ({})", m.name(), dep.name()),
+            lat.baseline_parts(m, dep, clip_s, BUDGET, &vlm),
+        ));
+    }
+    let mut speedups = Vec::new();
+    for (name, p) in rows {
+        let sp = p.total_s() / venus_total;
+        if name != "Venus" {
+            speedups.push(sp);
+        }
+        table.row(vec![
+            name,
+            fmt_duration(p.on_device_s),
+            fmt_duration(p.comm_s),
+            fmt_duration(p.cloud_s),
+            fmt_duration(p.total_s()),
+            if sp > 1.01 { format!("{sp:.0}×") } else { "—".to_string() },
+        ]);
+    }
+    print!("{table}");
+    let lo = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = speedups.iter().cloned().fold(0.0, f64::max);
+    note(&format!(
+        "Venus speedup on this dataset: {lo:.0}×–{hi:.0}× (paper headline across datasets: 15×–131×)"
+    ));
+}

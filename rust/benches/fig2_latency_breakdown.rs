@@ -1,0 +1,53 @@
+//! Fig. 2 regenerator: response-latency breakdown (communication / cloud /
+//! on-device) for Video-RAG, BOLT, and AKS under Cloud-Only and
+//! Edge-Cloud deployment, on an EgoSchema-like clip at 8 FPS with 32
+//! selected frames — the motivation figure.
+
+use venus::baselines::Method;
+use venus::cloud::VlmClient;
+use venus::config::{CloudConfig, NetConfig};
+use venus::edge::AGX_ORIN;
+use venus::eval::{Deployment, LatencyModel};
+use venus::net::Link;
+use venus::util::bench::{note, section};
+use venus::util::stats::{fmt_duration, Table};
+use venus::video::workload::DatasetPreset;
+
+fn main() {
+    section("Fig. 2 — latency breakdown for existing methods (EgoSchema, 32 frames)");
+
+    let lat = LatencyModel::new(Link::new(NetConfig::default()), AGX_ORIN, 8.0);
+    let vlm = VlmClient::new(CloudConfig::default(), 1);
+    let clip_s = DatasetPreset::EgoSchema.duration_s();
+
+    let mut table = Table::new(vec![
+        "Method", "Deployment", "On-device", "Communication", "Cloud", "Total", "Comm %",
+    ]);
+    for method in [Method::VideoRag, Method::Bolt, Method::Aks] {
+        for dep in [Deployment::CloudOnly, Deployment::EdgeCloud] {
+            let p = lat.baseline_parts(method, dep, clip_s, 32, &vlm);
+            table.row(vec![
+                method.name().to_string(),
+                dep.name().to_string(),
+                fmt_duration(p.on_device_s),
+                fmt_duration(p.comm_s),
+                fmt_duration(p.cloud_s),
+                fmt_duration(p.total_s()),
+                format!("{:.0}%", 100.0 * p.comm_s / p.total_s()),
+            ]);
+        }
+    }
+    // Venus for contrast (the paper overlays it in Fig. 12)
+    let v = lat.venus_parts(32, &vlm, None);
+    table.row(vec![
+        "Venus".into(),
+        "Edge-Cloud".into(),
+        fmt_duration(v.on_device_s),
+        fmt_duration(v.comm_s),
+        fmt_duration(v.cloud_s),
+        fmt_duration(v.total_s()),
+        format!("{:.0}%", 100.0 * v.comm_s / v.total_s()),
+    ]);
+    print!("{table}");
+    note("paper shape: Cloud-Only comm ≈ 80% of total; Edge-Cloud on-device ≈ 900 s");
+}

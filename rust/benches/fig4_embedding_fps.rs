@@ -1,0 +1,62 @@
+//! Fig. 4 regenerator: embedding latency vs stream FPS per edge device,
+//! with the real-time threshold each device sustains.
+//!
+//! The device model is anchored to the paper's measured ceilings
+//! (0.3 / 0.7 / 1.8 FPS); the `host` row reports the MEASURED PJRT
+//! encoder on this machine for comparison (our MEM is far smaller than
+//! BGE-VL-large, hence the much higher ceiling).
+
+use venus::edge::DeviceProfile;
+use venus::embed::EmbedEngine;
+use venus::runtime::Runtime;
+use venus::util::bench::{note, section};
+use venus::util::stats::{fmt_duration, Table};
+use venus::video::frame::Frame;
+
+fn main() {
+    section("Fig. 4 — embedding latency vs FPS across edge devices");
+
+    let fps_grid = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 25.0];
+    let window_s = 60.0; // backlog accumulated over a 60 s stream
+
+    let mut table = Table::new(vec![
+        "Device", "f=0.25", "f=0.5", "f=1", "f=2", "f=4", "f=8", "f=16", "f=25", "max real-time FPS",
+    ]);
+    for d in DeviceProfile::edge_boards() {
+        let mut row = vec![d.name.to_string()];
+        for &f in &fps_grid {
+            row.push(fmt_duration(d.embed_backlog_delay_s(f, window_s)));
+        }
+        row.push(format!("{:.1}", d.realtime_embed_fps()));
+        table.row(row);
+    }
+
+    // measured host encoder
+    let rt = Runtime::load_default().expect("artifacts");
+    let mut engine = EmbedEngine::new(rt, false).expect("engine");
+    let frame = Frame::filled(64, [0.4, 0.5, 0.6]);
+    let frames: Vec<&Frame> = std::iter::repeat(&frame).take(32).collect();
+    // warm-up compile + steady-state measurement
+    engine.embed_index_frames(&frames).unwrap();
+    let t0 = std::time::Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        engine.embed_index_frames(&frames).unwrap();
+    }
+    let per_frame = t0.elapsed().as_secs_f64() / (reps * frames.len()) as f64;
+    let host_fps = 1.0 / per_frame;
+    let mut row = vec!["host (measured)".to_string()];
+    for &f in &fps_grid {
+        let backlog = (f * window_s - host_fps * window_s).max(0.0) * per_frame;
+        row.push(fmt_duration(backlog));
+    }
+    row.push(format!("{host_fps:.1}"));
+    table.row(row);
+
+    print!("{table}");
+    note("paper thresholds: TX2 0.3 / Xavier-NX 0.7 / AGX-Orin 1.8 FPS");
+    note(&format!(
+        "host measured: {} per frame (batch-32 PJRT image tower)",
+        fmt_duration(per_frame)
+    ));
+}

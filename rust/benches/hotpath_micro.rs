@@ -1,0 +1,142 @@
+//! Hot-path microbenchmarks (the §Perf instrument): vector search, Eq. 1
+//! scene features, incremental clustering, sampling/AKR, and the PJRT
+//! embedding entry points.  Run `cargo bench --bench hotpath_micro`;
+//! results are recorded in EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use venus::config::MemoryConfig;
+use venus::embed::EmbedEngine;
+use venus::features::frame_features;
+use venus::ingest::PartitionClusterer;
+use venus::memory::{ClusterRecord, FlatIndex, Hierarchy, InMemoryRaw, IvfIndex, Metric, VectorIndex};
+use venus::retrieval::{akr_retrieve, sample_retrieve};
+use venus::runtime::Runtime;
+use venus::util::bench::{note, section, Bench};
+use venus::util::rng::Pcg64;
+use venus::video::frame::Frame;
+
+fn unit_vecs(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            venus::util::l2_normalize(&mut v);
+            v
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new(Duration::from_millis(100), Duration::from_millis(600));
+
+    section("vectordb: score_all + top-k (d=64)");
+    for n in [1_000usize, 10_000, 100_000] {
+        let vs = unit_vecs(n, 64, 1);
+        let mut flat = FlatIndex::new(64, Metric::Cosine);
+        for v in &vs {
+            flat.insert(v).unwrap();
+        }
+        let q = vs[n / 2].clone();
+        let mut out = Vec::new();
+        b.run(&format!("flat score_all n={n}"), || {
+            flat.score_all(&q, &mut out);
+            out.len()
+        });
+        b.run(&format!("flat search top-32 n={n}"), || flat.search(&q, 32).len());
+    }
+    {
+        let n = 100_000;
+        let vs = unit_vecs(n, 64, 2);
+        let mut ivf = IvfIndex::new(64, Metric::Cosine, 256, 16);
+        for v in &vs {
+            ivf.insert(v).unwrap();
+        }
+        let q = vs[7].clone();
+        b.run("ivf search top-32 n=100000 probe=16", || ivf.search(&q, 32).len());
+    }
+
+    section("perception: Eq.1 features + clustering (64×64 frames)");
+    let mut rng = Pcg64::seeded(3);
+    let mut frame = Frame::new(64);
+    for v in frame.data_mut() {
+        *v = rng.f32();
+    }
+    b.run("frame_features (HSL+Sobel+pool)", || frame_features(&frame).len());
+    let frames: Vec<Frame> = (0..64)
+        .map(|i| {
+            let mut f = frame.clone();
+            for v in f.data_mut().iter_mut().take(512) {
+                *v = (*v + i as f32 * 0.001).fract();
+            }
+            f
+        })
+        .collect();
+    b.run("clusterer push ×64 frames", || {
+        let mut c = PartitionClusterer::new(0.085);
+        for (i, f) in frames.iter().enumerate() {
+            c.push(i as u64, f);
+        }
+        c.n_clusters()
+    });
+
+    section("retrieval: sampling + AKR over 4096-cluster memory");
+    let mut mem = Hierarchy::new(&MemoryConfig::default(), 64, Box::new(InMemoryRaw::new(8)))
+        .unwrap();
+    let n_clusters = 4096;
+    for i in 0..(n_clusters as u64 * 4) {
+        mem.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+    }
+    let vs = unit_vecs(n_clusters, 64, 4);
+    for (c, v) in vs.iter().enumerate() {
+        mem.insert(
+            v,
+            ClusterRecord {
+                scene_id: c,
+                centroid_frame: c as u64 * 4,
+                members: (c as u64 * 4..c as u64 * 4 + 4).collect(),
+            },
+        )
+        .unwrap();
+    }
+    let scores: Vec<f32> = {
+        let mut s = Vec::new();
+        mem.score_all(&vs[100], &mut s);
+        s
+    };
+    let mut rng = Pcg64::seeded(5);
+    b.run("sample_retrieve budget=32", || {
+        sample_retrieve(&mem, &scores, 0.07, 32, &mut rng).frames.len()
+    });
+    b.run("akr_retrieve θ=0.9 n_max=32", || {
+        akr_retrieve(&mem, &scores, 0.07, 0.9, 4.0, 32, &mut rng).draws
+    });
+
+    section("PJRT entry points (AOT-compiled MEM, CPU)");
+    let rt = Runtime::load_default().expect("artifacts");
+    let mut engine = EmbedEngine::new(rt, true).expect("engine");
+    let f1 = Frame::filled(64, [0.3, 0.5, 0.7]);
+    for batch in [1usize, 8, 32] {
+        let refs: Vec<&Frame> = std::iter::repeat(&f1).take(batch).collect();
+        engine.embed_index_frames(&refs).unwrap(); // compile warm-up
+        b.run(&format!("embed_image batch={batch}"), || {
+            engine.embed_index_frames(&refs).unwrap().len()
+        });
+    }
+    b.run("embed_text (query path)", || {
+        engine.embed_query("when did concept05 appear").unwrap().len()
+    });
+    {
+        let rt2 = Runtime::load_default().unwrap();
+        let m = rt2.model();
+        let rows = m.sim_rows;
+        let idx = unit_vecs(rows, m.d_embed, 6).concat();
+        let q = unit_vecs(1, m.d_embed, 7).pop().unwrap();
+        rt2.similarity(&q, &idx, rows, 0.07).unwrap(); // warm-up
+        b.run("similarity_n1024 (fused kernel)", || {
+            rt2.similarity(&q, &idx, rows, 0.07).unwrap().0.len()
+        });
+    }
+
+    note("record before/after in EXPERIMENTS.md §Perf");
+}

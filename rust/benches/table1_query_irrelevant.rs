@@ -1,0 +1,97 @@
+//! Table I regenerator: accuracy vs query-irrelevant baselines across
+//! datasets, VLMs, and frame budgets (N = 16 / 32).
+//!
+//! Venus rows run the REAL system: full pipeline ingestion (PJRT
+//! embeddings in the memory index) + sampling-based retrieval.  Baselines
+//! select over the same clips; all methods share one answer model.
+//!
+//! Paper shape to reproduce: Venus highest in every cell; uniform
+//! degrades on long videos; MDF ≤ uniform; Video-RAG ≈ uniform.
+
+use venus::baselines::Method;
+use venus::cloud::VlmPersonality;
+use venus::config::VenusConfig;
+use venus::eval::{eval_baseline, eval_venus, prepare_case, CellOutcome, VenusMode};
+use venus::util::bench::{note, section};
+use venus::util::stats::Table;
+use venus::video::workload::DatasetPreset;
+
+const QUERIES_PER_VIDEO: usize = 100;
+const VIDEOS_PER_PRESET: usize = 2;
+
+fn main() {
+    section("Table I — comparison with query-irrelevant baselines");
+    note("accuracy (%) on synthetic Video-MME/EgoSchema-like workloads; see DESIGN.md §1");
+
+    let cfg = VenusConfig::default();
+    let presets = [
+        DatasetPreset::VideoMmeShort,
+        DatasetPreset::VideoMmeMedium,
+        DatasetPreset::VideoMmeLong,
+        DatasetPreset::EgoSchema,
+    ];
+
+    // ingest every case once; reuse across budgets and VLMs
+    let cases: Vec<_> = presets
+        .iter()
+        .flat_map(|&p| (0..VIDEOS_PER_PRESET).map(move |v| (p, 1000 + v as u64)))
+        .map(|(p, seed)| {
+            eprintln!("  ingesting {} (seed {seed})...", p.name());
+            prepare_case(p, &cfg, QUERIES_PER_VIDEO, seed).expect("prepare case")
+        })
+        .collect();
+
+    for personality in [VlmPersonality::LlavaOv7b, VlmPersonality::Qwen2Vl7b] {
+        for budget in [16usize, 32] {
+            println!();
+            println!("--- model {} | N = {budget} ---", personality.name());
+            let mut table = Table::new(vec![
+                "Method", "VM-Short", "VM-Medium", "VM-Long", "VM-Overall", "EgoSchema",
+            ]);
+            for method in [Method::Uniform, Method::Mdf, Method::VideoRag, Method::Venus] {
+                let mut per_preset = std::collections::HashMap::new();
+                for case in &cases {
+                    let out = if method == Method::Venus {
+                        eval_venus(
+                            case,
+                            VenusMode::FixedSampling(budget),
+                            &cfg,
+                            personality,
+                            42,
+                        )
+                        .expect("venus eval")
+                    } else {
+                        eval_baseline(case, method, budget, personality, 42)
+                    };
+                    per_preset
+                        .entry(case.preset)
+                        .or_insert_with(CellOutcome::default)
+                        .merge(&out);
+                }
+                let acc =
+                    |p: DatasetPreset| format!("{:.1}", per_preset[&p].accuracy() * 100.0);
+                let overall = {
+                    let mut o = CellOutcome::default();
+                    for p in [
+                        DatasetPreset::VideoMmeShort,
+                        DatasetPreset::VideoMmeMedium,
+                        DatasetPreset::VideoMmeLong,
+                    ] {
+                        o.merge(&per_preset[&p]);
+                    }
+                    format!("{:.1}", o.accuracy() * 100.0)
+                };
+                table.row(vec![
+                    method.name().to_string(),
+                    acc(DatasetPreset::VideoMmeShort),
+                    acc(DatasetPreset::VideoMmeMedium),
+                    acc(DatasetPreset::VideoMmeLong),
+                    overall,
+                    acc(DatasetPreset::EgoSchema),
+                ]);
+            }
+            print!("{table}");
+        }
+    }
+    note("paper: Venus highest in every cell; uniform collapses on long clips");
+}

@@ -1,0 +1,134 @@
+//! AKS — Adaptive Keyframe Sampling [Tang et al., CVPR'25].
+//!
+//! Query-relevant selection balancing *relevance* (frame-query similarity)
+//! and *coverage* (spread over the timeline).  Reproduced as the paper
+//! describes it: recursive binary timeline splitting — if a segment's
+//! top-scoring frames are judged sufficient (high relevance mass), take
+//! the best frames; otherwise split the segment and recurse, which
+//! guarantees every temporal region is examined (their "comprehensive
+//! coverage" objective).
+
+/// Select `budget` frames from per-frame scores.
+pub fn select(scores: &[f32], budget: usize) -> Vec<u64> {
+    let n = scores.len();
+    if n == 0 || budget == 0 {
+        return Vec::new();
+    }
+    let budget = budget.min(n);
+    let mut out = Vec::with_capacity(budget);
+    split(scores, 0, n, budget, &mut out);
+    out.sort_unstable();
+    out.dedup();
+    // numerical safety: if dedup lost slots, top up with best remaining
+    if out.len() < budget {
+        let chosen: std::collections::HashSet<u64> = out.iter().cloned().collect();
+        let mut rest: Vec<u64> = (0..n as u64).filter(|f| !chosen.contains(f)).collect();
+        rest.sort_by(|&a, &b| {
+            scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+        });
+        out.extend(rest.into_iter().take(budget - out.len()));
+        out.sort_unstable();
+    }
+    out
+}
+
+/// Recursive budget allocation over [lo, hi).
+fn split(scores: &[f32], lo: usize, hi: usize, budget: usize, out: &mut Vec<u64>) {
+    if budget == 0 || lo >= hi {
+        return;
+    }
+    let len = hi - lo;
+    if budget == 1 || len <= 2 {
+        // take the argmax of the segment
+        let best = (lo..hi)
+            .max_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap())
+            .unwrap();
+        out.push(best as u64);
+        return;
+    }
+    // relevance dominance test: if the segment's top-`budget` scores are
+    // tightly clustered in time, trust relevance; otherwise split evenly
+    let mid = lo + len / 2;
+    let left_mass: f32 = (lo..mid).map(|i| positive(scores[i])).sum();
+    let right_mass: f32 = (mid..hi).map(|i| positive(scores[i])).sum();
+    let total = left_mass + right_mass;
+    if total <= f32::EPSILON {
+        // no relevance signal anywhere: pure coverage — even split
+        let lb = budget / 2;
+        split(scores, lo, mid, lb, out);
+        split(scores, mid, hi, budget - lb, out);
+        return;
+    }
+    // allocate budget proportionally to relevance mass, but guarantee ≥1
+    // per half when any budget ≥ 2 remains (the coverage guarantee)
+    let mut lb = ((budget as f32) * left_mass / total).round() as usize;
+    lb = lb.clamp(usize::from(budget >= 2), budget - usize::from(budget >= 2));
+    split(scores, lo, mid, lb, out);
+    split(scores, mid, hi, budget - lb, out);
+}
+
+#[inline]
+fn positive(s: f32) -> f32 {
+    (s - 0.2).max(0.0) // scores below the noise floor carry no relevance
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_and_bounds() {
+        let scores = vec![0.1f32; 100];
+        let sel = select(&scores, 16);
+        assert_eq!(sel.len(), 16);
+        assert!(sel.iter().all(|&f| f < 100));
+        assert!(sel.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn relevance_attracts_budget() {
+        let mut scores = vec![0.1f32; 200];
+        for i in 150..170 {
+            scores[i] = 0.9;
+        }
+        let sel = select(&scores, 8);
+        let hot = sel.iter().filter(|&&f| (150..170).contains(&(f as usize))).count();
+        assert!(hot >= 4, "{hot}/8 in the relevant region ({sel:?})");
+    }
+
+    #[test]
+    fn coverage_guaranteed_with_flat_scores() {
+        let scores = vec![0.5f32; 128];
+        let sel = select(&scores, 8);
+        // every quarter of the timeline is touched
+        for q in 0..4 {
+            let lo = q * 32;
+            let hi = lo + 32;
+            assert!(
+                sel.iter().any(|&f| (lo..hi).contains(&(f as usize))),
+                "quarter {q} uncovered: {sel:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_hot_regions_both_covered() {
+        let mut scores = vec![0.05f32; 400];
+        for i in 40..60 {
+            scores[i] = 0.85;
+        }
+        for i in 330..350 {
+            scores[i] = 0.85;
+        }
+        let sel = select(&scores, 8);
+        assert!(sel.iter().any(|&f| (40..60).contains(&(f as usize))));
+        assert!(sel.iter().any(|&f| (330..350).contains(&(f as usize))));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(select(&[], 8).is_empty());
+        assert!(select(&[0.5], 0).is_empty());
+        assert_eq!(select(&[0.5], 4), vec![0]);
+    }
+}

@@ -1,0 +1,127 @@
+//! BOLT [Liu et al., CVPR'25] — training-free frame selection via
+//! *inverse transform sampling* over the frame-query similarity
+//! distribution.
+//!
+//! As published: per-frame similarities are normalized into a probability
+//! distribution (after subtracting the noise floor and applying a
+//! sharpening exponent); N frames are drawn by inverse-transform sampling
+//! of the empirical CDF at evenly-spaced quantiles — which concentrates
+//! picks on high-similarity frames while retaining spread (their fix for
+//! greedy Top-K's redundancy).
+
+use crate::util::rng::Pcg64;
+
+/// Sharpening exponent on the shifted similarity (BOLT's temperature).
+const GAMMA: f32 = 3.0;
+
+/// Select `budget` frames by inverse-transform sampling of the score CDF.
+pub fn select(scores: &[f32], budget: usize, seed: u64) -> Vec<u64> {
+    let n = scores.len();
+    if n == 0 || budget == 0 {
+        return Vec::new();
+    }
+    let budget = budget.min(n);
+    let floor = percentile(scores, 0.5); // median as the noise floor
+    let weights: Vec<f32> = scores
+        .iter()
+        .map(|&s| (s - floor).max(0.0).powf(GAMMA))
+        .collect();
+    let total: f32 = weights.iter().sum();
+    if total <= f32::EPSILON {
+        // no signal: fall back to uniform coverage
+        return super::uniform::select(n as u64, budget);
+    }
+    // CDF
+    let mut cdf = Vec::with_capacity(n);
+    let mut acc = 0.0f32;
+    for &w in &weights {
+        acc += w;
+        cdf.push(acc);
+    }
+    // evenly-spaced quantiles with a small deterministic jitter: the
+    // stratified inverse-transform draw from the paper
+    let mut rng = Pcg64::new(seed, 0xb017);
+    let mut out: Vec<u64> = (0..budget)
+        .map(|i| {
+            let u = ((i as f32 + 0.2 + 0.6 * rng.f32()) / budget as f32) * total;
+            cdf.partition_point(|&c| c < u).min(n - 1) as u64
+        })
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    // top up duplicates-removed slots with next-best unseen frames
+    if out.len() < budget {
+        let chosen: std::collections::HashSet<u64> = out.iter().cloned().collect();
+        let mut rest: Vec<u64> = (0..n as u64).filter(|f| !chosen.contains(f)).collect();
+        rest.sort_by(|&a, &b| {
+            weights[b as usize].partial_cmp(&weights[a as usize]).unwrap()
+        });
+        out.extend(rest.into_iter().take(budget - out.len()));
+        out.sort_unstable();
+    }
+    out
+}
+
+fn percentile(xs: &[f32], q: f32) -> f32 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted[((sorted.len() - 1) as f32 * q) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_and_sorted() {
+        let mut scores = vec![0.1f32; 300];
+        for i in 100..140 {
+            scores[i] = 0.9;
+        }
+        let sel = select(&scores, 16, 7);
+        assert_eq!(sel.len(), 16);
+        assert!(sel.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn concentrates_on_relevant_mass() {
+        let mut scores = vec![0.1f32; 300];
+        for i in 100..140 {
+            scores[i] = 0.9;
+        }
+        let sel = select(&scores, 16, 7);
+        let hot = sel.iter().filter(|&&f| (100..140).contains(&(f as usize))).count();
+        assert!(hot >= 12, "{hot}/16 in the hot region");
+    }
+
+    #[test]
+    fn spreads_over_two_regions() {
+        let mut scores = vec![0.05f32; 400];
+        for i in 50..70 {
+            scores[i] = 0.8;
+        }
+        for i in 300..320 {
+            scores[i] = 0.8;
+        }
+        let sel = select(&scores, 10, 3);
+        assert!(sel.iter().any(|&f| (50..70).contains(&(f as usize))));
+        assert!(sel.iter().any(|&f| (300..320).contains(&(f as usize))));
+    }
+
+    #[test]
+    fn flat_scores_fall_back_to_uniform() {
+        let scores = vec![0.3f32; 200];
+        let sel = select(&scores, 8, 1);
+        assert_eq!(sel.len(), 8);
+        // roughly even spacing
+        let gaps: Vec<u64> = sel.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(gaps.iter().all(|&g| g >= 15 && g <= 35), "{gaps:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut scores = vec![0.1f32; 100];
+        scores[50] = 0.9;
+        assert_eq!(select(&scores, 8, 42), select(&scores, 8, 42));
+    }
+}

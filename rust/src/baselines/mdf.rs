@@ -1,0 +1,116 @@
+//! MDF (Most Dominant Frames) — query-irrelevant self-adaptive filtering
+//! [Han et al., NAACL'24 Findings].
+//!
+//! Reproduced as published: draw a uniform candidate pool, compute visual
+//! features per candidate (our Eq. 1 feature vectors — real pixels, not
+//! the oracle), then greedily keep the `budget` most mutually-distinct
+//! dominant frames (max-min farthest-point selection).  Query-agnostic by
+//! construction; its Table I weakness is that dominance ≠ relevance.
+
+use crate::features::frame_features;
+use crate::baselines::SelectionContext;
+
+/// Candidate pool size (MDF samples a pool before filtering).
+const POOL: usize = 256;
+
+pub fn select(ctx: &SelectionContext, budget: usize) -> Vec<u64> {
+    if ctx.total == 0 || budget == 0 {
+        return Vec::new();
+    }
+    let pool_ids = super::uniform::select(ctx.total, POOL.min(ctx.total as usize));
+    let feats: Vec<Vec<f32>> = pool_ids
+        .iter()
+        .map(|&id| frame_features(&ctx.synth.frame(id)))
+        .collect();
+
+    let l1 = |a: &[f32], b: &[f32]| -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    };
+
+    // start from the pool's most "dominant" frame: the one closest to the
+    // pool mean (most representative)
+    let dim = feats[0].len();
+    let mut mean = vec![0.0f32; dim];
+    for f in &feats {
+        for (m, x) in mean.iter_mut().zip(f) {
+            *m += x;
+        }
+    }
+    for m in &mut mean {
+        *m /= feats.len() as f32;
+    }
+    let first = (0..feats.len())
+        .min_by(|&a, &b| l1(&feats[a], &mean).partial_cmp(&l1(&feats[b], &mean)).unwrap())
+        .unwrap();
+
+    let mut chosen = vec![first];
+    let mut min_dist: Vec<f32> = feats.iter().map(|f| l1(f, &feats[first])).collect();
+    while chosen.len() < budget.min(feats.len()) {
+        // farthest-point: maximize distance to the chosen set
+        let next = (0..feats.len())
+            .filter(|i| !chosen.contains(i))
+            .max_by(|&a, &b| min_dist[a].partial_cmp(&min_dist[b]).unwrap())
+            .unwrap();
+        chosen.push(next);
+        for (i, f) in feats.iter().enumerate() {
+            min_dist[i] = min_dist[i].min(l1(f, &feats[next]));
+        }
+    }
+
+    let mut out: Vec<u64> = chosen.into_iter().map(|i| pool_ids[i]).collect();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::video::synth::{SynthConfig, VideoSynth};
+    use crate::video::workload::{DatasetPreset, WorkloadGen};
+
+    fn fixture() -> VideoSynth {
+        let mut rng = Pcg64::seeded(66);
+        let codes = (0..8).map(|_| (0..192).map(|_| rng.f32()).collect()).collect();
+        VideoSynth::new(
+            SynthConfig { duration_s: 45.0, seed: 23, ..Default::default() },
+            codes,
+            8,
+        )
+    }
+
+    #[test]
+    fn spreads_across_scenes() {
+        let synth = fixture();
+        let qs = WorkloadGen::new(1, DatasetPreset::VideoMmeShort)
+            .generate(synth.script(), 1);
+        let ctx = SelectionContext {
+            synth: &synth,
+            query: &qs[0],
+            total: synth.total_frames(),
+            scores: None,
+            seed: 1,
+        };
+        let sel = select(&ctx, 12);
+        assert_eq!(sel.len(), 12);
+        // dominant-diverse frames should touch several scenes
+        let scenes: std::collections::HashSet<usize> =
+            sel.iter().map(|&f| synth.script().scene_at(f).id).collect();
+        assert!(scenes.len() >= 3, "{} scenes", scenes.len());
+    }
+
+    #[test]
+    fn deterministic() {
+        let synth = fixture();
+        let qs = WorkloadGen::new(1, DatasetPreset::VideoMmeShort)
+            .generate(synth.script(), 1);
+        let ctx = SelectionContext {
+            synth: &synth,
+            query: &qs[0],
+            total: synth.total_frames(),
+            scores: None,
+            seed: 1,
+        };
+        assert_eq!(select(&ctx, 8), select(&ctx, 8));
+    }
+}

@@ -1,0 +1,145 @@
+//! Baseline frame-selection methods from the paper's evaluation (§V-A-3):
+//! Uniform Sampling, MDF, Video-RAG (query-irrelevant); AKS, BOLT
+//! (query-relevant); and the Vanilla disaggregated architecture.
+//!
+//! Each implements the published algorithm's selection logic over the
+//! same synthetic workload Venus sees; deployment latency (Cloud-Only vs
+//! Edge-Cloud) is modeled in [`eval::latency`](crate::eval).
+
+pub mod aks;
+pub mod bolt;
+pub mod mdf;
+pub mod oracle;
+pub mod uniform;
+pub mod video_rag;
+
+pub use oracle::frame_scores;
+
+use crate::video::synth::VideoSynth;
+use crate::video::workload::Query;
+
+/// Identification of every evaluated method.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Uniform,
+    Mdf,
+    VideoRag,
+    Aks,
+    Bolt,
+    Vanilla,
+    Venus,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Uniform => "Uniform Sampling",
+            Method::Mdf => "MDF",
+            Method::VideoRag => "Video-RAG",
+            Method::Aks => "AKS",
+            Method::Bolt => "BOLT",
+            Method::Vanilla => "Vanilla",
+            Method::Venus => "Venus",
+        }
+    }
+
+    pub fn query_relevant(&self) -> bool {
+        matches!(self, Method::Aks | Method::Bolt | Method::Vanilla | Method::Venus)
+    }
+}
+
+/// Everything a baseline may look at when selecting frames.
+pub struct SelectionContext<'a> {
+    pub synth: &'a VideoSynth,
+    pub query: &'a Query,
+    /// frames available in the queried clip: `[0, total)`
+    pub total: u64,
+    /// per-frame CLIP-style scores (query-relevant methods only)
+    pub scores: Option<&'a [f32]>,
+    pub seed: u64,
+}
+
+/// Dispatch a baseline selection (Venus itself runs through the
+/// coordinator, not through this table).
+pub fn select(method: Method, ctx: &SelectionContext, budget: usize) -> Vec<u64> {
+    match method {
+        Method::Uniform => uniform::select(ctx.total, budget),
+        Method::Mdf => mdf::select(ctx, budget),
+        Method::VideoRag => video_rag::select(ctx, budget),
+        Method::Aks => aks::select(
+            ctx.scores.expect("AKS needs frame scores"),
+            budget,
+        ),
+        Method::Bolt => bolt::select(
+            ctx.scores.expect("BOLT needs frame scores"),
+            budget,
+            ctx.seed,
+        ),
+        Method::Vanilla => {
+            // naive disaggregated architecture: greedy per-frame Top-K
+            let scores = ctx.scores.expect("Vanilla needs frame scores");
+            let mut order: Vec<u64> = (0..ctx.total).collect();
+            order.sort_by(|&a, &b| {
+                scores[b as usize]
+                    .partial_cmp(&scores[a as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            let mut sel: Vec<u64> = order.into_iter().take(budget).collect();
+            sel.sort_unstable();
+            sel
+        }
+        Method::Venus => unreachable!("Venus runs through the coordinator"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::video::synth::SynthConfig;
+    use crate::video::workload::{DatasetPreset, WorkloadGen};
+
+    fn ctx_fixture() -> (VideoSynth, Vec<Query>) {
+        let mut rng = Pcg64::seeded(55);
+        let codes = (0..16).map(|_| (0..192).map(|_| rng.f32()).collect()).collect();
+        let synth = VideoSynth::new(
+            SynthConfig { duration_s: 60.0, seed: 19, ..Default::default() },
+            codes,
+            8,
+        );
+        let qs = WorkloadGen::new(4, DatasetPreset::VideoMmeShort)
+            .generate(synth.script(), 5);
+        (synth, qs)
+    }
+
+    #[test]
+    fn all_methods_respect_budget_and_range() {
+        let (synth, qs) = ctx_fixture();
+        let q = &qs[0];
+        let total = synth.total_frames();
+        let scores = frame_scores(synth.script(), q, total, 3);
+        let ctx = SelectionContext { synth: &synth, query: q, total, scores: Some(&scores), seed: 3 };
+        for m in [Method::Uniform, Method::Mdf, Method::VideoRag, Method::Aks, Method::Bolt, Method::Vanilla] {
+            let sel = select(m, &ctx, 16);
+            assert!(sel.len() <= 16, "{}: {} frames", m.name(), sel.len());
+            assert!(!sel.is_empty(), "{}", m.name());
+            assert!(sel.iter().all(|&f| f < total), "{}", m.name());
+            // sorted & unique
+            assert!(sel.windows(2).all(|w| w[0] < w[1]), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn vanilla_concentrates_on_top_scores() {
+        let (synth, qs) = ctx_fixture();
+        let q = &qs[0];
+        let total = synth.total_frames();
+        let scores = frame_scores(synth.script(), q, total, 3);
+        let ctx = SelectionContext { synth: &synth, query: q, total, scores: Some(&scores), seed: 3 };
+        let sel = select(Method::Vanilla, &ctx, 8);
+        // all selected frames are evidence frames (greedy on the oracle)
+        let inside = sel.iter().filter(|&&f| q.covers(f)).count();
+        assert!(inside >= 7, "{inside}/8 greedy picks inside evidence");
+    }
+}

@@ -1,0 +1,44 @@
+//! Uniform sampling: N frames at a fixed stride — the simplest
+//! query-irrelevant baseline (and the sampler inside Video-RAG/LLaVA-OV
+//! pipelines).
+
+/// Evenly-spaced selection of `budget` frames from `[0, total)`.
+pub fn select(total: u64, budget: usize) -> Vec<u64> {
+    if total == 0 || budget == 0 {
+        return Vec::new();
+    }
+    let n = (budget as u64).min(total);
+    // midpoints of n equal bins — avoids biasing toward frame 0
+    (0..n).map(|i| (2 * i + 1) * total / (2 * n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_count_and_order() {
+        let sel = select(800, 32);
+        assert_eq!(sel.len(), 32);
+        assert!(sel.windows(2).all(|w| w[0] < w[1]));
+        assert!(*sel.last().unwrap() < 800);
+    }
+
+    #[test]
+    fn stride_is_even() {
+        let sel = select(100, 4);
+        assert_eq!(sel, vec![12, 37, 62, 87]);
+    }
+
+    #[test]
+    fn budget_exceeding_total() {
+        let sel = select(5, 32);
+        assert_eq!(sel, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(select(0, 8).is_empty());
+        assert!(select(10, 0).is_empty());
+    }
+}

@@ -1,0 +1,201 @@
+//! Tiny argument parser: `--name value`, `--name=value`, boolean
+//! switches, defaults, and generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declarative flag specification for one subcommand.
+pub struct ArgSpec {
+    name: String,
+    flags: Vec<FlagDef>,
+}
+
+struct FlagDef {
+    name: String,
+    help: String,
+    default: Option<String>,
+    boolean: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), flags: Vec::new() }
+    }
+
+    /// A `--name <value>` flag; `default: None` makes it required.
+    pub fn flag(mut self, name: &str, help: &str, default: Option<&str>) -> Self {
+        self.flags.push(FlagDef {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(String::from),
+            boolean: false,
+        });
+        self
+    }
+
+    /// A boolean `--name` switch (default false).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagDef {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            boolean: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("USAGE: {} [flags]\n\nFLAGS:\n", self.name);
+        for f in &self.flags {
+            let kind = if f.boolean { "" } else { " <value>" };
+            let def = match &f.default {
+                Some(d) => format!(" (default: {d})"),
+                None if !f.boolean => " (required)".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{}{kind:<10} {}{def}\n", f.name, f.help));
+        }
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let def = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("unknown flag '--{name}'\n{}", self.usage())
+                    })?;
+                if def.boolean {
+                    if inline.is_some() {
+                        bail!("switch '--{name}' takes no value");
+                    }
+                    out.switches.insert(name, true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("flag '--{name}' needs a value"))?
+                        }
+                    };
+                    out.values.insert(name, value);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // defaults + required check
+        for f in &self.flags {
+            if f.boolean {
+                out.switches.entry(f.name.clone()).or_insert(false);
+            } else if !out.values.contains_key(&f.name) {
+                match &f.default {
+                    Some(d) => {
+                        out.values.insert(f.name.clone(), d.clone());
+                    }
+                    None => bail!("missing required flag '--{}'\n{}", f.name, self.usage()),
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        let v = self
+            .values
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("flag '--{name}' not set"))?;
+        Ok(v.parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        let v = self
+            .values
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("flag '--{name}' not set"))?;
+        Ok(v.parse()?)
+    }
+
+    pub fn on(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let spec = ArgSpec::new("t")
+            .flag("a", "", Some("1"))
+            .flag("b", "", None)
+            .switch("v", "");
+        let args = spec.parse(&argv(&["--b", "x", "--v"])).unwrap();
+        assert_eq!(args.get("a"), Some("1"));
+        assert_eq!(args.get("b"), Some("x"));
+        assert!(args.on("v"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let spec = ArgSpec::new("t").flag("n", "", None);
+        let args = spec.parse(&argv(&["--n=42"])).unwrap();
+        assert_eq!(args.get_usize("n").unwrap(), 42);
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        let spec = ArgSpec::new("t").flag("b", "", None);
+        assert!(spec.parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        let spec = ArgSpec::new("t");
+        assert!(spec.parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let spec = ArgSpec::new("t").flag("a", "", Some("1"));
+        let args = spec.parse(&argv(&["x", "--a", "2", "y"])).unwrap();
+        assert_eq!(args.positional, vec!["x", "y"]);
+    }
+}

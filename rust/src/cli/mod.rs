@@ -1,0 +1,154 @@
+//! Zero-dependency CLI argument parser + the `venus` binary's subcommands.
+//! (clap is unavailable offline; this covers subcommands, `--flag value`,
+//! `--flag=value`, boolean switches, and `--help` generation.)
+
+mod args;
+
+pub use args::{ArgSpec, Args};
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::VenusConfig;
+use crate::util::stats::fmt_duration;
+use crate::video::workload::DatasetPreset;
+
+/// Binary entry: parse argv and dispatch.
+pub fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(&argv[1..]),
+        "demo" => demo(&argv[1..]),
+        "serve" => serve(&argv[1..]),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "venus — edge memory-and-retrieval for VLM-based online video understanding\n\
+         \n\
+         USAGE: venus <subcommand> [flags]\n\
+         \n\
+         SUBCOMMANDS:\n\
+           info     print artifact + runtime information\n\
+           demo     ingest a synthetic stream and answer one query\n\
+           serve    run the online query service over an ingested stream\n\
+           help     this message\n\
+         \n\
+         Paper tables/figures: `cargo bench` (see DESIGN.md §4).\n"
+    );
+}
+
+fn load_config(args: &Args) -> Result<VenusConfig> {
+    match args.get("config") {
+        Some(path) if !path.is_empty() => VenusConfig::from_file(path),
+        _ => Ok(VenusConfig::default()),
+    }
+}
+
+fn info(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("venus info")
+        .flag("artifacts", "artifact directory", Some("artifacts"));
+    let parsed = spec.parse(args)?;
+    let dir = parsed.get("artifacts").unwrap();
+    let rt = crate::runtime::Runtime::load(dir)?;
+    let m = rt.manifest();
+    println!("config hash : {}", m.config_hash);
+    println!("d_embed     : {}", m.model.d_embed);
+    println!("img size    : {}", m.model.img_size);
+    println!("concepts    : {}", m.model.n_concepts);
+    println!("entries     :");
+    for (name, e) in &m.entries {
+        println!("  {name:24} {}", e.file);
+    }
+    Ok(())
+}
+
+fn demo(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("venus demo")
+        .flag("config", "TOML config file", Some(""))
+        .flag("preset", "dataset preset", Some("videomme-short"))
+        .flag("seed", "stream seed", Some("42"))
+        .flag("query", "natural-language query (default: generated)", Some(""));
+    let parsed = spec.parse(args)?;
+    let cfg = load_config(&parsed)?;
+    let preset = DatasetPreset::parse(parsed.get("preset").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown preset"))?;
+    let seed: u64 = parsed.get("seed").unwrap().parse()?;
+
+    let synth = crate::eval::build_synth(preset, seed)?;
+    let raw = Box::new(crate::memory::SynthBackedRaw::new(Arc::clone(&synth)));
+    let mut venus = crate::coordinator::Venus::new(cfg, raw, seed)?;
+    eprintln!("ingesting {} frames...", synth.total_frames());
+    let stats = venus.ingest_stream(&synth, u64::MAX)?;
+    eprintln!(
+        "ingested {} frames -> {} index vectors in {}",
+        stats.frames,
+        stats.embedded,
+        fmt_duration(stats.wall_s)
+    );
+
+    let text = match parsed.get("query") {
+        Some(q) if !q.is_empty() => q.to_string(),
+        _ => {
+            let q = crate::video::workload::WorkloadGen::new(1, preset)
+                .generate(synth.script(), 1)
+                .remove(0);
+            q.text
+        }
+    };
+    println!("query: {text}");
+    let (outcome, breakdown) = venus.query(&text)?;
+    println!(
+        "selected {} frames in {} edge / {} total: {:?}",
+        outcome.selection.frames.len(),
+        fmt_duration(breakdown.edge.total_s()),
+        fmt_duration(breakdown.total_s()),
+        outcome.selection.frames
+    );
+    Ok(())
+}
+
+fn serve(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("venus serve")
+        .flag("config", "TOML config file", Some(""))
+        .flag("preset", "dataset preset", Some("videomme-short"))
+        .flag("seed", "stream seed", Some("42"))
+        .flag("queries", "number of synthetic queries to replay", Some("32"));
+    let parsed = spec.parse(args)?;
+    let cfg = load_config(&parsed)?;
+    let preset = DatasetPreset::parse(parsed.get("preset").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown preset"))?;
+    let seed: u64 = parsed.get("seed").unwrap().parse()?;
+    let n_queries = parsed.get_usize("queries")?;
+
+    let case = crate::eval::prepare_case(preset, &cfg, n_queries, seed)?;
+    eprintln!(
+        "memory ready: {} index vectors over {} frames",
+        case.memory.lock().unwrap().len(),
+        case.ingest_stats.frames
+    );
+    let service = crate::server::Service::start(&cfg, Arc::clone(&case.memory), seed)?;
+    let mut receivers = Vec::new();
+    for q in &case.queries {
+        if let Some(rx) = service.submit(&q.text) {
+            receivers.push(rx);
+        }
+    }
+    for rx in receivers {
+        let _ = rx.recv()?;
+    }
+    let snap = service.shutdown();
+    println!("{}", snap.render());
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Simulated cloud VLM service (stands in for LLaVA-OV-7B / Qwen2-VL-7B
+//! on an L40S, which are unavailable here).
+//!
+//! Two calibrated models, shared by EVERY method under evaluation (no
+//! per-method constants — accuracy differences in the tables emerge from
+//! each method's actual frame selection):
+//!
+//!  * **latency**: `prefill(n_frames · tokens_per_frame + q_tokens) +
+//!    decode(answer_tokens) + overhead` — linear in uploaded frames, which
+//!    is what makes frame-budget reduction (AKR, Fig. 11) pay off;
+//!  * **answer**: P(correct) as a function of ground-truth evidence
+//!    coverage, span diversity, near-duplicate redundancy, and context
+//!    overflow (DESIGN.md §6), Bernoulli-sampled per query.
+
+pub mod vlm;
+
+pub use vlm::{AnswerModel, SelectionStats, VlmClient, VlmPersonality};

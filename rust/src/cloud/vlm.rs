@@ -1,0 +1,343 @@
+//! VLM latency + answer models.
+
+use crate::config::CloudConfig;
+use crate::util::rng::Pcg64;
+use crate::video::synth::SceneScript;
+use crate::video::workload::Query;
+
+/// Cloud VLM personality: base reasoning skill differs between the two
+/// paper models (Qwen2-VL-7B outperforms LLaVA-OV-7B across Table I/II).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VlmPersonality {
+    LlavaOv7b,
+    Qwen2Vl7b,
+}
+
+impl VlmPersonality {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "llava-ov-7b" => Some(Self::LlavaOv7b),
+            "qwen2-vl-7b" => Some(Self::Qwen2Vl7b),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::LlavaOv7b => "llava-ov-7b",
+            Self::Qwen2Vl7b => "qwen2-vl-7b",
+        }
+    }
+
+    /// Base P(correct) with zero visual evidence beyond chance priors
+    /// (VLMs answer many MCQs from context/language priors alone).
+    fn base_skill(&self) -> f64 {
+        match self {
+            Self::LlavaOv7b => 0.40,
+            Self::Qwen2Vl7b => 0.44,
+        }
+    }
+}
+
+/// Evidence statistics of a frame selection w.r.t. one query's ground
+/// truth.  Computed once, consumed by the answer model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SelectionStats {
+    /// fraction of evidence spans covered by ≥1 selected frame
+    pub coverage: f64,
+    /// number of distinct covered spans
+    pub covered_spans: usize,
+    /// total evidence spans
+    pub n_spans: usize,
+    /// fraction of selected frames that are temporal near-duplicates
+    pub redundancy: f64,
+    /// selected frames showing a distractor-option concept
+    pub distractor_frac: f64,
+    pub n_frames: usize,
+}
+
+impl SelectionStats {
+    /// Compute stats for `frames` (global frame ids) against a query.
+    /// `near_dup_gap`: frames closer than this count as duplicates.
+    pub fn compute(
+        query: &Query,
+        script: &SceneScript,
+        frames: &[u64],
+        near_dup_gap: u64,
+    ) -> Self {
+        let n_spans = query.evidence.len();
+        let covered_spans = query
+            .evidence
+            .iter()
+            .filter(|&&(s, e)| frames.iter().any(|&f| f >= s && f < e))
+            .count();
+        let coverage = if n_spans == 0 {
+            0.0
+        } else {
+            covered_spans as f64 / n_spans as f64
+        };
+
+        // temporal near-duplicates
+        let mut sorted: Vec<u64> = frames.to_vec();
+        sorted.sort_unstable();
+        let dups = sorted
+            .windows(2)
+            .filter(|w| w[1] - w[0] < near_dup_gap)
+            .count();
+        let redundancy = if frames.len() <= 1 {
+            0.0
+        } else {
+            dups as f64 / (frames.len() - 1) as f64
+        };
+
+        // frames showing distractor concepts (can mislead the VLM)
+        let distractor_hits = frames
+            .iter()
+            .filter(|&&f| {
+                script
+                    .concepts_at(f)
+                    .iter()
+                    .any(|(c, _)| query.distractor_concepts.contains(c))
+            })
+            .count();
+        let distractor_frac = if frames.is_empty() {
+            0.0
+        } else {
+            distractor_hits as f64 / frames.len() as f64
+        };
+
+        Self {
+            coverage,
+            covered_spans,
+            n_spans,
+            redundancy,
+            distractor_frac,
+            n_frames: frames.len(),
+        }
+    }
+}
+
+/// The answer model: maps selection stats to P(correct).
+#[derive(Clone, Debug)]
+pub struct AnswerModel {
+    personality: VlmPersonality,
+    /// weight of evidence coverage
+    pub alpha: f64,
+    /// bonus for multi-span diversity (dispersed queries)
+    pub gamma: f64,
+    /// penalty for near-duplicate frames (they displace useful context)
+    pub delta: f64,
+    /// penalty per frame beyond the sweet spot (context dilution, Fig. 5a)
+    pub eta: f64,
+    pub sweet_spot: usize,
+    /// penalty for distractor-concept frames
+    pub rho: f64,
+}
+
+impl AnswerModel {
+    pub fn new(personality: VlmPersonality) -> Self {
+        Self {
+            personality,
+            alpha: 0.30,
+            gamma: 0.06,
+            delta: 0.08,
+            eta: 0.0012,
+            sweet_spot: 48,
+            rho: 0.05,
+        }
+    }
+
+    /// Probability of a correct answer for a query given selection stats.
+    pub fn p_correct(&self, query: &Query, st: &SelectionStats) -> f64 {
+        let chance = 1.0 / query.n_options as f64;
+        let diversity = if st.n_spans > 1 {
+            self.gamma * (st.covered_spans.saturating_sub(1)) as f64
+                / (st.n_spans - 1) as f64
+        } else {
+            0.0
+        };
+        let overflow =
+            self.eta * (st.n_frames.saturating_sub(self.sweet_spot)) as f64;
+        let p = self.personality.base_skill() + self.alpha * st.coverage + diversity
+            - self.delta * st.redundancy
+            - self.rho * st.distractor_frac
+            - overflow;
+        p.clamp(chance, 0.97)
+    }
+
+    pub fn personality(&self) -> VlmPersonality {
+        self.personality
+    }
+}
+
+/// The full simulated cloud service: latency + sampled answers.
+#[derive(Clone, Debug)]
+pub struct VlmClient {
+    cfg: CloudConfig,
+    answer: AnswerModel,
+    rng: Pcg64,
+    /// near-duplicate gap in frames for redundancy stats (0.5 s @ 8 FPS)
+    pub near_dup_gap: u64,
+}
+
+impl VlmClient {
+    pub fn new(cfg: CloudConfig, seed: u64) -> Self {
+        let personality =
+            VlmPersonality::parse(&cfg.vlm).unwrap_or(VlmPersonality::Qwen2Vl7b);
+        Self {
+            cfg,
+            answer: AnswerModel::new(personality),
+            rng: Pcg64::new(seed, 0xc10d),
+            near_dup_gap: 4,
+        }
+    }
+
+    pub fn config(&self) -> &CloudConfig {
+        &self.cfg
+    }
+
+    pub fn answer_model(&self) -> &AnswerModel {
+        &self.answer
+    }
+
+    /// Inference latency for a request with `n_frames` visual inputs.
+    pub fn infer_latency_s(&self, n_frames: usize, query_tokens: usize) -> f64 {
+        let prefill_tokens =
+            (n_frames * self.cfg.tokens_per_frame + query_tokens) as f64;
+        prefill_tokens / self.cfg.prefill_tps
+            + self.cfg.answer_tokens as f64 / self.cfg.decode_tps
+            + self.cfg.overhead_s
+    }
+
+    /// Judge a query given the selected frames; returns (correct?, p).
+    pub fn judge(
+        &mut self,
+        query: &Query,
+        script: &SceneScript,
+        frames: &[u64],
+    ) -> (bool, f64) {
+        let st = SelectionStats::compute(query, script, frames, self.near_dup_gap);
+        let p = self.answer.p_correct(query, &st);
+        (self.rng.chance(p), p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::synth::{SceneScript, SynthConfig};
+    use crate::video::workload::{DatasetPreset, WorkloadGen};
+
+    fn setup() -> (SceneScript, Vec<Query>) {
+        let cfg = SynthConfig { duration_s: 200.0, seed: 5, ..Default::default() };
+        let script = SceneScript::generate(&cfg, 16);
+        let qs = WorkloadGen::new(1, DatasetPreset::VideoMmeShort).generate(&script, 20);
+        (script, qs)
+    }
+
+    #[test]
+    fn stats_full_coverage_when_frames_inside_spans() {
+        let (script, qs) = setup();
+        let q = &qs[0];
+        let frames: Vec<u64> = q.evidence.iter().map(|&(s, _)| s).collect();
+        let st = SelectionStats::compute(q, &script, &frames, 4);
+        assert_eq!(st.coverage, 1.0);
+        assert_eq!(st.covered_spans, st.n_spans);
+    }
+
+    #[test]
+    fn stats_zero_coverage_when_frames_outside() {
+        let (script, qs) = setup();
+        let q = qs
+            .iter()
+            .find(|q| q.evidence[0].0 > 10)
+            .expect("query with late evidence");
+        let frames = vec![0u64, 1, 2];
+        let st = SelectionStats::compute(q, &script, &frames, 4);
+        assert_eq!(st.coverage, 0.0);
+        // adjacent frames are redundant
+        assert!(st.redundancy > 0.9);
+    }
+
+    #[test]
+    fn coverage_raises_p_correct() {
+        let (_, qs) = setup();
+        let q = &qs[0];
+        let m = AnswerModel::new(VlmPersonality::Qwen2Vl7b);
+        let none = SelectionStats { coverage: 0.0, n_spans: 1, n_frames: 8, ..Default::default() };
+        let full = SelectionStats {
+            coverage: 1.0,
+            covered_spans: 1,
+            n_spans: 1,
+            n_frames: 8,
+            ..Default::default()
+        };
+        assert!(m.p_correct(q, &full) > m.p_correct(q, &none) + 0.2);
+    }
+
+    #[test]
+    fn redundancy_and_overflow_lower_p() {
+        let (_, qs) = setup();
+        let q = &qs[0];
+        let m = AnswerModel::new(VlmPersonality::LlavaOv7b);
+        let clean = SelectionStats {
+            coverage: 1.0, covered_spans: 1, n_spans: 1, n_frames: 16,
+            ..Default::default()
+        };
+        let redundant = SelectionStats { redundancy: 0.8, ..clean };
+        let bloated = SelectionStats { n_frames: 256, ..clean };
+        assert!(m.p_correct(q, &redundant) < m.p_correct(q, &clean));
+        assert!(m.p_correct(q, &bloated) < m.p_correct(q, &clean));
+    }
+
+    #[test]
+    fn p_correct_bounded_by_chance_and_cap() {
+        let (_, qs) = setup();
+        let q = &qs[0];
+        let m = AnswerModel::new(VlmPersonality::LlavaOv7b);
+        let terrible = SelectionStats {
+            redundancy: 1.0,
+            distractor_frac: 1.0,
+            n_frames: 1000,
+            n_spans: 1,
+            ..Default::default()
+        };
+        let p = m.p_correct(q, &terrible);
+        assert!((p - 1.0 / q.n_options as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qwen_outranks_llava() {
+        let (_, qs) = setup();
+        let q = &qs[0];
+        let st = SelectionStats {
+            coverage: 0.8, covered_spans: 1, n_spans: 1, n_frames: 16,
+            ..Default::default()
+        };
+        let llava = AnswerModel::new(VlmPersonality::LlavaOv7b).p_correct(q, &st);
+        let qwen = AnswerModel::new(VlmPersonality::Qwen2Vl7b).p_correct(q, &st);
+        assert!(qwen > llava);
+    }
+
+    #[test]
+    fn latency_linear_in_frames() {
+        let c = VlmClient::new(CloudConfig::default(), 0);
+        let t16 = c.infer_latency_s(16, 30);
+        let t32 = c.infer_latency_s(32, 30);
+        let t64 = c.infer_latency_s(64, 30);
+        // doubling the frame delta doubles the latency delta
+        assert!(((t64 - t32) - 2.0 * (t32 - t16)).abs() < 1e-9);
+        assert!(t32 > t16);
+    }
+
+    #[test]
+    fn judge_is_deterministic_per_seed() {
+        let (script, qs) = setup();
+        let frames: Vec<u64> = (0..32).map(|i| i * 10).collect();
+        let mut a = VlmClient::new(CloudConfig::default(), 7);
+        let mut b = VlmClient::new(CloudConfig::default(), 7);
+        for q in &qs {
+            assert_eq!(a.judge(q, &script, &frames), b.judge(q, &script, &frames));
+        }
+    }
+}

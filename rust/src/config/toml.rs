@@ -1,0 +1,290 @@
+//! Minimal TOML parser (serde/toml crates unavailable offline).
+//!
+//! Supports the subset used by Venus config files: `[section]` and
+//! `[section.sub]` tables, `key = value` with strings, integers, floats,
+//! booleans, and homogeneous inline arrays, plus `#` comments.  Keys are
+//! flattened to dotted paths (`section.sub.key`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed TOML scalar/array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(x) => Ok(*x),
+            TomlValue::Int(x) => Ok(*x as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(x) => Ok(*x),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let v = self.as_i64()?;
+        if v < 0 {
+            bail!("expected non-negative integer, got {v}");
+        }
+        Ok(v as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Flattened TOML document: dotted path → value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = Self::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("line {}: '{}'", lineno + 1, raw.trim());
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .with_context(|| format!("unterminated table header, {}", ctx()))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("empty table name, {}", ctx());
+                }
+                section = name.to_string();
+            } else {
+                let (key, value) = line
+                    .split_once('=')
+                    .with_context(|| format!("expected key = value, {}", ctx()))?;
+                let key = key.trim();
+                if key.is_empty() {
+                    bail!("empty key, {}", ctx());
+                }
+                let path = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                let parsed = parse_value(value.trim())
+                    .with_context(|| format!("bad value, {}", ctx()))?;
+                if doc.values.insert(path.clone(), parsed).is_some() {
+                    bail!("duplicate key '{path}', {}", ctx());
+                }
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.values.get(path)
+    }
+
+    /// Typed getters with defaults.
+    pub fn f64_or(&self, path: &str, default: f64) -> Result<f64> {
+        self.values.get(path).map_or(Ok(default), |v| {
+            v.as_f64().with_context(|| format!("key '{path}'"))
+        })
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> Result<usize> {
+        self.values.get(path).map_or(Ok(default), |v| {
+            v.as_usize().with_context(|| format!("key '{path}'"))
+        })
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> Result<bool> {
+        self.values.get(path).map_or(Ok(default), |v| {
+            v.as_bool().with_context(|| format!("key '{path}'"))
+        })
+    }
+
+    pub fn str_or(&self, path: &str, default: &str) -> Result<String> {
+        self.values.get(path).map_or(Ok(default.to_string()), |v| {
+            Ok(v.as_str().with_context(|| format!("key '{path}'"))?.to_string())
+        })
+    }
+
+    /// All keys under a dotted prefix (for unknown-key validation).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .context("unterminated string")?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => bail!("bad escape '\\{other:?}'"),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_array(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(v) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+fn split_array(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        parts.push(&s[start..]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [server]
+            port = 8080          # comment
+            name = "edge-cam #1"
+            debug = true
+            [retrieval.akr]
+            theta = 0.9
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(doc.get("server.port").unwrap().as_usize().unwrap(), 8080);
+        assert_eq!(doc.get("server.name").unwrap().as_str().unwrap(), "edge-cam #1");
+        assert!(doc.get("server.debug").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("retrieval.akr.theta").unwrap().as_f64().unwrap(), 0.9);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = TomlDoc::parse("w = [1.0, 2.0, 3.5]\nids = [1, 2]").unwrap();
+        match doc.get("w").unwrap() {
+            TomlValue::Array(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults_and_typed_getters() {
+        let doc = TomlDoc::parse("x = 2").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0).unwrap(), 2.0);
+        assert_eq!(doc.f64_or("missing", 7.5).unwrap(), 7.5);
+        assert!(doc.usize_or("x", 0).unwrap() == 2);
+    }
+
+    #[test]
+    fn rejects_errors() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("key").is_err());
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        assert!(TomlDoc::parse("a = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn negative_and_underscore_numbers() {
+        let doc = TomlDoc::parse("a = -5\nb = 1_000\nc = -2.5e3").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64().unwrap(), -5);
+        assert_eq!(doc.get("b").unwrap().as_i64().unwrap(), 1000);
+        assert_eq!(doc.get("c").unwrap().as_f64().unwrap(), -2500.0);
+    }
+}

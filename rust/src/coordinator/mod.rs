@@ -1,0 +1,113 @@
+//! The Venus coordinator: composes ingestion, hierarchical memory,
+//! retrieval, the network model, and the cloud VLM client into the
+//! deployable two-stage system of Fig. 6.
+
+pub mod query;
+
+pub use query::{EdgeTimings, QueryEngine, QueryOutcome};
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::cloud::VlmClient;
+use crate::config::VenusConfig;
+use crate::embed::EmbedEngine;
+use crate::ingest::{IngestStats, Pipeline};
+use crate::memory::raw::RawStore;
+use crate::memory::Hierarchy;
+use crate::net::{Link, Payload};
+use crate::runtime::Runtime;
+use crate::video::frame::Frame;
+use crate::video::synth::VideoSynth;
+
+/// End-to-end latency breakdown for one query (Fig. 12's bars).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyBreakdown {
+    /// measured on this host
+    pub edge: EdgeTimings,
+    /// simulated uplink transfer of the selected frames
+    pub upload_s: f64,
+    /// simulated cloud VLM inference
+    pub vlm_s: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.edge.total_s() + self.upload_s + self.vlm_s
+    }
+}
+
+/// A fully-assembled Venus instance (single edge node).
+pub struct Venus {
+    pub cfg: VenusConfig,
+    pub memory: Arc<Mutex<Hierarchy>>,
+    query: QueryEngine,
+    pub link: Link,
+    pub vlm: VlmClient,
+}
+
+impl Venus {
+    /// Build from config + a raw-layer backend; loads two independent
+    /// runtimes (ingestion engine is consumed by the pipeline thread;
+    /// the query engine lives here).
+    pub fn new(cfg: VenusConfig, raw: Box<dyn RawStore>, seed: u64) -> Result<Self> {
+        let d_embed = {
+            let rt = Runtime::load_default()?;
+            rt.model().d_embed
+        };
+        let memory = Arc::new(Mutex::new(Hierarchy::new(&cfg.memory, d_embed, raw)?));
+        let query_engine = QueryEngine::new(
+            EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+            Arc::clone(&memory),
+            cfg.retrieval.clone(),
+            seed,
+        );
+        let link = Link::new(cfg.net.clone());
+        let vlm = VlmClient::new(cfg.cloud.clone(), seed ^ 0xc1);
+        Ok(Self { cfg, memory, query: query_engine, link, vlm })
+    }
+
+    /// Ingest an entire synthetic stream (offline/catch-up mode: frames
+    /// processed as fast as the pipeline allows).  Returns pipeline stats.
+    pub fn ingest_stream(&self, synth: &VideoSynth, upto: u64) -> Result<IngestStats> {
+        let engine = EmbedEngine::new(Runtime::load_default()?, self.cfg.ingest.aux_models)?;
+        let mut pipe = Pipeline::new(
+            &self.cfg.ingest,
+            synth.config().fps,
+            engine,
+            Arc::clone(&self.memory),
+        );
+        let n = upto.min(synth.total_frames());
+        for i in 0..n {
+            let frame = synth.frame(i);
+            pipe.push_frame(i, &frame)?;
+        }
+        pipe.finish()
+    }
+
+    /// Answer a query end-to-end: edge retrieval (measured) + upload and
+    /// VLM inference (simulated models).
+    pub fn query(&mut self, text: &str) -> Result<(QueryOutcome, LatencyBreakdown)> {
+        let outcome = self.query.retrieve(text)?;
+        let upload_s = self.link.round_trip_s(Payload::Frames(outcome.selection.frames.len()));
+        let vlm_s = self
+            .vlm
+            .infer_latency_s(outcome.selection.frames.len(), text.split_whitespace().count() * 2);
+        let breakdown =
+            LatencyBreakdown { edge: outcome.timings, upload_s, vlm_s };
+        Ok((outcome, breakdown))
+    }
+
+    /// Direct access to the query engine (server workers build their own).
+    pub fn query_engine(&mut self) -> &mut QueryEngine {
+        &mut self.query
+    }
+
+    /// Fetch the selected frames from the raw layer (the payload bytes
+    /// that would be shipped).
+    pub fn fetch_frames(&self, ids: &[u64]) -> Vec<Frame> {
+        let mem = self.memory.lock().unwrap();
+        ids.iter().map(|&id| mem.fetch_frame(id)).collect()
+    }
+}

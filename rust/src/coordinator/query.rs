@@ -1,0 +1,163 @@
+//! The query-stage engine (Fig. 6, steps ⑤–⑥): embed the query text,
+//! score it against the memory index, and select keyframes via
+//! sampling-based retrieval or AKR.  All timings here are *measured*
+//! wall-clock on the local host (the honest edge-compute numbers that
+//! anchor the paper-scale simulation).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::RetrievalConfig;
+use crate::embed::EmbedEngine;
+use crate::memory::Hierarchy;
+use crate::retrieval::{akr_retrieve, sample_retrieve, topk_retrieve, Selection};
+use crate::util::rng::Pcg64;
+
+/// Measured edge-side latencies for one query.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeTimings {
+    pub embed_query_s: f64,
+    pub search_s: f64,
+    pub select_s: f64,
+    pub fetch_s: f64,
+}
+
+impl EdgeTimings {
+    pub fn total_s(&self) -> f64 {
+        self.embed_query_s + self.search_s + self.select_s + self.fetch_s
+    }
+}
+
+/// Result of the edge-side query stage.
+#[derive(Clone, Debug, Default)]
+pub struct QueryOutcome {
+    pub selection: Selection,
+    pub timings: EdgeTimings,
+    /// AKR draws actually used (== selection budget when AKR is off)
+    pub draws: usize,
+}
+
+/// Retrieval mode (the ablation axis of Fig. 10 / Fig. 11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetrievalMode {
+    /// AKR progressive sampling (Eq. 6–7)
+    Akr,
+    /// fixed-budget sampling (Eq. 5)
+    FixedSampling(usize),
+    /// greedy Top-K over indexed frames (Vanilla)
+    TopK(usize),
+}
+
+/// The query engine: owns a PJRT embed engine + shares the memory.
+pub struct QueryEngine {
+    engine: EmbedEngine,
+    memory: Arc<Mutex<Hierarchy>>,
+    cfg: RetrievalConfig,
+    rng: Pcg64,
+    scores_buf: Vec<f32>,
+}
+
+impl QueryEngine {
+    pub fn new(
+        engine: EmbedEngine,
+        memory: Arc<Mutex<Hierarchy>>,
+        cfg: RetrievalConfig,
+        seed: u64,
+    ) -> Self {
+        Self {
+            engine,
+            memory,
+            cfg,
+            rng: Pcg64::new(seed, 0x9e4),
+            scores_buf: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &RetrievalConfig {
+        &self.cfg
+    }
+
+    pub fn set_config(&mut self, cfg: RetrievalConfig) {
+        self.cfg = cfg;
+    }
+
+    /// Default mode from config.
+    fn default_mode(&self) -> RetrievalMode {
+        if self.cfg.akr {
+            RetrievalMode::Akr
+        } else {
+            RetrievalMode::FixedSampling(self.cfg.budget)
+        }
+    }
+
+    /// Run the full query stage with the configured mode.
+    pub fn retrieve(&mut self, text: &str) -> Result<QueryOutcome> {
+        self.retrieve_with(text, self.default_mode())
+    }
+
+    /// Run the query stage with an explicit retrieval mode.
+    pub fn retrieve_with(&mut self, text: &str, mode: RetrievalMode) -> Result<QueryOutcome> {
+        let mut t = EdgeTimings::default();
+
+        let t0 = Instant::now();
+        let qvec = self.engine.embed_query(text)?;
+        t.embed_query_s = t0.elapsed().as_secs_f64();
+
+        let mem = self.memory.lock().unwrap();
+        let t0 = Instant::now();
+        mem.score_all(&qvec, &mut self.scores_buf);
+        t.search_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        // bound the sampling distribution to the scored shortlist so the
+        // Eq. 5 trade-off is invariant to how long the stream has run
+        let masked =
+            crate::retrieval::shortlist_mask(&self.scores_buf, self.cfg.shortlist);
+        let (selection, draws) = match mode {
+            RetrievalMode::Akr => {
+                let out = akr_retrieve(
+                    &mem,
+                    &masked,
+                    self.cfg.tau,
+                    self.cfg.theta,
+                    self.cfg.beta,
+                    self.cfg.n_max,
+                    &mut self.rng,
+                );
+                (out.selection, out.draws)
+            }
+            RetrievalMode::FixedSampling(n) => {
+                let sel = sample_retrieve(&mem, &masked, self.cfg.tau, n, &mut self.rng);
+                (sel, n)
+            }
+            RetrievalMode::TopK(k) => (topk_retrieve(&mem, &self.scores_buf, k), k),
+        };
+        t.select_s = t0.elapsed().as_secs_f64();
+
+        // fetch (decode) the selected raw frames — part of the edge path
+        let t0 = Instant::now();
+        for &f in &selection.frames {
+            std::hint::black_box(mem.fetch_frame(f));
+        }
+        t.fetch_s = t0.elapsed().as_secs_f64();
+        drop(mem);
+
+        Ok(QueryOutcome { selection, timings: t, draws })
+    }
+
+    /// Raw similarity scores for the given query (diagnostics / benches).
+    pub fn score_query(&mut self, text: &str) -> Result<Vec<f32>> {
+        let qvec = self.engine.embed_query(text)?;
+        let mem = self.memory.lock().unwrap();
+        let mut scores = Vec::new();
+        mem.score_all(&qvec, &mut scores);
+        Ok(scores)
+    }
+
+    /// Measured mean text-embedding latency so far.
+    pub fn measured_text_embed_s(&self) -> f64 {
+        self.engine.measured_text_s()
+    }
+}

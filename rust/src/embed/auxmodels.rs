@@ -1,0 +1,145 @@
+//! Simulated lightweight auxiliary models (the paper uses EasyOCR + YOLO).
+//!
+//! Honest pixel-level detectors: they inspect ONLY the frame's pixels —
+//! the two watermark patches — and match them against the known concept
+//! code book (nearest-code L2), exactly the way an OCR/detector recognizes
+//! planted text/objects.  Detection is imperfect by construction: codes
+//! are blended with scene content at plant time, so weakly-blended or
+//! occluded marks fall below the match threshold and are missed.
+
+use crate::video::frame::Frame;
+
+/// A detected concept with a confidence score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Detection {
+    pub concept: usize,
+    /// 1 − normalized L2 distance to the matched code (higher = surer).
+    pub confidence: f32,
+}
+
+/// The aux-model bank (simulated OCR + YOLO).
+#[derive(Clone, Debug)]
+pub struct AuxModels {
+    codes: Vec<Vec<f32>>,
+    patch: usize,
+    /// max normalized L2 distance for a match
+    pub threshold: f32,
+}
+
+impl AuxModels {
+    pub fn new(codes: Vec<Vec<f32>>, patch: usize) -> Self {
+        Self { codes, patch, threshold: 0.22 }
+    }
+
+    /// Extract the watermark patch at `slot` (0 = top-left, 1 = top-right).
+    fn region(&self, frame: &Frame, slot: u8) -> Vec<f32> {
+        let p = self.patch;
+        let x0 = if slot == 0 { 0 } else { frame.size() - p };
+        let mut out = Vec::with_capacity(p * p * 3);
+        for y in 0..p {
+            for x in 0..p {
+                let (r, g, b) = frame.rgb(y, x0 + x);
+                out.extend_from_slice(&[r, g, b]);
+            }
+        }
+        out
+    }
+
+    /// Run the detectors over one frame.
+    pub fn detect(&self, frame: &Frame) -> Vec<Detection> {
+        let mut out = Vec::new();
+        for slot in 0..2u8 {
+            let region = self.region(frame, slot);
+            let mut best: Option<Detection> = None;
+            for (c, code) in self.codes.iter().enumerate() {
+                let mut acc = 0.0f32;
+                for (a, b) in region.iter().zip(code) {
+                    let d = a - b;
+                    acc += d * d;
+                }
+                let dist = (acc / region.len() as f32).sqrt();
+                let conf = 1.0 - dist / self.threshold;
+                if dist < self.threshold
+                    && best.map_or(true, |b| conf > b.confidence)
+                {
+                    best = Some(Detection { concept: c, confidence: conf });
+                }
+            }
+            if let Some(d) = best {
+                if !out.iter().any(|o: &Detection| o.concept == d.concept) {
+                    out.push(d);
+                }
+            }
+        }
+        out
+    }
+
+    /// Detected concept ids only (for prompt construction).
+    pub fn detect_concepts(&self, frame: &Frame) -> Vec<usize> {
+        self.detect(frame).into_iter().map(|d| d.concept).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn codes(n: usize, patch: usize) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seeded(21);
+        (0..n)
+            .map(|_| (0..patch * patch * 3).map(|_| rng.f32()).collect())
+            .collect()
+    }
+
+    fn noisy_scene(seed: u64) -> Frame {
+        let mut rng = Pcg64::seeded(seed);
+        let mut f = Frame::new(64);
+        for y in 0..64 {
+            for x in 0..64 {
+                f.set_rgb(y, x, [rng.f32(), rng.f32(), rng.f32()]);
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn detects_planted_code() {
+        let cs = codes(8, 8);
+        let aux = AuxModels::new(cs.clone(), 8);
+        let mut f = noisy_scene(1);
+        f.blend_block(0, 0, 8, &cs[3], 0.85);
+        let dets = aux.detect(&f);
+        assert!(dets.iter().any(|d| d.concept == 3), "{dets:?}");
+    }
+
+    #[test]
+    fn detects_both_slots() {
+        let cs = codes(8, 8);
+        let aux = AuxModels::new(cs.clone(), 8);
+        let mut f = noisy_scene(2);
+        f.blend_block(0, 0, 8, &cs[1], 0.9);
+        f.blend_block(0, 56, 8, &cs[6], 0.9);
+        let got = aux.detect_concepts(&f);
+        assert!(got.contains(&1) && got.contains(&6), "{got:?}");
+    }
+
+    #[test]
+    fn no_false_positive_on_plain_scene() {
+        let cs = codes(8, 8);
+        let aux = AuxModels::new(cs, 8);
+        let f = noisy_scene(3);
+        assert!(aux.detect(&f).is_empty());
+    }
+
+    #[test]
+    fn misses_weak_blend() {
+        // occluded / faint marks fall below threshold — detector is honest
+        let cs = codes(8, 8);
+        let aux = AuxModels::new(cs.clone(), 8);
+        let mut f = noisy_scene(4);
+        f.blend_block(0, 0, 8, &cs[2], 0.2);
+        let dets = aux.detect(&f);
+        assert!(!dets.iter().any(|d| d.concept == 2), "{dets:?}");
+    }
+}

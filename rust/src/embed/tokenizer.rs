@@ -1,0 +1,170 @@
+//! Query/prompt tokenizer — bit-for-bit mirror of
+//! `python/compile/tokenizer.py` (verified against the golden token file).
+//!
+//! Vocabulary layout:
+//!   0                              PAD
+//!   1                              UNK (reserved)
+//!   [base, base+C)                 concept tokens
+//!   [base+C, vocab)                FNV-1a-hashed word ids
+
+use crate::runtime::ModelMeta;
+
+const FNV_OFFSET: u32 = 0x811C_9DC5;
+const FNV_PRIME: u32 = 0x0100_0193;
+
+/// 32-bit FNV-1a hash (identical to the Python side).
+pub fn fnv1a(data: &[u8]) -> u32 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Tokenizer configured from the artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    seq_len: usize,
+    vocab: usize,
+    base: usize,
+    n_concepts: usize,
+}
+
+impl Tokenizer {
+    pub fn from_model(m: &ModelMeta) -> Self {
+        Self {
+            seq_len: m.seq_len,
+            vocab: m.vocab,
+            base: m.concept_token_base,
+            n_concepts: m.n_concepts,
+        }
+    }
+
+    /// Token id of concept `c`.
+    pub fn concept_token(&self, c: usize) -> i32 {
+        assert!(c < self.n_concepts);
+        (self.base + c) as i32
+    }
+
+    /// Lowercase whitespace tokenization into a PAD-padded fixed window.
+    pub fn tokenize(&self, text: &str) -> Vec<i32> {
+        let hash_base = self.base + self.n_concepts;
+        let hash_range = (self.vocab - hash_base) as u32;
+        let mut ids = Vec::with_capacity(self.seq_len);
+        for word in text.to_lowercase().split_whitespace() {
+            let word = word.trim_matches(|c| ".,?!\"'".contains(c));
+            if word.is_empty() {
+                continue;
+            }
+            if ids.len() == self.seq_len {
+                break;
+            }
+            if let Some(rest) = word.strip_prefix("concept") {
+                if !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()) {
+                    if let Ok(c) = rest.parse::<usize>() {
+                        if c < self.n_concepts {
+                            ids.push((self.base + c) as i32);
+                            continue;
+                        }
+                    }
+                }
+            }
+            ids.push((hash_base as u32 + fnv1a(word.as_bytes()) % hash_range) as i32);
+        }
+        ids.resize(self.seq_len, 0);
+        ids
+    }
+
+    /// Build an aux-prompt token window from detected concept ids
+    /// (Eq. 2's textual template, reduced to its token effect).
+    pub fn aux_prompt(&self, concepts: &[usize]) -> Vec<i32> {
+        let mut ids: Vec<i32> = concepts
+            .iter()
+            .take(self.seq_len)
+            .map(|&c| self.concept_token(c))
+            .collect();
+        ids.resize(self.seq_len, 0);
+        ids
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            img_size: 64,
+            patch: 8,
+            d_embed: 64,
+            seq_len: 16,
+            vocab: 512,
+            n_concepts: 32,
+            concept_token_base: 2,
+            sim_rows: 1024,
+            scene_feat_dim: 64,
+            sem_weight: 4.0,
+            content_weight: 1.0,
+            aux_weight: 0.5,
+        }
+    }
+
+    #[test]
+    fn fnv_reference_values() {
+        // mirrored in python/tests/test_model.py::test_fnv_golden
+        assert_eq!(fnv1a(b""), 0x811C_9DC5);
+        assert_eq!(fnv1a(b"a"), 0xE40C_292C);
+    }
+
+    #[test]
+    fn concept_words_map_to_concept_tokens() {
+        let t = Tokenizer::from_model(&meta());
+        let ids = t.tokenize("concept00 concept31");
+        assert_eq!(ids[0], 2);
+        assert_eq!(ids[1], 33);
+    }
+
+    #[test]
+    fn hashed_words_in_range() {
+        let t = Tokenizer::from_model(&meta());
+        let ids = t.tokenize("kitchen stove window door");
+        for &id in ids.iter().take(4) {
+            assert!((34..512).contains(&(id as usize)), "id {id}");
+        }
+    }
+
+    #[test]
+    fn padding_and_truncation() {
+        let t = Tokenizer::from_model(&meta());
+        assert_eq!(t.tokenize(""), vec![0; 16]);
+        let long: String = std::iter::repeat("word ").take(40).collect();
+        assert_eq!(t.tokenize(&long).len(), 16);
+    }
+
+    #[test]
+    fn case_and_punctuation_insensitive() {
+        let t = Tokenizer::from_model(&meta());
+        assert_eq!(t.tokenize("Kitchen, stove!"), t.tokenize("kitchen stove"));
+    }
+
+    #[test]
+    fn aux_prompt_layout() {
+        let t = Tokenizer::from_model(&meta());
+        let ids = t.aux_prompt(&[4, 7]);
+        assert_eq!(ids[0], 6);
+        assert_eq!(ids[1], 9);
+        assert_eq!(ids[2], 0);
+    }
+
+    #[test]
+    fn invalid_concept_number_hashes_instead() {
+        let t = Tokenizer::from_model(&meta());
+        let ids = t.tokenize("concept99");
+        assert!(ids[0] as usize >= 34, "out-of-range concept falls back to hash");
+    }
+}

@@ -1,0 +1,12 @@
+//! Evaluation harness: experiment runner (accuracy) + deployment latency
+//! models.  Every `rust/benches/*` table/figure regenerator is a thin
+//! driver over this module — see DESIGN.md §4 for the experiment index.
+
+pub mod latency;
+pub mod runner;
+
+pub use latency::{Deployment, LatencyModel, LatencyParts};
+pub use runner::{
+    build_synth, eval_baseline, eval_venus, measure_venus_edge_latency, prepare_case,
+    CellOutcome, VenusMode, VideoCase,
+};

@@ -1,0 +1,214 @@
+//! Experiment runner: prepares ingested video cases and evaluates every
+//! method's reasoning accuracy against the shared VLM answer model.
+//!
+//! One [`VideoCase`] = one synthetic clip, fully ingested through the real
+//! Venus pipeline (PJRT embeddings in the memory index), plus its query
+//! set with ground truth.  Baselines select over the same clip via the
+//! frame-score oracle; Venus retrieves from its memory.  All methods are
+//! judged by the SAME answer model, so accuracy differences come from
+//! selection behavior only.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::baselines::{self, frame_scores, Method, SelectionContext};
+use crate::cloud::{VlmClient, VlmPersonality};
+use crate::config::{CloudConfig, VenusConfig};
+use crate::coordinator::query::{QueryEngine, RetrievalMode};
+use crate::embed::EmbedEngine;
+use crate::ingest::{IngestStats, Pipeline};
+use crate::memory::{Hierarchy, SynthBackedRaw};
+use crate::runtime::Runtime;
+use crate::video::synth::{SynthConfig, VideoSynth};
+use crate::video::workload::{DatasetPreset, Query, WorkloadGen};
+
+/// A prepared evaluation case: clip + ingested memory + queries.
+pub struct VideoCase {
+    pub synth: Arc<VideoSynth>,
+    pub memory: Arc<Mutex<Hierarchy>>,
+    pub queries: Vec<Query>,
+    pub ingest_stats: IngestStats,
+    pub preset: DatasetPreset,
+}
+
+/// Build the synthetic stream for a preset (codes from the artifacts so
+/// the MEM can read the watermarks).
+pub fn build_synth(preset: DatasetPreset, seed: u64) -> Result<Arc<VideoSynth>> {
+    let rt = Runtime::load_default()?;
+    let codes = rt.concept_codes()?;
+    let patch = rt.model().patch;
+    let (lo, hi) = preset.scene_len_s();
+    Ok(Arc::new(VideoSynth::new(
+        SynthConfig {
+            duration_s: preset.duration_s(),
+            scene_len_s: (lo, hi),
+            seed,
+            ..Default::default()
+        },
+        codes,
+        patch,
+    )))
+}
+
+/// Ingest a full clip through the real pipeline and generate queries.
+pub fn prepare_case(
+    preset: DatasetPreset,
+    cfg: &VenusConfig,
+    n_queries: usize,
+    seed: u64,
+) -> Result<VideoCase> {
+    let synth = build_synth(preset, seed)?;
+    let rt = Runtime::load_default()?;
+    let d_embed = rt.model().d_embed;
+    let memory = Arc::new(Mutex::new(Hierarchy::new(
+        &cfg.memory,
+        d_embed,
+        Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
+    )?));
+    let engine = EmbedEngine::new(rt, cfg.ingest.aux_models)?;
+    let mut pipe = Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory));
+    for i in 0..synth.total_frames() {
+        pipe.push_frame(i, &synth.frame(i))?;
+    }
+    let ingest_stats = pipe.finish()?;
+    let queries = WorkloadGen::new(seed ^ 0x9, preset).generate(synth.script(), n_queries);
+    Ok(VideoCase { synth, memory, queries, ingest_stats, preset })
+}
+
+/// Accuracy + selection-size outcome of one method on one case.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CellOutcome {
+    pub correct: usize,
+    pub total: usize,
+    pub mean_frames: f64,
+    /// mean AKR draws (Venus-AKR only; == budget otherwise)
+    pub mean_draws: f64,
+}
+
+impl CellOutcome {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &CellOutcome) {
+        let frames_sum = self.mean_frames * self.total as f64
+            + other.mean_frames * other.total as f64;
+        let draws_sum =
+            self.mean_draws * self.total as f64 + other.mean_draws * other.total as f64;
+        self.correct += other.correct;
+        self.total += other.total;
+        if self.total > 0 {
+            self.mean_frames = frames_sum / self.total as f64;
+            self.mean_draws = draws_sum / self.total as f64;
+        }
+    }
+}
+
+/// Venus retrieval flavor under evaluation.
+#[derive(Clone, Copy, Debug)]
+pub enum VenusMode {
+    FixedSampling(usize),
+    Akr,
+    TopK(usize),
+}
+
+/// Evaluate a *baseline* method over a case.
+pub fn eval_baseline(
+    case: &VideoCase,
+    method: Method,
+    budget: usize,
+    personality: VlmPersonality,
+    seed: u64,
+) -> CellOutcome {
+    let cloud_cfg = CloudConfig { vlm: personality.name().into(), ..Default::default() };
+    let mut vlm = VlmClient::new(cloud_cfg, seed);
+    let total = case.synth.total_frames();
+    let mut out = CellOutcome { mean_draws: budget as f64, ..Default::default() };
+    let mut frames_sum = 0usize;
+    for q in &case.queries {
+        let scores;
+        let ctx = SelectionContext {
+            synth: &case.synth,
+            query: q,
+            total,
+            scores: if method.query_relevant() {
+                scores = frame_scores(case.synth.script(), q, total, seed);
+                Some(&scores)
+            } else {
+                None
+            },
+            seed,
+        };
+        let sel = baselines::select(method, &ctx, budget);
+        frames_sum += sel.len();
+        let (correct, _) = vlm.judge(q, case.synth.script(), &sel);
+        out.correct += correct as usize;
+        out.total += 1;
+    }
+    out.mean_frames = frames_sum as f64 / out.total.max(1) as f64;
+    out
+}
+
+/// Evaluate Venus (real memory retrieval) over a case.
+pub fn eval_venus(
+    case: &VideoCase,
+    mode: VenusMode,
+    cfg: &VenusConfig,
+    personality: VlmPersonality,
+    seed: u64,
+) -> Result<CellOutcome> {
+    let cloud_cfg = CloudConfig { vlm: personality.name().into(), ..Default::default() };
+    let mut vlm = VlmClient::new(cloud_cfg, seed);
+    let mut qe = QueryEngine::new(
+        EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+        Arc::clone(&case.memory),
+        cfg.retrieval.clone(),
+        seed,
+    );
+    let rmode = match mode {
+        VenusMode::FixedSampling(n) => RetrievalMode::FixedSampling(n),
+        VenusMode::Akr => RetrievalMode::Akr,
+        VenusMode::TopK(k) => RetrievalMode::TopK(k),
+    };
+    let mut out = CellOutcome::default();
+    let mut frames_sum = 0usize;
+    let mut draws_sum = 0usize;
+    for q in &case.queries {
+        let res = qe.retrieve_with(&q.text, rmode)?;
+        frames_sum += res.selection.frames.len();
+        draws_sum += res.draws;
+        let (correct, _) = vlm.judge(q, case.synth.script(), &res.selection.frames);
+        out.correct += correct as usize;
+        out.total += 1;
+    }
+    out.mean_frames = frames_sum as f64 / out.total.max(1) as f64;
+    out.mean_draws = draws_sum as f64 / out.total.max(1) as f64;
+    Ok(out)
+}
+
+/// Mean measured edge-side query latency of Venus on a case (seconds).
+pub fn measure_venus_edge_latency(
+    case: &VideoCase,
+    cfg: &VenusConfig,
+    budget: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut qe = QueryEngine::new(
+        EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+        Arc::clone(&case.memory),
+        cfg.retrieval.clone(),
+        seed,
+    );
+    let mut total = 0.0;
+    let n = case.queries.len().min(16);
+    for q in case.queries.iter().take(n) {
+        let res = qe.retrieve_with(&q.text, RetrievalMode::FixedSampling(budget))?;
+        total += res.timings.total_s();
+    }
+    Ok(total / n as f64)
+}

@@ -1,0 +1,196 @@
+//! Native Eq. 1 perception features: HSL conversion, Sobel edge energy,
+//! and pooled frame feature vectors.
+//!
+//! This is the hot perception front-end (runs on every captured frame at
+//! stream rate), so it has a pure-Rust implementation; numerics mirror the
+//! Pallas `scene_score` kernel / `ref.py` oracle bit-for-bit in structure
+//! (cross-validated by `rust/tests/native_vs_artifact.rs`).  Per Eq. 1 the
+//! scene score is a weighted L1 distance between consecutive frames'
+//! pooled (H, S, L, E) maps.
+
+use crate::video::frame::Frame;
+
+/// Pooling grid per side (4 ⇒ 16 cells ⇒ 64-dim feature vector).
+pub const POOL: usize = 4;
+/// Feature vector length: 4 channels × POOL².
+pub const FEAT_DIM: usize = 4 * POOL * POOL;
+
+/// Per-channel Eq. 1 weights (hue, saturation, lightness, edge).
+#[derive(Clone, Copy, Debug)]
+pub struct ChannelWeights {
+    pub hue: f32,
+    pub saturation: f32,
+    pub lightness: f32,
+    pub edge: f32,
+}
+
+impl Default for ChannelWeights {
+    fn default() -> Self {
+        // edge map weighted up, as in content-aware shot detection practice
+        Self { hue: 1.0, saturation: 1.0, lightness: 1.0, edge: 2.0 }
+    }
+}
+
+/// RGB → (hue, saturation, lightness), all in [0, 1].
+#[inline]
+pub fn rgb_to_hsl(r: f32, g: f32, b: f32) -> (f32, f32, f32) {
+    let mx = r.max(g).max(b);
+    let mn = r.min(g).min(b);
+    let c = mx - mn;
+    let l = 0.5 * (mx + mn);
+    if c < 1e-8 {
+        return (0.0, 0.0, l);
+    }
+    let s = c / (1.0 - (2.0 * l - 1.0).abs() + 1e-8);
+    let h = if mx == r {
+        ((g - b) / c).rem_euclid(6.0)
+    } else if mx == g {
+        (b - r) / c + 2.0
+    } else {
+        (r - g) / c + 4.0
+    };
+    (h / 6.0, s, l)
+}
+
+/// Eq. 1 feature vector of a frame: pooled (H, S, L, SobelEnergy) means,
+/// laid out `[h_cells..., s_cells..., l_cells..., e_cells...]` row-major —
+/// identical to `ref.scene_features_one`.
+pub fn frame_features(frame: &Frame) -> Vec<f32> {
+    let size = frame.size();
+    let cell = size / POOL;
+    let mut h_plane = vec![0.0f32; size * size];
+    let mut s_plane = vec![0.0f32; size * size];
+    let mut l_plane = vec![0.0f32; size * size];
+
+    for y in 0..size {
+        for x in 0..size {
+            let (r, g, b) = frame.rgb(y, x);
+            let (h, s, l) = rgb_to_hsl(r, g, b);
+            let i = y * size + x;
+            h_plane[i] = h;
+            s_plane[i] = s;
+            l_plane[i] = l;
+        }
+    }
+
+    // Sobel magnitude over lightness with edge-replicated padding
+    let mut e_plane = vec![0.0f32; size * size];
+    let at = |y: isize, x: isize| -> f32 {
+        let yy = y.clamp(0, size as isize - 1) as usize;
+        let xx = x.clamp(0, size as isize - 1) as usize;
+        l_plane[yy * size + xx]
+    };
+    for y in 0..size as isize {
+        for x in 0..size as isize {
+            let (tl, tc, tr) = (at(y - 1, x - 1), at(y - 1, x), at(y - 1, x + 1));
+            let (ml, mr) = (at(y, x - 1), at(y, x + 1));
+            let (bl, bc, br) = (at(y + 1, x - 1), at(y + 1, x), at(y + 1, x + 1));
+            let gx = (tr + 2.0 * mr + br) - (tl + 2.0 * ml + bl);
+            let gy = (bl + 2.0 * bc + br) - (tl + 2.0 * tc + tr);
+            e_plane[y as usize * size + x as usize] = (gx * gx + gy * gy + 1e-12).sqrt();
+        }
+    }
+
+    let mut out = Vec::with_capacity(FEAT_DIM);
+    for plane in [&h_plane, &s_plane, &l_plane, &e_plane] {
+        for cy in 0..POOL {
+            for cx in 0..POOL {
+                let mut sum = 0.0f32;
+                for y in cy * cell..(cy + 1) * cell {
+                    for x in cx * cell..(cx + 1) * cell {
+                        sum += plane[y * size + x];
+                    }
+                }
+                out.push(sum / (cell * cell) as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Eq. 1 scene-tracking score between two feature vectors.
+pub fn scene_score(a: &[f32], b: &[f32], w: ChannelWeights) -> f32 {
+    debug_assert_eq!(a.len(), FEAT_DIM);
+    debug_assert_eq!(b.len(), FEAT_DIM);
+    let p2 = POOL * POOL;
+    let ws = [w.hue, w.saturation, w.lightness, w.edge];
+    let mut num = 0.0f32;
+    for (ch, &wc) in ws.iter().enumerate() {
+        let mut acc = 0.0f32;
+        for i in ch * p2..(ch + 1) * p2 {
+            acc += (a[i] - b[i]).abs();
+        }
+        num += wc * acc;
+    }
+    // Eq. 1 normalizes by ||w||_1 over the full weight vector (each channel
+    // weight repeated per cell), hence the p2 factor in the denominator.
+    let denom: f32 = ws.iter().sum::<f32>() * p2 as f32;
+    num / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::video::frame::Frame;
+
+    #[test]
+    fn hsl_primaries() {
+        let (h, s, _) = rgb_to_hsl(1.0, 0.0, 0.0);
+        assert!(h.abs() < 1e-6 && (s - 1.0).abs() < 1e-4);
+        let (h, _, _) = rgb_to_hsl(0.0, 1.0, 0.0);
+        assert!((h - 1.0 / 3.0).abs() < 1e-6);
+        let (h, _, _) = rgb_to_hsl(0.0, 0.0, 1.0);
+        assert!((h - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hsl_gray_has_zero_saturation() {
+        let (h, s, l) = rgb_to_hsl(0.5, 0.5, 0.5);
+        assert_eq!((h, s), (0.0, 0.0));
+        assert!((l - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn constant_frame_features() {
+        let f = Frame::filled(64, [0.5, 0.5, 0.5]);
+        let feat = frame_features(&f);
+        let p2 = POOL * POOL;
+        // hue 0, sat 0, light 0.5, edges ~0
+        assert!(feat[..p2].iter().all(|&x| x == 0.0));
+        assert!(feat[p2..2 * p2].iter().all(|&x| x == 0.0));
+        assert!(feat[2 * p2..3 * p2].iter().all(|&x| (x - 0.5).abs() < 1e-6));
+        assert!(feat[3 * p2..].iter().all(|&x| x < 1e-3));
+    }
+
+    #[test]
+    fn vertical_edge_energy_in_middle_columns() {
+        let mut f = Frame::filled(64, [0.0, 0.0, 0.0]);
+        for y in 0..64 {
+            for x in 32..64 {
+                f.set_rgb(y, x, [1.0, 1.0, 1.0]);
+            }
+        }
+        let feat = frame_features(&f);
+        let p2 = POOL * POOL;
+        let edges = &feat[3 * p2..];
+        let mid: f32 = (0..POOL).map(|cy| edges[cy * POOL + 1] + edges[cy * POOL + 2]).sum();
+        let border: f32 = (0..POOL).map(|cy| edges[cy * POOL]).sum();
+        assert!(mid > 10.0 * border.max(1e-6));
+    }
+
+    #[test]
+    fn scene_score_zero_for_identical() {
+        let f = Frame::filled(64, [0.3, 0.6, 0.9]);
+        let a = frame_features(&f);
+        assert!(scene_score(&a, &a, ChannelWeights::default()).abs() < 1e-7);
+    }
+
+    #[test]
+    fn scene_score_larger_for_bigger_change() {
+        let a = frame_features(&Frame::filled(64, [0.2, 0.2, 0.2]));
+        let b = frame_features(&Frame::filled(64, [0.25, 0.25, 0.25]));
+        let c = frame_features(&Frame::filled(64, [0.9, 0.9, 0.9]));
+        let w = ChannelWeights::default();
+        assert!(scene_score(&a, &c, w) > scene_score(&a, &b, w));
+    }
+}

@@ -1,0 +1,154 @@
+//! Incremental frame clustering within a scene partition (§IV-B-2).
+//!
+//! Leader clustering, as in the paper: the first frame seeds cluster c₁;
+//! each subsequent frame joins the nearest existing cluster if its L2
+//! pixel distance to that cluster's centroid is within the threshold,
+//! otherwise it seeds a new cluster.  Centroid frames become the *indexed
+//! frames* that get embedded into memory; members stay temporally
+//! contiguous-ish by construction (clusters are per-partition).
+
+use crate::video::frame::Frame;
+
+/// One cluster of visually-similar frames inside a partition.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    /// global frame id of the centroid (leader) frame
+    pub centroid_id: u64,
+    /// the centroid pixels (kept for embedding)
+    pub centroid: Frame,
+    /// member frame ids (includes the centroid), insertion order
+    pub members: Vec<u64>,
+}
+
+impl Cluster {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// Incremental clusterer for one partition.
+pub struct PartitionClusterer {
+    threshold: f32,
+    clusters: Vec<Cluster>,
+}
+
+impl PartitionClusterer {
+    pub fn new(threshold: f32) -> Self {
+        Self { threshold, clusters: Vec::new() }
+    }
+
+    /// Assign a frame to a cluster (creating one if needed); returns the
+    /// cluster index it joined.
+    pub fn push(&mut self, frame_id: u64, frame: &Frame) -> usize {
+        let mut best: Option<(usize, f32)> = None;
+        for (i, c) in self.clusters.iter().enumerate() {
+            // bounded distance: abort as soon as this centroid can no
+            // longer beat the running best (or the join threshold)
+            let bound = best.map_or(self.threshold, |(_, bd)| bd.min(self.threshold));
+            let d = frame.l2_distance_bounded(&c.centroid, bound);
+            if best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((i, d));
+            }
+        }
+        match best {
+            Some((i, d)) if d <= self.threshold => {
+                self.clusters[i].members.push(frame_id);
+                i
+            }
+            _ => {
+                self.clusters.push(Cluster {
+                    centroid_id: frame_id,
+                    centroid: frame.clone(),
+                    members: vec![frame_id],
+                });
+                self.clusters.len() - 1
+            }
+        }
+    }
+
+    /// Finish the partition, yielding its clusters.
+    pub fn finish(self) -> Vec<Cluster> {
+        self.clusters
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::video::synth::{SynthConfig, VideoSynth};
+
+    #[test]
+    fn identical_frames_one_cluster() {
+        let mut c = PartitionClusterer::new(0.05);
+        let f = Frame::filled(64, [0.5; 3]);
+        for i in 0..10 {
+            c.push(i, &f);
+        }
+        let clusters = c.finish();
+        assert_eq!(clusters.len(), 1);
+        assert_eq!(clusters[0].members.len(), 10);
+        assert_eq!(clusters[0].centroid_id, 0);
+    }
+
+    #[test]
+    fn distinct_frames_new_clusters() {
+        let mut c = PartitionClusterer::new(0.05);
+        c.push(0, &Frame::filled(64, [0.1; 3]));
+        c.push(1, &Frame::filled(64, [0.5; 3]));
+        c.push(2, &Frame::filled(64, [0.9; 3]));
+        assert_eq!(c.n_clusters(), 3);
+    }
+
+    #[test]
+    fn joins_nearest_cluster() {
+        let mut c = PartitionClusterer::new(0.15);
+        c.push(0, &Frame::filled(64, [0.1; 3]));
+        c.push(1, &Frame::filled(64, [0.9; 3]));
+        let joined = c.push(2, &Frame::filled(64, [0.82; 3]));
+        assert_eq!(joined, 1);
+    }
+
+    #[test]
+    fn members_are_conserved() {
+        // property: every pushed frame appears in exactly one cluster
+        let mut rng = Pcg64::seeded(31);
+        let codes = (0..8)
+            .map(|_| (0..192).map(|_| rng.f32()).collect())
+            .collect();
+        let synth = VideoSynth::new(
+            SynthConfig { duration_s: 20.0, seed: 4, ..Default::default() },
+            codes,
+            8,
+        );
+        let mut c = PartitionClusterer::new(0.085);
+        let n = synth.total_frames().min(80);
+        for i in 0..n {
+            c.push(i, &synth.frame(i));
+        }
+        let clusters = c.finish();
+        let mut all: Vec<u64> = clusters.iter().flat_map(|c| c.members.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+        // compression happened: fewer clusters than frames
+        assert!(clusters.len() < n as usize / 2, "{} clusters", clusters.len());
+    }
+
+    #[test]
+    fn centroid_is_first_member() {
+        let mut c = PartitionClusterer::new(0.2);
+        c.push(7, &Frame::filled(64, [0.3; 3]));
+        c.push(8, &Frame::filled(64, [0.31; 3]));
+        let clusters = c.finish();
+        assert_eq!(clusters[0].centroid_id, 7);
+        assert_eq!(clusters[0].members, vec![7, 8]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Ingestion stage (§IV-B): streaming scene segmentation, incremental
+//! clustering, and the threaded perception pipeline that feeds the
+//! hierarchical memory in real time.
+
+pub mod cluster;
+pub mod pipeline;
+pub mod scene;
+
+pub use cluster::{Cluster, PartitionClusterer};
+pub use pipeline::{IngestStats, Pipeline};
+pub use scene::{Partition, SceneSegmenter};

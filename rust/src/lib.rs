@@ -1,0 +1,40 @@
+//! # Venus — an edge memory-and-retrieval system for VLM-based online video understanding
+//!
+//! Reproduction of the CS.DC 2025 paper.  The crate implements the full
+//! edge-side system (L3): streaming perception (scene segmentation +
+//! incremental clustering), hierarchical memory (raw frame archive + vector
+//! index), query-time retrieval (temperature-softmax sampling, Eq. 5, and
+//! threshold-driven Adaptive Keyframe Retrieval, Eq. 6–7), and the serving
+//! loop — plus every substrate the evaluation needs: a synthetic
+//! scene-scripted video/workload generator, a from-scratch vector database,
+//! a network simulator, a simulated cloud VLM, and Jetson-class edge device
+//! profiles.
+//!
+//! Frame/text embedding runs through AOT-compiled XLA artifacts produced by
+//! the build-time Python layers (L2 JAX dual-encoder calling L1 Pallas
+//! kernels); see `python/compile/` and [`runtime`].  Python never executes
+//! on the request path.
+//!
+//! Quickstart: see `examples/quickstart.rs`; architecture: `DESIGN.md`.
+
+pub mod baselines;
+pub mod cli;
+pub mod cloud;
+pub mod coordinator;
+pub mod config;
+pub mod edge;
+pub mod embed;
+pub mod eval;
+pub mod features;
+pub mod ingest;
+pub mod memory;
+pub mod net;
+pub mod retrieval;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod video;
+
+/// Crate-wide result type (anyhow-based; library APIs return typed data,
+/// binaries surface errors with context).
+pub type Result<T> = anyhow::Result<T>;

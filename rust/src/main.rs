@@ -1,0 +1,9 @@
+//! `venus` binary: CLI front-end for the Venus edge serving system.
+//! Placeholder main — subcommands are wired up in `cli`.
+
+fn main() {
+    if let Err(e) = venus::cli::run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,236 @@
+//! Hierarchical memory (Fig. 8): the index layer links each stored vector
+//! to its scene cluster in the raw layer, enabling the two-phase recall
+//! the paper describes — locate relevant scenes via the semantic index,
+//! then reconstruct detail from the raw archive.
+
+use anyhow::Result;
+
+use crate::config::MemoryConfig;
+use crate::memory::raw::RawStore;
+use crate::memory::vectordb::{build_index, Hit, Metric, VectorIndex};
+
+/// Index-layer record: one indexed (centroid) frame and its cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterRecord {
+    /// partition (scene) sequence number from the segmenter
+    pub scene_id: usize,
+    /// global frame id of the indexed (centroid) frame
+    pub centroid_frame: u64,
+    /// member frame ids, ascending
+    pub members: Vec<u64>,
+}
+
+/// The hierarchical memory: vector index + cluster links + raw archive.
+pub struct Hierarchy {
+    index: Box<dyn VectorIndex>,
+    records: Vec<ClusterRecord>,
+    raw: Box<dyn RawStore>,
+    frames_ingested: u64,
+}
+
+impl Hierarchy {
+    pub fn new(cfg: &MemoryConfig, d_embed: usize, raw: Box<dyn RawStore>) -> Result<Self> {
+        let index = build_index(
+            &cfg.index,
+            d_embed,
+            Metric::Cosine,
+            cfg.ivf_nlist,
+            cfg.ivf_nprobe,
+        )?;
+        Ok(Self { index, records: Vec::new(), raw, frames_ingested: 0 })
+    }
+
+    /// Archive a raw frame (every captured frame flows through here).
+    pub fn archive_frame(&mut self, id: u64, frame: &crate::video::frame::Frame) {
+        self.raw.put(id, frame);
+        self.frames_ingested = self.frames_ingested.max(id + 1);
+    }
+
+    /// Insert an indexed frame: embedding vector + cluster record.
+    pub fn insert(&mut self, embedding: &[f32], record: ClusterRecord) -> Result<usize> {
+        let mut members = record.members.clone();
+        members.sort_unstable();
+        let id = self.index.insert(embedding)?;
+        debug_assert_eq!(id, self.records.len());
+        self.records.push(ClusterRecord { members, ..record });
+        Ok(id)
+    }
+
+    /// Similarity of the query vector against every indexed vector.
+    pub fn score_all(&self, query: &[f32], out: &mut Vec<f32>) {
+        self.index.score_all(query, out);
+    }
+
+    /// Top-k indexed frames (vanilla greedy retrieval).
+    pub fn search_topk(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        self.index.search(query, k)
+    }
+
+    pub fn record(&self, id: usize) -> &ClusterRecord {
+        &self.records[id]
+    }
+
+    pub fn records(&self) -> &[ClusterRecord] {
+        &self.records
+    }
+
+    /// Stored vector by index id.
+    pub fn vector(&self, id: usize) -> &[f32] {
+        self.index.vector(id)
+    }
+
+    /// Number of indexed vectors (== clusters).
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total frames archived in the raw layer.
+    pub fn frames_ingested(&self) -> u64 {
+        self.frames_ingested
+    }
+
+    /// Fetch a raw frame.
+    pub fn fetch_frame(&self, id: u64) -> crate::video::frame::Frame {
+        self.raw.get(id)
+    }
+
+    /// Compression ratio: raw frames per indexed vector.
+    pub fn sparsity(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.frames_ingested as f64 / self.records.len() as f64
+    }
+
+    /// Resident bytes of the raw layer (memory-growth bench).
+    pub fn raw_resident_bytes(&self) -> usize {
+        self.raw.resident_bytes()
+    }
+
+    /// Invariant check (property tests): every record's members are
+    /// sorted, contain the centroid, and refer to archived frames.
+    pub fn check_invariants(&self) -> Result<()> {
+        anyhow::ensure!(self.records.len() == self.index.len(), "record/index drift");
+        for (i, r) in self.records.iter().enumerate() {
+            anyhow::ensure!(!r.members.is_empty(), "record {i} empty");
+            anyhow::ensure!(
+                r.members.windows(2).all(|w| w[0] < w[1]),
+                "record {i} members unsorted"
+            );
+            anyhow::ensure!(
+                r.members.binary_search(&r.centroid_frame).is_ok(),
+                "record {i} centroid not a member"
+            );
+            anyhow::ensure!(
+                *r.members.last().unwrap() < self.frames_ingested,
+                "record {i} references unarchived frame"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MemoryConfig;
+    use crate::memory::raw::InMemoryRaw;
+    use crate::util::rng::Pcg64;
+    use crate::video::frame::Frame;
+
+    fn hierarchy() -> Hierarchy {
+        Hierarchy::new(
+            &MemoryConfig::default(),
+            8,
+            Box::new(InMemoryRaw::new(16)),
+        )
+        .unwrap()
+    }
+
+    fn unit(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        crate::util::l2_normalize(&mut v);
+        v
+    }
+
+    #[test]
+    fn insert_and_link() {
+        let mut h = hierarchy();
+        let mut rng = Pcg64::seeded(1);
+        for i in 0..20u64 {
+            h.archive_frame(i, &Frame::filled(16, [0.5; 3]));
+        }
+        let v = unit(&mut rng, 8);
+        let id = h
+            .insert(&v, ClusterRecord { scene_id: 0, centroid_frame: 3, members: vec![3, 4, 5] })
+            .unwrap();
+        assert_eq!(id, 0);
+        assert_eq!(h.record(0).members, vec![3, 4, 5]);
+        assert_eq!(h.len(), 1);
+        h.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn search_returns_inserted() {
+        let mut h = hierarchy();
+        let mut rng = Pcg64::seeded(2);
+        for i in 0..100u64 {
+            h.archive_frame(i, &Frame::filled(16, [0.1; 3]));
+        }
+        let mut vs = Vec::new();
+        for i in 0..10u64 {
+            let v = unit(&mut rng, 8);
+            h.insert(
+                &v,
+                ClusterRecord {
+                    scene_id: i as usize,
+                    centroid_frame: i * 10,
+                    members: (i * 10..(i + 1) * 10).collect(),
+                },
+            )
+            .unwrap();
+            vs.push(v);
+        }
+        let hits = h.search_topk(&vs[7], 1);
+        assert_eq!(hits[0].id, 7);
+        h.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invariants_catch_bad_members() {
+        let mut h = hierarchy();
+        let mut rng = Pcg64::seeded(3);
+        h.archive_frame(0, &Frame::filled(16, [0.0; 3]));
+        let v = unit(&mut rng, 8);
+        // centroid not in members
+        h.insert(&v, ClusterRecord { scene_id: 0, centroid_frame: 9, members: vec![0] })
+            .unwrap();
+        assert!(h.check_invariants().is_err());
+    }
+
+    #[test]
+    fn sparsity_reflects_compression() {
+        let mut h = hierarchy();
+        let mut rng = Pcg64::seeded(4);
+        for i in 0..100u64 {
+            h.archive_frame(i, &Frame::filled(16, [0.2; 3]));
+        }
+        for c in 0..4u64 {
+            let v = unit(&mut rng, 8);
+            h.insert(
+                &v,
+                ClusterRecord {
+                    scene_id: c as usize,
+                    centroid_frame: c * 25,
+                    members: (c * 25..(c + 1) * 25).collect(),
+                },
+            )
+            .unwrap();
+        }
+        assert!((h.sparsity() - 25.0).abs() < 1e-9);
+    }
+}

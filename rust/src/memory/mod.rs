@@ -1,0 +1,10 @@
+//! Hierarchical memory (Fig. 8): raw data layer + semantic index layer.
+//! The vector database substrate lives in [`vectordb`].
+
+pub mod hierarchy;
+pub mod raw;
+pub mod vectordb;
+
+pub use hierarchy::{ClusterRecord, Hierarchy};
+pub use raw::{InMemoryRaw, RawStore, SynthBackedRaw};
+pub use vectordb::{build_index, FlatIndex, Hit, IvfIndex, Metric, VectorIndex};

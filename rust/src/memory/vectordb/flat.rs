@@ -1,0 +1,154 @@
+//! Exact brute-force index: contiguous row-major storage, linear scan.
+//!
+//! This is Venus's default index — the paper's memory holds only sparse
+//! *indexed frames* (cluster centroids), so even hour-long streams yield
+//! a few thousand vectors and exact scan is both exact and fast (see the
+//! `hotpath_micro` bench).
+
+use anyhow::{bail, Result};
+
+use super::{finish_topk, push_topk, Hit, Metric, VectorIndex};
+use crate::util::{dot, l2_normalize};
+
+/// Flat (exact) vector index.
+pub struct FlatIndex {
+    dim: usize,
+    metric: Metric,
+    data: Vec<f32>,
+}
+
+impl FlatIndex {
+    pub fn new(dim: usize, metric: Metric) -> Self {
+        assert!(dim > 0);
+        Self { dim, metric, data: Vec::new() }
+    }
+
+    /// Reserve capacity for `n` additional vectors.
+    pub fn reserve(&mut self, n: usize) {
+        self.data.reserve(n * self.dim);
+    }
+
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+}
+
+impl VectorIndex for FlatIndex {
+    fn insert(&mut self, v: &[f32]) -> Result<usize> {
+        if v.len() != self.dim {
+            bail!("insert: dim {} != index dim {}", v.len(), self.dim);
+        }
+        let id = self.len();
+        self.data.extend_from_slice(v);
+        if self.metric == Metric::Cosine {
+            let start = id * self.dim;
+            l2_normalize(&mut self.data[start..start + self.dim]);
+        }
+        Ok(id)
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim);
+        let q = normalized_query(query, self.metric);
+        let mut buf = Vec::with_capacity(k + 1);
+        for (id, row) in self.data.chunks_exact(self.dim).enumerate() {
+            push_topk(&mut buf, k, Hit { id, score: dot(&q, row) });
+        }
+        finish_topk(buf, k)
+    }
+
+    fn score_all(&self, query: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(query.len(), self.dim);
+        let q = normalized_query(query, self.metric);
+        out.clear();
+        out.reserve(self.len());
+        for row in self.data.chunks_exact(self.dim) {
+            out.push(dot(&q, row));
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn vector(&self, id: usize) -> &[f32] {
+        &self.data[id * self.dim..(id + 1) * self.dim]
+    }
+}
+
+pub(super) fn normalized_query(query: &[f32], metric: Metric) -> Vec<f32> {
+    let mut q = query.to_vec();
+    if metric == Metric::Cosine {
+        l2_normalize(&mut q);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_exact_search() {
+        let mut idx = FlatIndex::new(2, Metric::Cosine);
+        idx.insert(&[1.0, 0.0]).unwrap();
+        idx.insert(&[0.0, 1.0]).unwrap();
+        idx.insert(&[1.0, 1.0]).unwrap();
+        let hits = idx.search(&[1.0, 0.05], 2);
+        assert_eq!(hits[0].id, 0);
+        assert_eq!(hits.len(), 2);
+        assert!(hits[0].score > hits[1].score);
+    }
+
+    #[test]
+    fn cosine_normalizes_magnitude_away() {
+        let mut idx = FlatIndex::new(2, Metric::Cosine);
+        idx.insert(&[10.0, 0.0]).unwrap();
+        idx.insert(&[0.0, 0.1]).unwrap();
+        let hits = idx.search(&[0.0, 5.0], 1);
+        assert_eq!(hits[0].id, 1);
+        assert!((hits[0].score - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn inner_product_keeps_magnitude() {
+        let mut idx = FlatIndex::new(2, Metric::InnerProduct);
+        idx.insert(&[10.0, 0.0]).unwrap();
+        idx.insert(&[1.0, 0.0]).unwrap();
+        let hits = idx.search(&[1.0, 0.0], 1);
+        assert_eq!(hits[0].id, 0);
+        assert!((hits[0].score - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let mut idx = FlatIndex::new(3, Metric::Cosine);
+        assert!(idx.insert(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn k_larger_than_len() {
+        let mut idx = FlatIndex::new(2, Metric::Cosine);
+        idx.insert(&[1.0, 0.0]).unwrap();
+        let hits = idx.search(&[1.0, 0.0], 10);
+        assert_eq!(hits.len(), 1);
+    }
+
+    #[test]
+    fn score_all_id_order() {
+        let mut idx = FlatIndex::new(2, Metric::Cosine);
+        for v in [[1.0, 0.0], [0.0, 1.0], [-1.0, 0.0]] {
+            idx.insert(&v).unwrap();
+        }
+        let mut out = Vec::new();
+        idx.score_all(&[1.0, 0.0], &mut out);
+        assert_eq!(out.len(), 3);
+        assert!((out[0] - 1.0).abs() < 1e-6);
+        assert!(out[1].abs() < 1e-6);
+        assert!((out[2] + 1.0).abs() < 1e-6);
+    }
+}

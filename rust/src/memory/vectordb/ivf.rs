@@ -1,0 +1,301 @@
+//! IVF (inverted-file) index: k-means coarse quantizer + posting lists.
+//!
+//! Mirrors FAISS `IndexIVFFlat`: vectors are assigned to their nearest
+//! centroid cell; a query probes only the `nprobe` nearest cells.  The
+//! quantizer trains itself once the buffer reaches a threshold and
+//! re-trains when the index has grown 8× since the last training (online
+//! streams grow without bound; Venus's ingestion keeps inserting for the
+//! lifetime of the camera).
+
+use anyhow::{bail, Result};
+
+use super::flat::normalized_query;
+use super::{finish_topk, push_topk, Hit, Metric, VectorIndex};
+use crate::util::rng::Pcg64;
+use crate::util::{dot, l2_normalize};
+
+/// Inverted-file vector index.
+pub struct IvfIndex {
+    dim: usize,
+    metric: Metric,
+    nlist: usize,
+    nprobe: usize,
+    /// row-major vector storage in insertion order (exact copies)
+    data: Vec<f32>,
+    /// trained centroids, row-major (empty until trained)
+    centroids: Vec<f32>,
+    /// posting lists: cell -> vector ids
+    cells: Vec<Vec<usize>>,
+    /// ids inserted since training (brute-forced until assigned)
+    trained_len: usize,
+    min_train: usize,
+}
+
+impl IvfIndex {
+    /// `nlist = 0` selects `sqrt(n)` automatically at training time.
+    pub fn new(dim: usize, metric: Metric, nlist: usize, nprobe: usize) -> Self {
+        Self {
+            dim,
+            metric,
+            nlist,
+            nprobe: nprobe.max(1),
+            data: Vec::new(),
+            centroids: Vec::new(),
+            cells: Vec::new(),
+            trained_len: 0,
+            min_train: 256,
+        }
+    }
+
+    fn trained(&self) -> bool {
+        !self.centroids.is_empty()
+    }
+
+    fn row(&self, id: usize) -> &[f32] {
+        &self.data[id * self.dim..(id + 1) * self.dim]
+    }
+
+    fn nearest_cell(&self, v: &[f32]) -> usize {
+        let mut best = 0;
+        let mut best_score = f32::NEG_INFINITY;
+        for (c, cen) in self.centroids.chunks_exact(self.dim).enumerate() {
+            let s = dot(v, cen);
+            if s > best_score {
+                best_score = s;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// K-means (cosine/IP variant: maximize dot with normalized means).
+    fn train(&mut self) {
+        let n = self.len();
+        let k = if self.nlist > 0 {
+            self.nlist.min(n)
+        } else {
+            ((n as f64).sqrt() as usize).clamp(4, 1024)
+        };
+        let mut rng = Pcg64::seeded(TRAIN_SEED);
+        // k-means++ style init: random distinct rows
+        let mut ids: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut ids);
+        let mut centroids: Vec<f32> = Vec::with_capacity(k * self.dim);
+        for &id in ids.iter().take(k) {
+            centroids.extend_from_slice(self.row(id));
+        }
+        // Lloyd iterations
+        let iters = 8;
+        let mut assign = vec![0usize; n];
+        for _ in 0..iters {
+            // assign
+            for i in 0..n {
+                let v = self.row(i);
+                let mut best = 0;
+                let mut best_score = f32::NEG_INFINITY;
+                for (c, cen) in centroids.chunks_exact(self.dim).enumerate() {
+                    let s = dot(v, cen);
+                    if s > best_score {
+                        best_score = s;
+                        best = c;
+                    }
+                }
+                assign[i] = best;
+            }
+            // update
+            let mut sums = vec![0.0f32; k * self.dim];
+            let mut counts = vec![0usize; k];
+            for i in 0..n {
+                let c = assign[i];
+                counts[c] += 1;
+                let row = &self.data[i * self.dim..(i + 1) * self.dim];
+                for (s, x) in sums[c * self.dim..(c + 1) * self.dim]
+                    .iter_mut()
+                    .zip(row)
+                {
+                    *s += x;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    // re-seed empty cell with a random row
+                    let id = rng.range(0, n);
+                    sums[c * self.dim..(c + 1) * self.dim]
+                        .copy_from_slice(self.row(id));
+                    counts[c] = 1;
+                }
+                let cen = &mut sums[c * self.dim..(c + 1) * self.dim];
+                let inv = 1.0 / counts[c] as f32;
+                for x in cen.iter_mut() {
+                    *x *= inv;
+                }
+                l2_normalize(cen);
+            }
+            centroids = sums;
+        }
+        self.centroids = centroids;
+        // rebuild posting lists
+        self.cells = vec![Vec::new(); k];
+        for i in 0..n {
+            let c = self.nearest_cell(self.row(i));
+            self.cells[c].push(i);
+        }
+        self.trained_len = n;
+    }
+
+    fn maybe_retrain(&mut self) {
+        let n = self.len();
+        if !self.trained() {
+            if n >= self.min_train {
+                self.train();
+            }
+            return;
+        }
+        if n >= self.trained_len * 8 {
+            self.train();
+        }
+    }
+
+    /// Cell occupancy histogram (diagnostics / tests).
+    pub fn cell_sizes(&self) -> Vec<usize> {
+        self.cells.iter().map(Vec::len).collect()
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn insert(&mut self, v: &[f32]) -> Result<usize> {
+        if v.len() != self.dim {
+            bail!("insert: dim {} != index dim {}", v.len(), self.dim);
+        }
+        let id = self.len();
+        self.data.extend_from_slice(v);
+        if self.metric == Metric::Cosine {
+            let start = id * self.dim;
+            l2_normalize(&mut self.data[start..start + self.dim]);
+        }
+        if self.trained() {
+            let cell = self.nearest_cell(self.row(id));
+            self.cells[cell].push(id);
+        }
+        self.maybe_retrain();
+        Ok(id)
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim);
+        let q = normalized_query(query, self.metric);
+        let mut buf = Vec::with_capacity(k + 1);
+        if !self.trained() {
+            // cold start: brute force
+            for (id, row) in self.data.chunks_exact(self.dim).enumerate() {
+                push_topk(&mut buf, k, Hit { id, score: dot(&q, row) });
+            }
+            return finish_topk(buf, k);
+        }
+        // rank cells by centroid similarity, probe top-nprobe
+        let mut cell_scores: Vec<(usize, f32)> = self
+            .centroids
+            .chunks_exact(self.dim)
+            .enumerate()
+            .map(|(c, cen)| (c, dot(&q, cen)))
+            .collect();
+        cell_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for &(c, _) in cell_scores.iter().take(self.nprobe) {
+            for &id in &self.cells[c] {
+                push_topk(&mut buf, k, Hit { id, score: dot(&q, self.row(id)) });
+            }
+        }
+        // ids inserted after the last training that fell into probed cells
+        // are already covered; brute-force any unassigned tail (none by
+        // construction, since insert() assigns when trained)
+        finish_topk(buf, k)
+    }
+
+    fn score_all(&self, query: &[f32], out: &mut Vec<f32>) {
+        // Exact by definition (Venus retrieval needs all scores).
+        assert_eq!(query.len(), self.dim);
+        let q = normalized_query(query, self.metric);
+        out.clear();
+        out.reserve(self.len());
+        for row in self.data.chunks_exact(self.dim) {
+            out.push(dot(&q, row));
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn vector(&self, id: usize) -> &[f32] {
+        self.row(id)
+    }
+}
+
+/// Fixed k-means seed: training is deterministic for a given insert order.
+const TRAIN_SEED: u64 = 0x17f5_eed;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn fill(idx: &mut IvfIndex, n: usize, seed: u64) {
+        let mut rng = Pcg64::seeded(seed);
+        for _ in 0..n {
+            let v: Vec<f32> = (0..idx.dim()).map(|_| rng.normal()).collect();
+            idx.insert(&v).unwrap();
+        }
+    }
+
+    #[test]
+    fn cold_start_is_exact() {
+        let mut idx = IvfIndex::new(8, Metric::Cosine, 4, 2);
+        fill(&mut idx, 50, 1); // below min_train
+        assert!(!idx.trained());
+        let q: Vec<f32> = idx.vector(7).to_vec();
+        let hits = idx.search(&q, 1);
+        assert_eq!(hits[0].id, 7);
+    }
+
+    #[test]
+    fn trains_after_threshold() {
+        let mut idx = IvfIndex::new(8, Metric::Cosine, 8, 4);
+        fill(&mut idx, 300, 2);
+        assert!(idx.trained());
+        assert_eq!(idx.cell_sizes().iter().sum::<usize>(), 300);
+    }
+
+    #[test]
+    fn self_query_found_after_training() {
+        let mut idx = IvfIndex::new(16, Metric::Cosine, 8, 8); // probe all
+        fill(&mut idx, 400, 3);
+        for probe_id in [0usize, 133, 399] {
+            let q = idx.vector(probe_id).to_vec();
+            let hits = idx.search(&q, 1);
+            assert_eq!(hits[0].id, probe_id);
+        }
+    }
+
+    #[test]
+    fn inserts_after_training_searchable() {
+        let mut idx = IvfIndex::new(8, Metric::Cosine, 8, 8);
+        fill(&mut idx, 300, 4);
+        let special = vec![9.0f32, -9.0, 9.0, -9.0, 9.0, -9.0, 9.0, -9.0];
+        let id = idx.insert(&special).unwrap();
+        let hits = idx.search(&special, 1);
+        assert_eq!(hits[0].id, id);
+    }
+
+    #[test]
+    fn retrains_on_growth() {
+        let mut idx = IvfIndex::new(8, Metric::Cosine, 0, 4);
+        fill(&mut idx, 256, 5);
+        let first_train = idx.trained_len;
+        fill(&mut idx, 256 * 8, 6);
+        assert!(idx.trained_len > first_train, "index should have re-trained");
+    }
+}

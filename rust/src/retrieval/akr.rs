@@ -1,0 +1,218 @@
+//! Adaptive Keyframe Retrieval (AKR) — threshold-driven progressive
+//! sampling (§IV-D-2, Eq. 6–7).
+//!
+//! Draws index vectors one at a time from the Eq. 5 distribution and
+//! stops as soon as the *distinct* selected indices' cumulative
+//! probability reaches θ, subject to:
+//!   N_min = β · ⌈θ / max_j p_j⌉   (Eq. 7 — β inflates the floor so a
+//!                                  single dominant index cannot trigger
+//!                                  premature termination)
+//!   N_max — the transmission-delay cap from the edge-network budget.
+//!
+//! Note on Eq. 6: the paper writes (Σ_{j∈I} p_j)/β ≥ θ, but with the
+//! paper's own β > 1 and θ = 0.9 the left side could never reach βθ > 1
+//! for distinct indices; we read β's role as scaling the N_min floor
+//! (Eq. 7) and apply the threshold test as Σ p_j ≥ θ.  Documented in
+//! DESIGN.md §substitutions.
+
+use crate::memory::Hierarchy;
+use crate::util::rng::Pcg64;
+
+use super::{sampler::softmax_probs, Selection};
+
+/// AKR result with adaptivity diagnostics (Fig. 11).
+#[derive(Clone, Debug, Default)]
+pub struct AkrOutcome {
+    pub selection: Selection,
+    /// draws actually performed
+    pub draws: usize,
+    /// cumulative probability mass of the distinct selected indices
+    pub mass: f64,
+    /// the Eq. 7 lower bound that applied
+    pub n_min: usize,
+}
+
+/// Run AKR over a scored memory.
+pub fn akr_retrieve(
+    memory: &Hierarchy,
+    scores: &[f32],
+    tau: f32,
+    theta: f64,
+    beta: f64,
+    n_max: usize,
+    rng: &mut Pcg64,
+) -> AkrOutcome {
+    assert_eq!(scores.len(), memory.len());
+    if memory.is_empty() || n_max == 0 {
+        return AkrOutcome::default();
+    }
+    let probs = softmax_probs(scores, tau);
+    let p_max = probs.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let n_min = ((beta * (theta / p_max).ceil()) as usize).clamp(1, n_max);
+
+    let mut cdf = Vec::with_capacity(probs.len());
+    let mut acc = 0.0f32;
+    for &p in &probs {
+        acc += p;
+        cdf.push(acc);
+    }
+
+    let mut selected = vec![false; probs.len()];
+    let mut mass = 0.0f64;
+    let mut sel = Selection { probs: probs.clone(), ..Default::default() };
+    let mut counts: std::collections::BTreeMap<usize, usize> = Default::default();
+    let mut draws = 0;
+    while draws < n_max {
+        let u = rng.f32() * acc;
+        let idx = cdf.partition_point(|&c| c < u).min(cdf.len() - 1);
+        draws += 1;
+        sel.drawn_indices.push(idx);
+        *counts.entry(idx).or_insert(0) += 1;
+        if !selected[idx] {
+            selected[idx] = true;
+            mass += probs[idx] as f64;
+        }
+
+        if draws >= n_min && mass >= theta {
+            break;
+        }
+    }
+    // stratified per-cluster expansion, same as fixed sampling
+    for (idx, k) in counts {
+        sel.frames
+            .extend(super::sampler::expand_cluster(&memory.record(idx).members, k, rng));
+    }
+
+    AkrOutcome { selection: sel.finalize(), draws, mass, n_min }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MemoryConfig;
+    use crate::memory::{ClusterRecord, Hierarchy, InMemoryRaw};
+    use crate::video::frame::Frame;
+
+    fn memory_with(n_clusters: usize, frames_per: u64) -> Hierarchy {
+        let mut h = Hierarchy::new(
+            &MemoryConfig::default(),
+            4,
+            Box::new(InMemoryRaw::new(8)),
+        )
+        .unwrap();
+        for i in 0..(n_clusters as u64 * frames_per) {
+            h.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+        }
+        for c in 0..n_clusters {
+            let mut v = vec![0.0f32; 4];
+            v[c % 4] = 1.0;
+            let start = c as u64 * frames_per;
+            h.insert(
+                &v,
+                ClusterRecord {
+                    scene_id: c,
+                    centroid_frame: start,
+                    members: (start..start + frames_per).collect(),
+                },
+            )
+            .unwrap();
+        }
+        h
+    }
+
+    /// Localized query (one sharp peak): AKR stops early.
+    #[test]
+    fn localized_query_stops_early() {
+        let h = memory_with(32, 8);
+        let mut scores = vec![0.0f32; 32];
+        scores[5] = 1.0;
+        let mut rng = Pcg64::seeded(1);
+        let out = akr_retrieve(&h, &scores, 0.03, 0.9, 2.0, 32, &mut rng);
+        assert!(out.draws < 12, "draws = {}", out.draws);
+        assert!(out.mass >= 0.9 || out.draws == 32);
+    }
+
+    /// Dispersed query (flat distribution): AKR uses many more draws.
+    #[test]
+    fn dispersed_query_needs_more_draws() {
+        let h = memory_with(32, 8);
+        let localized = {
+            let mut s = vec![0.0f32; 32];
+            s[5] = 1.0;
+            s
+        };
+        let dispersed = vec![0.5f32; 32];
+        let mut rng = Pcg64::seeded(2);
+        let a = akr_retrieve(&h, &localized, 0.03, 0.9, 2.0, 64, &mut rng);
+        let b = akr_retrieve(&h, &dispersed, 0.03, 0.9, 2.0, 64, &mut rng);
+        assert!(
+            b.draws > 2 * a.draws,
+            "dispersed {} vs localized {}",
+            b.draws,
+            a.draws
+        );
+    }
+
+    #[test]
+    fn respects_n_max() {
+        let h = memory_with(64, 4);
+        let scores = vec![0.1f32; 64]; // uniform: mass accrues slowly
+        let mut rng = Pcg64::seeded(3);
+        let out = akr_retrieve(&h, &scores, 1.0, 0.99, 4.0, 16, &mut rng);
+        assert_eq!(out.draws, 16);
+        assert!(out.selection.frames.len() <= 16);
+    }
+
+    #[test]
+    fn respects_n_min_floor() {
+        // a single overwhelming peak: without the β floor, 1 draw would
+        // satisfy θ; Eq. 7 forces at least β·1 draws
+        let h = memory_with(16, 8);
+        let mut scores = vec![-1.0f32; 16];
+        scores[0] = 1.0;
+        let mut rng = Pcg64::seeded(4);
+        let out = akr_retrieve(&h, &scores, 0.01, 0.5, 4.0, 32, &mut rng);
+        assert!(out.n_min >= 4);
+        assert!(out.draws >= out.n_min, "draws {} < n_min {}", out.draws, out.n_min);
+    }
+
+    #[test]
+    fn monotone_in_theta() {
+        // property: higher θ ⇒ at least as many draws (same seed)
+        let h = memory_with(32, 8);
+        let scores: Vec<f32> = (0..32).map(|i| (i as f32 * 0.7).sin() * 0.5).collect();
+        let mut prev = 0;
+        for theta in [0.5, 0.7, 0.9, 0.97] {
+            let out = akr_retrieve(
+                &h, &scores, 0.1, theta, 2.0, 256, &mut Pcg64::seeded(5),
+            );
+            assert!(
+                out.draws >= prev,
+                "θ={theta}: draws {} < previous {prev}",
+                out.draws
+            );
+            prev = out.draws;
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let h = memory_with(4, 2);
+        let mut rng = Pcg64::seeded(6);
+        let out = akr_retrieve(&h, &[0.0; 4], 0.1, 0.9, 2.0, 0, &mut rng);
+        assert_eq!(out.draws, 0);
+        assert!(out.selection.frames.is_empty());
+    }
+
+    #[test]
+    fn mass_equals_sum_of_distinct_probs() {
+        let h = memory_with(16, 4);
+        let scores: Vec<f32> = (0..16).map(|i| 0.05 * i as f32).collect();
+        let mut rng = Pcg64::seeded(7);
+        let out = akr_retrieve(&h, &scores, 0.2, 0.8, 2.0, 64, &mut rng);
+        let distinct: std::collections::HashSet<usize> =
+            out.selection.drawn_indices.iter().cloned().collect();
+        let want: f64 = distinct.iter().map(|&i| out.selection.probs[i] as f64).sum();
+        assert!((out.mass - want).abs() < 1e-9);
+    }
+}

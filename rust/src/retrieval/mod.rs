@@ -1,0 +1,92 @@
+//! Query-relevant keyframe retrieval (§IV-D).
+//!
+//! - [`sampler`]: the temperature-softmax sampling retrieval of Eq. 5 —
+//!   index vectors are drawn from a query-guided distribution and each
+//!   draw is expanded into a uniformly-sampled frame from the drawn
+//!   vector's scene cluster (relevance + diversity).
+//! - [`akr`]: Adaptive Keyframe Retrieval (Eq. 6–7) — progressive
+//!   sampling that stops once the selected indices' cumulative
+//!   probability clears the threshold θ, bounded by [N_min, N_max].
+//! - [`topk`]: greedy Top-K retrieval (the Vanilla architecture of §III,
+//!   kept as the ablation baseline for Fig. 10).
+
+pub mod akr;
+pub mod sampler;
+pub mod topk;
+
+pub use akr::{akr_retrieve, AkrOutcome};
+pub use sampler::{sample_retrieve, softmax_probs, SampleOutcome};
+pub use topk::topk_retrieve;
+
+#[cfg(test)]
+mod shortlist_tests {
+    use super::*;
+
+    #[test]
+    fn keeps_top_m_and_masks_rest() {
+        let scores = vec![0.1, 0.9, 0.5, 0.7, 0.2];
+        let masked = shortlist_mask(&scores, 2);
+        assert_eq!(masked[1], 0.9);
+        assert_eq!(masked[3], 0.7);
+        assert!(masked[0].is_infinite() && masked[2].is_infinite() && masked[4].is_infinite());
+    }
+
+    #[test]
+    fn noop_when_small_or_disabled() {
+        let scores = vec![0.1, 0.2];
+        assert_eq!(shortlist_mask(&scores, 8), scores);
+        assert_eq!(shortlist_mask(&scores, 0), scores);
+    }
+
+    #[test]
+    fn softmax_over_masked_ignores_non_candidates() {
+        let scores = vec![0.5f32; 100];
+        let masked = shortlist_mask(
+            &(0..100).map(|i| i as f32 * 0.01).collect::<Vec<_>>(),
+            10,
+        );
+        let _ = scores;
+        let p = softmax_probs(&masked, 0.2);
+        let nonzero = p.iter().filter(|&&x| x > 0.0).count();
+        assert_eq!(nonzero, 10);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+}
+
+/// Mask scores outside the top-`m` candidates to −∞ so the Eq. 5 softmax
+/// concentrates on a bounded shortlist.  Without this, the match mass
+/// dilutes as the index grows (hour-long streams index thousands of
+/// vectors) and a fixed τ loses relevance on long videos; with it, the
+/// relevance-diversity trade-off is index-size-invariant.  `m = 0`
+/// disables masking.
+pub fn shortlist_mask(scores: &[f32], m: usize) -> Vec<f32> {
+    if m == 0 || scores.len() <= m {
+        return scores.to_vec();
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut out = vec![f32::NEG_INFINITY; scores.len()];
+    for &i in order.iter().take(m) {
+        out[i] = scores[i];
+    }
+    out
+}
+
+/// A retrieval decision: which raw frames to ship to the cloud.
+#[derive(Clone, Debug, Default)]
+pub struct Selection {
+    /// global frame ids, ascending, deduplicated
+    pub frames: Vec<u64>,
+    /// index-vector ids that were drawn (diagnostics / Fig. 9-10)
+    pub drawn_indices: Vec<usize>,
+    /// the probability distribution used (diagnostics / Fig. 9)
+    pub probs: Vec<f32>,
+}
+
+impl Selection {
+    pub(crate) fn finalize(mut self) -> Self {
+        self.frames.sort_unstable();
+        self.frames.dedup();
+        self
+    }
+}

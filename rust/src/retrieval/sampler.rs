@@ -1,0 +1,189 @@
+//! Sampling-based diversity-preserving retrieval (Eq. 5).
+
+use crate::memory::Hierarchy;
+use crate::util::rng::Pcg64;
+use crate::util::softmax_temp;
+
+use super::Selection;
+
+/// Outcome of a fixed-budget sampling retrieval.
+pub type SampleOutcome = Selection;
+
+/// Eq. 5: softmax with temperature over similarity scores.
+pub fn softmax_probs(scores: &[f32], tau: f32) -> Vec<f32> {
+    let mut probs = vec![0.0f32; scores.len()];
+    softmax_temp(scores, tau, &mut probs);
+    probs
+}
+
+/// Expand a drawn index vector into `k` member frames of its cluster,
+/// stratified over the cluster's temporal extent (§IV-D-1: "uniformly
+/// sample n(o_i) frames from its associated scene cluster, promoting
+/// diverse coverage within a cluster").  Even-spaced strata with a
+/// jittered offset: spreads picks, avoids near-duplicates.
+pub(crate) fn expand_cluster(members: &[u64], k: usize, rng: &mut Pcg64) -> Vec<u64> {
+    let n = members.len();
+    if k >= n {
+        return members.to_vec();
+    }
+    (0..k)
+        .map(|i| {
+            let lo = i * n / k;
+            let hi = ((i + 1) * n / k).max(lo + 1);
+            members[lo + rng.range(0, hi - lo)]
+        })
+        .collect()
+}
+
+/// Fixed-budget sampling retrieval: draw `budget` times from the
+/// query-guided distribution (Eq. 5), then expand each drawn index
+/// vector into n(o_i) stratified member frames of its cluster.
+pub fn sample_retrieve(
+    memory: &Hierarchy,
+    scores: &[f32],
+    tau: f32,
+    budget: usize,
+    rng: &mut Pcg64,
+) -> Selection {
+    assert_eq!(scores.len(), memory.len());
+    if memory.is_empty() || budget == 0 {
+        return Selection::default();
+    }
+    let probs = softmax_probs(scores, tau);
+
+    // cumulative distribution for O(log n) multinomial draws
+    let mut cdf = Vec::with_capacity(probs.len());
+    let mut acc = 0.0f32;
+    for &p in &probs {
+        acc += p;
+        cdf.push(acc);
+    }
+
+    let mut sel = Selection { probs: probs.clone(), ..Default::default() };
+    let mut counts: std::collections::BTreeMap<usize, usize> = Default::default();
+    for _ in 0..budget {
+        let u = rng.f32() * acc;
+        let idx = cdf.partition_point(|&c| c < u).min(cdf.len() - 1);
+        sel.drawn_indices.push(idx);
+        *counts.entry(idx).or_insert(0) += 1;
+    }
+    for (idx, k) in counts {
+        sel.frames
+            .extend(expand_cluster(&memory.record(idx).members, k, rng));
+    }
+    sel.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MemoryConfig;
+    use crate::memory::{ClusterRecord, Hierarchy, InMemoryRaw};
+    use crate::video::frame::Frame;
+
+    fn memory_with(n_clusters: usize, frames_per: u64) -> Hierarchy {
+        let mut h = Hierarchy::new(
+            &MemoryConfig::default(),
+            4,
+            Box::new(InMemoryRaw::new(8)),
+        )
+        .unwrap();
+        for i in 0..(n_clusters as u64 * frames_per) {
+            h.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+        }
+        for c in 0..n_clusters {
+            // orthogonal-ish unit vectors on 4 axes with sign flips
+            let mut v = vec![0.0f32; 4];
+            v[c % 4] = if c / 4 % 2 == 0 { 1.0 } else { -1.0 };
+            let start = c as u64 * frames_per;
+            h.insert(
+                &v,
+                ClusterRecord {
+                    scene_id: c,
+                    centroid_frame: start,
+                    members: (start..start + frames_per).collect(),
+                },
+            )
+            .unwrap();
+        }
+        h
+    }
+
+    #[test]
+    fn probs_sum_to_one() {
+        let p = softmax_probs(&[0.9, 0.1, 0.4], 0.1);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[0] > p[2] && p[2] > p[1]);
+    }
+
+    #[test]
+    fn draws_equal_budget_and_frames_dedupe() {
+        let h = memory_with(8, 10);
+        let scores: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        let mut rng = Pcg64::seeded(5);
+        let sel = sample_retrieve(&h, &scores, 0.2, 32, &mut rng);
+        assert_eq!(sel.drawn_indices.len(), 32);
+        assert!(sel.frames.len() <= 32);
+        assert!(sel.frames.windows(2).all(|w| w[0] < w[1]));
+        // frames belong to drawn clusters
+        for &f in &sel.frames {
+            let cluster = (f / 10) as usize;
+            assert!(sel.drawn_indices.contains(&cluster));
+        }
+    }
+
+    #[test]
+    fn high_score_cluster_dominates_at_low_tau() {
+        let h = memory_with(8, 10);
+        let mut scores = vec![0.0f32; 8];
+        scores[3] = 1.0;
+        let mut rng = Pcg64::seeded(6);
+        let sel = sample_retrieve(&h, &scores, 0.02, 64, &mut rng);
+        let from3 = sel.drawn_indices.iter().filter(|&&i| i == 3).count();
+        assert!(from3 > 60, "{from3}/64 draws from the top cluster");
+    }
+
+    #[test]
+    fn high_tau_spreads_draws() {
+        let h = memory_with(8, 10);
+        let mut scores = vec![0.0f32; 8];
+        scores[3] = 1.0;
+        let mut rng = Pcg64::seeded(7);
+        let sel = sample_retrieve(&h, &scores, 50.0, 64, &mut rng);
+        let distinct: std::collections::HashSet<usize> =
+            sel.drawn_indices.iter().cloned().collect();
+        assert!(distinct.len() >= 6, "only {} clusters drawn", distinct.len());
+    }
+
+    #[test]
+    fn sampling_preserves_nonzero_probability_everywhere() {
+        // the paper's diversity claim: even low-scoring clusters can be
+        // drawn (unlike greedy Top-K)
+        let h = memory_with(4, 5);
+        let scores = vec![0.9f32, 0.1, 0.1, 0.1];
+        let mut seen = std::collections::HashSet::new();
+        let mut rng = Pcg64::seeded(8);
+        for _ in 0..50 {
+            let sel = sample_retrieve(&h, &scores, 0.3, 8, &mut rng);
+            seen.extend(sel.drawn_indices);
+        }
+        assert_eq!(seen.len(), 4, "all clusters eventually sampled");
+    }
+
+    #[test]
+    fn empty_memory_or_budget() {
+        let h = memory_with(2, 3);
+        let mut rng = Pcg64::seeded(9);
+        assert!(sample_retrieve(&h, &[0.0, 0.0], 0.1, 0, &mut rng).frames.is_empty());
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let h = memory_with(8, 10);
+        let scores: Vec<f32> = (0..8).map(|i| 0.05 * i as f32).collect();
+        let a = sample_retrieve(&h, &scores, 0.2, 16, &mut Pcg64::seeded(42));
+        let b = sample_retrieve(&h, &scores, 0.2, 16, &mut Pcg64::seeded(42));
+        assert_eq!(a.frames, b.frames);
+        assert_eq!(a.drawn_indices, b.drawn_indices);
+    }
+}

@@ -1,0 +1,87 @@
+//! Greedy Top-K retrieval — the Vanilla disaggregated architecture's
+//! selector (§III-B), kept as the ablation baseline whose diversity
+//! failure Fig. 5(b,c)/Fig. 10 demonstrates.
+
+use crate::memory::Hierarchy;
+
+use super::Selection;
+
+/// Select the K highest-scoring indexed frames (their centroid frames).
+pub fn topk_retrieve(memory: &Hierarchy, scores: &[f32], k: usize) -> Selection {
+    assert_eq!(scores.len(), memory.len());
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+    let mut sel = Selection::default();
+    for &idx in order.iter().take(k) {
+        sel.drawn_indices.push(idx);
+        sel.frames.push(memory.record(idx).centroid_frame);
+    }
+    sel.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MemoryConfig;
+    use crate::memory::{ClusterRecord, Hierarchy, InMemoryRaw};
+    use crate::video::frame::Frame;
+
+    fn memory_with(n: usize) -> Hierarchy {
+        let mut h = Hierarchy::new(
+            &MemoryConfig::default(),
+            4,
+            Box::new(InMemoryRaw::new(8)),
+        )
+        .unwrap();
+        for i in 0..n as u64 {
+            h.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+        }
+        for c in 0..n {
+            let mut v = vec![0.0f32; 4];
+            v[c % 4] = 1.0;
+            h.insert(
+                &v,
+                ClusterRecord {
+                    scene_id: c,
+                    centroid_frame: c as u64,
+                    members: vec![c as u64],
+                },
+            )
+            .unwrap();
+        }
+        h
+    }
+
+    #[test]
+    fn picks_highest_scores() {
+        let h = memory_with(10);
+        let scores = vec![0.1, 0.9, 0.2, 0.8, 0.3, 0.0, 0.5, 0.4, 0.6, 0.7];
+        let sel = topk_retrieve(&h, &scores, 3);
+        let mut drawn = sel.drawn_indices.clone();
+        drawn.sort_unstable();
+        assert_eq!(drawn, vec![1, 3, 9]);
+        assert_eq!(sel.frames, vec![1, 3, 9]);
+    }
+
+    #[test]
+    fn k_exceeding_len_returns_all() {
+        let h = memory_with(4);
+        let sel = topk_retrieve(&h, &[0.4, 0.3, 0.2, 0.1], 10);
+        assert_eq!(sel.frames.len(), 4);
+    }
+
+    #[test]
+    fn greedy_concentrates_on_adjacent_peaks() {
+        // the Fig. 5(b) failure mode: near-duplicate high scorers crowd
+        // out other relevant regions
+        let h = memory_with(20);
+        let mut scores = vec![0.1f32; 20];
+        for i in 5..9 {
+            scores[i] = 0.9; // one dense peak
+        }
+        scores[15] = 0.55; // secondary relevant region
+        let sel = topk_retrieve(&h, &scores, 4);
+        assert!(sel.drawn_indices.iter().all(|&i| (5..9).contains(&i)));
+        assert!(!sel.drawn_indices.contains(&15), "greedy ignores region 15");
+    }
+}

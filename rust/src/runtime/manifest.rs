@@ -1,0 +1,220 @@
+//! Artifact manifest: shapes, dtypes, and side-files emitted by
+//! `python/compile/aot.py`.  The Rust runtime refuses to execute artifacts
+//! whose config hash or tensor shapes do not match its expectations.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one input/output tensor.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<Self> {
+        Ok(Self {
+            dtype: DType::parse(v.get("dtype")?.as_str()?)?,
+            shape: v.get("shape")?.as_shape()?,
+        })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// Model hyperparameters the Rust side must agree on (tokenizer layout,
+/// embedding dim, watermark geometry...).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub img_size: usize,
+    pub patch: usize,
+    pub d_embed: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_concepts: usize,
+    pub concept_token_base: usize,
+    pub sim_rows: usize,
+    pub scene_feat_dim: usize,
+    pub sem_weight: f32,
+    pub content_weight: f32,
+    pub aux_weight: f32,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config_hash: String,
+    pub model: ModelMeta,
+    pub entries: BTreeMap<String, EntryMeta>,
+    files: BTreeMap<String, (String, Vec<usize>)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let m = v.get("model")?;
+        let model = ModelMeta {
+            img_size: m.get("img_size")?.as_usize()?,
+            patch: m.get("patch")?.as_usize()?,
+            d_embed: m.get("d_embed")?.as_usize()?,
+            seq_len: m.get("seq_len")?.as_usize()?,
+            vocab: m.get("vocab")?.as_usize()?,
+            n_concepts: m.get("n_concepts")?.as_usize()?,
+            concept_token_base: m.get("concept_token_base")?.as_usize()?,
+            sim_rows: m.get("sim_rows")?.as_usize()?,
+            scene_feat_dim: m.get("scene_feat_dim")?.as_usize()?,
+            sem_weight: m.get("sem_weight")?.as_f64()? as f32,
+            content_weight: m.get("content_weight")?.as_f64()? as f32,
+            aux_weight: m.get("aux_weight")?.as_f64()? as f32,
+        };
+
+        let mut entries = BTreeMap::new();
+        for (name, e) in v.get("entries")?.as_obj()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorMeta::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorMeta::parse)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntryMeta { file: e.get("file")?.as_str()?.to_string(), inputs, outputs },
+            );
+        }
+
+        let mut files = BTreeMap::new();
+        for (name, meta) in v.get("files")?.as_obj()? {
+            files.insert(
+                name.clone(),
+                (
+                    meta.get("file")?.as_str()?.to_string(),
+                    meta.get("shape")?.as_shape()?,
+                ),
+            );
+        }
+
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            config_hash: v.get("config_hash")?.as_str()?.to_string(),
+            model,
+            entries,
+            files,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("artifact entry '{name}' not in manifest"))
+    }
+
+    /// Which image-tower batch sizes are available, ascending.
+    pub fn image_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix("embed_image_b"))
+            .filter_map(|b| b.parse().ok())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Read a little-endian f32 side file, validating element count.
+    pub fn read_f32_file(&self, key: &str) -> Result<(Vec<f32>, Vec<usize>)> {
+        let (file, shape) = self
+            .files
+            .get(key)
+            .with_context(|| format!("side file '{key}' not in manifest"))?;
+        let bytes = std::fs::read(self.dir.join(file))
+            .with_context(|| format!("reading side file {file}"))?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("side file {file}: {} bytes, wanted {}", bytes.len(), n * 4);
+        }
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok((out, shape.clone()))
+    }
+
+    /// Read a little-endian i32 side file.
+    pub fn read_i32_file(&self, key: &str) -> Result<(Vec<i32>, Vec<usize>)> {
+        let (file, shape) = self
+            .files
+            .get(key)
+            .with_context(|| format!("side file '{key}' not in manifest"))?;
+        let bytes = std::fs::read(self.dir.join(file))?;
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("side file {file}: {} bytes, wanted {}", bytes.len(), n * 4);
+        }
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok((out, shape.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+
+    #[test]
+    fn tensor_meta_elements() {
+        let t = TensorMeta { dtype: DType::F32, shape: vec![8, 64, 64, 3] };
+        assert_eq!(t.elements(), 8 * 64 * 64 * 3);
+    }
+}

@@ -1,0 +1,147 @@
+//! Serving metrics registry: counters + latency samples, shared across
+//! workers, with a printable snapshot (the `venus serve` status output).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::{fmt_duration, Samples};
+
+#[derive(Debug, Default)]
+struct Inner {
+    accepted: u64,
+    rejected: u64,
+    completed: u64,
+    failed: u64,
+    queue_wait: Samples,
+    edge_latency: Samples,
+    total_latency: Samples,
+    frames_shipped: Samples,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Debug)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self { inner: Mutex::new(Inner::default()), started: Instant::now() }
+    }
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub uptime_s: f64,
+    pub queue_wait_p50_s: f64,
+    pub queue_wait_p99_s: f64,
+    pub edge_p50_s: f64,
+    pub edge_p99_s: f64,
+    pub total_p50_s: f64,
+    pub total_p99_s: f64,
+    pub mean_frames: f64,
+    pub throughput_qps: f64,
+}
+
+impl Metrics {
+    pub fn on_accepted(&self) {
+        self.inner.lock().unwrap().accepted += 1;
+    }
+
+    pub fn on_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_failed(&self) {
+        self.inner.lock().unwrap().failed += 1;
+    }
+
+    pub fn on_completed(&self, queue_wait_s: f64, edge_s: f64, total_s: f64, frames: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.completed += 1;
+        m.queue_wait.push(queue_wait_s);
+        m.edge_latency.push(edge_s);
+        m.total_latency.push(total_s);
+        m.frames_shipped.push(frames as f64);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        let uptime = self.started.elapsed().as_secs_f64();
+        Snapshot {
+            accepted: m.accepted,
+            rejected: m.rejected,
+            completed: m.completed,
+            failed: m.failed,
+            uptime_s: uptime,
+            queue_wait_p50_s: m.queue_wait.p50(),
+            queue_wait_p99_s: m.queue_wait.p99(),
+            edge_p50_s: m.edge_latency.p50(),
+            edge_p99_s: m.edge_latency.p99(),
+            total_p50_s: m.total_latency.p50(),
+            total_p99_s: m.total_latency.p99(),
+            mean_frames: m.frames_shipped.mean(),
+            throughput_qps: if uptime > 0.0 { m.completed as f64 / uptime } else { 0.0 },
+        }
+    }
+
+    /// Conservation invariant: accepted == completed + failed + in-flight.
+    /// (property-tested by the server tests with in-flight == 0 at join)
+    pub fn conserved_after_drain(&self) -> bool {
+        let m = self.inner.lock().unwrap();
+        m.accepted == m.completed + m.failed
+    }
+}
+
+impl Snapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "queries: {} ok / {} failed / {} rejected | p50 {} p99 {} (edge p50 {}) | {:.1} q/s | {:.1} frames/query",
+            self.completed,
+            self.failed,
+            self.rejected,
+            fmt_duration(self.total_p50_s),
+            fmt_duration(self.total_p99_s),
+            fmt_duration(self.edge_p50_s),
+            self.throughput_qps,
+            self.mean_frames,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::default();
+        for i in 0..10 {
+            m.on_accepted();
+            m.on_completed(0.001, 0.01, 0.1 * (i + 1) as f64, 16);
+        }
+        m.on_accepted();
+        m.on_failed();
+        m.on_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.rejected, 1);
+        assert!(s.total_p50_s >= 0.5 && s.total_p50_s <= 0.7);
+        assert_eq!(s.mean_frames, 16.0);
+        assert!(m.conserved_after_drain());
+    }
+
+    #[test]
+    fn conservation_fails_with_inflight() {
+        let m = Metrics::default();
+        m.on_accepted();
+        assert!(!m.conserved_after_drain());
+    }
+}

@@ -1,0 +1,176 @@
+//! Online serving loop: multi-worker query service with admission
+//! control, per-query latency accounting, and a metrics registry.
+//!
+//! Each worker thread owns its own PJRT query engine (compiled artifacts
+//! are per-thread; PJRT handles are not shared).  Queries enter through a
+//! bounded queue — when it is full, `submit` rejects immediately
+//! (admission control) instead of building unbounded backlog.
+
+pub mod metrics;
+
+pub use metrics::{Metrics, Snapshot};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cloud::VlmClient;
+use crate::config::VenusConfig;
+use crate::coordinator::query::{QueryEngine, QueryOutcome};
+use crate::embed::EmbedEngine;
+use crate::memory::Hierarchy;
+use crate::net::{Link, Payload};
+use crate::runtime::Runtime;
+
+/// A completed query with its latency accounting.
+#[derive(Clone, Debug)]
+pub struct QueryResult {
+    pub id: u64,
+    pub outcome: QueryOutcome,
+    pub queue_wait_s: f64,
+    pub upload_s: f64,
+    pub vlm_s: f64,
+}
+
+impl QueryResult {
+    pub fn total_s(&self) -> f64 {
+        self.queue_wait_s + self.outcome.timings.total_s() + self.upload_s + self.vlm_s
+    }
+}
+
+struct Job {
+    id: u64,
+    text: String,
+    enqueued: Instant,
+    reply: SyncSender<Result<QueryResult>>,
+}
+
+/// Wrapper moving a PJRT-owning engine into its worker thread (see
+/// `ingest::pipeline::SendEngine` for the safety argument).
+struct SendEngine(QueryEngine);
+unsafe impl Send for SendEngine {}
+
+/// The query service.
+pub struct Service {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Service {
+    /// Start `cfg.server.workers` workers over a shared memory hierarchy.
+    pub fn start(cfg: &VenusConfig, memory: Arc<Mutex<Hierarchy>>, seed: u64) -> Result<Self> {
+        let (tx, rx) = sync_channel::<Job>(cfg.server.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        for w in 0..cfg.server.workers {
+            let engine = QueryEngine::new(
+                EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+                Arc::clone(&memory),
+                cfg.retrieval.clone(),
+                seed ^ (w as u64) << 8,
+            );
+            let send_engine = SendEngine(engine);
+            let rx2 = Arc::clone(&rx);
+            let met = Arc::clone(&metrics);
+            let link = Link::new(cfg.net.clone());
+            let vlm = VlmClient::new(cfg.cloud.clone(), seed ^ 0xf00d ^ w as u64);
+            workers.push(std::thread::spawn(move || {
+                worker_loop(send_engine, rx2, met, link, vlm)
+            }));
+        }
+        Ok(Self { tx: Some(tx), workers, metrics, next_id: AtomicU64::new(0) })
+    }
+
+    /// Submit a query; returns a receiver for the result, or `None` if the
+    /// queue is full (admission-controlled rejection).
+    pub fn submit(&self, text: &str) -> Option<Receiver<Result<QueryResult>>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let job = Job {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            text: text.to_string(),
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        match self.tx.as_ref().unwrap().try_send(job) {
+            Ok(()) => {
+                self.metrics.on_accepted();
+                Some(reply_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.on_rejected();
+                None
+            }
+            Err(TrySendError::Disconnected(_)) => None,
+        }
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn query(&self, text: &str) -> Result<QueryResult> {
+        let rx = self
+            .submit(text)
+            .ok_or_else(|| anyhow::anyhow!("queue full: query rejected"))?;
+        rx.recv()?
+    }
+
+    /// Drain and stop all workers; returns the final metrics snapshot.
+    pub fn shutdown(mut self) -> Snapshot {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+fn worker_loop(
+    engine: SendEngine,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    metrics: Arc<Metrics>,
+    link: Link,
+    vlm: VlmClient,
+) {
+    let mut engine = engine.0;
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // channel closed: drain complete
+            }
+        };
+        let queue_wait_s = job.enqueued.elapsed().as_secs_f64();
+        match engine.retrieve(&job.text) {
+            Ok(outcome) => {
+                let n = outcome.selection.frames.len();
+                let upload_s = link.round_trip_s(Payload::Frames(n));
+                let vlm_s =
+                    vlm.infer_latency_s(n, job.text.split_whitespace().count() * 2);
+                let result = QueryResult {
+                    id: job.id,
+                    outcome,
+                    queue_wait_s,
+                    upload_s,
+                    vlm_s,
+                };
+                metrics.on_completed(
+                    queue_wait_s,
+                    result.outcome.timings.total_s(),
+                    result.total_s(),
+                    n,
+                );
+                let _ = job.reply.send(Ok(result));
+            }
+            Err(e) => {
+                metrics.on_failed();
+                let _ = job.reply.send(Err(e));
+            }
+        }
+    }
+}

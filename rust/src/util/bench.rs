@@ -1,0 +1,123 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warm-up + timed iterations with mean / p50 / p99 reporting, plus a
+//! one-line `section` API the per-table benches use to print paper-style
+//! output.  Timings use `std::time::Instant` (monotonic).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::{fmt_duration, Samples};
+
+/// Result of a timed run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub min: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  p50 {:>10}  p99 {:>10}  ({} iters)",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.p50),
+            fmt_duration(self.p99),
+            self.iters
+        )
+    }
+}
+
+/// Micro-bench runner.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: Duration, measure: Duration) -> Self {
+        Self { warmup, measure, ..Self::default() }
+    }
+
+    /// Quick profile for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Self::new(Duration::from_millis(50), Duration::from_millis(300))
+    }
+
+    /// Time `f` repeatedly; the closure's return value is black-boxed.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warm-up
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut samples = Samples::default();
+        let start = Instant::now();
+        let mut iters = 0;
+        while start.elapsed() < self.measure && iters < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push_duration(t0.elapsed());
+            iters += 1;
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: samples.mean(),
+            p50: samples.p50(),
+            p99: samples.p99(),
+            min: samples.min(),
+        };
+        println!("  {}", r.line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Print a bench/eval section header (paper table/figure ids).
+pub fn section(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+/// Print an indented note line.
+pub fn note(text: &str) {
+    println!("    {text}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new(Duration::from_millis(1), Duration::from_millis(20));
+        let r = b.run("noop-ish", || (0..100).sum::<u64>());
+        assert!(r.iters > 10);
+        assert!(r.mean >= 0.0);
+        assert!(r.p99 >= r.p50);
+    }
+}

@@ -1,0 +1,109 @@
+//! Zero-dependency utility substrates: deterministic RNG, streaming
+//! statistics, a JSON parser (for the artifact manifest), and the in-tree
+//! micro-benchmark harness used by `cargo bench` (criterion is not
+//! available offline).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// L2-normalize a vector in place; returns the original norm.
+pub fn l2_normalize(v: &mut [f32]) -> f32 {
+    let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 1e-12 {
+        let inv = 1.0 / norm;
+        for x in v.iter_mut() {
+            *x *= inv;
+        }
+    }
+    norm
+}
+
+/// Dot product over `chunks_exact(8)` with lane-wise accumulators: the
+/// fixed-size chunks eliminate bounds checks and break the sequential FP
+/// dependence chain, letting the autovectorizer emit packed FMAs.
+/// (§Perf note: indexed manual unrolling regressed 2.6× here — bounds
+/// checks defeat vectorization; chunked slices are the fast formulation.)
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let (ca, ra) = a.split_at(a.len() & !7);
+    let (cb, rb) = b.split_at(b.len() & !7);
+    for (xa, xb) in ca.chunks_exact(8).zip(cb.chunks_exact(8)) {
+        for l in 0..8 {
+            lanes[l] += xa[l] * xb[l];
+        }
+    }
+    let mut acc: f32 = lanes.iter().sum();
+    for (x, y) in ra.iter().zip(rb) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Softmax with temperature over `scores[..n]`, writing probabilities into
+/// `out` (which must be the same length).  Pure-Rust mirror of the fused
+/// Pallas similarity kernel's epilogue; used for index sizes that exceed
+/// the AOT-compiled kernel's padded capacity.
+pub fn softmax_temp(scores: &[f32], tau: f32, out: &mut [f32]) {
+    assert_eq!(scores.len(), out.len());
+    if scores.is_empty() {
+        return;
+    }
+    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for (o, s) in out.iter_mut().zip(scores.iter()) {
+        let e = ((s - m) / tau).exp();
+        *o = e;
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l2_normalize_unit_norm() {
+        let mut v = vec![3.0, 4.0];
+        let n = l2_normalize(&mut v);
+        assert!((n - 5.0).abs() < 1e-6);
+        assert!((v[0] - 0.6).abs() < 1e-6 && (v[1] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2_normalize_zero_vector_untouched() {
+        let mut v = vec![0.0; 4];
+        let n = l2_normalize(&mut v);
+        assert_eq!(n, 0.0);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let scores = [0.1f32, 0.9, 0.5];
+        let mut p = [0.0f32; 3];
+        softmax_temp(&scores, 0.5, &mut p);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[1] > p[2] && p[2] > p[0]);
+    }
+
+    #[test]
+    fn softmax_low_temp_concentrates() {
+        let scores = [0.1f32, 0.9, 0.5];
+        let mut p = [0.0f32; 3];
+        softmax_temp(&scores, 0.01, &mut p);
+        assert!(p[1] > 0.999);
+    }
+
+    #[test]
+    fn dot_matches_manual() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Deterministic PCG64 (DXSM) pseudo-random generator.
+//!
+//! Every stochastic component in Venus — the synthetic video generator, the
+//! workload generator, multinomial retrieval sampling, the VLM answer model
+//! — draws from an explicitly-seeded [`Pcg64`], so every experiment and
+//! every property test is bit-reproducible.  (The `rand` crate is not
+//! available offline; this is the 2019 O'Neill PCG64-DXSM variant.)
+
+/// PCG64 DXSM generator (128-bit state, 64-bit output).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const MUL: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id.  Distinct streams
+    /// from the same seed are statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    /// Seed-only constructor (stream 0).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive a child generator for a named sub-component; the label is
+    /// hashed (FNV-1a) into the stream id so call sites stay readable.
+    pub fn fork(&mut self, label: &str) -> Self {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in label.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        Self::new(self.next_u64(), h)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit value (DXSM output permutation).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let mut hi = (self.state >> 64) as u64;
+        let lo = (self.state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xda94_2042_e4dd_58b5);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with 53-bit precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        assert!(total > 0.0, "weighted sample needs positive mass");
+        let mut t = self.f32() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg64::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Pcg64::seeded(9);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_bounds_respected() {
+        let mut r = Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(11);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_index() {
+        let mut r = Pcg64::seeded(5);
+        let w = [0.05f32, 0.9, 0.05];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.weighted(&w)] += 1;
+        }
+        assert!(counts[1] > 8_500, "{counts:?}");
+        assert!(counts[0] > 100 && counts[2] > 100, "{counts:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(13);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_labels_independent() {
+        let mut root = Pcg64::seeded(1);
+        let mut a = root.clone().fork("alpha");
+        let mut b = root.fork("beta");
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

@@ -1,0 +1,295 @@
+//! Streaming statistics and latency summaries.
+//!
+//! Used by the metrics registry, the evaluation harness, and the in-tree
+//! bench harness: Welford mean/variance, exact percentiles over recorded
+//! samples, and human-readable duration formatting.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Sample recorder with exact percentiles (sorts on query).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn push_duration(&mut self, d: Duration) {
+        self.xs.push(d.as_secs_f64());
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Exact percentile (nearest-rank), q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+}
+
+/// Fixed-boundary histogram (for latency distributions in metrics output).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// `bounds` are the upper edges of each bucket; a final overflow bucket
+    /// is appended automatically.
+    pub fn new(bounds: Vec<f64>) -> Self {
+        let n = bounds.len() + 1;
+        Self { bounds, counts: vec![0; n], total: 0 }
+    }
+
+    /// Exponential buckets: `start * factor^i` for `count` buckets.
+    pub fn exponential(start: f64, factor: f64, count: usize) -> Self {
+        let mut bounds = Vec::with_capacity(count);
+        let mut b = start;
+        for _ in 0..count {
+            bounds.push(b);
+            b *= factor;
+        }
+        Self::new(bounds)
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.bounds
+            .iter()
+            .cloned()
+            .chain(std::iter::once(f64::INFINITY))
+            .zip(self.counts.iter().cloned())
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (bound, count) in self.buckets() {
+            acc += count;
+            if acc >= target {
+                return bound;
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Pretty duration: "4.83 s", "12.4 ms", "380 µs", "2.1 min".
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 90.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{:.2} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.1} µs", secs * 1e6)
+    } else {
+        format!("{:.0} ns", secs * 1e9)
+    }
+}
+
+/// Simple fixed-width table printer for bench/eval output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+}
+
+impl fmt::Display for Table {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |f: &mut fmt::Formatter<'_>, cells: &[String]| -> fmt::Result {
+            write!(f, "|")?;
+            for (w, c) in widths.iter().zip(cells) {
+                write!(f, " {c:<w$} |")?;
+            }
+            writeln!(f)
+        };
+        line(f, &self.header)?;
+        write!(f, "|")?;
+        for w in &widths {
+            write!(f, "{}|", "-".repeat(w + 2))?;
+        }
+        writeln!(f)?;
+        for row in &self.rows {
+            line(f, row)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert!((w.variance() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Samples::default();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.p50(), 51.0); // nearest-rank: round(0.5·99) = index 50
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.p99(), 99.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantile() {
+        let mut h = Histogram::exponential(1.0, 2.0, 4); // 1,2,4,8,inf
+        for x in [0.5, 1.5, 3.0, 6.0, 100.0] {
+            h.observe(x);
+        }
+        assert_eq!(h.total(), 5);
+        let counts: Vec<u64> = h.buckets().map(|(_, c)| c).collect();
+        assert_eq!(counts, vec![1, 1, 1, 1, 1]);
+        assert_eq!(h.quantile(0.2), 1.0);
+        assert!(h.quantile(1.0).is_infinite());
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(120.0), "2.0 min");
+        assert_eq!(fmt_duration(4.83), "4.83 s");
+        assert_eq!(fmt_duration(0.0124), "12.40 ms");
+        assert_eq!(fmt_duration(3.8e-4), "380.0 µs");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "22"]);
+        let s = t.to_string();
+        assert!(s.contains("| a | b  |"));
+        assert!(s.contains("| 1 | 22 |"));
+    }
+}

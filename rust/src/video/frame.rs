@@ -1,0 +1,178 @@
+//! RGB frame representation and pixel utilities.
+//!
+//! Frames are square `size × size × 3` f32 images in [0, 1], row-major,
+//! channel-interleaved — exactly the layout the AOT image-tower artifacts
+//! expect, so a frame batch can be memcpy'd into a PJRT literal.
+
+/// A single video frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    size: usize,
+    data: Vec<f32>,
+}
+
+impl Frame {
+    /// Allocate a black frame.
+    pub fn new(size: usize) -> Self {
+        Self { size, data: vec![0.0; size * size * 3] }
+    }
+
+    /// Constant-color frame.
+    pub fn filled(size: usize, rgb: [f32; 3]) -> Self {
+        let mut f = Self::new(size);
+        for px in f.data.chunks_exact_mut(3) {
+            px.copy_from_slice(&rgb);
+        }
+        f
+    }
+
+    /// Wrap existing pixel data (must be `size·size·3` long).
+    pub fn from_data(size: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), size * size * 3);
+        Self { size, data }
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn rgb(&self, y: usize, x: usize) -> (f32, f32, f32) {
+        let i = (y * self.size + x) * 3;
+        (self.data[i], self.data[i + 1], self.data[i + 2])
+    }
+
+    #[inline]
+    pub fn set_rgb(&mut self, y: usize, x: usize, rgb: [f32; 3]) {
+        let i = (y * self.size + x) * 3;
+        self.data[i..i + 3].copy_from_slice(&rgb);
+    }
+
+    /// Blend `rgb` into the pixel with weight `alpha`.
+    #[inline]
+    pub fn blend_rgb(&mut self, y: usize, x: usize, rgb: [f32; 3], alpha: f32) {
+        let i = (y * self.size + x) * 3;
+        for c in 0..3 {
+            self.data[i + c] = alpha * rgb[c] + (1.0 - alpha) * self.data[i + c];
+        }
+    }
+
+    /// Blend a `patch × patch` pixel block (row-major, rgb-interleaved,
+    /// e.g. a concept code) into the frame at (y0, x0).
+    pub fn blend_block(&mut self, y0: usize, x0: usize, patch: usize, block: &[f32], alpha: f32) {
+        assert_eq!(block.len(), patch * patch * 3);
+        for dy in 0..patch {
+            for dx in 0..patch {
+                let b = (dy * patch + dx) * 3;
+                self.blend_rgb(
+                    y0 + dy,
+                    x0 + dx,
+                    [block[b], block[b + 1], block[b + 2]],
+                    alpha,
+                );
+            }
+        }
+    }
+
+    /// Clamp all values into [0, 1].
+    pub fn clamp(&mut self) {
+        for v in &mut self.data {
+            *v = v.clamp(0.0, 1.0);
+        }
+    }
+
+    /// Mean per-pixel L2 distance to another frame (clustering metric).
+    pub fn l2_distance(&self, other: &Frame) -> f32 {
+        self.l2_distance_bounded(other, f32::INFINITY)
+    }
+
+    /// L2 distance with an early-exit bound: returns a value > `bound` as
+    /// soon as the partial sum proves the final distance exceeds it.  The
+    /// clustering inner loop only needs "is this within threshold / is it
+    /// the running minimum", so most comparisons abort after a fraction
+    /// of the pixels (§Perf: 2.9× on the clusterer hot path).
+    pub fn l2_distance_bounded(&self, other: &Frame, bound: f32) -> f32 {
+        assert_eq!(self.size, other.size);
+        let n = self.data.len();
+        let limit = if bound.is_finite() {
+            bound * bound * n as f32
+        } else {
+            f32::INFINITY
+        };
+        let mut acc = 0.0f32;
+        let mut i = 0;
+        // check the abort condition once per 512-element block
+        while i < n {
+            let end = (i + 512).min(n);
+            let (mut s0, mut s1) = (0.0f32, 0.0f32);
+            let mut j = i;
+            let end2 = end & !1;
+            while j < end2 {
+                let d0 = self.data[j] - other.data[j];
+                let d1 = self.data[j + 1] - other.data[j + 1];
+                s0 += d0 * d0;
+                s1 += d1 * d1;
+                j += 2;
+            }
+            if j < end {
+                let d = self.data[j] - other.data[j];
+                s0 += d * d;
+            }
+            acc += s0 + s1;
+            if acc > limit {
+                return (acc / n as f32).sqrt();
+            }
+            i = end;
+        }
+        (acc / n as f32).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filled_and_accessors() {
+        let f = Frame::filled(8, [0.1, 0.2, 0.3]);
+        assert_eq!(f.rgb(3, 4), (0.1, 0.2, 0.3));
+        assert_eq!(f.data().len(), 8 * 8 * 3);
+    }
+
+    #[test]
+    fn blend_block_plants_code() {
+        let mut f = Frame::filled(16, [0.0, 0.0, 0.0]);
+        let block = vec![1.0f32; 4 * 4 * 3];
+        f.blend_block(0, 0, 4, &block, 0.8);
+        assert_eq!(f.rgb(0, 0), (0.8, 0.8, 0.8));
+        assert_eq!(f.rgb(3, 3), (0.8, 0.8, 0.8));
+        assert_eq!(f.rgb(4, 4), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn l2_distance_properties() {
+        let a = Frame::filled(8, [0.0; 3]);
+        let b = Frame::filled(8, [1.0; 3]);
+        assert_eq!(a.l2_distance(&a), 0.0);
+        assert!((a.l2_distance(&b) - 1.0).abs() < 1e-6);
+        assert_eq!(a.l2_distance(&b), b.l2_distance(&a));
+    }
+
+    #[test]
+    fn clamp_bounds() {
+        let mut f = Frame::from_data(2, vec![-1.0, 0.5, 2.0, 0.0, 1.0, 0.3, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        f.clamp();
+        assert!(f.data().iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+}

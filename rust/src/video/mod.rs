@@ -1,0 +1,11 @@
+//! Video substrate: frame representation, the procedural scene-scripted
+//! stream generator (stands in for the paper's edge-camera footage), and
+//! the VQA workload generator with planted ground truth.
+
+pub mod frame;
+pub mod synth;
+pub mod workload;
+
+pub use frame::Frame;
+pub use synth::{SceneScript, SynthConfig, VideoSynth};
+pub use workload::{DatasetPreset, Query, QueryType, WorkloadGen};

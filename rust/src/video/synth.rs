@@ -1,0 +1,456 @@
+//! Procedural scene-scripted video generator.
+//!
+//! Stands in for the paper's edge camera streams (Video-MME / EgoSchema
+//! clips): a seeded *scene script* fixes scene boundaries, palettes,
+//! textures, moving objects, and concept events; frames are rendered
+//! deterministically from `(seed, frame_index)` so any frame can be
+//! produced by random access without sequential state.
+//!
+//! Scene changes move the palette/texture abruptly (what Eq. 1 detects);
+//! within a scene, slow drift plus a moving blob provide the intra-scene
+//! variation that frame clustering groups; concept events plant the
+//! concept pixel codes (shared with the Python model via
+//! `artifacts/concept_codes.bin`) into the watermark patches that the
+//! image tower reads out — giving the synthetic stream exactly the
+//! properties the paper's pipeline exploits, with ground truth attached.
+
+use crate::util::rng::Pcg64;
+use crate::video::frame::Frame;
+
+/// A concept visibility event inside a scene.
+#[derive(Clone, Debug)]
+pub struct ConceptEvent {
+    pub concept: usize,
+    /// global frame range [start, end)
+    pub start: u64,
+    pub end: u64,
+    /// watermark slot: 0 = top-left patch, 1 = top-right patch
+    pub slot: u8,
+}
+
+/// One scene of the script.
+#[derive(Clone, Debug)]
+pub struct SceneSpec {
+    pub id: usize,
+    pub start: u64,
+    pub len: u64,
+    pub base_rgb: [f32; 3],
+    pub tex_freq: f32,
+    pub tex_phase: f32,
+    pub drift: [f32; 3],
+    pub blob_rgb: [f32; 3],
+    pub blob_radius: f32,
+    pub blob_speed: f32,
+    pub events: Vec<ConceptEvent>,
+}
+
+impl SceneSpec {
+    pub fn end(&self) -> u64 {
+        self.start + self.len
+    }
+}
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub frame_size: usize,
+    pub fps: f64,
+    pub duration_s: f64,
+    /// scene duration range, seconds
+    pub scene_len_s: (f64, f64),
+    /// events per scene range (inclusive)
+    pub events_per_scene: (usize, usize),
+    /// fraction of the scene a concept event spans
+    pub event_fraction: f64,
+    /// per-pixel temporal noise amplitude
+    pub noise: f32,
+    /// watermark blend weight (code vs scene content)
+    pub code_blend: f32,
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self {
+            frame_size: 64,
+            fps: 8.0,
+            duration_s: 120.0,
+            scene_len_s: (6.0, 18.0),
+            events_per_scene: (0, 2),
+            event_fraction: 0.5,
+            noise: 0.015,
+            code_blend: 0.8,
+            seed: 1,
+        }
+    }
+}
+
+/// The full script: scenes + derived ground truth.
+#[derive(Clone, Debug)]
+pub struct SceneScript {
+    pub scenes: Vec<SceneSpec>,
+    pub total_frames: u64,
+    pub fps: f64,
+}
+
+impl SceneScript {
+    /// Generate a script from config; concepts are drawn from
+    /// `[0, n_concepts)`.
+    pub fn generate(cfg: &SynthConfig, n_concepts: usize) -> Self {
+        let mut rng = Pcg64::new(cfg.seed, SCRIPT_STREAM);
+        let total_frames = (cfg.duration_s * cfg.fps).round() as u64;
+        let mut scenes = Vec::new();
+        let mut start = 0u64;
+        let mut id = 0usize;
+        while start < total_frames {
+            let len_s =
+                cfg.scene_len_s.0 + rng.f64() * (cfg.scene_len_s.1 - cfg.scene_len_s.0);
+            let len = ((len_s * cfg.fps).round() as u64)
+                .max(2)
+                .min(total_frames - start);
+            let n_events =
+                rng.range(cfg.events_per_scene.0, cfg.events_per_scene.1 + 1);
+            let mut events = Vec::with_capacity(n_events);
+            for slot in 0..n_events.min(2) {
+                let concept = rng.below(n_concepts as u64) as usize;
+                let span = ((len as f64 * cfg.event_fraction) as u64).max(1);
+                let offset = if len > span { rng.below(len - span) } else { 0 };
+                events.push(ConceptEvent {
+                    concept,
+                    start: start + offset,
+                    end: start + offset + span,
+                    slot: slot as u8,
+                });
+            }
+            scenes.push(SceneSpec {
+                id,
+                start,
+                len,
+                base_rgb: [
+                    0.15 + 0.7 * rng.f32(),
+                    0.15 + 0.7 * rng.f32(),
+                    0.15 + 0.7 * rng.f32(),
+                ],
+                tex_freq: 1.0 + 7.0 * rng.f32(),
+                tex_phase: rng.f32() * std::f32::consts::TAU,
+                drift: [
+                    0.04 * (rng.f32() - 0.5),
+                    0.04 * (rng.f32() - 0.5),
+                    0.04 * (rng.f32() - 0.5),
+                ],
+                blob_rgb: [rng.f32(), rng.f32(), rng.f32()],
+                blob_radius: 4.0 + 8.0 * rng.f32(),
+                blob_speed: 0.3 + 1.2 * rng.f32(),
+                events,
+            });
+            start += len;
+            id += 1;
+        }
+        Self { scenes, total_frames, fps: cfg.fps }
+    }
+
+    /// Scene containing a frame (scenes tile the stream).
+    pub fn scene_at(&self, frame: u64) -> &SceneSpec {
+        let i = self
+            .scenes
+            .partition_point(|s| s.end() <= frame)
+            .min(self.scenes.len() - 1);
+        &self.scenes[i]
+    }
+
+    /// Ground-truth scene boundaries (first frame of each scene, except 0).
+    pub fn boundaries(&self) -> Vec<u64> {
+        self.scenes.iter().skip(1).map(|s| s.start).collect()
+    }
+
+    /// Concepts visible at a frame, with their slots.
+    pub fn concepts_at(&self, frame: u64) -> Vec<(usize, u8)> {
+        self.scene_at(frame)
+            .events
+            .iter()
+            .filter(|e| frame >= e.start && frame < e.end)
+            .map(|e| (e.concept, e.slot))
+            .collect()
+    }
+
+    /// All visibility spans of a concept across the video.
+    pub fn concept_spans(&self, concept: usize) -> Vec<(u64, u64)> {
+        self.scenes
+            .iter()
+            .flat_map(|s| s.events.iter())
+            .filter(|e| e.concept == concept)
+            .map(|e| (e.start, e.end))
+            .collect()
+    }
+
+    /// Concepts that appear anywhere, with span counts.
+    pub fn concept_census(&self) -> Vec<(usize, usize)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for s in &self.scenes {
+            for e in &s.events {
+                *counts.entry(e.concept).or_insert(0usize) += 1;
+            }
+        }
+        counts.into_iter().collect()
+    }
+}
+
+/// RNG stream id for script generation (distinct from render noise).
+const SCRIPT_STREAM: u64 = 0x5ce7e;
+
+/// Deterministic per-pixel hash noise in [-1, 1].
+#[inline]
+fn hash_noise(seed: u64, frame: u64, y: usize, x: usize) -> f32 {
+    let mut h = seed
+        ^ frame.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (y as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ (x as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 27;
+    ((h >> 40) as f32) * (2.0 / (1u64 << 24) as f32) - 1.0
+}
+
+/// Frame renderer: deterministic random access over the script.
+pub struct VideoSynth {
+    cfg: SynthConfig,
+    script: SceneScript,
+    /// concept pixel codes from artifacts (`[n_concepts][patch·patch·3]`)
+    codes: Vec<Vec<f32>>,
+    patch: usize,
+}
+
+impl VideoSynth {
+    pub fn new(cfg: SynthConfig, codes: Vec<Vec<f32>>, patch: usize) -> Self {
+        let n_concepts = codes.len();
+        let script = SceneScript::generate(&cfg, n_concepts);
+        Self { cfg, script, codes, patch }
+    }
+
+    /// Construct with a pre-built script (for tests / curated workloads).
+    pub fn with_script(
+        cfg: SynthConfig,
+        script: SceneScript,
+        codes: Vec<Vec<f32>>,
+        patch: usize,
+    ) -> Self {
+        Self { cfg, script, codes, patch }
+    }
+
+    pub fn script(&self) -> &SceneScript {
+        &self.script
+    }
+
+    pub fn config(&self) -> &SynthConfig {
+        &self.cfg
+    }
+
+    pub fn total_frames(&self) -> u64 {
+        self.script.total_frames
+    }
+
+    /// The concept code book this stream plants (shared with the MEM).
+    pub fn codes(&self) -> &[Vec<f32>] {
+        &self.codes
+    }
+
+    /// Watermark patch side length.
+    pub fn patch(&self) -> usize {
+        self.patch
+    }
+
+    /// Render frame `idx`.
+    pub fn frame(&self, idx: u64) -> Frame {
+        let size = self.cfg.frame_size;
+        let scene = self.script.scene_at(idx);
+        let t = (idx - scene.start) as f32;
+
+        let mut f = Frame::new(size);
+        let inv = 1.0 / (size - 1) as f32;
+        // slow within-scene drift
+        let drift = [
+            scene.drift[0] * t * 0.1,
+            scene.drift[1] * t * 0.1,
+            scene.drift[2] * t * 0.1,
+        ];
+        for y in 0..size {
+            let fy = y as f32 * inv;
+            for x in 0..size {
+                let fx = x as f32 * inv;
+                // palette gradient + sinusoidal texture
+                let tex = 0.12
+                    * (scene.tex_freq * (fx + 0.6 * fy) * std::f32::consts::TAU
+                        + scene.tex_phase)
+                        .sin();
+                let n = self.cfg.noise * hash_noise(self.cfg.seed, idx, y, x);
+                let rgb = [
+                    scene.base_rgb[0] + 0.25 * fx + tex + drift[0] + n,
+                    scene.base_rgb[1] + 0.25 * fy + tex + drift[1] + n,
+                    scene.base_rgb[2] - 0.15 * fx + tex + drift[2] + n,
+                ];
+                f.set_rgb(y, x, rgb);
+            }
+        }
+
+        // moving blob (intra-scene variation for clustering)
+        let cx = (size as f32 * 0.5)
+            + (size as f32 * 0.3) * (scene.blob_speed * t * 0.05).sin();
+        let cy = (size as f32 * 0.5)
+            + (size as f32 * 0.3) * (scene.blob_speed * t * 0.05 + 1.3).cos();
+        let r2 = scene.blob_radius * scene.blob_radius;
+        let lo_y = ((cy - scene.blob_radius).floor().max(0.0)) as usize;
+        let hi_y = ((cy + scene.blob_radius).ceil().min(size as f32 - 1.0)) as usize;
+        let lo_x = ((cx - scene.blob_radius).floor().max(0.0)) as usize;
+        let hi_x = ((cx + scene.blob_radius).ceil().min(size as f32 - 1.0)) as usize;
+        for y in lo_y..=hi_y {
+            for x in lo_x..=hi_x {
+                let d2 = (y as f32 - cy).powi(2) + (x as f32 - cx).powi(2);
+                if d2 < r2 {
+                    f.blend_rgb(y, x, scene.blob_rgb, 0.85);
+                }
+            }
+        }
+
+        // concept events: a visible activity overlay (events are visible
+        // actions — this is what scene-change detection and clustering key
+        // on) plus the watermark block (the semantic signal the MEM reads
+        // out through the shared code book)
+        for (concept, slot) in self.script.concepts_at(idx) {
+            // activity blob: concept-dependent color/position
+            let code = &self.codes[concept];
+            let acx = (size as f32) * (0.25 + 0.5 * code[0]);
+            let acy = (size as f32) * (0.35 + 0.4 * code[1]);
+            let argb = [code[2], code[3], code[4]];
+            let ar = 7.0f32;
+            let lo_y = ((acy - ar).floor().max(0.0)) as usize;
+            let hi_y = ((acy + ar).ceil().min(size as f32 - 1.0)) as usize;
+            let lo_x = ((acx - ar).floor().max(0.0)) as usize;
+            let hi_x = ((acx + ar).ceil().min(size as f32 - 1.0)) as usize;
+            for y in lo_y..=hi_y {
+                for x in lo_x..=hi_x {
+                    let d2 = (y as f32 - acy).powi(2) + (x as f32 - acx).powi(2);
+                    if d2 < ar * ar {
+                        f.blend_rgb(y, x, argb, 0.9);
+                    }
+                }
+            }
+            // watermark block in the slot's corner patch
+            let x0 = if slot == 0 { 0 } else { size - self.patch };
+            f.blend_block(0, x0, self.patch, code, self.cfg.code_blend);
+        }
+
+        f.clamp();
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(n: usize, patch: usize) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seeded(7);
+        (0..n)
+            .map(|_| (0..patch * patch * 3).map(|_| rng.f32()).collect())
+            .collect()
+    }
+
+    fn synth() -> VideoSynth {
+        VideoSynth::new(SynthConfig::default(), codes(8, 8), 8)
+    }
+
+    #[test]
+    fn script_tiles_stream() {
+        let s = synth();
+        let script = s.script();
+        assert_eq!(script.scenes[0].start, 0);
+        for w in script.scenes.windows(2) {
+            assert_eq!(w[0].end(), w[1].start);
+        }
+        assert_eq!(script.scenes.last().unwrap().end(), script.total_frames);
+    }
+
+    #[test]
+    fn deterministic_rendering() {
+        let a = synth().frame(123);
+        let b = synth().frame(123);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scene_change_is_bigger_than_within_scene_change() {
+        let s = synth();
+        let script = s.script();
+        let b = script.scenes[1].start;
+        let across = s.frame(b - 1).l2_distance(&s.frame(b));
+        let within = s.frame(b).l2_distance(&s.frame(b + 1));
+        assert!(
+            across > 2.0 * within,
+            "across {across} vs within {within}"
+        );
+    }
+
+    #[test]
+    fn concepts_visible_during_event_only() {
+        let s = synth();
+        let script = s.script();
+        let ev = script
+            .scenes
+            .iter()
+            .flat_map(|sc| sc.events.iter())
+            .next()
+            .expect("some event");
+        assert!(script
+            .concepts_at(ev.start)
+            .iter()
+            .any(|&(c, _)| c == ev.concept));
+        if ev.end < script.total_frames {
+            let sc = script.scene_at(ev.start);
+            if ev.end < sc.end() {
+                assert!(!script
+                    .concepts_at(ev.end)
+                    .iter()
+                    .any(|&(c, slot)| c == ev.concept && slot == ev.slot));
+            }
+        }
+    }
+
+    #[test]
+    fn watermark_pixels_reflect_code() {
+        let s = synth();
+        let script = s.script();
+        let ev = script
+            .scenes
+            .iter()
+            .flat_map(|sc| sc.events.iter())
+            .find(|e| e.slot == 0)
+            .expect("slot-0 event");
+        let f = s.frame(ev.start);
+        // top-left pixel should be ~0.8·code + 0.2·scene
+        let code = &s.codes[ev.concept];
+        let (r, _, _) = f.rgb(0, 0);
+        // blended value lies within 0.2 of the code value (scene term bounded)
+        assert!((r - code[0]).abs() < 0.25, "r {r} vs code {}", code[0]);
+    }
+
+    #[test]
+    fn concept_spans_cover_events() {
+        let s = synth();
+        let script = s.script();
+        for (c, n) in script.concept_census() {
+            assert_eq!(script.concept_spans(c).len(), n);
+        }
+    }
+
+    #[test]
+    fn frames_in_unit_range() {
+        let s = synth();
+        for idx in [0, 7, 100] {
+            assert!(s
+                .frame(idx)
+                .data()
+                .iter()
+                .all(|&x| (0.0..=1.0).contains(&x)));
+        }
+    }
+}

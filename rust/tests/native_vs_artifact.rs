@@ -1,0 +1,109 @@
+//! Cross-validation between native-Rust fast paths and the AOT artifacts:
+//! the Eq. 1 features and the retrieval softmax must agree between the
+//! hand-written Rust used on the streaming hot path and the Pallas/XLA
+//! kernels, and the baseline score oracle must rank like the real MEM.
+
+use venus::embed::EmbedEngine;
+use venus::features::frame_features;
+use venus::runtime::Runtime;
+use venus::util::rng::Pcg64;
+use venus::util::softmax_temp;
+use venus::video::frame::Frame;
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn native_scene_features_match_pallas_kernel() {
+    let rt = runtime();
+    let mut rng = Pcg64::seeded(41);
+    let size = rt.model().img_size;
+    let mut frames = Vec::new();
+    let mut flat = Vec::new();
+    for _ in 0..8 {
+        let mut f = Frame::new(size);
+        for v in f.data_mut() {
+            *v = rng.f32();
+        }
+        flat.extend_from_slice(f.data());
+        frames.push(f);
+    }
+    let artifact = rt.scene_features(&flat, 8).unwrap();
+    for (f, want) in frames.iter().zip(&artifact) {
+        let got = frame_features(f);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want) {
+            assert!((a - b).abs() < 1e-4, "native {a} vs artifact {b}");
+        }
+    }
+}
+
+#[test]
+fn native_softmax_matches_similarity_kernel() {
+    let rt = runtime();
+    let m = rt.model();
+    let mut rng = Pcg64::seeded(43);
+    let n = 640;
+    let mut index = vec![0.0f32; m.sim_rows * m.d_embed];
+    for r in 0..n {
+        let row = &mut index[r * m.d_embed..(r + 1) * m.d_embed];
+        for x in row.iter_mut() {
+            *x = rng.normal();
+        }
+        venus::util::l2_normalize(row);
+    }
+    let q = index[5 * m.d_embed..6 * m.d_embed].to_vec();
+    for tau in [0.05f32, 0.07, 0.2, 1.0] {
+        let (scores, probs) = rt.similarity(&q, &index, n, tau).unwrap();
+        let mut native = vec![0.0f32; n];
+        softmax_temp(&scores, tau, &mut native);
+        for (a, b) in native.iter().zip(&probs) {
+            assert!((a - b).abs() < 1e-4, "tau={tau}: native {a} vs kernel {b}");
+        }
+    }
+}
+
+/// The baseline oracle must rank frames the same way the real MEM does:
+/// frames showing the queried concept above frames that don't.
+#[test]
+fn oracle_ranking_consistent_with_real_encoder() {
+    let rt = runtime();
+    let codes = rt.concept_codes().unwrap();
+    let patch = rt.model().patch;
+    let mut engine = EmbedEngine::new(runtime(), false).unwrap();
+
+    let mut rng = Pcg64::seeded(47);
+    let size = rt.model().img_size;
+    let target = 7usize;
+
+    // 8 frames: 4 with the target concept planted, 4 with others
+    let mut frames = Vec::new();
+    for i in 0..8u64 {
+        let mut f = Frame::new(size);
+        for v in f.data_mut() {
+            *v = rng.f32();
+        }
+        let c = if i < 4 { target } else { (target + 1 + i as usize) % codes.len() };
+        f.blend_block(0, 0, patch, &codes[c], 0.8);
+        frames.push(f);
+    }
+    let refs: Vec<&Frame> = frames.iter().collect();
+    let embs = engine.embed_index_frames(&refs).unwrap();
+    let qvec = engine
+        .embed_query(&format!("what happened with concept{target:02}"))
+        .unwrap();
+
+    let sims: Vec<f32> = embs.iter().map(|e| venus::util::dot(&qvec, e)).collect();
+    let min_match = sims[..4].iter().cloned().fold(f32::INFINITY, f32::min);
+    let max_other = sims[4..].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    assert!(
+        min_match > max_other,
+        "real encoder must separate match vs non-match: {sims:?}"
+    );
+    // and the margin is large, as the oracle's MATCH_MEAN/OTHER_MEAN assume
+    assert!(
+        min_match - max_other > 0.2,
+        "margin too small for the oracle model: {sims:?}"
+    );
+}

@@ -1,0 +1,326 @@
+//! Property-based test suite (hand-rolled generators over PCG seeds —
+//! proptest is unavailable offline).  Each property is exercised across
+//! many random instances; failures print the seed for replay.
+
+use venus::config::{IngestConfig, MemoryConfig, VenusConfig};
+use venus::features::{frame_features, scene_score, ChannelWeights};
+use venus::ingest::{PartitionClusterer, SceneSegmenter};
+use venus::memory::{ClusterRecord, FlatIndex, Hierarchy, InMemoryRaw, IvfIndex, Metric, VectorIndex};
+use venus::retrieval::{akr_retrieve, sample_retrieve, softmax_probs, topk_retrieve};
+use venus::util::json::Json;
+use venus::util::rng::Pcg64;
+use venus::video::frame::Frame;
+use venus::video::synth::{SceneScript, SynthConfig};
+use venus::video::workload::{DatasetPreset, WorkloadGen};
+
+fn random_memory(seed: u64) -> (Hierarchy, usize) {
+    let mut rng = Pcg64::seeded(seed);
+    let n_clusters = rng.range(2, 64);
+    let mut h = Hierarchy::new(
+        &MemoryConfig::default(),
+        16,
+        Box::new(InMemoryRaw::new(8)),
+    )
+    .unwrap();
+    let mut frame_id = 0u64;
+    let mut records = Vec::new();
+    for c in 0..n_clusters {
+        let len = rng.range(1, 12) as u64;
+        let members: Vec<u64> = (frame_id..frame_id + len).collect();
+        for &m in &members {
+            h.archive_frame(m, &Frame::filled(8, [0.5; 3]));
+        }
+        records.push((c, members.clone()));
+        frame_id += len;
+    }
+    for (c, members) in records {
+        let mut v: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+        venus::util::l2_normalize(&mut v);
+        h.insert(
+            &v,
+            ClusterRecord {
+                scene_id: c,
+                centroid_frame: members[0],
+                members,
+            },
+        )
+        .unwrap();
+    }
+    (h, n_clusters)
+}
+
+#[test]
+fn prop_sampling_invariants() {
+    for seed in 0..40u64 {
+        let (mem, n) = random_memory(1000 + seed);
+        let mut rng = Pcg64::seeded(seed);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let budget = rng.range(1, 64);
+        let tau = 0.05 + rng.f32() * 2.0;
+        let sel = sample_retrieve(&mem, &scores, tau, budget, &mut rng);
+        // draws == budget; probs sum to 1; frames valid & sorted-unique
+        assert_eq!(sel.drawn_indices.len(), budget, "seed {seed}");
+        let psum: f32 = sel.probs.iter().sum();
+        assert!((psum - 1.0).abs() < 1e-4, "seed {seed}: prob sum {psum}");
+        assert!(sel.frames.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
+        for &f in &sel.frames {
+            assert!(f < mem.frames_ingested(), "seed {seed}");
+        }
+        // every selected frame belongs to a drawn cluster
+        for &f in &sel.frames {
+            let owner = mem
+                .records()
+                .iter()
+                .position(|r| r.members.binary_search(&f).is_ok())
+                .unwrap();
+            assert!(sel.drawn_indices.contains(&owner), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_akr_bounds_and_mass() {
+    for seed in 0..40u64 {
+        let (mem, n) = random_memory(2000 + seed);
+        let mut rng = Pcg64::seeded(seed);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 0.5).collect();
+        let theta = 0.5 + rng.f64() * 0.45;
+        let beta = 1.0 + rng.f64() * 4.0;
+        let n_max = rng.range(4, 64);
+        let out = akr_retrieve(&mem, &scores, 0.2, theta, beta, n_max, &mut rng);
+        assert!(out.draws <= n_max, "seed {seed}");
+        assert!(out.draws >= 1, "seed {seed}");
+        // termination condition: mass ≥ θ or the cap was hit or the floor
+        // bound exceeded the cap
+        assert!(
+            out.mass >= theta || out.draws == n_max,
+            "seed {seed}: draws {} mass {:.3} θ {theta:.3}",
+            out.draws,
+            out.mass
+        );
+        assert!(out.selection.frames.len() <= out.draws, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_topk_returns_true_maxima() {
+    for seed in 0..40u64 {
+        let (mem, n) = random_memory(3000 + seed);
+        let mut rng = Pcg64::seeded(seed);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let k = rng.range(1, n + 1);
+        let sel = topk_retrieve(&mem, &scores, k);
+        let mut sorted = scores.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let kth = sorted[k - 1];
+        for &idx in &sel.drawn_indices {
+            assert!(scores[idx] >= kth - 1e-6, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_softmax_normalized_and_monotone() {
+    for seed in 0..60u64 {
+        let mut rng = Pcg64::seeded(4000 + seed);
+        let n = rng.range(1, 512);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let tau = 0.02 + rng.f32() * 3.0;
+        let p = softmax_probs(&scores, tau);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-4, "seed {seed}");
+        // order preservation
+        for i in 0..n {
+            for j in 0..n {
+                if scores[i] > scores[j] {
+                    assert!(p[i] >= p[j] - 1e-6, "seed {seed}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_flat_and_ivf_score_all_agree() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg64::seeded(5000 + seed);
+        let dim = 8 + rng.range(0, 24);
+        let n = rng.range(10, 600);
+        let mut flat = FlatIndex::new(dim, Metric::Cosine);
+        let mut ivf = IvfIndex::new(dim, Metric::Cosine, 8, 4);
+        for _ in 0..n {
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            flat.insert(&v).unwrap();
+            ivf.insert(&v).unwrap();
+        }
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        flat.score_all(&q, &mut a);
+        ivf.score_all(&q, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_segmentation_partitions_tile_any_stream() {
+    for seed in 0..8u64 {
+        let cfg = SynthConfig {
+            duration_s: 20.0 + (seed as f64) * 7.0,
+            seed: 6000 + seed,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seeded(seed);
+        let codes: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..192).map(|_| rng.f32()).collect())
+            .collect();
+        let synth = venus::video::synth::VideoSynth::new(cfg, codes, 8);
+        let mut seg = SceneSegmenter::new(&IngestConfig::default(), 8.0);
+        let mut parts = Vec::new();
+        for i in 0..synth.total_frames() {
+            if let Some(p) = seg.push(&synth.frame(i)) {
+                parts.push(p);
+            }
+        }
+        parts.extend(seg.finish());
+        assert_eq!(parts[0].start, 0, "seed {seed}");
+        for w in parts.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "seed {seed}");
+        }
+        assert_eq!(parts.last().unwrap().end, synth.total_frames(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_clustering_conserves_frames() {
+    for seed in 0..8u64 {
+        let mut rng = Pcg64::seeded(7000 + seed);
+        let n = rng.range(5, 120) as u64;
+        let threshold = 0.02 + rng.f32() * 0.3;
+        let mut c = PartitionClusterer::new(threshold);
+        for i in 0..n {
+            let v = rng.f32();
+            c.push(i, &Frame::filled(16, [v, v * 0.5, 1.0 - v]));
+        }
+        let clusters = c.finish();
+        let mut all: Vec<u64> = clusters.iter().flat_map(|c| c.members.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>(), "seed {seed}");
+        for cl in &clusters {
+            assert!(cl.members.contains(&cl.centroid_id), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_scene_score_is_a_semimetric() {
+    let w = ChannelWeights::default();
+    for seed in 0..20u64 {
+        let mut rng = Pcg64::seeded(8000 + seed);
+        let mk = |rng: &mut Pcg64| {
+            let mut f = Frame::new(64);
+            for v in f.data_mut() {
+                *v = rng.f32();
+            }
+            frame_features(&f)
+        };
+        let a = mk(&mut rng);
+        let b = mk(&mut rng);
+        assert!(scene_score(&a, &a, w).abs() < 1e-6, "seed {seed}");
+        let ab = scene_score(&a, &b, w);
+        let ba = scene_score(&b, &a, w);
+        assert!((ab - ba).abs() < 1e-6, "seed {seed}: symmetry");
+        assert!(ab >= 0.0, "seed {seed}: non-negative");
+    }
+}
+
+#[test]
+fn prop_workload_evidence_within_stream() {
+    for seed in 0..12u64 {
+        let cfg = SynthConfig {
+            duration_s: 60.0 + seed as f64 * 30.0,
+            seed: 9000 + seed,
+            ..Default::default()
+        };
+        let script = SceneScript::generate(&cfg, 24);
+        for preset in DatasetPreset::all() {
+            let qs = WorkloadGen::new(seed, preset).generate(&script, 15);
+            for q in qs {
+                for (s, e) in q.evidence {
+                    assert!(s < e && e <= script.total_frames, "seed {seed}");
+                }
+                assert!(q.distractor_concepts.len() < q.n_options);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+            3 => Json::Str(format!("s{}-\"quoted\"\n", rng.next_u64() % 1000)),
+            4 => Json::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.range(0, 5) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    for seed in 0..50u64 {
+        let mut rng = Pcg64::seeded(seed);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(v, back, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_config_defaults_survive_partial_toml() {
+    // any subset of keys set → the rest are defaults, validation holds
+    let keys = [
+        ("retrieval.tau", "0.15"),
+        ("retrieval.budget", "24"),
+        ("ingest.embed_batch", "8"),
+        ("net.bandwidth_mbps", "50.0"),
+        ("cloud.answer_tokens", "12"),
+        ("server.workers", "3"),
+    ];
+    for mask in 0u32..(1 << keys.len()) {
+        let mut text = String::new();
+        for (i, (k, v)) in keys.iter().enumerate() {
+            if mask & (1 << i) != 0 {
+                let (section, key) = k.split_once('.').unwrap();
+                text.push_str(&format!("[{section}]\n{key} = {v}\n"));
+            }
+        }
+        // group duplicate section headers: our parser rejects duplicate
+        // keys only, duplicate section headers are fine to re-open
+        let cfg = VenusConfig::from_toml(&text).unwrap_or_else(|e| {
+            panic!("mask {mask:b}: {e}\n{text}")
+        });
+        cfg.validate().unwrap();
+    }
+}
+
+#[test]
+fn query_on_empty_memory_yields_empty_selection() {
+    let mem = Hierarchy::new(
+        &MemoryConfig::default(),
+        16,
+        Box::new(InMemoryRaw::new(8)),
+    )
+    .unwrap();
+    let mut rng = Pcg64::seeded(1);
+    let sel = sample_retrieve(&mem, &[], 0.2, 16, &mut rng);
+    assert!(sel.frames.is_empty());
+    let out = akr_retrieve(&mem, &[], 0.2, 0.9, 4.0, 16, &mut rng);
+    assert!(out.selection.frames.is_empty());
+}

@@ -1,0 +1,170 @@
+//! Cross-language integration tests: the Rust PJRT execution path must
+//! reproduce the Python reference numerics recorded in the golden files at
+//! `make artifacts` time.  This is the authoritative proof that the HLO
+//! text round-trip (jax → text → xla crate parser → PJRT CPU) is lossless.
+
+use venus::runtime::Runtime;
+
+fn runtime() -> Runtime {
+    Runtime::load_default().expect("artifacts missing — run `make artifacts`")
+}
+
+fn read_f32(rt: &Runtime, key: &str) -> Vec<f32> {
+    rt.manifest().read_f32_file(key).unwrap().0
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[test]
+fn golden_image_embedding_matches_python() {
+    let rt = runtime();
+    let img = read_f32(&rt, "golden_image");
+    let want = read_f32(&rt, "golden_image_emb");
+    let got = rt.embed_image(&img, 1).unwrap();
+    let d = max_abs_diff(&got[0], &want);
+    assert!(d < 5e-4, "image embedding diverged: max|Δ| = {d}");
+}
+
+#[test]
+fn golden_text_embedding_matches_python() {
+    let rt = runtime();
+    let tokens = rt.manifest().read_i32_file("golden_tokens").unwrap().0;
+    let want = read_f32(&rt, "golden_text_emb");
+    let got = rt.embed_text(&tokens).unwrap();
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 5e-4, "text embedding diverged: max|Δ| = {d}");
+}
+
+#[test]
+fn golden_scene_features_match_python() {
+    let rt = runtime();
+    let img = read_f32(&rt, "golden_image");
+    let want = read_f32(&rt, "golden_scene_feat");
+    // scene_feat artifact is batch-8: tile the golden image
+    let mut batch = Vec::with_capacity(img.len() * 8);
+    for _ in 0..8 {
+        batch.extend_from_slice(&img);
+    }
+    let got = rt.scene_features(&batch, 8).unwrap();
+    for row in &got {
+        let d = max_abs_diff(row, &want);
+        assert!(d < 1e-4, "scene features diverged: max|Δ| = {d}");
+    }
+}
+
+#[test]
+fn embeddings_are_unit_norm() {
+    let rt = runtime();
+    let img = read_f32(&rt, "golden_image");
+    let emb = rt.embed_image(&img, 1).unwrap();
+    let norm: f32 = emb[0].iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-4, "norm = {norm}");
+}
+
+#[test]
+fn batched_image_tower_consistent_across_batch_sizes() {
+    let rt = runtime();
+    let img = read_f32(&rt, "golden_image");
+    let e1 = rt.embed_image(&img, 1).unwrap()[0].clone();
+    let mut b8 = Vec::new();
+    for _ in 0..8 {
+        b8.extend_from_slice(&img);
+    }
+    let e8 = rt.embed_image(&b8, 8).unwrap();
+    for row in &e8 {
+        let d = max_abs_diff(row, &e1);
+        assert!(d < 1e-4, "batch-8 row diverged from batch-1: {d}");
+    }
+}
+
+#[test]
+fn similarity_kernel_matches_native_softmax() {
+    let rt = runtime();
+    let m = rt.model();
+    // deterministic unit-norm index rows
+    let mut rng = venus::util::rng::Pcg64::seeded(99);
+    let n_valid = 700;
+    let mut index = vec![0.0f32; m.sim_rows * m.d_embed];
+    for r in 0..n_valid {
+        let row = &mut index[r * m.d_embed..(r + 1) * m.d_embed];
+        for x in row.iter_mut() {
+            *x = rng.normal();
+        }
+        venus::util::l2_normalize(row);
+    }
+    let query: Vec<f32> = index[3 * m.d_embed..4 * m.d_embed].to_vec();
+    let tau = 0.1;
+    let (scores, probs) = rt.similarity(&query, &index, n_valid, tau).unwrap();
+    assert_eq!(scores.len(), n_valid);
+    // native recompute
+    let mut want_scores = vec![0.0f32; n_valid];
+    for r in 0..n_valid {
+        want_scores[r] =
+            venus::util::dot(&query, &index[r * m.d_embed..(r + 1) * m.d_embed]);
+    }
+    let mut want_probs = vec![0.0f32; n_valid];
+    venus::util::softmax_temp(&want_scores, tau, &mut want_probs);
+    assert!(max_abs_diff(&scores, &want_scores) < 1e-4);
+    assert!(max_abs_diff(&probs, &want_probs) < 1e-4);
+    // exact-match row must dominate
+    let argmax = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert_eq!(argmax, 3);
+    let sum: f32 = probs.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-4, "probs sum {sum}");
+}
+
+#[test]
+fn fused_entry_accepts_aux_tokens() {
+    let rt = runtime();
+    let m = rt.model();
+    let img = read_f32(&rt, "golden_image");
+    let mut batch = Vec::new();
+    for _ in 0..8 {
+        batch.extend_from_slice(&img);
+    }
+    // concept 5 is planted in the golden image; aux prompt mentions it
+    let concept_token = (m.concept_token_base + 5) as i32;
+    let mut aux = vec![0i32; 8 * m.seq_len];
+    for b in 0..8 {
+        aux[b * m.seq_len] = concept_token;
+    }
+    let fused = rt.embed_fused(&batch, &aux, 8).unwrap();
+    let plain = rt.embed_image(&batch, 8).unwrap();
+    // aux prompt must sharpen the planted concept's direction
+    let dirs = rt.concept_dirs().unwrap();
+    let mut u = dirs[5].clone();
+    venus::util::l2_normalize(&mut u);
+    let f = venus::util::dot(&fused[0], &u);
+    let p = venus::util::dot(&plain[0], &u);
+    assert!(
+        f > p,
+        "aux prompt should raise concept-5 alignment: fused {f} vs plain {p}"
+    );
+}
+
+#[test]
+fn concept_side_files_consistent() {
+    let rt = runtime();
+    let m = rt.model();
+    let codes = rt.concept_codes().unwrap();
+    let dirs = rt.concept_dirs().unwrap();
+    assert_eq!(codes.len(), m.n_concepts);
+    assert_eq!(dirs.len(), m.n_concepts);
+    assert_eq!(codes[0].len(), m.patch * m.patch * 3);
+    assert_eq!(dirs[0].len(), m.d_embed);
+    // codes are pixel values
+    for row in &codes {
+        assert!(row.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+}
