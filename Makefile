@@ -1,0 +1,44 @@
+# Venus build entry points.
+#
+# The default build needs NOTHING beyond a Rust toolchain: embeddings come
+# from the self-contained native backend (`rust/src/backend/native.rs`).
+#
+# The OPTIONAL PJRT path executes AOT-compiled XLA artifacts instead:
+#   1. `make artifacts`  — export HLO-text artifacts + goldens with the
+#      Python compile layer (needs jax; run inside the rust_pallas image).
+#   2. point the `xla` dependency at the real PJRT bindings instead of the
+#      in-tree type-check stub, e.g. in Cargo.toml:
+#          xla = { path = "../xla-rs", optional = true }
+#      (the stub at rust/xla-stub keeps `--features pjrt` compiling
+#      offline; it cannot execute artifacts.)
+#   3. `cargo test --features pjrt` — runs the cross-backend parity suite
+#      (rust/tests/native_vs_artifact.rs) against the artifacts.
+
+.PHONY: all build test bench verify artifacts fmt clean
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+# Tier-1 verification, exactly what CI runs.
+verify: build test
+
+# AOT-export the MEM entry points (embed_image_b{1,8,32}, embed_text_b1,
+# embed_fused_b8, scene_feat_b8, similarity_n1024), the concept side
+# files, the cross-language goldens, and manifest.json into ./artifacts.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+fmt:
+	cargo fmt --all
+
+clean:
+	cargo clean
+	rm -rf artifacts

@@ -11,7 +11,6 @@ use venus::config::{CloudConfig, VenusConfig};
 use venus::coordinator::query::{QueryEngine, RetrievalMode};
 use venus::embed::EmbedEngine;
 use venus::eval::prepare_case;
-use venus::runtime::Runtime;
 use venus::util::stats::Table;
 
 fn main() -> venus::Result<()> {
@@ -37,7 +36,7 @@ fn main() -> venus::Result<()> {
                 cfg.retrieval.beta = beta;
                 cfg.retrieval.tau = tau;
                 let mut qe = QueryEngine::new(
-                    EmbedEngine::new(Runtime::load_default()?, true)?,
+                    EmbedEngine::default_backend(true)?,
                     Arc::clone(&case.memory),
                     cfg.retrieval.clone(),
                     3,

@@ -1,12 +1,14 @@
 //! Quickstart: the smallest complete Venus program.
 //!
 //! Builds a synthetic 90-second home-camera stream, ingests it through
-//! the real pipeline (scene segmentation → clustering → PJRT embedding →
+//! the real pipeline (scene segmentation → clustering → MEM embedding →
 //! hierarchical memory), then answers one natural-language query and
 //! prints the latency breakdown.
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (requires `make artifacts` first)
+//! No artifacts or model files needed: the default native backend is
+//! self-contained (`make artifacts` + `--features pjrt` switches the
+//! embedding path to the AOT-compiled XLA runtime).
 
 use venus::config::VenusConfig;
 use venus::coordinator::Venus;
@@ -38,7 +40,7 @@ fn main() -> venus::Result<()> {
         stats.frames,
         stats.partitions,
         stats.embedded,
-        venus.memory.lock().unwrap().sparsity().round()
+        venus.memory.read().unwrap().sparsity().round()
     );
 
     // 4. querying stage: ask about a concept the generator planted

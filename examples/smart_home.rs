@@ -4,7 +4,7 @@
 //! continuously; family members issue natural-language queries at any
 //! time.  This driver:
 //!   1. ingests a multi-minute synthetic home stream through the real
-//!      threaded pipeline (PJRT MEM embeddings on the index path),
+//!      threaded pipeline (backend MEM embeddings on the index path),
 //!   2. starts the multi-worker query service with admission control,
 //!   3. replays a batch of online queries (localized + dispersed mix),
 //!   4. reports accuracy vs ground truth, per-stage latency percentiles,
@@ -12,14 +12,14 @@
 //!
 //! Run: `cargo run --release --example smart_home`
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
+use venus::backend::{self, EmbedBackend};
 use venus::cloud::{SelectionStats, VlmClient};
 use venus::config::VenusConfig;
 use venus::embed::EmbedEngine;
 use venus::ingest::Pipeline;
 use venus::memory::{Hierarchy, SynthBackedRaw};
-use venus::runtime::Runtime;
 use venus::server::Service;
 use venus::util::stats::{fmt_duration, Samples, Table};
 use venus::video::synth::{SynthConfig, VideoSynth};
@@ -33,10 +33,10 @@ fn main() -> venus::Result<()> {
     let cfg = VenusConfig::default();
 
     // ---- the home camera stream ----
-    let rt = Runtime::load_default()?;
-    let codes = rt.concept_codes()?;
-    let patch = rt.model().patch;
-    let d_embed = rt.model().d_embed;
+    let be = backend::load_default()?;
+    let codes = be.concept_codes()?;
+    let patch = be.model().patch;
+    let d_embed = be.model().d_embed;
     let synth = Arc::new(VideoSynth::new(
         SynthConfig { duration_s: STREAM_S, seed: 4242, ..Default::default() },
         codes,
@@ -51,13 +51,14 @@ fn main() -> venus::Result<()> {
     );
 
     // ---- ingestion stage (real pipeline) ----
-    let memory = Arc::new(Mutex::new(Hierarchy::new(
+    let memory = Arc::new(RwLock::new(Hierarchy::new(
         &cfg.memory,
         d_embed,
         Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
     )?));
-    let engine = EmbedEngine::new(rt, cfg.ingest.aux_models)?;
-    let mut pipe = Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory));
+    let engine = EmbedEngine::new(be, cfg.ingest.aux_models)?;
+    let mut pipe =
+        Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory))?;
     let t0 = std::time::Instant::now();
     for i in 0..synth.total_frames() {
         pipe.push_frame(i, &synth.frame(i))?;
@@ -74,7 +75,7 @@ fn main() -> venus::Result<()> {
         realtime_factor,
         fmt_duration(stats.mean_embed_batch_s),
     );
-    memory.lock().unwrap().check_invariants()?;
+    memory.read().unwrap().check_invariants()?;
 
     // ---- online querying stage ----
     let queries = WorkloadGen::new(77, DatasetPreset::VideoMmeShort)

@@ -11,14 +11,14 @@
 //!
 //! Run: `cargo run --release --example surveillance_marathon`
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
+use venus::backend::{self, EmbedBackend};
 use venus::config::VenusConfig;
 use venus::coordinator::query::{QueryEngine, RetrievalMode};
 use venus::embed::EmbedEngine;
 use venus::ingest::Pipeline;
 use venus::memory::{Hierarchy, SynthBackedRaw};
-use venus::runtime::Runtime;
 use venus::util::stats::{fmt_duration, Table};
 use venus::video::synth::{SynthConfig, VideoSynth};
 use venus::video::workload::{DatasetPreset, WorkloadGen};
@@ -30,10 +30,10 @@ fn main() -> venus::Result<()> {
     println!("=== Venus surveillance marathon ({} min stream) ===", STREAM_S / 60.0);
     let cfg = VenusConfig::default();
 
-    let rt = Runtime::load_default()?;
-    let codes = rt.concept_codes()?;
-    let patch = rt.model().patch;
-    let d_embed = rt.model().d_embed;
+    let be = backend::load_default()?;
+    let codes = be.concept_codes()?;
+    let patch = be.model().patch;
+    let d_embed = be.model().d_embed;
     let synth = Arc::new(VideoSynth::new(
         SynthConfig {
             duration_s: STREAM_S,
@@ -47,16 +47,17 @@ fn main() -> venus::Result<()> {
     ));
     let total = synth.total_frames();
 
-    let memory = Arc::new(Mutex::new(Hierarchy::new(
+    let memory = Arc::new(RwLock::new(Hierarchy::new(
         &cfg.memory,
         d_embed,
         Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
     )?));
-    let engine = EmbedEngine::new(rt, cfg.ingest.aux_models)?;
-    let mut pipe = Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory));
+    let engine = EmbedEngine::new(be, cfg.ingest.aux_models)?;
+    let mut pipe =
+        Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory))?;
 
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+        EmbedEngine::new(backend::load_default()?, cfg.ingest.aux_models)?,
         Arc::clone(&memory),
         cfg.retrieval.clone(),
         5,
@@ -86,7 +87,7 @@ fn main() -> venus::Result<()> {
             lat.push(out.timings.total_s());
         }
         let (n_index, sparsity, raw_bytes) = {
-            let m = memory.lock().unwrap();
+            let m = memory.read().unwrap();
             (m.len(), m.sparsity(), m.raw_resident_bytes())
         };
         let wall = started.elapsed().as_secs_f64();
@@ -110,6 +111,6 @@ fn main() -> venus::Result<()> {
         stats.embedded,
         fmt_duration(stats.wall_s)
     );
-    memory.lock().unwrap().check_invariants()?;
+    memory.read().unwrap().check_invariants()?;
     Ok(())
 }

@@ -15,7 +15,6 @@ use venus::config::VenusConfig;
 use venus::coordinator::query::{QueryEngine, RetrievalMode};
 use venus::embed::EmbedEngine;
 use venus::eval::prepare_case;
-use venus::runtime::Runtime;
 use venus::util::bench::{note, section};
 use venus::util::stats::Table;
 use venus::video::frame::Frame;
@@ -32,7 +31,7 @@ fn main() {
     let total = case.synth.total_frames();
 
     // ---- vanilla dense DB: 256 uniform frames, real embeddings ----
-    let mut engine = EmbedEngine::new(Runtime::load_default().unwrap(), false).unwrap();
+    let mut engine = EmbedEngine::default_backend(false).unwrap();
     let dense_ids = venus::baselines::uniform::select(total, DENSE_SAMPLES);
     let frames: Vec<Frame> = dense_ids.iter().map(|&i| case.synth.frame(i)).collect();
     let refs: Vec<&Frame> = frames.iter().collect();
@@ -41,7 +40,7 @@ fn main() {
 
     // ---- Venus sampling over its clustered memory ----
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(Runtime::load_default().unwrap(), true).unwrap(),
+        EmbedEngine::default_backend(true).unwrap(),
         Arc::clone(&case.memory),
         cfg.retrieval.clone(),
         3,

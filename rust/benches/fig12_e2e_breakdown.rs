@@ -1,7 +1,7 @@
 //! Fig. 12 regenerator: end-to-end query latency breakdown per processing
 //! step for Venus and every baseline, on the Video-MME-short workload.
 //!
-//! Venus's edge steps are MEASURED on this host (PJRT query embedding,
+//! Venus's edge steps are MEASURED on this host (backend query embedding,
 //! index search, sampling, raw-frame fetch); its upload/VLM terms and all
 //! baseline terms come from the calibrated deployment models.  Both
 //! flavors are reported side by side in EXPERIMENTS.md.
@@ -16,7 +16,6 @@ use venus::edge::AGX_ORIN;
 use venus::embed::EmbedEngine;
 use venus::eval::{prepare_case, Deployment, LatencyModel};
 use venus::net::Link;
-use venus::runtime::Runtime;
 use venus::util::bench::{note, section};
 use venus::util::stats::{fmt_duration, Table};
 use venus::video::workload::DatasetPreset;
@@ -35,7 +34,7 @@ fn main() {
 
     // ---- Venus measured edge steps ----
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(Runtime::load_default().unwrap(), true).unwrap(),
+        EmbedEngine::default_backend(true).unwrap(),
         Arc::clone(&case.memory),
         cfg.retrieval.clone(),
         19,
@@ -61,7 +60,7 @@ fn main() {
     println!();
     println!("Venus per-step (edge steps MEASURED on this host):");
     let mut vt = Table::new(vec!["step", "latency", "source"]);
-    vt.row(vec!["query embed (PJRT text tower)".to_string(), fmt_duration(embed), "measured".into()]);
+    vt.row(vec!["query embed (text tower)".to_string(), fmt_duration(embed), "measured".into()]);
     vt.row(vec!["index search (score_all)".to_string(), fmt_duration(search), "measured".into()]);
     vt.row(vec!["sampling retrieval".to_string(), fmt_duration(select), "measured".into()]);
     vt.row(vec!["raw-frame fetch".to_string(), fmt_duration(fetch), "measured".into()]);

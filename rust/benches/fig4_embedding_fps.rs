@@ -2,13 +2,12 @@
 //! with the real-time threshold each device sustains.
 //!
 //! The device model is anchored to the paper's measured ceilings
-//! (0.3 / 0.7 / 1.8 FPS); the `host` row reports the MEASURED PJRT
-//! encoder on this machine for comparison (our MEM is far smaller than
+//! (0.3 / 0.7 / 1.8 FPS); the `host` row reports the MEASURED default
+//! backend on this machine for comparison (our MEM is far smaller than
 //! BGE-VL-large, hence the much higher ceiling).
 
 use venus::edge::DeviceProfile;
 use venus::embed::EmbedEngine;
-use venus::runtime::Runtime;
 use venus::util::bench::{note, section};
 use venus::util::stats::{fmt_duration, Table};
 use venus::video::frame::Frame;
@@ -32,8 +31,7 @@ fn main() {
     }
 
     // measured host encoder
-    let rt = Runtime::load_default().expect("artifacts");
-    let mut engine = EmbedEngine::new(rt, false).expect("engine");
+    let mut engine = EmbedEngine::default_backend(false).expect("engine");
     let frame = Frame::filled(64, [0.4, 0.5, 0.6]);
     let frames: Vec<&Frame> = std::iter::repeat(&frame).take(32).collect();
     // warm-up compile + steady-state measurement
@@ -56,7 +54,7 @@ fn main() {
     print!("{table}");
     note("paper thresholds: TX2 0.3 / Xavier-NX 0.7 / AGX-Orin 1.8 FPS");
     note(&format!(
-        "host measured: {} per frame (batch-32 PJRT image tower)",
+        "host measured: {} per frame (batch-32 image tower, default backend)",
         fmt_duration(per_frame)
     ));
 }

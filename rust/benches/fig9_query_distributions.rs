@@ -13,7 +13,6 @@ use venus::coordinator::query::QueryEngine;
 use venus::embed::EmbedEngine;
 use venus::eval::prepare_case;
 use venus::retrieval::softmax_probs;
-use venus::runtime::Runtime;
 use venus::util::bench::{note, section};
 use venus::video::workload::{DatasetPreset, QueryType};
 
@@ -25,7 +24,7 @@ fn main() {
     let case =
         prepare_case(DatasetPreset::VideoMmeMedium, &cfg, 60, 4100).expect("prepare");
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(Runtime::load_default().unwrap(), true).unwrap(),
+        EmbedEngine::default_backend(true).unwrap(),
         Arc::clone(&case.memory),
         cfg.retrieval.clone(),
         9,
@@ -80,7 +79,7 @@ fn main() {
             println!(
                 "  idx {:>4} (scene {:>3}) p={:.3} {bar}",
                 i,
-                case.memory.lock().unwrap().record(i).scene_id,
+                case.memory.read().unwrap().record(i).scene_id,
                 p
             );
         }

@@ -1,17 +1,17 @@
 //! Hot-path microbenchmarks (the §Perf instrument): vector search, Eq. 1
-//! scene features, incremental clustering, sampling/AKR, and the PJRT
+//! scene features, incremental clustering, sampling/AKR, and the backend
 //! embedding entry points.  Run `cargo bench --bench hotpath_micro`;
 //! results are recorded in EXPERIMENTS.md §Perf.
 
 use std::time::Duration;
 
+use venus::backend::{self, EmbedBackend};
 use venus::config::MemoryConfig;
 use venus::embed::EmbedEngine;
 use venus::features::frame_features;
 use venus::ingest::PartitionClusterer;
 use venus::memory::{ClusterRecord, FlatIndex, Hierarchy, InMemoryRaw, IvfIndex, Metric, VectorIndex};
 use venus::retrieval::{akr_retrieve, sample_retrieve};
-use venus::runtime::Runtime;
 use venus::util::bench::{note, section, Bench};
 use venus::util::rng::Pcg64;
 use venus::video::frame::Frame;
@@ -112,9 +112,8 @@ fn main() {
         akr_retrieve(&mem, &scores, 0.07, 0.9, 4.0, 32, &mut rng).draws
     });
 
-    section("PJRT entry points (AOT-compiled MEM, CPU)");
-    let rt = Runtime::load_default().expect("artifacts");
-    let mut engine = EmbedEngine::new(rt, true).expect("engine");
+    section("MEM entry points (default backend)");
+    let mut engine = EmbedEngine::default_backend(true).expect("engine");
     let f1 = Frame::filled(64, [0.3, 0.5, 0.7]);
     for batch in [1usize, 8, 32] {
         let refs: Vec<&Frame> = std::iter::repeat(&f1).take(batch).collect();
@@ -127,14 +126,14 @@ fn main() {
         engine.embed_query("when did concept05 appear").unwrap().len()
     });
     {
-        let rt2 = Runtime::load_default().unwrap();
-        let m = rt2.model();
+        let be2 = backend::load_default().unwrap();
+        let m = be2.model().clone();
         let rows = m.sim_rows;
         let idx = unit_vecs(rows, m.d_embed, 6).concat();
         let q = unit_vecs(1, m.d_embed, 7).pop().unwrap();
-        rt2.similarity(&q, &idx, rows, 0.07).unwrap(); // warm-up
+        be2.similarity(&q, &idx, rows, 0.07).unwrap(); // warm-up
         b.run("similarity_n1024 (fused kernel)", || {
-            rt2.similarity(&q, &idx, rows, 0.07).unwrap().0.len()
+            be2.similarity(&q, &idx, rows, 0.07).unwrap().0.len()
         });
     }
 

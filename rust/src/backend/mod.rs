@@ -1,0 +1,169 @@
+//! Pluggable compute backends for the MEM (multimodal embedding model).
+//!
+//! Everything above this layer — ingestion pipeline, coordinator, query
+//! engine, server workers, eval harness, benches — talks to the model
+//! through the [`EmbedBackend`] trait, which covers the five runtime entry
+//! points the paper's edge node needs (image tower, text tower, fused
+//! ingestion tower, Eq. 1 scene features, Eq. 4–5 similarity scoring) plus
+//! the model metadata and concept side-data.
+//!
+//! Two implementations:
+//!   * [`native::NativeBackend`] (default) — a pure-Rust mirror of the
+//!     reference dual-encoder forward in `python/compile/model.py`, with
+//!     weights generated deterministically from the model seed.  No
+//!     artifact files, no FFI: the request path is self-contained on
+//!     commodity hardware, which is the paper's core deployment claim.
+//!   * `runtime::Runtime` (behind the off-by-default `pjrt` cargo
+//!     feature) — executes the AOT-compiled XLA artifacts produced by
+//!     `make artifacts` on the CPU PJRT client.
+//!
+//! See DESIGN.md §Backends for the trait contract and the parity story
+//! between the two.
+
+pub mod native;
+
+use anyhow::Result;
+
+pub use native::{NativeBackend, NativeConfig};
+
+/// Model hyperparameters every backend must agree on with its callers
+/// (tokenizer layout, embedding dim, watermark geometry, fusion weights).
+/// For the PJRT backend these are read from the artifact manifest; the
+/// native backend derives them from its [`NativeConfig`].
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub img_size: usize,
+    pub patch: usize,
+    pub d_embed: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_concepts: usize,
+    pub concept_token_base: usize,
+    pub sim_rows: usize,
+    pub scene_feat_dim: usize,
+    pub sem_weight: f32,
+    pub content_weight: f32,
+    pub aux_weight: f32,
+}
+
+/// The compute-backend contract: the five MEM entry points + metadata.
+///
+/// Shape conventions (identical to the AOT artifact entry points):
+///   * frames are `batch × (img_size · img_size · 3)` row-major pixels in
+///     [0, 1], channel-interleaved (`Frame`'s memory layout);
+///   * token windows are `seq_len` i32 ids per sequence;
+///   * all embeddings come back L2-normalized, `d_embed` wide.
+pub trait EmbedBackend {
+    /// Short backend identifier ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The model hyperparameters this backend was built with.
+    fn model(&self) -> &ModelMeta;
+
+    /// Image-tower batch sizes this backend serves, ascending.  The embed
+    /// engine chunks ingestion batches to these sizes.
+    fn image_batches(&self) -> Vec<usize>;
+
+    /// Whether the fused (image + aux-prompt, Eq. 2–3) entry exists for
+    /// the given batch size.
+    fn has_fused(&self, batch: usize) -> bool;
+
+    /// Eagerly prepare the named entry points (AOT backends compile here;
+    /// the native backend is ready at construction).  Serving systems call
+    /// this before the stream starts so the hot path never pays setup.
+    fn warmup(&self, entries: &[&str]) -> Result<()>;
+
+    /// Image tower: `batch` frames -> `batch` unit-norm embeddings.
+    fn embed_image(&self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>>;
+
+    /// Text tower (query path): one token window -> one unit-norm embedding.
+    fn embed_text(&self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Fused ingestion entry: frames + per-frame aux-prompt token windows
+    /// (Eq. 2–3 fusion with weight `aux_weight`).
+    fn embed_fused(
+        &self,
+        frames: &[f32],
+        aux_tokens: &[i32],
+        batch: usize,
+    ) -> Result<Vec<Vec<f32>>>;
+
+    /// Eq. 1 scene features: `batch` frames -> `batch` × `scene_feat_dim`
+    /// pooled (H, S, L, Sobel-energy) vectors.
+    fn scene_features(&self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>>;
+
+    /// Eq. 4–5 fused retrieval scoring over a padded index matrix.
+    /// `index` must hold exactly `sim_rows × d_embed` values (pad with
+    /// zero rows); returns `(scores, probs)` truncated to `n_valid`.
+    fn similarity(
+        &self,
+        query: &[f32],
+        index: &[f32],
+        n_valid: usize,
+        tau: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Concept pixel codes `[n_concepts][patch·patch·3]` — the watermark
+    /// blocks the synthetic generator plants (shared with the towers).
+    fn concept_codes(&self) -> Result<Vec<Vec<f32>>>;
+
+    /// Concept embedding directions `[n_concepts][d_embed]`
+    /// (`U[c] = w_r^T (codes[c] − 0.5)`).
+    fn concept_dirs(&self) -> Result<Vec<Vec<f32>>>;
+}
+
+/// Build the default backend for this process.
+///
+/// Selection order:
+///   1. `VENUS_BACKEND=native` forces the native backend;
+///   2. with the `pjrt` feature compiled in, an artifact directory (see
+///      `Runtime::load_default`) selects the PJRT backend —
+///      `VENUS_BACKEND=pjrt` makes a missing artifact set a hard error
+///      instead of a fallback;
+///   3. otherwise the self-contained native backend.
+pub fn load_default() -> Result<Box<dyn EmbedBackend>> {
+    let choice = std::env::var("VENUS_BACKEND").unwrap_or_default();
+    #[cfg(feature = "pjrt")]
+    {
+        if choice != "native" {
+            match crate::runtime::Runtime::load_default() {
+                Ok(rt) => return Ok(Box::new(rt)),
+                Err(e) if choice == "pjrt" => return Err(e),
+                Err(_) => {} // no artifacts: fall back to native
+            }
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        if choice == "pjrt" {
+            anyhow::bail!(
+                "VENUS_BACKEND=pjrt, but this build has no PJRT backend \
+                 (rebuild with `--features pjrt`)"
+            );
+        }
+    }
+    Ok(Box::new(NativeBackend::new(NativeConfig::default())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backend_loads_and_reports_model() {
+        let b = load_default().unwrap();
+        let m = b.model();
+        assert!(m.d_embed > 0 && m.img_size > 0);
+        assert!(!b.image_batches().is_empty());
+    }
+
+    #[test]
+    fn native_backend_constructs_directly() {
+        // (Deliberately does NOT exercise the VENUS_BACKEND env override:
+        // std::env::set_var races getenv in parallel tests and is UB on
+        // glibc.  The override is a thin string match in load_default.)
+        let b: Box<dyn EmbedBackend> = Box::new(NativeBackend::new(NativeConfig::default()));
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.model().d_embed, 64);
+    }
+}

@@ -1,0 +1,858 @@
+//! Native pure-Rust compute backend: the reference dual-encoder forward
+//! pass of `python/compile/model.py` / `python/compile/kernels/ref.py`,
+//! reimplemented on plain slices so the request path runs self-contained —
+//! no artifact files, no FFI, no Python.
+//!
+//! ## Weights
+//!
+//! Parameters are generated deterministically from `NativeConfig::seed`
+//! with the same *scheme* as `python/compile/params.py`: one independent
+//! random stream per tensor (here: a [`Pcg64`] stream keyed by the tensor's
+//! label), the same shapes, and the same initialization scales — including
+//! the semantic-projection scaling `std(w_r) = sqrt(12 / (patch_dim ·
+//! d_embed))` that puts concept readouts at unit norm.  Because the Python
+//! side uses jax.random (threefry) and this side uses PCG64, the two
+//! backends' weights are *statistically* identical but not bit-identical;
+//! cross-backend parity is therefore checked at the level that matters for
+//! the system (kernel-exact scene features / similarity, and cross-modal
+//! ranking behavior) in `rust/tests/native_vs_artifact.rs`.
+//!
+//! ## Model recap (see DESIGN.md §1)
+//!
+//! Both towers combine a *semantic* path (watermark concept readout through
+//! the shared projection `w_r`, which is what gives a randomly-initialized
+//! encoder trained-model cross-modal alignment by construction) with a
+//! *content* path (a small pre-LN transformer), weighted `sem_weight` :
+//! `content_weight`, then L2-normalize.
+
+use anyhow::{bail, ensure, Result};
+
+use super::{EmbedBackend, ModelMeta};
+use crate::util::rng::Pcg64;
+use crate::util::{dot, l2_normalize, softmax_temp};
+use crate::video::frame::Frame;
+
+/// Hyperparameters of the native MEM; defaults mirror
+/// `python/compile/config.py::MemConfig` exactly.
+#[derive(Clone, Debug)]
+pub struct NativeConfig {
+    // --- image tower ---
+    pub img_size: usize,
+    pub patch: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_blocks_img: usize,
+    pub d_mlp: usize,
+    // --- text tower ---
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub n_blocks_txt: usize,
+    // --- shared embedding space ---
+    pub d_embed: usize,
+    // --- semantic projection ---
+    pub n_concepts: usize,
+    pub concept_token_base: usize,
+    pub sem_weight: f32,
+    pub content_weight: f32,
+    pub aux_weight: f32,
+    // --- misc ---
+    pub sim_rows: usize,
+    pub seed: u64,
+}
+
+impl Default for NativeConfig {
+    fn default() -> Self {
+        Self {
+            img_size: 64,
+            patch: 8,
+            d_model: 128,
+            n_heads: 4,
+            n_blocks_img: 2,
+            d_mlp: 512,
+            vocab: 512,
+            seq_len: 16,
+            n_blocks_txt: 1,
+            d_embed: 64,
+            n_concepts: 32,
+            concept_token_base: 2,
+            sem_weight: 4.0,
+            content_weight: 1.0,
+            aux_weight: 0.5,
+            sim_rows: 1024,
+            seed: 20250710,
+        }
+    }
+}
+
+impl NativeConfig {
+    pub fn n_patches(&self) -> usize {
+        (self.img_size / self.patch) * (self.img_size / self.patch)
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch * 3
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// One pre-LN transformer block's parameters (row-major `[in, out]`).
+struct Block {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+/// The native backend: all weights resident, ready at construction.
+pub struct NativeBackend {
+    cfg: NativeConfig,
+    meta: ModelMeta,
+    // image tower
+    patch_proj: Vec<f32>,    // [patch_dim, d_model]
+    patch_bias: Vec<f32>,    // [d_model]
+    img_pos: Vec<f32>,       // [n_patches, d_model]
+    img_content_proj: Vec<f32>, // [d_model, d_embed]
+    img_blocks: Vec<Block>,
+    // text tower
+    txt_embed: Vec<f32>,     // [vocab, d_model]
+    txt_pos: Vec<f32>,       // [seq_len, d_model]
+    txt_content_proj: Vec<f32>, // [d_model, d_embed]
+    txt_blocks: Vec<Block>,
+    // semantic projection
+    w_r: Vec<f32>,           // [patch_dim, d_embed]
+    codes: Vec<f32>,         // [n_concepts, patch_dim], values in [0, 1)
+    dirs: Vec<f32>,          // [n_concepts, d_embed]: (codes − 0.5) @ w_r
+}
+
+/// FNV-1a 64-bit: stable label → RNG-stream mapping (independent of tensor
+/// generation order, so adding tensors never perturbs existing weights).
+fn label_stream(label: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in label.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+fn normal_tensor(seed: u64, label: &str, n: usize, std: f32) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, label_stream(label));
+    (0..n).map(|_| rng.normal() * std).collect()
+}
+
+fn uniform_tensor(seed: u64, label: &str, n: usize) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed, label_stream(label));
+    (0..n).map(|_| rng.f32()).collect()
+}
+
+fn block_params(seed: u64, prefix: &str, d_model: usize, d_mlp: usize) -> Block {
+    let sd = (d_model as f32).powf(-0.5);
+    Block {
+        ln1_g: vec![1.0; d_model],
+        ln1_b: vec![0.0; d_model],
+        wq: normal_tensor(seed, &format!("{prefix}.wq"), d_model * d_model, sd),
+        wk: normal_tensor(seed, &format!("{prefix}.wk"), d_model * d_model, sd),
+        wv: normal_tensor(seed, &format!("{prefix}.wv"), d_model * d_model, sd),
+        wo: normal_tensor(seed, &format!("{prefix}.wo"), d_model * d_model, sd),
+        ln2_g: vec![1.0; d_model],
+        ln2_b: vec![0.0; d_model],
+        w1: normal_tensor(seed, &format!("{prefix}.w1"), d_model * d_mlp, sd),
+        b1: vec![0.0; d_mlp],
+        w2: normal_tensor(
+            seed,
+            &format!("{prefix}.w2"),
+            d_mlp * d_model,
+            (d_mlp as f32).powf(-0.5),
+        ),
+        b2: vec![0.0; d_model],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dense math helpers (naive but cache-ordered; the MEM is small enough —
+// d_model 128 — that this sustains ingestion-rate embedding on a host CPU)
+// ---------------------------------------------------------------------
+
+/// `out[t, j] += x[t, k] · w[k, j]` for row-major x `[t, din]`, w `[din, dout]`.
+fn matmul_acc(x: &[f32], w: &[f32], t: usize, din: usize, dout: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), t * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(out.len(), t * dout);
+    for r in 0..t {
+        let xr = &x[r * din..(r + 1) * din];
+        let or = &mut out[r * dout..(r + 1) * dout];
+        for (k, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[k * dout..(k + 1) * dout];
+            for (o, &wv) in or.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// LayerNorm one row (population variance, eps 1e-6), writing into `out`.
+fn layer_norm_row(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let mu = x.iter().sum::<f32>() / d as f32;
+    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+    let inv = 1.0 / (var + 1e-6).sqrt();
+    for i in 0..d {
+        out[i] = (x[i] - mu) * inv * g[i] + b[i];
+    }
+}
+
+/// GELU, tanh approximation (jax.nn.gelu(approximate=True)).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+impl NativeBackend {
+    pub fn new(cfg: NativeConfig) -> Self {
+        assert!(cfg.img_size % cfg.patch == 0, "patch must divide img_size");
+        assert!(cfg.d_model % cfg.n_heads == 0, "heads must divide d_model");
+        let (pd, dm, de) = (cfg.patch_dim(), cfg.d_model, cfg.d_embed);
+        let seed = cfg.seed;
+
+        let img_blocks = (0..cfg.n_blocks_img)
+            .map(|i| block_params(seed, &format!("img.block{i}"), dm, cfg.d_mlp))
+            .collect();
+        let txt_blocks = (0..cfg.n_blocks_txt)
+            .map(|i| block_params(seed, &format!("txt.block{i}"), dm, cfg.d_mlp))
+            .collect();
+
+        // w_r scaled so ||w_r^T (code − 0.5)|| ≈ 1 for uniform codes
+        // (per-coord var 1/12 ⇒ std = sqrt(12 / (patch_dim · d_embed)));
+        // same derivation as params.py.
+        let wr_std = (12.0 / (pd * de) as f32).sqrt();
+        let w_r = normal_tensor(seed, "sem.w_r", pd * de, wr_std);
+        let codes = uniform_tensor(seed, "sem.codes", cfg.n_concepts * pd);
+        let mut dirs = vec![0.0f32; cfg.n_concepts * de];
+        for c in 0..cfg.n_concepts {
+            let code = &codes[c * pd..(c + 1) * pd];
+            let out = &mut dirs[c * de..(c + 1) * de];
+            for (k, &cv) in code.iter().enumerate() {
+                let x = cv - 0.5;
+                let wr = &w_r[k * de..(k + 1) * de];
+                for (o, &wv) in out.iter_mut().zip(wr) {
+                    *o += x * wv;
+                }
+            }
+        }
+
+        let meta = ModelMeta {
+            img_size: cfg.img_size,
+            patch: cfg.patch,
+            d_embed: de,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            n_concepts: cfg.n_concepts,
+            concept_token_base: cfg.concept_token_base,
+            sim_rows: cfg.sim_rows,
+            scene_feat_dim: crate::features::FEAT_DIM,
+            sem_weight: cfg.sem_weight,
+            content_weight: cfg.content_weight,
+            aux_weight: cfg.aux_weight,
+        };
+
+        Self {
+            patch_proj: normal_tensor(
+                seed,
+                "img.patch_proj",
+                pd * dm,
+                (pd as f32).powf(-0.5),
+            ),
+            patch_bias: vec![0.0; dm],
+            img_pos: normal_tensor(seed, "img.pos", cfg.n_patches() * dm, 0.02),
+            img_content_proj: normal_tensor(
+                seed,
+                "img.content_proj",
+                dm * de,
+                (dm as f32).powf(-0.5),
+            ),
+            img_blocks,
+            txt_embed: normal_tensor(seed, "txt.embed", cfg.vocab * dm, 0.5),
+            txt_pos: normal_tensor(seed, "txt.pos", cfg.seq_len * dm, 0.02),
+            txt_content_proj: normal_tensor(
+                seed,
+                "txt.content_proj",
+                dm * de,
+                (dm as f32).powf(-0.5),
+            ),
+            txt_blocks,
+            w_r,
+            codes,
+            dirs,
+            meta,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &NativeConfig {
+        &self.cfg
+    }
+
+    /// One pre-LN transformer block over `x: [t, d_model]`, in place.
+    fn transformer_block(&self, x: &mut [f32], t: usize, blk: &Block) {
+        let d = self.cfg.d_model;
+        let heads = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        // --- attention sublayer ---
+        let mut xn = vec![0.0f32; t * d];
+        for r in 0..t {
+            layer_norm_row(
+                &x[r * d..(r + 1) * d],
+                &blk.ln1_g,
+                &blk.ln1_b,
+                &mut xn[r * d..(r + 1) * d],
+            );
+        }
+        let mut q = vec![0.0f32; t * d];
+        let mut k = vec![0.0f32; t * d];
+        let mut v = vec![0.0f32; t * d];
+        matmul_acc(&xn, &blk.wq, t, d, d, &mut q);
+        matmul_acc(&xn, &blk.wk, t, d, d, &mut k);
+        matmul_acc(&xn, &blk.wv, t, d, d, &mut v);
+
+        let mut attn = vec![0.0f32; t * d];
+        let mut logits = vec![0.0f32; t];
+        for h in 0..heads {
+            let off = h * dh;
+            for i in 0..t {
+                let qi = &q[i * d + off..i * d + off + dh];
+                for (j, l) in logits.iter_mut().enumerate() {
+                    *l = dot(qi, &k[j * d + off..j * d + off + dh]) * scale;
+                }
+                let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0f32;
+                for l in logits.iter_mut() {
+                    *l = (*l - m).exp();
+                    sum += *l;
+                }
+                let inv = 1.0 / sum;
+                let ai = &mut attn[i * d + off..i * d + off + dh];
+                for j in 0..t {
+                    let p = logits[j] * inv;
+                    let vj = &v[j * d + off..j * d + off + dh];
+                    for (a, &vv) in ai.iter_mut().zip(vj) {
+                        *a += p * vv;
+                    }
+                }
+            }
+        }
+        // residual: h = x + attn @ wo
+        let mut proj = vec![0.0f32; t * d];
+        matmul_acc(&attn, &blk.wo, t, d, d, &mut proj);
+        for (xv, pv) in x.iter_mut().zip(&proj) {
+            *xv += pv;
+        }
+
+        // --- MLP sublayer ---
+        let dm = self.cfg.d_mlp;
+        let mut z = vec![0.0f32; t * d];
+        for r in 0..t {
+            layer_norm_row(
+                &x[r * d..(r + 1) * d],
+                &blk.ln2_g,
+                &blk.ln2_b,
+                &mut z[r * d..(r + 1) * d],
+            );
+        }
+        let mut m1 = vec![0.0f32; t * dm];
+        matmul_acc(&z, &blk.w1, t, d, dm, &mut m1);
+        for r in 0..t {
+            for (mv, &bv) in m1[r * dm..(r + 1) * dm].iter_mut().zip(&blk.b1) {
+                *mv = gelu(*mv + bv);
+            }
+        }
+        let mut m2 = vec![0.0f32; t * d];
+        matmul_acc(&m1, &blk.w2, t, dm, d, &mut m2);
+        for r in 0..t {
+            for (i, (xv, &mv)) in x[r * d..(r + 1) * d]
+                .iter_mut()
+                .zip(&m2[r * d..(r + 1) * d])
+                .enumerate()
+            {
+                *xv += mv + blk.b2[i];
+            }
+        }
+    }
+
+    /// `(patch − 0.5) @ w_r`, accumulated into `out` with weight `scale`.
+    fn semantic_readout(&self, patch: &[f32], scale: f32, out: &mut [f32]) {
+        let de = self.cfg.d_embed;
+        for (k, &pv) in patch.iter().enumerate() {
+            let x = (pv - 0.5) * scale;
+            let wr = &self.w_r[k * de..(k + 1) * de];
+            for (o, &wv) in out.iter_mut().zip(wr) {
+                *o += x * wv;
+            }
+        }
+    }
+
+    /// Concept-count readout of a token window (model.py::_text_semantic):
+    /// sum of concept directions for each concept token present, counted
+    /// with multiplicity and normalized by the total count.
+    fn text_semantic(&self, tokens: &[i32], out: &mut [f32]) {
+        let base = self.cfg.concept_token_base as i32;
+        let top = base + self.cfg.n_concepts as i32;
+        let mut counts = vec![0.0f32; self.cfg.n_concepts];
+        let mut total = 0.0f32;
+        for &t in tokens {
+            if (base..top).contains(&t) {
+                counts[(t - base) as usize] += 1.0;
+                total += 1.0;
+            }
+        }
+        let inv = 1.0 / total.max(1.0);
+        let de = self.cfg.d_embed;
+        for (c, &n) in counts.iter().enumerate() {
+            if n == 0.0 {
+                continue;
+            }
+            let w = n * inv;
+            let u = &self.dirs[c * de..(c + 1) * de];
+            for (o, &uv) in out.iter_mut().zip(u) {
+                *o += w * uv;
+            }
+        }
+    }
+
+    /// Image tower over one frame (optionally with an aux-prompt window).
+    fn embed_one_image(&self, frame: &[f32], aux_tokens: Option<&[i32]>) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (s, p) = (cfg.img_size, cfg.patch);
+        let g = s / p;
+        let (t, pd, dm, de) = (cfg.n_patches(), cfg.patch_dim(), cfg.d_model, cfg.d_embed);
+
+        // patchify: [t, pd], row-major patches, row-major pixels per patch
+        let mut patches = vec![0.0f32; t * pd];
+        for gy in 0..g {
+            for gx in 0..g {
+                let pi = gy * g + gx;
+                for dy in 0..p {
+                    let src = ((gy * p + dy) * s + gx * p) * 3;
+                    let dst = pi * pd + dy * p * 3;
+                    patches[dst..dst + p * 3].copy_from_slice(&frame[src..src + p * 3]);
+                }
+            }
+        }
+
+        // semantic path: watermark readout of patch 0 (top-left) and patch
+        // g−1 (top-right), as in model.py::watermark_patches
+        let mut sem = vec![0.0f32; de];
+        self.semantic_readout(&patches[0..pd], 1.0, &mut sem);
+        let w1 = g - 1;
+        self.semantic_readout(&patches[w1 * pd..(w1 + 1) * pd], 1.0, &mut sem);
+        if let Some(toks) = aux_tokens {
+            let mut aux = vec![0.0f32; de];
+            self.text_semantic(toks, &mut aux);
+            for (s_, a) in sem.iter_mut().zip(&aux) {
+                *s_ += cfg.aux_weight * a;
+            }
+        }
+
+        // content path: transformer over projected patch embeddings
+        let mut x = vec![0.0f32; t * dm];
+        matmul_acc(&patches, &self.patch_proj, t, pd, dm, &mut x);
+        for r in 0..t {
+            for (i, xv) in x[r * dm..(r + 1) * dm].iter_mut().enumerate() {
+                *xv += self.patch_bias[i] + self.img_pos[r * dm + i];
+            }
+        }
+        for blk in &self.img_blocks {
+            self.transformer_block(&mut x, t, blk);
+        }
+        let mut pooled = vec![0.0f32; dm];
+        for r in 0..t {
+            for (pv, &xv) in pooled.iter_mut().zip(&x[r * dm..(r + 1) * dm]) {
+                *pv += xv;
+            }
+        }
+        let inv_t = 1.0 / t as f32;
+        for pv in pooled.iter_mut() {
+            *pv *= inv_t;
+        }
+        let mut content = vec![0.0f32; de];
+        matmul_acc(&pooled, &self.img_content_proj, 1, dm, de, &mut content);
+        l2_normalize(&mut content);
+
+        let mut out = vec![0.0f32; de];
+        for i in 0..de {
+            out[i] = cfg.sem_weight * sem[i] + cfg.content_weight * content[i];
+        }
+        l2_normalize(&mut out);
+        out
+    }
+
+    fn check_frames(&self, frames: &[f32], batch: usize) -> Result<usize> {
+        ensure!(batch > 0, "embed: batch must be positive");
+        let px = self.cfg.img_size * self.cfg.img_size * 3;
+        ensure!(
+            frames.len() == batch * px,
+            "embed: {} pixel values for batch {batch} (expected {})",
+            frames.len(),
+            batch * px
+        );
+        Ok(px)
+    }
+}
+
+impl EmbedBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn model(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn image_batches(&self) -> Vec<usize> {
+        // Mirror the AOT export set so the embed engine's chunking policy is
+        // backend-independent (the native tower has no real batch limit).
+        vec![1, 8, 32]
+    }
+
+    fn has_fused(&self, _batch: usize) -> bool {
+        true
+    }
+
+    fn warmup(&self, _entries: &[&str]) -> Result<()> {
+        Ok(()) // weights are resident from construction
+    }
+
+    fn embed_image(&self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>> {
+        let px = self.check_frames(frames, batch)?;
+        Ok((0..batch)
+            .map(|b| self.embed_one_image(&frames[b * px..(b + 1) * px], None))
+            .collect())
+    }
+
+    fn embed_text(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        ensure!(
+            tokens.len() == cfg.seq_len,
+            "embed_text: {} tokens, expected {}",
+            tokens.len(),
+            cfg.seq_len
+        );
+        let (t, dm, de) = (cfg.seq_len, cfg.d_model, cfg.d_embed);
+        let mut x = vec![0.0f32; t * dm];
+        for (r, &tok) in tokens.iter().enumerate() {
+            ensure!(
+                (0..cfg.vocab as i32).contains(&tok),
+                "embed_text: token id {tok} outside vocab {}",
+                cfg.vocab
+            );
+            let emb = &self.txt_embed[tok as usize * dm..(tok as usize + 1) * dm];
+            let pos = &self.txt_pos[r * dm..(r + 1) * dm];
+            for (i, xv) in x[r * dm..(r + 1) * dm].iter_mut().enumerate() {
+                *xv = emb[i] + pos[i];
+            }
+        }
+        for blk in &self.txt_blocks {
+            self.transformer_block(&mut x, t, blk);
+        }
+        let mut pooled = vec![0.0f32; dm];
+        for r in 0..t {
+            for (pv, &xv) in pooled.iter_mut().zip(&x[r * dm..(r + 1) * dm]) {
+                *pv += xv;
+            }
+        }
+        let inv_t = 1.0 / t as f32;
+        for pv in pooled.iter_mut() {
+            *pv *= inv_t;
+        }
+        let mut content = vec![0.0f32; de];
+        matmul_acc(&pooled, &self.txt_content_proj, 1, dm, de, &mut content);
+        l2_normalize(&mut content);
+
+        let mut sem = vec![0.0f32; de];
+        self.text_semantic(tokens, &mut sem);
+
+        let mut out = vec![0.0f32; de];
+        for i in 0..de {
+            out[i] = cfg.sem_weight * sem[i] + cfg.content_weight * content[i];
+        }
+        l2_normalize(&mut out);
+        Ok(out)
+    }
+
+    fn embed_fused(
+        &self,
+        frames: &[f32],
+        aux_tokens: &[i32],
+        batch: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let px = self.check_frames(frames, batch)?;
+        let seq = self.cfg.seq_len;
+        ensure!(
+            aux_tokens.len() == batch * seq,
+            "embed_fused: {} aux tokens for batch {batch} (expected {})",
+            aux_tokens.len(),
+            batch * seq
+        );
+        Ok((0..batch)
+            .map(|b| {
+                self.embed_one_image(
+                    &frames[b * px..(b + 1) * px],
+                    Some(&aux_tokens[b * seq..(b + 1) * seq]),
+                )
+            })
+            .collect())
+    }
+
+    fn scene_features(&self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>> {
+        let px = self.check_frames(frames, batch)?;
+        Ok((0..batch)
+            .map(|b| {
+                let f = Frame::from_data(
+                    self.cfg.img_size,
+                    frames[b * px..(b + 1) * px].to_vec(),
+                );
+                crate::features::frame_features(&f)
+            })
+            .collect())
+    }
+
+    fn similarity(
+        &self,
+        query: &[f32],
+        index: &[f32],
+        n_valid: usize,
+        tau: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &self.meta;
+        if query.len() != m.d_embed {
+            bail!("similarity: query dim {}", query.len());
+        }
+        if index.len() != m.sim_rows * m.d_embed {
+            bail!(
+                "similarity: index has {} values, expected {}",
+                index.len(),
+                m.sim_rows * m.d_embed
+            );
+        }
+        if n_valid > m.sim_rows {
+            bail!("similarity: n_valid {} > padded rows {}", n_valid, m.sim_rows);
+        }
+        let mut scores = vec![0.0f32; n_valid];
+        for (r, s) in scores.iter_mut().enumerate() {
+            *s = dot(query, &index[r * m.d_embed..(r + 1) * m.d_embed]);
+        }
+        let mut probs = vec![0.0f32; n_valid];
+        softmax_temp(&scores, tau, &mut probs);
+        Ok((scores, probs))
+    }
+
+    fn concept_codes(&self) -> Result<Vec<Vec<f32>>> {
+        let pd = self.cfg.patch_dim();
+        Ok(self.codes.chunks_exact(pd).map(|c| c.to_vec()).collect())
+    }
+
+    fn concept_dirs(&self) -> Result<Vec<Vec<f32>>> {
+        let de = self.cfg.d_embed;
+        Ok(self.dirs.chunks_exact(de).map(|c| c.to_vec()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::Tokenizer;
+    use crate::util::rng::Pcg64;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new(NativeConfig::default())
+    }
+
+    fn noisy_frame(seed: u64, size: usize) -> Frame {
+        let mut rng = Pcg64::seeded(seed);
+        let mut f = Frame::new(size);
+        for v in f.data_mut() {
+            *v = rng.f32();
+        }
+        f
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = backend();
+        let b = backend();
+        let f = noisy_frame(1, 64);
+        let ea = a.embed_image(f.data(), 1).unwrap();
+        let eb = b.embed_image(f.data(), 1).unwrap();
+        assert_eq!(ea, eb, "same seed must give bit-identical embeddings");
+    }
+
+    #[test]
+    fn embeddings_unit_norm() {
+        let be = backend();
+        let f = noisy_frame(2, 64);
+        let e = be.embed_image(f.data(), 1).unwrap();
+        let norm = e[0].iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-4, "norm {norm}");
+        let tok = Tokenizer::from_model(be.model());
+        let q = be.embed_text(&tok.tokenize("what happened near the stove")).unwrap();
+        let norm = q.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-4, "norm {norm}");
+    }
+
+    #[test]
+    fn batch_rows_match_single_frame_calls() {
+        let be = backend();
+        let frames: Vec<Frame> = (0..3).map(|i| noisy_frame(10 + i, 64)).collect();
+        let mut flat = Vec::new();
+        for f in &frames {
+            flat.extend_from_slice(f.data());
+        }
+        let batched = be.embed_image(&flat, 3).unwrap();
+        for (f, want) in frames.iter().zip(&batched) {
+            let one = be.embed_image(f.data(), 1).unwrap();
+            assert_eq!(&one[0], want);
+        }
+    }
+
+    #[test]
+    fn planted_concept_aligns_image_with_text() {
+        let be = backend();
+        let codes = be.concept_codes().unwrap();
+        let patch = be.model().patch;
+        let tok = Tokenizer::from_model(be.model());
+
+        let mut with_c3 = noisy_frame(21, 64);
+        with_c3.blend_block(0, 0, patch, &codes[3], 0.85);
+        let mut with_c9 = noisy_frame(22, 64);
+        with_c9.blend_block(0, 0, patch, &codes[9], 0.85);
+
+        let e3 = be.embed_image(with_c3.data(), 1).unwrap().remove(0);
+        let e9 = be.embed_image(with_c9.data(), 1).unwrap().remove(0);
+        let q = be
+            .embed_text(&tok.tokenize("what happened with concept03"))
+            .unwrap();
+        let (s3, s9) = (dot(&q, &e3), dot(&q, &e9));
+        assert!(
+            s3 > s9 + 0.2,
+            "query must align with the planted concept: match {s3} vs other {s9}"
+        );
+    }
+
+    #[test]
+    fn aux_prompt_sharpens_planted_concept() {
+        let be = backend();
+        let codes = be.concept_codes().unwrap();
+        let patch = be.model().patch;
+        let seq = be.model().seq_len;
+
+        let mut f = noisy_frame(31, 64);
+        f.blend_block(0, 0, patch, &codes[5], 0.85);
+        let mut aux = vec![0i32; seq];
+        aux[0] = (be.model().concept_token_base + 5) as i32;
+
+        let plain = be.embed_image(f.data(), 1).unwrap().remove(0);
+        let fused = be.embed_fused(f.data(), &aux, 1).unwrap().remove(0);
+        let dirs = be.concept_dirs().unwrap();
+        let mut u = dirs[5].clone();
+        l2_normalize(&mut u);
+        assert!(
+            dot(&fused, &u) > dot(&plain, &u),
+            "aux prompt should raise concept-5 alignment"
+        );
+    }
+
+    #[test]
+    fn similarity_matches_native_softmax() {
+        let be = backend();
+        let m = be.model();
+        let mut rng = Pcg64::seeded(41);
+        let n_valid = 300;
+        let mut index = vec![0.0f32; m.sim_rows * m.d_embed];
+        for r in 0..n_valid {
+            let row = &mut index[r * m.d_embed..(r + 1) * m.d_embed];
+            for x in row.iter_mut() {
+                *x = rng.normal();
+            }
+            l2_normalize(row);
+        }
+        let q = index[7 * m.d_embed..8 * m.d_embed].to_vec();
+        let (scores, probs) = be.similarity(&q, &index, n_valid, 0.1).unwrap();
+        assert_eq!(scores.len(), n_valid);
+        let mut want = vec![0.0f32; n_valid];
+        softmax_temp(&scores, 0.1, &mut want);
+        for (a, b) in probs.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        let argmax = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(argmax, 7, "exact-match row must dominate");
+    }
+
+    #[test]
+    fn scene_features_match_native_frontend() {
+        let be = backend();
+        let f = noisy_frame(51, 64);
+        let got = be.scene_features(f.data(), 1).unwrap();
+        let want = crate::features::frame_features(&f);
+        assert_eq!(got[0], want);
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let be = backend();
+        assert!(be.embed_image(&[0.0; 10], 1).is_err());
+        assert!(be.embed_text(&[0i32; 3]).is_err());
+        assert!(be.embed_text(&vec![9999i32; 16]).is_err());
+        let m = be.model();
+        let idx = vec![0.0f32; m.sim_rows * m.d_embed];
+        assert!(be.similarity(&vec![0.0; 3], &idx, 1, 0.1).is_err());
+        assert!(be
+            .similarity(&vec![0.0; m.d_embed], &idx, m.sim_rows + 1, 0.1)
+            .is_err());
+    }
+
+    #[test]
+    fn concept_side_data_consistent() {
+        let be = backend();
+        let m = be.model();
+        let codes = be.concept_codes().unwrap();
+        let dirs = be.concept_dirs().unwrap();
+        assert_eq!(codes.len(), m.n_concepts);
+        assert_eq!(dirs.len(), m.n_concepts);
+        assert_eq!(codes[0].len(), m.patch * m.patch * 3);
+        assert_eq!(dirs[0].len(), m.d_embed);
+        for row in &codes {
+            assert!(row.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        }
+        // the w_r scaling puts concept directions near unit norm
+        let mean_norm: f32 = dirs
+            .iter()
+            .map(|d| d.iter().map(|x| x * x).sum::<f32>().sqrt())
+            .sum::<f32>()
+            / dirs.len() as f32;
+        assert!(
+            (0.5..2.0).contains(&mean_norm),
+            "mean ||u_c|| = {mean_norm}, expected ≈ 1"
+        );
+    }
+}

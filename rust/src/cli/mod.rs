@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::backend::EmbedBackend;
 use crate::config::VenusConfig;
 use crate::util::stats::fmt_duration;
 use crate::video::workload::DatasetPreset;
@@ -58,19 +59,46 @@ fn load_config(args: &Args) -> Result<VenusConfig> {
 
 fn info(args: &[String]) -> Result<()> {
     let spec = ArgSpec::new("venus info")
-        .flag("artifacts", "artifact directory", Some("artifacts"));
+        .flag("artifacts", "artifact directory (pjrt builds only)", Some(""));
     let parsed = spec.parse(args)?;
-    let dir = parsed.get("artifacts").unwrap();
-    let rt = crate::runtime::Runtime::load(dir)?;
-    let m = rt.manifest();
-    println!("config hash : {}", m.config_hash);
-    println!("d_embed     : {}", m.model.d_embed);
-    println!("img size    : {}", m.model.img_size);
-    println!("concepts    : {}", m.model.n_concepts);
-    println!("entries     :");
-    for (name, e) in &m.entries {
-        println!("  {name:24} {}", e.file);
+
+    // explicit artifact inspection (PJRT backend)
+    if let Some(dir) = parsed.get("artifacts") {
+        if !dir.is_empty() {
+            #[cfg(feature = "pjrt")]
+            {
+                let rt = crate::runtime::Runtime::load(dir)?;
+                let m = rt.manifest();
+                println!("backend     : pjrt");
+                println!("config hash : {}", m.config_hash);
+                println!("d_embed     : {}", m.model.d_embed);
+                println!("img size    : {}", m.model.img_size);
+                println!("concepts    : {}", m.model.n_concepts);
+                println!("entries     :");
+                for (name, e) in &m.entries {
+                    println!("  {name:24} {}", e.file);
+                }
+                return Ok(());
+            }
+            #[cfg(not(feature = "pjrt"))]
+            anyhow::bail!(
+                "--artifacts requires a build with `--features pjrt` \
+                 (this build embeds with the native backend)"
+            );
+        }
     }
+
+    // default: whatever backend this process would serve with
+    let be = crate::backend::load_default()?;
+    let m = be.model();
+    println!("backend     : {}", be.name());
+    println!("d_embed     : {}", m.d_embed);
+    println!("img size    : {}", m.img_size);
+    println!("seq len     : {}", m.seq_len);
+    println!("vocab       : {}", m.vocab);
+    println!("concepts    : {}", m.n_concepts);
+    println!("sim rows    : {}", m.sim_rows);
+    println!("batches     : {:?}", be.image_batches());
     Ok(())
 }
 
@@ -135,7 +163,7 @@ fn serve(args: &[String]) -> Result<()> {
     let case = crate::eval::prepare_case(preset, &cfg, n_queries, seed)?;
     eprintln!(
         "memory ready: {} index vectors over {} frames",
-        case.memory.lock().unwrap().len(),
+        case.memory.read().unwrap().len(),
         case.ingest_stats.frames
     );
     let service = crate::server::Service::start(&cfg, Arc::clone(&case.memory), seed)?;

@@ -6,10 +6,11 @@ pub mod query;
 
 pub use query::{EdgeTimings, QueryEngine, QueryOutcome};
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
 
+use crate::backend::{self, EmbedBackend};
 use crate::cloud::VlmClient;
 use crate::config::VenusConfig;
 use crate::embed::EmbedEngine;
@@ -17,7 +18,6 @@ use crate::ingest::{IngestStats, Pipeline};
 use crate::memory::raw::RawStore;
 use crate::memory::Hierarchy;
 use crate::net::{Link, Payload};
-use crate::runtime::Runtime;
 use crate::video::frame::Frame;
 use crate::video::synth::VideoSynth;
 
@@ -41,7 +41,7 @@ impl LatencyBreakdown {
 /// A fully-assembled Venus instance (single edge node).
 pub struct Venus {
     pub cfg: VenusConfig,
-    pub memory: Arc<Mutex<Hierarchy>>,
+    pub memory: Arc<RwLock<Hierarchy>>,
     query: QueryEngine,
     pub link: Link,
     pub vlm: VlmClient,
@@ -49,16 +49,16 @@ pub struct Venus {
 
 impl Venus {
     /// Build from config + a raw-layer backend; loads two independent
-    /// runtimes (ingestion engine is consumed by the pipeline thread;
-    /// the query engine lives here).
+    /// embed backends (ingestion engine is consumed by the pipeline
+    /// thread; the query engine lives here).
     pub fn new(cfg: VenusConfig, raw: Box<dyn RawStore>, seed: u64) -> Result<Self> {
-        let d_embed = {
-            let rt = Runtime::load_default()?;
-            rt.model().d_embed
-        };
-        let memory = Arc::new(Mutex::new(Hierarchy::new(&cfg.memory, d_embed, raw)?));
+        // one backend serves both the d_embed probe and the query engine —
+        // native construction generates the full weight set, don't do it twice
+        let be = backend::load_default()?;
+        let d_embed = be.model().d_embed;
+        let memory = Arc::new(RwLock::new(Hierarchy::new(&cfg.memory, d_embed, raw)?));
         let query_engine = QueryEngine::new(
-            EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+            EmbedEngine::new(be, cfg.ingest.aux_models)?,
             Arc::clone(&memory),
             cfg.retrieval.clone(),
             seed,
@@ -71,13 +71,14 @@ impl Venus {
     /// Ingest an entire synthetic stream (offline/catch-up mode: frames
     /// processed as fast as the pipeline allows).  Returns pipeline stats.
     pub fn ingest_stream(&self, synth: &VideoSynth, upto: u64) -> Result<IngestStats> {
-        let engine = EmbedEngine::new(Runtime::load_default()?, self.cfg.ingest.aux_models)?;
+        let engine =
+            EmbedEngine::new(backend::load_default()?, self.cfg.ingest.aux_models)?;
         let mut pipe = Pipeline::new(
             &self.cfg.ingest,
             synth.config().fps,
             engine,
             Arc::clone(&self.memory),
-        );
+        )?;
         let n = upto.min(synth.total_frames());
         for i in 0..n {
             let frame = synth.frame(i);
@@ -107,7 +108,7 @@ impl Venus {
     /// Fetch the selected frames from the raw layer (the payload bytes
     /// that would be shipped).
     pub fn fetch_frames(&self, ids: &[u64]) -> Vec<Frame> {
-        let mem = self.memory.lock().unwrap();
+        let mem = self.memory.read().unwrap();
         ids.iter().map(|&id| mem.fetch_frame(id)).collect()
     }
 }

@@ -3,8 +3,18 @@
 //! sampling-based retrieval or AKR.  All timings here are *measured*
 //! wall-clock on the local host (the honest edge-compute numbers that
 //! anchor the paper-scale simulation).
+//!
+//! Locking: the shared memory is an `RwLock` — the query path is
+//! read-only, so concurrent query workers score/select in parallel and
+//! ingestion (the lone writer) is only excluded for the narrow windows
+//! below.  Query embedding runs before any lock; score+select share ONE
+//! read guard (selection must see the same index the scores were computed
+//! over, or `scores.len() != memory.len()` races with inserts); the
+//! raw-frame fetch takes a fresh guard, since selected frames are already
+//! archived and the raw layer is append-only — ingestion can interleave
+//! between the two.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -50,10 +60,10 @@ pub enum RetrievalMode {
     TopK(usize),
 }
 
-/// The query engine: owns a PJRT embed engine + shares the memory.
+/// The query engine: owns an embed engine + shares the memory.
 pub struct QueryEngine {
     engine: EmbedEngine,
-    memory: Arc<Mutex<Hierarchy>>,
+    memory: Arc<RwLock<Hierarchy>>,
     cfg: RetrievalConfig,
     rng: Pcg64,
     scores_buf: Vec<f32>,
@@ -62,7 +72,7 @@ pub struct QueryEngine {
 impl QueryEngine {
     pub fn new(
         engine: EmbedEngine,
-        memory: Arc<Mutex<Hierarchy>>,
+        memory: Arc<RwLock<Hierarchy>>,
         cfg: RetrievalConfig,
         seed: u64,
     ) -> Self {
@@ -101,48 +111,58 @@ impl QueryEngine {
     pub fn retrieve_with(&mut self, text: &str, mode: RetrievalMode) -> Result<QueryOutcome> {
         let mut t = EdgeTimings::default();
 
+        // query embedding: pure compute, no lock held
         let t0 = Instant::now();
         let qvec = self.engine.embed_query(text)?;
         t.embed_query_s = t0.elapsed().as_secs_f64();
 
-        let mem = self.memory.lock().unwrap();
-        let t0 = Instant::now();
-        mem.score_all(&qvec, &mut self.scores_buf);
-        t.search_s = t0.elapsed().as_secs_f64();
+        // score + select under ONE read guard: the sampler needs scores
+        // consistent with the index it expands clusters from
+        let (selection, draws) = {
+            let mem = self.memory.read().unwrap();
+            let t0 = Instant::now();
+            mem.score_all(&qvec, &mut self.scores_buf);
+            t.search_s = t0.elapsed().as_secs_f64();
 
-        let t0 = Instant::now();
-        // bound the sampling distribution to the scored shortlist so the
-        // Eq. 5 trade-off is invariant to how long the stream has run
-        let masked =
-            crate::retrieval::shortlist_mask(&self.scores_buf, self.cfg.shortlist);
-        let (selection, draws) = match mode {
-            RetrievalMode::Akr => {
-                let out = akr_retrieve(
-                    &mem,
-                    &masked,
-                    self.cfg.tau,
-                    self.cfg.theta,
-                    self.cfg.beta,
-                    self.cfg.n_max,
-                    &mut self.rng,
-                );
-                (out.selection, out.draws)
-            }
-            RetrievalMode::FixedSampling(n) => {
-                let sel = sample_retrieve(&mem, &masked, self.cfg.tau, n, &mut self.rng);
-                (sel, n)
-            }
-            RetrievalMode::TopK(k) => (topk_retrieve(&mem, &self.scores_buf, k), k),
+            let t0 = Instant::now();
+            // bound the sampling distribution to the scored shortlist so the
+            // Eq. 5 trade-off is invariant to how long the stream has run
+            let masked =
+                crate::retrieval::shortlist_mask(&self.scores_buf, self.cfg.shortlist);
+            let (selection, draws) = match mode {
+                RetrievalMode::Akr => {
+                    let out = akr_retrieve(
+                        &mem,
+                        &masked,
+                        self.cfg.tau,
+                        self.cfg.theta,
+                        self.cfg.beta,
+                        self.cfg.n_max,
+                        &mut self.rng,
+                    );
+                    (out.selection, out.draws)
+                }
+                RetrievalMode::FixedSampling(n) => {
+                    let sel = sample_retrieve(&mem, &masked, self.cfg.tau, n, &mut self.rng);
+                    (sel, n)
+                }
+                RetrievalMode::TopK(k) => (topk_retrieve(&mem, &self.scores_buf, k), k),
+            };
+            t.select_s = t0.elapsed().as_secs_f64();
+            (selection, draws)
         };
-        t.select_s = t0.elapsed().as_secs_f64();
 
-        // fetch (decode) the selected raw frames — part of the edge path
+        // fetch (decode) the selected raw frames — part of the edge path.
+        // Fresh guard: the ids are already archived, so the ingestion
+        // writer may interleave between selection and fetch.
         let t0 = Instant::now();
-        for &f in &selection.frames {
-            std::hint::black_box(mem.fetch_frame(f));
+        {
+            let mem = self.memory.read().unwrap();
+            for &f in &selection.frames {
+                std::hint::black_box(mem.fetch_frame(f));
+            }
         }
         t.fetch_s = t0.elapsed().as_secs_f64();
-        drop(mem);
 
         Ok(QueryOutcome { selection, timings: t, draws })
     }
@@ -150,7 +170,7 @@ impl QueryEngine {
     /// Raw similarity scores for the given query (diagnostics / benches).
     pub fn score_query(&mut self, text: &str) -> Result<Vec<f32>> {
         let qvec = self.engine.embed_query(text)?;
-        let mem = self.memory.lock().unwrap();
+        let mem = self.memory.read().unwrap();
         let mut scores = Vec::new();
         mem.score_all(&qvec, &mut scores);
         Ok(scores)
@@ -159,5 +179,83 @@ impl QueryEngine {
     /// Measured mean text-embedding latency so far.
     pub fn measured_text_embed_s(&self) -> f64 {
         self.engine.measured_text_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MemoryConfig;
+    use crate::memory::{ClusterRecord, InMemoryRaw};
+    use crate::video::frame::Frame;
+
+    /// Ingest-while-query smoke test for the RwLock'd memory: a writer
+    /// thread keeps archiving + inserting while this thread runs the full
+    /// query stage.  Every retrieval must succeed, reference only archived
+    /// frames, and never deadlock.
+    #[test]
+    fn queries_run_while_writer_inserts() {
+        let engine = EmbedEngine::default_backend(false).unwrap();
+        let d = engine.d_embed();
+        let memory = Arc::new(RwLock::new(
+            Hierarchy::new(&MemoryConfig::default(), d, Box::new(InMemoryRaw::new(8)))
+                .unwrap(),
+        ));
+
+        let writer_mem = Arc::clone(&memory);
+        let writer = std::thread::spawn(move || {
+            let mut rng = Pcg64::seeded(7);
+            for c in 0..60u64 {
+                let mut mem = writer_mem.write().unwrap();
+                for f in c * 4..(c + 1) * 4 {
+                    mem.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+                }
+                let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                crate::util::l2_normalize(&mut v);
+                mem.insert(
+                    &v,
+                    ClusterRecord {
+                        scene_id: c as usize,
+                        centroid_frame: c * 4,
+                        members: (c * 4..(c + 1) * 4).collect(),
+                    },
+                )
+                .unwrap();
+                drop(mem);
+                std::thread::yield_now();
+            }
+        });
+
+        let mut qe = QueryEngine::new(
+            EmbedEngine::default_backend(false).unwrap(),
+            Arc::clone(&memory),
+            RetrievalConfig::default(),
+            3,
+        );
+        for i in 0..20 {
+            let mode = if i % 2 == 0 {
+                RetrievalMode::Akr
+            } else {
+                RetrievalMode::FixedSampling(4)
+            };
+            let out = qe
+                .retrieve_with("what happened with concept01", mode)
+                .unwrap();
+            let archived = memory.read().unwrap().frames_ingested();
+            assert!(
+                out.selection.frames.iter().all(|&f| f < archived),
+                "selection referenced an unarchived frame"
+            );
+        }
+        writer.join().unwrap();
+        memory.read().unwrap().check_invariants().unwrap();
+        // with the writer drained, the index is fully visible to queries
+        let out = qe
+            .retrieve_with("what happened with concept01", RetrievalMode::FixedSampling(8))
+            .unwrap();
+        assert!(
+            !out.selection.frames.is_empty(),
+            "query after ingest must select from the 60-cluster index"
+        );
     }
 }

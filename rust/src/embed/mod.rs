@@ -1,10 +1,11 @@
-//! Embedding engine: the bridge between L3 and the AOT-compiled MEM.
+//! Embedding engine: the bridge between L3 and the MEM compute backend.
 //!
-//! Owns the PJRT [`Runtime`], the tokenizer, and the aux-model bank, and
-//! exposes the two operations the coordinator needs:
+//! Owns a pluggable [`EmbedBackend`] (native pure-Rust by default; PJRT
+//! artifacts behind the `pjrt` feature), the tokenizer, and the aux-model
+//! bank, and exposes the two operations the coordinator needs:
 //!   * `embed_index_frames` — ingestion path: batch of indexed frames
 //!     (+ aux prompts, Eq. 2–3) → unit-norm vectors; pads the tail batch
-//!     to the nearest exported artifact batch size;
+//!     to the nearest served batch size;
 //!   * `embed_query` — query path: text → unit-norm vector.
 //!
 //! The engine also tracks wall-clock embed timings so the §Perf report
@@ -20,13 +21,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::Runtime;
+use crate::backend::EmbedBackend;
 use crate::util::stats::Samples;
 use crate::video::frame::Frame;
 
-/// Embedding engine over the artifact runtime.
+/// Embedding engine over a compute backend.
 pub struct EmbedEngine {
-    rt: Runtime,
+    backend: Box<dyn EmbedBackend>,
     tok: Tokenizer,
     aux: Option<AuxModels>,
     batches: Vec<usize>,
@@ -36,20 +37,20 @@ pub struct EmbedEngine {
 }
 
 impl EmbedEngine {
-    /// Build from a loaded runtime; `use_aux` enables the aux-model bank.
-    pub fn new(rt: Runtime, use_aux: bool) -> Result<Self> {
-        let tok = Tokenizer::from_model(rt.model());
+    /// Build from a backend; `use_aux` enables the aux-model bank.
+    pub fn new(backend: Box<dyn EmbedBackend>, use_aux: bool) -> Result<Self> {
+        let tok = Tokenizer::from_model(backend.model());
         let aux = if use_aux {
-            let codes = rt.concept_codes()?;
-            let patch = rt.model().patch;
+            let codes = backend.concept_codes()?;
+            let patch = backend.model().patch;
             Some(AuxModels::new(codes, patch))
         } else {
             None
         };
-        let batches = rt.manifest().image_batches();
-        anyhow::ensure!(!batches.is_empty(), "no embed_image artifacts");
+        let batches = backend.image_batches();
+        anyhow::ensure!(!batches.is_empty(), "backend serves no image batches");
         Ok(Self {
-            rt,
+            backend,
             tok,
             aux,
             batches,
@@ -58,27 +59,33 @@ impl EmbedEngine {
         })
     }
 
-    pub fn runtime(&self) -> &Runtime {
-        &self.rt
+    /// Convenience: build over the process-default backend
+    /// (see [`crate::backend::load_default`]).
+    pub fn default_backend(use_aux: bool) -> Result<Self> {
+        Self::new(crate::backend::load_default()?, use_aux)
     }
 
-    /// Eagerly compile every entry this engine will execute (ingestion
-    /// batches + text tower).  Serving systems precompile before the
-    /// stream starts; without this, the first partition pays seconds of
-    /// XLA compilation on the hot path.
+    pub fn backend(&self) -> &dyn EmbedBackend {
+        self.backend.as_ref()
+    }
+
+    /// Eagerly prepare every entry this engine will execute (ingestion
+    /// batches + text tower).  Serving systems warm up before the stream
+    /// starts; on AOT backends the first partition would otherwise pay
+    /// seconds of XLA compilation on the hot path (the native backend is
+    /// ready at construction and returns immediately).
     pub fn warmup(&self) -> Result<()> {
         let mut names: Vec<String> = Vec::new();
         for &b in &self.batches {
-            let fused = format!("embed_fused_b{b}");
-            if self.aux.is_some() && self.rt.manifest().entries.contains_key(&fused) {
-                names.push(fused);
+            if self.aux.is_some() && self.backend.has_fused(b) {
+                names.push(format!("embed_fused_b{b}"));
             } else {
                 names.push(format!("embed_image_b{b}"));
             }
         }
         names.push("embed_text_b1".to_string());
         let refs: Vec<&str> = names.iter().map(String::as_str).collect();
-        self.rt.warmup(&refs)
+        self.backend.warmup(&refs)
     }
 
     pub fn tokenizer(&self) -> &Tokenizer {
@@ -86,7 +93,7 @@ impl EmbedEngine {
     }
 
     pub fn d_embed(&self) -> usize {
-        self.rt.model().d_embed
+        self.backend.model().d_embed
     }
 
     pub fn aux_enabled(&self) -> bool {
@@ -98,7 +105,7 @@ impl EmbedEngine {
     /// on the CPU PJRT backend is 1.06 ms at b8 vs 1.35 ms at b32
     /// (§Perf — XLA's CPU matmul tiles saturate by b8, larger batches
     /// only grow the working set past L2).  Tail chunks use the smallest
-    /// artifact that fits.
+    /// served batch that fits.
     fn pick_batch(&self, n: usize) -> usize {
         const PREFERRED: usize = 8;
         if n >= PREFERRED && self.batches.contains(&PREFERRED) {
@@ -112,13 +119,14 @@ impl EmbedEngine {
         *self.batches.last().unwrap()
     }
 
-    /// Embed a slice of frames (ingestion path).  Splits into artifact-
+    /// Embed a slice of frames (ingestion path).  Splits into backend-
     /// sized chunks, padding the tail with zero frames that are dropped
     /// from the result.  With aux models enabled, per-frame detections are
-    /// folded in through the fused artifact.
+    /// folded in through the fused entry point.
     pub fn embed_index_frames(&mut self, frames: &[&Frame]) -> Result<Vec<Vec<f32>>> {
-        let m = self.rt.model();
+        let m = self.backend.model();
         let px = m.img_size * m.img_size * 3;
+        let seq = m.seq_len;
         let mut out = Vec::with_capacity(frames.len());
         let mut i = 0;
         while i < frames.len() {
@@ -134,23 +142,21 @@ impl EmbedEngine {
 
             let t0 = Instant::now();
             let embs = if let Some(aux) = &self.aux {
-                let seq = m.seq_len;
                 let mut tokens = vec![0i32; b * seq];
                 for (j, f) in chunk.iter().enumerate() {
                     let concepts = aux.detect_concepts(f);
                     let prompt = self.tok.aux_prompt(&concepts);
                     tokens[j * seq..(j + 1) * seq].copy_from_slice(&prompt);
                 }
-                // the fused artifact exists for batch sizes in `fused`
-                // exports; fall back to image-only when absent
-                let fused_name = format!("embed_fused_b{b}");
-                if self.rt.manifest().entries.contains_key(&fused_name) {
-                    self.rt.embed_fused(&pixels, &tokens, b)?
+                // the fused entry exists per batch size on AOT backends;
+                // fall back to image-only when absent
+                if self.backend.has_fused(b) {
+                    self.backend.embed_fused(&pixels, &tokens, b)?
                 } else {
-                    self.rt.embed_image(&pixels, b)?
+                    self.backend.embed_image(&pixels, b)?
                 }
             } else {
-                self.rt.embed_image(&pixels, b)?
+                self.backend.embed_image(&pixels, b)?
             };
             self.image_times.push_duration(t0.elapsed());
 
@@ -164,7 +170,7 @@ impl EmbedEngine {
     pub fn embed_query(&mut self, text: &str) -> Result<Vec<f32>> {
         let tokens = self.tok.tokenize(text);
         let t0 = Instant::now();
-        let emb = self.rt.embed_text(&tokens)?;
+        let emb = self.backend.embed_text(&tokens)?;
         self.text_times.push_duration(t0.elapsed());
         Ok(emb)
     }

@@ -7,7 +7,7 @@
 //!   [base, base+C)                 concept tokens
 //!   [base+C, vocab)                FNV-1a-hashed word ids
 
-use crate::runtime::ModelMeta;
+use crate::backend::ModelMeta;
 
 const FNV_OFFSET: u32 = 0x811C_9DC5;
 const FNV_PRIME: u32 = 0x0100_0193;

@@ -2,16 +2,17 @@
 //! method's reasoning accuracy against the shared VLM answer model.
 //!
 //! One [`VideoCase`] = one synthetic clip, fully ingested through the real
-//! Venus pipeline (PJRT embeddings in the memory index), plus its query
-//! set with ground truth.  Baselines select over the same clip via the
-//! frame-score oracle; Venus retrieves from its memory.  All methods are
-//! judged by the SAME answer model, so accuracy differences come from
+//! Venus pipeline (backend MEM embeddings in the memory index), plus its
+//! query set with ground truth.  Baselines select over the same clip via
+//! the frame-score oracle; Venus retrieves from its memory.  All methods
+//! are judged by the SAME answer model, so accuracy differences come from
 //! selection behavior only.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
 
+use crate::backend::{self, EmbedBackend};
 use crate::baselines::{self, frame_scores, Method, SelectionContext};
 use crate::cloud::{VlmClient, VlmPersonality};
 use crate::config::{CloudConfig, VenusConfig};
@@ -19,25 +20,24 @@ use crate::coordinator::query::{QueryEngine, RetrievalMode};
 use crate::embed::EmbedEngine;
 use crate::ingest::{IngestStats, Pipeline};
 use crate::memory::{Hierarchy, SynthBackedRaw};
-use crate::runtime::Runtime;
 use crate::video::synth::{SynthConfig, VideoSynth};
 use crate::video::workload::{DatasetPreset, Query, WorkloadGen};
 
 /// A prepared evaluation case: clip + ingested memory + queries.
 pub struct VideoCase {
     pub synth: Arc<VideoSynth>,
-    pub memory: Arc<Mutex<Hierarchy>>,
+    pub memory: Arc<RwLock<Hierarchy>>,
     pub queries: Vec<Query>,
     pub ingest_stats: IngestStats,
     pub preset: DatasetPreset,
 }
 
-/// Build the synthetic stream for a preset (codes from the artifacts so
-/// the MEM can read the watermarks).
+/// Build the synthetic stream for a preset (codes from the embed backend
+/// so the MEM can read the watermarks).
 pub fn build_synth(preset: DatasetPreset, seed: u64) -> Result<Arc<VideoSynth>> {
-    let rt = Runtime::load_default()?;
-    let codes = rt.concept_codes()?;
-    let patch = rt.model().patch;
+    let be = backend::load_default()?;
+    let codes = be.concept_codes()?;
+    let patch = be.model().patch;
     let (lo, hi) = preset.scene_len_s();
     Ok(Arc::new(VideoSynth::new(
         SynthConfig {
@@ -59,15 +59,17 @@ pub fn prepare_case(
     seed: u64,
 ) -> Result<VideoCase> {
     let synth = build_synth(preset, seed)?;
-    let rt = Runtime::load_default()?;
-    let d_embed = rt.model().d_embed;
-    let memory = Arc::new(Mutex::new(Hierarchy::new(
+    // one backend for both the d_embed probe and the ingestion engine
+    let be = backend::load_default()?;
+    let d_embed = be.model().d_embed;
+    let memory = Arc::new(RwLock::new(Hierarchy::new(
         &cfg.memory,
         d_embed,
         Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
     )?));
-    let engine = EmbedEngine::new(rt, cfg.ingest.aux_models)?;
-    let mut pipe = Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory));
+    let engine = EmbedEngine::new(be, cfg.ingest.aux_models)?;
+    let mut pipe =
+        Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory))?;
     for i in 0..synth.total_frames() {
         pipe.push_frame(i, &synth.frame(i))?;
     }
@@ -165,7 +167,7 @@ pub fn eval_venus(
     let cloud_cfg = CloudConfig { vlm: personality.name().into(), ..Default::default() };
     let mut vlm = VlmClient::new(cloud_cfg, seed);
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+        EmbedEngine::new(backend::load_default()?, cfg.ingest.aux_models)?,
         Arc::clone(&case.memory),
         cfg.retrieval.clone(),
         seed,
@@ -199,7 +201,7 @@ pub fn measure_venus_edge_latency(
     seed: u64,
 ) -> Result<f64> {
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+        EmbedEngine::new(backend::load_default()?, cfg.ingest.aux_models)?,
         Arc::clone(&case.memory),
         cfg.retrieval.clone(),
         seed,

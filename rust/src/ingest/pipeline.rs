@@ -5,16 +5,21 @@
 //!   2. computes Eq. 1 features and runs scene segmentation,
 //!   3. clusters frames incrementally within the open partition,
 //!   4. hands completed partitions to a dedicated *embed thread* that
-//!      owns the PJRT engine, batches centroid frames through the MEM,
+//!      owns the embed engine, batches centroid frames through the MEM,
 //!      and inserts indexed vectors into the hierarchical memory.
 //!
 //! The partition channel is bounded: if embedding falls behind the
 //! stream, `push_frame` blocks — the backpressure the paper's challenge ①
 //! describes.  Because only sparse centroids are embedded, the pipeline
 //! sustains far higher FPS than frame-wise embedding (Fig. 4 vs Venus).
+//!
+//! The shared memory is an `RwLock`: this pipeline is the only writer
+//! (frame archival + index inserts); the query path takes read locks, so
+//! concurrent queries never serialize against each other and only overlap
+//! writers for the narrow insert/archive critical sections.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -48,9 +53,10 @@ enum WorkItem {
     Partition { scene_id: usize, clusters: Vec<Cluster> },
 }
 
-/// EmbedEngine wraps PJRT raw pointers and is not auto-Send; we move it
+/// EmbedEngine may wrap PJRT raw pointers and is not auto-Send; we move it
 /// into exactly one embed thread and never alias it.  The PJRT CPU client
-/// is safe to drive from the single owning thread.
+/// is safe to drive from the single owning thread (the native backend is
+/// plain data and trivially safe).
 struct SendEngine(EmbedEngine);
 unsafe impl Send for SendEngine {}
 
@@ -64,7 +70,7 @@ struct EmbedWorkerOut {
 /// The streaming ingestion pipeline.
 pub struct Pipeline {
     cfg: IngestConfig,
-    memory: Arc<Mutex<Hierarchy>>,
+    memory: Arc<RwLock<Hierarchy>>,
     tx: Option<SyncSender<WorkItem>>,
     worker: Option<JoinHandle<Result<EmbedWorkerOut>>>,
     seg: SceneSegmenter,
@@ -77,21 +83,28 @@ pub struct Pipeline {
 impl Pipeline {
     /// `engine` is consumed by the embed thread; `memory` is shared with
     /// the query path.
+    ///
+    /// Fallible: backend warm-up runs here so a broken backend (missing /
+    /// mismatched artifacts, corrupt entry) surfaces at construction with
+    /// context, not as a confusing mid-stream embed error after frames are
+    /// already flowing.
     pub fn new(
         cfg: &IngestConfig,
         fps: f64,
         engine: EmbedEngine,
-        memory: Arc<Mutex<Hierarchy>>,
-    ) -> Self {
+        memory: Arc<RwLock<Hierarchy>>,
+    ) -> Result<Self> {
         // precompile the embed entries so the first partition doesn't pay
-        // XLA compilation latency on the streaming path
-        let _ = engine.warmup();
+        // backend compilation latency on the streaming path
+        engine
+            .warmup()
+            .context("embed backend warm-up failed; refusing to start the pipeline")?;
         let (tx, rx) = sync_channel::<WorkItem>(cfg.queue_capacity);
         let mem2 = Arc::clone(&memory);
         let send_engine = SendEngine(engine);
         let worker =
             std::thread::spawn(move || embed_worker(send_engine, rx, mem2));
-        Self {
+        Ok(Self {
             cfg: cfg.clone(),
             memory,
             tx: Some(tx),
@@ -101,12 +114,12 @@ impl Pipeline {
             frames: 0,
             partitions: 0,
             started: Instant::now(),
-        }
+        })
     }
 
     /// Feed the next captured frame (global ids must be dense ascending).
     pub fn push_frame(&mut self, id: u64, frame: &Frame) -> Result<()> {
-        self.memory.lock().unwrap().archive_frame(id, frame);
+        self.memory.write().unwrap().archive_frame(id, frame);
         let feat = frame_features(frame);
         if let Some(part) = self.seg.push_features(feat) {
             let done = std::mem::replace(
@@ -171,7 +184,7 @@ impl Pipeline {
 fn embed_worker(
     engine: SendEngine,
     rx: Receiver<WorkItem>,
-    memory: Arc<Mutex<Hierarchy>>,
+    memory: Arc<RwLock<Hierarchy>>,
 ) -> Result<EmbedWorkerOut> {
     let mut engine = engine.0;
     let mut clusters = 0usize;
@@ -182,9 +195,11 @@ fn embed_worker(
         }
         clusters += parts.len();
         let refs: Vec<&Frame> = parts.iter().map(|c| &c.centroid).collect();
+        // embed OUTSIDE the lock — this is the slow stage; queries keep
+        // reading the index while the MEM runs
         let embs = engine.embed_index_frames(&refs)?;
         embedded += embs.len();
-        let mut mem = memory.lock().unwrap();
+        let mut mem = memory.write().unwrap();
         for (c, emb) in parts.iter().zip(embs) {
             mem.insert(
                 &emb,
@@ -202,4 +217,112 @@ fn embed_worker(
         batches: engine.image_times.len(),
         mean_batch_s: engine.measured_image_batch_s(),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{EmbedBackend, ModelMeta};
+    use crate::config::MemoryConfig;
+    use crate::memory::InMemoryRaw;
+
+    /// A backend whose warm-up fails — stands in for a broken artifact set.
+    struct BrokenBackend(ModelMeta);
+
+    impl BrokenBackend {
+        fn boxed() -> Box<dyn EmbedBackend> {
+            Box::new(Self(ModelMeta {
+                img_size: 16,
+                patch: 8,
+                d_embed: 8,
+                seq_len: 16,
+                vocab: 512,
+                n_concepts: 4,
+                concept_token_base: 2,
+                sim_rows: 64,
+                scene_feat_dim: 64,
+                sem_weight: 4.0,
+                content_weight: 1.0,
+                aux_weight: 0.5,
+            }))
+        }
+    }
+
+    impl EmbedBackend for BrokenBackend {
+        fn name(&self) -> &'static str {
+            "broken"
+        }
+        fn model(&self) -> &ModelMeta {
+            &self.0
+        }
+        fn image_batches(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn has_fused(&self, _batch: usize) -> bool {
+            false
+        }
+        fn warmup(&self, _entries: &[&str]) -> Result<()> {
+            anyhow::bail!("artifact 'embed_image_b1' is corrupt")
+        }
+        fn embed_image(&self, _frames: &[f32], _batch: usize) -> Result<Vec<Vec<f32>>> {
+            anyhow::bail!("unreachable in this test")
+        }
+        fn embed_text(&self, _tokens: &[i32]) -> Result<Vec<f32>> {
+            anyhow::bail!("unreachable in this test")
+        }
+        fn embed_fused(
+            &self,
+            _frames: &[f32],
+            _aux: &[i32],
+            _batch: usize,
+        ) -> Result<Vec<Vec<f32>>> {
+            anyhow::bail!("unreachable in this test")
+        }
+        fn scene_features(&self, _frames: &[f32], _batch: usize) -> Result<Vec<Vec<f32>>> {
+            anyhow::bail!("unreachable in this test")
+        }
+        fn similarity(
+            &self,
+            _q: &[f32],
+            _i: &[f32],
+            _n: usize,
+            _tau: f32,
+        ) -> Result<(Vec<f32>, Vec<f32>)> {
+            anyhow::bail!("unreachable in this test")
+        }
+        fn concept_codes(&self) -> Result<Vec<Vec<f32>>> {
+            Ok(vec![vec![0.5; 8 * 8 * 3]; 4])
+        }
+        fn concept_dirs(&self) -> Result<Vec<Vec<f32>>> {
+            Ok(vec![vec![0.0; 8]; 4])
+        }
+    }
+
+    #[test]
+    fn broken_backend_fails_at_construction_not_mid_stream() {
+        let engine = EmbedEngine::new(BrokenBackend::boxed(), false).unwrap();
+        let memory = Arc::new(RwLock::new(
+            Hierarchy::new(&MemoryConfig::default(), 8, Box::new(InMemoryRaw::new(16)))
+                .unwrap(),
+        ));
+        let err = Pipeline::new(&IngestConfig::default(), 8.0, engine, memory)
+            .err()
+            .expect("warm-up failure must propagate from Pipeline::new");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("warm-up"), "context missing: {msg}");
+        assert!(msg.contains("corrupt"), "root cause missing: {msg}");
+    }
+
+    #[test]
+    fn healthy_backend_constructs() {
+        let engine = EmbedEngine::default_backend(false).unwrap();
+        let d = engine.d_embed();
+        let memory = Arc::new(RwLock::new(
+            Hierarchy::new(&MemoryConfig::default(), d, Box::new(InMemoryRaw::new(64)))
+                .unwrap(),
+        ));
+        let pipe = Pipeline::new(&IngestConfig::default(), 8.0, engine, memory).unwrap();
+        assert_eq!(pipe.frames_pushed(), 0);
+        pipe.finish().unwrap();
+    }
 }

@@ -10,13 +10,17 @@
 //! a network simulator, a simulated cloud VLM, and Jetson-class edge device
 //! profiles.
 //!
-//! Frame/text embedding runs through AOT-compiled XLA artifacts produced by
-//! the build-time Python layers (L2 JAX dual-encoder calling L1 Pallas
-//! kernels); see `python/compile/` and [`runtime`].  Python never executes
-//! on the request path.
+//! Frame/text embedding goes through the pluggable [`backend`] layer: the
+//! default [`backend::NativeBackend`] runs the dual-encoder MEM forward in
+//! pure Rust (self-contained, no artifact files — the paper's edge
+//! deployment claim), while the optional `pjrt` cargo feature adds the
+//! AOT-compiled XLA artifact [`runtime`] produced by the build-time Python
+//! layers (L2 JAX dual-encoder calling L1 Pallas kernels; see
+//! `python/compile/`).  Python never executes on the request path.
 //!
 //! Quickstart: see `examples/quickstart.rs`; architecture: `DESIGN.md`.
 
+pub mod backend;
 pub mod baselines;
 pub mod cli;
 pub mod cloud;

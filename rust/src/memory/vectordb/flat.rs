@@ -7,8 +7,8 @@
 
 use anyhow::{bail, Result};
 
-use super::{finish_topk, push_topk, Hit, Metric, VectorIndex};
-use crate::util::{dot, l2_normalize};
+use super::{finish_topk, metric_score, push_topk, Hit, Metric, VectorIndex};
+use crate::util::l2_normalize;
 
 /// Flat (exact) vector index.
 pub struct FlatIndex {
@@ -52,7 +52,7 @@ impl VectorIndex for FlatIndex {
         let q = normalized_query(query, self.metric);
         let mut buf = Vec::with_capacity(k + 1);
         for (id, row) in self.data.chunks_exact(self.dim).enumerate() {
-            push_topk(&mut buf, k, Hit { id, score: dot(&q, row) });
+            push_topk(&mut buf, k, Hit { id, score: metric_score(self.metric, &q, row) });
         }
         finish_topk(buf, k)
     }
@@ -63,7 +63,7 @@ impl VectorIndex for FlatIndex {
         out.clear();
         out.reserve(self.len());
         for row in self.data.chunks_exact(self.dim) {
-            out.push(dot(&q, row));
+            out.push(metric_score(self.metric, &q, row));
         }
     }
 
@@ -122,6 +122,30 @@ mod tests {
         let hits = idx.search(&[1.0, 0.0], 1);
         assert_eq!(hits[0].id, 0);
         assert!((hits[0].score - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn l2_metric_prefers_close_over_colinear() {
+        // [10, 0] is colinear with the query but far; [1.2, 0] is near.
+        // IP would pick the big vector; L2 must pick the near one.
+        let mut idx = FlatIndex::new(2, Metric::L2);
+        idx.insert(&[10.0, 0.0]).unwrap();
+        idx.insert(&[1.2, 0.0]).unwrap();
+        let hits = idx.search(&[1.0, 0.0], 2);
+        assert_eq!(hits[0].id, 1);
+        assert!((hits[0].score - (-0.04)).abs() < 1e-5, "score {}", hits[0].score);
+        assert!(hits[0].score > hits[1].score);
+    }
+
+    #[test]
+    fn l2_self_query_scores_zero() {
+        let mut idx = FlatIndex::new(3, Metric::L2);
+        idx.insert(&[0.3, -0.7, 2.0]).unwrap();
+        idx.insert(&[1.0, 1.0, 1.0]).unwrap();
+        let mut out = Vec::new();
+        idx.score_all(&[0.3, -0.7, 2.0], &mut out);
+        assert!(out[0].abs() < 1e-12);
+        assert!(out[1] < out[0]);
     }
 
     #[test]

@@ -10,9 +10,9 @@
 use anyhow::{bail, Result};
 
 use super::flat::normalized_query;
-use super::{finish_topk, push_topk, Hit, Metric, VectorIndex};
+use super::{finish_topk, metric_score, push_topk, Hit, Metric, VectorIndex};
+use crate::util::l2_normalize;
 use crate::util::rng::Pcg64;
-use crate::util::{dot, l2_normalize};
 
 /// Inverted-file vector index.
 pub struct IvfIndex {
@@ -55,11 +55,14 @@ impl IvfIndex {
         &self.data[id * self.dim..(id + 1) * self.dim]
     }
 
+    /// Nearest cell UNDER THE INDEX METRIC — an L2 index must assign by
+    /// Euclidean distance, not raw dot product, or cells and probes rank
+    /// incorrectly (big-magnitude centroids would swallow everything).
     fn nearest_cell(&self, v: &[f32]) -> usize {
         let mut best = 0;
         let mut best_score = f32::NEG_INFINITY;
         for (c, cen) in self.centroids.chunks_exact(self.dim).enumerate() {
-            let s = dot(v, cen);
+            let s = metric_score(self.metric, v, cen);
             if s > best_score {
                 best_score = s;
                 best = c;
@@ -68,7 +71,9 @@ impl IvfIndex {
         best
     }
 
-    /// K-means (cosine/IP variant: maximize dot with normalized means).
+    /// K-means under the index metric.  Cosine/IP: maximize dot with
+    /// L2-normalized means (spherical k-means).  L2: classic Lloyd —
+    /// minimize Euclidean distance to plain means.
     fn train(&mut self) {
         let n = self.len();
         let k = if self.nlist > 0 {
@@ -88,13 +93,13 @@ impl IvfIndex {
         let iters = 8;
         let mut assign = vec![0usize; n];
         for _ in 0..iters {
-            // assign
+            // assign (same metric the probes will use)
             for i in 0..n {
                 let v = self.row(i);
                 let mut best = 0;
                 let mut best_score = f32::NEG_INFINITY;
                 for (c, cen) in centroids.chunks_exact(self.dim).enumerate() {
-                    let s = dot(v, cen);
+                    let s = metric_score(self.metric, v, cen);
                     if s > best_score {
                         best_score = s;
                         best = c;
@@ -129,7 +134,11 @@ impl IvfIndex {
                 for x in cen.iter_mut() {
                     *x *= inv;
                 }
-                l2_normalize(cen);
+                // spherical k-means only for the dot-product metrics; L2
+                // centroids are the plain means
+                if self.metric != Metric::L2 {
+                    l2_normalize(cen);
+                }
             }
             centroids = sums;
         }
@@ -188,21 +197,25 @@ impl VectorIndex for IvfIndex {
         if !self.trained() {
             // cold start: brute force
             for (id, row) in self.data.chunks_exact(self.dim).enumerate() {
-                push_topk(&mut buf, k, Hit { id, score: dot(&q, row) });
+                push_topk(&mut buf, k, Hit { id, score: metric_score(self.metric, &q, row) });
             }
             return finish_topk(buf, k);
         }
-        // rank cells by centroid similarity, probe top-nprobe
+        // rank cells by centroid similarity UNDER THE METRIC, probe top-nprobe
         let mut cell_scores: Vec<(usize, f32)> = self
             .centroids
             .chunks_exact(self.dim)
             .enumerate()
-            .map(|(c, cen)| (c, dot(&q, cen)))
+            .map(|(c, cen)| (c, metric_score(self.metric, &q, cen)))
             .collect();
         cell_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         for &(c, _) in cell_scores.iter().take(self.nprobe) {
             for &id in &self.cells[c] {
-                push_topk(&mut buf, k, Hit { id, score: dot(&q, self.row(id)) });
+                push_topk(
+                    &mut buf,
+                    k,
+                    Hit { id, score: metric_score(self.metric, &q, self.row(id)) },
+                );
             }
         }
         // ids inserted after the last training that fell into probed cells
@@ -218,7 +231,7 @@ impl VectorIndex for IvfIndex {
         out.clear();
         out.reserve(self.len());
         for row in self.data.chunks_exact(self.dim) {
-            out.push(dot(&q, row));
+            out.push(metric_score(self.metric, &q, row));
         }
     }
 
@@ -288,6 +301,62 @@ mod tests {
         let id = idx.insert(&special).unwrap();
         let hits = idx.search(&special, 1);
         assert_eq!(hits[0].id, id);
+    }
+
+    #[test]
+    fn l2_round_trip_after_training() {
+        // L2 index past the training threshold: self-queries must come
+        // back (score 0 = exact), and cell assignment must be Euclidean —
+        // under the old raw-dot assignment, large-magnitude vectors all
+        // landed in one cell and near-neighbor probes missed.
+        let mut idx = IvfIndex::new(8, Metric::L2, 8, 8); // probe all cells
+        let mut rng = Pcg64::seeded(61);
+        for i in 0..400 {
+            // mixed magnitudes: direction clusters × scale 1..16
+            let scale = 1.0 + (i % 16) as f32;
+            let v: Vec<f32> = (0..8).map(|_| rng.normal() * scale).collect();
+            idx.insert(&v).unwrap();
+        }
+        assert!(idx.trained());
+        for probe_id in [0usize, 57, 399] {
+            let q = idx.vector(probe_id).to_vec();
+            let hits = idx.search(&q, 1);
+            assert_eq!(hits[0].id, probe_id);
+            assert!(hits[0].score.abs() < 1e-6, "self-distance {}", hits[0].score);
+        }
+    }
+
+    #[test]
+    fn l2_search_agrees_with_flat_ground_truth() {
+        use super::super::flat::FlatIndex;
+        let dim = 16;
+        let mut rng = Pcg64::seeded(62);
+        // scene-like clusters so IVF probing is meaningful
+        let centers: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..dim).map(|_| rng.normal() * 3.0).collect())
+            .collect();
+        let mut ivf = IvfIndex::new(dim, Metric::L2, 8, 8); // probe all
+        let mut flat = FlatIndex::new(dim, Metric::L2);
+        for _ in 0..600 {
+            let c = &centers[rng.range(0, 8)];
+            let v: Vec<f32> = c.iter().map(|x| x + 0.2 * rng.normal()).collect();
+            ivf.insert(&v).unwrap();
+            flat.insert(&v).unwrap();
+        }
+        let q: Vec<f32> = centers[3].iter().map(|x| x + 0.1 * rng.normal()).collect();
+        let truth = flat.search(&q, 5);
+        let got = ivf.search(&q, 5);
+        // probing every cell ⇒ identical exact results
+        let t_ids: Vec<usize> = truth.iter().map(|h| h.id).collect();
+        let g_ids: Vec<usize> = got.iter().map(|h| h.id).collect();
+        assert_eq!(t_ids, g_ids);
+        // and score_all agrees elementwise
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        flat.score_all(&q, &mut a);
+        ivf.score_all(&q, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
     }
 
     #[test]

@@ -17,13 +17,36 @@ pub use ivf::IvfIndex;
 
 use anyhow::Result;
 
-/// Similarity metric.
+/// Similarity metric.  Scores are "higher = more similar" for every
+/// variant, so the top-k machinery and the Eq. 5 softmax are metric-
+/// agnostic (L2 scores are negated squared distances).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Metric {
     /// Inner product on raw vectors.
     InnerProduct,
     /// Cosine: vectors are L2-normalized on insert and query.
     Cosine,
+    /// Euclidean: score = −‖a − b‖² (no normalization anywhere).
+    L2,
+}
+
+/// Score one stored row against a (metric-prepared) query.  Every scoring
+/// loop in this module — flat scan, IVF cell ranking, IVF posting-list
+/// probes, k-means assignment — dispatches through here, so an index never
+/// mixes metrics between training and search.
+#[inline]
+pub(crate) fn metric_score(metric: Metric, q: &[f32], row: &[f32]) -> f32 {
+    match metric {
+        Metric::InnerProduct | Metric::Cosine => crate::util::dot(q, row),
+        Metric::L2 => {
+            let mut acc = 0.0f32;
+            for (a, b) in q.iter().zip(row) {
+                let d = a - b;
+                acc += d * d;
+            }
+            -acc
+        }
+    }
 }
 
 /// A scored search hit.

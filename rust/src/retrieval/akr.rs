@@ -132,7 +132,26 @@ mod tests {
         assert!(out.mass >= 0.9 || out.draws == 32);
     }
 
-    /// Dispersed query (flat distribution): AKR uses many more draws.
+    /// Mean draws over many seeds (the sampler is randomized; single-seed
+    /// comparisons of draw counts are brittle, so the adaptivity
+    /// properties below are stated over seed-averaged behavior).
+    fn mean_draws(
+        h: &Hierarchy,
+        scores: &[f32],
+        tau: f32,
+        theta: f64,
+        n_max: usize,
+        seeds: std::ops::Range<u64>,
+    ) -> f64 {
+        let n = (seeds.end - seeds.start) as f64;
+        let total: usize = seeds
+            .map(|s| akr_retrieve(h, scores, tau, theta, 2.0, n_max, &mut Pcg64::seeded(s)).draws)
+            .sum();
+        total as f64 / n
+    }
+
+    /// Dispersed query (flat distribution): AKR uses many more draws than
+    /// a localized one-peak query, on average over seeds.
     #[test]
     fn dispersed_query_needs_more_draws() {
         let h = memory_with(32, 8);
@@ -142,14 +161,11 @@ mod tests {
             s
         };
         let dispersed = vec![0.5f32; 32];
-        let mut rng = Pcg64::seeded(2);
-        let a = akr_retrieve(&h, &localized, 0.03, 0.9, 2.0, 64, &mut rng);
-        let b = akr_retrieve(&h, &dispersed, 0.03, 0.9, 2.0, 64, &mut rng);
+        let a = mean_draws(&h, &localized, 0.03, 0.9, 64, 0..16);
+        let b = mean_draws(&h, &dispersed, 0.03, 0.9, 64, 0..16);
         assert!(
-            b.draws > 2 * a.draws,
-            "dispersed {} vs localized {}",
-            b.draws,
-            a.draws
+            b > 2.0 * a,
+            "dispersed mean {b:.1} vs localized mean {a:.1}"
         );
     }
 
@@ -178,21 +194,27 @@ mod tests {
 
     #[test]
     fn monotone_in_theta() {
-        // property: higher θ ⇒ at least as many draws (same seed)
+        // property: higher θ ⇒ more draws on average over seeds.  (Per-seed
+        // the sampler's draw sequence differs between runs, so strict
+        // per-seed monotonicity is not a property of the algorithm; the
+        // seed-averaged expectation is.)
         let h = memory_with(32, 8);
         let scores: Vec<f32> = (0..32).map(|i| (i as f32 * 0.7).sin() * 0.5).collect();
-        let mut prev = 0;
-        for theta in [0.5, 0.7, 0.9, 0.97] {
-            let out = akr_retrieve(
-                &h, &scores, 0.1, theta, 2.0, 256, &mut Pcg64::seeded(5),
-            );
+        let means: Vec<f64> = [0.5, 0.7, 0.9, 0.97]
+            .iter()
+            .map(|&theta| mean_draws(&h, &scores, 0.1, theta, 256, 0..16))
+            .collect();
+        for w in means.windows(2) {
+            // small slack absorbs residual sampling noise on adjacent θ
             assert!(
-                out.draws >= prev,
-                "θ={theta}: draws {} < previous {prev}",
-                out.draws
+                w[1] >= w[0] - 0.05 * w[0],
+                "mean draws not monotone in θ: {means:?}"
             );
-            prev = out.draws;
         }
+        assert!(
+            means[3] > means[0] * 1.5,
+            "θ=0.97 should need clearly more draws than θ=0.5: {means:?}"
+        );
     }
 
     #[test]

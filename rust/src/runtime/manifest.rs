@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::ModelMeta;
 use crate::util::json::Json;
 
 /// Element type of an artifact tensor.
@@ -54,25 +55,9 @@ pub struct EntryMeta {
     pub outputs: Vec<TensorMeta>,
 }
 
-/// Model hyperparameters the Rust side must agree on (tokenizer layout,
-/// embedding dim, watermark geometry...).
-#[derive(Clone, Debug)]
-pub struct ModelMeta {
-    pub img_size: usize,
-    pub patch: usize,
-    pub d_embed: usize,
-    pub seq_len: usize,
-    pub vocab: usize,
-    pub n_concepts: usize,
-    pub concept_token_base: usize,
-    pub sim_rows: usize,
-    pub scene_feat_dim: usize,
-    pub sem_weight: f32,
-    pub content_weight: f32,
-    pub aux_weight: f32,
-}
-
-/// Parsed manifest.
+/// Parsed manifest.  The model hyperparameter block is decoded into the
+/// backend-layer [`ModelMeta`] so artifact-backed and native backends are
+/// interchangeable above this point.
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,

@@ -1,0 +1,344 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them on the CPU PJRT client from the request path.
+//!
+//! Artifacts are compiled lazily on first use and cached; the executables
+//! are self-contained (model weights are baked in as HLO constants at
+//! export time), so the only runtime inputs are frames / tokens / query
+//! vectors.  Interchange is HLO *text* — serialized protos from jax ≥ 0.5
+//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects.
+//!
+//! This module is only compiled with `--features pjrt`.  The default `xla`
+//! dependency is the in-tree stub (`rust/xla-stub`), which type-checks this
+//! backend offline; executing real artifacts additionally requires the
+//! actual `xla` bindings and a `make artifacts` run (see the Makefile).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::backend::{EmbedBackend, ModelMeta};
+use crate::runtime::manifest::Manifest;
+
+/// Handle to the PJRT client plus the artifact set.
+pub struct Runtime {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+}
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal_f32: {} elements for shape {dims:?}", data.len());
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Build an i32 literal of the given shape from a host slice.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal_i32: {} elements for shape {dims:?}", data.len());
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+impl Runtime {
+    /// Load the artifact directory (expects `manifest.json`; compiles
+    /// nothing yet).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir.as_ref())?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Locate the artifact directory: `$VENUS_ARTIFACTS`, else
+    /// `<manifest-dir>/artifacts`, else `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        if let Ok(dir) = std::env::var("VENUS_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        let candidates = [
+            concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
+            "artifacts".to_string(),
+        ];
+        for c in &candidates {
+            if Path::new(c).join("manifest.json").exists() {
+                return Self::load(c);
+            }
+        }
+        bail!("no artifacts directory found (run `make artifacts`)")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn model(&self) -> &ModelMeta {
+        &self.manifest.model
+    }
+
+    /// Compile (or fetch from cache) an entry point.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.entry(name)?;
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile a set of entries (startup warm-up for serving).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry with the given input literals; returns the
+    /// de-tupled output literals (entries are lowered with
+    /// `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        self.ensure_compiled(name)?;
+        let entry = self.manifest.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "entry '{name}': {} inputs given, expected {}",
+                inputs.len(),
+                entry.inputs.len()
+            );
+        }
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).unwrap();
+        let result = exe.execute::<Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute and read all outputs back as f32 vectors.
+    pub fn execute_f32(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Vec<f32>>> {
+        self.execute(name, inputs)?
+            .iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect()
+    }
+
+    // ---------------------------------------------------------------
+    // Typed entry points
+    // ---------------------------------------------------------------
+
+    /// Image tower: `frames` is `batch × (S·S·3)` row-major pixels in
+    /// [0,1]; batch must match an exported artifact (see
+    /// [`Manifest::image_batches`]).  Returns `batch` embeddings of
+    /// `d_embed` each (L2-normalized).
+    pub fn embed_image(&self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>> {
+        let m = self.model();
+        let name = format!("embed_image_b{batch}");
+        let lit = literal_f32(frames, &[batch, m.img_size, m.img_size, 3])?;
+        let out = self.execute_f32(&name, &[lit])?;
+        Ok(split_rows(&out[0], batch, m.d_embed))
+    }
+
+    /// Text tower (query path): one token sequence -> one embedding.
+    pub fn embed_text(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let m = self.model();
+        if tokens.len() != m.seq_len {
+            bail!("embed_text: {} tokens, expected {}", tokens.len(), m.seq_len);
+        }
+        let lit = literal_i32(tokens, &[1, m.seq_len])?;
+        let out = self.execute_f32("embed_text_b1", &[lit])?;
+        Ok(out[0].clone())
+    }
+
+    /// Fused ingestion entry: frames + aux-prompt tokens (Eq. 2–3).
+    pub fn embed_fused(
+        &self,
+        frames: &[f32],
+        aux_tokens: &[i32],
+        batch: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let m = self.model();
+        let name = format!("embed_fused_b{batch}");
+        let img = literal_f32(frames, &[batch, m.img_size, m.img_size, 3])?;
+        let tok = literal_i32(aux_tokens, &[batch, m.seq_len])?;
+        let out = self.execute_f32(&name, &[img, tok])?;
+        Ok(split_rows(&out[0], batch, m.d_embed))
+    }
+
+    /// Eq. 1 scene features for a frame batch.
+    pub fn scene_features(&self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>> {
+        let m = self.model();
+        let name = format!("scene_feat_b{batch}");
+        let lit = literal_f32(frames, &[batch, m.img_size, m.img_size, 3])?;
+        let out = self.execute_f32(&name, &[lit])?;
+        Ok(split_rows(&out[0], batch, m.scene_feat_dim))
+    }
+
+    /// Fused similarity + softmax (Eq. 4–5) over a padded index matrix.
+    /// `index` must hold exactly `sim_rows × d_embed` values (pad with
+    /// zero rows); returns `(scores, probs)` truncated to `n_valid`.
+    pub fn similarity(
+        &self,
+        query: &[f32],
+        index: &[f32],
+        n_valid: usize,
+        tau: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = self.model();
+        if query.len() != m.d_embed {
+            bail!("similarity: query dim {}", query.len());
+        }
+        if index.len() != m.sim_rows * m.d_embed {
+            bail!(
+                "similarity: index has {} values, expected {}",
+                index.len(),
+                m.sim_rows * m.d_embed
+            );
+        }
+        if n_valid > m.sim_rows {
+            bail!("similarity: n_valid {} > padded rows {}", n_valid, m.sim_rows);
+        }
+        let q = literal_f32(query, &[m.d_embed])?;
+        let idx = literal_f32(index, &[m.sim_rows, m.d_embed])?;
+        let tau_l = literal_f32(&[tau], &[1])?;
+        let nv = literal_f32(&[n_valid as f32], &[1])?;
+        let out = self.execute_f32("similarity_n1024", &[q, idx, tau_l, nv])?;
+        let mut scores = out[0].clone();
+        let mut probs = out[1].clone();
+        scores.truncate(n_valid);
+        probs.truncate(n_valid);
+        Ok((scores, probs))
+    }
+
+    /// Concept pixel codes `[n_concepts][patch·patch·3]` — the watermark
+    /// blocks the synthetic generator plants (shared with python).
+    pub fn concept_codes(&self) -> Result<Vec<Vec<f32>>> {
+        let (flat, shape) = self.manifest.read_f32_file("concept_codes")?;
+        Ok(split_rows(&flat, shape[0], shape[1]))
+    }
+
+    /// Concept embedding directions `[n_concepts][d_embed]`.
+    pub fn concept_dirs(&self) -> Result<Vec<Vec<f32>>> {
+        let (flat, shape) = self.manifest.read_f32_file("concept_dirs")?;
+        Ok(split_rows(&flat, shape[0], shape[1]))
+    }
+}
+
+/// The PJRT runtime plugs into the system through the same backend trait
+/// as the native implementation; everything above the engine is agnostic.
+impl EmbedBackend for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn model(&self) -> &ModelMeta {
+        &self.manifest.model
+    }
+
+    fn image_batches(&self) -> Vec<usize> {
+        self.manifest.image_batches()
+    }
+
+    fn has_fused(&self, batch: usize) -> bool {
+        self.manifest
+            .entries
+            .contains_key(&format!("embed_fused_b{batch}"))
+    }
+
+    fn warmup(&self, entries: &[&str]) -> Result<()> {
+        Runtime::warmup(self, entries)
+    }
+
+    fn embed_image(&self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>> {
+        Runtime::embed_image(self, frames, batch)
+    }
+
+    fn embed_text(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        Runtime::embed_text(self, tokens)
+    }
+
+    fn embed_fused(
+        &self,
+        frames: &[f32],
+        aux_tokens: &[i32],
+        batch: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        Runtime::embed_fused(self, frames, aux_tokens, batch)
+    }
+
+    fn scene_features(&self, frames: &[f32], batch: usize) -> Result<Vec<Vec<f32>>> {
+        Runtime::scene_features(self, frames, batch)
+    }
+
+    fn similarity(
+        &self,
+        query: &[f32],
+        index: &[f32],
+        n_valid: usize,
+        tau: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        Runtime::similarity(self, query, index, n_valid, tau)
+    }
+
+    fn concept_codes(&self) -> Result<Vec<Vec<f32>>> {
+        Runtime::concept_codes(self)
+    }
+
+    fn concept_dirs(&self) -> Result<Vec<Vec<f32>>> {
+        Runtime::concept_dirs(self)
+    }
+}
+
+fn split_rows(flat: &[f32], rows: usize, cols: usize) -> Vec<Vec<f32>> {
+    assert_eq!(flat.len(), rows * cols);
+    flat.chunks_exact(cols).map(|c| c.to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_f32_shape_checked() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+    }
+
+    #[test]
+    fn literal_i32_roundtrip() {
+        let l = literal_i32(&[5, 6, 7], &[3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn split_rows_chunks() {
+        let v = split_rows(&[1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(v, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+}

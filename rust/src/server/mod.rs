@@ -1,10 +1,12 @@
 //! Online serving loop: multi-worker query service with admission
 //! control, per-query latency accounting, and a metrics registry.
 //!
-//! Each worker thread owns its own PJRT query engine (compiled artifacts
-//! are per-thread; PJRT handles are not shared).  Queries enter through a
-//! bounded queue — when it is full, `submit` rejects immediately
-//! (admission control) instead of building unbounded backlog.
+//! Each worker thread owns its own query engine with its own embed
+//! backend (AOT backends compile per-thread; PJRT handles are not
+//! shared).  Queries enter through a bounded queue — when it is full,
+//! `submit` rejects immediately (admission control) instead of building
+//! unbounded backlog.  The memory hierarchy is behind an `RwLock`, so
+//! worker threads score/select concurrently (queries are read-only).
 
 pub mod metrics;
 
@@ -12,19 +14,19 @@ pub use metrics::{Metrics, Snapshot};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::backend;
 use crate::cloud::VlmClient;
 use crate::config::VenusConfig;
 use crate::coordinator::query::{QueryEngine, QueryOutcome};
 use crate::embed::EmbedEngine;
 use crate::memory::Hierarchy;
 use crate::net::{Link, Payload};
-use crate::runtime::Runtime;
 
 /// A completed query with its latency accounting.
 #[derive(Clone, Debug)]
@@ -49,8 +51,8 @@ struct Job {
     reply: SyncSender<Result<QueryResult>>,
 }
 
-/// Wrapper moving a PJRT-owning engine into its worker thread (see
-/// `ingest::pipeline::SendEngine` for the safety argument).
+/// Wrapper moving a possibly-PJRT-owning engine into its worker thread
+/// (see `ingest::pipeline::SendEngine` for the safety argument).
 struct SendEngine(QueryEngine);
 unsafe impl Send for SendEngine {}
 
@@ -64,14 +66,14 @@ pub struct Service {
 
 impl Service {
     /// Start `cfg.server.workers` workers over a shared memory hierarchy.
-    pub fn start(cfg: &VenusConfig, memory: Arc<Mutex<Hierarchy>>, seed: u64) -> Result<Self> {
+    pub fn start(cfg: &VenusConfig, memory: Arc<RwLock<Hierarchy>>, seed: u64) -> Result<Self> {
         let (tx, rx) = sync_channel::<Job>(cfg.server.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
         let mut workers = Vec::new();
         for w in 0..cfg.server.workers {
             let engine = QueryEngine::new(
-                EmbedEngine::new(Runtime::load_default()?, cfg.ingest.aux_models)?,
+                EmbedEngine::new(backend::load_default()?, cfg.ingest.aux_models)?,
                 Arc::clone(&memory),
                 cfg.retrieval.clone(),
                 seed ^ (w as u64) << 8,

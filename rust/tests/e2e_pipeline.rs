@@ -1,24 +1,26 @@
 //! End-to-end integration: synthetic stream → threaded ingestion pipeline
-//! (real PJRT embedding) → hierarchical memory → query stage → retrieval
-//! quality + serving loop, all against planted ground truth.
+//! (real backend embedding through the `EmbedBackend` trait) →
+//! hierarchical memory → query stage → retrieval quality + serving loop,
+//! all against planted ground truth.  Runs on the default backend — the
+//! self-contained native MEM unless a pjrt build finds artifacts.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, RwLock};
 
+use venus::backend::{self, EmbedBackend};
 use venus::cloud::SelectionStats;
 use venus::config::VenusConfig;
 use venus::coordinator::query::{QueryEngine, RetrievalMode};
 use venus::embed::EmbedEngine;
 use venus::ingest::Pipeline;
 use venus::memory::{Hierarchy, InMemoryRaw};
-use venus::runtime::Runtime;
 use venus::server::Service;
 use venus::video::synth::{SynthConfig, VideoSynth};
 use venus::video::workload::{DatasetPreset, WorkloadGen};
 
 fn build_synth(duration_s: f64, seed: u64) -> VideoSynth {
-    let rt = Runtime::load_default().expect("artifacts (run `make artifacts`)");
-    let codes = rt.concept_codes().unwrap();
-    let patch = rt.model().patch;
+    let be = backend::load_default().expect("default backend");
+    let codes = be.concept_codes().unwrap();
+    let patch = be.model().patch;
     VideoSynth::new(
         SynthConfig { duration_s, seed, ..Default::default() },
         codes,
@@ -26,15 +28,19 @@ fn build_synth(duration_s: f64, seed: u64) -> VideoSynth {
     )
 }
 
-fn ingest_all(synth: &VideoSynth, cfg: &VenusConfig) -> (Arc<Mutex<Hierarchy>>, venus::ingest::IngestStats) {
-    let rt = Runtime::load_default().unwrap();
-    let d = rt.model().d_embed;
-    let memory = Arc::new(Mutex::new(
+fn ingest_all(
+    synth: &VideoSynth,
+    cfg: &VenusConfig,
+) -> (Arc<RwLock<Hierarchy>>, venus::ingest::IngestStats) {
+    let be = backend::load_default().unwrap();
+    let d = be.model().d_embed;
+    let memory = Arc::new(RwLock::new(
         Hierarchy::new(&cfg.memory, d, Box::new(InMemoryRaw::new(synth.config().frame_size)))
             .unwrap(),
     ));
-    let engine = EmbedEngine::new(rt, cfg.ingest.aux_models).unwrap();
-    let mut pipe = Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory));
+    let engine = EmbedEngine::new(be, cfg.ingest.aux_models).unwrap();
+    let mut pipe =
+        Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory)).unwrap();
     for i in 0..synth.total_frames() {
         pipe.push_frame(i, &synth.frame(i)).unwrap();
     }
@@ -46,7 +52,7 @@ fn ingest_all(synth: &VideoSynth, cfg: &VenusConfig) -> (Arc<Mutex<Hierarchy>>, 
 fn pipeline_builds_sparse_consistent_memory() {
     let synth = build_synth(40.0, 7);
     let (memory, stats) = ingest_all(&synth, &VenusConfig::default());
-    let mem = memory.lock().unwrap();
+    let mem = memory.read().unwrap();
 
     assert_eq!(stats.frames, synth.total_frames());
     assert_eq!(stats.embedded, mem.len());
@@ -82,7 +88,7 @@ fn query_retrieves_evidence_frames() {
         WorkloadGen::new(3, DatasetPreset::VideoMmeShort).generate(synth.script(), 12);
 
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(Runtime::load_default().unwrap(), true).unwrap(),
+        EmbedEngine::default_backend(true).unwrap(),
         Arc::clone(&memory),
         cfg.retrieval.clone(),
         11,
@@ -116,7 +122,7 @@ fn akr_adapts_draws_to_query_type() {
     let queries =
         WorkloadGen::new(5, DatasetPreset::VideoMmeShort).generate(synth.script(), 30);
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(Runtime::load_default().unwrap(), true).unwrap(),
+        EmbedEngine::default_backend(true).unwrap(),
         Arc::clone(&memory),
         cfg.retrieval.clone(),
         13,
@@ -181,12 +187,14 @@ fn serving_loop_completes_batch_with_conservation() {
 fn queries_succeed_while_ingestion_is_live() {
     // concurrency property: the query path reads the shared memory while
     // the pipeline's embed thread is still inserting — no deadlock, no
-    // invariant violation, and late queries see a larger index.
+    // invariant violation, and late queries see a larger index.  With the
+    // RwLock'd hierarchy the readers only exclude the writer for the
+    // narrow score+select window.
     let synth = build_synth(40.0, 31);
     let cfg = VenusConfig::default();
-    let rt = Runtime::load_default().unwrap();
-    let d = rt.model().d_embed;
-    let memory = Arc::new(Mutex::new(
+    let be = backend::load_default().unwrap();
+    let d = be.model().d_embed;
+    let memory = Arc::new(RwLock::new(
         Hierarchy::new(
             &cfg.memory,
             d,
@@ -194,12 +202,12 @@ fn queries_succeed_while_ingestion_is_live() {
         )
         .unwrap(),
     ));
-    let engine = EmbedEngine::new(rt, cfg.ingest.aux_models).unwrap();
+    let engine = EmbedEngine::new(be, cfg.ingest.aux_models).unwrap();
     let mut pipe =
-        Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory));
+        Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory)).unwrap();
 
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(Runtime::load_default().unwrap(), true).unwrap(),
+        EmbedEngine::default_backend(true).unwrap(),
         Arc::clone(&memory),
         cfg.retrieval.clone(),
         17,
@@ -214,31 +222,30 @@ fn queries_succeed_while_ingestion_is_live() {
             let out = qe
                 .retrieve_with("what is happening with concept01", RetrievalMode::Akr)
                 .unwrap();
-            let len = memory.lock().unwrap().len();
+            let len = memory.read().unwrap().len();
             sizes.push(len);
             // selection only references archived frames
-            let ingested = memory.lock().unwrap().frames_ingested();
+            let ingested = memory.read().unwrap().frames_ingested();
             assert!(out.selection.frames.iter().all(|&f| f < ingested));
         }
     }
     pipe.finish().unwrap();
-    memory.lock().unwrap().check_invariants().unwrap();
+    memory.read().unwrap().check_invariants().unwrap();
     // the index grew while we were querying (mid-stream, not just at end)
     assert!(
         sizes.iter().any(|&s| s > 0),
         "index never visible mid-stream: {sizes:?}"
     );
     assert!(
-        memory.lock().unwrap().len() >= *sizes.last().unwrap(),
+        memory.read().unwrap().len() >= *sizes.last().unwrap(),
         "{sizes:?}"
     );
 }
 
 #[test]
 fn embed_engine_pads_odd_batches_consistently() {
-    // 5 frames through batch-8 artifacts must equal per-frame batch-1
-    let rt = Runtime::load_default().unwrap();
-    let mut engine = EmbedEngine::new(rt, false).unwrap();
+    // 5 frames through batch-8 chunking must equal per-frame batch-1
+    let mut engine = EmbedEngine::default_backend(false).unwrap();
     let synth = build_synth(10.0, 33);
     let frames: Vec<_> = (0..5).map(|i| synth.frame(i * 7)).collect();
     let refs: Vec<&venus::video::frame::Frame> = frames.iter().collect();

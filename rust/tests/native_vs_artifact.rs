@@ -1,25 +1,70 @@
-//! Cross-validation between native-Rust fast paths and the AOT artifacts:
-//! the Eq. 1 features and the retrieval softmax must agree between the
-//! hand-written Rust used on the streaming hot path and the Pallas/XLA
-//! kernels, and the baseline score oracle must rank like the real MEM.
+//! Cross-backend parity suite (`pjrt` builds only): the native pure-Rust
+//! backend vs the AOT-compiled XLA artifacts, driven through the same
+//! [`EmbedBackend`] trait.
+//!
+//! Weights are generated independently on each side (jax threefry vs PCG64
+//! — statistically matched, not bit-identical; see `backend::native`), so
+//! parity is asserted at three levels:
+//!   1. **kernel-exact** — Eq. 1 scene features and the Eq. 4–5 similarity
+//!      epilogue are deterministic functions of their inputs and must
+//!      match to float tolerance across backends;
+//!   2. **golden-exact** — the artifact path must reproduce the Python
+//!      reference numerics recorded at `make artifacts` time (the
+//!      HLO-text round-trip is lossless);
+//!   3. **behavioral** — both backends must rank concept-planted frames
+//!      above non-planted ones for the same query (the property the
+//!      retrieval stage depends on).
+//!
+//! Tests skip (pass trivially with a note) when no artifact directory is
+//! present or the linked `xla` crate is the offline stub — `cargo test
+//! --features pjrt` stays green on artifact-less checkouts while still
+//! type-checking the whole PJRT surface.
 
-use venus::embed::EmbedEngine;
-use venus::features::frame_features;
+#![cfg(feature = "pjrt")]
+
+use venus::backend::{EmbedBackend, NativeBackend, NativeConfig};
+use venus::embed::Tokenizer;
 use venus::runtime::Runtime;
 use venus::util::rng::Pcg64;
-use venus::util::softmax_temp;
+use venus::util::{dot, l2_normalize, softmax_temp};
 use venus::video::frame::Frame;
 
-fn runtime() -> Runtime {
-    Runtime::load_default().expect("artifacts missing — run `make artifacts`")
+fn runtime() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping pjrt parity test: {e:#}");
+            None
+        }
+    }
 }
 
+fn native() -> NativeBackend {
+    NativeBackend::new(NativeConfig::default())
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+fn read_f32(rt: &Runtime, key: &str) -> Vec<f32> {
+    rt.manifest().read_f32_file(key).unwrap().0
+}
+
+// -------------------------------------------------------------------
+// 1. kernel-exact parity
+// -------------------------------------------------------------------
+
 #[test]
-fn native_scene_features_match_pallas_kernel() {
-    let rt = runtime();
-    let mut rng = Pcg64::seeded(41);
+fn scene_features_agree_across_backends() {
+    let Some(rt) = runtime() else { return };
+    let nat = native();
     let size = rt.model().img_size;
-    let mut frames = Vec::new();
+    let mut rng = Pcg64::seeded(41);
     let mut flat = Vec::new();
     for _ in 0..8 {
         let mut f = Frame::new(size);
@@ -27,22 +72,20 @@ fn native_scene_features_match_pallas_kernel() {
             *v = rng.f32();
         }
         flat.extend_from_slice(f.data());
-        frames.push(f);
     }
-    let artifact = rt.scene_features(&flat, 8).unwrap();
-    for (f, want) in frames.iter().zip(&artifact) {
-        let got = frame_features(f);
-        assert_eq!(got.len(), want.len());
-        for (a, b) in got.iter().zip(want) {
-            assert!((a - b).abs() < 1e-4, "native {a} vs artifact {b}");
-        }
+    let artifact = EmbedBackend::scene_features(&rt, &flat, 8).unwrap();
+    let native_rows = nat.scene_features(&flat, 8).unwrap();
+    for (a, b) in artifact.iter().zip(&native_rows) {
+        let d = max_abs_diff(a, b);
+        assert!(d < 1e-4, "scene features diverged across backends: {d}");
     }
 }
 
 #[test]
-fn native_softmax_matches_similarity_kernel() {
-    let rt = runtime();
-    let m = rt.model();
+fn similarity_epilogue_agrees_across_backends() {
+    let Some(rt) = runtime() else { return };
+    let nat = native();
+    let m = rt.model().clone();
     let mut rng = Pcg64::seeded(43);
     let n = 640;
     let mut index = vec![0.0f32; m.sim_rows * m.d_embed];
@@ -51,59 +94,99 @@ fn native_softmax_matches_similarity_kernel() {
         for x in row.iter_mut() {
             *x = rng.normal();
         }
-        venus::util::l2_normalize(row);
+        l2_normalize(row);
     }
     let q = index[5 * m.d_embed..6 * m.d_embed].to_vec();
     for tau in [0.05f32, 0.07, 0.2, 1.0] {
-        let (scores, probs) = rt.similarity(&q, &index, n, tau).unwrap();
-        let mut native = vec![0.0f32; n];
-        softmax_temp(&scores, tau, &mut native);
-        for (a, b) in native.iter().zip(&probs) {
-            assert!((a - b).abs() < 1e-4, "tau={tau}: native {a} vs kernel {b}");
-        }
+        let (a_scores, a_probs) = EmbedBackend::similarity(&rt, &q, &index, n, tau).unwrap();
+        let (n_scores, n_probs) = nat.similarity(&q, &index, n, tau).unwrap();
+        assert!(max_abs_diff(&a_scores, &n_scores) < 1e-4, "tau={tau}: scores");
+        assert!(max_abs_diff(&a_probs, &n_probs) < 1e-4, "tau={tau}: probs");
+        // and both agree with the scalar epilogue
+        let mut host = vec![0.0f32; n];
+        softmax_temp(&a_scores, tau, &mut host);
+        assert!(max_abs_diff(&host, &a_probs) < 1e-4, "tau={tau}: host recompute");
     }
 }
 
-/// The baseline oracle must rank frames the same way the real MEM does:
-/// frames showing the queried concept above frames that don't.
-#[test]
-fn oracle_ranking_consistent_with_real_encoder() {
-    let rt = runtime();
-    let codes = rt.concept_codes().unwrap();
-    let patch = rt.model().patch;
-    let mut engine = EmbedEngine::new(runtime(), false).unwrap();
+// -------------------------------------------------------------------
+// 2. golden-exact: artifact path vs recorded Python reference numerics
+// -------------------------------------------------------------------
 
-    let mut rng = Pcg64::seeded(47);
-    let size = rt.model().img_size;
+#[test]
+fn golden_image_embedding_matches_python() {
+    let Some(rt) = runtime() else { return };
+    let img = read_f32(&rt, "golden_image");
+    let want = read_f32(&rt, "golden_image_emb");
+    let got = rt.embed_image(&img, 1).unwrap();
+    let d = max_abs_diff(&got[0], &want);
+    assert!(d < 5e-4, "image embedding diverged: max|Δ| = {d}");
+}
+
+#[test]
+fn golden_text_embedding_matches_python() {
+    let Some(rt) = runtime() else { return };
+    let tokens = rt.manifest().read_i32_file("golden_tokens").unwrap().0;
+    let want = read_f32(&rt, "golden_text_emb");
+    let got = rt.embed_text(&tokens).unwrap();
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 5e-4, "text embedding diverged: max|Δ| = {d}");
+}
+
+#[test]
+fn golden_scene_features_match_python() {
+    let Some(rt) = runtime() else { return };
+    let img = read_f32(&rt, "golden_image");
+    let want = read_f32(&rt, "golden_scene_feat");
+    // scene_feat artifact is batch-8: tile the golden image
+    let mut batch = Vec::with_capacity(img.len() * 8);
+    for _ in 0..8 {
+        batch.extend_from_slice(&img);
+    }
+    let got = rt.scene_features(&batch, 8).unwrap();
+    for row in &got {
+        let d = max_abs_diff(row, &want);
+        assert!(d < 1e-4, "scene features diverged: max|Δ| = {d}");
+    }
+}
+
+// -------------------------------------------------------------------
+// 3. behavioral parity: both backends must support the retrieval oracle
+// -------------------------------------------------------------------
+
+#[test]
+fn both_backends_rank_planted_concepts_for_the_same_query() {
+    let Some(rt) = runtime() else { return };
+    let nat = native();
+    let query_text = "what happened with concept07";
     let target = 7usize;
 
-    // 8 frames: 4 with the target concept planted, 4 with others
-    let mut frames = Vec::new();
-    for i in 0..8u64 {
-        let mut f = Frame::new(size);
-        for v in f.data_mut() {
-            *v = rng.f32();
+    for (name, be) in [
+        ("pjrt", &rt as &dyn EmbedBackend),
+        ("native", &nat as &dyn EmbedBackend),
+    ] {
+        let m = be.model().clone();
+        let codes = be.concept_codes().unwrap();
+        let tok = Tokenizer::from_model(be.model());
+        let mut rng = Pcg64::seeded(47);
+        let mut flat = Vec::new();
+        for i in 0..8u64 {
+            let mut f = Frame::new(m.img_size);
+            for v in f.data_mut() {
+                *v = rng.f32();
+            }
+            let c = if i < 4 { target } else { (target + 1 + i as usize) % codes.len() };
+            f.blend_block(0, 0, m.patch, &codes[c], 0.8);
+            flat.extend_from_slice(f.data());
         }
-        let c = if i < 4 { target } else { (target + 1 + i as usize) % codes.len() };
-        f.blend_block(0, 0, patch, &codes[c], 0.8);
-        frames.push(f);
+        let embs = be.embed_image(&flat, 8).unwrap();
+        let qvec = be.embed_text(&tok.tokenize(query_text)).unwrap();
+        let sims: Vec<f32> = embs.iter().map(|e| dot(&qvec, e)).collect();
+        let min_match = sims[..4].iter().cloned().fold(f32::INFINITY, f32::min);
+        let max_other = sims[4..].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(
+            min_match > max_other + 0.2,
+            "{name}: planted-concept ranking margin too small: {sims:?}"
+        );
     }
-    let refs: Vec<&Frame> = frames.iter().collect();
-    let embs = engine.embed_index_frames(&refs).unwrap();
-    let qvec = engine
-        .embed_query(&format!("what happened with concept{target:02}"))
-        .unwrap();
-
-    let sims: Vec<f32> = embs.iter().map(|e| venus::util::dot(&qvec, e)).collect();
-    let min_match = sims[..4].iter().cloned().fold(f32::INFINITY, f32::min);
-    let max_other = sims[4..].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    assert!(
-        min_match > max_other,
-        "real encoder must separate match vs non-match: {sims:?}"
-    );
-    // and the margin is large, as the oracle's MATCH_MEAN/OTHER_MEAN assume
-    assert!(
-        min_match - max_other > 0.2,
-        "margin too small for the oracle model: {sims:?}"
-    );
 }

@@ -141,23 +141,52 @@ fn prop_softmax_normalized_and_monotone() {
 
 #[test]
 fn prop_flat_and_ivf_score_all_agree() {
-    for seed in 0..10u64 {
-        let mut rng = Pcg64::seeded(5000 + seed);
-        let dim = 8 + rng.range(0, 24);
-        let n = rng.range(10, 600);
-        let mut flat = FlatIndex::new(dim, Metric::Cosine);
-        let mut ivf = IvfIndex::new(dim, Metric::Cosine, 8, 4);
+    // score_all is exact for both indexes, under every metric
+    for metric in [Metric::Cosine, Metric::InnerProduct, Metric::L2] {
+        for seed in 0..10u64 {
+            let mut rng = Pcg64::seeded(5000 + seed);
+            let dim = 8 + rng.range(0, 24);
+            let n = rng.range(10, 600);
+            let mut flat = FlatIndex::new(dim, metric);
+            let mut ivf = IvfIndex::new(dim, metric, 8, 4);
+            for _ in 0..n {
+                let v: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+                flat.insert(&v).unwrap();
+                ivf.insert(&v).unwrap();
+            }
+            let q: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            flat.score_all(&q, &mut a);
+            ivf.score_all(&q, &mut b);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-5, "{metric:?} seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_l2_self_query_round_trips() {
+    // under the L2 metric every stored vector is its own nearest neighbor
+    // (score 0), trained or not — the metric-dispatch regression test
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::seeded(5600 + seed);
+        let dim = 4 + rng.range(0, 12);
+        let n = 280 + rng.range(0, 200); // crosses the IVF training threshold
+        let mut flat = FlatIndex::new(dim, Metric::L2);
+        let mut ivf = IvfIndex::new(dim, Metric::L2, 8, 8); // probe all
         for _ in 0..n {
-            let v: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let scale = 0.5 + rng.f32() * 10.0; // mixed magnitudes
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal() * scale).collect();
             flat.insert(&v).unwrap();
             ivf.insert(&v).unwrap();
         }
-        let q: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
-        let (mut a, mut b) = (Vec::new(), Vec::new());
-        flat.score_all(&q, &mut a);
-        ivf.score_all(&q, &mut b);
-        for (x, y) in a.iter().zip(&b) {
-            assert!((x - y).abs() < 1e-5, "seed {seed}");
+        for probe in [0usize, n / 2, n - 1] {
+            let q = flat.vector(probe).to_vec();
+            assert_eq!(flat.search(&q, 1)[0].id, probe, "flat seed {seed}");
+            let hit = ivf.search(&q, 1)[0];
+            assert_eq!(hit.id, probe, "ivf seed {seed}");
+            assert!(hit.score.abs() < 1e-6, "seed {seed}: self-distance {}", hit.score);
         }
     }
 }

@@ -1,16 +1,36 @@
-//! Cross-language integration tests: the Rust PJRT execution path must
-//! reproduce the Python reference numerics recorded in the golden files at
-//! `make artifacts` time.  This is the authoritative proof that the HLO
-//! text round-trip (jax → text → xla crate parser → PJRT CPU) is lossless.
+//! Backend contract goldens: every [`EmbedBackend`] implementation must
+//! satisfy these numeric/structural properties.  Runs against the
+//! process-default backend — the native MEM on default builds, the PJRT
+//! artifact runtime when a pjrt build finds artifacts — so the contract
+//! is enforced on whatever backend actually serves requests.
+//!
+//! (The byte-level Python-golden comparisons that used to live here apply
+//! only to the artifact path and moved to the `pjrt`-gated parity suite in
+//! `native_vs_artifact.rs`.)
+//!
+//! Honest caveat: on default builds the scene-feature and similarity
+//! checks compare the native backend against the same host routines it is
+//! built from, so they pin the *contract* (shapes, truncation, masking,
+//! normalization) rather than independently re-deriving the numerics; the
+//! independent cross-implementation comparison is the pjrt parity suite.
 
-use venus::runtime::Runtime;
+use venus::backend::{load_default, EmbedBackend};
+use venus::embed::Tokenizer;
+use venus::util::rng::Pcg64;
+use venus::util::{dot, l2_normalize, softmax_temp};
+use venus::video::frame::Frame;
 
-fn runtime() -> Runtime {
-    Runtime::load_default().expect("artifacts missing — run `make artifacts`")
+fn backend() -> Box<dyn EmbedBackend> {
+    load_default().expect("default backend must construct without artifacts")
 }
 
-fn read_f32(rt: &Runtime, key: &str) -> Vec<f32> {
-    rt.manifest().read_f32_file(key).unwrap().0
+fn noisy_frame(seed: u64, size: usize) -> Frame {
+    let mut rng = Pcg64::seeded(seed);
+    let mut f = Frame::new(size);
+    for v in f.data_mut() {
+        *v = rng.f32();
+    }
+    f
 }
 
 fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
@@ -22,61 +42,29 @@ fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 }
 
 #[test]
-fn golden_image_embedding_matches_python() {
-    let rt = runtime();
-    let img = read_f32(&rt, "golden_image");
-    let want = read_f32(&rt, "golden_image_emb");
-    let got = rt.embed_image(&img, 1).unwrap();
-    let d = max_abs_diff(&got[0], &want);
-    assert!(d < 5e-4, "image embedding diverged: max|Δ| = {d}");
-}
-
-#[test]
-fn golden_text_embedding_matches_python() {
-    let rt = runtime();
-    let tokens = rt.manifest().read_i32_file("golden_tokens").unwrap().0;
-    let want = read_f32(&rt, "golden_text_emb");
-    let got = rt.embed_text(&tokens).unwrap();
-    let d = max_abs_diff(&got, &want);
-    assert!(d < 5e-4, "text embedding diverged: max|Δ| = {d}");
-}
-
-#[test]
-fn golden_scene_features_match_python() {
-    let rt = runtime();
-    let img = read_f32(&rt, "golden_image");
-    let want = read_f32(&rt, "golden_scene_feat");
-    // scene_feat artifact is batch-8: tile the golden image
-    let mut batch = Vec::with_capacity(img.len() * 8);
-    for _ in 0..8 {
-        batch.extend_from_slice(&img);
-    }
-    let got = rt.scene_features(&batch, 8).unwrap();
-    for row in &got {
-        let d = max_abs_diff(row, &want);
-        assert!(d < 1e-4, "scene features diverged: max|Δ| = {d}");
-    }
-}
-
-#[test]
 fn embeddings_are_unit_norm() {
-    let rt = runtime();
-    let img = read_f32(&rt, "golden_image");
-    let emb = rt.embed_image(&img, 1).unwrap();
+    let be = backend();
+    let f = noisy_frame(101, be.model().img_size);
+    let emb = be.embed_image(f.data(), 1).unwrap();
     let norm: f32 = emb[0].iter().map(|x| x * x).sum::<f32>().sqrt();
-    assert!((norm - 1.0).abs() < 1e-4, "norm = {norm}");
+    assert!((norm - 1.0).abs() < 1e-4, "image norm = {norm}");
+
+    let tok = Tokenizer::from_model(be.model());
+    let q = be.embed_text(&tok.tokenize("when did concept05 happen")).unwrap();
+    let norm: f32 = q.iter().map(|x| x * x).sum::<f32>().sqrt();
+    assert!((norm - 1.0).abs() < 1e-4, "text norm = {norm}");
 }
 
 #[test]
 fn batched_image_tower_consistent_across_batch_sizes() {
-    let rt = runtime();
-    let img = read_f32(&rt, "golden_image");
-    let e1 = rt.embed_image(&img, 1).unwrap()[0].clone();
+    let be = backend();
+    let f = noisy_frame(102, be.model().img_size);
+    let e1 = be.embed_image(f.data(), 1).unwrap()[0].clone();
     let mut b8 = Vec::new();
     for _ in 0..8 {
-        b8.extend_from_slice(&img);
+        b8.extend_from_slice(f.data());
     }
-    let e8 = rt.embed_image(&b8, 8).unwrap();
+    let e8 = be.embed_image(&b8, 8).unwrap();
     for row in &e8 {
         let d = max_abs_diff(row, &e1);
         assert!(d < 1e-4, "batch-8 row diverged from batch-1: {d}");
@@ -84,32 +72,44 @@ fn batched_image_tower_consistent_across_batch_sizes() {
 }
 
 #[test]
+fn embedding_is_deterministic_across_backend_instances() {
+    let a = backend();
+    let b = backend();
+    let f = noisy_frame(103, a.model().img_size);
+    let ea = a.embed_image(f.data(), 1).unwrap();
+    let eb = b.embed_image(f.data(), 1).unwrap();
+    assert!(
+        max_abs_diff(&ea[0], &eb[0]) < 1e-6,
+        "two identically-configured backends must agree"
+    );
+}
+
+#[test]
 fn similarity_kernel_matches_native_softmax() {
-    let rt = runtime();
-    let m = rt.model();
+    let be = backend();
+    let m = be.model().clone();
     // deterministic unit-norm index rows
-    let mut rng = venus::util::rng::Pcg64::seeded(99);
-    let n_valid = 700;
+    let mut rng = Pcg64::seeded(99);
+    let n_valid = 700.min(m.sim_rows);
     let mut index = vec![0.0f32; m.sim_rows * m.d_embed];
     for r in 0..n_valid {
         let row = &mut index[r * m.d_embed..(r + 1) * m.d_embed];
         for x in row.iter_mut() {
             *x = rng.normal();
         }
-        venus::util::l2_normalize(row);
+        l2_normalize(row);
     }
     let query: Vec<f32> = index[3 * m.d_embed..4 * m.d_embed].to_vec();
     let tau = 0.1;
-    let (scores, probs) = rt.similarity(&query, &index, n_valid, tau).unwrap();
+    let (scores, probs) = be.similarity(&query, &index, n_valid, tau).unwrap();
     assert_eq!(scores.len(), n_valid);
     // native recompute
     let mut want_scores = vec![0.0f32; n_valid];
     for r in 0..n_valid {
-        want_scores[r] =
-            venus::util::dot(&query, &index[r * m.d_embed..(r + 1) * m.d_embed]);
+        want_scores[r] = dot(&query, &index[r * m.d_embed..(r + 1) * m.d_embed]);
     }
     let mut want_probs = vec![0.0f32; n_valid];
-    venus::util::softmax_temp(&want_scores, tau, &mut want_probs);
+    softmax_temp(&want_scores, tau, &mut want_probs);
     assert!(max_abs_diff(&scores, &want_scores) < 1e-4);
     assert!(max_abs_diff(&probs, &want_probs) < 1e-4);
     // exact-match row must dominate
@@ -125,40 +125,104 @@ fn similarity_kernel_matches_native_softmax() {
 }
 
 #[test]
-fn fused_entry_accepts_aux_tokens() {
-    let rt = runtime();
-    let m = rt.model();
-    let img = read_f32(&rt, "golden_image");
+fn scene_features_match_native_frontend() {
+    // Eq. 1 features from the backend must agree with the pure-Rust
+    // perception front-end used on the streaming hot path.
+    let be = backend();
+    let size = be.model().img_size;
+    let mut flat = Vec::new();
+    let mut frames = Vec::new();
+    for s in 0..4u64 {
+        let f = noisy_frame(110 + s, size);
+        flat.extend_from_slice(f.data());
+        frames.push(f);
+    }
+    let got = be.scene_features(&flat, 4).unwrap();
+    for (f, row) in frames.iter().zip(&got) {
+        let want = venus::features::frame_features(f);
+        let d = max_abs_diff(row, &want);
+        assert!(d < 1e-4, "scene features diverged: {d}");
+    }
+}
+
+#[test]
+fn fused_entry_sharpens_planted_concept() {
+    let be = backend();
+    let m = be.model().clone();
+    let codes = be.concept_codes().unwrap();
+
+    // concept 5 planted strongly in the watermark patch
+    let mut f = noisy_frame(120, m.img_size);
+    f.blend_block(0, 0, m.patch, &codes[5], 0.9);
     let mut batch = Vec::new();
     for _ in 0..8 {
-        batch.extend_from_slice(&img);
+        batch.extend_from_slice(f.data());
     }
-    // concept 5 is planted in the golden image; aux prompt mentions it
     let concept_token = (m.concept_token_base + 5) as i32;
     let mut aux = vec![0i32; 8 * m.seq_len];
     for b in 0..8 {
         aux[b * m.seq_len] = concept_token;
     }
-    let fused = rt.embed_fused(&batch, &aux, 8).unwrap();
-    let plain = rt.embed_image(&batch, 8).unwrap();
+    let fused = be.embed_fused(&batch, &aux, 8).unwrap();
+    let plain = be.embed_image(&batch, 8).unwrap();
     // aux prompt must sharpen the planted concept's direction
-    let dirs = rt.concept_dirs().unwrap();
+    let dirs = be.concept_dirs().unwrap();
     let mut u = dirs[5].clone();
-    venus::util::l2_normalize(&mut u);
-    let f = venus::util::dot(&fused[0], &u);
-    let p = venus::util::dot(&plain[0], &u);
+    l2_normalize(&mut u);
+    let fu = dot(&fused[0], &u);
+    let pl = dot(&plain[0], &u);
     assert!(
-        f > p,
-        "aux prompt should raise concept-5 alignment: fused {f} vs plain {p}"
+        fu > pl,
+        "aux prompt should raise concept-5 alignment: fused {fu} vs plain {pl}"
+    );
+}
+
+#[test]
+fn cross_modal_alignment_separates_concepts() {
+    // The system-level property every backend must deliver: frames showing
+    // a concept embed near text queries naming that concept, with a margin
+    // the retrieval oracle can rely on.
+    let be = backend();
+    let m = be.model().clone();
+    let codes = be.concept_codes().unwrap();
+    let tok = Tokenizer::from_model(be.model());
+    let target = 7usize;
+
+    let mut frames = Vec::new();
+    for i in 0..8u64 {
+        let mut f = noisy_frame(130 + i, m.img_size);
+        let c = if i < 4 { target } else { (target + 1 + i as usize) % codes.len() };
+        f.blend_block(0, 0, m.patch, &codes[c], 0.8);
+        frames.push(f);
+    }
+    let mut flat = Vec::new();
+    for f in &frames {
+        flat.extend_from_slice(f.data());
+    }
+    let embs = be.embed_image(&flat, 8).unwrap();
+    let qvec = be
+        .embed_text(&tok.tokenize(&format!("what happened with concept{target:02}")))
+        .unwrap();
+
+    let sims: Vec<f32> = embs.iter().map(|e| dot(&qvec, e)).collect();
+    let min_match = sims[..4].iter().cloned().fold(f32::INFINITY, f32::min);
+    let max_other = sims[4..].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    assert!(
+        min_match > max_other,
+        "backend must separate match vs non-match: {sims:?}"
+    );
+    assert!(
+        min_match - max_other > 0.2,
+        "margin too small for the retrieval oracle: {sims:?}"
     );
 }
 
 #[test]
 fn concept_side_files_consistent() {
-    let rt = runtime();
-    let m = rt.model();
-    let codes = rt.concept_codes().unwrap();
-    let dirs = rt.concept_dirs().unwrap();
+    let be = backend();
+    let m = be.model().clone();
+    let codes = be.concept_codes().unwrap();
+    let dirs = be.concept_dirs().unwrap();
     assert_eq!(codes.len(), m.n_concepts);
     assert_eq!(dirs.len(), m.n_concepts);
     assert_eq!(codes[0].len(), m.patch * m.patch * 3);

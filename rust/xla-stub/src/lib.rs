@@ -1,0 +1,222 @@
+//! Offline stub of the `xla` PJRT bindings (API-compatible subset).
+//!
+//! The Venus PJRT backend (`venus::runtime`, behind the `pjrt` cargo
+//! feature) compiles against this crate so the whole feature surface
+//! type-checks without the XLA C++ runtime installed.  Semantics:
+//!
+//!   * [`Literal`] is fully functional: shape/dtype-checked host buffers
+//!     with byte-exact round-trips (`create_from_shape_and_untyped_data`,
+//!     `to_vec`, `element_count`) — the unit tests that exercise literal
+//!     plumbing pass against the stub.
+//!   * [`PjRtClient::cpu`], compilation, and execution return
+//!     [`Error::Unavailable`]: there is no device runtime here.  Callers
+//!     that probe for artifacts at startup (`Runtime::load_default`) fail
+//!     cleanly and fall back to the native backend.
+//!
+//! To execute real AOT artifacts, replace this path dependency with the
+//! actual `xla` bindings (`make artifacts` + Cargo `[patch]`; see the repo
+//! Makefile and DESIGN.md §Backends).
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type: every device-side operation reports `Unavailable`.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub has no XLA runtime behind it.
+    Unavailable(&'static str),
+    /// Host-side shape/dtype validation failure (real behavior).
+    Shape(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(op) => write!(
+                f,
+                "xla stub: '{op}' requires the real xla bindings (this build \
+                 type-checks the PJRT backend only; see Makefile)"
+            ),
+            Error::Shape(msg) => write!(f, "xla stub: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the Venus artifacts use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn byte_width(self) -> usize {
+        4
+    }
+}
+
+/// Marker trait tying Rust scalar types to [`ElementType`]s.
+pub trait NativeType: Sized + Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// A host-side literal: shape + dtype + raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if data.len() != n * ty.byte_width() {
+            return Err(Error::Shape(format!(
+                "literal data is {} bytes, shape {dims:?} needs {}",
+                data.len(),
+                n * ty.byte_width()
+            )));
+        }
+        Ok(Self { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn shape_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::ELEMENT_TYPE != self.ty {
+            return Err(Error::Shape(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// De-tuple a tuple literal.  The stub never produces tuples (they only
+    /// come back from execution), so this always reports `Unavailable`.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation handle (opaque in the stub).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self(())
+    }
+}
+
+/// PJRT device client.  The stub cannot create one.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &data)
+            .unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn device_ops_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
