@@ -14,7 +14,7 @@
 #   3. `cargo test --features pjrt` — runs the cross-backend parity suite
 #      (rust/tests/native_vs_artifact.rs) against the artifacts.
 
-.PHONY: all build test bench verify artifacts fmt clean
+.PHONY: all build test bench lint verify artifacts fmt clean
 
 all: build
 
@@ -26,6 +26,9 @@ test:
 
 bench:
 	cargo bench
+
+lint:
+	cargo clippy --all-targets -- -D warnings
 
 # Tier-1 verification, exactly what CI runs.
 verify: build test

@@ -37,7 +37,7 @@ fn main() -> venus::Result<()> {
                 cfg.retrieval.tau = tau;
                 let mut qe = QueryEngine::new(
                     EmbedEngine::default_backend(true)?,
-                    Arc::clone(&case.memory),
+                    Arc::clone(&case.fabric),
                     cfg.retrieval.clone(),
                     3,
                 );
@@ -49,7 +49,8 @@ fn main() -> venus::Result<()> {
                     let out = qe.retrieve_with(&q.text, RetrievalMode::Akr)?;
                     frames += out.selection.frames.len();
                     draws += out.draws;
-                    let (ok, _) = vlm.judge(q, case.synth.script(), &out.selection.frames);
+                    let (ok, _) =
+                        vlm.judge(q, case.synth.script(), &out.selection.frame_indices());
                     correct += ok as usize;
                 }
                 let n = case.queries.len() as f64;

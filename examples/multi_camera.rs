@@ -1,0 +1,235 @@
+//! multi_camera — campus-surveillance scenario over the memory fabric.
+//!
+//! Four campus cameras (quad, library, cafeteria, parking) stream
+//! concurrently, each with a DISJOINT concept schedule (a concept — a
+//! person, a vehicle, an activity — appears on exactly one camera).  All
+//! four pipelines feed ONE shared embed pool over the ONE process-shared
+//! backend; each camera's partitions land in its own memory shard.
+//!
+//! Then the operator asks:
+//!   * per-camera questions (`StreamScope::One`) — answers cite only that
+//!     camera's footage;
+//!   * a cross-camera question naming concepts seen on different cameras
+//!     (`StreamScope::All`) — the scatter-gather query merges every
+//!     shard's Eq. 4–5 scores into one distribution, so the answer cites
+//!     evidence frames from MULTIPLE cameras at once.
+//!
+//! Run: `cargo run --release --example multi_camera`
+//! Works on a bare checkout — the native backend needs no artifacts.
+
+use std::sync::Arc;
+
+use venus::backend::{self, EmbedBackend};
+use venus::config::VenusConfig;
+use venus::coordinator::query::{QueryEngine, RetrievalMode};
+use venus::embed::EmbedEngine;
+use venus::ingest::{EmbedPool, Pipeline};
+use venus::memory::{
+    FrameId, MemoryFabric, RawStore, StreamId, StreamScope, SynthBackedRaw,
+};
+use venus::util::stats::fmt_duration;
+use venus::video::synth::{SynthConfig, VideoSynth};
+
+const CAMERAS: [&str; 4] = ["quad", "library", "cafeteria", "parking"];
+const DURATION_S: f64 = 30.0;
+
+/// Build camera `i`'s stream with a disjoint concept schedule: the
+/// script's randomly-drawn concept events are remapped into camera `i`'s
+/// private slice of the concept vocabulary.
+fn camera_stream(i: usize, codes: &[Vec<f32>], patch: usize) -> Arc<VideoSynth> {
+    let n_cameras = CAMERAS.len();
+    let per_cam = codes.len() / n_cameras;
+    assert!(per_cam >= 1, "concept vocabulary too small to partition");
+    let cfg = SynthConfig {
+        duration_s: DURATION_S,
+        seed: 0xcafe + i as u64 * 7919,
+        ..Default::default()
+    };
+    let mut script = venus::video::synth::SceneScript::generate(&cfg, codes.len());
+    for scene in &mut script.scenes {
+        for ev in &mut scene.events {
+            // fold any concept into this camera's private range
+            ev.concept = i * per_cam + ev.concept % per_cam;
+        }
+    }
+    // a camera whose random schedule drew zero events still needs one
+    // observable concept (the cross-camera query names one per camera)
+    if script.concept_census().is_empty() {
+        let scene = &mut script.scenes[0];
+        scene.events.push(venus::video::synth::ConceptEvent {
+            concept: i * per_cam,
+            start: scene.start,
+            end: scene.start + (scene.len / 2).max(1),
+            slot: 0,
+        });
+    }
+    Arc::new(VideoSynth::with_script(cfg, script, codes.to_vec(), patch))
+}
+
+/// A concept that actually appears on camera `i` (for query text).
+fn visible_concept(synth: &VideoSynth) -> usize {
+    synth
+        .script()
+        .concept_census()
+        .first()
+        .map(|&(c, _)| c)
+        .expect("every camera script plants at least one concept")
+}
+
+fn main() -> venus::Result<()> {
+    println!("=== Venus multi-camera fabric: campus surveillance ===");
+    let cfg = VenusConfig::default();
+
+    // ONE backend for the whole process: d_embed probe, embed pool, and
+    // the query engine all share it
+    let be = backend::shared_default()?;
+    let codes = be.concept_codes()?;
+    let patch = be.model().patch;
+    let d_embed = be.model().d_embed;
+
+    let synths: Vec<Arc<VideoSynth>> = (0..CAMERAS.len())
+        .map(|i| camera_stream(i, &codes, patch))
+        .collect();
+    for (name, synth) in CAMERAS.iter().zip(&synths) {
+        let concepts: Vec<usize> =
+            synth.script().concept_census().iter().map(|&(c, _)| c).collect();
+        println!(
+            "camera {name:<10} {:>4} frames, {} scenes, concepts {concepts:?}",
+            synth.total_frames(),
+            synth.script().scenes.len()
+        );
+    }
+
+    // K-shard fabric + shared embed pool
+    let raws: Vec<Box<dyn RawStore>> = synths
+        .iter()
+        .map(|s| Box::new(SynthBackedRaw::new(Arc::clone(s))) as Box<dyn RawStore>)
+        .collect();
+    let fabric = Arc::new(MemoryFabric::new(&cfg.memory, d_embed, raws)?);
+    let workers = cfg.fabric.resolved_pool_workers().max(CAMERAS.len().min(2));
+    let pool = EmbedPool::start(
+        Arc::clone(&be),
+        cfg.ingest.aux_models,
+        workers,
+        cfg.ingest.queue_capacity,
+    )?;
+
+    // concurrent ingestion: one pipeline thread per camera
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for (i, synth) in synths.iter().enumerate() {
+        let shard = Arc::clone(fabric.shard(StreamId(i as u16))?);
+        let mut pipe =
+            Pipeline::attach(&cfg.ingest, synth.config().fps, &pool, shard)?;
+        let synth = Arc::clone(synth);
+        handles.push(std::thread::spawn(
+            move || -> venus::Result<venus::ingest::IngestStats> {
+                for f in 0..synth.total_frames() {
+                    pipe.push_frame(f, &synth.frame(f))?;
+                }
+                pipe.finish()
+            },
+        ));
+    }
+    let mut total_frames = 0u64;
+    for (name, h) in CAMERAS.iter().zip(handles) {
+        let stats = h.join().expect("ingest thread")?;
+        total_frames += stats.frames;
+        println!(
+            "ingested {name:<10} {:>4} frames -> {:>3} index vectors ({} partitions)",
+            stats.frames, stats.embedded, stats.partitions
+        );
+    }
+    pool.shutdown()?;
+    fabric.check_invariants()?;
+    println!(
+        "fabric: {} cameras, {} frames, {} index vectors in {} (shared pool, {} workers)",
+        fabric.n_streams(),
+        total_frames,
+        fabric.total_indexed(),
+        fmt_duration(t0.elapsed().as_secs_f64()),
+        workers,
+    );
+
+    let mut qe = QueryEngine::new(
+        EmbedEngine::new(be, cfg.ingest.aux_models)?,
+        Arc::clone(&fabric),
+        cfg.retrieval.clone(),
+        42,
+    );
+
+    // ---- per-camera questions (One scope) ----
+    println!();
+    for (i, name) in CAMERAS.iter().enumerate() {
+        let concept = visible_concept(&synths[i]);
+        let text = format!("what happened with concept{concept:02} in the video");
+        let out = qe.retrieve_scoped_with(
+            &text,
+            StreamScope::One(StreamId(i as u16)),
+            RetrievalMode::Akr,
+        )?;
+        assert!(
+            out.selection.frames.iter().all(|f| f.stream == StreamId(i as u16)),
+            "One-scope answer cited a foreign camera"
+        );
+        println!(
+            "[{name}] \"{text}\" -> {} frames from this camera only ({} AKR draws, {})",
+            out.selection.frames.len(),
+            out.draws,
+            fmt_duration(out.timings.total_s()),
+        );
+    }
+
+    // ---- the cross-camera question (All scope) ----
+    let (cam_a, cam_b) = (0usize, 2usize);
+    let (ca, cb) = (visible_concept(&synths[cam_a]), visible_concept(&synths[cam_b]));
+    let text = format!("what happened with concept{ca:02} and concept{cb:02} in the video");
+    println!();
+    println!(
+        "cross-camera query (\"{}\" is only on {}, \"concept{cb:02}\" only on {}):",
+        format_args!("concept{ca:02}"),
+        CAMERAS[cam_a],
+        CAMERAS[cam_b]
+    );
+    let mut out = qe.retrieve_scoped_with(
+        &text,
+        StreamScope::All,
+        RetrievalMode::FixedSampling(48),
+    )?;
+    if out.selection.streams().len() < 2 {
+        // one camera's peak can dominate a sharp softmax; a warmer τ
+        // spreads the draw mass over both named concepts' clusters
+        let mut warm = cfg.retrieval.clone();
+        warm.tau *= 3.0;
+        qe.set_config(warm);
+        out = qe.retrieve_scoped_with(
+            &text,
+            StreamScope::All,
+            RetrievalMode::FixedSampling(48),
+        )?;
+    }
+    let streams = out.selection.streams();
+    let by_cam: Vec<String> = streams
+        .iter()
+        .map(|s| {
+            let n = out.selection.frames.iter().filter(|f| f.stream == *s).count();
+            format!("{}={n}", CAMERAS[s.index()])
+        })
+        .collect();
+    println!(
+        "  \"{text}\"\n  -> {} frames across {} cameras ({}) in {}",
+        out.selection.frames.len(),
+        streams.len(),
+        by_cam.join(", "),
+        fmt_duration(out.timings.total_s()),
+    );
+    let sample: Vec<FrameId> = out.selection.frames.iter().take(8).copied().collect();
+    println!("  evidence sample: {sample:?}");
+    assert!(
+        streams.len() >= 2,
+        "an All-scope answer to a two-camera question must cite ≥2 cameras, got {streams:?}"
+    );
+    println!();
+    println!("cross-camera scatter-gather OK: one answer, evidence from {} cameras", streams.len());
+    Ok(())
+}

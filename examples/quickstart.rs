@@ -40,7 +40,7 @@ fn main() -> venus::Result<()> {
         stats.frames,
         stats.partitions,
         stats.embedded,
-        venus.memory.read().unwrap().sparsity().round()
+        venus.memory().read().unwrap().sparsity().round()
     );
 
     // 4. querying stage: ask about a concept the generator planted
@@ -68,7 +68,7 @@ fn main() -> venus::Result<()> {
         .selection
         .frames
         .iter()
-        .filter(|&&f| q.covers(f))
+        .filter(|f| q.covers(f.idx))
         .count();
     println!(
         "ground truth: {covered}/{} selected frames fall in the evidence spans {:?}",

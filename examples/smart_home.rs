@@ -19,7 +19,7 @@ use venus::cloud::{SelectionStats, VlmClient};
 use venus::config::VenusConfig;
 use venus::embed::EmbedEngine;
 use venus::ingest::Pipeline;
-use venus::memory::{Hierarchy, SynthBackedRaw};
+use venus::memory::{Hierarchy, MemoryFabric, SynthBackedRaw};
 use venus::server::Service;
 use venus::util::stats::{fmt_duration, Samples, Table};
 use venus::video::synth::{SynthConfig, VideoSynth};
@@ -33,7 +33,7 @@ fn main() -> venus::Result<()> {
     let cfg = VenusConfig::default();
 
     // ---- the home camera stream ----
-    let be = backend::load_default()?;
+    let be = backend::shared_default()?;
     let codes = be.concept_codes()?;
     let patch = be.model().patch;
     let d_embed = be.model().d_embed;
@@ -80,7 +80,8 @@ fn main() -> venus::Result<()> {
     // ---- online querying stage ----
     let queries = WorkloadGen::new(77, DatasetPreset::VideoMmeShort)
         .generate(synth.script(), N_QUERIES);
-    let service = Service::start(&cfg, Arc::clone(&memory), 99)?;
+    let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
+    let service = Service::start(&cfg, fabric, 99)?;
     let mut vlm = VlmClient::new(cfg.cloud.clone(), 1234);
 
     let mut edge = Samples::default();
@@ -97,9 +98,10 @@ fn main() -> venus::Result<()> {
         edge.push(res.outcome.timings.total_s());
         totals.push(res.total_s());
         frames_used.push(res.outcome.selection.frames.len() as f64);
-        let (ok, _) = vlm.judge(q, synth.script(), &res.outcome.selection.frames);
+        let picked = res.outcome.selection.frame_indices();
+        let (ok, _) = vlm.judge(q, synth.script(), &picked);
         correct += ok as usize;
-        let st = SelectionStats::compute(q, synth.script(), &res.outcome.selection.frames, 4);
+        let st = SelectionStats::compute(q, synth.script(), &picked, 4);
         let _ = st;
     }
     let wall = t0.elapsed().as_secs_f64();

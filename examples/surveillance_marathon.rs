@@ -30,7 +30,7 @@ fn main() -> venus::Result<()> {
     println!("=== Venus surveillance marathon ({} min stream) ===", STREAM_S / 60.0);
     let cfg = VenusConfig::default();
 
-    let be = backend::load_default()?;
+    let be = backend::shared_default()?;
     let codes = be.concept_codes()?;
     let patch = be.model().patch;
     let d_embed = be.model().d_embed;
@@ -56,8 +56,8 @@ fn main() -> venus::Result<()> {
     let mut pipe =
         Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory))?;
 
-    let mut qe = QueryEngine::new(
-        EmbedEngine::new(backend::load_default()?, cfg.ingest.aux_models)?,
+    let mut qe = QueryEngine::over_memory(
+        EmbedEngine::default_backend(cfg.ingest.aux_models)?,
         Arc::clone(&memory),
         cfg.retrieval.clone(),
         5,

@@ -41,7 +41,7 @@ fn main() {
     // ---- Venus sampling over its clustered memory ----
     let mut qe = QueryEngine::new(
         EmbedEngine::default_backend(true).unwrap(),
-        Arc::clone(&case.memory),
+        Arc::clone(&case.fabric),
         cfg.retrieval.clone(),
         3,
     );
@@ -88,7 +88,7 @@ fn main() {
         let out = qe
             .retrieve_with(&q.text, RetrievalMode::FixedSampling(BUDGET))
             .unwrap();
-        samp_sels.push(out.selection.frames);
+        samp_sels.push(out.selection.frame_indices());
     }
     stats_rows.push(("Sampling (Venus)".into(), samp_sels));
 

@@ -25,6 +25,7 @@ fn main() {
     // curated subset: localized scene-specific queries (paper's 60-query set)
     let mut subset_case = venus::eval::VideoCase {
         synth: std::sync::Arc::clone(&case.synth),
+        fabric: std::sync::Arc::clone(&case.fabric),
         memory: std::sync::Arc::clone(&case.memory),
         queries: case
             .queries

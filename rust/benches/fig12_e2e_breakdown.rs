@@ -35,7 +35,7 @@ fn main() {
     // ---- Venus measured edge steps ----
     let mut qe = QueryEngine::new(
         EmbedEngine::default_backend(true).unwrap(),
-        Arc::clone(&case.memory),
+        Arc::clone(&case.fabric),
         cfg.retrieval.clone(),
         19,
     );

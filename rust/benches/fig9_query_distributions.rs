@@ -25,7 +25,7 @@ fn main() {
         prepare_case(DatasetPreset::VideoMmeMedium, &cfg, 60, 4100).expect("prepare");
     let mut qe = QueryEngine::new(
         EmbedEngine::default_backend(true).unwrap(),
-        Arc::clone(&case.memory),
+        Arc::clone(&case.fabric),
         cfg.retrieval.clone(),
         9,
     );

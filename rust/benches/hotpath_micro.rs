@@ -10,7 +10,9 @@ use venus::config::MemoryConfig;
 use venus::embed::EmbedEngine;
 use venus::features::frame_features;
 use venus::ingest::PartitionClusterer;
-use venus::memory::{ClusterRecord, FlatIndex, Hierarchy, InMemoryRaw, IvfIndex, Metric, VectorIndex};
+use venus::memory::{
+    ClusterRecord, FlatIndex, Hierarchy, InMemoryRaw, IvfIndex, Metric, StreamId, VectorIndex,
+};
 use venus::retrieval::{akr_retrieve, sample_retrieve};
 use venus::util::bench::{note, section, Bench};
 use venus::util::rng::Pcg64;
@@ -92,6 +94,7 @@ fn main() {
         mem.insert(
             v,
             ClusterRecord {
+                stream: StreamId(0),
                 scene_id: c,
                 centroid_frame: c as u64 * 4,
                 members: (c as u64 * 4..c as u64 * 4 + 4).collect(),
@@ -126,7 +129,7 @@ fn main() {
         engine.embed_query("when did concept05 appear").unwrap().len()
     });
     {
-        let be2 = backend::load_default().unwrap();
+        let be2 = backend::shared_default().unwrap();
         let m = be2.model().clone();
         let rows = m.sim_rows;
         let idx = unit_vecs(rows, m.d_embed, 6).concat();

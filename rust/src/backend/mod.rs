@@ -22,6 +22,8 @@
 
 pub mod native;
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
 pub use native::{NativeBackend, NativeConfig};
@@ -53,7 +55,15 @@ pub struct ModelMeta {
 ///     [0, 1], channel-interleaved (`Frame`'s memory layout);
 ///   * token windows are `seq_len` i32 ids per sequence;
 ///   * all embeddings come back L2-normalized, `d_embed` wide.
-pub trait EmbedBackend {
+///
+/// `Send + Sync` is part of the contract: one backend instance is
+/// constructed per process and shared (`Arc<dyn EmbedBackend>`) by every
+/// ingestion pipeline, pool worker, and query worker.  All entry points
+/// take `&self`, so an implementation must either be immutable plain data
+/// (the native backend: weights are read-only after construction) or
+/// guard its interior mutability with a lock (the PJRT runtime's compiled
+/// executable cache).
+pub trait EmbedBackend: Send + Sync {
     /// Short backend identifier ("native", "pjrt").
     fn name(&self) -> &'static str;
 
@@ -112,7 +122,7 @@ pub trait EmbedBackend {
     fn concept_dirs(&self) -> Result<Vec<Vec<f32>>>;
 }
 
-/// Build the default backend for this process.
+/// Build a fresh default backend for this process.
 ///
 /// Selection order:
 ///   1. `VENUS_BACKEND=native` forces the native backend;
@@ -121,13 +131,18 @@ pub trait EmbedBackend {
 ///      `VENUS_BACKEND=pjrt` makes a missing artifact set a hard error
 ///      instead of a fallback;
 ///   3. otherwise the self-contained native backend.
-pub fn load_default() -> Result<Box<dyn EmbedBackend>> {
+///
+/// Construction is expensive (the native backend generates the full
+/// weight set; the PJRT backend creates a client).  Request-path code
+/// should go through [`shared_default`] so the process builds exactly one
+/// backend and every engine shares it.
+pub fn load_default() -> Result<Arc<dyn EmbedBackend>> {
     let choice = std::env::var("VENUS_BACKEND").unwrap_or_default();
     #[cfg(feature = "pjrt")]
     {
         if choice != "native" {
             match crate::runtime::Runtime::load_default() {
-                Ok(rt) => return Ok(Box::new(rt)),
+                Ok(rt) => return Ok(Arc::new(rt)),
                 Err(e) if choice == "pjrt" => return Err(e),
                 Err(_) => {} // no artifacts: fall back to native
             }
@@ -142,7 +157,21 @@ pub fn load_default() -> Result<Box<dyn EmbedBackend>> {
             );
         }
     }
-    Ok(Box::new(NativeBackend::new(NativeConfig::default())))
+    Ok(Arc::new(NativeBackend::new(NativeConfig::default())))
+}
+
+/// Process-wide shared default backend: constructed once (behind a lock,
+/// so racing threads never build it twice), then handed out as `Arc`
+/// clones.  Construction errors are not cached — a later call retries.
+pub fn shared_default() -> Result<Arc<dyn EmbedBackend>> {
+    static SHARED: Mutex<Option<Arc<dyn EmbedBackend>>> = Mutex::new(None);
+    let mut slot = SHARED.lock().unwrap();
+    if let Some(be) = slot.as_ref() {
+        return Ok(Arc::clone(be));
+    }
+    let be = load_default()?;
+    *slot = Some(Arc::clone(&be));
+    Ok(be)
 }
 
 #[cfg(test)]
@@ -165,5 +194,15 @@ mod tests {
         let b: Box<dyn EmbedBackend> = Box::new(NativeBackend::new(NativeConfig::default()));
         assert_eq!(b.name(), "native");
         assert_eq!(b.model().d_embed, 64);
+    }
+
+    #[test]
+    fn shared_default_hands_out_one_instance() {
+        let a = shared_default().unwrap();
+        let b = shared_default().unwrap();
+        assert!(
+            Arc::ptr_eq(&a, &b),
+            "shared_default must construct the backend once per process"
+        );
     }
 }

@@ -89,7 +89,7 @@ fn info(args: &[String]) -> Result<()> {
     }
 
     // default: whatever backend this process would serve with
-    let be = crate::backend::load_default()?;
+    let be = crate::backend::shared_default()?;
     let m = be.model();
     println!("backend     : {}", be.name());
     println!("d_embed     : {}", m.d_embed);
@@ -152,24 +152,63 @@ fn serve(args: &[String]) -> Result<()> {
         .flag("config", "TOML config file", Some(""))
         .flag("preset", "dataset preset", Some("videomme-short"))
         .flag("seed", "stream seed", Some("42"))
-        .flag("queries", "number of synthetic queries to replay", Some("32"));
+        .flag("queries", "number of synthetic queries to replay", Some("32"))
+        .flag(
+            "streams",
+            "camera streams (memory shards); 0 = from config [fabric]",
+            Some("0"),
+        );
     let parsed = spec.parse(args)?;
     let cfg = load_config(&parsed)?;
     let preset = DatasetPreset::parse(parsed.get("preset").unwrap())
         .ok_or_else(|| anyhow::anyhow!("unknown preset"))?;
     let seed: u64 = parsed.get("seed").unwrap().parse()?;
     let n_queries = parsed.get_usize("queries")?;
+    let streams = match parsed.get_usize("streams")? {
+        0 => cfg.fabric.streams,
+        n => n,
+    };
 
-    let case = crate::eval::prepare_case(preset, &cfg, n_queries, seed)?;
+    if streams <= 1 {
+        // single-camera deployment: the paper's serving loop
+        let case = crate::eval::prepare_case(preset, &cfg, n_queries, seed)?;
+        eprintln!(
+            "memory ready: {} index vectors over {} frames",
+            case.memory.read().unwrap().len(),
+            case.ingest_stats.frames
+        );
+        let service =
+            crate::server::Service::start(&cfg, Arc::clone(&case.fabric), seed)?;
+        let mut receivers = Vec::new();
+        for q in &case.queries {
+            if let Ok(rx) = service.submit(&q.text) {
+                receivers.push(rx);
+            }
+        }
+        for rx in receivers {
+            let _ = rx.recv()?;
+        }
+        let snap = service.shutdown();
+        println!("{}", snap.render());
+        return Ok(());
+    }
+
+    // multi-camera fabric: K streams ingested concurrently through one
+    // shared embed pool, then the query mix replays with All scope
+    // (cross-camera answers) — `One` per-stream scoping is exercised by
+    // `examples/multi_camera.rs`.
+    let per_stream = ((n_queries + streams - 1) / streams).max(1);
+    let case = crate::eval::prepare_multi_case(preset, &cfg, streams, per_stream, seed)?;
     eprintln!(
-        "memory ready: {} index vectors over {} frames",
-        case.memory.read().unwrap().len(),
-        case.ingest_stats.frames
+        "fabric ready: {} streams, {} index vectors over {} frames",
+        case.fabric.n_streams(),
+        case.fabric.total_indexed(),
+        case.fabric.total_frames()
     );
-    let service = crate::server::Service::start(&cfg, Arc::clone(&case.memory), seed)?;
+    let service = crate::server::Service::start(&cfg, Arc::clone(&case.fabric), seed)?;
     let mut receivers = Vec::new();
-    for q in &case.queries {
-        if let Some(rx) = service.submit(&q.text) {
+    for (_, q) in &case.queries {
+        if let Ok(rx) = service.submit(&q.text) {
             receivers.push(rx);
         }
     }

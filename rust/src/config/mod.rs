@@ -164,6 +164,39 @@ impl Default for ServerConfig {
     }
 }
 
+/// Multi-camera memory-fabric parameters.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    /// Camera streams (= memory shards).  1 reproduces the paper's
+    /// single-camera deployment.
+    pub streams: usize,
+    /// Shared embed-pool worker threads; 0 = auto
+    /// (`min(streams, available cores)`).
+    pub pool_workers: usize,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        Self { streams: 1, pool_workers: 0 }
+    }
+}
+
+impl FabricConfig {
+    /// Resolve `pool_workers = 0` to the auto heuristic: one worker per
+    /// stream, capped at the host's cores — more workers than streams
+    /// can't help (each stream produces one partition at a time), more
+    /// than cores just contend.
+    pub fn resolved_pool_workers(&self) -> usize {
+        if self.pool_workers > 0 {
+            return self.pool_workers;
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2);
+        self.streams.min(cores).max(1)
+    }
+}
+
 /// Top-level Venus configuration.
 #[derive(Clone, Debug, Default)]
 pub struct VenusConfig {
@@ -173,6 +206,7 @@ pub struct VenusConfig {
     pub net: NetConfig,
     pub cloud: CloudConfig,
     pub server: ServerConfig,
+    pub fabric: FabricConfig,
     /// Edge device profile name (see `edge::DeviceProfile`).
     pub device: String,
 }
@@ -224,6 +258,10 @@ impl VenusConfig {
 
         cfg.server.queue_depth = d.usize_or("server.queue_depth", cfg.server.queue_depth)?;
         cfg.server.workers = d.usize_or("server.workers", cfg.server.workers)?;
+
+        cfg.fabric.streams = d.usize_or("fabric.streams", cfg.fabric.streams)?;
+        cfg.fabric.pool_workers =
+            d.usize_or("fabric.pool_workers", cfg.fabric.pool_workers)?;
 
         cfg.device = d.str_or("device", &Self::default().device_or_default())?;
 
@@ -277,6 +315,12 @@ impl VenusConfig {
         if self.server.workers == 0 {
             bail!("server.workers must be >= 1");
         }
+        if self.fabric.streams == 0 {
+            bail!("fabric.streams must be >= 1");
+        }
+        if self.fabric.streams > u16::MAX as usize {
+            bail!("fabric.streams must fit a StreamId (<= {})", u16::MAX);
+        }
         Ok(())
     }
 }
@@ -312,6 +356,8 @@ const KNOWN_KEYS: &[&str] = &[
     "cloud.overhead_s",
     "server.queue_depth",
     "server.workers",
+    "fabric.streams",
+    "fabric.pool_workers",
     "device",
 ];
 
@@ -360,5 +406,18 @@ mod tests {
         assert!(VenusConfig::from_toml("[retrieval]\ntheta = 1.5").is_err());
         assert!(VenusConfig::from_toml("[memory]\nindex = \"hnsw\"").is_err());
         assert!(VenusConfig::from_toml("[server]\nworkers = 0").is_err());
+        assert!(VenusConfig::from_toml("[fabric]\nstreams = 0").is_err());
+    }
+
+    #[test]
+    fn fabric_keys_parse_and_resolve() {
+        let cfg = VenusConfig::from_toml("[fabric]\nstreams = 4\npool_workers = 3").unwrap();
+        assert_eq!(cfg.fabric.streams, 4);
+        assert_eq!(cfg.fabric.resolved_pool_workers(), 3);
+        // auto sizing never exceeds the stream count and never hits zero
+        let auto = FabricConfig { streams: 4, pool_workers: 0 };
+        let n = auto.resolved_pool_workers();
+        assert!((1..=4).contains(&n), "auto pool workers {n}");
+        assert_eq!(FabricConfig::default().resolved_pool_workers(), 1);
     }
 }

@@ -1,4 +1,4 @@
-//! The Venus coordinator: composes ingestion, hierarchical memory,
+//! The Venus coordinator: composes ingestion, the sharded memory fabric,
 //! retrieval, the network model, and the cloud VLM client into the
 //! deployable two-stage system of Fig. 6.
 
@@ -16,7 +16,7 @@ use crate::config::VenusConfig;
 use crate::embed::EmbedEngine;
 use crate::ingest::{IngestStats, Pipeline};
 use crate::memory::raw::RawStore;
-use crate::memory::Hierarchy;
+use crate::memory::{FrameId, Hierarchy, MemoryFabric};
 use crate::net::{Link, Payload};
 use crate::video::frame::Frame;
 use crate::video::synth::VideoSynth;
@@ -41,43 +41,56 @@ impl LatencyBreakdown {
 /// A fully-assembled Venus instance (single edge node).
 pub struct Venus {
     pub cfg: VenusConfig,
-    pub memory: Arc<RwLock<Hierarchy>>,
+    pub fabric: Arc<MemoryFabric>,
     query: QueryEngine,
     pub link: Link,
     pub vlm: VlmClient,
 }
 
 impl Venus {
-    /// Build from config + a raw-layer backend; loads two independent
-    /// embed backends (ingestion engine is consumed by the pipeline
-    /// thread; the query engine lives here).
+    /// Build a single-stream instance from config + a raw-layer backend.
     pub fn new(cfg: VenusConfig, raw: Box<dyn RawStore>, seed: u64) -> Result<Self> {
-        // one backend serves both the d_embed probe and the query engine —
-        // native construction generates the full weight set, don't do it twice
-        let be = backend::load_default()?;
+        Self::with_raws(cfg, vec![raw], seed)
+    }
+
+    /// Build a multi-camera instance: one raw store per stream.  The one
+    /// process-shared embed backend serves the d_embed probe, the query
+    /// engine, and (via [`Venus::ingest_stream`]) every pipeline — native
+    /// construction generates the full weight set, so it must happen once.
+    pub fn with_raws(
+        cfg: VenusConfig,
+        raws: Vec<Box<dyn RawStore>>,
+        seed: u64,
+    ) -> Result<Self> {
+        let be = backend::shared_default()?;
         let d_embed = be.model().d_embed;
-        let memory = Arc::new(RwLock::new(Hierarchy::new(&cfg.memory, d_embed, raw)?));
+        let fabric = Arc::new(MemoryFabric::new(&cfg.memory, d_embed, raws)?);
         let query_engine = QueryEngine::new(
             EmbedEngine::new(be, cfg.ingest.aux_models)?,
-            Arc::clone(&memory),
+            Arc::clone(&fabric),
             cfg.retrieval.clone(),
             seed,
         );
         let link = Link::new(cfg.net.clone());
         let vlm = VlmClient::new(cfg.cloud.clone(), seed ^ 0xc1);
-        Ok(Self { cfg, memory, query: query_engine, link, vlm })
+        Ok(Self { cfg, fabric, query: query_engine, link, vlm })
     }
 
-    /// Ingest an entire synthetic stream (offline/catch-up mode: frames
-    /// processed as fast as the pipeline allows).  Returns pipeline stats.
+    /// Stream 0's shard — the whole memory in single-camera deployments.
+    pub fn memory(&self) -> &Arc<RwLock<Hierarchy>> {
+        &self.fabric.shards()[0]
+    }
+
+    /// Ingest an entire synthetic stream into stream 0's shard
+    /// (offline/catch-up mode: frames processed as fast as the pipeline
+    /// allows).  Returns pipeline stats.
     pub fn ingest_stream(&self, synth: &VideoSynth, upto: u64) -> Result<IngestStats> {
-        let engine =
-            EmbedEngine::new(backend::load_default()?, self.cfg.ingest.aux_models)?;
+        let engine = EmbedEngine::default_backend(self.cfg.ingest.aux_models)?;
         let mut pipe = Pipeline::new(
             &self.cfg.ingest,
             synth.config().fps,
             engine,
-            Arc::clone(&self.memory),
+            Arc::clone(self.memory()),
         )?;
         let n = upto.min(synth.total_frames());
         for i in 0..n {
@@ -106,9 +119,8 @@ impl Venus {
     }
 
     /// Fetch the selected frames from the raw layer (the payload bytes
-    /// that would be shipped).
-    pub fn fetch_frames(&self, ids: &[u64]) -> Vec<Frame> {
-        let mem = self.memory.read().unwrap();
-        ids.iter().map(|&id| mem.fetch_frame(id)).collect()
+    /// that would be shipped).  Missing frames propagate as errors.
+    pub fn fetch_frames(&self, ids: &[FrameId]) -> Result<Vec<Frame>> {
+        self.fabric.fetch_frames(ids)
     }
 }

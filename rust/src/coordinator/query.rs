@@ -1,18 +1,28 @@
 //! The query-stage engine (Fig. 6, steps ⑤–⑥): embed the query text,
-//! score it against the memory index, and select keyframes via
+//! score it against the memory fabric, and select keyframes via
 //! sampling-based retrieval or AKR.  All timings here are *measured*
 //! wall-clock on the local host (the honest edge-compute numbers that
 //! anchor the paper-scale simulation).
 //!
-//! Locking: the shared memory is an `RwLock` — the query path is
-//! read-only, so concurrent query workers score/select in parallel and
-//! ingestion (the lone writer) is only excluded for the narrow windows
-//! below.  Query embedding runs before any lock; score+select share ONE
-//! read guard (selection must see the same index the scores were computed
-//! over, or `scores.len() != memory.len()` races with inserts); the
-//! raw-frame fetch takes a fresh guard, since selected frames are already
-//! archived and the raw layer is append-only — ingestion can interleave
-//! between the two.
+//! Stream scoping: a query runs against [`StreamScope::One`] shard or
+//! scatter-gathers over [`StreamScope::All`].  The `All` path concatenates
+//! every shard's Eq. 4 score vector (shard order), applies the shortlist
+//! mask and the Eq. 5 softmax over the *merged* distribution, and runs
+//! AKR/sampling over the merged record view — so one answer can cite
+//! evidence frames from several cameras, and AKR's adaptive budget
+//! reflects total cross-camera evidence concentration.
+//!
+//! Locking: each shard sits behind its own `RwLock` — the query path is
+//! read-only, so concurrent query workers score/select in parallel and a
+//! stream's ingestion writer only excludes readers *of that stream* for
+//! its narrow insert/archive sections.  Query embedding runs before any
+//! lock; score+select hold the scoped shards' read guards together
+//! (selection must see the same indices the scores were computed over, or
+//! `scores.len() != records.len()` races with inserts) — guards are taken
+//! in ascending stream order while writers hold at most one shard lock,
+//! so no deadlock is possible; the raw-frame fetch takes fresh per-shard
+//! guards, since selected frames are already archived and the raw layer
+//! is append-only.
 
 use std::sync::{Arc, RwLock};
 use std::time::Instant;
@@ -21,7 +31,7 @@ use anyhow::Result;
 
 use crate::config::RetrievalConfig;
 use crate::embed::EmbedEngine;
-use crate::memory::Hierarchy;
+use crate::memory::{ClusterRecord, Hierarchy, MemoryFabric, StreamScope};
 use crate::retrieval::{akr_retrieve, sample_retrieve, topk_retrieve, Selection};
 use crate::util::rng::Pcg64;
 
@@ -60,10 +70,10 @@ pub enum RetrievalMode {
     TopK(usize),
 }
 
-/// The query engine: owns an embed engine + shares the memory.
+/// The query engine: owns an embed engine + shares the memory fabric.
 pub struct QueryEngine {
     engine: EmbedEngine,
-    memory: Arc<RwLock<Hierarchy>>,
+    fabric: Arc<MemoryFabric>,
     cfg: RetrievalConfig,
     rng: Pcg64,
     scores_buf: Vec<f32>,
@@ -72,17 +82,28 @@ pub struct QueryEngine {
 impl QueryEngine {
     pub fn new(
         engine: EmbedEngine,
-        memory: Arc<RwLock<Hierarchy>>,
+        fabric: Arc<MemoryFabric>,
         cfg: RetrievalConfig,
         seed: u64,
     ) -> Self {
         Self {
             engine,
-            memory,
+            fabric,
             cfg,
             rng: Pcg64::new(seed, 0x9e4),
             scores_buf: Vec::new(),
         }
+    }
+
+    /// Convenience: a query engine over one bare shard (single-camera
+    /// deployments, tests, benches).
+    pub fn over_memory(
+        engine: EmbedEngine,
+        memory: Arc<RwLock<Hierarchy>>,
+        cfg: RetrievalConfig,
+        seed: u64,
+    ) -> Self {
+        Self::new(engine, Arc::new(MemoryFabric::single(memory)), cfg, seed)
     }
 
     pub fn config(&self) -> &RetrievalConfig {
@@ -91,6 +112,10 @@ impl QueryEngine {
 
     pub fn set_config(&mut self, cfg: RetrievalConfig) {
         self.cfg = cfg;
+    }
+
+    pub fn fabric(&self) -> &Arc<MemoryFabric> {
+        &self.fabric
     }
 
     /// Default mode from config.
@@ -102,13 +127,29 @@ impl QueryEngine {
         }
     }
 
-    /// Run the full query stage with the configured mode.
+    /// Run the full query stage with the configured mode over every
+    /// stream.
     pub fn retrieve(&mut self, text: &str) -> Result<QueryOutcome> {
-        self.retrieve_with(text, self.default_mode())
+        self.retrieve_scoped_with(text, StreamScope::All, self.default_mode())
     }
 
-    /// Run the query stage with an explicit retrieval mode.
+    /// Configured mode, explicit stream scope.
+    pub fn retrieve_scoped(&mut self, text: &str, scope: StreamScope) -> Result<QueryOutcome> {
+        self.retrieve_scoped_with(text, scope, self.default_mode())
+    }
+
+    /// Explicit retrieval mode over every stream.
     pub fn retrieve_with(&mut self, text: &str, mode: RetrievalMode) -> Result<QueryOutcome> {
+        self.retrieve_scoped_with(text, StreamScope::All, mode)
+    }
+
+    /// Run the query stage with an explicit mode and stream scope.
+    pub fn retrieve_scoped_with(
+        &mut self,
+        text: &str,
+        scope: StreamScope,
+        mode: RetrievalMode,
+    ) -> Result<QueryOutcome> {
         let mut t = EdgeTimings::default();
 
         // query embedding: pure compute, no lock held
@@ -116,64 +157,70 @@ impl QueryEngine {
         let qvec = self.engine.embed_query(text)?;
         t.embed_query_s = t0.elapsed().as_secs_f64();
 
-        // score + select under ONE read guard: the sampler needs scores
-        // consistent with the index it expands clusters from
+        // score + select under the scoped shards' read guards: the sampler
+        // needs scores consistent with the records it expands clusters
+        // from, across every shard at once
+        let shards = self.fabric.scoped(scope)?;
         let (selection, draws) = {
-            let mem = self.memory.read().unwrap();
-            let t0 = Instant::now();
-            mem.score_all(&qvec, &mut self.scores_buf);
-            t.search_s = t0.elapsed().as_secs_f64();
+            let guards: Vec<_> = shards.iter().map(|s| s.read().unwrap()).collect();
 
-            let t0 = Instant::now();
-            // bound the sampling distribution to the scored shortlist so the
-            // Eq. 5 trade-off is invariant to how long the stream has run
-            let masked =
-                crate::retrieval::shortlist_mask(&self.scores_buf, self.cfg.shortlist);
-            let (selection, draws) = match mode {
-                RetrievalMode::Akr => {
-                    let out = akr_retrieve(
-                        &mem,
-                        &masked,
-                        self.cfg.tau,
-                        self.cfg.theta,
-                        self.cfg.beta,
-                        self.cfg.n_max,
-                        &mut self.rng,
-                    );
-                    (out.selection, out.draws)
+            if guards.len() == 1 {
+                // single-shard fast path (One scope, or a single-camera
+                // fabric): select straight off the shard — no merged
+                // score copy, no per-record reference vec
+                let g = &guards[0];
+                let t0 = Instant::now();
+                g.score_all(&qvec, &mut self.scores_buf);
+                t.search_s = t0.elapsed().as_secs_f64();
+
+                let t0 = Instant::now();
+                let out =
+                    select_over(&**g, &self.scores_buf, &self.cfg, &mut self.rng, mode);
+                t.select_s = t0.elapsed().as_secs_f64();
+                out
+            } else {
+                let t0 = Instant::now();
+                let mut merged: Vec<f32> = Vec::new();
+                let mut records: Vec<&ClusterRecord> = Vec::new();
+                for g in &guards {
+                    g.score_all(&qvec, &mut self.scores_buf);
+                    merged.extend_from_slice(&self.scores_buf);
+                    records.extend(g.records().iter());
                 }
-                RetrievalMode::FixedSampling(n) => {
-                    let sel = sample_retrieve(&mem, &masked, self.cfg.tau, n, &mut self.rng);
-                    (sel, n)
-                }
-                RetrievalMode::TopK(k) => (topk_retrieve(&mem, &self.scores_buf, k), k),
-            };
-            t.select_s = t0.elapsed().as_secs_f64();
-            (selection, draws)
+                t.search_s = t0.elapsed().as_secs_f64();
+
+                let t0 = Instant::now();
+                let out =
+                    select_over(&records[..], &merged, &self.cfg, &mut self.rng, mode);
+                t.select_s = t0.elapsed().as_secs_f64();
+                out
+            }
         };
 
         // fetch (decode) the selected raw frames — part of the edge path.
-        // Fresh guard: the ids are already archived, so the ingestion
-        // writer may interleave between selection and fetch.
+        // Fresh per-shard guards: the ids are already archived, so each
+        // stream's ingestion writer may interleave between selection and
+        // fetch.
         let t0 = Instant::now();
-        {
-            let mem = self.memory.read().unwrap();
-            for &f in &selection.frames {
-                std::hint::black_box(mem.fetch_frame(f));
-            }
+        for frame in self.fabric.fetch_frames(&selection.frames)? {
+            std::hint::black_box(frame);
         }
         t.fetch_s = t0.elapsed().as_secs_f64();
 
         Ok(QueryOutcome { selection, timings: t, draws })
     }
 
-    /// Raw similarity scores for the given query (diagnostics / benches).
+    /// Raw similarity scores for the given query over the whole fabric
+    /// (diagnostics / benches), in merged shard order.
     pub fn score_query(&mut self, text: &str) -> Result<Vec<f32>> {
         let qvec = self.engine.embed_query(text)?;
-        let mem = self.memory.read().unwrap();
-        let mut scores = Vec::new();
-        mem.score_all(&qvec, &mut scores);
-        Ok(scores)
+        let mut merged = Vec::new();
+        for shard in self.fabric.shards() {
+            let g = shard.read().unwrap();
+            g.score_all(&qvec, &mut self.scores_buf);
+            merged.extend_from_slice(&self.scores_buf);
+        }
+        Ok(merged)
     }
 
     /// Measured mean text-embedding latency so far.
@@ -182,11 +229,44 @@ impl QueryEngine {
     }
 }
 
+/// Shortlist-mask + mode dispatch over any record source — one shard
+/// (fast path) or the merged cross-shard view.
+fn select_over<M: crate::retrieval::RecordSource + ?Sized>(
+    memory: &M,
+    scores: &[f32],
+    cfg: &RetrievalConfig,
+    rng: &mut Pcg64,
+    mode: RetrievalMode,
+) -> (Selection, usize) {
+    // bound the sampling distribution to the scored shortlist so the
+    // Eq. 5 trade-off is invariant to how long (and how many) streams
+    // have run
+    let masked = crate::retrieval::shortlist_mask(scores, cfg.shortlist);
+    match mode {
+        RetrievalMode::Akr => {
+            let out = akr_retrieve(
+                memory,
+                &masked,
+                cfg.tau,
+                cfg.theta,
+                cfg.beta,
+                cfg.n_max,
+                rng,
+            );
+            (out.selection, out.draws)
+        }
+        RetrievalMode::FixedSampling(n) => {
+            (sample_retrieve(memory, &masked, cfg.tau, n, rng), n)
+        }
+        RetrievalMode::TopK(k) => (topk_retrieve(memory, scores, k), k),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::MemoryConfig;
-    use crate::memory::{ClusterRecord, InMemoryRaw};
+    use crate::memory::{ClusterRecord, InMemoryRaw, StreamId};
     use crate::video::frame::Frame;
 
     /// Ingest-while-query smoke test for the RwLock'd memory: a writer
@@ -215,6 +295,7 @@ mod tests {
                 mem.insert(
                     &v,
                     ClusterRecord {
+                        stream: StreamId(0),
                         scene_id: c as usize,
                         centroid_frame: c * 4,
                         members: (c * 4..(c + 1) * 4).collect(),
@@ -226,7 +307,7 @@ mod tests {
             }
         });
 
-        let mut qe = QueryEngine::new(
+        let mut qe = QueryEngine::over_memory(
             EmbedEngine::default_backend(false).unwrap(),
             Arc::clone(&memory),
             RetrievalConfig::default(),
@@ -243,7 +324,7 @@ mod tests {
                 .unwrap();
             let archived = memory.read().unwrap().frames_ingested();
             assert!(
-                out.selection.frames.iter().all(|&f| f < archived),
+                out.selection.frames.iter().all(|f| f.idx < archived),
                 "selection referenced an unarchived frame"
             );
         }
@@ -257,5 +338,78 @@ mod tests {
             !out.selection.frames.is_empty(),
             "query after ingest must select from the 60-cluster index"
         );
+    }
+
+    /// Scope semantics over a two-shard fabric with disjoint concepts:
+    /// `One(s)` selections cite only stream `s`; `All` merges both.
+    #[test]
+    fn scoped_queries_respect_stream_boundaries() {
+        let engine = EmbedEngine::default_backend(false).unwrap();
+        let d = engine.d_embed();
+        let raws: Vec<Box<dyn crate::memory::RawStore>> = vec![
+            Box::new(InMemoryRaw::new(8)),
+            Box::new(InMemoryRaw::new(8)),
+        ];
+        let fabric =
+            Arc::new(MemoryFabric::new(&MemoryConfig::default(), d, raws).unwrap());
+
+        let mut rng = Pcg64::seeded(99);
+        for sid in 0..2u16 {
+            let shard = fabric.shard(StreamId(sid)).unwrap();
+            let mut g = shard.write().unwrap();
+            for c in 0..8u64 {
+                for f in c * 4..(c + 1) * 4 {
+                    g.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+                }
+                let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                crate::util::l2_normalize(&mut v);
+                g.insert(
+                    &v,
+                    ClusterRecord {
+                        stream: StreamId(sid),
+                        scene_id: c as usize,
+                        centroid_frame: c * 4,
+                        members: (c * 4..(c + 1) * 4).collect(),
+                    },
+                )
+                .unwrap();
+            }
+        }
+
+        let mut qe = QueryEngine::new(
+            engine,
+            Arc::clone(&fabric),
+            RetrievalConfig::default(),
+            5,
+        );
+        for sid in 0..2u16 {
+            let out = qe
+                .retrieve_scoped_with(
+                    "what happened with concept01",
+                    StreamScope::One(StreamId(sid)),
+                    RetrievalMode::FixedSampling(8),
+                )
+                .unwrap();
+            assert!(!out.selection.frames.is_empty());
+            assert!(
+                out.selection.frames.iter().all(|f| f.stream == StreamId(sid)),
+                "One({sid}) leaked foreign frames: {:?}",
+                out.selection.frames
+            );
+        }
+        // flat random embeddings: an All-scope budget spread over 16
+        // equally-plausible clusters lands in both shards w.h.p.
+        let out = qe
+            .retrieve_scoped_with(
+                "what happened with concept01",
+                StreamScope::All,
+                RetrievalMode::FixedSampling(64),
+            )
+            .unwrap();
+        assert!(!out.selection.frames.is_empty());
+        // unknown stream is an error, not a panic
+        assert!(qe
+            .retrieve_scoped("anything", StreamScope::One(StreamId(9)))
+            .is_err());
     }
 }

@@ -17,6 +17,7 @@ pub mod tokenizer;
 pub use auxmodels::{AuxModels, Detection};
 pub use tokenizer::Tokenizer;
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -26,8 +27,13 @@ use crate::util::stats::Samples;
 use crate::video::frame::Frame;
 
 /// Embedding engine over a compute backend.
+///
+/// The backend is a shared `Arc`: engines are cheap per-thread front-ends
+/// (tokenizer + aux bank + timing samples) over the one expensive backend
+/// the process constructed.  `EmbedEngine` is therefore plainly `Send` —
+/// no unsafe wrapper is needed to move one into a worker thread.
 pub struct EmbedEngine {
-    backend: Box<dyn EmbedBackend>,
+    backend: Arc<dyn EmbedBackend>,
     tok: Tokenizer,
     aux: Option<AuxModels>,
     batches: Vec<usize>,
@@ -37,8 +43,8 @@ pub struct EmbedEngine {
 }
 
 impl EmbedEngine {
-    /// Build from a backend; `use_aux` enables the aux-model bank.
-    pub fn new(backend: Box<dyn EmbedBackend>, use_aux: bool) -> Result<Self> {
+    /// Build from a shared backend; `use_aux` enables the aux-model bank.
+    pub fn new(backend: Arc<dyn EmbedBackend>, use_aux: bool) -> Result<Self> {
         let tok = Tokenizer::from_model(backend.model());
         let aux = if use_aux {
             let codes = backend.concept_codes()?;
@@ -59,14 +65,26 @@ impl EmbedEngine {
         })
     }
 
-    /// Convenience: build over the process-default backend
-    /// (see [`crate::backend::load_default`]).
+    /// Convenience: build over the process-wide shared backend
+    /// (see [`crate::backend::shared_default`]) — the default path, so
+    /// every engine in the process shares one backend construction.
     pub fn default_backend(use_aux: bool) -> Result<Self> {
-        Self::new(crate::backend::load_default()?, use_aux)
+        Self::new(crate::backend::shared_default()?, use_aux)
     }
 
     pub fn backend(&self) -> &dyn EmbedBackend {
         self.backend.as_ref()
+    }
+
+    /// Clone of the shared backend handle (for building sibling engines).
+    pub fn backend_arc(&self) -> Arc<dyn EmbedBackend> {
+        Arc::clone(&self.backend)
+    }
+
+    /// Largest image-tower batch the backend serves (the embed pool's
+    /// cross-stream coalescing target).
+    pub fn max_image_batch(&self) -> usize {
+        *self.batches.last().unwrap()
     }
 
     /// Eagerly prepare every entry this engine will execute (ingestion

@@ -8,5 +8,5 @@ pub mod runner;
 pub use latency::{Deployment, LatencyModel, LatencyParts};
 pub use runner::{
     build_synth, eval_baseline, eval_venus, measure_venus_edge_latency, prepare_case,
-    CellOutcome, VenusMode, VideoCase,
+    prepare_multi_case, CellOutcome, FabricCase, VenusMode, VideoCase,
 };

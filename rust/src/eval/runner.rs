@@ -7,6 +7,11 @@
 //! the frame-score oracle; Venus retrieves from its memory.  All methods
 //! are judged by the SAME answer model, so accuracy differences come from
 //! selection behavior only.
+//!
+//! [`prepare_multi_case`] is the multi-camera variant: K streams ingested
+//! concurrently through one shared embed pool into a K-shard fabric —
+//! the substrate for the fabric bench, the multi-stream serve path, and
+//! the cross-stream property tests.
 
 use std::sync::{Arc, RwLock};
 
@@ -18,24 +23,29 @@ use crate::cloud::{VlmClient, VlmPersonality};
 use crate::config::{CloudConfig, VenusConfig};
 use crate::coordinator::query::{QueryEngine, RetrievalMode};
 use crate::embed::EmbedEngine;
-use crate::ingest::{IngestStats, Pipeline};
-use crate::memory::{Hierarchy, SynthBackedRaw};
+use crate::ingest::{EmbedPool, IngestStats, Pipeline};
+use crate::memory::{
+    Hierarchy, MemoryFabric, RawStore, StreamId, SynthBackedRaw,
+};
 use crate::video::synth::{SynthConfig, VideoSynth};
 use crate::video::workload::{DatasetPreset, Query, WorkloadGen};
 
 /// A prepared evaluation case: clip + ingested memory + queries.
 pub struct VideoCase {
     pub synth: Arc<VideoSynth>,
+    /// the single-stream fabric the query engines run against
+    pub fabric: Arc<MemoryFabric>,
+    /// stream 0's shard (== the whole memory for a single-stream case)
     pub memory: Arc<RwLock<Hierarchy>>,
     pub queries: Vec<Query>,
     pub ingest_stats: IngestStats,
     pub preset: DatasetPreset,
 }
 
-/// Build the synthetic stream for a preset (codes from the embed backend
-/// so the MEM can read the watermarks).
+/// Build the synthetic stream for a preset (codes from the shared embed
+/// backend so the MEM can read the watermarks).
 pub fn build_synth(preset: DatasetPreset, seed: u64) -> Result<Arc<VideoSynth>> {
-    let be = backend::load_default()?;
+    let be = backend::shared_default()?;
     let codes = be.concept_codes()?;
     let patch = be.model().patch;
     let (lo, hi) = preset.scene_len_s();
@@ -59,8 +69,9 @@ pub fn prepare_case(
     seed: u64,
 ) -> Result<VideoCase> {
     let synth = build_synth(preset, seed)?;
-    // one backend for both the d_embed probe and the ingestion engine
-    let be = backend::load_default()?;
+    // the one process-shared backend serves the d_embed probe and the
+    // ingestion engine alike
+    let be = backend::shared_default()?;
     let d_embed = be.model().d_embed;
     let memory = Arc::new(RwLock::new(Hierarchy::new(
         &cfg.memory,
@@ -75,7 +86,82 @@ pub fn prepare_case(
     }
     let ingest_stats = pipe.finish()?;
     let queries = WorkloadGen::new(seed ^ 0x9, preset).generate(synth.script(), n_queries);
-    Ok(VideoCase { synth, memory, queries, ingest_stats, preset })
+    let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
+    Ok(VideoCase { synth, fabric, memory, queries, ingest_stats, preset })
+}
+
+/// A prepared multi-camera case: K streams, one fabric, per-stream
+/// queries tagged with their ground-truth stream.
+pub struct FabricCase {
+    pub synths: Vec<Arc<VideoSynth>>,
+    pub fabric: Arc<MemoryFabric>,
+    /// (owning stream, query) — evidence spans are stream-local
+    pub queries: Vec<(StreamId, Query)>,
+    pub ingest_stats: Vec<IngestStats>,
+}
+
+/// Ingest K synthetic streams concurrently — one pipeline thread per
+/// stream, all feeding one shared embed pool — into a K-shard fabric.
+pub fn prepare_multi_case(
+    preset: DatasetPreset,
+    cfg: &VenusConfig,
+    streams: usize,
+    queries_per_stream: usize,
+    seed: u64,
+) -> Result<FabricCase> {
+    anyhow::ensure!(streams >= 1, "need at least one stream");
+    let be = backend::shared_default()?;
+    let d_embed = be.model().d_embed;
+
+    let synths: Vec<Arc<VideoSynth>> = (0..streams)
+        .map(|s| build_synth(preset, seed.wrapping_add(s as u64 * 0x9e37)))
+        .collect::<Result<_>>()?;
+    let raws: Vec<Box<dyn RawStore>> = synths
+        .iter()
+        .map(|s| Box::new(SynthBackedRaw::new(Arc::clone(s))) as Box<dyn RawStore>)
+        .collect();
+    let fabric = Arc::new(MemoryFabric::new(&cfg.memory, d_embed, raws)?);
+    // pool sized for THIS case's stream count (cfg.fabric.streams may
+    // describe the deployment, not the experiment)
+    let pool_cfg = crate::config::FabricConfig {
+        streams,
+        pool_workers: cfg.fabric.pool_workers,
+    };
+    let pool = EmbedPool::start(
+        be,
+        cfg.ingest.aux_models,
+        pool_cfg.resolved_pool_workers(),
+        cfg.ingest.queue_capacity,
+    )?;
+
+    // one ingestion thread per camera
+    let mut handles = Vec::new();
+    for (i, synth) in synths.iter().enumerate() {
+        let shard = Arc::clone(fabric.shard(StreamId(i as u16))?);
+        let mut pipe = Pipeline::attach(&cfg.ingest, synth.config().fps, &pool, shard)?;
+        let synth = Arc::clone(synth);
+        handles.push(std::thread::spawn(move || -> Result<IngestStats> {
+            for f in 0..synth.total_frames() {
+                pipe.push_frame(f, &synth.frame(f))?;
+            }
+            pipe.finish()
+        }));
+    }
+    let mut ingest_stats = Vec::new();
+    for h in handles {
+        ingest_stats
+            .push(h.join().map_err(|_| anyhow::anyhow!("ingest thread panicked"))??);
+    }
+    pool.shutdown()?;
+    fabric.check_invariants()?;
+
+    let mut queries = Vec::new();
+    for (i, synth) in synths.iter().enumerate() {
+        let qs = WorkloadGen::new(seed ^ 0x9 ^ i as u64, preset)
+            .generate(synth.script(), queries_per_stream);
+        queries.extend(qs.into_iter().map(|q| (StreamId(i as u16), q)));
+    }
+    Ok(FabricCase { synths, fabric, queries, ingest_stats })
 }
 
 /// Accuracy + selection-size outcome of one method on one case.
@@ -167,8 +253,8 @@ pub fn eval_venus(
     let cloud_cfg = CloudConfig { vlm: personality.name().into(), ..Default::default() };
     let mut vlm = VlmClient::new(cloud_cfg, seed);
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(backend::load_default()?, cfg.ingest.aux_models)?,
-        Arc::clone(&case.memory),
+        EmbedEngine::default_backend(cfg.ingest.aux_models)?,
+        Arc::clone(&case.fabric),
         cfg.retrieval.clone(),
         seed,
     );
@@ -184,7 +270,8 @@ pub fn eval_venus(
         let res = qe.retrieve_with(&q.text, rmode)?;
         frames_sum += res.selection.frames.len();
         draws_sum += res.draws;
-        let (correct, _) = vlm.judge(q, case.synth.script(), &res.selection.frames);
+        let (correct, _) =
+            vlm.judge(q, case.synth.script(), &res.selection.frame_indices());
         out.correct += correct as usize;
         out.total += 1;
     }
@@ -201,8 +288,8 @@ pub fn measure_venus_edge_latency(
     seed: u64,
 ) -> Result<f64> {
     let mut qe = QueryEngine::new(
-        EmbedEngine::new(backend::load_default()?, cfg.ingest.aux_models)?,
-        Arc::clone(&case.memory),
+        EmbedEngine::default_backend(cfg.ingest.aux_models)?,
+        Arc::clone(&case.fabric),
         cfg.retrieval.clone(),
         seed,
     );

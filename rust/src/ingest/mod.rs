@@ -1,11 +1,13 @@
 //! Ingestion stage (§IV-B): streaming scene segmentation, incremental
-//! clustering, and the threaded perception pipeline that feeds the
-//! hierarchical memory in real time.
+//! clustering, the per-stream perception pipelines, and the shared embed
+//! worker pool that batches MEM compute across camera streams.
 
 pub mod cluster;
 pub mod pipeline;
+pub mod pool;
 pub mod scene;
 
 pub use cluster::{Cluster, PartitionClusterer};
 pub use pipeline::{IngestStats, Pipeline};
+pub use pool::EmbedPool;
 pub use scene::{Partition, SceneSegmenter};

@@ -1,36 +1,37 @@
-//! Threaded streaming ingestion pipeline (Fig. 6, ingestion stage).
+//! Streaming ingestion pipeline (Fig. 6, ingestion stage) — the
+//! per-stream front-end of the multi-camera fabric.
 //!
 //! The caller (camera driver) pushes frames; the pipeline:
-//!   1. archives every frame to the raw layer,
+//!   1. archives every frame to its stream's shard (raw layer),
 //!   2. computes Eq. 1 features and runs scene segmentation,
 //!   3. clusters frames incrementally within the open partition,
-//!   4. hands completed partitions to a dedicated *embed thread* that
-//!      owns the embed engine, batches centroid frames through the MEM,
-//!      and inserts indexed vectors into the hierarchical memory.
+//!   4. hands completed partitions to the [`EmbedPool`] — the shared
+//!      worker pool that coalesces partitions *across streams* into full
+//!      MEM batches and inserts indexed vectors into each stream's shard.
 //!
-//! The partition channel is bounded: if embedding falls behind the
-//! stream, `push_frame` blocks — the backpressure the paper's challenge ①
+//! The pool channel is bounded: if embedding falls behind the stream,
+//! `push_frame` blocks — the backpressure the paper's challenge ①
 //! describes.  Because only sparse centroids are embedded, the pipeline
 //! sustains far higher FPS than frame-wise embedding (Fig. 4 vs Venus).
 //!
-//! The shared memory is an `RwLock`: this pipeline is the only writer
-//! (frame archival + index inserts); the query path takes read locks, so
-//! concurrent queries never serialize against each other and only overlap
-//! writers for the narrow insert/archive critical sections.
+//! Single-camera deployments use [`Pipeline::new`], which owns a private
+//! single-worker pool (same behavior as the historical dedicated embed
+//! thread).  Multi-camera deployments build one [`EmbedPool`] and attach
+//! N pipelines to it with [`Pipeline::attach`].
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::SyncSender;
 use std::sync::{Arc, RwLock};
-use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::IngestConfig;
 use crate::embed::EmbedEngine;
 use crate::features::frame_features;
-use crate::ingest::cluster::{Cluster, PartitionClusterer};
+use crate::ingest::cluster::PartitionClusterer;
+use crate::ingest::pool::{EmbedPool, PoolJob, StreamProgress};
 use crate::ingest::scene::SceneSegmenter;
-use crate::memory::{ClusterRecord, Hierarchy};
+use crate::memory::{Hierarchy, StreamId};
 use crate::video::frame::Frame;
 
 /// Ingestion statistics for the run.
@@ -41,7 +42,8 @@ pub struct IngestStats {
     pub clusters: usize,
     pub embedded: usize,
     pub embed_batches: usize,
-    /// mean wall time per embed batch call (seconds, measured)
+    /// mean wall time per embed batch call (seconds, measured; for
+    /// pool-coalesced batches, this stream's cluster-share of the wall)
     pub mean_embed_batch_s: f64,
     /// mean wall time per embedded (indexed) frame
     pub mean_embed_frame_s: f64,
@@ -49,30 +51,16 @@ pub struct IngestStats {
     pub wall_s: f64,
 }
 
-enum WorkItem {
-    Partition { scene_id: usize, clusters: Vec<Cluster> },
-}
-
-/// EmbedEngine may wrap PJRT raw pointers and is not auto-Send; we move it
-/// into exactly one embed thread and never alias it.  The PJRT CPU client
-/// is safe to drive from the single owning thread (the native backend is
-/// plain data and trivially safe).
-struct SendEngine(EmbedEngine);
-unsafe impl Send for SendEngine {}
-
-struct EmbedWorkerOut {
-    clusters: usize,
-    embedded: usize,
-    batches: usize,
-    mean_batch_s: f64,
-}
-
-/// The streaming ingestion pipeline.
+/// The streaming ingestion pipeline (one camera stream).
 pub struct Pipeline {
     cfg: IngestConfig,
-    memory: Arc<RwLock<Hierarchy>>,
-    tx: Option<SyncSender<WorkItem>>,
-    worker: Option<JoinHandle<Result<EmbedWorkerOut>>>,
+    stream: StreamId,
+    shard: Arc<RwLock<Hierarchy>>,
+    tx: Option<SyncSender<PoolJob>>,
+    owned_pool: Option<EmbedPool>,
+    progress: Arc<StreamProgress>,
+    /// pool liveness (worker count) — guards the drain wait in `finish`
+    pool_alive: Arc<std::sync::atomic::AtomicUsize>,
     seg: SceneSegmenter,
     clusterer: PartitionClusterer,
     frames: u64,
@@ -81,8 +69,8 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
-    /// `engine` is consumed by the embed thread; `memory` is shared with
-    /// the query path.
+    /// Single-stream pipeline owning a private single-worker pool that
+    /// consumes `engine`; `memory` is shared with the query path.
     ///
     /// Fallible: backend warm-up runs here so a broken backend (missing /
     /// mismatched artifacts, corrupt entry) surfaces at construction with
@@ -94,21 +82,30 @@ impl Pipeline {
         engine: EmbedEngine,
         memory: Arc<RwLock<Hierarchy>>,
     ) -> Result<Self> {
-        // precompile the embed entries so the first partition doesn't pay
-        // backend compilation latency on the streaming path
-        engine
-            .warmup()
-            .context("embed backend warm-up failed; refusing to start the pipeline")?;
-        let (tx, rx) = sync_channel::<WorkItem>(cfg.queue_capacity);
-        let mem2 = Arc::clone(&memory);
-        let send_engine = SendEngine(engine);
-        let worker =
-            std::thread::spawn(move || embed_worker(send_engine, rx, mem2));
+        let pool = EmbedPool::with_engine(engine, cfg.queue_capacity)?;
+        let mut pipe = Self::attach(cfg, fps, &pool, memory)?;
+        pipe.owned_pool = Some(pool);
+        Ok(pipe)
+    }
+
+    /// Attach a per-stream front-end to a shared [`EmbedPool`].  The
+    /// stream identity comes from the shard (built via
+    /// `Hierarchy::for_stream` / `MemoryFabric::new`).
+    pub fn attach(
+        cfg: &IngestConfig,
+        fps: f64,
+        pool: &EmbedPool,
+        memory: Arc<RwLock<Hierarchy>>,
+    ) -> Result<Self> {
+        let stream = memory.read().unwrap().stream();
         Ok(Self {
             cfg: cfg.clone(),
-            memory,
-            tx: Some(tx),
-            worker: Some(worker),
+            stream,
+            shard: memory,
+            tx: Some(pool.sender()),
+            owned_pool: None,
+            progress: StreamProgress::new(),
+            pool_alive: pool.alive_handle(),
             seg: SceneSegmenter::new(cfg, fps),
             clusterer: PartitionClusterer::new(cfg.cluster_threshold),
             frames: 0,
@@ -117,58 +114,83 @@ impl Pipeline {
         })
     }
 
-    /// Feed the next captured frame (global ids must be dense ascending).
+    /// The camera stream this pipeline feeds.
+    pub fn stream(&self) -> StreamId {
+        self.stream
+    }
+
+    fn submit_partition(&mut self, scene_id: usize) -> Result<()> {
+        let done = std::mem::replace(
+            &mut self.clusterer,
+            PartitionClusterer::new(self.cfg.cluster_threshold),
+        );
+        self.partitions += 1;
+        self.tx
+            .as_ref()
+            .unwrap()
+            .send(PoolJob {
+                stream: self.stream,
+                scene_id,
+                clusters: done.finish(),
+                shard: Arc::clone(&self.shard),
+                progress: Arc::clone(&self.progress),
+            })
+            .map_err(|_| anyhow::anyhow!("embed pool died"))?;
+        Ok(())
+    }
+
+    /// Feed the next captured frame (stream-local ids, dense ascending).
     pub fn push_frame(&mut self, id: u64, frame: &Frame) -> Result<()> {
-        self.memory.write().unwrap().archive_frame(id, frame);
+        self.shard.write().unwrap().archive_frame(id, frame);
         let feat = frame_features(frame);
         if let Some(part) = self.seg.push_features(feat) {
-            let done = std::mem::replace(
-                &mut self.clusterer,
-                PartitionClusterer::new(self.cfg.cluster_threshold),
-            );
-            self.partitions += 1;
-            self.tx
-                .as_ref()
-                .unwrap()
-                .send(WorkItem::Partition { scene_id: part.id, clusters: done.finish() })
-                .context("embed worker died")?;
+            self.submit_partition(part.id)?;
         }
         self.clusterer.push(id, frame);
         self.frames += 1;
         Ok(())
     }
 
-    /// Close the stream: flush the open partition, join the embed thread,
-    /// and return run statistics.
+    /// Close the stream: flush the open partition, wait for the pool to
+    /// drain this stream's partitions, and return run statistics.
     pub fn finish(mut self) -> Result<IngestStats> {
         if let Some(part) = self.seg.finish() {
-            let done = std::mem::replace(
-                &mut self.clusterer,
-                PartitionClusterer::new(self.cfg.cluster_threshold),
-            );
-            self.partitions += 1;
-            self.tx
-                .as_ref()
-                .unwrap()
-                .send(WorkItem::Partition { scene_id: part.id, clusters: done.finish() })
-                .context("embed worker died")?;
+            self.submit_partition(part.id)?;
         }
-        drop(self.tx.take()); // close the channel; worker drains and exits
-        let out = self
-            .worker
-            .take()
-            .unwrap()
-            .join()
-            .map_err(|_| anyhow::anyhow!("embed worker panicked"))??;
+        drop(self.tx.take()); // release our sender; an owned pool's queue closes
+        let out = if let Some(pool) = self.owned_pool.take() {
+            // private pool: join its worker, then read the final state —
+            // never blocks on a dead worker
+            pool.shutdown()?;
+            let st = self.progress.snapshot();
+            anyhow::ensure!(
+                st.partitions_done >= self.partitions || st.error.is_some(),
+                "embed worker died with partitions pending"
+            );
+            st
+        } else {
+            // shared pool: other streams keep it alive; wait for ours
+            // (the alive counter turns a dead pool into an error, not a
+            // hang)
+            self.progress
+                .wait_partitions(self.partitions, &self.pool_alive)
+        };
+        if let Some(e) = out.error {
+            anyhow::bail!("embed stage failed: {e}");
+        }
         Ok(IngestStats {
             frames: self.frames,
             partitions: self.partitions,
             clusters: out.clusters,
             embedded: out.embedded,
             embed_batches: out.batches,
-            mean_embed_batch_s: out.mean_batch_s,
+            mean_embed_batch_s: if out.batches > 0 {
+                out.batch_time_s / out.batches as f64
+            } else {
+                0.0
+            },
             mean_embed_frame_s: if out.embedded > 0 {
-                out.mean_batch_s * out.batches as f64 / out.embedded as f64
+                out.batch_time_s / out.embedded as f64
             } else {
                 0.0
             },
@@ -181,57 +203,19 @@ impl Pipeline {
     }
 }
 
-fn embed_worker(
-    engine: SendEngine,
-    rx: Receiver<WorkItem>,
-    memory: Arc<RwLock<Hierarchy>>,
-) -> Result<EmbedWorkerOut> {
-    let mut engine = engine.0;
-    let mut clusters = 0usize;
-    let mut embedded = 0usize;
-    while let Ok(WorkItem::Partition { scene_id, clusters: parts }) = rx.recv() {
-        if parts.is_empty() {
-            continue;
-        }
-        clusters += parts.len();
-        let refs: Vec<&Frame> = parts.iter().map(|c| &c.centroid).collect();
-        // embed OUTSIDE the lock — this is the slow stage; queries keep
-        // reading the index while the MEM runs
-        let embs = engine.embed_index_frames(&refs)?;
-        embedded += embs.len();
-        let mut mem = memory.write().unwrap();
-        for (c, emb) in parts.iter().zip(embs) {
-            mem.insert(
-                &emb,
-                ClusterRecord {
-                    scene_id,
-                    centroid_frame: c.centroid_id,
-                    members: c.members.clone(),
-                },
-            )?;
-        }
-    }
-    Ok(EmbedWorkerOut {
-        clusters,
-        embedded,
-        batches: engine.image_times.len(),
-        mean_batch_s: engine.measured_image_batch_s(),
-    })
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::{EmbedBackend, ModelMeta};
     use crate::config::MemoryConfig;
-    use crate::memory::InMemoryRaw;
+    use crate::memory::{InMemoryRaw, MemoryFabric, RawStore};
 
     /// A backend whose warm-up fails — stands in for a broken artifact set.
     struct BrokenBackend(ModelMeta);
 
     impl BrokenBackend {
-        fn boxed() -> Box<dyn EmbedBackend> {
-            Box::new(Self(ModelMeta {
+        fn shared() -> Arc<dyn EmbedBackend> {
+            Arc::new(Self(ModelMeta {
                 img_size: 16,
                 patch: 8,
                 d_embed: 8,
@@ -300,7 +284,7 @@ mod tests {
 
     #[test]
     fn broken_backend_fails_at_construction_not_mid_stream() {
-        let engine = EmbedEngine::new(BrokenBackend::boxed(), false).unwrap();
+        let engine = EmbedEngine::new(BrokenBackend::shared(), false).unwrap();
         let memory = Arc::new(RwLock::new(
             Hierarchy::new(&MemoryConfig::default(), 8, Box::new(InMemoryRaw::new(16)))
                 .unwrap(),
@@ -324,5 +308,52 @@ mod tests {
         let pipe = Pipeline::new(&IngestConfig::default(), 8.0, engine, memory).unwrap();
         assert_eq!(pipe.frames_pushed(), 0);
         pipe.finish().unwrap();
+    }
+
+    /// Two pipelines share one pool: partitions from both streams coalesce
+    /// through the same workers, yet land in their own shards.
+    #[test]
+    fn shared_pool_routes_partitions_to_their_shards() {
+        let engine = EmbedEngine::default_backend(false).unwrap();
+        let d = engine.d_embed();
+        let backend = engine.backend_arc();
+        drop(engine);
+
+        let raws: Vec<Box<dyn RawStore>> = (0..2)
+            .map(|_| Box::new(InMemoryRaw::new(64)) as Box<dyn RawStore>)
+            .collect();
+        let fabric =
+            Arc::new(MemoryFabric::new(&MemoryConfig::default(), d, raws).unwrap());
+        let pool = EmbedPool::start(backend, false, 2, 64).unwrap();
+
+        let cfg = IngestConfig { max_partition_s: 1.0, ..Default::default() };
+        let mut pipes: Vec<Pipeline> = fabric
+            .shards()
+            .iter()
+            .map(|shard| Pipeline::attach(&cfg, 8.0, &pool, Arc::clone(shard)).unwrap())
+            .collect();
+
+        // distinct flat-color ramps per stream → every frame clusters
+        for i in 0..64u64 {
+            let shade = (i % 8) as f32 / 8.0;
+            pipes[0].push_frame(i, &Frame::filled(64, [shade, 0.2, 0.2])).unwrap();
+            pipes[1].push_frame(i, &Frame::filled(64, [0.2, shade, 0.2])).unwrap();
+        }
+        let mut embedded = 0;
+        for pipe in pipes.drain(..) {
+            let stats = pipe.finish().unwrap();
+            assert_eq!(stats.frames, 64);
+            assert!(stats.embedded > 0, "stream embedded nothing");
+            embedded += stats.embedded;
+        }
+        pool.shutdown().unwrap();
+
+        fabric.check_invariants().unwrap();
+        assert_eq!(fabric.total_indexed(), embedded);
+        for shard in fabric.shards() {
+            let g = shard.read().unwrap();
+            assert!(!g.is_empty(), "each shard received its own partitions");
+            assert_eq!(g.frames_ingested(), 64);
+        }
     }
 }

@@ -1,0 +1,312 @@
+//! Shared embed worker pool: the compute stage every per-stream
+//! [`super::Pipeline`] front-end feeds.
+//!
+//! With one pipeline per camera, per-stream embed threads each see only
+//! their own partition trickle and embed whatever tail batch they happen
+//! to hold.  The pool fixes both waste axes at once:
+//!
+//!   * **one backend, N workers** — workers share the process-wide
+//!     `Arc<dyn EmbedBackend>` through cheap per-worker [`EmbedEngine`]
+//!     front-ends (no per-thread weight regeneration, no per-thread XLA
+//!     compilation cache);
+//!   * **cross-stream batch coalescing** — a worker that picks up a
+//!     partition opportunistically drains further queued partitions (any
+//!     stream) until it holds a full MEM batch, embeds them in one call,
+//!     and scatters the resulting vectors into each partition's own
+//!     shard.  Tail fragments from K cameras merge into full batches.
+//!
+//! Backpressure is preserved: the job channel is bounded, so pipelines
+//! block in `push_frame` when embedding falls behind (the paper's
+//! challenge ① applied fleet-wide).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::backend::EmbedBackend;
+use crate::embed::EmbedEngine;
+use crate::ingest::cluster::Cluster;
+use crate::memory::{ClusterRecord, Hierarchy, StreamId};
+
+/// One completed partition, routed to its stream's shard.
+pub(crate) struct PoolJob {
+    pub stream: StreamId,
+    pub scene_id: usize,
+    pub clusters: Vec<Cluster>,
+    pub shard: Arc<RwLock<Hierarchy>>,
+    pub progress: Arc<StreamProgress>,
+}
+
+/// Per-stream ingestion progress, updated by pool workers and awaited by
+/// the stream's pipeline at `finish()`.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct ProgressState {
+    pub partitions_done: usize,
+    pub clusters: usize,
+    pub embedded: usize,
+    /// backend batch calls this stream's frames rode in
+    pub batches: usize,
+    /// this stream's share of embed wall time (seconds); for batches that
+    /// coalesced several streams the wall is split by cluster share, so
+    /// per-stream means stay comparable to the dedicated-thread numbers
+    pub batch_time_s: f64,
+    pub error: Option<String>,
+}
+
+pub(crate) struct StreamProgress {
+    state: Mutex<ProgressState>,
+    cv: Condvar,
+}
+
+impl StreamProgress {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self { state: Mutex::new(ProgressState::default()), cv: Condvar::new() })
+    }
+
+    fn update(&self, f: impl FnOnce(&mut ProgressState)) {
+        let mut st = self.state.lock().unwrap();
+        f(&mut st);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub fn snapshot(&self) -> ProgressState {
+        self.state.lock().unwrap().clone()
+    }
+
+    /// Block until `n` partitions completed or an error was recorded —
+    /// with a liveness guard: if every pool worker has exited (panic)
+    /// while partitions are still pending, give up instead of waiting
+    /// forever on a condvar nobody will signal.
+    pub fn wait_partitions(&self, n: usize, workers_alive: &AtomicUsize) -> ProgressState {
+        let mut st = self.state.lock().unwrap();
+        while st.partitions_done < n && st.error.is_none() {
+            if workers_alive.load(Ordering::Acquire) == 0 {
+                st.error
+                    .get_or_insert_with(|| "embed pool workers died".to_string());
+                break;
+            }
+            let (guard, _timeout) = self
+                .cv
+                .wait_timeout(st, std::time::Duration::from_millis(100))
+                .unwrap();
+            st = guard;
+        }
+        st.clone()
+    }
+}
+
+/// Decrements the pool's alive-worker counter on thread exit — including
+/// panic unwinds, so waiting pipelines never hang on a dead pool.
+struct WorkerAliveGuard(Arc<AtomicUsize>);
+
+impl Drop for WorkerAliveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Release);
+    }
+}
+
+/// The shared embed worker pool.
+pub struct EmbedPool {
+    tx: Option<SyncSender<PoolJob>>,
+    workers: Vec<JoinHandle<()>>,
+    alive: Arc<AtomicUsize>,
+}
+
+impl EmbedPool {
+    /// Start `workers` workers over the shared backend.  Warm-up runs
+    /// once here (the backend's compiled-entry cache is shared), so a
+    /// broken backend surfaces at pool construction, not mid-stream.
+    pub fn start(
+        backend: Arc<dyn EmbedBackend>,
+        use_aux: bool,
+        workers: usize,
+        queue_capacity: usize,
+    ) -> Result<Self> {
+        let mut engines = Vec::with_capacity(workers.max(1));
+        for _ in 0..workers.max(1) {
+            engines.push(EmbedEngine::new(Arc::clone(&backend), use_aux)?);
+        }
+        Self::with_engines(engines, queue_capacity)
+    }
+
+    /// Single-worker pool that consumes an existing engine (the
+    /// single-stream `Pipeline::new` compatibility path).
+    pub fn with_engine(engine: EmbedEngine, queue_capacity: usize) -> Result<Self> {
+        Self::with_engines(vec![engine], queue_capacity)
+    }
+
+    fn with_engines(engines: Vec<EmbedEngine>, queue_capacity: usize) -> Result<Self> {
+        engines[0]
+            .warmup()
+            .context("embed backend warm-up failed; refusing to start the pipeline")?;
+        let (tx, rx) = sync_channel::<PoolJob>(queue_capacity.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let alive = Arc::new(AtomicUsize::new(engines.len()));
+        let workers = engines
+            .into_iter()
+            .map(|engine| {
+                let rx = Arc::clone(&rx);
+                let guard = WorkerAliveGuard(Arc::clone(&alive));
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    worker_loop(engine, rx)
+                })
+            })
+            .collect();
+        Ok(Self { tx: Some(tx), workers, alive })
+    }
+
+    /// A job sender for one pipeline front-end.
+    pub(crate) fn sender(&self) -> SyncSender<PoolJob> {
+        self.tx.as_ref().expect("pool already shut down").clone()
+    }
+
+    /// Shared alive-worker counter (pipelines use it as a liveness guard
+    /// while waiting for their partitions to drain).
+    pub(crate) fn alive_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.alive)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Close the queue and join every worker.  Pipelines must have
+    /// dropped their senders (i.e. called `finish`) first, or this blocks
+    /// until they do.
+    pub fn shutdown(mut self) -> Result<()> {
+        drop(self.tx.take());
+        let mut panicked = false;
+        for w in self.workers.drain(..) {
+            panicked |= w.join().is_err();
+        }
+        anyhow::ensure!(!panicked, "embed pool worker panicked");
+        Ok(())
+    }
+}
+
+impl Drop for EmbedPool {
+    fn drop(&mut self) {
+        // best-effort drain on un-shutdown drop (e.g. error unwind paths)
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(mut engine: EmbedEngine, rx: Arc<Mutex<Receiver<PoolJob>>>) {
+    let target = engine.max_image_batch();
+    loop {
+        let mut jobs = Vec::new();
+        {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(j) => jobs.push(j),
+                Err(_) => return, // channel closed: drain complete
+            }
+            // coalesce across streams up to one full MEM batch; stop the
+            // moment the queue runs dry so latency never waits on traffic
+            let mut pending: usize = jobs[0].clusters.len();
+            while pending < target {
+                match guard.try_recv() {
+                    Ok(j) => {
+                        pending += j.clusters.len();
+                        jobs.push(j);
+                    }
+                    Err(_) => break,
+                }
+            }
+        } // release the receiver before the slow embed stage
+        process_jobs(&mut engine, jobs);
+    }
+}
+
+/// Embed every job's centroids in one engine call, then scatter vectors
+/// into each job's shard (insert OUTSIDE the embed stage but under each
+/// shard's own short write section — queries on other streams never wait).
+fn process_jobs(engine: &mut EmbedEngine, jobs: Vec<PoolJob>) {
+    let total: usize = jobs.iter().map(|j| j.clusters.len()).sum();
+    if total == 0 {
+        for j in jobs {
+            j.progress.update(|s| s.partitions_done += 1);
+        }
+        return;
+    }
+
+    let refs: Vec<&crate::video::frame::Frame> = jobs
+        .iter()
+        .flat_map(|j| j.clusters.iter().map(|c| &c.centroid))
+        .collect();
+    let batches_before = engine.image_times.len();
+    let t0 = Instant::now();
+    let embs = engine.embed_index_frames(&refs);
+    let wall = t0.elapsed().as_secs_f64();
+    let batches = engine.image_times.len() - batches_before;
+
+    match embs {
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for j in jobs {
+                let msg = msg.clone();
+                j.progress.update(move |s| {
+                    s.partitions_done += 1;
+                    s.error.get_or_insert(msg);
+                });
+            }
+        }
+        Ok(embs) => {
+            let mut it = embs.into_iter();
+            // a stream may contribute several partitions to one coalesced
+            // call; count the call's backend batches once per stream, not
+            // once per partition, or embed_batches inflates
+            let mut counted: Vec<Arc<StreamProgress>> = Vec::new();
+            for j in jobs {
+                let first_for_stream =
+                    !counted.iter().any(|p| Arc::ptr_eq(p, &j.progress));
+                if first_for_stream {
+                    counted.push(Arc::clone(&j.progress));
+                }
+                let take = j.clusters.len();
+                // consume exactly this job's slice of the batch, so a
+                // failed insert never misaligns the next job's embeddings
+                let job_embs: Vec<Vec<f32>> = it.by_ref().take(take).collect();
+                let mut err: Option<String> = None;
+                {
+                    let mut shard = j.shard.write().unwrap();
+                    for (c, emb) in j.clusters.iter().zip(&job_embs) {
+                        if let Err(e) = shard.insert(
+                            emb,
+                            ClusterRecord {
+                                stream: j.stream,
+                                scene_id: j.scene_id,
+                                centroid_frame: c.centroid_id,
+                                members: c.members.clone(),
+                            },
+                        ) {
+                            err = Some(format!("{e:#}"));
+                            break;
+                        }
+                    }
+                }
+                let share = wall * take as f64 / total as f64;
+                let add_batches = if first_for_stream { batches } else { 0 };
+                j.progress.update(move |s| {
+                    s.partitions_done += 1;
+                    s.clusters += take;
+                    s.embedded += take;
+                    s.batches += add_batches;
+                    s.batch_time_s += share;
+                    if let Some(e) = err {
+                        s.error.get_or_insert(e);
+                    }
+                });
+            }
+        }
+    }
+}

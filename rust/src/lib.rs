@@ -16,9 +16,20 @@
 //! deployment claim), while the optional `pjrt` cargo feature adds the
 //! AOT-compiled XLA artifact [`runtime`] produced by the build-time Python
 //! layers (L2 JAX dual-encoder calling L1 Pallas kernels; see
-//! `python/compile/`).  Python never executes on the request path.
+//! `python/compile/`).  Python never executes on the request path.  One
+//! backend is constructed per process ([`backend::shared_default`]) and
+//! shared by every pipeline, pool worker, and query worker.
 //!
-//! Quickstart: see `examples/quickstart.rs`; architecture: `DESIGN.md`.
+//! Beyond the paper's single camera, the memory layer is a multi-tenant
+//! **fabric** ([`memory::MemoryFabric`]): per-stream [`memory::Hierarchy`]
+//! shards behind independent `RwLock`s, per-stream ingestion [`ingest`]
+//! pipelines feeding one shared embed pool that coalesces partitions
+//! across cameras into full MEM batches, and stream-scoped queries
+//! ([`memory::StreamScope`]) whose `All` path scatter-gathers Eq. 4–5
+//! scoring across shards so one answer can cite several cameras.
+//!
+//! Quickstart: see `examples/quickstart.rs` (single camera) and
+//! `examples/multi_camera.rs` (fabric); architecture: `DESIGN.md`.
 
 pub mod backend;
 pub mod baselines;

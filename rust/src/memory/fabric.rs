@@ -1,0 +1,278 @@
+//! Multi-camera memory fabric: N per-stream [`Hierarchy`] shards, each
+//! behind its own `RwLock`.
+//!
+//! Sharding rationale (LiveVLM / Mosaic scaling insight): camera A's
+//! ingestion writer must never contend with camera B's query readers, so
+//! the lock is per-shard — a writer only excludes readers *of its own
+//! stream*.  Cross-stream queries take read guards on every scoped shard
+//! at once (readers never block each other), merge the per-shard Eq. 4
+//! scores into one softmax distribution, and sample from it — so a single
+//! answer can cite evidence frames from several cameras.
+//!
+//! Lock-order note: fabric operations acquire shard guards in ascending
+//! `StreamId` order while writers (ingestion pipelines) each hold at most
+//! one shard lock at a time — no cycle, no deadlock.
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use crate::config::MemoryConfig;
+use crate::memory::hierarchy::Hierarchy;
+use crate::memory::raw::RawStore;
+use crate::video::frame::Frame;
+
+/// Identifies one camera stream (== one shard) in the fabric.
+#[derive(Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StreamId(pub u16);
+
+impl StreamId {
+    /// Shard-array index.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Debug for StreamId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+impl std::fmt::Display for StreamId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Fabric-global frame address: (stream, stream-local frame index).
+///
+/// Ordering is lexicographic (stream first), so a sorted selection groups
+/// frames by camera and stays ascending-in-time within each camera —
+/// exactly the order a multi-camera VLM prompt presents evidence in.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FrameId {
+    pub stream: StreamId,
+    pub idx: u64,
+}
+
+impl FrameId {
+    pub fn new(stream: StreamId, idx: u64) -> Self {
+        Self { stream, idx }
+    }
+}
+
+impl std::fmt::Debug for FrameId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}#{}", self.stream, self.idx)
+    }
+}
+
+/// Which shards a query sees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamScope {
+    /// A single camera stream.
+    One(StreamId),
+    /// Scatter-gather over every shard (cross-camera answers).
+    All,
+}
+
+/// The multi-camera memory fabric: per-stream shards, each independently
+/// locked.  Shard `i` owns `StreamId(i)`.
+pub struct MemoryFabric {
+    shards: Vec<Arc<RwLock<Hierarchy>>>,
+}
+
+impl MemoryFabric {
+    /// Build an N-shard fabric, one raw store per stream (shard `i` takes
+    /// `raws[i]` and owns `StreamId(i)`).
+    pub fn new(
+        cfg: &MemoryConfig,
+        d_embed: usize,
+        raws: Vec<Box<dyn RawStore>>,
+    ) -> Result<Self> {
+        anyhow::ensure!(!raws.is_empty(), "fabric needs at least one stream");
+        anyhow::ensure!(
+            raws.len() <= u16::MAX as usize,
+            "fabric supports at most {} streams",
+            u16::MAX
+        );
+        let mut shards = Vec::with_capacity(raws.len());
+        for (i, raw) in raws.into_iter().enumerate() {
+            shards.push(Arc::new(RwLock::new(Hierarchy::for_stream(
+                cfg,
+                d_embed,
+                raw,
+                StreamId(i as u16),
+            )?)));
+        }
+        Ok(Self { shards })
+    }
+
+    /// Wrap an existing single shard (must own `StreamId(0)`) — the
+    /// single-camera deployment and the test/bench convenience path.
+    pub fn single(shard: Arc<RwLock<Hierarchy>>) -> Self {
+        debug_assert_eq!(shard.read().unwrap().stream(), StreamId(0));
+        Self { shards: vec![shard] }
+    }
+
+    pub fn n_streams(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn stream_ids(&self) -> impl Iterator<Item = StreamId> + '_ {
+        (0..self.shards.len() as u16).map(StreamId)
+    }
+
+    /// All shards, in `StreamId` order.
+    pub fn shards(&self) -> &[Arc<RwLock<Hierarchy>>] {
+        &self.shards
+    }
+
+    /// One stream's shard.
+    pub fn shard(&self, stream: StreamId) -> Result<&Arc<RwLock<Hierarchy>>> {
+        self.shards
+            .get(stream.index())
+            .ok_or_else(|| anyhow::anyhow!("unknown stream {stream} ({}-shard fabric)", self.shards.len()))
+    }
+
+    /// The shards a scope covers, in ascending `StreamId` order.
+    pub fn scoped(&self, scope: StreamScope) -> Result<Vec<&Arc<RwLock<Hierarchy>>>> {
+        match scope {
+            StreamScope::One(s) => Ok(vec![self.shard(s)?]),
+            StreamScope::All => Ok(self.shards.iter().collect()),
+        }
+    }
+
+    /// Fetch one raw frame by fabric-global address.
+    pub fn fetch_frame(&self, id: FrameId) -> Result<Frame> {
+        self.shard(id.stream)?.read().unwrap().fetch_frame(id.idx)
+    }
+
+    /// Fetch a batch of raw frames (the payload that ships to the cloud).
+    /// Groups by stream so each shard's lock is taken once.
+    pub fn fetch_frames(&self, ids: &[FrameId]) -> Result<Vec<Frame>> {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        while i < ids.len() {
+            let stream = ids[i].stream;
+            let shard = self.shard(stream)?;
+            let guard = shard.read().unwrap();
+            while i < ids.len() && ids[i].stream == stream {
+                out.push(guard.fetch_frame(ids[i].idx)?);
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total indexed vectors across every shard.
+    pub fn total_indexed(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// Total frames archived across every shard.
+    pub fn total_frames(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().frames_ingested())
+            .sum()
+    }
+
+    /// Run `check_invariants` on every shard.
+    pub fn check_invariants(&self) -> Result<()> {
+        for shard in &self.shards {
+            shard.read().unwrap().check_invariants()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::hierarchy::ClusterRecord;
+    use crate::memory::raw::InMemoryRaw;
+
+    fn fabric(n: usize) -> MemoryFabric {
+        let raws: Vec<Box<dyn RawStore>> =
+            (0..n).map(|_| Box::new(InMemoryRaw::new(8)) as Box<dyn RawStore>).collect();
+        MemoryFabric::new(&MemoryConfig::default(), 4, raws).unwrap()
+    }
+
+    #[test]
+    fn shards_own_their_stream_ids() {
+        let f = fabric(3);
+        assert_eq!(f.n_streams(), 3);
+        for (i, s) in f.stream_ids().enumerate() {
+            assert_eq!(s, StreamId(i as u16));
+            assert_eq!(f.shard(s).unwrap().read().unwrap().stream(), s);
+        }
+        assert!(f.shard(StreamId(3)).is_err());
+    }
+
+    #[test]
+    fn scoped_selects_shards() {
+        let f = fabric(4);
+        assert_eq!(f.scoped(StreamScope::All).unwrap().len(), 4);
+        assert_eq!(f.scoped(StreamScope::One(StreamId(2))).unwrap().len(), 1);
+        assert!(f.scoped(StreamScope::One(StreamId(9))).is_err());
+    }
+
+    #[test]
+    fn fetch_routes_by_stream_and_reports_holes() {
+        let f = fabric(2);
+        for (sid, fill) in [(0u16, 0.25f32), (1, 0.75)] {
+            let shard = f.shard(StreamId(sid)).unwrap();
+            let mut g = shard.write().unwrap();
+            for i in 0..4u64 {
+                g.archive_frame(i, &Frame::filled(8, [fill; 3]));
+            }
+        }
+        let a = f.fetch_frame(FrameId::new(StreamId(0), 1)).unwrap();
+        let b = f.fetch_frame(FrameId::new(StreamId(1), 1)).unwrap();
+        assert!(a.data()[0] < b.data()[0], "frames came from distinct shards");
+
+        // batched fetch across streams
+        let ids = [
+            FrameId::new(StreamId(0), 0),
+            FrameId::new(StreamId(0), 3),
+            FrameId::new(StreamId(1), 2),
+        ];
+        assert_eq!(f.fetch_frames(&ids).unwrap().len(), 3);
+
+        // holes propagate as errors through the batched path too
+        let hole = [FrameId::new(StreamId(1), 99)];
+        assert!(f.fetch_frames(&hole).is_err());
+        assert!(f.fetch_frame(FrameId::new(StreamId(7), 0)).is_err());
+    }
+
+    #[test]
+    fn invariants_cover_every_shard() {
+        let f = fabric(2);
+        {
+            let shard = f.shard(StreamId(1)).unwrap();
+            let mut g = shard.write().unwrap();
+            g.archive_frame(0, &Frame::filled(8, [0.5; 3]));
+            g.insert(
+                &[1.0, 0.0, 0.0, 0.0],
+                ClusterRecord {
+                    stream: StreamId(1),
+                    scene_id: 0,
+                    centroid_frame: 9, // not a member: invariant violation
+                    members: vec![0],
+                },
+            )
+            .unwrap();
+        }
+        assert!(f.check_invariants().is_err());
+    }
+
+    #[test]
+    fn frame_id_orders_stream_major() {
+        let a = FrameId::new(StreamId(0), 100);
+        let b = FrameId::new(StreamId(1), 5);
+        assert!(a < b);
+        assert_eq!(format!("{a:?}"), "s0#100");
+    }
+}

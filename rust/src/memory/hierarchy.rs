@@ -2,26 +2,36 @@
 //! to its scene cluster in the raw layer, enabling the two-phase recall
 //! the paper describes — locate relevant scenes via the semantic index,
 //! then reconstruct detail from the raw archive.
+//!
+//! One `Hierarchy` is one *shard* of the multi-camera memory fabric: it
+//! owns a single stream's index vectors and raw archive, addressed by
+//! stream-local dense frame ids.  Cross-stream composition (scatter-gather
+//! scoring, fabric-global `FrameId` addressing) lives in
+//! [`crate::memory::fabric`].
 
 use anyhow::Result;
 
 use crate::config::MemoryConfig;
+use crate::memory::fabric::StreamId;
 use crate::memory::raw::RawStore;
 use crate::memory::vectordb::{build_index, Hit, Metric, VectorIndex};
 
 /// Index-layer record: one indexed (centroid) frame and its cluster.
 #[derive(Clone, Debug)]
 pub struct ClusterRecord {
+    /// owning camera stream (== the shard this record lives in)
+    pub stream: StreamId,
     /// partition (scene) sequence number from the segmenter
     pub scene_id: usize,
-    /// global frame id of the indexed (centroid) frame
+    /// stream-local frame id of the indexed (centroid) frame
     pub centroid_frame: u64,
-    /// member frame ids, ascending
+    /// member frame ids (stream-local), ascending
     pub members: Vec<u64>,
 }
 
 /// The hierarchical memory: vector index + cluster links + raw archive.
 pub struct Hierarchy {
+    stream: StreamId,
     index: Box<dyn VectorIndex>,
     records: Vec<ClusterRecord>,
     raw: Box<dyn RawStore>,
@@ -29,7 +39,18 @@ pub struct Hierarchy {
 }
 
 impl Hierarchy {
+    /// Single-stream shard (stream 0) — the default deployment.
     pub fn new(cfg: &MemoryConfig, d_embed: usize, raw: Box<dyn RawStore>) -> Result<Self> {
+        Self::for_stream(cfg, d_embed, raw, StreamId(0))
+    }
+
+    /// A shard of the memory fabric owning one camera stream.
+    pub fn for_stream(
+        cfg: &MemoryConfig,
+        d_embed: usize,
+        raw: Box<dyn RawStore>,
+        stream: StreamId,
+    ) -> Result<Self> {
         let index = build_index(
             &cfg.index,
             d_embed,
@@ -37,7 +58,12 @@ impl Hierarchy {
             cfg.ivf_nlist,
             cfg.ivf_nprobe,
         )?;
-        Ok(Self { index, records: Vec::new(), raw, frames_ingested: 0 })
+        Ok(Self { stream, index, records: Vec::new(), raw, frames_ingested: 0 })
+    }
+
+    /// The camera stream this shard owns.
+    pub fn stream(&self) -> StreamId {
+        self.stream
     }
 
     /// Archive a raw frame (every captured frame flows through here).
@@ -46,8 +72,16 @@ impl Hierarchy {
         self.frames_ingested = self.frames_ingested.max(id + 1);
     }
 
-    /// Insert an indexed frame: embedding vector + cluster record.
+    /// Insert an indexed frame: embedding vector + cluster record.  The
+    /// record must belong to this shard's stream — per-stream isolation is
+    /// enforced at the write path, not trusted from callers.
     pub fn insert(&mut self, embedding: &[f32], record: ClusterRecord) -> Result<usize> {
+        anyhow::ensure!(
+            record.stream == self.stream,
+            "record for stream {:?} inserted into shard {:?}",
+            record.stream,
+            self.stream
+        );
         let mut members = record.members.clone();
         members.sort_unstable();
         let id = self.index.insert(embedding)?;
@@ -93,9 +127,17 @@ impl Hierarchy {
         self.frames_ingested
     }
 
-    /// Fetch a raw frame.
-    pub fn fetch_frame(&self, id: u64) -> crate::video::frame::Frame {
-        self.raw.get(id)
+    /// Fetch a raw frame by stream-local id.  A missing frame (hole in
+    /// the archive) is an error, not a panic — the query path propagates
+    /// it instead of taking down a serving worker.
+    pub fn fetch_frame(&self, id: u64) -> Result<crate::video::frame::Frame> {
+        self.raw.get(id).ok_or_else(|| {
+            anyhow::anyhow!(
+                "frame {id} missing from stream {:?} raw archive ({} archived)",
+                self.stream,
+                self.frames_ingested
+            )
+        })
     }
 
     /// Compression ratio: raw frames per indexed vector.
@@ -112,10 +154,17 @@ impl Hierarchy {
     }
 
     /// Invariant check (property tests): every record's members are
-    /// sorted, contain the centroid, and refer to archived frames.
+    /// sorted, contain the centroid, refer to archived frames, and belong
+    /// to this shard's stream (per-stream isolation).
     pub fn check_invariants(&self) -> Result<()> {
         anyhow::ensure!(self.records.len() == self.index.len(), "record/index drift");
         for (i, r) in self.records.iter().enumerate() {
+            anyhow::ensure!(
+                r.stream == self.stream,
+                "record {i} cites stream {:?} inside shard {:?}",
+                r.stream,
+                self.stream
+            );
             anyhow::ensure!(!r.members.is_empty(), "record {i} empty");
             anyhow::ensure!(
                 r.members.windows(2).all(|w| w[0] < w[1]),
@@ -166,12 +215,38 @@ mod tests {
         }
         let v = unit(&mut rng, 8);
         let id = h
-            .insert(&v, ClusterRecord { scene_id: 0, centroid_frame: 3, members: vec![3, 4, 5] })
+            .insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(0),
+                    scene_id: 0,
+                    centroid_frame: 3,
+                    members: vec![3, 4, 5],
+                },
+            )
             .unwrap();
         assert_eq!(id, 0);
         assert_eq!(h.record(0).members, vec![3, 4, 5]);
         assert_eq!(h.len(), 1);
         h.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_foreign_stream_record() {
+        let mut h = hierarchy(); // stream 0
+        let mut rng = Pcg64::seeded(9);
+        h.archive_frame(0, &Frame::filled(16, [0.5; 3]));
+        let v = unit(&mut rng, 8);
+        let err = h.insert(
+            &v,
+            ClusterRecord {
+                stream: StreamId(3),
+                scene_id: 0,
+                centroid_frame: 0,
+                members: vec![0],
+            },
+        );
+        assert!(err.is_err(), "cross-stream insert must be rejected");
     }
 
     #[test]
@@ -187,6 +262,7 @@ mod tests {
             h.insert(
                 &v,
                 ClusterRecord {
+                    stream: StreamId(0),
                     scene_id: i as usize,
                     centroid_frame: i * 10,
                     members: (i * 10..(i + 1) * 10).collect(),
@@ -207,8 +283,16 @@ mod tests {
         h.archive_frame(0, &Frame::filled(16, [0.0; 3]));
         let v = unit(&mut rng, 8);
         // centroid not in members
-        h.insert(&v, ClusterRecord { scene_id: 0, centroid_frame: 9, members: vec![0] })
-            .unwrap();
+        h.insert(
+            &v,
+            ClusterRecord {
+                stream: StreamId(0),
+                scene_id: 0,
+                centroid_frame: 9,
+                members: vec![0],
+            },
+        )
+        .unwrap();
         assert!(h.check_invariants().is_err());
     }
 
@@ -224,6 +308,7 @@ mod tests {
             h.insert(
                 &v,
                 ClusterRecord {
+                    stream: StreamId(0),
                     scene_id: c as usize,
                     centroid_frame: c * 25,
                     members: (c * 25..(c + 1) * 25).collect(),
@@ -232,5 +317,15 @@ mod tests {
             .unwrap();
         }
         assert!((h.sparsity() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fetch_frame_reports_holes() {
+        let mut h = hierarchy();
+        h.archive_frame(0, &Frame::filled(16, [0.5; 3]));
+        assert!(h.fetch_frame(0).is_ok());
+        let err = h.fetch_frame(7).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("missing"), "diagnostic missing: {msg}");
     }
 }

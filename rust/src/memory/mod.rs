@@ -1,10 +1,13 @@
-//! Hierarchical memory (Fig. 8): raw data layer + semantic index layer.
+//! Hierarchical memory (Fig. 8): raw data layer + semantic index layer,
+//! sharded per camera stream by the multi-tenant [`fabric`].
 //! The vector database substrate lives in [`vectordb`].
 
+pub mod fabric;
 pub mod hierarchy;
 pub mod raw;
 pub mod vectordb;
 
+pub use fabric::{FrameId, MemoryFabric, StreamId, StreamScope};
 pub use hierarchy::{ClusterRecord, Hierarchy};
 pub use raw::{InMemoryRaw, RawStore, SynthBackedRaw};
 pub use vectordb::{build_index, FlatIndex, Hit, IvfIndex, Metric, VectorIndex};

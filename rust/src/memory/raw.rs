@@ -14,14 +14,18 @@ use std::sync::Arc;
 use crate::video::frame::Frame;
 use crate::video::synth::VideoSynth;
 
-/// Frame archive interface.
-pub trait RawStore: Send {
-    /// Archive a frame under its global id (ids arrive in order).
+/// Frame archive interface.  One store backs one stream's shard; ids are
+/// the stream-local dense frame indices.  `Send + Sync` because shards
+/// are read concurrently by many query workers.
+pub trait RawStore: Send + Sync {
+    /// Archive a frame under its stream-local id (ids arrive in order).
     fn put(&mut self, id: u64, frame: &Frame);
 
-    /// Fetch a frame by id (panics on unknown id — callers hold valid ids
-    /// from the index layer only).
-    fn get(&self, id: u64) -> Frame;
+    /// Fetch a frame by id; `None` when the id was never archived (a hole
+    /// in the archive — e.g. a query raced ahead of ingestion, or a
+    /// corrupted index cites a missing frame).  Callers propagate this as
+    /// an error rather than panicking the worker.
+    fn get(&self, id: u64) -> Option<Frame>;
 
     /// Number of archived frames.
     fn len(&self) -> u64;
@@ -62,10 +66,10 @@ impl RawStore for InMemoryRaw {
         self.frames.push(q);
     }
 
-    fn get(&self, id: u64) -> Frame {
-        let q = &self.frames[id as usize];
+    fn get(&self, id: u64) -> Option<Frame> {
+        let q = self.frames.get(id as usize)?;
         let data: Vec<f32> = q.iter().map(|&b| b as f32 / 255.0).collect();
-        Frame::from_data(self.size, data)
+        Some(Frame::from_data(self.size, data))
     }
 
     fn len(&self) -> u64 {
@@ -95,9 +99,11 @@ impl RawStore for SynthBackedRaw {
         self.archived = self.archived.max(id + 1);
     }
 
-    fn get(&self, id: u64) -> Frame {
-        assert!(id < self.archived, "frame {id} not yet archived");
-        self.synth.frame(id)
+    fn get(&self, id: u64) -> Option<Frame> {
+        if id >= self.archived {
+            return None; // not yet archived: a hole from the reader's view
+        }
+        Some(self.synth.frame(id))
     }
 
     fn len(&self) -> u64 {
@@ -120,12 +126,13 @@ mod tests {
         let mut store = InMemoryRaw::new(8);
         let f = Frame::filled(8, [0.25, 0.5, 0.75]);
         store.put(0, &f);
-        let g = store.get(0);
+        let g = store.get(0).expect("archived frame");
         for (a, b) in f.data().iter().zip(g.data()) {
             assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6);
         }
         assert_eq!(store.len(), 1);
         assert_eq!(store.resident_bytes(), 8 * 8 * 3);
+        assert!(store.get(1).is_none(), "hole must read as None, not panic");
     }
 
     #[test]
@@ -148,17 +155,16 @@ mod tests {
         for i in 0..10 {
             store.put(i, &synth.frame(i));
         }
-        assert_eq!(store.get(3), synth.frame(3));
+        assert_eq!(store.get(3), Some(synth.frame(3)));
         assert_eq!(store.resident_bytes(), 0);
     }
 
     #[test]
-    #[should_panic]
     fn synth_backed_guards_unarchived() {
         let mut rng = Pcg64::seeded(78);
         let codes = (0..4).map(|_| (0..192).map(|_| rng.f32()).collect()).collect();
         let synth = Arc::new(VideoSynth::new(SynthConfig::default(), codes, 8));
         let store = SynthBackedRaw::new(synth);
-        store.get(0);
+        assert!(store.get(0).is_none(), "unarchived frame is a hole");
     }
 }

@@ -57,8 +57,9 @@ pub struct Hit {
     pub score: f32,
 }
 
-/// Common vector-index interface.
-pub trait VectorIndex: Send {
+/// Common vector-index interface.  `Send + Sync` because index shards sit
+/// behind per-stream `RwLock`s read concurrently by many query workers.
+pub trait VectorIndex: Send + Sync {
     /// Insert a vector, returning its dense id.
     fn insert(&mut self, v: &[f32]) -> Result<usize>;
 

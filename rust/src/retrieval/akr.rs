@@ -15,10 +15,10 @@
 //! (Eq. 7) and apply the threshold test as Σ p_j ≥ θ.  Documented in
 //! DESIGN.md §substitutions.
 
-use crate::memory::Hierarchy;
+use crate::memory::FrameId;
 use crate::util::rng::Pcg64;
 
-use super::{sampler::softmax_probs, Selection};
+use super::{sampler::softmax_probs, RecordSource, Selection};
 
 /// AKR result with adaptivity diagnostics (Fig. 11).
 #[derive(Clone, Debug, Default)]
@@ -32,9 +32,12 @@ pub struct AkrOutcome {
     pub n_min: usize,
 }
 
-/// Run AKR over a scored memory.
-pub fn akr_retrieve(
-    memory: &Hierarchy,
+/// Run AKR over a scored memory — one shard or a merged cross-shard view
+/// (the `All`-scope scatter-gather path runs AKR over the merged Eq. 5
+/// distribution, so its adaptive budget reflects *total* cross-camera
+/// evidence concentration).
+pub fn akr_retrieve<M: RecordSource + ?Sized>(
+    memory: &M,
     scores: &[f32],
     tau: f32,
     theta: f64,
@@ -79,8 +82,12 @@ pub fn akr_retrieve(
     }
     // stratified per-cluster expansion, same as fixed sampling
     for (idx, k) in counts {
-        sel.frames
-            .extend(super::sampler::expand_cluster(&memory.record(idx).members, k, rng));
+        let rec = memory.record(idx);
+        sel.frames.extend(
+            super::sampler::expand_cluster(&rec.members, k, rng)
+                .into_iter()
+                .map(|m| FrameId::new(rec.stream, m)),
+        );
     }
 
     AkrOutcome { selection: sel.finalize(), draws, mass, n_min }
@@ -90,7 +97,7 @@ pub fn akr_retrieve(
 mod tests {
     use super::*;
     use crate::config::MemoryConfig;
-    use crate::memory::{ClusterRecord, Hierarchy, InMemoryRaw};
+    use crate::memory::{ClusterRecord, Hierarchy, InMemoryRaw, StreamId};
     use crate::video::frame::Frame;
 
     fn memory_with(n_clusters: usize, frames_per: u64) -> Hierarchy {
@@ -110,6 +117,7 @@ mod tests {
             h.insert(
                 &v,
                 ClusterRecord {
+                    stream: StreamId(0),
                     scene_id: c,
                     centroid_frame: start,
                     members: (start..start + frames_per).collect(),

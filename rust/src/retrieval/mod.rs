@@ -9,6 +9,12 @@
 //!   probability clears the threshold θ, bounded by [N_min, N_max].
 //! - [`topk`]: greedy Top-K retrieval (the Vanilla architecture of §III,
 //!   kept as the ablation baseline for Fig. 10).
+//!
+//! Every selector is generic over a [`RecordSource`] — either one memory
+//! shard (`Hierarchy`) or a cross-shard merged view (`[&ClusterRecord]`)
+//! assembled by the fabric's scatter-gather query path — and returns
+//! fabric-global [`FrameId`]s, so a single selection can cite evidence
+//! from several camera streams.
 
 pub mod akr;
 pub mod sampler;
@@ -17,6 +23,43 @@ pub mod topk;
 pub use akr::{akr_retrieve, AkrOutcome};
 pub use sampler::{sample_retrieve, softmax_probs, SampleOutcome};
 pub use topk::topk_retrieve;
+
+use crate::memory::{ClusterRecord, FrameId, Hierarchy, StreamId};
+
+/// What a retrieval routine needs from the memory it selects over: the
+/// scored records, in score-vector order.  Implemented by a single shard
+/// and by the merged cross-shard record view.
+pub trait RecordSource {
+    fn len(&self) -> usize;
+
+    fn record(&self, id: usize) -> &ClusterRecord;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl RecordSource for Hierarchy {
+    fn len(&self) -> usize {
+        Hierarchy::len(self)
+    }
+
+    fn record(&self, id: usize) -> &ClusterRecord {
+        Hierarchy::record(self, id)
+    }
+}
+
+/// Merged view: per-shard record slices concatenated in shard order, the
+/// same order their score vectors were concatenated in.
+impl<'a> RecordSource for [&'a ClusterRecord] {
+    fn len(&self) -> usize {
+        <[&'a ClusterRecord]>::len(self)
+    }
+
+    fn record(&self, id: usize) -> &ClusterRecord {
+        self[id]
+    }
+}
 
 #[cfg(test)]
 mod shortlist_tests {
@@ -75,9 +118,11 @@ pub fn shortlist_mask(scores: &[f32], m: usize) -> Vec<f32> {
 /// A retrieval decision: which raw frames to ship to the cloud.
 #[derive(Clone, Debug, Default)]
 pub struct Selection {
-    /// global frame ids, ascending, deduplicated
-    pub frames: Vec<u64>,
-    /// index-vector ids that were drawn (diagnostics / Fig. 9-10)
+    /// fabric-global frame addresses, ascending (stream-major),
+    /// deduplicated
+    pub frames: Vec<FrameId>,
+    /// index-vector ids that were drawn, in the merged scoring order
+    /// (diagnostics / Fig. 9-10)
     pub drawn_indices: Vec<usize>,
     /// the probability distribution used (diagnostics / Fig. 9)
     pub probs: Vec<f32>,
@@ -88,5 +133,20 @@ impl Selection {
         self.frames.sort_unstable();
         self.frames.dedup();
         self
+    }
+
+    /// Stream-local frame indices, in selection order.  The single-stream
+    /// view consumed by the eval harness, figures, and the answer model
+    /// (which judge against one stream's script).
+    pub fn frame_indices(&self) -> Vec<u64> {
+        self.frames.iter().map(|f| f.idx).collect()
+    }
+
+    /// Distinct streams this selection cites, ascending.
+    pub fn streams(&self) -> Vec<StreamId> {
+        let mut out: Vec<StreamId> = self.frames.iter().map(|f| f.stream).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
     }
 }

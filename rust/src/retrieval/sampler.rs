@@ -1,10 +1,9 @@
 //! Sampling-based diversity-preserving retrieval (Eq. 5).
 
-use crate::memory::Hierarchy;
 use crate::util::rng::Pcg64;
 use crate::util::softmax_temp;
 
-use super::Selection;
+use super::{RecordSource, Selection};
 
 /// Outcome of a fixed-budget sampling retrieval.
 pub type SampleOutcome = Selection;
@@ -37,9 +36,11 @@ pub(crate) fn expand_cluster(members: &[u64], k: usize, rng: &mut Pcg64) -> Vec<
 
 /// Fixed-budget sampling retrieval: draw `budget` times from the
 /// query-guided distribution (Eq. 5), then expand each drawn index
-/// vector into n(o_i) stratified member frames of its cluster.
-pub fn sample_retrieve(
-    memory: &Hierarchy,
+/// vector into n(o_i) stratified member frames of its cluster.  Selected
+/// frames carry their record's stream id, so merged cross-shard score
+/// vectors yield multi-camera selections transparently.
+pub fn sample_retrieve<M: RecordSource + ?Sized>(
+    memory: &M,
     scores: &[f32],
     tau: f32,
     budget: usize,
@@ -68,8 +69,12 @@ pub fn sample_retrieve(
         *counts.entry(idx).or_insert(0) += 1;
     }
     for (idx, k) in counts {
-        sel.frames
-            .extend(expand_cluster(&memory.record(idx).members, k, rng));
+        let rec = memory.record(idx);
+        sel.frames.extend(
+            expand_cluster(&rec.members, k, rng)
+                .into_iter()
+                .map(|m| crate::memory::FrameId::new(rec.stream, m)),
+        );
     }
     sel.finalize()
 }
@@ -78,7 +83,7 @@ pub fn sample_retrieve(
 mod tests {
     use super::*;
     use crate::config::MemoryConfig;
-    use crate::memory::{ClusterRecord, Hierarchy, InMemoryRaw};
+    use crate::memory::{ClusterRecord, FrameId, Hierarchy, InMemoryRaw, StreamId};
     use crate::video::frame::Frame;
 
     fn memory_with(n_clusters: usize, frames_per: u64) -> Hierarchy {
@@ -99,6 +104,7 @@ mod tests {
             h.insert(
                 &v,
                 ClusterRecord {
+                    stream: StreamId(0),
                     scene_id: c,
                     centroid_frame: start,
                     members: (start..start + frames_per).collect(),
@@ -125,10 +131,58 @@ mod tests {
         assert_eq!(sel.drawn_indices.len(), 32);
         assert!(sel.frames.len() <= 32);
         assert!(sel.frames.windows(2).all(|w| w[0] < w[1]));
-        // frames belong to drawn clusters
+        // frames belong to drawn clusters (stream 0: idx encodes cluster)
         for &f in &sel.frames {
-            let cluster = (f / 10) as usize;
+            assert_eq!(f.stream, StreamId(0));
+            let cluster = (f.idx / 10) as usize;
             assert!(sel.drawn_indices.contains(&cluster));
+        }
+    }
+
+    #[test]
+    fn merged_record_view_tags_streams() {
+        // two shards' records merged in shard order: selections must cite
+        // each frame under its owning stream
+        let a = memory_with(4, 5);
+        let mut b = Hierarchy::for_stream(
+            &MemoryConfig::default(),
+            4,
+            Box::new(InMemoryRaw::new(8)),
+            StreamId(1),
+        )
+        .unwrap();
+        for i in 0..20u64 {
+            b.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+        }
+        for c in 0..4usize {
+            let mut v = vec![0.0f32; 4];
+            v[c] = 1.0;
+            let start = c as u64 * 5;
+            b.insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(1),
+                    scene_id: c,
+                    centroid_frame: start,
+                    members: (start..start + 5).collect(),
+                },
+            )
+            .unwrap();
+        }
+
+        let merged: Vec<&ClusterRecord> =
+            a.records().iter().chain(b.records().iter()).collect();
+        let scores = vec![0.5f32; merged.len()];
+        let mut rng = Pcg64::seeded(11);
+        let sel = sample_retrieve(&merged[..], &scores, 5.0, 64, &mut rng);
+        let streams = sel.streams();
+        assert_eq!(
+            streams,
+            vec![StreamId(0), StreamId(1)],
+            "flat distribution over two shards must draw from both"
+        );
+        for &f in &sel.frames {
+            assert!(f.idx < 20, "local idx stays in-shard: {f:?}");
         }
     }
 
@@ -185,5 +239,11 @@ mod tests {
         let b = sample_retrieve(&h, &scores, 0.2, 16, &mut Pcg64::seeded(42));
         assert_eq!(a.frames, b.frames);
         assert_eq!(a.drawn_indices, b.drawn_indices);
+    }
+
+    #[test]
+    fn frame_ids_are_comparable_for_assertions() {
+        // FrameId sorts stream-major (fabric ordering contract)
+        assert!(FrameId::new(StreamId(0), 9) < FrameId::new(StreamId(1), 0));
     }
 }

@@ -2,19 +2,24 @@
 //! selector (§III-B), kept as the ablation baseline whose diversity
 //! failure Fig. 5(b,c)/Fig. 10 demonstrates.
 
-use crate::memory::Hierarchy;
+use crate::memory::FrameId;
 
-use super::Selection;
+use super::{RecordSource, Selection};
 
 /// Select the K highest-scoring indexed frames (their centroid frames).
-pub fn topk_retrieve(memory: &Hierarchy, scores: &[f32], k: usize) -> Selection {
+pub fn topk_retrieve<M: RecordSource + ?Sized>(
+    memory: &M,
+    scores: &[f32],
+    k: usize,
+) -> Selection {
     assert_eq!(scores.len(), memory.len());
     let mut order: Vec<usize> = (0..scores.len()).collect();
     order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
     let mut sel = Selection::default();
     for &idx in order.iter().take(k) {
+        let rec = memory.record(idx);
         sel.drawn_indices.push(idx);
-        sel.frames.push(memory.record(idx).centroid_frame);
+        sel.frames.push(FrameId::new(rec.stream, rec.centroid_frame));
     }
     sel.finalize()
 }
@@ -23,7 +28,7 @@ pub fn topk_retrieve(memory: &Hierarchy, scores: &[f32], k: usize) -> Selection 
 mod tests {
     use super::*;
     use crate::config::MemoryConfig;
-    use crate::memory::{ClusterRecord, Hierarchy, InMemoryRaw};
+    use crate::memory::{ClusterRecord, Hierarchy, InMemoryRaw, StreamId};
     use crate::video::frame::Frame;
 
     fn memory_with(n: usize) -> Hierarchy {
@@ -42,6 +47,7 @@ mod tests {
             h.insert(
                 &v,
                 ClusterRecord {
+                    stream: StreamId(0),
                     scene_id: c,
                     centroid_frame: c as u64,
                     members: vec![c as u64],
@@ -52,6 +58,10 @@ mod tests {
         h
     }
 
+    fn local(sel: &Selection) -> Vec<u64> {
+        sel.frame_indices()
+    }
+
     #[test]
     fn picks_highest_scores() {
         let h = memory_with(10);
@@ -60,7 +70,7 @@ mod tests {
         let mut drawn = sel.drawn_indices.clone();
         drawn.sort_unstable();
         assert_eq!(drawn, vec![1, 3, 9]);
-        assert_eq!(sel.frames, vec![1, 3, 9]);
+        assert_eq!(local(&sel), vec![1, 3, 9]);
     }
 
     #[test]

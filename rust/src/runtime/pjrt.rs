@@ -12,9 +12,9 @@
 //! backend offline; executing real artifacts additionally requires the
 //! actual `xla` bindings and a `make artifacts` run (see the Makefile).
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
@@ -23,10 +23,24 @@ use crate::backend::{EmbedBackend, ModelMeta};
 use crate::runtime::manifest::Manifest;
 
 /// Handle to the PJRT client plus the artifact set.
+///
+/// The compiled-executable cache is behind a `Mutex` (not `RefCell`):
+/// the backend contract is `Send + Sync`, because one `Runtime` is shared
+/// process-wide by every pipeline and query worker.  The lock is held for
+/// compilation and the execute dispatch; XLA executions themselves are
+/// reentrant on the CPU client.
+///
+/// Caveat for the real-bindings swap (Makefile step 2): the in-tree stub's
+/// types are trivially `Send + Sync`; actual `xla` bindings wrap raw C
+/// pointers and may not be.  If the real `PjRtClient`/executable types
+/// lack those impls, wrap them here behind the same `Mutex` (serializing
+/// execute) rather than re-introducing crate-level `unsafe impl Send` —
+/// the PJRT C API's CPU client is documented thread-compatible under
+/// external synchronization, which the lock provides.
 pub struct Runtime {
     client: PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
 }
 
 /// Build an f32 literal of the given shape from a host slice.
@@ -65,7 +79,7 @@ impl Runtime {
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(dir.as_ref())?;
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
     }
 
     /// Locate the artifact directory: `$VENUS_ARTIFACTS`, else
@@ -96,7 +110,7 @@ impl Runtime {
 
     /// Compile (or fetch from cache) an entry point.
     fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
+        if self.cache.lock().unwrap().contains_key(name) {
             return Ok(());
         }
         let entry = self.manifest.entry(name)?;
@@ -108,7 +122,7 @@ impl Runtime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling artifact '{name}'"))?;
-        self.cache.borrow_mut().insert(name.to_string(), exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe);
         Ok(())
     }
 
@@ -133,7 +147,7 @@ impl Runtime {
                 entry.inputs.len()
             );
         }
-        let cache = self.cache.borrow();
+        let cache = self.cache.lock().unwrap();
         let exe = cache.get(name).unwrap();
         let result = exe.execute::<Literal>(inputs)?;
         let tuple = result[0][0].to_literal_sync()?;

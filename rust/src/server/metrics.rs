@@ -10,6 +10,7 @@ use crate::util::stats::{fmt_duration, Samples};
 struct Inner {
     accepted: u64,
     rejected: u64,
+    shutdown: u64,
     completed: u64,
     failed: u64,
     queue_wait: Samples,
@@ -31,19 +32,28 @@ impl Default for Metrics {
     }
 }
 
-/// Immutable snapshot for reporting.
+/// Immutable snapshot for reporting.  Latencies carry the p50/p95/p99
+/// tail the fabric bench and Fig. 12-style reporting need — a mean hides
+/// exactly the scatter-gather tail the sharded fabric is built to bound.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
     pub accepted: u64,
+    /// admission control: queue full, query turned away
     pub rejected: u64,
+    /// submissions that raced service shutdown (workers gone) — distinct
+    /// from `rejected` so admission-control stats stay clean
+    pub shutdown: u64,
     pub completed: u64,
     pub failed: u64,
     pub uptime_s: f64,
     pub queue_wait_p50_s: f64,
+    pub queue_wait_p95_s: f64,
     pub queue_wait_p99_s: f64,
     pub edge_p50_s: f64,
+    pub edge_p95_s: f64,
     pub edge_p99_s: f64,
     pub total_p50_s: f64,
+    pub total_p95_s: f64,
     pub total_p99_s: f64,
     pub mean_frames: f64,
     pub throughput_qps: f64,
@@ -56,6 +66,10 @@ impl Metrics {
 
     pub fn on_rejected(&self) {
         self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_shutdown_race(&self) {
+        self.inner.lock().unwrap().shutdown += 1;
     }
 
     pub fn on_failed(&self) {
@@ -77,14 +91,18 @@ impl Metrics {
         Snapshot {
             accepted: m.accepted,
             rejected: m.rejected,
+            shutdown: m.shutdown,
             completed: m.completed,
             failed: m.failed,
             uptime_s: uptime,
             queue_wait_p50_s: m.queue_wait.p50(),
+            queue_wait_p95_s: m.queue_wait.p95(),
             queue_wait_p99_s: m.queue_wait.p99(),
             edge_p50_s: m.edge_latency.p50(),
+            edge_p95_s: m.edge_latency.p95(),
             edge_p99_s: m.edge_latency.p99(),
             total_p50_s: m.total_latency.p50(),
+            total_p95_s: m.total_latency.p95(),
             total_p99_s: m.total_latency.p99(),
             mean_frames: m.frames_shipped.mean(),
             throughput_qps: if uptime > 0.0 { m.completed as f64 / uptime } else { 0.0 },
@@ -92,7 +110,9 @@ impl Metrics {
     }
 
     /// Conservation invariant: accepted == completed + failed + in-flight.
-    /// (property-tested by the server tests with in-flight == 0 at join)
+    /// (property-tested by the server tests with in-flight == 0 at join;
+    /// shutdown-raced submissions were never accepted, so they don't
+    /// participate)
     pub fn conserved_after_drain(&self) -> bool {
         let m = self.inner.lock().unwrap();
         m.accepted == m.completed + m.failed
@@ -102,13 +122,16 @@ impl Metrics {
 impl Snapshot {
     pub fn render(&self) -> String {
         format!(
-            "queries: {} ok / {} failed / {} rejected | p50 {} p99 {} (edge p50 {}) | {:.1} q/s | {:.1} frames/query",
+            "queries: {} ok / {} failed / {} rejected / {} shutdown-raced | p50 {} p95 {} p99 {} (edge p50 {} p95 {}) | {:.1} q/s | {:.1} frames/query",
             self.completed,
             self.failed,
             self.rejected,
+            self.shutdown,
             fmt_duration(self.total_p50_s),
+            fmt_duration(self.total_p95_s),
             fmt_duration(self.total_p99_s),
             fmt_duration(self.edge_p50_s),
+            fmt_duration(self.edge_p95_s),
             self.throughput_qps,
             self.mean_frames,
         )
@@ -129,11 +152,18 @@ mod tests {
         m.on_accepted();
         m.on_failed();
         m.on_rejected();
+        m.on_shutdown_race();
         let s = m.snapshot();
         assert_eq!(s.completed, 10);
         assert_eq!(s.failed, 1);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.shutdown, 1);
         assert!(s.total_p50_s >= 0.5 && s.total_p50_s <= 0.7);
+        // tail ordering: p50 ≤ p95 ≤ p99 ≤ max sample
+        assert!(s.total_p50_s <= s.total_p95_s);
+        assert!(s.total_p95_s <= s.total_p99_s);
+        assert!(s.total_p99_s <= 1.0 + 1e-9);
+        assert!(s.total_p95_s >= 0.9, "p95 of 0.1..=1.0 grid is 1.0, got {}", s.total_p95_s);
         assert_eq!(s.mean_frames, 16.0);
         assert!(m.conserved_after_drain());
     }
@@ -143,5 +173,16 @@ mod tests {
         let m = Metrics::default();
         m.on_accepted();
         assert!(!m.conserved_after_drain());
+    }
+
+    #[test]
+    fn shutdown_races_do_not_pollute_rejections() {
+        let m = Metrics::default();
+        m.on_shutdown_race();
+        m.on_shutdown_race();
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.shutdown, 2);
+        assert!(m.conserved_after_drain());
     }
 }

@@ -1,20 +1,26 @@
 //! Online serving loop: multi-worker query service with admission
 //! control, per-query latency accounting, and a metrics registry.
 //!
-//! Each worker thread owns its own query engine with its own embed
-//! backend (AOT backends compile per-thread; PJRT handles are not
-//! shared).  Queries enter through a bounded queue — when it is full,
-//! `submit` rejects immediately (admission control) instead of building
-//! unbounded backlog.  The memory hierarchy is behind an `RwLock`, so
-//! worker threads score/select concurrently (queries are read-only).
+//! Worker threads each own a cheap query-engine front-end over the ONE
+//! process-shared embed backend (`backend::shared_default`) and the
+//! shared memory fabric — backends are never rebuilt per worker.  Queries
+//! enter through a bounded queue with an explicit stream scope; when the
+//! queue is full, `submit` rejects immediately (admission control)
+//! instead of building unbounded backlog, and a submission that races
+//! service shutdown reports [`SubmitError::Shutdown`] — a distinct
+//! condition, so admission-control stats stay clean.  Shards are behind
+//! per-stream `RwLock`s, so workers score/select concurrently (queries
+//! are read-only) and only contend with the ingestion writer of the
+//! stream(s) they actually touch.
 
 pub mod metrics;
 
 pub use metrics::{Metrics, Snapshot};
 
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -25,7 +31,7 @@ use crate::cloud::VlmClient;
 use crate::config::VenusConfig;
 use crate::coordinator::query::{QueryEngine, QueryOutcome};
 use crate::embed::EmbedEngine;
-use crate::memory::Hierarchy;
+use crate::memory::{MemoryFabric, StreamScope};
 use crate::net::{Link, Payload};
 
 /// A completed query with its latency accounting.
@@ -44,17 +50,35 @@ impl QueryResult {
     }
 }
 
+/// Why a submission did not enter the queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full: admission control turned the query away.  Retry later
+    /// (or shed load) — the service is healthy, just saturated.
+    Rejected,
+    /// The worker channel is disconnected: the service is shutting down.
+    /// Not an admission-control event; don't retry.
+    Shutdown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Rejected => write!(f, "queue full: query rejected"),
+            SubmitError::Shutdown => write!(f, "service shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 struct Job {
     id: u64,
     text: String,
+    scope: StreamScope,
     enqueued: Instant,
     reply: SyncSender<Result<QueryResult>>,
 }
-
-/// Wrapper moving a possibly-PJRT-owning engine into its worker thread
-/// (see `ingest::pipeline::SendEngine` for the safety argument).
-struct SendEngine(QueryEngine);
-unsafe impl Send for SendEngine {}
 
 /// The query service.
 pub struct Service {
@@ -65,59 +89,71 @@ pub struct Service {
 }
 
 impl Service {
-    /// Start `cfg.server.workers` workers over a shared memory hierarchy.
-    pub fn start(cfg: &VenusConfig, memory: Arc<RwLock<Hierarchy>>, seed: u64) -> Result<Self> {
+    /// Start `cfg.server.workers` workers over the shared memory fabric.
+    /// Every worker's engine shares the one process-wide backend.
+    pub fn start(cfg: &VenusConfig, fabric: Arc<MemoryFabric>, seed: u64) -> Result<Self> {
+        let be = backend::shared_default()?;
         let (tx, rx) = sync_channel::<Job>(cfg.server.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
         let mut workers = Vec::new();
         for w in 0..cfg.server.workers {
             let engine = QueryEngine::new(
-                EmbedEngine::new(backend::load_default()?, cfg.ingest.aux_models)?,
-                Arc::clone(&memory),
+                EmbedEngine::new(Arc::clone(&be), cfg.ingest.aux_models)?,
+                Arc::clone(&fabric),
                 cfg.retrieval.clone(),
-                seed ^ (w as u64) << 8,
+                seed ^ ((w as u64) << 8),
             );
-            let send_engine = SendEngine(engine);
             let rx2 = Arc::clone(&rx);
             let met = Arc::clone(&metrics);
             let link = Link::new(cfg.net.clone());
             let vlm = VlmClient::new(cfg.cloud.clone(), seed ^ 0xf00d ^ w as u64);
             workers.push(std::thread::spawn(move || {
-                worker_loop(send_engine, rx2, met, link, vlm)
+                worker_loop(engine, rx2, met, link, vlm)
             }));
         }
         Ok(Self { tx: Some(tx), workers, metrics, next_id: AtomicU64::new(0) })
     }
 
-    /// Submit a query; returns a receiver for the result, or `None` if the
-    /// queue is full (admission-controlled rejection).
-    pub fn submit(&self, text: &str) -> Option<Receiver<Result<QueryResult>>> {
+    /// Submit an all-streams query; returns a receiver for the result, or
+    /// the reason the submission didn't enter the queue.
+    pub fn submit(&self, text: &str) -> Result<Receiver<Result<QueryResult>>, SubmitError> {
+        self.submit_scoped(text, StreamScope::All)
+    }
+
+    /// Submit a query with an explicit stream scope.
+    pub fn submit_scoped(
+        &self,
+        text: &str,
+        scope: StreamScope,
+    ) -> Result<Receiver<Result<QueryResult>>, SubmitError> {
         let (reply_tx, reply_rx) = sync_channel(1);
         let job = Job {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             text: text.to_string(),
+            scope,
             enqueued: Instant::now(),
             reply: reply_tx,
         };
         match self.tx.as_ref().unwrap().try_send(job) {
             Ok(()) => {
                 self.metrics.on_accepted();
-                Some(reply_rx)
+                Ok(reply_rx)
             }
             Err(TrySendError::Full(_)) => {
                 self.metrics.on_rejected();
-                None
+                Err(SubmitError::Rejected)
             }
-            Err(TrySendError::Disconnected(_)) => None,
+            Err(TrySendError::Disconnected(_)) => {
+                self.metrics.on_shutdown_race();
+                Err(SubmitError::Shutdown)
+            }
         }
     }
 
     /// Blocking convenience: submit and wait.
     pub fn query(&self, text: &str) -> Result<QueryResult> {
-        let rx = self
-            .submit(text)
-            .ok_or_else(|| anyhow::anyhow!("queue full: query rejected"))?;
+        let rx = self.submit(text).map_err(anyhow::Error::new)?;
         rx.recv()?
     }
 
@@ -132,13 +168,12 @@ impl Service {
 }
 
 fn worker_loop(
-    engine: SendEngine,
+    mut engine: QueryEngine,
     rx: Arc<Mutex<Receiver<Job>>>,
     metrics: Arc<Metrics>,
     link: Link,
     vlm: VlmClient,
 ) {
-    let mut engine = engine.0;
     loop {
         let job = {
             let guard = rx.lock().unwrap();
@@ -148,7 +183,7 @@ fn worker_loop(
             }
         };
         let queue_wait_s = job.enqueued.elapsed().as_secs_f64();
-        match engine.retrieve(&job.text) {
+        match engine.retrieve_scoped(&job.text, job.scope) {
             Ok(outcome) => {
                 let n = outcome.selection.frames.len();
                 let upload_s = link.round_trip_s(Payload::Frames(n));

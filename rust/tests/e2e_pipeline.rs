@@ -2,7 +2,8 @@
 //! (real backend embedding through the `EmbedBackend` trait) →
 //! hierarchical memory → query stage → retrieval quality + serving loop,
 //! all against planted ground truth.  Runs on the default backend — the
-//! self-contained native MEM unless a pjrt build finds artifacts.
+//! self-contained native MEM unless a pjrt build finds artifacts — shared
+//! process-wide through `backend::shared_default`.
 
 use std::sync::{Arc, RwLock};
 
@@ -12,13 +13,13 @@ use venus::config::VenusConfig;
 use venus::coordinator::query::{QueryEngine, RetrievalMode};
 use venus::embed::EmbedEngine;
 use venus::ingest::Pipeline;
-use venus::memory::{Hierarchy, InMemoryRaw};
-use venus::server::Service;
+use venus::memory::{Hierarchy, InMemoryRaw, MemoryFabric};
+use venus::server::{Service, SubmitError};
 use venus::video::synth::{SynthConfig, VideoSynth};
 use venus::video::workload::{DatasetPreset, WorkloadGen};
 
 fn build_synth(duration_s: f64, seed: u64) -> VideoSynth {
-    let be = backend::load_default().expect("default backend");
+    let be = backend::shared_default().expect("default backend");
     let codes = be.concept_codes().unwrap();
     let patch = be.model().patch;
     VideoSynth::new(
@@ -32,7 +33,7 @@ fn ingest_all(
     synth: &VideoSynth,
     cfg: &VenusConfig,
 ) -> (Arc<RwLock<Hierarchy>>, venus::ingest::IngestStats) {
-    let be = backend::load_default().unwrap();
+    let be = backend::shared_default().unwrap();
     let d = be.model().d_embed;
     let memory = Arc::new(RwLock::new(
         Hierarchy::new(&cfg.memory, d, Box::new(InMemoryRaw::new(synth.config().frame_size)))
@@ -87,7 +88,7 @@ fn query_retrieves_evidence_frames() {
     let queries =
         WorkloadGen::new(3, DatasetPreset::VideoMmeShort).generate(synth.script(), 12);
 
-    let mut qe = QueryEngine::new(
+    let mut qe = QueryEngine::over_memory(
         EmbedEngine::default_backend(true).unwrap(),
         Arc::clone(&memory),
         cfg.retrieval.clone(),
@@ -99,7 +100,12 @@ fn query_retrieves_evidence_frames() {
         let out = qe
             .retrieve_with(&q.text, RetrievalMode::FixedSampling(32))
             .unwrap();
-        let st = SelectionStats::compute(q, synth.script(), &out.selection.frames, 4);
+        let st = SelectionStats::compute(
+            q,
+            synth.script(),
+            &out.selection.frame_indices(),
+            4,
+        );
         if st.coverage > 0.0 {
             covered += 1;
         }
@@ -121,7 +127,7 @@ fn akr_adapts_draws_to_query_type() {
 
     let queries =
         WorkloadGen::new(5, DatasetPreset::VideoMmeShort).generate(synth.script(), 30);
-    let mut qe = QueryEngine::new(
+    let mut qe = QueryEngine::over_memory(
         EmbedEngine::default_backend(true).unwrap(),
         Arc::clone(&memory),
         cfg.retrieval.clone(),
@@ -161,8 +167,9 @@ fn serving_loop_completes_batch_with_conservation() {
     cfg.server.workers = 2;
     cfg.server.queue_depth = 64;
     let (memory, _) = ingest_all(&synth, &cfg);
+    let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
 
-    let service = Service::start(&cfg, Arc::clone(&memory), 21).unwrap();
+    let service = Service::start(&cfg, Arc::clone(&fabric), 21).unwrap();
     let queries =
         WorkloadGen::new(6, DatasetPreset::VideoMmeShort).generate(synth.script(), 16);
     let mut receivers = Vec::new();
@@ -181,18 +188,22 @@ fn serving_loop_completes_batch_with_conservation() {
     let snap = service.shutdown();
     assert_eq!(snap.completed, queries.len() as u64);
     assert_eq!(snap.failed, 0);
+    assert_eq!(snap.shutdown, 0);
+    // tail percentiles populated and ordered
+    assert!(snap.total_p50_s <= snap.total_p95_s);
+    assert!(snap.total_p95_s <= snap.total_p99_s);
 }
 
 #[test]
 fn queries_succeed_while_ingestion_is_live() {
     // concurrency property: the query path reads the shared memory while
-    // the pipeline's embed thread is still inserting — no deadlock, no
+    // the pipeline's embed pool is still inserting — no deadlock, no
     // invariant violation, and late queries see a larger index.  With the
     // RwLock'd hierarchy the readers only exclude the writer for the
     // narrow score+select window.
     let synth = build_synth(40.0, 31);
     let cfg = VenusConfig::default();
-    let be = backend::load_default().unwrap();
+    let be = backend::shared_default().unwrap();
     let d = be.model().d_embed;
     let memory = Arc::new(RwLock::new(
         Hierarchy::new(
@@ -206,7 +217,7 @@ fn queries_succeed_while_ingestion_is_live() {
     let mut pipe =
         Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory)).unwrap();
 
-    let mut qe = QueryEngine::new(
+    let mut qe = QueryEngine::over_memory(
         EmbedEngine::default_backend(true).unwrap(),
         Arc::clone(&memory),
         cfg.retrieval.clone(),
@@ -217,7 +228,7 @@ fn queries_succeed_while_ingestion_is_live() {
     for i in 0..synth.total_frames() {
         pipe.push_frame(i, &synth.frame(i)).unwrap();
         if i % 100 == 99 {
-            // give the async embed thread a beat to drain, then query live
+            // give the async embed pool a beat to drain, then query live
             std::thread::sleep(std::time::Duration::from_millis(150));
             let out = qe
                 .retrieve_with("what is happening with concept01", RetrievalMode::Akr)
@@ -226,7 +237,7 @@ fn queries_succeed_while_ingestion_is_live() {
             sizes.push(len);
             // selection only references archived frames
             let ingested = memory.read().unwrap().frames_ingested();
-            assert!(out.selection.frames.iter().all(|&f| f < ingested));
+            assert!(out.selection.frames.iter().all(|f| f.idx < ingested));
         }
     }
     pipe.finish().unwrap();
@@ -269,15 +280,19 @@ fn admission_control_rejects_on_overflow() {
     cfg.server.workers = 1;
     cfg.server.queue_depth = 2;
     let (memory, _) = ingest_all(&synth, &cfg);
+    let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
 
-    let service = Service::start(&cfg, Arc::clone(&memory), 23).unwrap();
+    let service = Service::start(&cfg, Arc::clone(&fabric), 23).unwrap();
     // flood: far more than depth; some must be rejected, none lost
     let mut accepted = Vec::new();
     let mut rejected = 0;
     for i in 0..40 {
         match service.submit(&format!("query number {i} about concept01")) {
-            Some(rx) => accepted.push(rx),
-            None => rejected += 1,
+            Ok(rx) => accepted.push(rx),
+            Err(SubmitError::Rejected) => rejected += 1,
+            Err(SubmitError::Shutdown) => {
+                panic!("live service must never report shutdown")
+            }
         }
     }
     for rx in accepted {
@@ -285,5 +300,7 @@ fn admission_control_rejects_on_overflow() {
     }
     assert!(rejected > 0, "queue depth 2 must reject under flood");
     assert!(service.metrics.conserved_after_drain());
-    service.shutdown();
+    let snap = service.shutdown();
+    assert_eq!(snap.rejected, rejected);
+    assert_eq!(snap.shutdown, 0, "no shutdown races in a live flood");
 }

@@ -1,0 +1,152 @@
+//! Concurrent fabric property test: K camera streams ingest through one
+//! shared embed pool while queries run against `One` and `All` scopes.
+//!
+//! Properties under concurrency:
+//!   * per-stream isolation — a `One(s)`-scoped selection never cites
+//!     another stream's frames, and every shard's records reference only
+//!     that shard's stream;
+//!   * safety — every retrieval succeeds mid-ingest (no deadlock, no
+//!     panic, no missing-frame error), selections reference only
+//!     already-archived frames;
+//!   * post-drain consistency — `check_invariants` holds on every shard
+//!     and the `All` scope sees the union of the shards.
+
+use std::sync::Arc;
+
+use venus::backend::{self, EmbedBackend};
+use venus::config::VenusConfig;
+use venus::coordinator::query::{QueryEngine, RetrievalMode};
+use venus::embed::EmbedEngine;
+use venus::ingest::{EmbedPool, Pipeline};
+use venus::memory::{
+    MemoryFabric, RawStore, StreamId, StreamScope, SynthBackedRaw,
+};
+use venus::video::synth::{SynthConfig, VideoSynth};
+
+const STREAMS: usize = 3;
+const DURATION_S: f64 = 25.0;
+
+fn build_streams() -> Vec<Arc<VideoSynth>> {
+    let be = backend::shared_default().expect("default backend");
+    let codes = be.concept_codes().unwrap();
+    let patch = be.model().patch;
+    (0..STREAMS)
+        .map(|i| {
+            Arc::new(VideoSynth::new(
+                SynthConfig {
+                    duration_s: DURATION_S,
+                    seed: 0xfab + i as u64 * 101,
+                    ..Default::default()
+                },
+                codes.clone(),
+                patch,
+            ))
+        })
+        .collect()
+}
+
+#[test]
+fn streams_ingest_while_scoped_queries_run() {
+    let cfg = VenusConfig::default();
+    let be = backend::shared_default().unwrap();
+    let d = be.model().d_embed;
+
+    let synths = build_streams();
+    let raws: Vec<Box<dyn RawStore>> = synths
+        .iter()
+        .map(|s| Box::new(SynthBackedRaw::new(Arc::clone(s))) as Box<dyn RawStore>)
+        .collect();
+    let fabric = Arc::new(MemoryFabric::new(&cfg.memory, d, raws).unwrap());
+    let pool = EmbedPool::start(be, cfg.ingest.aux_models, 2, 64).unwrap();
+
+    // K ingestion threads, one per camera, all feeding the shared pool
+    let mut writers = Vec::new();
+    for (i, synth) in synths.iter().enumerate() {
+        let shard = Arc::clone(fabric.shard(StreamId(i as u16)).unwrap());
+        let mut pipe =
+            Pipeline::attach(&cfg.ingest, synth.config().fps, &pool, shard).unwrap();
+        let synth = Arc::clone(synth);
+        writers.push(std::thread::spawn(move || {
+            for f in 0..synth.total_frames() {
+                pipe.push_frame(f, &synth.frame(f)).unwrap();
+            }
+            pipe.finish().unwrap()
+        }));
+    }
+
+    // query thread interleaves One- and All-scoped retrievals mid-ingest
+    let mut qe = QueryEngine::new(
+        EmbedEngine::default_backend(true).unwrap(),
+        Arc::clone(&fabric),
+        cfg.retrieval.clone(),
+        77,
+    );
+    for round in 0..12u64 {
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let scope = if round % 2 == 0 {
+            StreamScope::One(StreamId((round % STREAMS as u64) as u16))
+        } else {
+            StreamScope::All
+        };
+        let mode = if round % 3 == 0 {
+            RetrievalMode::Akr
+        } else {
+            RetrievalMode::FixedSampling(8)
+        };
+        let out = qe
+            .retrieve_scoped_with("what happened with concept01", scope, mode)
+            .unwrap();
+        // isolation: One(s) cites only stream s; safety: only archived ids
+        for f in &out.selection.frames {
+            if let StreamScope::One(s) = scope {
+                assert_eq!(f.stream, s, "round {round}: scope leak {f:?}");
+            }
+            let archived = fabric
+                .shard(f.stream)
+                .unwrap()
+                .read()
+                .unwrap()
+                .frames_ingested();
+            assert!(
+                f.idx < archived,
+                "round {round}: selection cites unarchived {f:?} (< {archived})"
+            );
+        }
+    }
+
+    let mut total_frames = 0u64;
+    for w in writers {
+        let stats = w.join().expect("ingest thread");
+        assert!(stats.embedded > 0);
+        total_frames += stats.frames;
+    }
+    pool.shutdown().unwrap();
+
+    // post-drain: invariants on EVERY shard; records isolated per stream
+    fabric.check_invariants().unwrap();
+    assert_eq!(fabric.total_frames(), total_frames);
+    for (i, shard) in fabric.shards().iter().enumerate() {
+        let g = shard.read().unwrap();
+        assert!(!g.is_empty(), "shard {i} indexed nothing");
+        for r in g.records() {
+            assert_eq!(
+                r.stream,
+                StreamId(i as u16),
+                "record in shard {i} cites {:?}",
+                r.stream
+            );
+        }
+    }
+
+    // All scope sees the union of the shards
+    let merged = qe.score_query("what happened with concept01").unwrap();
+    assert_eq!(merged.len(), fabric.total_indexed());
+    let out = qe
+        .retrieve_scoped_with(
+            "what happened with concept01",
+            StreamScope::All,
+            RetrievalMode::FixedSampling(48),
+        )
+        .unwrap();
+    assert!(!out.selection.frames.is_empty());
+}

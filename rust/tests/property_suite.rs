@@ -5,7 +5,9 @@
 use venus::config::{IngestConfig, MemoryConfig, VenusConfig};
 use venus::features::{frame_features, scene_score, ChannelWeights};
 use venus::ingest::{PartitionClusterer, SceneSegmenter};
-use venus::memory::{ClusterRecord, FlatIndex, Hierarchy, InMemoryRaw, IvfIndex, Metric, VectorIndex};
+use venus::memory::{
+    ClusterRecord, FlatIndex, Hierarchy, InMemoryRaw, IvfIndex, Metric, StreamId, VectorIndex,
+};
 use venus::retrieval::{akr_retrieve, sample_retrieve, softmax_probs, topk_retrieve};
 use venus::util::json::Json;
 use venus::util::rng::Pcg64;
@@ -39,6 +41,7 @@ fn random_memory(seed: u64) -> (Hierarchy, usize) {
         h.insert(
             &v,
             ClusterRecord {
+                stream: StreamId(0),
                 scene_id: c,
                 centroid_frame: members[0],
                 members,
@@ -64,14 +67,15 @@ fn prop_sampling_invariants() {
         assert!((psum - 1.0).abs() < 1e-4, "seed {seed}: prob sum {psum}");
         assert!(sel.frames.windows(2).all(|w| w[0] < w[1]), "seed {seed}");
         for &f in &sel.frames {
-            assert!(f < mem.frames_ingested(), "seed {seed}");
+            assert_eq!(f.stream, StreamId(0), "seed {seed}");
+            assert!(f.idx < mem.frames_ingested(), "seed {seed}");
         }
         // every selected frame belongs to a drawn cluster
         for &f in &sel.frames {
             let owner = mem
                 .records()
                 .iter()
-                .position(|r| r.members.binary_search(&f).is_ok())
+                .position(|r| r.members.binary_search(&f.idx).is_ok())
                 .unwrap();
             assert!(sel.drawn_indices.contains(&owner), "seed {seed}");
         }

@@ -14,14 +14,16 @@
 //! normalization) rather than independently re-deriving the numerics; the
 //! independent cross-implementation comparison is the pjrt parity suite.
 
-use venus::backend::{load_default, EmbedBackend};
+use std::sync::Arc;
+
+use venus::backend::{shared_default, EmbedBackend};
 use venus::embed::Tokenizer;
 use venus::util::rng::Pcg64;
 use venus::util::{dot, l2_normalize, softmax_temp};
 use venus::video::frame::Frame;
 
-fn backend() -> Box<dyn EmbedBackend> {
-    load_default().expect("default backend must construct without artifacts")
+fn backend() -> Arc<dyn EmbedBackend> {
+    shared_default().expect("default backend must construct without artifacts")
 }
 
 fn noisy_frame(seed: u64, size: usize) -> Frame {
@@ -73,8 +75,12 @@ fn batched_image_tower_consistent_across_batch_sizes() {
 
 #[test]
 fn embedding_is_deterministic_across_backend_instances() {
-    let a = backend();
-    let b = backend();
+    // two independently-constructed, identically-configured native
+    // backends must agree bit-for-bit (seeded weight generation); the
+    // process-shared default must agree with them when it is native
+    use venus::backend::{NativeBackend, NativeConfig};
+    let a = NativeBackend::new(NativeConfig::default());
+    let b = NativeBackend::new(NativeConfig::default());
     let f = noisy_frame(103, a.model().img_size);
     let ea = a.embed_image(f.data(), 1).unwrap();
     let eb = b.embed_image(f.data(), 1).unwrap();
@@ -82,6 +88,11 @@ fn embedding_is_deterministic_across_backend_instances() {
         max_abs_diff(&ea[0], &eb[0]) < 1e-6,
         "two identically-configured backends must agree"
     );
+    let shared = backend();
+    if shared.name() == "native" && shared.model().img_size == a.model().img_size {
+        let es = shared.embed_image(f.data(), 1).unwrap();
+        assert!(max_abs_diff(&es[0], &ea[0]) < 1e-6, "shared default diverged");
+    }
 }
 
 #[test]
