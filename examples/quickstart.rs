@@ -1,79 +1,109 @@
-//! Quickstart: the smallest complete Venus program.
+//! Quickstart: the smallest complete Venus program, on Serving API v1.
 //!
 //! Builds a synthetic 90-second home-camera stream, ingests it through
 //! the real pipeline (scene segmentation → clustering → MEM embedding →
-//! hierarchical memory), then answers one natural-language query and
-//! prints the latency breakdown.
+//! hierarchical memory), starts the query service, and answers typed
+//! queries through a client session:
+//!   * a `QueryRequest` built with the builder API (priority, deadline,
+//!     per-query sampling budget),
+//!   * a structured `QueryResponse` with per-frame evidence
+//!     (stream, timestamp, Eq. 4–5 score) and the latency breakdown,
+//!   * the same question asked again — served from the semantic query
+//!     cache, skipping the whole edge hot path.
 //!
 //! Run: `cargo run --release --example quickstart`
 //! No artifacts or model files needed: the default native backend is
 //! self-contained (`make artifacts` + `--features pjrt` switches the
 //! embedding path to the AOT-compiled XLA runtime).
 
+use std::sync::Arc;
+use std::time::Duration;
+
+use venus::api::{Client, Priority, QueryRequest};
 use venus::config::VenusConfig;
-use venus::coordinator::Venus;
-use venus::eval::build_synth;
-use venus::memory::SynthBackedRaw;
+use venus::eval::prepare_case;
+use venus::server::Service;
 use venus::util::stats::fmt_duration;
-use venus::video::workload::{DatasetPreset, WorkloadGen};
+use venus::video::workload::DatasetPreset;
 
 fn main() -> venus::Result<()> {
-    // 1. a synthetic edge-camera stream (stands in for the camera feed)
-    let synth = build_synth(DatasetPreset::VideoMmeShort, 42)?;
-    println!(
-        "stream: {:.0} s at {} FPS = {} frames, {} scenes",
-        synth.config().duration_s,
-        synth.config().fps,
-        synth.total_frames(),
-        synth.script().scenes.len()
-    );
-
-    // 2. assemble Venus from the default config
+    // 1. a synthetic edge-camera stream, ingested through the real
+    //    pipeline into the hierarchical memory (plus generated queries
+    //    with ground truth)
     let cfg = VenusConfig::default();
-    let raw = Box::new(SynthBackedRaw::new(std::sync::Arc::clone(&synth)));
-    let mut venus = Venus::new(cfg, raw, 7)?;
-
-    // 3. ingestion stage: stream the video through the pipeline
-    let stats = venus.ingest_stream(&synth, u64::MAX)?;
+    let case = prepare_case(DatasetPreset::VideoMmeShort, &cfg, 4, 42)?;
     println!(
-        "ingested: {} frames -> {} partitions -> {} indexed vectors ({}x compression)",
-        stats.frames,
-        stats.partitions,
-        stats.embedded,
-        venus.memory().read().unwrap().sparsity().round()
+        "stream: {:.0} s = {} frames -> {} index vectors ({}x compression)",
+        case.synth.config().duration_s,
+        case.synth.total_frames(),
+        case.memory.read().unwrap().len(),
+        case.memory.read().unwrap().sparsity().round()
     );
 
-    // 4. querying stage: ask about a concept the generator planted
-    let q = WorkloadGen::new(1, DatasetPreset::VideoMmeShort)
-        .generate(synth.script(), 1)
-        .remove(0);
+    // 2. the serving loop + a typed client session over it (evidence
+    //    timestamps follow the stream's real frame rate)
+    let mut cfg = cfg;
+    cfg.api.fps = case.synth.config().fps;
+    let service = Service::start(&cfg, Arc::clone(&case.fabric), 7)?;
+    let client = Client::new(&service);
+    let mut session = client.session();
+
+    // 3. a typed query: interactive priority, a 10 s deadline, and a
+    //    per-query sampling budget of 24 draws
+    let q = &case.queries[0];
     println!("query: \"{}\"", q.text);
-    let (outcome, breakdown) = venus.query(&q.text)?;
+    let request = QueryRequest::new(&q.text)
+        .priority(Priority::Interactive)
+        .deadline(Duration::from_secs(10))
+        .budget(24);
+    let response = session.ask(request.clone())?;
     println!(
-        "selected {} keyframes (AKR used {} draws): {:?}",
-        outcome.selection.frames.len(),
-        outcome.draws,
-        outcome.selection.frames
+        "selected {} keyframes ({} draws, cache {}):",
+        response.evidence.len(),
+        response.draws,
+        response.cache
     );
+    for e in response.evidence.iter().take(5) {
+        println!(
+            "  {:?} at {:>6} (score {:.4})",
+            e.frame,
+            fmt_duration(e.time_s),
+            e.score
+        );
+    }
     println!(
-        "latency: edge {} (measured) + upload {} + VLM {} = {} total",
-        fmt_duration(breakdown.edge.total_s()),
-        fmt_duration(breakdown.upload_s),
-        fmt_duration(breakdown.vlm_s),
-        fmt_duration(breakdown.total_s())
+        "latency: queue {} + edge {} (measured) + upload {} + VLM {} = {} total",
+        fmt_duration(response.queue_wait_s),
+        fmt_duration(response.edge.total_s()),
+        fmt_duration(response.upload_s),
+        fmt_duration(response.vlm_s),
+        fmt_duration(response.total_s())
     );
 
-    // 5. did we actually retrieve the evidence?
-    let covered = outcome
-        .selection
-        .frames
-        .iter()
-        .filter(|f| q.covers(f.idx))
-        .count();
+    // 4. did we actually retrieve the evidence?
+    let covered = response.evidence.iter().filter(|e| q.covers(e.frame.idx)).count();
     println!(
         "ground truth: {covered}/{} selected frames fall in the evidence spans {:?}",
-        outcome.selection.frames.len(),
+        response.evidence.len(),
         q.evidence
     );
+
+    // 5. ask the same question again: the semantic query cache serves it
+    //    without re-running the edge hot path (no embed, no scoring)
+    let warm = session.ask(request)?;
+    assert!(warm.cache.is_hit(), "repeat query must hit the cache");
+    assert_eq!(warm.frame_indices(), response.frame_indices());
+    println!(
+        "repeat query: cache {} in {} edge (cold edge was {}); session history {} turns, {} cache hits",
+        warm.cache,
+        fmt_duration(warm.edge.total_s()),
+        fmt_duration(response.edge.total_s()),
+        session.history().len(),
+        session.cache_hits()
+    );
+    println!("{}", client.cache_stats().render());
+
+    let snapshot = service.shutdown();
+    println!("server metrics: {}", snapshot.render());
     Ok(())
 }

@@ -13,7 +13,9 @@
 //! Run: `cargo run --release --example smart_home`
 
 use std::sync::{Arc, RwLock};
+use std::time::Duration;
 
+use venus::api::{Priority, QueryRequest};
 use venus::backend::{self, EmbedBackend};
 use venus::cloud::{SelectionStats, VlmClient};
 use venus::config::VenusConfig;
@@ -81,6 +83,8 @@ fn main() -> venus::Result<()> {
     let queries = WorkloadGen::new(77, DatasetPreset::VideoMmeShort)
         .generate(synth.script(), N_QUERIES);
     let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
+    let mut cfg = cfg;
+    cfg.api.fps = synth.config().fps; // evidence timestamps at the camera rate
     let service = Service::start(&cfg, fabric, 99)?;
     let mut vlm = VlmClient::new(cfg.cloud.clone(), 1234);
 
@@ -90,27 +94,41 @@ fn main() -> venus::Result<()> {
     let mut correct = 0usize;
     let t0 = std::time::Instant::now();
     let mut receivers = Vec::new();
-    for q in &queries {
-        receivers.push((q, service.submit(&q.text).expect("queue accepts")));
+    for (i, q) in queries.iter().enumerate() {
+        // a family member waiting at the console vs background analytics:
+        // interactive turns carry a deadline and jump the batch lane
+        let request = if i % 2 == 0 {
+            QueryRequest::new(&q.text)
+                .priority(Priority::Interactive)
+                .deadline(Duration::from_secs(30))
+        } else {
+            QueryRequest::new(&q.text).priority(Priority::Batch)
+        };
+        receivers.push((q, service.submit_request(request).expect("queue accepts")));
     }
     for (q, rx) in receivers {
         let res = rx.recv()??;
-        edge.push(res.outcome.timings.total_s());
+        edge.push(res.edge.total_s());
         totals.push(res.total_s());
-        frames_used.push(res.outcome.selection.frames.len() as f64);
-        let picked = res.outcome.selection.frame_indices();
+        frames_used.push(res.evidence.len() as f64);
+        let picked = res.frame_indices();
         let (ok, _) = vlm.judge(q, synth.script(), &picked);
         correct += ok as usize;
         let st = SelectionStats::compute(q, synth.script(), &picked, 4);
         let _ = st;
     }
     let wall = t0.elapsed().as_secs_f64();
+    let cache_stats = service.cache.stats();
     let snap = service.shutdown();
 
     // ---- report ----
     println!();
     let mut t = Table::new(vec!["metric", "value"]);
-    t.row(vec!["queries completed".to_string(), format!("{}", snap.completed)]);
+    t.row(vec!["queries completed".to_string(), format!("{}", snap.completed())]);
+    t.row(vec![
+        "per lane (interactive/batch)".to_string(),
+        format!("{}/{}", snap.interactive.completed, snap.batch.completed),
+    ]);
     t.row(vec!["accuracy vs ground truth".to_string(),
                format!("{:.1}%", 100.0 * correct as f64 / queries.len() as f64)]);
     t.row(vec!["mean frames shipped/query".to_string(), format!("{:.1}", frames_used.mean())]);
@@ -123,7 +141,9 @@ fn main() -> venus::Result<()> {
                format!("{:.1} queries/s", queries.len() as f64 / wall)]);
     t.row(vec!["ingest real-time factor".to_string(), format!("{realtime_factor:.1}×")]);
     print!("{t}");
+    println!("{}", cache_stats.render());
     println!("server metrics: {}", snap.render());
-    assert!(snap.completed == queries.len() as u64 && snap.failed == 0);
+    assert!(snap.completed() == queries.len() as u64 && snap.failed == 0);
+    assert_eq!(snap.deadline_shed(), 0, "30 s deadlines never shed on a drained queue");
     Ok(())
 }

@@ -1,0 +1,558 @@
+//! Fabric-wide semantic query cache — the paper's query-indexing stage
+//! (§IV: "indexes incoming queries from memory") applied to serving.
+//!
+//! Online video-understanding traffic is highly repetitive (the same
+//! "what happened with X" phrasing recurs across users and turns), so
+//! the cache indexes *query text embeddings* next to their finished
+//! selections.  Two tiers:
+//!
+//!  * **exact** — a hash of the normalized query text.  Hits skip the
+//!    whole edge hot path: no text embed, no scatter-gather scoring, no
+//!    selection, no raw-frame fetch.
+//!  * **semantic** — cosine similarity of the query embedding against
+//!    cached embeddings.  A near-duplicate above the configured
+//!    threshold reuses the cached selection, skipping scoring/selection
+//!    (the embed was already paid to compute the similarity key).
+//!
+//! Freshness: every entry snapshots the ingest watermark of each shard
+//! the query touched.  A lookup revalidates those watermarks; once any
+//! touched shard advanced past the staleness bound the entry is dropped
+//! (new evidence may exist that the cached selection cannot cite).
+//! Entries are LRU-evicted beyond the configured capacity.
+
+use std::fmt;
+use std::sync::Mutex;
+
+use crate::coordinator::query::RetrievalMode;
+use crate::memory::{StreamId, StreamScope};
+use crate::retrieval::Selection;
+
+/// How the cache participated in answering one query.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CacheStatus {
+    /// No cache configured for this call.
+    #[default]
+    Bypass,
+    /// Looked up, not found (or stale): the full edge path ran and the
+    /// result was inserted.
+    Miss,
+    /// Normalized-text hit: the entire edge path (embed included) was
+    /// skipped.
+    HitExact,
+    /// Embedding-similarity hit: scoring + selection were skipped.
+    HitSemantic,
+}
+
+impl CacheStatus {
+    pub fn is_hit(self) -> bool {
+        matches!(self, CacheStatus::HitExact | CacheStatus::HitSemantic)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheStatus::Bypass => "bypass",
+            CacheStatus::Miss => "miss",
+            CacheStatus::HitExact => "hit_exact",
+            CacheStatus::HitSemantic => "hit_semantic",
+        }
+    }
+}
+
+impl fmt::Display for CacheStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The cached payload: everything needed to rebuild a response without
+/// touching the memory fabric.
+#[derive(Clone, Debug)]
+pub struct CachedQuery {
+    pub selection: Selection,
+    /// Eq. 4–5 score per selected frame, parallel to `selection.frames`.
+    pub frame_scores: Vec<f32>,
+    pub draws: usize,
+}
+
+struct Entry {
+    text_key: u64,
+    qvec: Vec<f32>,
+    scope: StreamScope,
+    mode: RetrievalMode,
+    /// Effective AKR draw cap the selection ran under.  Part of the key:
+    /// FixedSampling/TopK budgets live inside `mode`, but an AKR budget
+    /// override only caps `n_max` — without this, an AKR query capped at
+    /// 2 draws and an uncapped one would alias the same entry.
+    n_max: usize,
+    /// (stream, ingest watermark) per touched shard, at selection time.
+    watermarks: Vec<(StreamId, u64)>,
+    cached: CachedQuery,
+    last_used: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct StatsInner {
+    hits_exact: u64,
+    hits_semantic: u64,
+    misses: u64,
+    invalidated: u64,
+    evicted: u64,
+}
+
+/// Immutable cache-stats snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub hits_exact: u64,
+    pub hits_semantic: u64,
+    /// queries that fell through BOTH tiers (counted once per query, by
+    /// the semantic tier — the last one to run)
+    pub misses: u64,
+    /// entries dropped because a touched shard's watermark advanced past
+    /// the staleness bound
+    pub invalidated: u64,
+    /// entries dropped by LRU capacity pressure
+    pub evicted: u64,
+}
+
+impl CacheStats {
+    pub fn hits(&self) -> u64 {
+        self.hits_exact + self.hits_semantic
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "query cache: {} entries | {} exact + {} semantic hits / {} misses | {} invalidated, {} evicted",
+            self.entries,
+            self.hits_exact,
+            self.hits_semantic,
+            self.misses,
+            self.invalidated,
+            self.evicted,
+        )
+    }
+}
+
+struct Inner {
+    entries: Vec<Entry>,
+    tick: u64,
+    stats: StatsInner,
+}
+
+/// Thread-safe semantic query cache, shared by every serving worker
+/// (and usable standalone next to a bare [`crate::coordinator::query::QueryEngine`]).
+pub struct QueryCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    threshold: f32,
+    max_stale: u64,
+}
+
+impl QueryCache {
+    /// `capacity` in entries (0 disables the cache entirely), `threshold`
+    /// the semantic-tier cosine bound, `max_stale` the per-shard ingest
+    /// watermark advance beyond which an entry is invalid.
+    pub fn new(capacity: usize, threshold: f32, max_stale: u64) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                entries: Vec::new(),
+                tick: 0,
+                stats: StatsInner::default(),
+            }),
+            capacity,
+            threshold,
+            max_stale,
+        }
+    }
+
+    /// Build from the `[api]` config section.
+    pub fn from_config(cfg: &crate::config::ApiConfig) -> Self {
+        Self::new(cfg.cache_entries, cfg.cache_threshold as f32, cfg.cache_max_stale)
+    }
+
+    /// A zero-capacity cache never stores or returns anything.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// FNV-1a over the normalized query text (lowercased, whitespace
+    /// collapsed) — the exact-tier key.
+    pub fn text_key(text: &str) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut first = true;
+        for word in text.split_whitespace() {
+            if !first {
+                h = fnv_step(h, b' ');
+            }
+            first = false;
+            for b in word.as_bytes() {
+                h = fnv_step(h, b.to_ascii_lowercase());
+            }
+        }
+        h
+    }
+
+    /// Exact-tier lookup.  `current` must be the fabric's watermarks for
+    /// `scope` (same shard order as at insert time); `n_max` the
+    /// effective AKR draw cap of this request.  A miss here is not yet a
+    /// cache miss — the semantic tier still runs, and counts it.
+    pub fn lookup_exact(
+        &self,
+        text_key: u64,
+        scope: StreamScope,
+        mode: RetrievalMode,
+        n_max: usize,
+        current: &[(StreamId, u64)],
+    ) -> Option<CachedQuery> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let pos = inner.entries.iter().position(|e| {
+            e.text_key == text_key && e.scope == scope && e.mode == mode && e.n_max == n_max
+        });
+        match pos {
+            Some(i) if fresh(&inner.entries[i].watermarks, current, self.max_stale) => {
+                inner.entries[i].last_used = tick;
+                inner.stats.hits_exact += 1;
+                Some(inner.entries[i].cached.clone())
+            }
+            Some(i) => {
+                inner.entries.swap_remove(i);
+                inner.stats.invalidated += 1;
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Semantic-tier lookup: best cosine over cached entries with the
+    /// same scope + mode + AKR cap.  Stale candidates above the threshold
+    /// are dropped; a fresh candidate at or above the threshold is a hit.
+    /// This tier runs last, so it is the one that counts a query's miss.
+    pub fn lookup_semantic(
+        &self,
+        qvec: &[f32],
+        scope: StreamScope,
+        mode: RetrievalMode,
+        n_max: usize,
+        current: &[(StreamId, u64)],
+    ) -> Option<CachedQuery> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        // one pass under the shared mutex: each candidate's cosine is
+        // computed exactly once; stale candidates at/above the threshold
+        // are collected for removal, fresh ones compete for best
+        let mut best: Option<(usize, f32)> = None;
+        let mut stale: Vec<usize> = Vec::new();
+        for (i, e) in inner.entries.iter().enumerate() {
+            if e.scope != scope || e.mode != mode || e.n_max != n_max || e.qvec.len() != qvec.len()
+            {
+                continue;
+            }
+            let sim = crate::util::dot(&e.qvec, qvec);
+            if sim < self.threshold {
+                continue;
+            }
+            if !fresh(&e.watermarks, current, self.max_stale) {
+                stale.push(i);
+            } else {
+                let better = match best {
+                    Some((_, s)) => sim > s,
+                    None => true,
+                };
+                if better {
+                    best = Some((i, sim));
+                }
+            }
+        }
+        // ascending `stale` removed back-to-front keeps lower indices
+        // valid; `best` is fresh (disjoint from `stale`) and only shifts
+        // down past removals above it
+        for &r in stale.iter().rev() {
+            inner.entries.remove(r);
+            if let Some((ref mut b, _)) = best {
+                if *b > r {
+                    *b -= 1;
+                }
+            }
+        }
+        inner.stats.invalidated += stale.len() as u64;
+        match best {
+            Some((i, _)) => {
+                inner.entries[i].last_used = tick;
+                inner.stats.hits_semantic += 1;
+                Some(inner.entries[i].cached.clone())
+            }
+            None => {
+                inner.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry.  `qvec` must be the unit-norm query
+    /// embedding; `watermarks` the touched shards' watermarks captured
+    /// under the same read guards the selection ran under.
+    pub fn insert(
+        &self,
+        text_key: u64,
+        qvec: Vec<f32>,
+        scope: StreamScope,
+        mode: RetrievalMode,
+        n_max: usize,
+        watermarks: Vec<(StreamId, u64)>,
+        cached: CachedQuery,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.iter_mut().find(|e| {
+            e.text_key == text_key && e.scope == scope && e.mode == mode && e.n_max == n_max
+        }) {
+            e.qvec = qvec;
+            e.watermarks = watermarks;
+            e.cached = cached;
+            e.last_used = tick;
+            return;
+        }
+        inner.entries.push(Entry {
+            text_key,
+            qvec,
+            scope,
+            mode,
+            n_max,
+            watermarks,
+            cached,
+            last_used: tick,
+        });
+        while inner.entries.len() > self.capacity {
+            let lru = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .unwrap();
+            inner.entries.swap_remove(lru);
+            inner.stats.evicted += 1;
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            entries: inner.entries.len(),
+            hits_exact: inner.stats.hits_exact,
+            hits_semantic: inner.stats.hits_semantic,
+            misses: inner.stats.misses,
+            invalidated: inner.stats.invalidated,
+            evicted: inner.stats.evicted,
+        }
+    }
+
+    /// Drop every entry (stats are kept).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().entries.clear();
+    }
+}
+
+fn fnv_step(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+/// Entry watermarks vs current: fresh iff the same shard set, every
+/// watermark monotone, and no shard advanced past `max_stale` inserts.
+fn fresh(entry: &[(StreamId, u64)], current: &[(StreamId, u64)], max_stale: u64) -> bool {
+    entry.len() == current.len()
+        && entry.iter().zip(current).all(|(a, b)| {
+            a.0 == b.0 && b.1.checked_sub(a.1).is_some_and(|adv| adv <= max_stale)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::FrameId;
+
+    fn sel(stream: u16, idx: u64) -> CachedQuery {
+        CachedQuery {
+            selection: Selection {
+                frames: vec![FrameId::new(StreamId(stream), idx)],
+                ..Default::default()
+            },
+            frame_scores: vec![0.5],
+            draws: 4,
+        }
+    }
+
+    fn wm(w: u64) -> Vec<(StreamId, u64)> {
+        vec![(StreamId(0), w)]
+    }
+
+    const MODE: RetrievalMode = RetrievalMode::FixedSampling(8);
+    const N: usize = 32;
+
+    #[test]
+    fn text_key_normalizes_case_and_whitespace() {
+        let a = QueryCache::text_key("What   Happened with concept01");
+        let b = QueryCache::text_key("what happened  with CONCEPT01 ");
+        let c = QueryCache::text_key("what happened with concept02");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn exact_tier_hits_and_respects_scope_and_mode() {
+        let c = QueryCache::new(8, 0.9, 10);
+        let key = QueryCache::text_key("q one");
+        c.insert(key, vec![1.0, 0.0], StreamScope::All, MODE, N, wm(0), sel(0, 1));
+        assert!(c.lookup_exact(key, StreamScope::All, MODE, N, &wm(0)).is_some());
+        // different scope or mode: no entry matches
+        assert!(c
+            .lookup_exact(key, StreamScope::One(StreamId(0)), MODE, N, &wm(0))
+            .is_none());
+        assert!(c
+            .lookup_exact(key, StreamScope::All, RetrievalMode::Akr, N, &wm(0))
+            .is_none());
+        let s = c.stats();
+        assert_eq!(s.hits_exact, 1);
+        // the exact tier never counts misses — the semantic tier (the
+        // last to run per query) owns that stat
+        assert_eq!(s.misses, 0);
+    }
+
+    #[test]
+    fn akr_budget_cap_is_part_of_the_key() {
+        // an AKR selection capped at 2 draws must never be replayed for
+        // an uncapped AKR request with the same text (and vice versa)
+        let c = QueryCache::new(8, 0.9, 10);
+        let key = QueryCache::text_key("q");
+        c.insert(key, vec![1.0, 0.0], StreamScope::All, RetrievalMode::Akr, 2, wm(0), sel(0, 1));
+        assert!(c
+            .lookup_exact(key, StreamScope::All, RetrievalMode::Akr, 32, &wm(0))
+            .is_none());
+        assert!(c
+            .lookup_semantic(&[1.0, 0.0], StreamScope::All, RetrievalMode::Akr, 32, &wm(0))
+            .is_none());
+        assert!(c
+            .lookup_exact(key, StreamScope::All, RetrievalMode::Akr, 2, &wm(0))
+            .is_some());
+        // both caps coexist as distinct entries
+        c.insert(key, vec![1.0, 0.0], StreamScope::All, RetrievalMode::Akr, 32, wm(0), sel(0, 9));
+        assert_eq!(c.stats().entries, 2);
+    }
+
+    #[test]
+    fn semantic_tier_hits_near_duplicates_only() {
+        let c = QueryCache::new(8, 0.95, 10);
+        c.insert(
+            QueryCache::text_key("q"),
+            vec![1.0, 0.0],
+            StreamScope::All,
+            MODE,
+            N,
+            wm(0),
+            sel(0, 7),
+        );
+        // cos = 0.999 -> hit
+        let near = vec![0.999, 0.0447];
+        let hit = c.lookup_semantic(&near, StreamScope::All, MODE, N, &wm(0)).unwrap();
+        assert_eq!(hit.selection.frames, vec![FrameId::new(StreamId(0), 7)]);
+        // orthogonal -> miss (counted here, once per query)
+        assert!(c
+            .lookup_semantic(&[0.0, 1.0], StreamScope::All, MODE, N, &wm(0))
+            .is_none());
+        let s = c.stats();
+        assert_eq!(s.hits_semantic, 1);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn watermark_advance_past_bound_invalidates() {
+        let c = QueryCache::new(8, 0.9, 2);
+        let key = QueryCache::text_key("q");
+        c.insert(key, vec![1.0, 0.0], StreamScope::All, MODE, N, wm(5), sel(0, 1));
+        // advanced by exactly the bound: still fresh
+        assert!(c.lookup_exact(key, StreamScope::All, MODE, N, &wm(7)).is_some());
+        // past the bound: entry dropped
+        assert!(c.lookup_exact(key, StreamScope::All, MODE, N, &wm(8)).is_none());
+        assert_eq!(c.stats().invalidated, 1);
+        assert_eq!(c.stats().entries, 0);
+        // a watermark that went backwards (shard replaced) is also stale
+        c.insert(key, vec![1.0, 0.0], StreamScope::All, MODE, N, wm(5), sel(0, 1));
+        assert!(c.lookup_exact(key, StreamScope::All, MODE, N, &wm(4)).is_none());
+        assert_eq!(c.stats().invalidated, 2);
+    }
+
+    #[test]
+    fn semantic_lookup_drops_stale_candidates() {
+        let c = QueryCache::new(8, 0.9, 1);
+        c.insert(
+            QueryCache::text_key("q"),
+            vec![1.0, 0.0],
+            StreamScope::All,
+            MODE,
+            N,
+            wm(0),
+            sel(0, 1),
+        );
+        assert!(c
+            .lookup_semantic(&[1.0, 0.0], StreamScope::All, MODE, N, &wm(5))
+            .is_none());
+        let s = c.stats();
+        assert_eq!(s.invalidated, 1);
+        assert_eq!(s.entries, 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c = QueryCache::new(2, 0.9, 100);
+        let (ka, kb, kc) =
+            (QueryCache::text_key("a"), QueryCache::text_key("b"), QueryCache::text_key("c"));
+        c.insert(ka, vec![1.0, 0.0], StreamScope::All, MODE, N, wm(0), sel(0, 1));
+        c.insert(kb, vec![0.0, 1.0], StreamScope::All, MODE, N, wm(0), sel(0, 2));
+        // touch a so b becomes LRU
+        assert!(c.lookup_exact(ka, StreamScope::All, MODE, N, &wm(0)).is_some());
+        c.insert(kc, vec![0.6, 0.8], StreamScope::All, MODE, N, wm(0), sel(0, 3));
+        assert_eq!(c.stats().entries, 2);
+        assert_eq!(c.stats().evicted, 1);
+        assert!(c.lookup_exact(ka, StreamScope::All, MODE, N, &wm(0)).is_some());
+        assert!(c.lookup_exact(kb, StreamScope::All, MODE, N, &wm(0)).is_none());
+        assert!(c.lookup_exact(kc, StreamScope::All, MODE, N, &wm(0)).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_instead_of_duplicating() {
+        let c = QueryCache::new(8, 0.9, 1);
+        let key = QueryCache::text_key("q");
+        c.insert(key, vec![1.0, 0.0], StreamScope::All, MODE, N, wm(0), sel(0, 1));
+        c.insert(key, vec![1.0, 0.0], StreamScope::All, MODE, N, wm(10), sel(0, 9));
+        assert_eq!(c.stats().entries, 1);
+        let hit = c.lookup_exact(key, StreamScope::All, MODE, N, &wm(10)).unwrap();
+        assert_eq!(hit.selection.frames, vec![FrameId::new(StreamId(0), 9)]);
+    }
+
+    #[test]
+    fn zero_capacity_disables_everything() {
+        let c = QueryCache::new(0, 0.9, 10);
+        assert!(!c.enabled());
+        let key = QueryCache::text_key("q");
+        c.insert(key, vec![1.0], StreamScope::All, MODE, N, wm(0), sel(0, 1));
+        assert!(c.lookup_exact(key, StreamScope::All, MODE, N, &wm(0)).is_none());
+        assert!(c
+            .lookup_semantic(&[1.0], StreamScope::All, MODE, N, &wm(0))
+            .is_none());
+        assert_eq!(c.stats().entries, 0);
+        assert_eq!(c.stats().misses, 0, "disabled cache records no traffic");
+    }
+}

@@ -1,0 +1,32 @@
+//! Serving API v1 — the typed query protocol over the Venus serving
+//! loop.
+//!
+//! The paper's querying stage "indexes incoming queries from memory"
+//! (§IV); this layer is that idea turned into a serving surface:
+//!
+//!  * [`types`] — the wire protocol: a [`QueryRequest`] builder (text,
+//!    stream scope, retrieval mode, per-query sampling budget, priority
+//!    lane, deadline), a structured [`QueryResponse`] (per-frame
+//!    [`Evidence`] with stream, timestamp, and Eq. 4–5 score, plus the
+//!    full latency breakdown), and the [`ApiError`] taxonomy.  All
+//!    JSON round-trippable through the in-tree writer/parser.
+//!  * [`cache`] — the fabric-wide semantic query cache: query-text
+//!    embeddings are indexed next to finished selections; exact text
+//!    repeats skip the whole edge hot path, cosine-near duplicates skip
+//!    scoring + selection, and per-shard ingest watermarks bound how
+//!    stale a reused selection may be.
+//!  * [`session`] — [`Client`]/[`Session`] handles with per-session
+//!    query history over one shared service.
+//!
+//! Entry points: [`crate::server::Service::submit_request`] /
+//! [`crate::server::Service::call`] (one-shot), or a [`Session`] for
+//! multi-turn use.  See `examples/quickstart.rs` and DESIGN.md
+//! §Serving-API.
+
+pub mod cache;
+pub mod session;
+pub mod types;
+
+pub use cache::{CacheStats, CacheStatus, QueryCache};
+pub use session::{Client, Session, SessionTurn};
+pub use types::{ApiError, Evidence, Priority, QueryRequest, QueryResponse};

@@ -1,0 +1,92 @@
+//! Client/session handles over the query [`Service`]: multi-turn query
+//! history per session, one shared semantic query cache per service.
+//!
+//! A [`Client`] is a cheap facade over a running service; each
+//! [`Session`] models one user's conversation — every turn (request +
+//! typed response or error) is recorded, so callers can inspect what a
+//! user asked, how fast it was answered, and how often the fabric-wide
+//! query cache absorbed their repeats.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::server::Service;
+
+use super::cache::CacheStats;
+use super::types::{ApiError, QueryRequest, QueryResponse};
+
+/// One recorded session turn.
+#[derive(Clone, Debug)]
+pub struct SessionTurn {
+    pub request: QueryRequest,
+    pub response: Result<QueryResponse, ApiError>,
+}
+
+/// Typed-API client over a running [`Service`].
+pub struct Client<'a> {
+    service: &'a Service,
+    next_session: AtomicU64,
+}
+
+impl<'a> Client<'a> {
+    pub fn new(service: &'a Service) -> Self {
+        Self { service, next_session: AtomicU64::new(0) }
+    }
+
+    /// Open a new session (fresh history, shared service + cache).
+    pub fn session(&self) -> Session<'a> {
+        Session {
+            id: self.next_session.fetch_add(1, Ordering::Relaxed),
+            service: self.service,
+            history: Vec::new(),
+        }
+    }
+
+    /// One-shot query without session history.
+    pub fn call(&self, request: QueryRequest) -> Result<QueryResponse, ApiError> {
+        self.service.call(request)
+    }
+
+    /// The service-wide semantic query-cache statistics.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.service.cache.stats()
+    }
+}
+
+/// A multi-turn query session.
+pub struct Session<'a> {
+    id: u64,
+    service: &'a Service,
+    history: Vec<SessionTurn>,
+}
+
+impl Session<'_> {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Submit a request and block for its typed response; the turn is
+    /// recorded in the session history either way.
+    pub fn ask(&mut self, request: QueryRequest) -> Result<QueryResponse, ApiError> {
+        let response = self.service.call(request.clone());
+        self.history.push(SessionTurn { request, response: response.clone() });
+        response
+    }
+
+    /// Every turn this session has run, in order.
+    pub fn history(&self) -> &[SessionTurn] {
+        &self.history
+    }
+
+    /// Completed turns that were served from the semantic query cache.
+    pub fn cache_hits(&self) -> usize {
+        self.history
+            .iter()
+            .filter(|t| t.response.as_ref().is_ok_and(|r| r.cache.is_hit()))
+            .count()
+    }
+
+    /// Turns that ended in a typed error (shed, rejected, ...).
+    pub fn errors(&self) -> usize {
+        self.history.iter().filter(|t| t.response.is_err()).count()
+    }
+}

@@ -1,0 +1,547 @@
+//! Protocol types for Serving API v1: the typed query request (builder),
+//! the structured response with per-frame evidence, and the error
+//! taxonomy that subsumes the old stringly `SubmitError`.
+//!
+//! Wire format: every type serializes to/from JSON through the in-tree
+//! [`crate::util::json`] writer/parser (serde is unavailable offline),
+//! so requests and responses survive a real transport unchanged.  The
+//! encoding is stable and round-trip tested.
+
+use std::fmt;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::query::{EdgeTimings, RetrievalMode};
+use crate::memory::{FrameId, StreamId, StreamScope};
+use crate::util::json::Json;
+
+use super::cache::CacheStatus;
+
+/// Upper bound on a wire deadline (30 days in ms) — far beyond any real
+/// query budget, but finite so decoding can never panic.
+const MAX_DEADLINE_MS: f64 = 30.0 * 86_400.0 * 1e3;
+
+/// Decode a stream id, rejecting values that don't fit a `StreamId`
+/// instead of silently truncating (65537 must not alias stream 1).
+fn stream_id_from(v: &Json) -> Result<StreamId> {
+    let id = v.as_usize()?;
+    if id > u16::MAX as usize {
+        bail!("stream id {id} exceeds the fabric's StreamId range (<= {})", u16::MAX);
+    }
+    Ok(StreamId(id as u16))
+}
+
+/// Scheduling class of a query: which admission lane it enters and how
+/// the worker pool orders it relative to other pending queries.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// A human is waiting: dequeued before any batch query.
+    #[default]
+    Interactive,
+    /// Offline/analytics traffic: served only when the interactive lane
+    /// is empty.
+    Batch,
+}
+
+impl Priority {
+    /// Lane-array index (interactive first — it is popped first).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A typed query request (builder-style).
+///
+/// ```
+/// use std::time::Duration;
+/// use venus::api::{Priority, QueryRequest};
+/// use venus::memory::{StreamId, StreamScope};
+///
+/// let req = QueryRequest::new("what happened with concept03")
+///     .scope(StreamScope::One(StreamId(1)))
+///     .budget(16)
+///     .priority(Priority::Interactive)
+///     .deadline(Duration::from_secs(5));
+/// assert_eq!(req.budget, Some(16));
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryRequest {
+    /// Natural-language query text.
+    pub text: String,
+    /// Which camera streams the query sees.
+    pub scope: StreamScope,
+    /// Retrieval-mode override (None = the engine's configured default).
+    pub mode: Option<RetrievalMode>,
+    /// Sampling-budget override: replaces the fixed budget / Top-K size,
+    /// and caps AKR's `n_max` for this query only.
+    pub budget: Option<usize>,
+    /// Admission lane.
+    pub priority: Priority,
+    /// Time budget from submission; a query still queued past its
+    /// deadline is shed at dequeue time (never executed).
+    pub deadline: Option<Duration>,
+}
+
+impl QueryRequest {
+    pub fn new(text: impl Into<String>) -> Self {
+        Self {
+            text: text.into(),
+            scope: StreamScope::All,
+            mode: None,
+            budget: None,
+            priority: Priority::Interactive,
+            deadline: None,
+        }
+    }
+
+    pub fn scope(mut self, scope: StreamScope) -> Self {
+        self.scope = scope;
+        self
+    }
+
+    pub fn mode(mut self, mode: RetrievalMode) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+
+    pub fn budget(mut self, budget: usize) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Estimated VLM prompt tokens for this query's text — the one shared
+    /// estimate used by the serving worker loop, the coordinator, and the
+    /// eval latency model (formerly an inline `words * 2` magic formula).
+    pub fn approx_tokens(&self) -> usize {
+        Self::approx_tokens_for(&self.text)
+    }
+
+    /// Token estimate for raw query text (≈2 tokens per whitespace word,
+    /// minimum 1 — a query never prompts zero tokens).
+    pub fn approx_tokens_for(text: &str) -> usize {
+        (text.split_whitespace().count() * 2).max(1)
+    }
+
+    /// Serialize to the wire JSON encoding.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("text".into(), Json::Str(self.text.clone()));
+        m.insert("scope".into(), scope_to_json(self.scope));
+        if let Some(mode) = self.mode {
+            m.insert("mode".into(), mode_to_json(mode));
+        }
+        if let Some(b) = self.budget {
+            m.insert("budget".into(), Json::Num(b as f64));
+        }
+        m.insert("priority".into(), Json::Str(self.priority.name().into()));
+        if let Some(d) = self.deadline {
+            m.insert("deadline_ms".into(), Json::Num(d.as_secs_f64() * 1e3));
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse the wire JSON encoding (missing optional fields default).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut req = Self::new(v.get("text")?.as_str()?);
+        req.scope = scope_from_json(v.get("scope")?)?;
+        if let Some(mode) = v.opt("mode") {
+            req.mode = Some(mode_from_json(mode)?);
+        }
+        if let Some(b) = v.opt("budget") {
+            req.budget = Some(b.as_usize()?);
+        }
+        if let Some(p) = v.opt("priority") {
+            req.priority = priority_from_json(p)?;
+        }
+        if let Some(d) = v.opt("deadline_ms") {
+            // wire input is untrusted: Duration::from_secs_f64 panics on
+            // negative/NaN/huge values, so bound-check first
+            let ms = d.as_f64()?;
+            if !ms.is_finite() || !(0.0..=MAX_DEADLINE_MS).contains(&ms) {
+                bail!("deadline_ms must be a finite value in [0, {MAX_DEADLINE_MS}], got {ms}");
+            }
+            req.deadline = Some(Duration::from_secs_f64(ms / 1e3));
+        }
+        Ok(req)
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text)?)
+    }
+}
+
+/// One retrieved evidence frame: fabric-global address, wall-clock
+/// position in its stream, and the Eq. 4–5 retrieval score that drew it
+/// (softmax probability for sampling/AKR, raw cosine for Top-K).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Evidence {
+    pub frame: FrameId,
+    pub time_s: f64,
+    pub score: f32,
+}
+
+impl Evidence {
+    /// The camera stream this evidence frame came from.
+    pub fn stream(&self) -> StreamId {
+        self.frame.stream
+    }
+}
+
+/// A completed query: structured evidence plus the full latency
+/// breakdown (queue wait, measured edge stages, simulated upload + VLM).
+#[derive(Clone, Debug)]
+pub struct QueryResponse {
+    pub id: u64,
+    pub priority: Priority,
+    /// How the semantic query cache participated.
+    pub cache: CacheStatus,
+    /// Selected evidence frames, stream-major ascending.
+    pub evidence: Vec<Evidence>,
+    /// Retrieval draws used (== budget when AKR is off).
+    pub draws: usize,
+    pub queue_wait_s: f64,
+    /// Measured edge-side stage timings (zero stages on a cache hit).
+    pub edge: EdgeTimings,
+    pub upload_s: f64,
+    pub vlm_s: f64,
+}
+
+impl QueryResponse {
+    pub fn total_s(&self) -> f64 {
+        self.queue_wait_s + self.edge.total_s() + self.upload_s + self.vlm_s
+    }
+
+    /// Stream-local frame indices, in evidence order (the single-stream
+    /// view the answer model judges against).
+    pub fn frame_indices(&self) -> Vec<u64> {
+        self.evidence.iter().map(|e| e.frame.idx).collect()
+    }
+
+    /// Distinct streams cited, ascending.
+    pub fn streams(&self) -> Vec<StreamId> {
+        let mut out: Vec<StreamId> = self.evidence.iter().map(|e| e.frame.stream).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Serialize to the wire JSON encoding.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".into(), Json::Num(self.id as f64));
+        m.insert("priority".into(), Json::Str(self.priority.name().into()));
+        m.insert("cache".into(), Json::Str(self.cache.name().into()));
+        m.insert(
+            "evidence".into(),
+            Json::Arr(
+                self.evidence
+                    .iter()
+                    .map(|e| {
+                        let mut em = std::collections::BTreeMap::new();
+                        em.insert("stream".into(), Json::Num(e.frame.stream.0 as f64));
+                        em.insert("frame".into(), Json::Num(e.frame.idx as f64));
+                        em.insert("time_s".into(), Json::Num(e.time_s));
+                        em.insert("score".into(), Json::Num(e.score as f64));
+                        Json::Obj(em)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("draws".into(), Json::Num(self.draws as f64));
+        let mut lat = std::collections::BTreeMap::new();
+        lat.insert("queue_wait_s".into(), Json::Num(self.queue_wait_s));
+        lat.insert("embed_query_s".into(), Json::Num(self.edge.embed_query_s));
+        lat.insert("search_s".into(), Json::Num(self.edge.search_s));
+        lat.insert("select_s".into(), Json::Num(self.edge.select_s));
+        lat.insert("fetch_s".into(), Json::Num(self.edge.fetch_s));
+        lat.insert("upload_s".into(), Json::Num(self.upload_s));
+        lat.insert("vlm_s".into(), Json::Num(self.vlm_s));
+        m.insert("latency".into(), Json::Obj(lat));
+        Json::Obj(m)
+    }
+
+    /// Parse the wire JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let lat = v.get("latency")?;
+        let evidence = v
+            .get("evidence")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(Evidence {
+                    frame: FrameId::new(
+                        stream_id_from(e.get("stream")?)?,
+                        e.get("frame")?.as_usize()? as u64,
+                    ),
+                    time_s: e.get("time_s")?.as_f64()?,
+                    score: e.get("score")?.as_f64()? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            id: v.get("id")?.as_usize()? as u64,
+            priority: priority_from_json(v.get("priority")?)?,
+            cache: cache_from_json(v.get("cache")?)?,
+            evidence,
+            draws: v.get("draws")?.as_usize()?,
+            queue_wait_s: lat.get("queue_wait_s")?.as_f64()?,
+            edge: EdgeTimings {
+                embed_query_s: lat.get("embed_query_s")?.as_f64()?,
+                search_s: lat.get("search_s")?.as_f64()?,
+                select_s: lat.get("select_s")?.as_f64()?,
+                fetch_s: lat.get("fetch_s")?.as_f64()?,
+            },
+            upload_s: lat.get("upload_s")?.as_f64()?,
+            vlm_s: lat.get("vlm_s")?.as_f64()?,
+        })
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text)?)
+    }
+}
+
+/// Why a query produced no answer — the typed taxonomy subsuming the old
+/// `SubmitError` (admission) and adding execution-time failures.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ApiError {
+    /// Admission control: the request's lane is full.  The service is
+    /// healthy, just saturated — retry later or shed load.
+    Rejected { lane: Priority },
+    /// The query sat queued past its deadline and was shed at dequeue
+    /// time without executing.
+    DeadlineExceeded,
+    /// The service is shutting down (or its workers are gone).  Don't
+    /// retry.
+    Shutdown,
+    /// The query engine failed while executing the request.
+    Engine(String),
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::Rejected { lane } => {
+                write!(f, "{lane} lane full: query rejected by admission control")
+            }
+            ApiError::DeadlineExceeded => write!(f, "deadline exceeded while queued"),
+            ApiError::Shutdown => write!(f, "service shutting down"),
+            ApiError::Engine(msg) => write!(f, "query engine error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+// --- JSON helpers for the enum fields ---
+
+fn scope_to_json(scope: StreamScope) -> Json {
+    match scope {
+        StreamScope::All => Json::Str("all".into()),
+        StreamScope::One(s) => {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("one".into(), Json::Num(s.0 as f64));
+            Json::Obj(m)
+        }
+    }
+}
+
+fn scope_from_json(v: &Json) -> Result<StreamScope> {
+    match v {
+        Json::Str(s) if s == "all" => Ok(StreamScope::All),
+        Json::Obj(_) => Ok(StreamScope::One(stream_id_from(v.get("one")?)?)),
+        other => bail!("bad scope encoding: {other:?}"),
+    }
+}
+
+fn mode_to_json(mode: RetrievalMode) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    match mode {
+        RetrievalMode::Akr => return Json::Str("akr".into()),
+        RetrievalMode::FixedSampling(n) => {
+            m.insert("fixed_sampling".into(), Json::Num(n as f64));
+        }
+        RetrievalMode::TopK(k) => {
+            m.insert("top_k".into(), Json::Num(k as f64));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn mode_from_json(v: &Json) -> Result<RetrievalMode> {
+    match v {
+        Json::Str(s) if s == "akr" => Ok(RetrievalMode::Akr),
+        Json::Obj(m) => {
+            if let Some(n) = m.get("fixed_sampling") {
+                Ok(RetrievalMode::FixedSampling(n.as_usize()?))
+            } else if let Some(k) = m.get("top_k") {
+                Ok(RetrievalMode::TopK(k.as_usize()?))
+            } else {
+                bail!("bad mode encoding: {v:?}")
+            }
+        }
+        other => bail!("bad mode encoding: {other:?}"),
+    }
+}
+
+fn priority_from_json(v: &Json) -> Result<Priority> {
+    match v.as_str()? {
+        "interactive" => Ok(Priority::Interactive),
+        "batch" => Ok(Priority::Batch),
+        other => bail!("unknown priority '{other}'"),
+    }
+}
+
+fn cache_from_json(v: &Json) -> Result<CacheStatus> {
+    match v.as_str()? {
+        "bypass" => Ok(CacheStatus::Bypass),
+        "miss" => Ok(CacheStatus::Miss),
+        "hit_exact" => Ok(CacheStatus::HitExact),
+        "hit_semantic" => Ok(CacheStatus::HitSemantic),
+        other => bail!("unknown cache status '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> QueryRequest {
+        QueryRequest::new("where did the red car go")
+            .scope(StreamScope::One(StreamId(2)))
+            .mode(RetrievalMode::FixedSampling(16))
+            .budget(12)
+            .priority(Priority::Batch)
+            .deadline(Duration::from_millis(2500))
+    }
+
+    #[test]
+    fn builder_defaults() {
+        let req = QueryRequest::new("q");
+        assert_eq!(req.scope, StreamScope::All);
+        assert_eq!(req.mode, None);
+        assert_eq!(req.budget, None);
+        assert_eq!(req.priority, Priority::Interactive);
+        assert_eq!(req.deadline, None);
+    }
+
+    #[test]
+    fn approx_tokens_is_two_per_word_with_floor() {
+        assert_eq!(QueryRequest::approx_tokens_for("one two three"), 6);
+        assert_eq!(QueryRequest::approx_tokens_for("   "), 1);
+        assert_eq!(QueryRequest::new("a b").approx_tokens(), 4);
+    }
+
+    #[test]
+    fn request_round_trips_through_json() {
+        let req = sample_request();
+        let back = QueryRequest::from_json_str(&req.to_json().to_string()).unwrap();
+        assert_eq!(back, req);
+        // optional fields absent -> defaults
+        let min = QueryRequest::new("hello world").to_json().to_string();
+        let back = QueryRequest::from_json_str(&min).unwrap();
+        assert_eq!(back, QueryRequest::new("hello world"));
+    }
+
+    #[test]
+    fn mode_and_scope_encodings_round_trip() {
+        for mode in [
+            RetrievalMode::Akr,
+            RetrievalMode::FixedSampling(7),
+            RetrievalMode::TopK(3),
+        ] {
+            assert_eq!(mode_from_json(&mode_to_json(mode)).unwrap(), mode);
+        }
+        for scope in [StreamScope::All, StreamScope::One(StreamId(9))] {
+            assert_eq!(scope_from_json(&scope_to_json(scope)).unwrap(), scope);
+        }
+        assert!(mode_from_json(&Json::Str("nope".into())).is_err());
+        assert!(scope_from_json(&Json::Num(1.0)).is_err());
+    }
+
+    #[test]
+    fn response_round_trips_through_json() {
+        let resp = QueryResponse {
+            id: 41,
+            priority: Priority::Interactive,
+            cache: CacheStatus::HitSemantic,
+            evidence: vec![
+                Evidence { frame: FrameId::new(StreamId(0), 12), time_s: 1.5, score: 0.25 },
+                Evidence { frame: FrameId::new(StreamId(3), 7), time_s: 0.875, score: 0.125 },
+            ],
+            draws: 9,
+            queue_wait_s: 0.001,
+            edge: EdgeTimings {
+                embed_query_s: 0.002,
+                search_s: 0.003,
+                select_s: 0.004,
+                fetch_s: 0.005,
+            },
+            upload_s: 0.5,
+            vlm_s: 1.25,
+        };
+        let back = QueryResponse::from_json_str(&resp.to_json().to_string()).unwrap();
+        assert_eq!(back.id, resp.id);
+        assert_eq!(back.cache, resp.cache);
+        assert_eq!(back.evidence, resp.evidence);
+        assert_eq!(back.draws, resp.draws);
+        assert_eq!(back.total_s(), resp.total_s());
+        assert_eq!(back.frame_indices(), vec![12, 7]);
+        assert_eq!(back.streams(), vec![StreamId(0), StreamId(3)]);
+    }
+
+    #[test]
+    fn malformed_wire_input_errs_instead_of_panicking() {
+        // negative / huge / NaN-ish deadlines must be Err, not a panic
+        // inside Duration::from_secs_f64
+        for bad in ["-5", "1e300"] {
+            let wire = format!(r#"{{"text":"q","scope":"all","deadline_ms":{bad}}}"#);
+            assert!(QueryRequest::from_json_str(&wire).is_err(), "deadline_ms {bad}");
+        }
+        // out-of-range stream ids are rejected, never truncated to u16
+        let wire = r#"{"text":"q","scope":{"one":65537}}"#;
+        assert!(QueryRequest::from_json_str(wire).is_err());
+        // in-range boundary still works
+        let wire = r#"{"text":"q","scope":{"one":65535},"deadline_ms":1000}"#;
+        let req = QueryRequest::from_json_str(wire).unwrap();
+        assert_eq!(req.scope, StreamScope::One(StreamId(65535)));
+        assert_eq!(req.deadline, Some(Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn api_error_displays_and_converts() {
+        let e = ApiError::Rejected { lane: Priority::Batch };
+        assert!(e.to_string().contains("batch lane full"));
+        let any: anyhow::Error = ApiError::DeadlineExceeded.into();
+        assert!(any.to_string().contains("deadline"));
+    }
+}

@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::api::{ApiError, Priority, QueryRequest};
 use crate::backend::EmbedBackend;
 use crate::config::VenusConfig;
 use crate::util::stats::fmt_duration;
@@ -157,18 +158,46 @@ fn serve(args: &[String]) -> Result<()> {
             "streams",
             "camera streams (memory shards); 0 = from config [fabric]",
             Some("0"),
+        )
+        .flag(
+            "repeat",
+            "replay the query mix this many times (>1 exercises the query cache)",
+            Some("1"),
+        )
+        .flag(
+            "deadline-ms",
+            "per-query deadline in milliseconds (0 = none)",
+            Some("0"),
         );
     let parsed = spec.parse(args)?;
-    let cfg = load_config(&parsed)?;
+    let mut cfg = load_config(&parsed)?;
     let preset = DatasetPreset::parse(parsed.get("preset").unwrap())
         .ok_or_else(|| anyhow::anyhow!("unknown preset"))?;
     let seed: u64 = parsed.get("seed").unwrap().parse()?;
     let n_queries = parsed.get_usize("queries")?;
+    let repeat = parsed.get_usize("repeat")?.max(1);
+    let deadline_ms = parsed.get_usize("deadline-ms")?;
     let streams = match parsed.get_usize("streams")? {
         0 => cfg.fabric.streams,
         n => n,
     };
 
+    // build the typed request mix: alternating priorities (even slots are
+    // a waiting human, odd slots are batch analytics), optional deadline
+    let build_request = |i: usize, text: &str| {
+        let mut req = QueryRequest::new(text).priority(if i % 2 == 0 {
+            Priority::Interactive
+        } else {
+            Priority::Batch
+        });
+        if deadline_ms > 0 {
+            req = req.deadline(std::time::Duration::from_millis(deadline_ms as u64));
+        }
+        req
+    };
+
+    let texts: Vec<String>;
+    let service;
     if streams <= 1 {
         // single-camera deployment: the paper's serving loop
         let case = crate::eval::prepare_case(preset, &cfg, n_queries, seed)?;
@@ -177,44 +206,51 @@ fn serve(args: &[String]) -> Result<()> {
             case.memory.read().unwrap().len(),
             case.ingest_stats.frames
         );
-        let service =
-            crate::server::Service::start(&cfg, Arc::clone(&case.fabric), seed)?;
+        texts = case.queries.iter().map(|q| q.text.clone()).collect();
+        // evidence timestamps follow the stream's real frame rate
+        cfg.api.fps = case.synth.config().fps;
+        service = crate::server::Service::start(&cfg, Arc::clone(&case.fabric), seed)?;
+    } else {
+        // multi-camera fabric: K streams ingested concurrently through one
+        // shared embed pool, then the query mix replays with All scope
+        // (cross-camera answers) — `One` per-stream scoping is exercised
+        // by `examples/multi_camera.rs`.
+        let per_stream = ((n_queries + streams - 1) / streams).max(1);
+        let case = crate::eval::prepare_multi_case(preset, &cfg, streams, per_stream, seed)?;
+        eprintln!(
+            "fabric ready: {} streams, {} index vectors over {} frames",
+            case.fabric.n_streams(),
+            case.fabric.total_indexed(),
+            case.fabric.total_frames()
+        );
+        texts = case.queries.iter().map(|(_, q)| q.text.clone()).collect();
+        cfg.api.fps = case.synths[0].config().fps;
+        service = crate::server::Service::start(&cfg, Arc::clone(&case.fabric), seed)?;
+    }
+
+    let mut shed = 0usize;
+    for round in 0..repeat {
         let mut receivers = Vec::new();
-        for q in &case.queries {
-            if let Ok(rx) = service.submit(&q.text) {
+        for (i, text) in texts.iter().enumerate() {
+            if let Ok(rx) = service.submit_request(build_request(i, text)) {
                 receivers.push(rx);
             }
         }
         for rx in receivers {
-            let _ = rx.recv()?;
+            match rx.recv()? {
+                Ok(_) => {}
+                Err(ApiError::DeadlineExceeded) => shed += 1,
+                Err(e) => eprintln!("query failed: {e}"),
+            }
         }
-        let snap = service.shutdown();
-        println!("{}", snap.render());
-        return Ok(());
-    }
-
-    // multi-camera fabric: K streams ingested concurrently through one
-    // shared embed pool, then the query mix replays with All scope
-    // (cross-camera answers) — `One` per-stream scoping is exercised by
-    // `examples/multi_camera.rs`.
-    let per_stream = ((n_queries + streams - 1) / streams).max(1);
-    let case = crate::eval::prepare_multi_case(preset, &cfg, streams, per_stream, seed)?;
-    eprintln!(
-        "fabric ready: {} streams, {} index vectors over {} frames",
-        case.fabric.n_streams(),
-        case.fabric.total_indexed(),
-        case.fabric.total_frames()
-    );
-    let service = crate::server::Service::start(&cfg, Arc::clone(&case.fabric), seed)?;
-    let mut receivers = Vec::new();
-    for (_, q) in &case.queries {
-        if let Ok(rx) = service.submit(&q.text) {
-            receivers.push(rx);
+        if repeat > 1 {
+            eprintln!("round {}/{repeat}: {}", round + 1, service.cache.stats().render());
         }
     }
-    for rx in receivers {
-        let _ = rx.recv()?;
+    if shed > 0 {
+        eprintln!("{shed} queries shed at dequeue (deadline {deadline_ms} ms)");
     }
+    println!("{}", service.cache.stats().render());
     let snap = service.shutdown();
     println!("{}", snap.render());
     Ok(())

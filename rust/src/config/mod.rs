@@ -152,7 +152,9 @@ impl Default for CloudConfig {
 /// Serving loop parameters.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Max queries queued before admission control rejects.
+    /// Legacy single-queue admission depth: the default for BOTH priority
+    /// lanes unless `[api] interactive_depth` / `batch_depth` override it
+    /// (see [`VenusConfig::lane_depths`]).
     pub queue_depth: usize,
     /// Query worker threads.
     pub workers: usize,
@@ -161,6 +163,48 @@ pub struct ServerConfig {
 impl Default for ServerConfig {
     fn default() -> Self {
         Self { queue_depth: 64, workers: 2 }
+    }
+}
+
+/// Serving-API parameters: priority lanes + semantic query cache
+/// (the typed query protocol of DESIGN.md §Serving-API).
+#[derive(Clone, Debug)]
+pub struct ApiConfig {
+    /// Semantic query-cache capacity in entries (0 disables the cache).
+    pub cache_entries: usize,
+    /// Cosine-similarity threshold for a semantic cache hit: a new query
+    /// whose text embedding is at least this close to a cached one reuses
+    /// the cached selection.  1.0 restricts reuse to (near-)identical
+    /// embeddings; exact text repeats hit regardless of this threshold.
+    pub cache_threshold: f64,
+    /// Staleness bound: a cached selection is dropped once any touched
+    /// shard's ingest watermark advanced by more than this many inserts
+    /// since the entry was cached.
+    pub cache_max_stale: u64,
+    /// Interactive-lane queue depth (admission control per lane).
+    /// `None` inherits the legacy `server.queue_depth` — see
+    /// [`VenusConfig::lane_depths`].
+    pub interactive_depth: Option<usize>,
+    /// Batch-lane queue depth (`None` inherits `server.queue_depth`).
+    pub batch_depth: Option<usize>,
+    /// Camera frame rate used to render evidence timestamps.  Defaults
+    /// to the paper's 8 FPS evaluation rate; deployments whose streams
+    /// run at a different rate must set it to the real camera rate (the
+    /// CLI and examples copy it from the stream config before serving),
+    /// or reported `Evidence::time_s` values will be scaled wrong.
+    pub fps: f64,
+}
+
+impl Default for ApiConfig {
+    fn default() -> Self {
+        Self {
+            cache_entries: 256,
+            cache_threshold: 0.92,
+            cache_max_stale: 8,
+            interactive_depth: None,
+            batch_depth: None,
+            fps: 8.0,
+        }
     }
 }
 
@@ -206,6 +250,7 @@ pub struct VenusConfig {
     pub net: NetConfig,
     pub cloud: CloudConfig,
     pub server: ServerConfig,
+    pub api: ApiConfig,
     pub fabric: FabricConfig,
     /// Edge device profile name (see `edge::DeviceProfile`).
     pub device: String,
@@ -259,6 +304,21 @@ impl VenusConfig {
         cfg.server.queue_depth = d.usize_or("server.queue_depth", cfg.server.queue_depth)?;
         cfg.server.workers = d.usize_or("server.workers", cfg.server.workers)?;
 
+        cfg.api.cache_entries = d.usize_or("api.cache_entries", cfg.api.cache_entries)?;
+        cfg.api.cache_threshold = d.f64_or("api.cache_threshold", cfg.api.cache_threshold)?;
+        cfg.api.cache_max_stale =
+            d.usize_or("api.cache_max_stale", cfg.api.cache_max_stale as usize)? as u64;
+        // lane depths stay None unless explicitly set — resolution against
+        // the legacy `server.queue_depth` happens in `lane_depths`, so it
+        // applies to programmatically built configs too
+        if d.get("api.interactive_depth").is_some() {
+            cfg.api.interactive_depth = Some(d.usize_or("api.interactive_depth", 0)?);
+        }
+        if d.get("api.batch_depth").is_some() {
+            cfg.api.batch_depth = Some(d.usize_or("api.batch_depth", 0)?);
+        }
+        cfg.api.fps = d.f64_or("api.fps", cfg.api.fps)?;
+
         cfg.fabric.streams = d.usize_or("fabric.streams", cfg.fabric.streams)?;
         cfg.fabric.pool_workers =
             d.usize_or("fabric.pool_workers", cfg.fabric.pool_workers)?;
@@ -267,6 +327,17 @@ impl VenusConfig {
 
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Resolved (interactive, batch) admission-lane depths: an explicit
+    /// `[api]` depth wins; otherwise the legacy single-queue
+    /// `server.queue_depth` applies — including for configs built in
+    /// code, not just ones parsed from TOML.
+    pub fn lane_depths(&self) -> (usize, usize) {
+        (
+            self.api.interactive_depth.unwrap_or(self.server.queue_depth),
+            self.api.batch_depth.unwrap_or(self.server.queue_depth),
+        )
     }
 
     pub fn from_file(path: &str) -> Result<Self> {
@@ -315,6 +386,16 @@ impl VenusConfig {
         if self.server.workers == 0 {
             bail!("server.workers must be >= 1");
         }
+        if !(-1.0..=1.0).contains(&self.api.cache_threshold) {
+            bail!("api.cache_threshold must be a cosine similarity in [-1,1]");
+        }
+        let (interactive, batch) = self.lane_depths();
+        if interactive == 0 || batch == 0 {
+            bail!("lane depths (api.*_depth / server.queue_depth) must be >= 1");
+        }
+        if self.api.fps <= 0.0 {
+            bail!("api.fps must be positive");
+        }
         if self.fabric.streams == 0 {
             bail!("fabric.streams must be >= 1");
         }
@@ -356,6 +437,12 @@ const KNOWN_KEYS: &[&str] = &[
     "cloud.overhead_s",
     "server.queue_depth",
     "server.workers",
+    "api.cache_entries",
+    "api.cache_threshold",
+    "api.cache_max_stale",
+    "api.interactive_depth",
+    "api.batch_depth",
+    "api.fps",
     "fabric.streams",
     "fabric.pool_workers",
     "device",
@@ -407,6 +494,35 @@ mod tests {
         assert!(VenusConfig::from_toml("[memory]\nindex = \"hnsw\"").is_err());
         assert!(VenusConfig::from_toml("[server]\nworkers = 0").is_err());
         assert!(VenusConfig::from_toml("[fabric]\nstreams = 0").is_err());
+    }
+
+    #[test]
+    fn api_keys_parse_validate_and_inherit_queue_depth() {
+        let cfg = VenusConfig::from_toml(
+            "[api]\ncache_entries = 16\ncache_threshold = 0.8\ncache_max_stale = 3\nfps = 4.0",
+        )
+        .unwrap();
+        assert_eq!(cfg.api.cache_entries, 16);
+        assert_eq!(cfg.api.cache_threshold, 0.8);
+        assert_eq!(cfg.api.cache_max_stale, 3);
+        assert_eq!(cfg.api.fps, 4.0);
+        // lane depths inherit the legacy single-queue depth unless set
+        let cfg = VenusConfig::from_toml("[server]\nqueue_depth = 5").unwrap();
+        assert_eq!(cfg.lane_depths(), (5, 5));
+        let cfg =
+            VenusConfig::from_toml("[server]\nqueue_depth = 5\n[api]\nbatch_depth = 9").unwrap();
+        assert_eq!(cfg.lane_depths(), (5, 9));
+        // ...and the inheritance works for configs built in code too
+        let mut cfg = VenusConfig::default();
+        cfg.server.queue_depth = 2;
+        assert_eq!(cfg.lane_depths(), (2, 2));
+        cfg.api.interactive_depth = Some(7);
+        assert_eq!(cfg.lane_depths(), (7, 2));
+        // invalid values rejected
+        assert!(VenusConfig::from_toml("[api]\ncache_threshold = 1.5").is_err());
+        assert!(VenusConfig::from_toml("[api]\ninteractive_depth = 0").is_err());
+        assert!(VenusConfig::from_toml("[server]\nqueue_depth = 0").is_err());
+        assert!(VenusConfig::from_toml("[api]\nfps = 0.0").is_err());
     }
 
     #[test]

@@ -105,9 +105,10 @@ impl Venus {
     pub fn query(&mut self, text: &str) -> Result<(QueryOutcome, LatencyBreakdown)> {
         let outcome = self.query.retrieve(text)?;
         let upload_s = self.link.round_trip_s(Payload::Frames(outcome.selection.frames.len()));
-        let vlm_s = self
-            .vlm
-            .infer_latency_s(outcome.selection.frames.len(), text.split_whitespace().count() * 2);
+        let vlm_s = self.vlm.infer_latency_s(
+            outcome.selection.frames.len(),
+            crate::api::QueryRequest::approx_tokens_for(text),
+        );
         let breakdown =
             LatencyBreakdown { edge: outcome.timings, upload_s, vlm_s };
         Ok((outcome, breakdown))

@@ -29,9 +29,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::api::cache::{CacheStatus, CachedQuery, QueryCache};
 use crate::config::RetrievalConfig;
 use crate::embed::EmbedEngine;
-use crate::memory::{ClusterRecord, Hierarchy, MemoryFabric, StreamScope};
+use crate::memory::{ClusterRecord, Hierarchy, MemoryFabric, StreamId, StreamScope};
 use crate::retrieval::{akr_retrieve, sample_retrieve, topk_retrieve, Selection};
 use crate::util::rng::Pcg64;
 
@@ -57,6 +58,10 @@ pub struct QueryOutcome {
     pub timings: EdgeTimings,
     /// AKR draws actually used (== selection budget when AKR is off)
     pub draws: usize,
+    /// Eq. 4–5 score per selected frame, parallel to `selection.frames`
+    /// (softmax probability for sampling/AKR, raw cosine for Top-K) —
+    /// the structured evidence the serving API returns.
+    pub frame_scores: Vec<f32>,
 }
 
 /// Retrieval mode (the ablation axis of Fig. 10 / Fig. 11).
@@ -150,19 +155,95 @@ impl QueryEngine {
         scope: StreamScope,
         mode: RetrievalMode,
     ) -> Result<QueryOutcome> {
+        self.retrieve_request(text, scope, Some(mode), None, None)
+            .map(|(outcome, _)| outcome)
+    }
+
+    /// Resolve the effective retrieval mode for a request: an explicit
+    /// mode wins over the configured default, and a per-query sampling
+    /// budget replaces the fixed budget / Top-K size.  (An AKR budget
+    /// override instead caps `n_max` — see [`QueryEngine::retrieve_request`].)
+    pub fn effective_mode(
+        &self,
+        mode: Option<RetrievalMode>,
+        budget: Option<usize>,
+    ) -> RetrievalMode {
+        let base = mode.unwrap_or_else(|| self.default_mode());
+        match (base, budget) {
+            (RetrievalMode::FixedSampling(_), Some(b)) => RetrievalMode::FixedSampling(b),
+            (RetrievalMode::TopK(_), Some(b)) => RetrievalMode::TopK(b),
+            (m, _) => m,
+        }
+    }
+
+    /// The serving API's retrieve path: explicit scope, optional mode and
+    /// per-query budget override, and an optional semantic query cache.
+    ///
+    /// Cache protocol (the paper's query-indexing stage):
+    ///  1. exact tier — normalized-text hit returns the cached selection
+    ///     with zero edge stages (no embed, no scoring, no fetch);
+    ///  2. on exact miss the query text is embedded, and a cached entry
+    ///     whose embedding is cosine-close enough is reused (scoring +
+    ///     selection + fetch skipped);
+    ///  3. on a full miss the cold path runs and the selection is cached
+    ///     together with the touched shards' ingest watermarks, captured
+    ///     under the same read guards the selection ran under.
+    pub fn retrieve_request(
+        &mut self,
+        text: &str,
+        scope: StreamScope,
+        mode: Option<RetrievalMode>,
+        budget: Option<usize>,
+        cache: Option<&QueryCache>,
+    ) -> Result<(QueryOutcome, CacheStatus)> {
+        let mode = self.effective_mode(mode, budget);
+        // AKR takes its budget from cfg.n_max: cap it for this query only
+        let cfg = match (mode, budget) {
+            (RetrievalMode::Akr, Some(b)) => {
+                let mut c = self.cfg.clone();
+                c.n_max = b.clamp(1, c.n_max.max(1));
+                c
+            }
+            _ => self.cfg.clone(),
+        };
         let mut t = EdgeTimings::default();
+        let cache = cache.filter(|c| c.enabled());
+
+        // cache tier 1: normalized-text key (skips even the text embed).
+        // `cfg.n_max` is part of the key: it carries an AKR budget
+        // override, which `mode` alone does not encode.
+        let mut lookup_state = None;
+        if let Some(c) = cache {
+            let wms = self.fabric.watermarks(scope)?;
+            let key = QueryCache::text_key(text);
+            if let Some(hit) = c.lookup_exact(key, scope, mode, cfg.n_max, &wms) {
+                return Ok((outcome_from_cached(hit, t), CacheStatus::HitExact));
+            }
+            lookup_state = Some((key, wms));
+        }
 
         // query embedding: pure compute, no lock held
         let t0 = Instant::now();
         let qvec = self.engine.embed_query(text)?;
         t.embed_query_s = t0.elapsed().as_secs_f64();
 
+        // cache tier 2: embedding similarity (skips scoring + selection)
+        if let (Some(c), Some((_, wms))) = (cache, lookup_state.as_ref()) {
+            if let Some(hit) = c.lookup_semantic(&qvec, scope, mode, cfg.n_max, wms) {
+                return Ok((outcome_from_cached(hit, t), CacheStatus::HitSemantic));
+            }
+        }
+
         // score + select under the scoped shards' read guards: the sampler
         // needs scores consistent with the records it expands clusters
         // from, across every shard at once
         let shards = self.fabric.scoped(scope)?;
-        let (selection, draws) = {
+        let (selection, draws, frame_scores, touched) = {
             let guards: Vec<_> = shards.iter().map(|s| s.read().unwrap()).collect();
+            // watermarks captured under the same guards the selection
+            // sees — exactly the index state a cached reuse would replay
+            let touched: Vec<(StreamId, u64)> =
+                guards.iter().map(|g| (g.stream(), g.watermark())).collect();
 
             if guards.len() == 1 {
                 // single-shard fast path (One scope, or a single-camera
@@ -174,10 +255,11 @@ impl QueryEngine {
                 t.search_s = t0.elapsed().as_secs_f64();
 
                 let t0 = Instant::now();
-                let out =
-                    select_over(&**g, &self.scores_buf, &self.cfg, &mut self.rng, mode);
+                let (sel, draws) =
+                    select_over(&**g, &self.scores_buf, &cfg, &mut self.rng, mode);
+                let fs = frame_scores_for(&**g, &sel, &self.scores_buf);
                 t.select_s = t0.elapsed().as_secs_f64();
-                out
+                (sel, draws, fs, touched)
             } else {
                 let t0 = Instant::now();
                 let mut merged: Vec<f32> = Vec::new();
@@ -190,10 +272,11 @@ impl QueryEngine {
                 t.search_s = t0.elapsed().as_secs_f64();
 
                 let t0 = Instant::now();
-                let out =
-                    select_over(&records[..], &merged, &self.cfg, &mut self.rng, mode);
+                let (sel, draws) =
+                    select_over(&records[..], &merged, &cfg, &mut self.rng, mode);
+                let fs = frame_scores_for(&records[..], &sel, &merged);
                 t.select_s = t0.elapsed().as_secs_f64();
-                out
+                (sel, draws, fs, touched)
             }
         };
 
@@ -207,7 +290,26 @@ impl QueryEngine {
         }
         t.fetch_s = t0.elapsed().as_secs_f64();
 
-        Ok(QueryOutcome { selection, timings: t, draws })
+        let status = if let (Some(c), Some((key, _))) = (cache, lookup_state) {
+            c.insert(
+                key,
+                qvec,
+                scope,
+                mode,
+                cfg.n_max,
+                touched,
+                CachedQuery {
+                    selection: selection.clone(),
+                    frame_scores: frame_scores.clone(),
+                    draws,
+                },
+            );
+            CacheStatus::Miss
+        } else {
+            CacheStatus::Bypass
+        };
+
+        Ok((QueryOutcome { selection, timings: t, draws, frame_scores }, status))
     }
 
     /// Raw similarity scores for the given query over the whole fabric
@@ -227,6 +329,53 @@ impl QueryEngine {
     pub fn measured_text_embed_s(&self) -> f64 {
         self.engine.measured_text_s()
     }
+}
+
+/// Rebuild a query outcome from a cache hit: the cached selection with
+/// whatever edge stages were actually paid (all zero on an exact hit,
+/// embed only on a semantic hit).
+fn outcome_from_cached(hit: CachedQuery, timings: EdgeTimings) -> QueryOutcome {
+    QueryOutcome {
+        selection: hit.selection,
+        timings,
+        draws: hit.draws,
+        frame_scores: hit.frame_scores,
+    }
+}
+
+/// Per-selected-frame retrieval score, parallel to `sel.frames`: the
+/// Eq. 5 softmax probability of the drawn index whose cluster cites the
+/// frame (sampling/AKR), falling back to the raw Eq. 4 score when the
+/// selector produced no distribution (Top-K).
+fn frame_scores_for<M: crate::retrieval::RecordSource + ?Sized>(
+    memory: &M,
+    sel: &Selection,
+    raw_scores: &[f32],
+) -> Vec<f32> {
+    let mut drawn: Vec<usize> = sel.drawn_indices.clone();
+    drawn.sort_unstable();
+    drawn.dedup();
+    let score_of = |idx: usize| -> f32 {
+        if sel.probs.is_empty() {
+            raw_scores.get(idx).copied().unwrap_or(0.0)
+        } else {
+            sel.probs[idx]
+        }
+    };
+    sel.frames
+        .iter()
+        .map(|f| {
+            drawn
+                .iter()
+                .filter(|&&i| {
+                    let r = memory.record(i);
+                    r.stream == f.stream && r.members.binary_search(&f.idx).is_ok()
+                })
+                .map(|&i| score_of(i))
+                .max_by(|a, b| a.partial_cmp(b).unwrap())
+                .unwrap_or(0.0)
+        })
+        .collect()
 }
 
 /// Shortlist-mask + mode dispatch over any record source — one shard
@@ -338,6 +487,177 @@ mod tests {
             !out.selection.frames.is_empty(),
             "query after ingest must select from the 60-cluster index"
         );
+    }
+
+    /// Deterministic single-shard memory for the API-path tests (random
+    /// unit vectors, 4 frames per cluster).
+    fn seeded_memory(d: usize, clusters: u64, seed: u64) -> Arc<RwLock<Hierarchy>> {
+        let memory = Arc::new(RwLock::new(
+            Hierarchy::new(&MemoryConfig::default(), d, Box::new(InMemoryRaw::new(8)))
+                .unwrap(),
+        ));
+        let mut rng = Pcg64::seeded(seed);
+        let mut mem = memory.write().unwrap();
+        for c in 0..clusters {
+            for f in c * 4..(c + 1) * 4 {
+                mem.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+            }
+            let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            crate::util::l2_normalize(&mut v);
+            mem.insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(0),
+                    scene_id: c as usize,
+                    centroid_frame: c * 4,
+                    members: (c * 4..(c + 1) * 4).collect(),
+                },
+            )
+            .unwrap();
+        }
+        drop(mem);
+        memory
+    }
+
+    fn engine_over(memory: &Arc<RwLock<Hierarchy>>, seed: u64) -> QueryEngine {
+        QueryEngine::over_memory(
+            EmbedEngine::default_backend(false).unwrap(),
+            Arc::clone(memory),
+            RetrievalConfig::default(),
+            seed,
+        )
+    }
+
+    #[test]
+    fn frame_scores_parallel_the_selection() {
+        let engine = EmbedEngine::default_backend(false).unwrap();
+        let memory = seeded_memory(engine.d_embed(), 12, 41);
+        let mut qe = engine_over(&memory, 7);
+        for mode in [
+            RetrievalMode::FixedSampling(8),
+            RetrievalMode::Akr,
+            RetrievalMode::TopK(4),
+        ] {
+            let out = qe.retrieve_with("what happened with concept01", mode).unwrap();
+            assert_eq!(
+                out.frame_scores.len(),
+                out.selection.frames.len(),
+                "{mode:?}: scores must parallel frames"
+            );
+            if mode != RetrievalMode::TopK(4) {
+                // every sampled frame came from a drawn cluster: its Eq. 5
+                // probability is strictly positive
+                assert!(
+                    out.frame_scores.iter().all(|&s| s > 0.0),
+                    "{mode:?}: {:?}",
+                    out.frame_scores
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn budget_override_rescopes_every_mode() {
+        let engine = EmbedEngine::default_backend(false).unwrap();
+        let memory = seeded_memory(engine.d_embed(), 16, 43);
+        let mut qe = engine_over(&memory, 9);
+        // fixed sampling: budget replaces the draw count exactly
+        let (out, _) = qe
+            .retrieve_request(
+                "concept01",
+                StreamScope::All,
+                Some(RetrievalMode::FixedSampling(32)),
+                Some(5),
+                None,
+            )
+            .unwrap();
+        assert_eq!(out.draws, 5);
+        // top-k: budget replaces k
+        let (out, _) = qe
+            .retrieve_request(
+                "concept01",
+                StreamScope::All,
+                Some(RetrievalMode::TopK(12)),
+                Some(3),
+                None,
+            )
+            .unwrap();
+        assert_eq!(out.selection.frames.len(), 3);
+        // AKR: budget caps n_max
+        let (out, _) = qe
+            .retrieve_request(
+                "concept01",
+                StreamScope::All,
+                Some(RetrievalMode::Akr),
+                Some(2),
+                None,
+            )
+            .unwrap();
+        assert!(out.draws <= 2, "AKR draws {} exceed the budget cap", out.draws);
+        // no override: configured default mode applies
+        let mode = qe.effective_mode(None, None);
+        assert_eq!(mode, RetrievalMode::Akr, "default config enables AKR");
+    }
+
+    #[test]
+    fn cache_tiers_exact_then_semantic_then_miss() {
+        let engine = EmbedEngine::default_backend(false).unwrap();
+        let memory = seeded_memory(engine.d_embed(), 10, 47);
+        let mut qe = engine_over(&memory, 11);
+        let cache = crate::api::cache::QueryCache::new(16, -1.0, 1_000);
+
+        let (cold, status) = qe
+            .retrieve_request(
+                "what happened with concept01",
+                StreamScope::All,
+                Some(RetrievalMode::FixedSampling(8)),
+                None,
+                Some(&cache),
+            )
+            .unwrap();
+        assert_eq!(status, CacheStatus::Miss);
+
+        // exact tier: same text modulo case/whitespace, zero edge stages
+        let (warm, status) = qe
+            .retrieve_request(
+                "  What HAPPENED with concept01 ",
+                StreamScope::All,
+                Some(RetrievalMode::FixedSampling(8)),
+                None,
+                Some(&cache),
+            )
+            .unwrap();
+        assert_eq!(status, CacheStatus::HitExact);
+        assert_eq!(warm.selection.frames, cold.selection.frames);
+        assert_eq!(warm.frame_scores, cold.frame_scores);
+        assert_eq!(warm.timings.total_s(), 0.0, "exact hit skips every edge stage");
+
+        // semantic tier: different text, threshold -1 accepts any cosine
+        let (sem, status) = qe
+            .retrieve_request(
+                "completely different wording",
+                StreamScope::All,
+                Some(RetrievalMode::FixedSampling(8)),
+                None,
+                Some(&cache),
+            )
+            .unwrap();
+        assert_eq!(status, CacheStatus::HitSemantic);
+        assert_eq!(sem.selection.frames, cold.selection.frames);
+        assert!(sem.timings.embed_query_s > 0.0, "semantic hit still pays the embed");
+        assert_eq!(sem.timings.search_s + sem.timings.select_s + sem.timings.fetch_s, 0.0);
+
+        // no cache handle: bypass
+        let (_, status) = qe
+            .retrieve_request(
+                "what happened with concept01",
+                StreamScope::All,
+                Some(RetrievalMode::FixedSampling(8)),
+                None,
+                None,
+            )
+            .unwrap();
+        assert_eq!(status, CacheStatus::Bypass);
     }
 
     /// Scope semantics over a two-shard fabric with disjoint concepts:

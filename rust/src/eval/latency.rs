@@ -6,10 +6,18 @@
 //! can be overridden with *measured* host numbers (EXPERIMENTS.md reports
 //! both the paper-scale simulation and the measured variant).
 
+use crate::api::QueryRequest;
 use crate::baselines::Method;
 use crate::cloud::VlmClient;
 use crate::edge::DeviceProfile;
 use crate::net::{Link, Payload};
+
+/// Representative 16-word MCQ query the latency tables are computed for
+/// (the VLM prompt-token estimate goes through the one shared
+/// [`QueryRequest::approx_tokens_for`] used by the serving worker loop —
+/// 32 tokens, matching the paper's short-question regime).
+const REFERENCE_QUERY: &str = "in the video what happened with the highlighted concept \
+                               between the first and the second scene";
 
 /// Where the frame-selection algorithm runs (§V-A-3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -91,7 +99,8 @@ impl LatencyModel {
         vlm: &VlmClient,
     ) -> LatencyParts {
         let frames = self.clip_frames(clip_s);
-        let infer = vlm.infer_latency_s(n_selected, 32);
+        let infer =
+            vlm.infer_latency_s(n_selected, QueryRequest::approx_tokens_for(REFERENCE_QUERY));
         match deployment {
             Deployment::CloudOnly => LatencyParts {
                 on_device_s: 0.0,
@@ -124,7 +133,8 @@ impl LatencyModel {
         LatencyParts {
             on_device_s: on_device,
             comm_s: self.link.transfer_s(Payload::Frames(n_selected)),
-            cloud_s: vlm.infer_latency_s(n_selected, 32),
+            cloud_s: vlm
+                .infer_latency_s(n_selected, QueryRequest::approx_tokens_for(REFERENCE_QUERY)),
         }
     }
 }
@@ -140,6 +150,13 @@ mod tests {
             LatencyModel::new(Link::new(NetConfig::default()), AGX_ORIN, 8.0),
             VlmClient::new(CloudConfig::default(), 1),
         )
+    }
+
+    #[test]
+    fn reference_query_keeps_the_calibrated_token_count() {
+        // the latency tables were calibrated at 32 prompt tokens; the
+        // shared estimator over the reference query must preserve that
+        assert_eq!(QueryRequest::approx_tokens_for(REFERENCE_QUERY), 32);
     }
 
     #[test]

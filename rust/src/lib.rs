@@ -28,9 +28,18 @@
 //! ([`memory::StreamScope`]) whose `All` path scatter-gathers Eq. 4–5
 //! scoring across shards so one answer can cite several cameras.
 //!
-//! Quickstart: see `examples/quickstart.rs` (single camera) and
-//! `examples/multi_camera.rs` (fabric); architecture: `DESIGN.md`.
+//! Serving goes through the typed [`api`] layer (Serving API v1): a
+//! [`api::QueryRequest`] builder (scope, retrieval mode, sampling
+//! budget, priority lane, deadline), structured [`api::QueryResponse`]
+//! evidence, priority-lane admission with deadline-aware shedding in
+//! [`server`], and a fabric-wide semantic query cache
+//! ([`api::QueryCache`]) that lets repeat and near-duplicate queries
+//! skip the edge hot path entirely.
+//!
+//! Quickstart: see `examples/quickstart.rs` (single camera, typed API)
+//! and `examples/multi_camera.rs` (fabric); architecture: `DESIGN.md`.
 
+pub mod api;
 pub mod backend;
 pub mod baselines;
 pub mod cli;

@@ -166,6 +166,22 @@ impl MemoryFabric {
         Ok(out)
     }
 
+    /// Per-shard ingest watermarks for the shards a scope covers, in
+    /// ascending `StreamId` order.  The serving API's semantic query cache
+    /// snapshots these at insert time and compares them at lookup time: a
+    /// cached selection is reusable only while every touched shard's
+    /// watermark has advanced by at most the configured staleness bound.
+    pub fn watermarks(&self, scope: StreamScope) -> Result<Vec<(StreamId, u64)>> {
+        Ok(self
+            .scoped(scope)?
+            .iter()
+            .map(|s| {
+                let g = s.read().unwrap();
+                (g.stream(), g.watermark())
+            })
+            .collect())
+    }
+
     /// Total indexed vectors across every shard.
     pub fn total_indexed(&self) -> usize {
         self.shards.iter().map(|s| s.read().unwrap().len()).sum()
@@ -245,6 +261,39 @@ mod tests {
         let hole = [FrameId::new(StreamId(1), 99)];
         assert!(f.fetch_frames(&hole).is_err());
         assert!(f.fetch_frame(FrameId::new(StreamId(7), 0)).is_err());
+    }
+
+    #[test]
+    fn watermarks_follow_scope_and_inserts() {
+        let f = fabric(3);
+        assert_eq!(
+            f.watermarks(StreamScope::All).unwrap(),
+            vec![(StreamId(0), 0), (StreamId(1), 0), (StreamId(2), 0)]
+        );
+        {
+            let shard = f.shard(StreamId(1)).unwrap();
+            let mut g = shard.write().unwrap();
+            g.archive_frame(0, &Frame::filled(8, [0.5; 3]));
+            g.insert(
+                &[1.0, 0.0, 0.0, 0.0],
+                ClusterRecord {
+                    stream: StreamId(1),
+                    scene_id: 0,
+                    centroid_frame: 0,
+                    members: vec![0],
+                },
+            )
+            .unwrap();
+        }
+        assert_eq!(
+            f.watermarks(StreamScope::All).unwrap(),
+            vec![(StreamId(0), 0), (StreamId(1), 1), (StreamId(2), 0)]
+        );
+        assert_eq!(
+            f.watermarks(StreamScope::One(StreamId(1))).unwrap(),
+            vec![(StreamId(1), 1)]
+        );
+        assert!(f.watermarks(StreamScope::One(StreamId(9))).is_err());
     }
 
     #[test]

@@ -36,6 +36,11 @@ pub struct Hierarchy {
     records: Vec<ClusterRecord>,
     raw: Box<dyn RawStore>,
     frames_ingested: u64,
+    /// Monotone ingest watermark: total index inserts ever applied to this
+    /// shard.  Currently equal to `len()`, but kept as its own counter so
+    /// staleness checks (the serving API's semantic query cache) survive a
+    /// future compaction/eviction pass that shrinks the index.
+    watermark: u64,
 }
 
 impl Hierarchy {
@@ -58,7 +63,7 @@ impl Hierarchy {
             cfg.ivf_nlist,
             cfg.ivf_nprobe,
         )?;
-        Ok(Self { stream, index, records: Vec::new(), raw, frames_ingested: 0 })
+        Ok(Self { stream, index, records: Vec::new(), raw, frames_ingested: 0, watermark: 0 })
     }
 
     /// The camera stream this shard owns.
@@ -87,7 +92,15 @@ impl Hierarchy {
         let id = self.index.insert(embedding)?;
         debug_assert_eq!(id, self.records.len());
         self.records.push(ClusterRecord { members, ..record });
+        self.watermark += 1;
         Ok(id)
+    }
+
+    /// Monotone count of index inserts ever applied to this shard.  The
+    /// serving API's query cache snapshots this per touched shard and
+    /// treats an entry as stale once the watermark advances past a bound.
+    pub fn watermark(&self) -> u64 {
+        self.watermark
     }
 
     /// Similarity of the query vector against every indexed vector.
@@ -317,6 +330,31 @@ mod tests {
             .unwrap();
         }
         assert!((h.sparsity() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn watermark_counts_inserts_not_archives() {
+        let mut h = hierarchy();
+        let mut rng = Pcg64::seeded(5);
+        assert_eq!(h.watermark(), 0);
+        for i in 0..10u64 {
+            h.archive_frame(i, &Frame::filled(16, [0.5; 3]));
+        }
+        assert_eq!(h.watermark(), 0, "archiving alone must not advance the watermark");
+        for c in 0..3u64 {
+            let v = unit(&mut rng, 8);
+            h.insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(0),
+                    scene_id: c as usize,
+                    centroid_frame: c * 3,
+                    members: vec![c * 3, c * 3 + 1, c * 3 + 2],
+                },
+            )
+            .unwrap();
+        }
+        assert_eq!(h.watermark(), 3);
     }
 
     #[test]

@@ -1,17 +1,31 @@
-//! Serving metrics registry: counters + latency samples, shared across
-//! workers, with a printable snapshot (the `venus serve` status output).
+//! Serving metrics registry: per-lane admission counters + latency
+//! samples, shared across workers, with a printable snapshot (the
+//! `venus serve` status output).
+//!
+//! Admission accounting is per priority lane (interactive / batch), and
+//! deadline shedding is its own counter family — a shed query was
+//! accepted but never executed, so it participates in conservation
+//! (`accepted == completed + failed + deadline_shed` after drain) without
+//! polluting the rejection stats.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::api::Priority;
 use crate::util::stats::{fmt_duration, Samples};
+
+#[derive(Clone, Copy, Debug, Default)]
+struct LaneCounters {
+    accepted: u64,
+    rejected: u64,
+    completed: u64,
+    deadline_shed: u64,
+}
 
 #[derive(Debug, Default)]
 struct Inner {
-    accepted: u64,
-    rejected: u64,
+    lanes: [LaneCounters; 2],
     shutdown: u64,
-    completed: u64,
     failed: u64,
     queue_wait: Samples,
     edge_latency: Samples,
@@ -32,40 +46,50 @@ impl Default for Metrics {
     }
 }
 
-/// Immutable snapshot for reporting.  Latencies carry the p50/p95/p99
-/// tail the fabric bench and Fig. 12-style reporting need — a mean hides
-/// exactly the scatter-gather tail the sharded fabric is built to bound.
+/// One lane's admission/completion counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneSnapshot {
+    pub accepted: u64,
+    /// admission control: lane full, query turned away
+    pub rejected: u64,
+    pub completed: u64,
+    /// accepted but shed unexecuted at dequeue time (deadline passed)
+    pub deadline_shed: u64,
+}
+
+/// Immutable snapshot for reporting.  Latency percentiles are `None`
+/// until at least one query completed — a percentile over zero samples
+/// is meaningless, and reporting it as `0.0` silently reads as "instant"
+/// in dashboards.
 #[derive(Clone, Debug)]
 pub struct Snapshot {
-    pub accepted: u64,
-    /// admission control: queue full, query turned away
-    pub rejected: u64,
+    pub interactive: LaneSnapshot,
+    pub batch: LaneSnapshot,
     /// submissions that raced service shutdown (workers gone) — distinct
     /// from `rejected` so admission-control stats stay clean
     pub shutdown: u64,
-    pub completed: u64,
     pub failed: u64,
     pub uptime_s: f64,
-    pub queue_wait_p50_s: f64,
-    pub queue_wait_p95_s: f64,
-    pub queue_wait_p99_s: f64,
-    pub edge_p50_s: f64,
-    pub edge_p95_s: f64,
-    pub edge_p99_s: f64,
-    pub total_p50_s: f64,
-    pub total_p95_s: f64,
-    pub total_p99_s: f64,
+    pub queue_wait_p50_s: Option<f64>,
+    pub queue_wait_p95_s: Option<f64>,
+    pub queue_wait_p99_s: Option<f64>,
+    pub edge_p50_s: Option<f64>,
+    pub edge_p95_s: Option<f64>,
+    pub edge_p99_s: Option<f64>,
+    pub total_p50_s: Option<f64>,
+    pub total_p95_s: Option<f64>,
+    pub total_p99_s: Option<f64>,
     pub mean_frames: f64,
     pub throughput_qps: f64,
 }
 
 impl Metrics {
-    pub fn on_accepted(&self) {
-        self.inner.lock().unwrap().accepted += 1;
+    pub fn on_accepted(&self, lane: Priority) {
+        self.inner.lock().unwrap().lanes[lane.index()].accepted += 1;
     }
 
-    pub fn on_rejected(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+    pub fn on_rejected(&self, lane: Priority) {
+        self.inner.lock().unwrap().lanes[lane.index()].rejected += 1;
     }
 
     pub fn on_shutdown_race(&self) {
@@ -76,9 +100,20 @@ impl Metrics {
         self.inner.lock().unwrap().failed += 1;
     }
 
-    pub fn on_completed(&self, queue_wait_s: f64, edge_s: f64, total_s: f64, frames: usize) {
+    pub fn on_deadline_shed(&self, lane: Priority) {
+        self.inner.lock().unwrap().lanes[lane.index()].deadline_shed += 1;
+    }
+
+    pub fn on_completed(
+        &self,
+        lane: Priority,
+        queue_wait_s: f64,
+        edge_s: f64,
+        total_s: f64,
+        frames: usize,
+    ) {
         let mut m = self.inner.lock().unwrap();
-        m.completed += 1;
+        m.lanes[lane.index()].completed += 1;
         m.queue_wait.push(queue_wait_s);
         m.edge_latency.push(edge_s);
         m.total_latency.push(total_s);
@@ -88,50 +123,88 @@ impl Metrics {
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock().unwrap();
         let uptime = self.started.elapsed().as_secs_f64();
+        let pct = |s: &Samples, q: f64| -> Option<f64> {
+            if s.is_empty() {
+                None
+            } else {
+                Some(s.percentile(q))
+            }
+        };
+        let lane = |i: usize| LaneSnapshot {
+            accepted: m.lanes[i].accepted,
+            rejected: m.lanes[i].rejected,
+            completed: m.lanes[i].completed,
+            deadline_shed: m.lanes[i].deadline_shed,
+        };
+        let completed: u64 = m.lanes.iter().map(|l| l.completed).sum();
         Snapshot {
-            accepted: m.accepted,
-            rejected: m.rejected,
+            interactive: lane(Priority::Interactive.index()),
+            batch: lane(Priority::Batch.index()),
             shutdown: m.shutdown,
-            completed: m.completed,
             failed: m.failed,
             uptime_s: uptime,
-            queue_wait_p50_s: m.queue_wait.p50(),
-            queue_wait_p95_s: m.queue_wait.p95(),
-            queue_wait_p99_s: m.queue_wait.p99(),
-            edge_p50_s: m.edge_latency.p50(),
-            edge_p95_s: m.edge_latency.p95(),
-            edge_p99_s: m.edge_latency.p99(),
-            total_p50_s: m.total_latency.p50(),
-            total_p95_s: m.total_latency.p95(),
-            total_p99_s: m.total_latency.p99(),
+            queue_wait_p50_s: pct(&m.queue_wait, 50.0),
+            queue_wait_p95_s: pct(&m.queue_wait, 95.0),
+            queue_wait_p99_s: pct(&m.queue_wait, 99.0),
+            edge_p50_s: pct(&m.edge_latency, 50.0),
+            edge_p95_s: pct(&m.edge_latency, 95.0),
+            edge_p99_s: pct(&m.edge_latency, 99.0),
+            total_p50_s: pct(&m.total_latency, 50.0),
+            total_p95_s: pct(&m.total_latency, 95.0),
+            total_p99_s: pct(&m.total_latency, 99.0),
             mean_frames: m.frames_shipped.mean(),
-            throughput_qps: if uptime > 0.0 { m.completed as f64 / uptime } else { 0.0 },
+            throughput_qps: if uptime > 0.0 { completed as f64 / uptime } else { 0.0 },
         }
     }
 
-    /// Conservation invariant: accepted == completed + failed + in-flight.
-    /// (property-tested by the server tests with in-flight == 0 at join;
-    /// shutdown-raced submissions were never accepted, so they don't
-    /// participate)
+    /// Conservation invariant after drain: every accepted query either
+    /// completed, failed, or was deadline-shed.  (Shutdown-raced and
+    /// rejected submissions were never accepted, so they don't
+    /// participate.)
     pub fn conserved_after_drain(&self) -> bool {
         let m = self.inner.lock().unwrap();
-        m.accepted == m.completed + m.failed
+        let accepted: u64 = m.lanes.iter().map(|l| l.accepted).sum();
+        let settled: u64 =
+            m.lanes.iter().map(|l| l.completed + l.deadline_shed).sum::<u64>() + m.failed;
+        accepted == settled
     }
 }
 
 impl Snapshot {
+    pub fn accepted(&self) -> u64 {
+        self.interactive.accepted + self.batch.accepted
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.interactive.rejected + self.batch.rejected
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.interactive.completed + self.batch.completed
+    }
+
+    pub fn deadline_shed(&self) -> u64 {
+        self.interactive.deadline_shed + self.batch.deadline_shed
+    }
+
     pub fn render(&self) -> String {
+        let opt = |d: Option<f64>| d.map(fmt_duration).unwrap_or_else(|| "n/a".into());
         format!(
-            "queries: {} ok / {} failed / {} rejected / {} shutdown-raced | p50 {} p95 {} p99 {} (edge p50 {} p95 {}) | {:.1} q/s | {:.1} frames/query",
-            self.completed,
+            "queries: {} ok / {} failed / {} rejected / {} deadline-shed / {} shutdown-raced | lanes: interactive {}/{} batch {}/{} (done/accepted) | p50 {} p95 {} p99 {} (edge p50 {} p95 {}) | {:.1} q/s | {:.1} frames/query",
+            self.completed(),
             self.failed,
-            self.rejected,
+            self.rejected(),
+            self.deadline_shed(),
             self.shutdown,
-            fmt_duration(self.total_p50_s),
-            fmt_duration(self.total_p95_s),
-            fmt_duration(self.total_p99_s),
-            fmt_duration(self.edge_p50_s),
-            fmt_duration(self.edge_p95_s),
+            self.interactive.completed,
+            self.interactive.accepted,
+            self.batch.completed,
+            self.batch.accepted,
+            opt(self.total_p50_s),
+            opt(self.total_p95_s),
+            opt(self.total_p99_s),
+            opt(self.edge_p50_s),
+            opt(self.edge_p95_s),
             self.throughput_qps,
             self.mean_frames,
         )
@@ -146,33 +219,69 @@ mod tests {
     fn counters_and_percentiles() {
         let m = Metrics::default();
         for i in 0..10 {
-            m.on_accepted();
-            m.on_completed(0.001, 0.01, 0.1 * (i + 1) as f64, 16);
+            m.on_accepted(Priority::Interactive);
+            m.on_completed(Priority::Interactive, 0.001, 0.01, 0.1 * (i + 1) as f64, 16);
         }
-        m.on_accepted();
+        m.on_accepted(Priority::Batch);
         m.on_failed();
-        m.on_rejected();
+        m.on_rejected(Priority::Batch);
         m.on_shutdown_race();
         let s = m.snapshot();
-        assert_eq!(s.completed, 10);
+        assert_eq!(s.completed(), 10);
+        assert_eq!(s.interactive.completed, 10);
+        assert_eq!(s.batch.accepted, 1);
         assert_eq!(s.failed, 1);
-        assert_eq!(s.rejected, 1);
+        assert_eq!(s.rejected(), 1);
+        assert_eq!(s.batch.rejected, 1);
         assert_eq!(s.shutdown, 1);
-        assert!(s.total_p50_s >= 0.5 && s.total_p50_s <= 0.7);
+        let p50 = s.total_p50_s.unwrap();
+        assert!((0.5..=0.7).contains(&p50));
         // tail ordering: p50 ≤ p95 ≤ p99 ≤ max sample
         assert!(s.total_p50_s <= s.total_p95_s);
         assert!(s.total_p95_s <= s.total_p99_s);
-        assert!(s.total_p99_s <= 1.0 + 1e-9);
-        assert!(s.total_p95_s >= 0.9, "p95 of 0.1..=1.0 grid is 1.0, got {}", s.total_p95_s);
+        assert!(s.total_p99_s.unwrap() <= 1.0 + 1e-9);
+        assert!(s.total_p95_s.unwrap() >= 0.9);
         assert_eq!(s.mean_frames, 16.0);
+        assert!(m.conserved_after_drain());
+    }
+
+    #[test]
+    fn empty_snapshot_reports_no_percentiles() {
+        // zero completed queries: every percentile is None (not a silent
+        // 0.0 that reads as "instant"), counters are zero, render says n/a
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.completed(), 0);
+        assert_eq!(s.total_p50_s, None);
+        assert_eq!(s.total_p95_s, None);
+        assert_eq!(s.total_p99_s, None);
+        assert_eq!(s.edge_p50_s, None);
+        assert_eq!(s.queue_wait_p99_s, None);
+        assert_eq!(s.mean_frames, 0.0);
+        assert!(s.render().contains("n/a"));
         assert!(m.conserved_after_drain());
     }
 
     #[test]
     fn conservation_fails_with_inflight() {
         let m = Metrics::default();
-        m.on_accepted();
+        m.on_accepted(Priority::Interactive);
         assert!(!m.conserved_after_drain());
+    }
+
+    #[test]
+    fn deadline_shed_participates_in_conservation() {
+        let m = Metrics::default();
+        m.on_accepted(Priority::Batch);
+        m.on_accepted(Priority::Interactive);
+        m.on_deadline_shed(Priority::Batch);
+        assert!(!m.conserved_after_drain(), "one query still in flight");
+        m.on_completed(Priority::Interactive, 0.0, 0.01, 0.02, 4);
+        assert!(m.conserved_after_drain());
+        let s = m.snapshot();
+        assert_eq!(s.deadline_shed(), 1);
+        assert_eq!(s.batch.deadline_shed, 1);
+        assert_eq!(s.rejected(), 0, "shedding is not a rejection");
     }
 
     #[test]
@@ -181,7 +290,7 @@ mod tests {
         m.on_shutdown_race();
         m.on_shutdown_race();
         let s = m.snapshot();
-        assert_eq!(s.rejected, 0);
+        assert_eq!(s.rejected(), 0);
         assert_eq!(s.shutdown, 2);
         assert!(m.conserved_after_drain());
     }

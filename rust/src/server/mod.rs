@@ -1,31 +1,44 @@
-//! Online serving loop: multi-worker query service with admission
-//! control, per-query latency accounting, and a metrics registry.
+//! Online serving loop: multi-worker query service behind the typed
+//! Serving API v1 — priority-lane admission, deadline-aware shedding,
+//! a fabric-wide semantic query cache, per-query latency accounting,
+//! and a metrics registry.
 //!
 //! Worker threads each own a cheap query-engine front-end over the ONE
 //! process-shared embed backend (`backend::shared_default`) and the
-//! shared memory fabric — backends are never rebuilt per worker.  Queries
-//! enter through a bounded queue with an explicit stream scope; when the
-//! queue is full, `submit` rejects immediately (admission control)
-//! instead of building unbounded backlog, and a submission that races
-//! service shutdown reports [`SubmitError::Shutdown`] — a distinct
-//! condition, so admission-control stats stay clean.  Shards are behind
-//! per-stream `RwLock`s, so workers score/select concurrently (queries
-//! are read-only) and only contend with the ingestion writer of the
-//! stream(s) they actually touch.
+//! shared memory fabric — backends are never rebuilt per worker.
+//!
+//! Admission: queries enter one of two bounded lanes by
+//! [`Priority`](crate::api::Priority) — interactive traffic is always
+//! dequeued before batch traffic, and each lane rejects independently
+//! when full ([`ApiError::Rejected`]), so a flood of batch analytics can
+//! never starve or reject a human's query.  A request whose deadline
+//! passed while it sat queued is *shed at dequeue time* without
+//! executing ([`ApiError::DeadlineExceeded`], the `deadline_shed`
+//! metric): under overload the worker pool stops burning edge compute on
+//! answers nobody is waiting for.  A submission that races service
+//! shutdown reports [`ApiError::Shutdown`] — a distinct condition, so
+//! admission-control stats stay clean.
+//!
+//! Every worker shares one [`QueryCache`]: repeat and near-duplicate
+//! queries (the dominant pattern in online video QA traffic) skip the
+//! embed + scatter-gather hot path entirely — see
+//! [`crate::api::cache`] for the reuse/staleness protocol.
 
 pub mod metrics;
 
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{LaneSnapshot, Metrics, Snapshot};
 
-use std::fmt;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::api::cache::QueryCache;
+use crate::api::{ApiError, Evidence, Priority, QueryRequest, QueryResponse};
 use crate::backend;
 use crate::cloud::VlmClient;
 use crate::config::VenusConfig;
@@ -34,180 +47,412 @@ use crate::embed::EmbedEngine;
 use crate::memory::{MemoryFabric, StreamScope};
 use crate::net::{Link, Payload};
 
-/// A completed query with its latency accounting.
-#[derive(Clone, Debug)]
-pub struct QueryResult {
-    pub id: u64,
-    pub outcome: QueryOutcome,
-    pub queue_wait_s: f64,
-    pub upload_s: f64,
-    pub vlm_s: f64,
-}
-
-impl QueryResult {
-    pub fn total_s(&self) -> f64 {
-        self.queue_wait_s + self.outcome.timings.total_s() + self.upload_s + self.vlm_s
-    }
-}
-
-/// Why a submission did not enter the queue.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SubmitError {
-    /// Queue full: admission control turned the query away.  Retry later
-    /// (or shed load) — the service is healthy, just saturated.
-    Rejected,
-    /// The worker channel is disconnected: the service is shutting down.
-    /// Not an admission-control event; don't retry.
-    Shutdown,
-}
-
-impl fmt::Display for SubmitError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            SubmitError::Rejected => write!(f, "queue full: query rejected"),
-            SubmitError::Shutdown => write!(f, "service shutting down"),
-        }
-    }
-}
-
-impl std::error::Error for SubmitError {}
-
 struct Job {
     id: u64,
-    text: String,
-    scope: StreamScope,
+    request: QueryRequest,
     enqueued: Instant,
-    reply: SyncSender<Result<QueryResult>>,
+    /// absolute deadline resolved at submission
+    deadline: Option<Instant>,
+    reply: SyncSender<Result<QueryResponse, ApiError>>,
+}
+
+/// Two bounded FIFO lanes under one condvar: interactive pops first.
+struct Lanes {
+    state: Mutex<LaneState>,
+    cv: Condvar,
+    depth: [usize; 2],
+}
+
+struct LaneState {
+    queues: [VecDeque<Job>; 2],
+    open: bool,
+}
+
+enum PushError {
+    Full,
+    Closed,
+}
+
+impl Lanes {
+    fn new(interactive_depth: usize, batch_depth: usize) -> Self {
+        Self {
+            state: Mutex::new(LaneState {
+                queues: [VecDeque::new(), VecDeque::new()],
+                open: true,
+            }),
+            cv: Condvar::new(),
+            depth: [interactive_depth, batch_depth],
+        }
+    }
+
+    fn push(&self, lane: usize, job: Job) -> std::result::Result<(), PushError> {
+        let mut st = self.state.lock().unwrap();
+        if !st.open {
+            return Err(PushError::Closed);
+        }
+        if st.queues[lane].len() >= self.depth[lane] {
+            return Err(PushError::Full);
+        }
+        st.queues[lane].push_back(job);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: interactive lane first, then batch; `None` once the
+    /// lanes are closed AND drained (accepted work is always finished).
+    fn pop(&self) -> Option<Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            for q in st.queues.iter_mut() {
+                if let Some(job) = q.pop_front() {
+                    return Some(job);
+                }
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().open = false;
+        self.cv.notify_all();
+    }
 }
 
 /// The query service.
 pub struct Service {
-    tx: Option<SyncSender<Job>>,
+    lanes: Arc<Lanes>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    /// The fabric-wide semantic query cache every worker shares.
+    pub cache: Arc<QueryCache>,
     next_id: AtomicU64,
 }
 
 impl Service {
     /// Start `cfg.server.workers` workers over the shared memory fabric.
-    /// Every worker's engine shares the one process-wide backend.
+    /// Every worker's engine shares the one process-wide backend, and all
+    /// workers share one semantic query cache sized from `cfg.api`.
     pub fn start(cfg: &VenusConfig, fabric: Arc<MemoryFabric>, seed: u64) -> Result<Self> {
         let be = backend::shared_default()?;
-        let (tx, rx) = sync_channel::<Job>(cfg.server.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
+        let (interactive_depth, batch_depth) = cfg.lane_depths();
+        let lanes = Arc::new(Lanes::new(interactive_depth, batch_depth));
         let metrics = Arc::new(Metrics::default());
-        let mut workers = Vec::new();
+        let cache = Arc::new(QueryCache::from_config(&cfg.api));
+        // build every engine BEFORE spawning any thread: a fallible step
+        // after the first spawn would strand already-started workers on
+        // the lane condvar with no Service to close it
+        let mut engines = Vec::new();
         for w in 0..cfg.server.workers {
-            let engine = QueryEngine::new(
+            engines.push(QueryEngine::new(
                 EmbedEngine::new(Arc::clone(&be), cfg.ingest.aux_models)?,
                 Arc::clone(&fabric),
                 cfg.retrieval.clone(),
                 seed ^ ((w as u64) << 8),
-            );
-            let rx2 = Arc::clone(&rx);
+            ));
+        }
+        let mut workers = Vec::new();
+        for (w, engine) in engines.into_iter().enumerate() {
+            let lanes2 = Arc::clone(&lanes);
             let met = Arc::clone(&metrics);
+            let cache2 = Arc::clone(&cache);
             let link = Link::new(cfg.net.clone());
             let vlm = VlmClient::new(cfg.cloud.clone(), seed ^ 0xf00d ^ w as u64);
+            let fps = cfg.api.fps;
             workers.push(std::thread::spawn(move || {
-                worker_loop(engine, rx2, met, link, vlm)
+                worker_loop(engine, lanes2, met, link, vlm, cache2, fps)
             }));
         }
-        Ok(Self { tx: Some(tx), workers, metrics, next_id: AtomicU64::new(0) })
+        Ok(Self {
+            lanes,
+            workers,
+            metrics,
+            cache,
+            next_id: AtomicU64::new(0),
+        })
     }
 
-    /// Submit an all-streams query; returns a receiver for the result, or
-    /// the reason the submission didn't enter the queue.
-    pub fn submit(&self, text: &str) -> Result<Receiver<Result<QueryResult>>, SubmitError> {
-        self.submit_scoped(text, StreamScope::All)
+    /// Submit a typed request; returns a receiver for the structured
+    /// response, or the typed reason admission turned it away.
+    pub fn submit_request(
+        &self,
+        request: QueryRequest,
+    ) -> std::result::Result<Receiver<Result<QueryResponse, ApiError>>, ApiError> {
+        let lane = request.priority;
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let now = Instant::now();
+        let job = Job {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            deadline: request.deadline.map(|d| now + d),
+            request,
+            enqueued: now,
+            reply: reply_tx,
+        };
+        match self.lanes.push(lane.index(), job) {
+            Ok(()) => {
+                self.metrics.on_accepted(lane);
+                Ok(reply_rx)
+            }
+            Err(PushError::Full) => {
+                self.metrics.on_rejected(lane);
+                Err(ApiError::Rejected { lane })
+            }
+            Err(PushError::Closed) => {
+                self.metrics.on_shutdown_race();
+                Err(ApiError::Shutdown)
+            }
+        }
     }
 
-    /// Submit a query with an explicit stream scope.
+    /// Blocking convenience: submit a typed request and wait.
+    pub fn call(&self, request: QueryRequest) -> std::result::Result<QueryResponse, ApiError> {
+        let rx = self.submit_request(request)?;
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(ApiError::Shutdown),
+        }
+    }
+
+    /// Deprecated stringly shim over [`Service::submit_request`].
+    #[deprecated(note = "build a typed `QueryRequest` and use `submit_request`")]
+    pub fn submit(
+        &self,
+        text: &str,
+    ) -> std::result::Result<Receiver<Result<QueryResponse, ApiError>>, ApiError> {
+        self.submit_request(QueryRequest::new(text))
+    }
+
+    /// Deprecated stringly shim over [`Service::submit_request`].
+    #[deprecated(note = "build a typed `QueryRequest` and use `submit_request`")]
     pub fn submit_scoped(
         &self,
         text: &str,
         scope: StreamScope,
-    ) -> Result<Receiver<Result<QueryResult>>, SubmitError> {
-        let (reply_tx, reply_rx) = sync_channel(1);
-        let job = Job {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            text: text.to_string(),
-            scope,
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        };
-        match self.tx.as_ref().unwrap().try_send(job) {
-            Ok(()) => {
-                self.metrics.on_accepted();
-                Ok(reply_rx)
-            }
-            Err(TrySendError::Full(_)) => {
-                self.metrics.on_rejected();
-                Err(SubmitError::Rejected)
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                self.metrics.on_shutdown_race();
-                Err(SubmitError::Shutdown)
-            }
-        }
+    ) -> std::result::Result<Receiver<Result<QueryResponse, ApiError>>, ApiError> {
+        self.submit_request(QueryRequest::new(text).scope(scope))
     }
 
-    /// Blocking convenience: submit and wait.
-    pub fn query(&self, text: &str) -> Result<QueryResult> {
-        let rx = self.submit(text).map_err(anyhow::Error::new)?;
-        rx.recv()?
+    /// Deprecated stringly shim over [`Service::call`].
+    #[deprecated(note = "build a typed `QueryRequest` and use `call`")]
+    pub fn query(&self, text: &str) -> std::result::Result<QueryResponse, ApiError> {
+        self.call(QueryRequest::new(text))
     }
 
     /// Drain and stop all workers; returns the final metrics snapshot.
+    /// Accepted work is always finished (or deadline-shed) before the
+    /// workers exit.
     pub fn shutdown(mut self) -> Snapshot {
-        drop(self.tx.take());
+        self.close_and_join();
+        self.metrics.snapshot()
+    }
+
+    fn close_and_join(&mut self) {
+        self.lanes.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.metrics.snapshot()
+    }
+}
+
+/// Dropping the service without an explicit [`Service::shutdown`] (early
+/// return, error path, test teardown) must not strand the worker threads
+/// blocked on the lane condvar — the old `SyncSender`-based queue got
+/// this for free from channel disconnection, so the lanes must too.
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.close_and_join();
     }
 }
 
 fn worker_loop(
     mut engine: QueryEngine,
-    rx: Arc<Mutex<Receiver<Job>>>,
+    lanes: Arc<Lanes>,
     metrics: Arc<Metrics>,
     link: Link,
     vlm: VlmClient,
+    cache: Arc<QueryCache>,
+    fps: f64,
 ) {
-    loop {
-        let job = {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(j) => j,
-                Err(_) => return, // channel closed: drain complete
+    while let Some(job) = lanes.pop() {
+        let lane = job.request.priority;
+        // deadline-aware shedding: a query that aged out in the queue is
+        // answered with the typed error instead of burning edge compute
+        if let Some(deadline) = job.deadline {
+            if Instant::now() > deadline {
+                metrics.on_deadline_shed(lane);
+                let _ = job.reply.send(Err(ApiError::DeadlineExceeded));
+                continue;
             }
-        };
+        }
         let queue_wait_s = job.enqueued.elapsed().as_secs_f64();
-        match engine.retrieve_scoped(&job.text, job.scope) {
-            Ok(outcome) => {
+        let result = engine.retrieve_request(
+            &job.request.text,
+            job.request.scope,
+            job.request.mode,
+            job.request.budget,
+            Some(cache.as_ref()),
+        );
+        match result {
+            Ok((outcome, cache_status)) => {
                 let n = outcome.selection.frames.len();
                 let upload_s = link.round_trip_s(Payload::Frames(n));
-                let vlm_s =
-                    vlm.infer_latency_s(n, job.text.split_whitespace().count() * 2);
-                let result = QueryResult {
-                    id: job.id,
-                    outcome,
+                let vlm_s = vlm.infer_latency_s(n, job.request.approx_tokens());
+                let response = build_response(
+                    job.id,
+                    lane,
+                    cache_status,
+                    &outcome,
+                    fps,
                     queue_wait_s,
                     upload_s,
                     vlm_s,
-                };
+                );
                 metrics.on_completed(
+                    lane,
                     queue_wait_s,
-                    result.outcome.timings.total_s(),
-                    result.total_s(),
+                    outcome.timings.total_s(),
+                    response.total_s(),
                     n,
                 );
-                let _ = job.reply.send(Ok(result));
+                let _ = job.reply.send(Ok(response));
             }
             Err(e) => {
                 metrics.on_failed();
-                let _ = job.reply.send(Err(e));
+                let _ = job.reply.send(Err(ApiError::Engine(format!("{e:#}"))));
             }
         }
+    }
+}
+
+/// Assemble the wire response from an edge outcome: evidence entries
+/// carry the fabric-global frame id, its wall-clock position in the
+/// stream (`idx / fps`), and the Eq. 4–5 score that drew it.
+fn build_response(
+    id: u64,
+    priority: Priority,
+    cache: crate::api::cache::CacheStatus,
+    outcome: &QueryOutcome,
+    fps: f64,
+    queue_wait_s: f64,
+    upload_s: f64,
+    vlm_s: f64,
+) -> QueryResponse {
+    let evidence = outcome
+        .selection
+        .frames
+        .iter()
+        .enumerate()
+        .map(|(i, &frame)| Evidence {
+            frame,
+            time_s: frame.idx as f64 / fps,
+            score: outcome.frame_scores.get(i).copied().unwrap_or(0.0),
+        })
+        .collect();
+    QueryResponse {
+        id,
+        priority,
+        cache,
+        evidence,
+        draws: outcome.draws,
+        queue_wait_s,
+        edge: outcome.timings,
+        upload_s,
+        vlm_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe_job(id: u64, priority: Priority) -> (Job, Receiver<Result<QueryResponse, ApiError>>) {
+        let (tx, rx) = sync_channel(1);
+        let job = Job {
+            id,
+            request: QueryRequest::new(format!("probe {id}")).priority(priority),
+            enqueued: Instant::now(),
+            deadline: None,
+            reply: tx,
+        };
+        (job, rx)
+    }
+
+    #[test]
+    fn lanes_pop_interactive_before_batch_fifo_within() {
+        let lanes = Lanes::new(4, 4);
+        let mut rxs = Vec::new();
+        for (id, p) in [
+            (0, Priority::Batch),
+            (1, Priority::Batch),
+            (2, Priority::Interactive),
+            (3, Priority::Interactive),
+        ] {
+            let (job, rx) = probe_job(id, p);
+            lanes.push(p.index(), job).ok().unwrap();
+            rxs.push(rx);
+        }
+        let order: Vec<u64> = (0..4).map(|_| lanes.pop().unwrap().id).collect();
+        assert_eq!(order, vec![2, 3, 0, 1], "interactive first, FIFO within lanes");
+        drop(rxs);
+    }
+
+    #[test]
+    fn lanes_reject_independently_when_full() {
+        let lanes = Lanes::new(1, 2);
+        let (j, _r1) = probe_job(0, Priority::Interactive);
+        assert!(lanes.push(0, j).is_ok());
+        let (j, _r2) = probe_job(1, Priority::Interactive);
+        assert!(matches!(lanes.push(0, j), Err(PushError::Full)));
+        // the batch lane still has room
+        let (j, _r3) = probe_job(2, Priority::Batch);
+        assert!(lanes.push(1, j).is_ok());
+    }
+
+    #[test]
+    fn closed_lanes_drain_then_end() {
+        let lanes = Lanes::new(4, 4);
+        let (j, _rx) = probe_job(7, Priority::Batch);
+        lanes.push(1, j).ok().unwrap();
+        lanes.close();
+        let (j, _rx2) = probe_job(8, Priority::Interactive);
+        assert!(matches!(lanes.push(0, j), Err(PushError::Closed)));
+        // accepted work is still handed out after close...
+        assert_eq!(lanes.pop().unwrap().id, 7);
+        // ...and only then does pop signal drain-complete
+        assert!(lanes.pop().is_none());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn stringly_shims_forward_to_the_typed_path() {
+        // run the deprecated string entries against a live (empty-fabric)
+        // service: they must produce typed responses and share the
+        // service's query cache with the typed path
+        let cfg = VenusConfig::default();
+        let d = EmbedEngine::default_backend(false).unwrap().d_embed();
+        let raws: Vec<Box<dyn crate::memory::RawStore>> =
+            vec![Box::new(crate::memory::InMemoryRaw::new(8))];
+        let fabric = Arc::new(MemoryFabric::new(&cfg.memory, d, raws).unwrap());
+        let service = Service::start(&cfg, fabric, 3).unwrap();
+
+        let resp = service.submit("hello there").unwrap().recv().unwrap().unwrap();
+        assert!(resp.evidence.is_empty(), "empty fabric yields empty evidence");
+        let resp2 = service.query("hello there").unwrap();
+        assert!(resp2.cache.is_hit(), "shims share the service's query cache");
+        let resp3 = service
+            .submit_scoped("hello there", StreamScope::All)
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert!(resp3.cache.is_hit());
+
+        let snap = service.shutdown();
+        assert_eq!(snap.completed(), 3);
+        assert_eq!(snap.failed, 0);
     }
 }

@@ -1,0 +1,287 @@
+//! Serving API v1 integration properties: semantic query-cache
+//! correctness against a real engine (hit == cold selection, staleness
+//! invalidation, scope isolation), deadline shedding, and priority-lane
+//! accounting — all over the real native embed backend.
+
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use venus::api::{ApiError, CacheStatus, Client, Priority, QueryCache, QueryRequest};
+use venus::config::{MemoryConfig, RetrievalConfig, VenusConfig};
+use venus::coordinator::query::{QueryEngine, RetrievalMode};
+use venus::embed::EmbedEngine;
+use venus::memory::{
+    ClusterRecord, Hierarchy, InMemoryRaw, MemoryFabric, RawStore, StreamId, StreamScope,
+};
+use venus::server::Service;
+use venus::util::rng::Pcg64;
+use venus::video::frame::Frame;
+
+/// A deterministic fabric: `streams` shards, each with `clusters`
+/// random-unit-vector records over 4-frame clusters.
+fn seeded_fabric(d: usize, streams: usize, clusters: u64, seed: u64) -> Arc<MemoryFabric> {
+    let raws: Vec<Box<dyn RawStore>> =
+        (0..streams).map(|_| Box::new(InMemoryRaw::new(8)) as Box<dyn RawStore>).collect();
+    let fabric = Arc::new(MemoryFabric::new(&MemoryConfig::default(), d, raws).unwrap());
+    let mut rng = Pcg64::seeded(seed);
+    for sid in 0..streams as u16 {
+        let shard = fabric.shard(StreamId(sid)).unwrap();
+        let mut g = shard.write().unwrap();
+        for c in 0..clusters {
+            for f in c * 4..(c + 1) * 4 {
+                g.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+            }
+            let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            venus::util::l2_normalize(&mut v);
+            g.insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(sid),
+                    scene_id: c as usize,
+                    centroid_frame: c * 4,
+                    members: (c * 4..(c + 1) * 4).collect(),
+                },
+            )
+            .unwrap();
+        }
+    }
+    fabric
+}
+
+/// Append one extra cluster to a shard (advances its ingest watermark).
+fn grow_shard(memory: &Arc<RwLock<Hierarchy>>, d: usize, rng: &mut Pcg64) {
+    let mut g = memory.write().unwrap();
+    let start = g.frames_ingested();
+    for f in start..start + 4 {
+        g.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+    }
+    let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+    venus::util::l2_normalize(&mut v);
+    let stream = g.stream();
+    g.insert(
+        &v,
+        ClusterRecord {
+            stream,
+            scene_id: (start / 4) as usize,
+            centroid_frame: start,
+            members: (start..start + 4).collect(),
+        },
+    )
+    .unwrap();
+}
+
+fn engine_over(fabric: &Arc<MemoryFabric>, seed: u64) -> QueryEngine {
+    QueryEngine::new(
+        EmbedEngine::default_backend(false).unwrap(),
+        Arc::clone(fabric),
+        RetrievalConfig::default(),
+        seed,
+    )
+}
+
+/// Property: with no ingest in between, a cache hit returns exactly the
+/// selection the cold query produced — same frames, same scores, same
+/// draw count — for every retrieval mode and scope.
+#[test]
+fn cache_hit_replays_the_cold_selection_when_no_ingest() {
+    let d = EmbedEngine::default_backend(false).unwrap().d_embed();
+    let fabric = seeded_fabric(d, 2, 10, 0xa11);
+    let mut qe = engine_over(&fabric, 5);
+    let cache = QueryCache::new(64, 0.99, 1_000);
+
+    let cases = [
+        (StreamScope::All, RetrievalMode::Akr),
+        (StreamScope::All, RetrievalMode::FixedSampling(8)),
+        (StreamScope::One(StreamId(1)), RetrievalMode::FixedSampling(8)),
+        (StreamScope::All, RetrievalMode::TopK(4)),
+    ];
+    for (scope, mode) in cases {
+        let text = format!("what happened with concept01 under {scope:?} {mode:?}");
+        let (cold, status) = qe
+            .retrieve_request(&text, scope, Some(mode), None, Some(&cache))
+            .unwrap();
+        assert_eq!(status, CacheStatus::Miss, "{scope:?} {mode:?}");
+        let (warm, status) = qe
+            .retrieve_request(&text, scope, Some(mode), None, Some(&cache))
+            .unwrap();
+        assert_eq!(status, CacheStatus::HitExact, "{scope:?} {mode:?}");
+        assert_eq!(warm.selection.frames, cold.selection.frames, "{scope:?} {mode:?}");
+        assert_eq!(warm.frame_scores, cold.frame_scores, "{scope:?} {mode:?}");
+        assert_eq!(warm.draws, cold.draws, "{scope:?} {mode:?}");
+        assert_eq!(
+            warm.timings.total_s(),
+            0.0,
+            "{scope:?} {mode:?}: exact hit skips the whole edge path"
+        );
+    }
+    assert_eq!(cache.stats().hits_exact, cases.len() as u64);
+}
+
+/// Property: advancing a *touched* shard past the staleness bound
+/// invalidates the entry (the repeat re-runs cold); advancing an
+/// *untouched* shard leaves a scoped entry valid.
+#[test]
+fn ingest_watermarks_bound_cache_reuse() {
+    let d = EmbedEngine::default_backend(false).unwrap().d_embed();
+    let fabric = seeded_fabric(d, 2, 8, 0xbee);
+    let mut qe = engine_over(&fabric, 7);
+    let max_stale = 2u64;
+    let cache = QueryCache::new(64, 0.99, max_stale);
+    let mut rng = Pcg64::seeded(99);
+    let mode = Some(RetrievalMode::FixedSampling(8));
+
+    // an All-scope entry touches both shards
+    let text = "what happened with concept01";
+    let (_, status) = qe
+        .retrieve_request(text, StreamScope::All, mode, None, Some(&cache))
+        .unwrap();
+    assert_eq!(status, CacheStatus::Miss);
+
+    // within the bound: still a hit
+    grow_shard(fabric.shard(StreamId(0)).unwrap(), d, &mut rng);
+    let (_, status) = qe
+        .retrieve_request(text, StreamScope::All, mode, None, Some(&cache))
+        .unwrap();
+    assert_eq!(status, CacheStatus::HitExact, "within the staleness bound");
+
+    // past the bound on shard 0: the All-scope entry is invalidated
+    for _ in 0..max_stale {
+        grow_shard(fabric.shard(StreamId(0)).unwrap(), d, &mut rng);
+    }
+    let (_, status) = qe
+        .retrieve_request(text, StreamScope::All, mode, None, Some(&cache))
+        .unwrap();
+    assert_eq!(status, CacheStatus::Miss, "touched shard advanced past the bound");
+    assert_eq!(cache.stats().invalidated, 1);
+
+    // a One(1)-scoped entry does not care how much shard 0 ingests
+    let scoped = "what is on camera one";
+    let one = StreamScope::One(StreamId(1));
+    let (_, status) = qe.retrieve_request(scoped, one, mode, None, Some(&cache)).unwrap();
+    assert_eq!(status, CacheStatus::Miss);
+    for _ in 0..10 {
+        grow_shard(fabric.shard(StreamId(0)).unwrap(), d, &mut rng);
+    }
+    let (_, status) = qe.retrieve_request(scoped, one, mode, None, Some(&cache)).unwrap();
+    assert_eq!(status, CacheStatus::HitExact, "untouched shards don't invalidate");
+    // ...but its own shard does
+    for _ in 0..max_stale + 1 {
+        grow_shard(fabric.shard(StreamId(1)).unwrap(), d, &mut rng);
+    }
+    let (_, status) = qe.retrieve_request(scoped, one, mode, None, Some(&cache)).unwrap();
+    assert_eq!(status, CacheStatus::Miss);
+    assert_eq!(cache.stats().invalidated, 2);
+}
+
+/// Deadline shedding: queries whose deadline passed while queued are
+/// answered with the typed error, never executed, and participate in
+/// conservation via the `deadline_shed` counters.
+#[test]
+fn expired_deadlines_shed_at_dequeue() {
+    let d = EmbedEngine::default_backend(false).unwrap().d_embed();
+    let fabric = seeded_fabric(d, 1, 4, 0xdead);
+    let mut cfg = VenusConfig::default();
+    cfg.server.workers = 1;
+    let service = Service::start(&cfg, fabric, 31).unwrap();
+
+    let mut receivers = Vec::new();
+    for i in 0..6 {
+        let request = QueryRequest::new(format!("doomed question {i}"))
+            .priority(Priority::Batch)
+            .deadline(Duration::ZERO);
+        receivers.push(service.submit_request(request).expect("lane accepts"));
+    }
+    let mut shed = 0u64;
+    for rx in receivers {
+        match rx.recv().unwrap() {
+            Err(ApiError::DeadlineExceeded) => shed += 1,
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+    assert_eq!(shed, 6);
+    assert!(service.metrics.conserved_after_drain());
+    let snap = service.shutdown();
+    assert_eq!(snap.deadline_shed(), 6);
+    assert_eq!(snap.batch.deadline_shed, 6);
+    assert_eq!(snap.completed(), 0);
+    assert_eq!(snap.total_p50_s, None, "nothing completed: percentiles are None");
+    assert_eq!(snap.rejected(), 0, "shedding never pollutes rejection stats");
+}
+
+/// Sessions record their turns; mixed-priority traffic lands in the
+/// right lane counters; generous deadlines never shed.
+#[test]
+fn sessions_record_history_and_lanes_account_traffic() {
+    let d = EmbedEngine::default_backend(false).unwrap().d_embed();
+    let fabric = seeded_fabric(d, 1, 6, 0x5e55);
+    let cfg = VenusConfig::default();
+    let service = Service::start(&cfg, fabric, 17).unwrap();
+    let client = Client::new(&service);
+    let mut session = client.session();
+
+    let first = session
+        .ask(
+            QueryRequest::new("what happened with concept01")
+                .priority(Priority::Interactive)
+                .deadline(Duration::from_secs(60)),
+        )
+        .unwrap();
+    assert_eq!(first.cache, CacheStatus::Miss);
+    assert!(!first.evidence.is_empty());
+    // evidence is structured: stream-tagged, timestamped, scored
+    for e in &first.evidence {
+        assert_eq!(e.stream(), StreamId(0));
+        assert!((e.time_s - e.frame.idx as f64 / cfg.api.fps).abs() < 1e-12);
+        assert!(e.score > 0.0);
+    }
+
+    let warm = session
+        .ask(QueryRequest::new("what happened with concept01").priority(Priority::Batch))
+        .unwrap();
+    assert!(warm.cache.is_hit());
+    assert_eq!(warm.frame_indices(), first.frame_indices());
+
+    assert_eq!(session.history().len(), 2);
+    assert_eq!(session.cache_hits(), 1);
+    assert_eq!(session.errors(), 0);
+    assert_eq!(session.id(), 0);
+    assert_eq!(client.session().id(), 1, "session ids are per-client unique");
+    assert!(client.cache_stats().hits() >= 1);
+
+    let snap = service.shutdown();
+    assert_eq!(snap.interactive.completed, 1);
+    assert_eq!(snap.batch.completed, 1);
+    assert_eq!(snap.deadline_shed(), 0);
+}
+
+/// The typed request survives the JSON wire format end-to-end: parse a
+/// request off the wire, serve it, and re-encode the response.
+#[test]
+fn wire_round_trip_serves_a_parsed_request() {
+    let d = EmbedEngine::default_backend(false).unwrap().d_embed();
+    let fabric = seeded_fabric(d, 2, 6, 0x31e);
+    let cfg = VenusConfig::default();
+    let service = Service::start(&cfg, fabric, 13).unwrap();
+
+    let wire = r#"{
+        "text": "what happened with concept01",
+        "scope": {"one": 1},
+        "mode": {"fixed_sampling": 6},
+        "budget": 4,
+        "priority": "interactive",
+        "deadline_ms": 60000
+    }"#;
+    let request = QueryRequest::from_json_str(wire).unwrap();
+    assert_eq!(request.scope, StreamScope::One(StreamId(1)));
+    assert_eq!(request.budget, Some(4));
+
+    let response = service.call(request).unwrap();
+    assert_eq!(response.draws, 4, "budget override reached the engine");
+    assert!(response.streams().iter().all(|&s| s == StreamId(1)), "scope respected");
+
+    let encoded = response.to_json().to_string();
+    let decoded = venus::api::QueryResponse::from_json_str(&encoded).unwrap();
+    assert_eq!(decoded.frame_indices(), response.frame_indices());
+    assert_eq!(decoded.cache, response.cache);
+    service.shutdown();
+}

@@ -7,6 +7,7 @@
 
 use std::sync::{Arc, RwLock};
 
+use venus::api::{ApiError, Priority, QueryRequest};
 use venus::backend::{self, EmbedBackend};
 use venus::cloud::SelectionStats;
 use venus::config::VenusConfig;
@@ -14,7 +15,7 @@ use venus::coordinator::query::{QueryEngine, RetrievalMode};
 use venus::embed::EmbedEngine;
 use venus::ingest::Pipeline;
 use venus::memory::{Hierarchy, InMemoryRaw, MemoryFabric};
-use venus::server::{Service, SubmitError};
+use venus::server::Service;
 use venus::video::synth::{SynthConfig, VideoSynth};
 use venus::video::workload::{DatasetPreset, WorkloadGen};
 
@@ -165,7 +166,6 @@ fn serving_loop_completes_batch_with_conservation() {
     let synth = build_synth(30.0, 10);
     let mut cfg = VenusConfig::default();
     cfg.server.workers = 2;
-    cfg.server.queue_depth = 64;
     let (memory, _) = ingest_all(&synth, &cfg);
     let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
 
@@ -173,23 +173,40 @@ fn serving_loop_completes_batch_with_conservation() {
     let queries =
         WorkloadGen::new(6, DatasetPreset::VideoMmeShort).generate(synth.script(), 16);
     let mut receivers = Vec::new();
-    for q in &queries {
-        receivers.push(service.submit(&q.text).expect("queue should accept"));
+    for (i, q) in queries.iter().enumerate() {
+        // mixed-priority typed traffic
+        let priority = if i % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+        let request = QueryRequest::new(&q.text).priority(priority);
+        receivers.push(service.submit_request(request).expect("queue should accept"));
     }
     let mut ok = 0;
     for rx in receivers {
         let res = rx.recv().unwrap().unwrap();
-        assert!(!res.outcome.selection.frames.is_empty());
+        assert!(!res.evidence.is_empty());
+        assert_eq!(res.evidence.len(), res.frame_indices().len());
         assert!(res.total_s() > 0.0);
         ok += 1;
     }
     assert_eq!(ok, queries.len());
     assert!(service.metrics.conserved_after_drain());
+
+    // replay the same texts: every one is already cached, so every
+    // response must report a cache hit and skip the edge hot path
+    for q in &queries {
+        let warm = service.call(QueryRequest::new(&q.text)).unwrap();
+        assert!(warm.cache.is_hit(), "warm repeat must hit the query cache");
+        assert_eq!(warm.edge.search_s + warm.edge.select_s, 0.0);
+    }
+    assert!(service.cache.stats().hits() >= queries.len() as u64);
+
     let snap = service.shutdown();
-    assert_eq!(snap.completed, queries.len() as u64);
+    assert_eq!(snap.completed(), 2 * queries.len() as u64);
+    assert!(snap.interactive.completed > 0 && snap.batch.completed > 0);
     assert_eq!(snap.failed, 0);
     assert_eq!(snap.shutdown, 0);
+    assert_eq!(snap.deadline_shed(), 0);
     // tail percentiles populated and ordered
+    assert!(snap.total_p50_s.is_some());
     assert!(snap.total_p50_s <= snap.total_p95_s);
     assert!(snap.total_p95_s <= snap.total_p99_s);
 }
@@ -274,33 +291,45 @@ fn embed_engine_pads_odd_batches_consistently() {
 }
 
 #[test]
-fn admission_control_rejects_on_overflow() {
+fn admission_control_rejects_per_lane_on_overflow() {
     let synth = build_synth(20.0, 12);
     let mut cfg = VenusConfig::default();
     cfg.server.workers = 1;
-    cfg.server.queue_depth = 2;
+    cfg.api.batch_depth = Some(2);
+    cfg.api.interactive_depth = Some(64);
     let (memory, _) = ingest_all(&synth, &cfg);
     let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
 
     let service = Service::start(&cfg, Arc::clone(&fabric), 23).unwrap();
-    // flood: far more than depth; some must be rejected, none lost
+    // flood the batch lane: far more than its depth; some must be
+    // rejected, none lost — and the interactive lane stays open
     let mut accepted = Vec::new();
-    let mut rejected = 0;
+    let mut rejected = 0u64;
     for i in 0..40 {
-        match service.submit(&format!("query number {i} about concept01")) {
+        let request = QueryRequest::new(format!("query number {i} about concept01"))
+            .priority(Priority::Batch);
+        match service.submit_request(request) {
             Ok(rx) => accepted.push(rx),
-            Err(SubmitError::Rejected) => rejected += 1,
-            Err(SubmitError::Shutdown) => {
-                panic!("live service must never report shutdown")
+            Err(ApiError::Rejected { lane }) => {
+                assert_eq!(lane, Priority::Batch);
+                rejected += 1;
             }
+            Err(e) => panic!("live service must only reject on overflow, got {e}"),
         }
     }
+    // the full batch lane never blocks an interactive submission
+    let interactive = service
+        .submit_request(QueryRequest::new("urgent question about concept01"))
+        .expect("interactive lane has room");
     for rx in accepted {
         let _ = rx.recv().unwrap();
     }
-    assert!(rejected > 0, "queue depth 2 must reject under flood");
+    interactive.recv().unwrap().unwrap();
+    assert!(rejected > 0, "batch depth 2 must reject under flood");
     assert!(service.metrics.conserved_after_drain());
     let snap = service.shutdown();
-    assert_eq!(snap.rejected, rejected);
+    assert_eq!(snap.rejected(), rejected);
+    assert_eq!(snap.batch.rejected, rejected);
+    assert_eq!(snap.interactive.rejected, 0);
     assert_eq!(snap.shutdown, 0, "no shutdown races in a live flood");
 }
