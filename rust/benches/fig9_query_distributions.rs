@@ -76,12 +76,14 @@ fn main() {
         // bar chart of the top 12
         for &(i, p) in top.iter().take(12) {
             let bar = "█".repeat(((p * 120.0).round() as usize).max(1).min(60));
-            println!(
-                "  idx {:>4} (scene {:>3}) p={:.3} {bar}",
-                i,
-                case.memory.read().unwrap().record(i).scene_id,
-                p
-            );
+            let scene = case
+                .memory
+                .read()
+                .unwrap()
+                .record(i)
+                .map(|r| r.scene_id)
+                .expect("scored index has a record");
+            println!("  idx {:>4} (scene {:>3}) p={:.3} {bar}", i, scene, p);
         }
     }
     note("paper shape: localized → concentrated mass (few samples suffice);");

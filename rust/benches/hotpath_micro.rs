@@ -87,7 +87,7 @@ fn main() {
         .unwrap();
     let n_clusters = 4096;
     for i in 0..(n_clusters as u64 * 4) {
-        mem.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+        mem.archive_frame(i, &Frame::filled(8, [0.5; 3])).unwrap();
     }
     let vs = unit_vecs(n_clusters, 64, 4);
     for (c, v) in vs.iter().enumerate() {
@@ -104,7 +104,7 @@ fn main() {
     }
     let scores: Vec<f32> = {
         let mut s = Vec::new();
-        mem.score_all(&vs[100], &mut s);
+        mem.score_all(&vs[100], &mut s).unwrap();
         s
     };
     let mut rng = Pcg64::seeded(5);

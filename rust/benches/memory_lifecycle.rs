@@ -1,0 +1,160 @@
+//! Memory-lifecycle bench: what the durable tiered memory costs.
+//!
+//! Phase 1 — sustained ingest of N clusters into (a) the legacy pure-RAM
+//! shard, (b) a durable shard with an unbounded hot tier (WAL + sealing
+//! overhead only), and (c) a durable shard with a hot budget ~17% of the
+//! working set (sealing + steady eviction).  Reported as inserts/s: the
+//! eviction overhead on ingest throughput.
+//!
+//! Phase 2 — query latency p50/p95 of the Eq. 4–5 score+sample path over
+//! the all-hot shard vs the mostly-cold shard (per-segment scans through
+//! the LRU block cache), plus the cold-tier hit rate.
+//!
+//! Run: `cargo bench --bench memory_lifecycle`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use venus::config::MemoryConfig;
+use venus::memory::{ClusterRecord, Hierarchy, InMemoryRaw, StreamId};
+use venus::retrieval::{sample_retrieve, shortlist_mask};
+use venus::util::rng::Pcg64;
+use venus::util::stats::{fmt_bytes, Samples};
+use venus::video::frame::Frame;
+
+const N: u64 = 3_000;
+const D: usize = 64;
+const FRAME: usize = 16;
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let path = std::env::temp_dir().join(format!(
+            "venus-lifecycle-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).unwrap();
+        Self(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn unit(rng: &mut Pcg64) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..D).map(|_| rng.normal()).collect();
+    venus::util::l2_normalize(&mut v);
+    v
+}
+
+/// Sustained ingest: N two-frame clusters; returns inserts/s.
+fn ingest(h: &mut Hierarchy, seed: u64) -> f64 {
+    let mut rng = Pcg64::seeded(seed);
+    let t0 = Instant::now();
+    for c in 0..N {
+        for f in c * 2..(c + 1) * 2 {
+            h.archive_frame(f, &Frame::filled(FRAME, [0.5; 3])).unwrap();
+        }
+        let v = unit(&mut rng);
+        h.insert(
+            &v,
+            ClusterRecord {
+                stream: StreamId(0),
+                scene_id: c as usize,
+                centroid_frame: c * 2,
+                members: vec![c * 2, c * 2 + 1],
+            },
+        )
+        .unwrap();
+    }
+    N as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// p50/p95 of the score+sample query stage over a shard.
+fn query_latency(h: &Hierarchy, queries: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Pcg64::seeded(seed);
+    let mut lat = Samples::default();
+    let mut scores = Vec::new();
+    for _ in 0..queries {
+        let q = unit(&mut rng);
+        let t0 = Instant::now();
+        h.score_all(&q, &mut scores).unwrap();
+        let masked = shortlist_mask(&scores, 128);
+        let sel = sample_retrieve(h, &masked, 0.12, 16, &mut rng);
+        std::hint::black_box(sel.frames.len());
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    (lat.p50(), lat.p95())
+}
+
+fn main() {
+    let tmp = TempDir::new("bench");
+    let budget =
+        500 * (D * 4 + std::mem::size_of::<ClusterRecord>() + 2 * 8);
+    let base = MemoryConfig { segment_records: 256, cold_cache_segments: 4, ..Default::default() };
+
+    println!("# memory_lifecycle — durable tiered memory costs");
+    println!("# {N} clusters, d={D}, segment_records={}, hot budget {}", base.segment_records, fmt_bytes(budget));
+    println!();
+
+    // (a) pure RAM (legacy unbounded shard)
+    let mut ram =
+        Hierarchy::new(&base, D, Box::new(InMemoryRaw::new(FRAME))).unwrap();
+    let ram_fps = ingest(&mut ram, 1);
+
+    // (b) durable, unbounded hot tier: WAL + sealing overhead only
+    let mut hot =
+        Hierarchy::durable(&base, D, StreamId(0), &tmp.0.join("hot"), FRAME).unwrap();
+    let hot_fps = ingest(&mut hot, 1);
+
+    // (c) durable, bounded hot tier: sealing + steady eviction
+    let bounded_cfg = MemoryConfig { hot_budget_bytes: budget, ..base.clone() };
+    let mut cold =
+        Hierarchy::durable(&bounded_cfg, D, StreamId(0), &tmp.0.join("cold"), FRAME)
+            .unwrap();
+    let cold_fps = ingest(&mut cold, 1);
+
+    println!("ingest throughput (inserts/s):");
+    println!("  pure-RAM shard          {ram_fps:>10.0}");
+    println!(
+        "  durable, unbounded hot  {hot_fps:>10.0}  ({:.1}% of RAM)",
+        100.0 * hot_fps / ram_fps
+    );
+    println!(
+        "  durable, {:>9} hot  {cold_fps:>10.0}  ({:.1}% of RAM — eviction overhead)",
+        fmt_bytes(budget),
+        100.0 * cold_fps / ram_fps
+    );
+    println!();
+
+    let ts = cold.tier_stats();
+    println!(
+        "bounded shard after ingest: hot {} ({} rec) / cold {} segments ({} rec), {} demotions",
+        fmt_bytes(ts.hot_bytes),
+        ts.hot_records,
+        ts.cold_segments,
+        ts.cold_records,
+        ts.evictions
+    );
+    assert!(ts.hot_bytes <= budget, "hot tier exceeded its budget");
+    println!();
+
+    let (hp50, hp95) = query_latency(&hot, 100, 9);
+    let (cp50, cp95) = query_latency(&cold, 100, 9);
+    let ts = cold.tier_stats();
+    println!("query score+sample latency over {N} records:");
+    println!("  all-hot     p50 {:>9.1} µs   p95 {:>9.1} µs", hp50 * 1e6, hp95 * 1e6);
+    println!(
+        "  mostly-cold p50 {:>9.1} µs   p95 {:>9.1} µs   (cold-hit rate {})",
+        cp50 * 1e6,
+        cp95 * 1e6,
+        ts.cold_hit_rate()
+            .map(|r| format!("{:.0}%", r * 100.0))
+            .unwrap_or_else(|| "n/a".into())
+    );
+}

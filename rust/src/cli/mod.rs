@@ -168,6 +168,11 @@ fn serve(args: &[String]) -> Result<()> {
             "deadline-ms",
             "per-query deadline in milliseconds (0 = none)",
             Some("0"),
+        )
+        .flag(
+            "data-dir",
+            "durable memory root: first run ingests + persists, later runs recover from disk",
+            Some(""),
         );
     let parsed = spec.parse(args)?;
     let mut cfg = load_config(&parsed)?;
@@ -181,6 +186,10 @@ fn serve(args: &[String]) -> Result<()> {
         0 => cfg.fabric.streams,
         n => n,
     };
+    let data_dir = parsed
+        .get("data-dir")
+        .filter(|p| !p.is_empty())
+        .map(std::path::PathBuf::from);
 
     // build the typed request mix: alternating priorities (even slots are
     // a waiting human, odd slots are batch analytics), optional deadline
@@ -198,27 +207,49 @@ fn serve(args: &[String]) -> Result<()> {
 
     let texts: Vec<String>;
     let service;
+    let fabric;
     if streams <= 1 {
         // single-camera deployment: the paper's serving loop
-        let case = crate::eval::prepare_case(preset, &cfg, n_queries, seed)?;
-        eprintln!(
-            "memory ready: {} index vectors over {} frames",
-            case.memory.read().unwrap().len(),
-            case.ingest_stats.frames
-        );
+        let case =
+            crate::eval::prepare_case_at(preset, &cfg, n_queries, seed, data_dir.as_deref())?;
+        if case.ingest_stats.frames == 0 && case.memory.read().unwrap().len() > 0 {
+            eprintln!(
+                "memory recovered from {}: {} index vectors over {} frames (ingest skipped)",
+                data_dir.as_deref().unwrap_or_else(|| std::path::Path::new("?")).display(),
+                case.memory.read().unwrap().len(),
+                case.memory.read().unwrap().frames_ingested()
+            );
+        } else {
+            eprintln!(
+                "memory ready: {} index vectors over {} frames",
+                case.memory.read().unwrap().len(),
+                case.ingest_stats.frames
+            );
+        }
         texts = case.queries.iter().map(|q| q.text.clone()).collect();
         // evidence timestamps follow the stream's real frame rate
         cfg.api.fps = case.synth.config().fps;
         service = crate::server::Service::start(&cfg, Arc::clone(&case.fabric), seed)?;
+        fabric = case.fabric;
     } else {
         // multi-camera fabric: K streams ingested concurrently through one
         // shared embed pool, then the query mix replays with All scope
         // (cross-camera answers) — `One` per-stream scoping is exercised
         // by `examples/multi_camera.rs`.
         let per_stream = ((n_queries + streams - 1) / streams).max(1);
-        let case = crate::eval::prepare_multi_case(preset, &cfg, streams, per_stream, seed)?;
+        let case = crate::eval::prepare_multi_case_at(
+            preset,
+            &cfg,
+            streams,
+            per_stream,
+            seed,
+            data_dir.as_deref(),
+        )?;
+        let recovered = case.ingest_stats.iter().all(|s| s.frames == 0)
+            && case.fabric.total_indexed() > 0;
         eprintln!(
-            "fabric ready: {} streams, {} index vectors over {} frames",
+            "fabric {}: {} streams, {} index vectors over {} frames",
+            if recovered { "recovered from disk" } else { "ready" },
             case.fabric.n_streams(),
             case.fabric.total_indexed(),
             case.fabric.total_frames()
@@ -226,6 +257,7 @@ fn serve(args: &[String]) -> Result<()> {
         texts = case.queries.iter().map(|(_, q)| q.text.clone()).collect();
         cfg.api.fps = case.synths[0].config().fps;
         service = crate::server::Service::start(&cfg, Arc::clone(&case.fabric), seed)?;
+        fabric = case.fabric;
     }
 
     let mut shed = 0usize;
@@ -253,5 +285,14 @@ fn serve(args: &[String]) -> Result<()> {
     println!("{}", service.cache.stats().render());
     let snap = service.shutdown();
     println!("{}", snap.render());
+    if fabric.is_durable() {
+        // clean shutdown: flush the WAL tails so the next `--data-dir`
+        // run recovers everything, not just the sealed segments
+        fabric.flush()?;
+        eprintln!(
+            "memory persisted to {} — rerun with the same --data-dir to serve without re-ingesting",
+            fabric.data_dir().unwrap().display()
+        );
+    }
     Ok(())
 }

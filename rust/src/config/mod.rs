@@ -91,13 +91,32 @@ pub struct MemoryConfig {
     pub ivf_nlist: usize,
     /// IVF probe count at query time.
     pub ivf_nprobe: usize,
-    /// Raw-layer segment size (frames per segment file).
+    /// Raw-layer segment size (frames per on-disk frame-log chunk file).
     pub segment_frames: usize,
+    /// Index-layer segment size: the WAL seals an immutable segment file
+    /// once this many inserts accumulate (durable fabrics only).
+    pub segment_records: usize,
+    /// Hot-tier budget in bytes (in-RAM index vectors + their cluster
+    /// records).  0 = unbounded (the pure-RAM legacy behavior).  A
+    /// non-zero budget requires a durable fabric (`MemoryFabric::open`):
+    /// eviction demotes the oldest sealed segments to the cold tier.
+    pub hot_budget_bytes: usize,
+    /// Cold-tier block cache: how many sealed segments' vector blocks may
+    /// stay resident at once (LRU).
+    pub cold_cache_segments: usize,
 }
 
 impl Default for MemoryConfig {
     fn default() -> Self {
-        Self { index: "flat".into(), ivf_nlist: 0, ivf_nprobe: 8, segment_frames: 512 }
+        Self {
+            index: "flat".into(),
+            ivf_nlist: 0,
+            ivf_nprobe: 8,
+            segment_frames: 512,
+            segment_records: 256,
+            hot_budget_bytes: 0,
+            cold_cache_segments: 4,
+        }
     }
 }
 
@@ -289,6 +308,12 @@ impl VenusConfig {
         cfg.memory.ivf_nlist = d.usize_or("memory.ivf_nlist", cfg.memory.ivf_nlist)?;
         cfg.memory.ivf_nprobe = d.usize_or("memory.ivf_nprobe", cfg.memory.ivf_nprobe)?;
         cfg.memory.segment_frames = d.usize_or("memory.segment_frames", cfg.memory.segment_frames)?;
+        cfg.memory.segment_records =
+            d.usize_or("memory.segment_records", cfg.memory.segment_records)?;
+        cfg.memory.hot_budget_bytes =
+            d.usize_or("memory.hot_budget_bytes", cfg.memory.hot_budget_bytes)?;
+        cfg.memory.cold_cache_segments =
+            d.usize_or("memory.cold_cache_segments", cfg.memory.cold_cache_segments)?;
 
         cfg.net.bandwidth_mbps = d.f64_or("net.bandwidth_mbps", cfg.net.bandwidth_mbps)?;
         cfg.net.rtt_ms = d.f64_or("net.rtt_ms", cfg.net.rtt_ms)?;
@@ -377,6 +402,12 @@ impl VenusConfig {
         if self.memory.index != "flat" && self.memory.index != "ivf" {
             bail!("memory.index must be 'flat' or 'ivf'");
         }
+        if self.memory.segment_records == 0 || self.memory.segment_frames == 0 {
+            bail!("memory.segment_records / segment_frames must be >= 1");
+        }
+        if self.memory.cold_cache_segments == 0 {
+            bail!("memory.cold_cache_segments must be >= 1");
+        }
         if self.net.bandwidth_mbps <= 0.0 || self.net.frame_kb <= 0.0 {
             bail!("net parameters must be positive");
         }
@@ -426,6 +457,9 @@ const KNOWN_KEYS: &[&str] = &[
     "memory.ivf_nlist",
     "memory.ivf_nprobe",
     "memory.segment_frames",
+    "memory.segment_records",
+    "memory.hot_budget_bytes",
+    "memory.cold_cache_segments",
     "net.bandwidth_mbps",
     "net.rtt_ms",
     "net.frame_kb",
@@ -523,6 +557,25 @@ mod tests {
         assert!(VenusConfig::from_toml("[api]\ninteractive_depth = 0").is_err());
         assert!(VenusConfig::from_toml("[server]\nqueue_depth = 0").is_err());
         assert!(VenusConfig::from_toml("[api]\nfps = 0.0").is_err());
+    }
+
+    #[test]
+    fn memory_tier_keys_parse_and_validate() {
+        let cfg = VenusConfig::from_toml(
+            "[memory]\nsegment_records = 64\nhot_budget_bytes = 1048576\ncold_cache_segments = 2",
+        )
+        .unwrap();
+        assert_eq!(cfg.memory.segment_records, 64);
+        assert_eq!(cfg.memory.hot_budget_bytes, 1_048_576);
+        assert_eq!(cfg.memory.cold_cache_segments, 2);
+        // defaults: unbounded hot tier, 256-record segments
+        let cfg = VenusConfig::default();
+        assert_eq!(cfg.memory.hot_budget_bytes, 0);
+        assert_eq!(cfg.memory.segment_records, 256);
+        // invalid values rejected
+        assert!(VenusConfig::from_toml("[memory]\nsegment_records = 0").is_err());
+        assert!(VenusConfig::from_toml("[memory]\ncold_cache_segments = 0").is_err());
+        assert!(VenusConfig::from_toml("[memory]\nsegment_frames = 0").is_err());
     }
 
     #[test]

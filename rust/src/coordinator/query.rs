@@ -251,7 +251,7 @@ impl QueryEngine {
                 // score copy, no per-record reference vec
                 let g = &guards[0];
                 let t0 = Instant::now();
-                g.score_all(&qvec, &mut self.scores_buf);
+                g.score_all(&qvec, &mut self.scores_buf)?;
                 t.search_s = t0.elapsed().as_secs_f64();
 
                 let t0 = Instant::now();
@@ -265,7 +265,7 @@ impl QueryEngine {
                 let mut merged: Vec<f32> = Vec::new();
                 let mut records: Vec<&ClusterRecord> = Vec::new();
                 for g in &guards {
-                    g.score_all(&qvec, &mut self.scores_buf);
+                    g.score_all(&qvec, &mut self.scores_buf)?;
                     merged.extend_from_slice(&self.scores_buf);
                     records.extend(g.records().iter());
                 }
@@ -319,7 +319,7 @@ impl QueryEngine {
         let mut merged = Vec::new();
         for shard in self.fabric.shards() {
             let g = shard.read().unwrap();
-            g.score_all(&qvec, &mut self.scores_buf);
+            g.score_all(&qvec, &mut self.scores_buf)?;
             merged.extend_from_slice(&self.scores_buf);
         }
         Ok(merged)
@@ -368,8 +368,11 @@ fn frame_scores_for<M: crate::retrieval::RecordSource + ?Sized>(
             drawn
                 .iter()
                 .filter(|&&i| {
-                    let r = memory.record(i);
-                    r.stream == f.stream && r.members.binary_search(&f.idx).is_ok()
+                    // a stale drawn id (typed miss) simply contributes no
+                    // score — the selection layer already skipped it
+                    memory.record(i).is_some_and(|r| {
+                        r.stream == f.stream && r.members.binary_search(&f.idx).is_ok()
+                    })
                 })
                 .map(|&i| score_of(i))
                 .max_by(|a, b| a.partial_cmp(b).unwrap())
@@ -437,7 +440,7 @@ mod tests {
             for c in 0..60u64 {
                 let mut mem = writer_mem.write().unwrap();
                 for f in c * 4..(c + 1) * 4 {
-                    mem.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+                    mem.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
                 }
                 let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
                 crate::util::l2_normalize(&mut v);
@@ -500,7 +503,7 @@ mod tests {
         let mut mem = memory.write().unwrap();
         for c in 0..clusters {
             for f in c * 4..(c + 1) * 4 {
-                mem.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+                mem.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
             }
             let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
             crate::util::l2_normalize(&mut v);
@@ -679,7 +682,7 @@ mod tests {
             let mut g = shard.write().unwrap();
             for c in 0..8u64 {
                 for f in c * 4..(c + 1) * 4 {
-                    g.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+                    g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
                 }
                 let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
                 crate::util::l2_normalize(&mut v);

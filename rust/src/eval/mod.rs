@@ -8,5 +8,6 @@ pub mod runner;
 pub use latency::{Deployment, LatencyModel, LatencyParts};
 pub use runner::{
     build_synth, eval_baseline, eval_venus, measure_venus_edge_latency, prepare_case,
-    prepare_multi_case, CellOutcome, FabricCase, VenusMode, VideoCase,
+    prepare_case_at, prepare_multi_case, prepare_multi_case_at, CellOutcome, FabricCase,
+    VenusMode, VideoCase,
 };

@@ -68,25 +68,103 @@ pub fn prepare_case(
     n_queries: usize,
     seed: u64,
 ) -> Result<VideoCase> {
+    prepare_case_at(preset, cfg, n_queries, seed, None)
+}
+
+/// Pin the workload a durable data dir was ingested with: the first run
+/// writes a `WORKLOAD` marker (preset, seed, streams); later runs must
+/// match it exactly, or recovery would silently serve the OLD stream's
+/// memory against a different workload's queries — a typed error beats
+/// evidence frames from the wrong video.
+fn check_workload_marker(
+    dir: &std::path::Path,
+    preset: DatasetPreset,
+    seed: u64,
+    streams: usize,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("WORKLOAD");
+    let desc = format!("preset {} seed {seed} streams {streams}\n", preset.name());
+    match std::fs::read_to_string(&path) {
+        Ok(existing) => anyhow::ensure!(
+            existing == desc,
+            "data dir {} was ingested with '{}' but this run asked for '{}' — \
+             wipe the dir or match the original --preset/--seed/--streams",
+            dir.display(),
+            existing.trim(),
+            desc.trim()
+        ),
+        Err(_) => std::fs::write(&path, desc)?,
+    }
+    Ok(())
+}
+
+/// [`prepare_case`] with an optional durable data dir.  With `Some(dir)`
+/// the memory fabric opens on disk (`MemoryFabric::open`): the first run
+/// ingests through the real pipeline and flushes; a later run over the
+/// same dir *recovers* the memory instead of re-ingesting (its
+/// `ingest_stats` are zero — the stream was never replayed), which is
+/// the `venus serve --data-dir` restart path.  The dir is pinned to its
+/// workload (preset/seed) via a `WORKLOAD` marker — reusing it with a
+/// different workload is a typed error, not silently wrong evidence.
+pub fn prepare_case_at(
+    preset: DatasetPreset,
+    cfg: &VenusConfig,
+    n_queries: usize,
+    seed: u64,
+    data_dir: Option<&std::path::Path>,
+) -> Result<VideoCase> {
     let synth = build_synth(preset, seed)?;
     // the one process-shared backend serves the d_embed probe and the
     // ingestion engine alike
     let be = backend::shared_default()?;
     let d_embed = be.model().d_embed;
-    let memory = Arc::new(RwLock::new(Hierarchy::new(
-        &cfg.memory,
-        d_embed,
-        Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
-    )?));
-    let engine = EmbedEngine::new(be, cfg.ingest.aux_models)?;
-    let mut pipe =
-        Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory))?;
-    for i in 0..synth.total_frames() {
-        pipe.push_frame(i, &synth.frame(i))?;
-    }
-    let ingest_stats = pipe.finish()?;
+    let (fabric, memory) = match data_dir {
+        Some(dir) => {
+            check_workload_marker(dir, preset, seed, 1)?;
+            let frame_size = synth.config().frame_size;
+            let fabric =
+                Arc::new(MemoryFabric::open(&cfg.memory, d_embed, 1, frame_size, dir)?);
+            let memory = Arc::clone(&fabric.shards()[0]);
+            (fabric, memory)
+        }
+        None => {
+            let memory = Arc::new(RwLock::new(Hierarchy::new(
+                &cfg.memory,
+                d_embed,
+                Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
+            )?));
+            let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
+            (fabric, memory)
+        }
+    };
+    let recovered = memory.read().unwrap().len() > 0;
+    let ingest_stats = if recovered {
+        // honesty check: a dir left by a run killed mid-ingest recovers
+        // to a truncated memory — serve it (it is self-consistent), but
+        // never silently pretend it covers the whole stream
+        let frames = memory.read().unwrap().frames_ingested();
+        if frames < synth.total_frames() {
+            eprintln!(
+                "warning: recovered memory covers {frames}/{} frames of the configured \
+                 stream (a previous run stopped mid-ingest); wipe the data dir to \
+                 re-ingest from scratch",
+                synth.total_frames()
+            );
+        }
+        IngestStats::default()
+    } else {
+        let engine = EmbedEngine::new(be, cfg.ingest.aux_models)?;
+        let mut pipe =
+            Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory))?;
+        for i in 0..synth.total_frames() {
+            pipe.push_frame(i, &synth.frame(i))?;
+        }
+        let stats = pipe.finish()?;
+        fabric.flush()?; // durability point: no-op for pure-RAM fabrics
+        stats
+    };
     let queries = WorkloadGen::new(seed ^ 0x9, preset).generate(synth.script(), n_queries);
-    let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
     Ok(VideoCase { synth, fabric, memory, queries, ingest_stats, preset })
 }
 
@@ -109,6 +187,20 @@ pub fn prepare_multi_case(
     queries_per_stream: usize,
     seed: u64,
 ) -> Result<FabricCase> {
+    prepare_multi_case_at(preset, cfg, streams, queries_per_stream, seed, None)
+}
+
+/// [`prepare_multi_case`] with an optional durable data dir: with
+/// `Some(dir)` the K-shard fabric opens on disk and a non-empty recovery
+/// skips re-ingesting (per-stream `ingest_stats` are zero).
+pub fn prepare_multi_case_at(
+    preset: DatasetPreset,
+    cfg: &VenusConfig,
+    streams: usize,
+    queries_per_stream: usize,
+    seed: u64,
+    data_dir: Option<&std::path::Path>,
+) -> Result<FabricCase> {
     anyhow::ensure!(streams >= 1, "need at least one stream");
     let be = backend::shared_default()?;
     let d_embed = be.model().d_embed;
@@ -116,43 +208,76 @@ pub fn prepare_multi_case(
     let synths: Vec<Arc<VideoSynth>> = (0..streams)
         .map(|s| build_synth(preset, seed.wrapping_add(s as u64 * 0x9e37)))
         .collect::<Result<_>>()?;
-    let raws: Vec<Box<dyn RawStore>> = synths
-        .iter()
-        .map(|s| Box::new(SynthBackedRaw::new(Arc::clone(s))) as Box<dyn RawStore>)
-        .collect();
-    let fabric = Arc::new(MemoryFabric::new(&cfg.memory, d_embed, raws)?);
-    // pool sized for THIS case's stream count (cfg.fabric.streams may
-    // describe the deployment, not the experiment)
-    let pool_cfg = crate::config::FabricConfig {
-        streams,
-        pool_workers: cfg.fabric.pool_workers,
+    let fabric = match data_dir {
+        Some(dir) => {
+            check_workload_marker(dir, preset, seed, streams)?;
+            Arc::new(MemoryFabric::open(
+                &cfg.memory,
+                d_embed,
+                streams,
+                synths[0].config().frame_size,
+                dir,
+            )?)
+        }
+        None => {
+            let raws: Vec<Box<dyn RawStore>> = synths
+                .iter()
+                .map(|s| Box::new(SynthBackedRaw::new(Arc::clone(s))) as Box<dyn RawStore>)
+                .collect();
+            Arc::new(MemoryFabric::new(&cfg.memory, d_embed, raws)?)
+        }
     };
-    let pool = EmbedPool::start(
-        be,
-        cfg.ingest.aux_models,
-        pool_cfg.resolved_pool_workers(),
-        cfg.ingest.queue_capacity,
-    )?;
 
-    // one ingestion thread per camera
-    let mut handles = Vec::new();
-    for (i, synth) in synths.iter().enumerate() {
-        let shard = Arc::clone(fabric.shard(StreamId(i as u16))?);
-        let mut pipe = Pipeline::attach(&cfg.ingest, synth.config().fps, &pool, shard)?;
-        let synth = Arc::clone(synth);
-        handles.push(std::thread::spawn(move || -> Result<IngestStats> {
-            for f in 0..synth.total_frames() {
-                pipe.push_frame(f, &synth.frame(f))?;
+    let ingest_stats = if fabric.total_indexed() > 0 {
+        // recovered from disk: the streams were already ingested by a
+        // previous process — nothing to replay (but never silently
+        // pretend a mid-ingest crash left complete coverage)
+        for (i, synth) in synths.iter().enumerate() {
+            let frames = fabric.shard(StreamId(i as u16))?.read().unwrap().frames_ingested();
+            if frames < synth.total_frames() {
+                eprintln!(
+                    "warning: stream {i} recovered {frames}/{} frames (a previous run \
+                     stopped mid-ingest); wipe the data dir to re-ingest from scratch",
+                    synth.total_frames()
+                );
             }
-            pipe.finish()
-        }));
-    }
-    let mut ingest_stats = Vec::new();
-    for h in handles {
-        ingest_stats
-            .push(h.join().map_err(|_| anyhow::anyhow!("ingest thread panicked"))??);
-    }
-    pool.shutdown()?;
+        }
+        vec![IngestStats::default(); streams]
+    } else {
+        // pool sized for THIS case's stream count (cfg.fabric.streams may
+        // describe the deployment, not the experiment)
+        let pool_cfg = crate::config::FabricConfig {
+            streams,
+            pool_workers: cfg.fabric.pool_workers,
+        };
+        let pool = EmbedPool::start(
+            be,
+            cfg.ingest.aux_models,
+            pool_cfg.resolved_pool_workers(),
+            cfg.ingest.queue_capacity,
+        )?;
+
+        // one ingestion thread per camera
+        let mut handles = Vec::new();
+        for (i, synth) in synths.iter().enumerate() {
+            let shard = Arc::clone(fabric.shard(StreamId(i as u16))?);
+            let mut pipe = Pipeline::attach(&cfg.ingest, synth.config().fps, &pool, shard)?;
+            let synth = Arc::clone(synth);
+            handles.push(std::thread::spawn(move || -> Result<IngestStats> {
+                for f in 0..synth.total_frames() {
+                    pipe.push_frame(f, &synth.frame(f))?;
+                }
+                pipe.finish()
+            }));
+        }
+        let mut stats = Vec::new();
+        for h in handles {
+            stats.push(h.join().map_err(|_| anyhow::anyhow!("ingest thread panicked"))??);
+        }
+        pool.shutdown()?;
+        fabric.flush()?; // durability point: no-op for pure-RAM fabrics
+        stats
+    };
     fabric.check_invariants()?;
 
     let mut queries = Vec::new();

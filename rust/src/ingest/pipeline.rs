@@ -141,7 +141,7 @@ impl Pipeline {
 
     /// Feed the next captured frame (stream-local ids, dense ascending).
     pub fn push_frame(&mut self, id: u64, frame: &Frame) -> Result<()> {
-        self.shard.write().unwrap().archive_frame(id, frame);
+        self.shard.write().unwrap().archive_frame(id, frame)?;
         let feat = frame_features(frame);
         if let Some(part) = self.seg.push_features(feat) {
             self.submit_partition(part.id)?;

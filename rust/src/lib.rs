@@ -28,6 +28,14 @@
 //! ([`memory::StreamScope`]) whose `All` path scatter-gathers Eq. 4–5
 //! scoring across shards so one answer can cite several cameras.
 //!
+//! The memory is **durable and tiered** when opened with
+//! [`memory::MemoryFabric::open`]: inserts stream through a per-shard WAL
+//! into sealed on-disk segments ([`memory::storage`], [`memory::segment`]),
+//! a byte-budgeted hot tier demotes the oldest segments to a disk-backed
+//! cold tier scored through an LRU block cache, and
+//! [`memory::MemoryFabric::recover`] rebuilds every shard — watermarks
+//! included — after a restart (DESIGN.md §Storage).
+//!
 //! Serving goes through the typed [`api`] layer (Serving API v1): a
 //! [`api::QueryRequest`] builder (scope, retrieval mode, sampling
 //! budget, priority lane, deadline), structured [`api::QueryResponse`]

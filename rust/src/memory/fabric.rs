@@ -13,13 +13,15 @@
 //! `StreamId` order while writers (ingestion pipelines) each hold at most
 //! one shard lock at a time — no cycle, no deadlock.
 
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, RwLock};
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::config::MemoryConfig;
-use crate::memory::hierarchy::Hierarchy;
+use crate::memory::hierarchy::{Hierarchy, TierStats};
 use crate::memory::raw::RawStore;
+use crate::memory::storage::atomic_write;
 use crate::video::frame::Frame;
 
 /// Identifies one camera stream (== one shard) in the fabric.
@@ -81,7 +83,12 @@ pub enum StreamScope {
 /// locked.  Shard `i` owns `StreamId(i)`.
 pub struct MemoryFabric {
     shards: Vec<Arc<RwLock<Hierarchy>>>,
+    /// root of the durable layout (`MANIFEST`, `s<K>/` per stream);
+    /// `None` for a pure-RAM fabric
+    data_dir: Option<PathBuf>,
 }
+
+const FABRIC_MANIFEST_HEADER: &str = "venus-fabric-manifest v1";
 
 impl MemoryFabric {
     /// Build an N-shard fabric, one raw store per stream (shard `i` takes
@@ -106,14 +113,130 @@ impl MemoryFabric {
                 StreamId(i as u16),
             )?)));
         }
-        Ok(Self { shards })
+        Ok(Self { shards, data_dir: None })
+    }
+
+    /// Open a durable fabric rooted at `dir`: create it on first use, or
+    /// recover every shard from disk when a fabric `MANIFEST` already
+    /// exists (sealed segments become each shard's cold tier, flushed WAL
+    /// tails its hot tier, and per-shard ingest watermarks are restored —
+    /// so the serving cache's staleness logic survives a restart).
+    pub fn open(
+        cfg: &MemoryConfig,
+        d_embed: usize,
+        streams: usize,
+        frame_size: usize,
+        dir: &Path,
+    ) -> Result<Self> {
+        anyhow::ensure!(streams >= 1, "fabric needs at least one stream");
+        anyhow::ensure!(
+            streams <= u16::MAX as usize,
+            "fabric supports at most {} streams",
+            u16::MAX
+        );
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating data dir {}", dir.display()))?;
+        let manifest = dir.join("MANIFEST");
+        if manifest.exists() {
+            let text = std::fs::read_to_string(&manifest)?;
+            let (m_streams, m_d, m_fs) = Self::parse_fabric_manifest(&text)?;
+            if m_streams != streams || m_d != d_embed || m_fs != frame_size {
+                bail!(
+                    "fabric at {} was written with streams={m_streams} d_embed={m_d} \
+                     frame_size={m_fs}; this open asked for streams={streams} \
+                     d_embed={d_embed} frame_size={frame_size}",
+                    dir.display()
+                );
+            }
+        } else {
+            let text = format!(
+                "{FABRIC_MANIFEST_HEADER}\nstreams {streams}\nd_embed {d_embed}\nframe_size {frame_size}\n"
+            );
+            atomic_write(&manifest, text.as_bytes())?;
+        }
+        let mut shards = Vec::with_capacity(streams);
+        for i in 0..streams {
+            let stream = StreamId(i as u16);
+            let shard_dir = dir.join(format!("s{i}"));
+            shards.push(Arc::new(RwLock::new(Hierarchy::durable(
+                cfg, d_embed, stream, &shard_dir, frame_size,
+            )?)));
+        }
+        Ok(Self { shards, data_dir: Some(dir.to_path_buf()) })
+    }
+
+    /// Recover a durable fabric that MUST already exist on disk — the
+    /// restart path.  Identical to [`MemoryFabric::open`] except that a
+    /// missing fabric `MANIFEST` is a typed error instead of a fresh
+    /// initialization.
+    pub fn recover(
+        cfg: &MemoryConfig,
+        d_embed: usize,
+        streams: usize,
+        frame_size: usize,
+        dir: &Path,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            dir.join("MANIFEST").exists(),
+            "no fabric manifest at {} — nothing to recover",
+            dir.display()
+        );
+        Self::open(cfg, d_embed, streams, frame_size, dir)
+    }
+
+    fn parse_fabric_manifest(text: &str) -> Result<(usize, usize, usize)> {
+        let mut lines = text.lines();
+        anyhow::ensure!(
+            lines.next() == Some(FABRIC_MANIFEST_HEADER),
+            "unrecognized fabric manifest header"
+        );
+        let field = |line: Option<&str>, key: &str| -> Result<usize> {
+            let line = line.with_context(|| format!("fabric manifest missing '{key}'"))?;
+            let rest = line
+                .strip_prefix(key)
+                .with_context(|| format!("fabric manifest line '{line}' is not '{key} …'"))?;
+            Ok(rest.trim().parse::<usize>()?)
+        };
+        Ok((
+            field(lines.next(), "streams")?,
+            field(lines.next(), "d_embed")?,
+            field(lines.next(), "frame_size")?,
+        ))
     }
 
     /// Wrap an existing single shard (must own `StreamId(0)`) — the
     /// single-camera deployment and the test/bench convenience path.
     pub fn single(shard: Arc<RwLock<Hierarchy>>) -> Self {
         debug_assert_eq!(shard.read().unwrap().stream(), StreamId(0));
-        Self { shards: vec![shard] }
+        Self { shards: vec![shard], data_dir: None }
+    }
+
+    /// Root of the durable layout, when this fabric persists to disk.
+    pub fn data_dir(&self) -> Option<&Path> {
+        self.data_dir.as_deref()
+    }
+
+    /// Whether this fabric persists to disk.
+    pub fn is_durable(&self) -> bool {
+        self.data_dir.is_some()
+    }
+
+    /// Force every shard's WAL tail to disk (a fabric-wide durability
+    /// point — the clean-shutdown counterpart of drop-as-crash).
+    pub fn flush(&self) -> Result<()> {
+        for shard in &self.shards {
+            shard.write().unwrap().flush()?;
+        }
+        Ok(())
+    }
+
+    /// Fabric-wide tier gauges: per-shard stats summed.
+    pub fn tier_stats(&self) -> TierStats {
+        let mut total = TierStats::default();
+        for shard in &self.shards {
+            total.merge(&shard.read().unwrap().tier_stats());
+        }
+        total
     }
 
     pub fn n_streams(&self) -> usize {
@@ -242,7 +365,7 @@ mod tests {
             let shard = f.shard(StreamId(sid)).unwrap();
             let mut g = shard.write().unwrap();
             for i in 0..4u64 {
-                g.archive_frame(i, &Frame::filled(8, [fill; 3]));
+                g.archive_frame(i, &Frame::filled(8, [fill; 3])).unwrap();
             }
         }
         let a = f.fetch_frame(FrameId::new(StreamId(0), 1)).unwrap();
@@ -273,7 +396,7 @@ mod tests {
         {
             let shard = f.shard(StreamId(1)).unwrap();
             let mut g = shard.write().unwrap();
-            g.archive_frame(0, &Frame::filled(8, [0.5; 3]));
+            g.archive_frame(0, &Frame::filled(8, [0.5; 3])).unwrap();
             g.insert(
                 &[1.0, 0.0, 0.0, 0.0],
                 ClusterRecord {
@@ -302,7 +425,7 @@ mod tests {
         {
             let shard = f.shard(StreamId(1)).unwrap();
             let mut g = shard.write().unwrap();
-            g.archive_frame(0, &Frame::filled(8, [0.5; 3]));
+            g.archive_frame(0, &Frame::filled(8, [0.5; 3])).unwrap();
             g.insert(
                 &[1.0, 0.0, 0.0, 0.0],
                 ClusterRecord {
@@ -315,6 +438,58 @@ mod tests {
             .unwrap();
         }
         assert!(f.check_invariants().is_err());
+    }
+
+    #[test]
+    fn durable_fabric_opens_recovers_and_validates_topology() {
+        let tmp = crate::memory::storage::tests::TempDir::new("fabric-open");
+        let cfg = MemoryConfig { segment_records: 2, ..Default::default() };
+        // nothing on disk yet: recover must refuse, open must initialize
+        assert!(MemoryFabric::recover(&cfg, 4, 2, 8, &tmp.0).is_err());
+        {
+            let f = MemoryFabric::open(&cfg, 4, 2, 8, &tmp.0).unwrap();
+            assert!(f.is_durable());
+            assert_eq!(f.data_dir(), Some(tmp.0.as_path()));
+            for sid in 0..2u16 {
+                let shard = f.shard(StreamId(sid)).unwrap();
+                let mut g = shard.write().unwrap();
+                for i in 0..3u64 {
+                    g.archive_frame(i, &Frame::filled(8, [0.5; 3])).unwrap();
+                    let mut v = vec![0.0f32; 4];
+                    v[(sid as usize + i as usize) % 4] = 1.0;
+                    g.insert(
+                        &v,
+                        ClusterRecord {
+                            stream: StreamId(sid),
+                            scene_id: i as usize,
+                            centroid_frame: i,
+                            members: vec![i],
+                        },
+                    )
+                    .unwrap();
+                }
+            }
+            f.flush().unwrap();
+        }
+        // restart: shards rebuilt from disk, watermarks restored
+        let f = MemoryFabric::recover(&cfg, 4, 2, 8, &tmp.0).unwrap();
+        assert_eq!(
+            f.watermarks(StreamScope::All).unwrap(),
+            vec![(StreamId(0), 3), (StreamId(1), 3)]
+        );
+        assert_eq!(f.total_frames(), 6);
+        f.check_invariants().unwrap();
+        let ts = f.tier_stats();
+        assert_eq!(ts.cold_records + ts.hot_records, 6);
+        assert_eq!(
+            ts.cold_segments, 0,
+            "unbounded shards promote every sealed span back to RAM: {ts:?}"
+        );
+        assert_eq!(ts.hot_records, 6);
+        // topology mismatches are typed errors
+        assert!(MemoryFabric::open(&cfg, 4, 3, 8, &tmp.0).is_err());
+        assert!(MemoryFabric::open(&cfg, 5, 2, 8, &tmp.0).is_err());
+        assert!(MemoryFabric::open(&cfg, 4, 2, 16, &tmp.0).is_err());
     }
 
     #[test]

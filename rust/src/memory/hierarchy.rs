@@ -8,12 +8,40 @@
 //! stream-local dense frame ids.  Cross-stream composition (scatter-gather
 //! scoring, fabric-global `FrameId` addressing) lives in
 //! [`crate::memory::fabric`].
+//!
+//! # Tiered lifecycle (durable shards)
+//!
+//! A shard's record space `[0, watermark)` is split at `hot_base`:
+//!
+//! * **hot tier** `[hot_base, watermark)` — vectors resident in the RAM
+//!   index, scored in place; bounded by `memory.hot_budget_bytes`;
+//! * **cold tier** `[0, hot_base)` — the oldest records, demoted to
+//!   sealed segment files whose vector blocks page through an LRU cache
+//!   ([`crate::memory::segment::ColdTier`]).
+//!
+//! Record *metadata* (scene links, member lists) stays resident for the
+//! whole space — selection must expand any drawn cluster without disk
+//! round-trips, and the All-scope merged view borrows record slices
+//! across shards.  Only vectors (the dominant index mass) and raw frames
+//! are tiered.
+//!
+//! Eviction is watermark-ordered and segment-granular: when the hot
+//! tier exceeds its budget, the oldest sealed segment is demoted (the
+//! WAL force-seals first if nothing sealed is left to demote).  Because
+//! demotion only ever removes the *oldest prefix* and cold segments are
+//! scanned in base order, the concatenated cold + hot score vector is in
+//! global id order — the exact Eq. 4 distribution an unbounded shard
+//! would produce, bit for bit (see `DESIGN.md` §Storage).
+
+use std::path::Path;
 
 use anyhow::Result;
 
 use crate::config::MemoryConfig;
 use crate::memory::fabric::StreamId;
 use crate::memory::raw::RawStore;
+use crate::memory::segment::ColdTier;
+use crate::memory::storage::{DiskRaw, StreamStorage};
 use crate::memory::vectordb::{build_index, Hit, Metric, VectorIndex};
 
 /// Index-layer record: one indexed (centroid) frame and its cluster.
@@ -29,18 +57,79 @@ pub struct ClusterRecord {
     pub members: Vec<u64>,
 }
 
-/// The hierarchical memory: vector index + cluster links + raw archive.
+/// Per-tier residency and traffic gauges of one shard (or, merged, the
+/// whole fabric) — what `server::Snapshot` and `venus serve` report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierStats {
+    /// hot-tier resident bytes: index vectors + their record metadata
+    pub hot_bytes: usize,
+    pub hot_records: usize,
+    /// records demoted to sealed segments
+    pub cold_records: usize,
+    pub cold_segments: usize,
+    /// cold vector blocks currently resident in the LRU cache
+    pub cold_resident_bytes: usize,
+    /// raw-layer resident bytes (0 for disk/generator-backed archives)
+    pub raw_resident_bytes: usize,
+    /// records demoted from the hot tier so far
+    pub evictions: u64,
+    /// cold block-cache hits / misses (the cold-hit rate gauge)
+    pub cold_hits: u64,
+    pub cold_misses: u64,
+}
+
+impl TierStats {
+    /// Accumulate another shard's gauges (fabric-wide totals).
+    pub fn merge(&mut self, o: &TierStats) {
+        self.hot_bytes += o.hot_bytes;
+        self.hot_records += o.hot_records;
+        self.cold_records += o.cold_records;
+        self.cold_segments += o.cold_segments;
+        self.cold_resident_bytes += o.cold_resident_bytes;
+        self.raw_resident_bytes += o.raw_resident_bytes;
+        self.evictions += o.evictions;
+        self.cold_hits += o.cold_hits;
+        self.cold_misses += o.cold_misses;
+    }
+
+    /// Block-cache hit rate over cold-tier accesses, if any happened.
+    pub fn cold_hit_rate(&self) -> Option<f64> {
+        let total = self.cold_hits + self.cold_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.cold_hits as f64 / total as f64)
+        }
+    }
+}
+
+/// The hierarchical memory: vector index + cluster links + raw archive,
+/// optionally backed by the durable storage layer (WAL + sealed
+/// segments) with a bounded hot tier.
 pub struct Hierarchy {
     stream: StreamId,
+    cfg: MemoryConfig,
+    d_embed: usize,
+    /// hot-tier vector index: local id `i` holds global id `hot_base + i`
     index: Box<dyn VectorIndex>,
+    /// global record id of the first hot record (== cold record count)
+    hot_base: usize,
+    /// resident bytes of hot records' metadata (vectors counted via index)
+    hot_meta_bytes: usize,
+    /// ALL records, hot and cold — selection needs any drawn cluster's
+    /// members without a disk round-trip
     records: Vec<ClusterRecord>,
+    cold: ColdTier,
+    storage: Option<StreamStorage>,
     raw: Box<dyn RawStore>,
     frames_ingested: u64,
     /// Monotone ingest watermark: total index inserts ever applied to this
     /// shard.  Currently equal to `len()`, but kept as its own counter so
     /// staleness checks (the serving API's semantic query cache) survive a
-    /// future compaction/eviction pass that shrinks the index.
+    /// future compaction pass that drops records outright.
     watermark: u64,
+    /// records demoted from the hot tier so far
+    evictions: u64,
 }
 
 impl Hierarchy {
@@ -49,13 +138,105 @@ impl Hierarchy {
         Self::for_stream(cfg, d_embed, raw, StreamId(0))
     }
 
-    /// A shard of the memory fabric owning one camera stream.
+    /// A pure-RAM shard of the memory fabric owning one camera stream.
     pub fn for_stream(
         cfg: &MemoryConfig,
         d_embed: usize,
         raw: Box<dyn RawStore>,
         stream: StreamId,
     ) -> Result<Self> {
+        Self::build(cfg, d_embed, raw, stream, None)
+    }
+
+    /// A durable shard rooted at `dir`: raw frames go to the on-disk
+    /// frame log, index inserts stream through the WAL, and any state a
+    /// previous process sealed (or flushed) is recovered.  Sealed spans
+    /// are *promoted* back into the RAM index up to the hot budget,
+    /// newest first (an unbounded shard promotes everything — a restart
+    /// must not permanently degrade an all-RAM deployment to disk
+    /// scans); whatever the budget cannot hold stays demoted as the
+    /// cold-tier prefix, and the WAL tail always recovers hot.
+    pub fn durable(
+        cfg: &MemoryConfig,
+        d_embed: usize,
+        stream: StreamId,
+        dir: &Path,
+        frame_size: usize,
+    ) -> Result<Self> {
+        let raw = Box::new(DiskRaw::open(dir, frame_size, cfg.segment_frames)?);
+        let (storage, recovered) = StreamStorage::open(dir, stream, d_embed)?;
+        let mut h = Self::build(cfg, d_embed, raw, stream, Some(storage))?;
+        let metas = h.storage.as_ref().unwrap().segments().to_vec();
+        let sealed_meta = recovered.sealed_records;
+
+        // choose the demoted prefix: walk segments newest-first, keeping
+        // them hot while the budget (minus the WAL tail's cost) allows
+        let mut promote_from = 0usize;
+        if cfg.hot_budget_bytes > 0 {
+            let wal_bytes: usize = recovered
+                .wal_tail
+                .iter()
+                .map(|(r, v)| v.len() * 4 + Self::record_bytes(r))
+                .sum();
+            let mut left = cfg.hot_budget_bytes.saturating_sub(wal_bytes);
+            promote_from = metas.len();
+            while promote_from > 0 {
+                let m = &metas[promote_from - 1];
+                let bytes = m.count * d_embed * 4
+                    + sealed_meta[m.base..m.base + m.count]
+                        .iter()
+                        .map(Self::record_bytes)
+                        .sum::<usize>();
+                if bytes > left {
+                    break;
+                }
+                left -= bytes;
+                promote_from -= 1;
+            }
+        }
+        for meta in &metas[..promote_from] {
+            h.cold.push(meta.clone())?;
+        }
+        h.hot_base = h.cold.record_count();
+        h.records = sealed_meta;
+
+        // promote the surviving suffix back into RAM — stored bytes
+        // replayed verbatim via `insert_prepared` (no re-normalization),
+        // so every recovered row is bit-identical to the one that was
+        // scored before the restart
+        for meta in &metas[promote_from..] {
+            let block = crate::memory::segment::load_vectors(meta)?;
+            for local in 0..meta.count {
+                h.index
+                    .insert_prepared(&block[local * d_embed..(local + 1) * d_embed])?;
+            }
+        }
+        h.hot_meta_bytes =
+            h.records[h.hot_base..].iter().map(Self::record_bytes).sum();
+        for (rec, vec) in recovered.wal_tail {
+            let local = h.index.insert_prepared(&vec)?;
+            debug_assert_eq!(h.hot_base + local, h.records.len());
+            h.hot_meta_bytes += Self::record_bytes(&rec);
+            h.records.push(rec);
+        }
+        h.watermark = h.records.len() as u64;
+        h.frames_ingested = h.raw.len();
+        h.maybe_evict()?; // the budget may be tighter than the WAL tail
+        Ok(h)
+    }
+
+    fn build(
+        cfg: &MemoryConfig,
+        d_embed: usize,
+        raw: Box<dyn RawStore>,
+        stream: StreamId,
+        storage: Option<StreamStorage>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.hot_budget_bytes == 0 || storage.is_some(),
+            "memory.hot_budget_bytes is set but shard {stream} has no durable \
+             storage to demote into — open the fabric with MemoryFabric::open"
+        );
         let index = build_index(
             &cfg.index,
             d_embed,
@@ -63,7 +244,21 @@ impl Hierarchy {
             cfg.ivf_nlist,
             cfg.ivf_nprobe,
         )?;
-        Ok(Self { stream, index, records: Vec::new(), raw, frames_ingested: 0, watermark: 0 })
+        Ok(Self {
+            stream,
+            cfg: cfg.clone(),
+            d_embed,
+            index,
+            hot_base: 0,
+            hot_meta_bytes: 0,
+            records: Vec::new(),
+            cold: ColdTier::new(cfg.cold_cache_segments),
+            storage,
+            raw,
+            frames_ingested: 0,
+            watermark: 0,
+            evictions: 0,
+        })
     }
 
     /// The camera stream this shard owns.
@@ -71,15 +266,41 @@ impl Hierarchy {
         self.stream
     }
 
+    /// Whether this shard persists to disk.
+    pub fn is_durable(&self) -> bool {
+        self.storage.is_some()
+    }
+
     /// Archive a raw frame (every captured frame flows through here).
-    pub fn archive_frame(&mut self, id: u64, frame: &crate::video::frame::Frame) {
-        self.raw.put(id, frame);
+    /// Fallible: a disk-backed raw store surfaces write errors (e.g. a
+    /// full SSD) as typed errors, and the archived watermark only
+    /// advances past frames that actually landed.
+    pub fn archive_frame(
+        &mut self,
+        id: u64,
+        frame: &crate::video::frame::Frame,
+    ) -> Result<()> {
+        self.raw.put(id, frame)?;
         self.frames_ingested = self.frames_ingested.max(id + 1);
+        Ok(())
+    }
+
+    /// Resident metadata bytes of one record (budget accounting).
+    fn record_bytes(r: &ClusterRecord) -> usize {
+        std::mem::size_of::<ClusterRecord>() + r.members.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Hot-tier resident bytes: index vectors + hot record metadata.
+    pub fn hot_bytes(&self) -> usize {
+        self.index.len() * self.d_embed * std::mem::size_of::<f32>() + self.hot_meta_bytes
     }
 
     /// Insert an indexed frame: embedding vector + cluster record.  The
     /// record must belong to this shard's stream — per-stream isolation is
-    /// enforced at the write path, not trusted from callers.
+    /// enforced at the write path, not trusted from callers.  On durable
+    /// shards the insert also streams into the WAL, seals a segment once
+    /// `memory.segment_records` accumulate, and demotes the oldest sealed
+    /// segments whenever the hot tier exceeds `memory.hot_budget_bytes`.
     pub fn insert(&mut self, embedding: &[f32], record: ClusterRecord) -> Result<usize> {
         anyhow::ensure!(
             record.stream == self.stream,
@@ -89,46 +310,200 @@ impl Hierarchy {
         );
         let mut members = record.members.clone();
         members.sort_unstable();
-        let id = self.index.insert(embedding)?;
-        debug_assert_eq!(id, self.records.len());
-        self.records.push(ClusterRecord { members, ..record });
+        let record = ClusterRecord { members, ..record };
+        let global = self.records.len();
+        let local = self.index.insert(embedding)?;
+        debug_assert_eq!(self.hot_base + local, global);
+        if let Some(st) = self.storage.as_mut() {
+            // the WAL stores the index's post-normalization bytes: what
+            // recovery replays is exactly what scoring reads
+            st.append(&record, self.index.vector(local));
+        }
+        self.hot_meta_bytes += Self::record_bytes(&record);
+        self.records.push(record);
         self.watermark += 1;
-        Ok(id)
+        if let Some(st) = self.storage.as_ref() {
+            if st.unsealed_records() >= self.cfg.segment_records {
+                self.seal_now()?;
+            }
+        }
+        self.maybe_evict()?;
+        Ok(global)
+    }
+
+    /// Seal the whole unsealed WAL span into an immutable segment.
+    fn seal_now(&mut self) -> Result<()> {
+        let Some(st) = self.storage.as_ref() else { return Ok(()) };
+        let base = st.sealed_records();
+        let count = st.unsealed_records();
+        if count == 0 {
+            return Ok(());
+        }
+        // frames the span cites must be durable before the manifest
+        // commits the records that cite them
+        self.raw.sync()?;
+        let mut vecs = Vec::with_capacity(count * self.d_embed);
+        for g in base..base + count {
+            vecs.extend_from_slice(self.index.vector(g - self.hot_base));
+        }
+        self.storage
+            .as_mut()
+            .unwrap()
+            .seal(&self.records[base..base + count], &vecs)
+    }
+
+    /// Demote oldest sealed segments until the hot tier fits its budget.
+    fn maybe_evict(&mut self) -> Result<()> {
+        if self.cfg.hot_budget_bytes == 0 {
+            return Ok(());
+        }
+        while self.hot_bytes() > self.cfg.hot_budget_bytes {
+            let demoted = self.cold.segment_count();
+            let sealed = self.storage.as_ref().map_or(0, |s| s.segments().len());
+            if demoted >= sealed {
+                if self.storage.as_ref().map_or(0, |s| s.unsealed_records()) == 0 {
+                    break; // hot tier already empty: nothing left to demote
+                }
+                self.seal_now()?; // force-seal so the span becomes demotable
+            }
+            self.demote_oldest()?;
+        }
+        Ok(())
+    }
+
+    /// Demote the oldest still-hot sealed segment to the cold tier and
+    /// rebuild the hot index over the surviving suffix (bit-exact:
+    /// surviving rows re-enter via `insert_prepared`).
+    fn demote_oldest(&mut self) -> Result<()> {
+        let meta =
+            self.storage.as_ref().unwrap().segments()[self.cold.segment_count()].clone();
+        let k = meta.count;
+        let mut fresh = build_index(
+            &self.cfg.index,
+            self.d_embed,
+            Metric::Cosine,
+            self.cfg.ivf_nlist,
+            self.cfg.ivf_nprobe,
+        )?;
+        for local in k..self.index.len() {
+            fresh.insert_prepared(self.index.vector(local))?;
+        }
+        self.index = fresh;
+        for r in &self.records[self.hot_base..self.hot_base + k] {
+            self.hot_meta_bytes -= Self::record_bytes(r);
+        }
+        self.hot_base += k;
+        self.cold.push(meta)?;
+        self.evictions += k as u64;
+        Ok(())
+    }
+
+    /// Force the WAL tail AND the frame log to disk (a durability point;
+    /// no-op for pure-RAM shards).  Dropping a durable shard WITHOUT
+    /// flushing is equivalent to a crash: everything since the last
+    /// seal/flush is lost.
+    pub fn flush(&mut self) -> Result<()> {
+        let Some(st) = self.storage.as_mut() else { return Ok(()) };
+        // frames first: a durable (replayable) record must never cite a
+        // frame the log lost
+        self.raw.sync()?;
+        st.flush()
     }
 
     /// Monotone count of index inserts ever applied to this shard.  The
     /// serving API's query cache snapshots this per touched shard and
     /// treats an entry as stale once the watermark advances past a bound.
+    /// `MemoryFabric::recover` restores it from disk, so cache staleness
+    /// logic keeps working across restarts.
     pub fn watermark(&self) -> u64 {
         self.watermark
     }
 
-    /// Similarity of the query vector against every indexed vector.
-    pub fn score_all(&self, query: &[f32], out: &mut Vec<f32>) {
-        self.index.score_all(query, out);
+    /// Similarity of the query vector against every indexed record, in
+    /// global id order: cold segments scan first (base order), then the
+    /// hot index scores in place.  When nothing has been demoted this is
+    /// exactly the legacy single-index scan.
+    pub fn score_all(&self, query: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        if self.cold.is_empty() {
+            self.index.score_all(query, out);
+            return Ok(());
+        }
+        out.clear();
+        out.reserve(self.records.len());
+        // the hierarchy always builds a cosine index: prepare the query
+        // exactly as the index would, so cold rows score identically.
+        // The hot tier deliberately receives the RAW query (normalizing
+        // inside `score_all`, same as the all-hot fast path above):
+        // passing `qn` would make the index normalize an already-unit
+        // vector, and `l2_normalize` is not bit-idempotent — the small
+        // duplicate normalization is the price of hot scores staying
+        // bit-identical across the tier split.
+        let mut qn = query.to_vec();
+        crate::util::l2_normalize(&mut qn);
+        self.cold.score_into(&qn, out)?;
+        let mut hot = Vec::new();
+        self.index.score_all(query, &mut hot);
+        out.extend_from_slice(&hot);
+        Ok(())
     }
 
-    /// Top-k indexed frames (vanilla greedy retrieval).
-    pub fn search_topk(&self, query: &[f32], k: usize) -> Vec<Hit> {
-        self.index.search(query, k)
+    /// Top-k indexed frames (vanilla greedy retrieval), tier-aware.
+    ///
+    /// Exactness follows the hot index while everything is hot (an IVF
+    /// index probes `ivf_nprobe` cells and may miss true top-k ids);
+    /// once any span is demoted the merged scan is exact — so with
+    /// `memory.index = "ivf"` the hit set can differ across tier states.
+    /// The Eq. 4–5 serving path is unaffected: it always goes through
+    /// the exact [`Hierarchy::score_all`].
+    pub fn search_topk(&self, query: &[f32], k: usize) -> Result<Vec<Hit>> {
+        if self.cold.is_empty() {
+            return Ok(self.index.search(query, k));
+        }
+        let mut scores = Vec::new();
+        self.score_all(query, &mut scores)?;
+        let mut order: Vec<usize> = (0..scores.len()).collect();
+        order.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+        });
+        Ok(order
+            .into_iter()
+            .take(k)
+            .map(|id| Hit { id, score: scores[id] })
+            .collect())
     }
 
-    pub fn record(&self, id: usize) -> &ClusterRecord {
-        &self.records[id]
+    /// Record metadata by global id; `None` for an id this shard never
+    /// indexed (e.g. a stale id from a cached selection) — a typed miss,
+    /// not a panic.
+    pub fn record(&self, id: usize) -> Option<&ClusterRecord> {
+        self.records.get(id)
     }
 
+    /// All records (hot and cold), in global id order.
     pub fn records(&self) -> &[ClusterRecord] {
         &self.records
     }
 
-    /// Stored vector by index id.
-    pub fn vector(&self, id: usize) -> &[f32] {
-        self.index.vector(id)
+    /// Copy of the stored (post-normalization) vector by global id: read
+    /// from the hot index in place, or paged in from the record's cold
+    /// segment.  Unknown ids and cold-tier IO failures are typed errors.
+    pub fn vector(&self, id: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            id < self.records.len(),
+            "vector {id} is not indexed in shard {:?} ({} records)",
+            self.stream,
+            self.records.len()
+        );
+        if id >= self.hot_base {
+            Ok(self.index.vector(id - self.hot_base).to_vec())
+        } else {
+            self.cold.vector(id)
+        }
     }
 
-    /// Number of indexed vectors (== clusters).
+    /// Number of indexed vectors (== clusters), across both tiers.
     pub fn len(&self) -> usize {
-        self.index.len()
+        self.records.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -166,11 +541,54 @@ impl Hierarchy {
         self.raw.resident_bytes()
     }
 
-    /// Invariant check (property tests): every record's members are
-    /// sorted, contain the centroid, refer to archived frames, and belong
-    /// to this shard's stream (per-stream isolation).
+    /// Per-tier residency and traffic gauges.
+    pub fn tier_stats(&self) -> TierStats {
+        let (cold_resident, hits, misses) = self.cold.cache_stats();
+        TierStats {
+            hot_bytes: self.hot_bytes(),
+            hot_records: self.records.len() - self.hot_base,
+            cold_records: self.hot_base,
+            cold_segments: self.cold.segment_count(),
+            cold_resident_bytes: cold_resident,
+            raw_resident_bytes: self.raw.resident_bytes(),
+            evictions: self.evictions,
+            cold_hits: hits,
+            cold_misses: misses,
+        }
+    }
+
+    /// Invariant check (property tests): tier split is consistent, every
+    /// record's members are sorted, contain the centroid, refer to
+    /// archived frames, and belong to this shard's stream.
     pub fn check_invariants(&self) -> Result<()> {
-        anyhow::ensure!(self.records.len() == self.index.len(), "record/index drift");
+        anyhow::ensure!(
+            self.records.len() == self.hot_base + self.index.len(),
+            "record/index drift: {} records != {} cold + {} hot",
+            self.records.len(),
+            self.hot_base,
+            self.index.len()
+        );
+        anyhow::ensure!(
+            self.cold.record_count() == self.hot_base,
+            "cold tier covers {} records but hot_base is {}",
+            self.cold.record_count(),
+            self.hot_base
+        );
+        if let Some(st) = self.storage.as_ref() {
+            anyhow::ensure!(
+                st.sealed_records() >= self.hot_base,
+                "demoted past the sealed watermark ({} < {})",
+                st.sealed_records(),
+                self.hot_base
+            );
+            anyhow::ensure!(
+                st.sealed_records() + st.unsealed_records() == self.records.len(),
+                "storage covers {}+{} records, shard has {}",
+                st.sealed_records(),
+                st.unsealed_records(),
+                self.records.len()
+            );
+        }
         for (i, r) in self.records.iter().enumerate() {
             anyhow::ensure!(
                 r.stream == self.stream,
@@ -201,6 +619,7 @@ mod tests {
     use super::*;
     use crate::config::MemoryConfig;
     use crate::memory::raw::InMemoryRaw;
+    use crate::memory::storage::tests::TempDir;
     use crate::util::rng::Pcg64;
     use crate::video::frame::Frame;
 
@@ -224,7 +643,7 @@ mod tests {
         let mut h = hierarchy();
         let mut rng = Pcg64::seeded(1);
         for i in 0..20u64 {
-            h.archive_frame(i, &Frame::filled(16, [0.5; 3]));
+            h.archive_frame(i, &Frame::filled(16, [0.5; 3])).unwrap();
         }
         let v = unit(&mut rng, 8);
         let id = h
@@ -239,7 +658,7 @@ mod tests {
             )
             .unwrap();
         assert_eq!(id, 0);
-        assert_eq!(h.record(0).members, vec![3, 4, 5]);
+        assert_eq!(h.record(0).unwrap().members, vec![3, 4, 5]);
         assert_eq!(h.len(), 1);
         h.check_invariants().unwrap();
     }
@@ -248,7 +667,7 @@ mod tests {
     fn rejects_foreign_stream_record() {
         let mut h = hierarchy(); // stream 0
         let mut rng = Pcg64::seeded(9);
-        h.archive_frame(0, &Frame::filled(16, [0.5; 3]));
+        h.archive_frame(0, &Frame::filled(16, [0.5; 3])).unwrap();
         let v = unit(&mut rng, 8);
         let err = h.insert(
             &v,
@@ -267,7 +686,7 @@ mod tests {
         let mut h = hierarchy();
         let mut rng = Pcg64::seeded(2);
         for i in 0..100u64 {
-            h.archive_frame(i, &Frame::filled(16, [0.1; 3]));
+            h.archive_frame(i, &Frame::filled(16, [0.1; 3])).unwrap();
         }
         let mut vs = Vec::new();
         for i in 0..10u64 {
@@ -284,7 +703,7 @@ mod tests {
             .unwrap();
             vs.push(v);
         }
-        let hits = h.search_topk(&vs[7], 1);
+        let hits = h.search_topk(&vs[7], 1).unwrap();
         assert_eq!(hits[0].id, 7);
         h.check_invariants().unwrap();
     }
@@ -293,7 +712,7 @@ mod tests {
     fn invariants_catch_bad_members() {
         let mut h = hierarchy();
         let mut rng = Pcg64::seeded(3);
-        h.archive_frame(0, &Frame::filled(16, [0.0; 3]));
+        h.archive_frame(0, &Frame::filled(16, [0.0; 3])).unwrap();
         let v = unit(&mut rng, 8);
         // centroid not in members
         h.insert(
@@ -314,7 +733,7 @@ mod tests {
         let mut h = hierarchy();
         let mut rng = Pcg64::seeded(4);
         for i in 0..100u64 {
-            h.archive_frame(i, &Frame::filled(16, [0.2; 3]));
+            h.archive_frame(i, &Frame::filled(16, [0.2; 3])).unwrap();
         }
         for c in 0..4u64 {
             let v = unit(&mut rng, 8);
@@ -338,7 +757,7 @@ mod tests {
         let mut rng = Pcg64::seeded(5);
         assert_eq!(h.watermark(), 0);
         for i in 0..10u64 {
-            h.archive_frame(i, &Frame::filled(16, [0.5; 3]));
+            h.archive_frame(i, &Frame::filled(16, [0.5; 3])).unwrap();
         }
         assert_eq!(h.watermark(), 0, "archiving alone must not advance the watermark");
         for c in 0..3u64 {
@@ -360,10 +779,159 @@ mod tests {
     #[test]
     fn fetch_frame_reports_holes() {
         let mut h = hierarchy();
-        h.archive_frame(0, &Frame::filled(16, [0.5; 3]));
+        h.archive_frame(0, &Frame::filled(16, [0.5; 3])).unwrap();
         assert!(h.fetch_frame(0).is_ok());
         let err = h.fetch_frame(7).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("missing"), "diagnostic missing: {msg}");
+    }
+
+    #[test]
+    fn typed_accessors_reject_stale_ids() {
+        let mut h = hierarchy();
+        let mut rng = Pcg64::seeded(6);
+        h.archive_frame(0, &Frame::filled(16, [0.5; 3])).unwrap();
+        let v = unit(&mut rng, 8);
+        h.insert(
+            &v,
+            ClusterRecord {
+                stream: StreamId(0),
+                scene_id: 0,
+                centroid_frame: 0,
+                members: vec![0],
+            },
+        )
+        .unwrap();
+        assert!(h.record(0).is_some());
+        assert!(h.record(7).is_none(), "stale record id is a typed miss");
+        assert!(h.vector(0).is_ok());
+        let err = h.vector(7).unwrap_err();
+        assert!(format!("{err:#}").contains("not indexed"), "stale vector id is typed");
+    }
+
+    #[test]
+    fn budget_without_storage_is_rejected() {
+        let cfg = MemoryConfig { hot_budget_bytes: 1024, ..Default::default() };
+        let err = Hierarchy::new(&cfg, 8, Box::new(InMemoryRaw::new(16)));
+        assert!(err.is_err(), "a hot budget needs somewhere to demote into");
+    }
+
+    /// Deterministic durable shard filled with `n` single-frame clusters.
+    fn fill(h: &mut Hierarchy, n: u64, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut vs = Vec::new();
+        for i in 0..n {
+            h.archive_frame(i, &Frame::filled(8, [0.5; 3])).unwrap();
+            let v = unit(&mut rng, d);
+            h.insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(0),
+                    scene_id: i as usize,
+                    centroid_frame: i,
+                    members: vec![i],
+                },
+            )
+            .unwrap();
+            vs.push(v);
+        }
+        vs
+    }
+
+    #[test]
+    fn eviction_bounds_hot_tier_and_keeps_scores_exact() {
+        let tmp = TempDir::new("hier-evict");
+        let d = 8usize;
+        let cfg = MemoryConfig {
+            segment_records: 4,
+            cold_cache_segments: 2,
+            ..Default::default()
+        };
+        // unbounded twin: the ground-truth score vector
+        let mut free = Hierarchy::durable(&cfg, d, StreamId(0), &tmp.0.join("free"), 8)
+            .unwrap();
+        let vs = fill(&mut free, 32, d, 42);
+
+        // budget that holds roughly 10 records' vectors+metadata
+        let budget = 10 * (d * 4 + std::mem::size_of::<ClusterRecord>() + 8);
+        let cfg_b = MemoryConfig { hot_budget_bytes: budget, ..cfg.clone() };
+        let mut bounded =
+            Hierarchy::durable(&cfg_b, d, StreamId(0), &tmp.0.join("bounded"), 8).unwrap();
+        fill(&mut bounded, 32, d, 42);
+
+        assert!(bounded.hot_bytes() <= budget, "hot tier over budget");
+        let ts = bounded.tier_stats();
+        assert!(ts.cold_segments > 0 && ts.evictions > 0, "eviction never ran: {ts:?}");
+        assert_eq!(ts.cold_records + ts.hot_records, 32);
+        bounded.check_invariants().unwrap();
+        free.check_invariants().unwrap();
+
+        // Eq. 4 scores are bit-identical across the tier split
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        free.score_all(&vs[3], &mut a).unwrap();
+        bounded.score_all(&vs[3], &mut b).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "score {i} differs across tiers");
+        }
+        // cold vectors page back bit-exact too
+        let v0 = bounded.vector(0).unwrap();
+        let f0 = free.vector(0).unwrap();
+        assert_eq!(
+            v0.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            f0.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // tier-aware top-k agrees with the unbounded index
+        let top_free = free.search_topk(&vs[5], 3).unwrap();
+        let top_bounded = bounded.search_topk(&vs[5], 3).unwrap();
+        assert_eq!(
+            top_free.iter().map(|h| h.id).collect::<Vec<_>>(),
+            top_bounded.iter().map(|h| h.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn durable_shard_recovers_sealed_plus_flushed() {
+        let tmp = TempDir::new("hier-recover");
+        let d = 8usize;
+        let cfg = MemoryConfig { segment_records: 4, ..Default::default() };
+        {
+            let mut h = Hierarchy::durable(&cfg, d, StreamId(0), &tmp.0, 8).unwrap();
+            fill(&mut h, 10, d, 7); // 2 seals (8 records) + 2 in the WAL
+            assert_eq!(h.watermark(), 10);
+            // no flush: the 2-record WAL tail is lost on drop
+        }
+        let h = Hierarchy::durable(&cfg, d, StreamId(0), &tmp.0, 8).unwrap();
+        assert_eq!(h.watermark(), 8, "recovery lands on the sealed watermark");
+        assert_eq!(h.len(), 8);
+        assert_eq!(h.frames_ingested(), 10, "frame log is eager — all frames survive");
+        assert_eq!(
+            h.tier_stats().cold_records,
+            0,
+            "unbounded shard promotes every sealed span back to RAM"
+        );
+        h.check_invariants().unwrap();
+        // now extend past the lost tail and flush: everything survives
+        let mut h = h;
+        let mut rng = Pcg64::seeded(99);
+        for i in 8..12u64 {
+            h.archive_frame(i.max(h.frames_ingested()), &Frame::filled(8, [0.5; 3])).unwrap();
+            let v = unit(&mut rng, d);
+            h.insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(0),
+                    scene_id: i as usize,
+                    centroid_frame: i,
+                    members: vec![i],
+                },
+            )
+            .unwrap();
+        }
+        h.flush().unwrap();
+        drop(h);
+        let h = Hierarchy::durable(&cfg, d, StreamId(0), &tmp.0, 8).unwrap();
+        assert_eq!(h.watermark(), 12, "flushed WAL tail survives the restart");
+        h.check_invariants().unwrap();
     }
 }

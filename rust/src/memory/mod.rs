@@ -1,13 +1,19 @@
 //! Hierarchical memory (Fig. 8): raw data layer + semantic index layer,
 //! sharded per camera stream by the multi-tenant [`fabric`].
-//! The vector database substrate lives in [`vectordb`].
+//! The vector database substrate lives in [`vectordb`]; the durable
+//! write path (WAL, frame log, manifests) in [`storage`], and the sealed
+//! cold tier in [`segment`].
 
 pub mod fabric;
 pub mod hierarchy;
 pub mod raw;
+pub mod segment;
+pub mod storage;
 pub mod vectordb;
 
 pub use fabric::{FrameId, MemoryFabric, StreamId, StreamScope};
-pub use hierarchy::{ClusterRecord, Hierarchy};
+pub use hierarchy::{ClusterRecord, Hierarchy, TierStats};
 pub use raw::{InMemoryRaw, RawStore, SynthBackedRaw};
+pub use segment::{ColdTier, SegmentMeta};
+pub use storage::{DiskRaw, StreamStorage};
 pub use vectordb::{build_index, FlatIndex, Hit, IvfIndex, Metric, VectorIndex};

@@ -11,6 +11,8 @@
 
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::video::frame::Frame;
 use crate::video::synth::VideoSynth;
 
@@ -19,7 +21,11 @@ use crate::video::synth::VideoSynth;
 /// are read concurrently by many query workers.
 pub trait RawStore: Send + Sync {
     /// Archive a frame under its stream-local id (ids arrive in order).
-    fn put(&mut self, id: u64, frame: &Frame);
+    /// Fallible: a disk-backed store's write error (a full edge SSD is
+    /// the most likely runtime failure) must surface as a typed error —
+    /// a panic here would poison the shard lock and take down every
+    /// query worker with it.
+    fn put(&mut self, id: u64, frame: &Frame) -> Result<()>;
 
     /// Fetch a frame by id; `None` when the id was never archived (a hole
     /// in the archive — e.g. a query raced ahead of ingestion, or a
@@ -32,6 +38,13 @@ pub trait RawStore: Send + Sync {
 
     fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Make archived frames durable (fsync for disk-backed stores).
+    /// Part of the fabric-wide durability point: records become durable
+    /// via the WAL/manifest, so the frames they cite must be too.
+    fn sync(&mut self) -> Result<()> {
+        Ok(())
     }
 
     /// Approximate resident bytes (for the memory-growth bench).
@@ -51,19 +64,25 @@ impl InMemoryRaw {
 }
 
 impl RawStore for InMemoryRaw {
-    fn put(&mut self, id: u64, frame: &Frame) {
-        assert_eq!(
-            id,
-            self.frames.len() as u64,
-            "InMemoryRaw expects dense sequential ids"
+    fn put(&mut self, id: u64, frame: &Frame) -> Result<()> {
+        anyhow::ensure!(
+            id == self.frames.len() as u64,
+            "InMemoryRaw expects dense sequential ids (got {id}, next is {})",
+            self.frames.len()
         );
-        assert_eq!(frame.size(), self.size);
+        anyhow::ensure!(
+            frame.size() == self.size,
+            "frame size {} != store size {}",
+            frame.size(),
+            self.size
+        );
         let q: Vec<u8> = frame
             .data()
             .iter()
             .map(|&x| (x.clamp(0.0, 1.0) * 255.0).round() as u8)
             .collect();
         self.frames.push(q);
+        Ok(())
     }
 
     fn get(&self, id: u64) -> Option<Frame> {
@@ -94,9 +113,10 @@ impl SynthBackedRaw {
 }
 
 impl RawStore for SynthBackedRaw {
-    fn put(&mut self, id: u64, _frame: &Frame) {
+    fn put(&mut self, id: u64, _frame: &Frame) -> Result<()> {
         // the "SSD" already persists the stream; just track the watermark
         self.archived = self.archived.max(id + 1);
+        Ok(())
     }
 
     fn get(&self, id: u64) -> Option<Frame> {
@@ -125,7 +145,7 @@ mod tests {
     fn in_memory_roundtrip_quantized() {
         let mut store = InMemoryRaw::new(8);
         let f = Frame::filled(8, [0.25, 0.5, 0.75]);
-        store.put(0, &f);
+        store.put(0, &f).unwrap();
         let g = store.get(0).expect("archived frame");
         for (a, b) in f.data().iter().zip(g.data()) {
             assert!((a - b).abs() <= 0.5 / 255.0 + 1e-6);
@@ -136,10 +156,10 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
     fn in_memory_rejects_gaps() {
+        // a gap is a typed error now, not a panic that poisons the lock
         let mut store = InMemoryRaw::new(8);
-        store.put(5, &Frame::filled(8, [0.0; 3]));
+        assert!(store.put(5, &Frame::filled(8, [0.0; 3])).is_err());
     }
 
     #[test]
@@ -153,7 +173,7 @@ mod tests {
         ));
         let mut store = SynthBackedRaw::new(synth.clone());
         for i in 0..10 {
-            store.put(i, &synth.frame(i));
+            store.put(i, &synth.frame(i)).unwrap();
         }
         assert_eq!(store.get(3), Some(synth.frame(3)));
         assert_eq!(store.resident_bytes(), 0);

@@ -1,0 +1,442 @@
+//! Immutable sealed segments + the cold tier that scores them.
+//!
+//! A sealed segment is one contiguous span of a stream's index inserts,
+//! frozen into a single file by the WAL compactor:
+//!
+//! ```text
+//! header : magic "VENUSSEG" | version u32 | stream u16 | base u64
+//!          | count u32 | d u32 | vec_off u64 | rec_sum u64 | vec_sum u64
+//! records: count × (scene u64 | centroid u64 | n u32 | members u64×n)
+//! vectors: count × d little-endian f32, row-major, at vec_off
+//! ```
+//!
+//! The two regions carry independent FNV-64 checksums: record metadata is
+//! validated once at recovery (it becomes resident), vector blocks are
+//! validated on each load (they page in and out of the LRU cache).
+//!
+//! The stored vector bytes are the index's *post-normalization* rows
+//! (read back via `VectorIndex::vector` before sealing), and the cold
+//! scan scores them with the same dot product the hot index uses — so a
+//! record's Eq. 4 score is bit-identical whether its vector is resident
+//! in the hot tier, demoted to a segment, or recovered after restart.
+
+use std::fs::File;
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::memory::fabric::StreamId;
+use crate::memory::hierarchy::ClusterRecord;
+use crate::memory::storage::{fnv1a64, put_u16, put_u32, put_u64, ByteReader};
+
+const SEG_MAGIC: &[u8; 8] = b"VENUSSEG";
+const SEG_VERSION: u32 = 1;
+/// magic + version + stream + base + count + d + vec_off + rec_sum + vec_sum
+const SEG_HEADER_LEN: usize = 8 + 4 + 2 + 8 + 4 + 4 + 8 + 8 + 8;
+
+/// Metadata of one sealed, immutable segment file.
+#[derive(Clone, Debug)]
+pub struct SegmentMeta {
+    pub path: PathBuf,
+    /// file name relative to the stream directory (what MANIFEST lists)
+    pub file_name: String,
+    /// global record id of the segment's first record
+    pub base: usize,
+    /// records in the segment
+    pub count: usize,
+    /// embedding dimension
+    pub d: usize,
+    vec_off: u64,
+    vec_sum: u64,
+}
+
+/// Write one sealed segment: records region + vector region, fsync'd.
+/// `vectors` is `records.len() * d` floats, row-major, in record order.
+pub fn write_segment(
+    path: &Path,
+    stream: StreamId,
+    base: usize,
+    records: &[ClusterRecord],
+    vectors: &[f32],
+    d: usize,
+) -> Result<SegmentMeta> {
+    anyhow::ensure!(!records.is_empty(), "empty segment");
+    anyhow::ensure!(records.len() * d == vectors.len(), "segment vector shape");
+
+    let mut rec_region = Vec::new();
+    for r in records {
+        put_u64(&mut rec_region, r.scene_id as u64);
+        put_u64(&mut rec_region, r.centroid_frame);
+        put_u32(&mut rec_region, r.members.len() as u32);
+        for &m in &r.members {
+            put_u64(&mut rec_region, m);
+        }
+    }
+    let mut vec_region = Vec::with_capacity(vectors.len() * 4);
+    for &x in vectors {
+        vec_region.extend_from_slice(&x.to_le_bytes());
+    }
+    let vec_off = (SEG_HEADER_LEN + rec_region.len()) as u64;
+    let rec_sum = fnv1a64(&rec_region);
+    let vec_sum = fnv1a64(&vec_region);
+
+    let mut header = Vec::with_capacity(SEG_HEADER_LEN);
+    header.extend_from_slice(SEG_MAGIC);
+    put_u32(&mut header, SEG_VERSION);
+    put_u16(&mut header, stream.0);
+    put_u64(&mut header, base as u64);
+    put_u32(&mut header, records.len() as u32);
+    put_u32(&mut header, d as u32);
+    put_u64(&mut header, vec_off);
+    put_u64(&mut header, rec_sum);
+    put_u64(&mut header, vec_sum);
+    debug_assert_eq!(header.len(), SEG_HEADER_LEN);
+
+    let mut f = File::create(path)
+        .with_context(|| format!("creating segment {}", path.display()))?;
+    f.write_all(&header)?;
+    f.write_all(&rec_region)?;
+    f.write_all(&vec_region)?;
+    f.sync_all()?;
+
+    Ok(SegmentMeta {
+        path: path.to_path_buf(),
+        file_name: path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default(),
+        base,
+        count: records.len(),
+        d,
+        vec_off,
+        vec_sum,
+    })
+}
+
+/// Open a sealed segment: validate the header + record-region checksum
+/// and return its metadata plus the (resident) record metadata.  Only
+/// the header and record region are read — the vector region stays on
+/// disk (recovery must not page in the whole cold tier; its checksum is
+/// verified lazily on each [`ColdTier`] block load).
+pub fn open_segment(
+    path: &Path,
+    stream: StreamId,
+    d: usize,
+) -> Result<(SegmentMeta, Vec<ClusterRecord>)> {
+    let file = File::open(path)
+        .with_context(|| format!("opening segment {}", path.display()))?;
+    let file_len = file.metadata()?.len();
+    if file_len < SEG_HEADER_LEN as u64 {
+        bail!("segment {} shorter than its header", path.display());
+    }
+    let mut header = vec![0u8; SEG_HEADER_LEN];
+    file.read_exact_at(&mut header, 0)
+        .with_context(|| format!("reading header of {}", path.display()))?;
+    let mut r = ByteReader::new(&header);
+    if r.take(8)? != SEG_MAGIC {
+        bail!("not a Venus segment");
+    }
+    if r.u32()? != SEG_VERSION {
+        bail!("unsupported segment version");
+    }
+    let h_stream = r.u16()?;
+    let base = r.u64()? as usize;
+    let count = r.u32()? as usize;
+    let h_d = r.u32()? as usize;
+    let vec_off = r.u64()?;
+    let rec_sum = r.u64()?;
+    let vec_sum = r.u64()?;
+    if h_stream != stream.0 || h_d != d {
+        bail!("segment is for stream s{h_stream} (d={h_d}), expected {stream} (d={d})");
+    }
+    if (vec_off as usize) < SEG_HEADER_LEN || vec_off > file_len {
+        bail!("segment vector offset out of bounds");
+    }
+    let mut rec_region = vec![0u8; vec_off as usize - SEG_HEADER_LEN];
+    file.read_exact_at(&mut rec_region, SEG_HEADER_LEN as u64)
+        .with_context(|| format!("reading record region of {}", path.display()))?;
+    let rec_region = &rec_region[..];
+    if fnv1a64(rec_region) != rec_sum {
+        bail!("segment record region checksum mismatch");
+    }
+    let mut rr = ByteReader::new(rec_region);
+    // cap the reservation by what the (checksummed) region can actually
+    // hold — a record is ≥ 20 bytes — so a corrupt, unchecksummed header
+    // count yields a typed parse error, not an allocation abort
+    let mut records = Vec::with_capacity(count.min(rec_region.len() / 20));
+    for _ in 0..count {
+        let scene_id = rr.u64()? as usize;
+        let centroid_frame = rr.u64()?;
+        let n = rr.u32()? as usize;
+        let mut members = Vec::with_capacity(n);
+        for _ in 0..n {
+            members.push(rr.u64()?);
+        }
+        records.push(ClusterRecord { stream, scene_id, centroid_frame, members });
+    }
+    if rr.remaining() != 0 {
+        bail!("segment record region has trailing bytes");
+    }
+    if file_len < vec_off + (count * d * 4) as u64 {
+        bail!("segment vector region truncated");
+    }
+    Ok((
+        SegmentMeta {
+            path: path.to_path_buf(),
+            file_name: path
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            base,
+            count,
+            d,
+            vec_off,
+            vec_sum,
+        },
+        records,
+    ))
+}
+
+/// Load (and checksum-verify) a segment's vector block.  Also used by
+/// recovery to promote sealed spans back into the hot index, bit-exact.
+pub(crate) fn load_vectors(meta: &SegmentMeta) -> Result<Vec<f32>> {
+    let file = File::open(&meta.path)
+        .with_context(|| format!("opening segment {}", meta.path.display()))?;
+    let mut raw = vec![0u8; meta.count * meta.d * 4];
+    file.read_exact_at(&mut raw, meta.vec_off)
+        .with_context(|| format!("reading vectors of {}", meta.path.display()))?;
+    if fnv1a64(&raw) != meta.vec_sum {
+        bail!("segment {} vector checksum mismatch", meta.path.display());
+    }
+    let mut out = Vec::with_capacity(meta.count * meta.d);
+    for chunk in raw.chunks_exact(4) {
+        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(out)
+}
+
+/// The cold tier of one memory shard: the demoted prefix of its record
+/// space, held as sealed segments whose vector blocks page through a
+/// bounded LRU cache.  Scoring walks the segments in base order, so the
+/// concatenated cold scores land in global id order — exactly the prefix
+/// the hot tier's in-place scores continue.
+///
+/// Interior mutability: the scan runs under the shard's *read* lock, so
+/// the LRU lives behind its own mutex (held across a miss's disk load —
+/// concurrent readers of the same shard serialize on cold misses, which
+/// keeps duplicate loads out).
+pub struct ColdTier {
+    segments: Vec<SegmentMeta>,
+    records: usize,
+    /// MRU-front cache of (segment index, vector block)
+    cache: Mutex<Vec<(usize, Arc<Vec<f32>>)>>,
+    cache_cap: usize,
+    resident_bytes: AtomicUsize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ColdTier {
+    pub fn new(cache_cap: usize) -> Self {
+        Self {
+            segments: Vec::new(),
+            records: 0,
+            cache: Mutex::new(Vec::new()),
+            cache_cap: cache_cap.max(1),
+            resident_bytes: AtomicUsize::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Demote the next sealed segment (must extend the tier contiguously).
+    pub fn push(&mut self, meta: SegmentMeta) -> Result<()> {
+        anyhow::ensure!(
+            meta.base == self.records,
+            "cold tier gap: segment base {} after {} records",
+            meta.base,
+            self.records
+        );
+        self.records += meta.count;
+        self.segments.push(meta);
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// Demoted segments.
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Demoted records (== the hot tier's base id).
+    pub fn record_count(&self) -> usize {
+        self.records
+    }
+
+    /// Vector block of segment `i`, through the LRU cache.
+    fn block(&self, i: usize) -> Result<Arc<Vec<f32>>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(pos) = cache.iter().position(|(s, _)| *s == i) {
+            let entry = cache.remove(pos);
+            let block = Arc::clone(&entry.1);
+            cache.insert(0, entry); // MRU to front
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(block);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let block = Arc::new(load_vectors(&self.segments[i])?);
+        self.resident_bytes
+            .fetch_add(block.len() * 4, Ordering::Relaxed);
+        cache.insert(0, (i, Arc::clone(&block)));
+        while cache.len() > self.cache_cap {
+            let (_, evicted) = cache.pop().unwrap();
+            self.resident_bytes
+                .fetch_sub(evicted.len() * 4, Ordering::Relaxed);
+        }
+        Ok(block)
+    }
+
+    /// Score the query against every cold vector, appending to `out` in
+    /// global id order.  `qn` must already be metric-prepared (the
+    /// hierarchy L2-normalizes it, matching the hot index's cosine path),
+    /// and the row scorer is the same dot product — Eq. 4 values are
+    /// bit-identical to scoring the same vector hot.
+    pub fn score_into(&self, qn: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        for i in 0..self.segments.len() {
+            let d = self.segments[i].d;
+            let block = self.block(i)?;
+            for row in block.chunks_exact(d) {
+                out.push(crate::util::dot(qn, row));
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy of the stored vector for global id `id` (must be < the cold
+    /// record count).
+    pub fn vector(&self, id: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(id < self.records, "id {id} is not in the cold tier");
+        let i = match self
+            .segments
+            .binary_search_by(|m| m.base.cmp(&id))
+        {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let meta = &self.segments[i];
+        let local = id - meta.base;
+        let block = self.block(i)?;
+        Ok(block[local * meta.d..(local + 1) * meta.d].to_vec())
+    }
+
+    /// (resident block bytes, cache hits, cache misses)
+    pub fn cache_stats(&self) -> (usize, u64, u64) {
+        (
+            self.resident_bytes.load(Ordering::Relaxed),
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> crate::memory::storage::tests::TempDir {
+        crate::memory::storage::tests::TempDir::new(tag)
+    }
+
+    fn seg_records(n: usize, base: usize) -> Vec<ClusterRecord> {
+        (0..n)
+            .map(|i| ClusterRecord {
+                stream: StreamId(0),
+                scene_id: base + i,
+                centroid_frame: (base + i) as u64,
+                members: vec![(base + i) as u64],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn segment_round_trips_records_and_vectors() {
+        let dir = tmp("seg");
+        let path = dir.0.join("seg-00000.seg");
+        let records = seg_records(3, 0);
+        let vectors = vec![1.0f32, 0.0, 0.0, 1.0, 0.6, 0.8];
+        let meta = write_segment(&path, StreamId(0), 0, &records, &vectors, 2).unwrap();
+        assert_eq!(meta.count, 3);
+        let (meta2, recs2) = open_segment(&path, StreamId(0), 2).unwrap();
+        assert_eq!(meta2.base, 0);
+        assert_eq!(recs2.len(), 3);
+        assert_eq!(recs2[2].scene_id, 2);
+        let loaded = load_vectors(&meta2).unwrap();
+        assert_eq!(loaded, vectors);
+        // wrong stream / dim are typed errors
+        assert!(open_segment(&path, StreamId(1), 2).is_err());
+        assert!(open_segment(&path, StreamId(0), 3).is_err());
+    }
+
+    #[test]
+    fn segment_detects_corruption() {
+        let dir = tmp("segcorrupt");
+        let path = dir.0.join("seg-00000.seg");
+        let records = seg_records(2, 0);
+        write_segment(&path, StreamId(0), 0, &records, &[1.0, 0.0, 0.0, 1.0], 2).unwrap();
+        // flip a byte in the vector region (the tail of the file)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let (meta, _) = open_segment(&path, StreamId(0), 2).unwrap();
+        assert!(load_vectors(&meta).is_err(), "vector checksum must catch the flip");
+    }
+
+    #[test]
+    fn cold_tier_scores_in_global_order_with_lru() {
+        let dir = tmp("cold");
+        let mut tier = ColdTier::new(1); // capacity 1 forces paging
+        // two segments: ids 0..2 and 2..4, orthogonal unit vectors
+        let v = [[1.0f32, 0.0], [0.0, 1.0], [-1.0, 0.0], [0.0, -1.0]];
+        for (s, base) in [(0usize, 0usize), (1, 2)] {
+            let path = dir.0.join(format!("seg-{s:05}.seg"));
+            let records = seg_records(2, base);
+            let mut vecs = Vec::new();
+            for row in &v[base..base + 2] {
+                vecs.extend_from_slice(row);
+            }
+            let meta = write_segment(&path, StreamId(0), base, &records, &vecs, 2).unwrap();
+            tier.push(meta).unwrap();
+        }
+        assert_eq!(tier.record_count(), 4);
+        let mut out = Vec::new();
+        tier.score_into(&[1.0, 0.0], &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 0.0, -1.0, 0.0]);
+        // per-id vector fetch spans the segment boundary
+        assert_eq!(tier.vector(3).unwrap(), vec![0.0, -1.0]);
+        assert!(tier.vector(4).is_err());
+        // capacity-1 cache: the two-segment scan paged blocks in and out
+        let (resident, hits, misses) = tier.cache_stats();
+        assert!(misses >= 2, "both blocks were loaded at least once");
+        assert!(resident <= 2 * 2 * 4, "at most one block resident");
+        let _ = hits;
+    }
+
+    #[test]
+    fn cold_tier_rejects_gaps() {
+        let dir = tmp("coldgap");
+        let path = dir.0.join("seg-00000.seg");
+        let records = seg_records(2, 5);
+        let meta = write_segment(&path, StreamId(0), 5, &records, &[1.0, 0.0, 0.0, 1.0], 2)
+            .unwrap();
+        let mut tier = ColdTier::new(2);
+        assert!(tier.push(meta).is_err(), "segment base 5 cannot start the tier");
+    }
+}

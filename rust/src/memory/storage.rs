@@ -1,0 +1,943 @@
+//! Durable storage layer (Fig. 8: the raw layer is the device SSD) —
+//! the append-only write path behind a durable memory shard.
+//!
+//! One stream's on-disk state lives in its own directory:
+//!
+//! ```text
+//! s<K>/
+//!   MANIFEST            sealed-segment list (atomic tmp+rename updates)
+//!   wal.log             write-ahead log of unsealed index inserts
+//!   seg-00000.seg       immutable sealed segments (see `segment`)
+//!   frames-00000.dat    raw frame log chunks (u8-quantized RGB)
+//! ```
+//!
+//! Write path: every archived frame is appended to the frame log at a
+//! computed offset (fixed frame size ⇒ no offset index); every index
+//! insert (record metadata + the index's post-normalization embedding
+//! bytes) is appended to the WAL.  Once `memory.segment_records` inserts
+//! accumulate, the span is sealed: an immutable segment file is written
+//! and fsync'd, the stream MANIFEST is atomically replaced to list it,
+//! and the WAL resets.
+//!
+//! Durability points and crash semantics:
+//!  * a sealed segment is durable the moment its MANIFEST entry lands
+//!    (rename is atomic: recovery either sees the segment or it doesn't);
+//!  * WAL appends buffer in memory until [`StreamStorage::flush`] (or a
+//!    seal) — dropping the shard WITHOUT flushing is deliberately
+//!    equivalent to a crash, which the recovery tests exploit;
+//!  * frame-log writes go straight to the file descriptor (readable
+//!    immediately, OS-buffered), so recovered records never cite frames
+//!    the log can't serve.
+//!
+//! Recovery replays the MANIFEST's segments, then the WAL's valid prefix
+//! (length + checksum framed entries; a torn tail is truncated, not an
+//! error).  See `DESIGN.md` §Storage for the invariants.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::memory::fabric::StreamId;
+use crate::memory::hierarchy::ClusterRecord;
+use crate::memory::raw::RawStore;
+use crate::memory::segment::{self, SegmentMeta};
+use crate::video::frame::Frame;
+
+// ---------------------------------------------------------------------
+// little-endian byte helpers shared by the WAL and segment formats
+// ---------------------------------------------------------------------
+
+pub(crate) fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// FNV-1a 64-bit: the torn-write detector for WAL entries and segment
+/// regions (we need corruption *detection*, not cryptographic strength).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+pub(crate) struct ByteReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub(crate) fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            bail!("truncated: wanted {n} bytes at {}", self.pos);
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+}
+
+/// Encode one index insert: record metadata + stored embedding bytes.
+/// The stream id is NOT encoded — it is context (directory + headers).
+pub(crate) fn encode_insert(buf: &mut Vec<u8>, rec: &ClusterRecord, vector: &[f32]) {
+    put_u64(buf, rec.scene_id as u64);
+    put_u64(buf, rec.centroid_frame);
+    put_u32(buf, rec.members.len() as u32);
+    for &m in &rec.members {
+        put_u64(buf, m);
+    }
+    for &x in vector {
+        put_f32(buf, x);
+    }
+}
+
+/// Decode one insert encoded by [`encode_insert`].
+pub(crate) fn decode_insert(
+    r: &mut ByteReader<'_>,
+    d: usize,
+    stream: StreamId,
+) -> Result<(ClusterRecord, Vec<f32>)> {
+    let scene_id = r.u64()? as usize;
+    let centroid_frame = r.u64()?;
+    let n = r.u32()? as usize;
+    if n > 1 << 24 {
+        bail!("implausible member count {n}");
+    }
+    let mut members = Vec::with_capacity(n);
+    for _ in 0..n {
+        members.push(r.u64()?);
+    }
+    let mut vector = Vec::with_capacity(d);
+    for _ in 0..d {
+        vector.push(r.f32()?);
+    }
+    Ok((ClusterRecord { stream, scene_id, centroid_frame, members }, vector))
+}
+
+/// Write `bytes` to `path` atomically: tmp file, fsync, rename, then a
+/// best-effort directory fsync so the rename itself is durable.
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// write-ahead log
+// ---------------------------------------------------------------------
+
+const WAL_MAGIC: &[u8; 8] = b"VENUSWAL";
+const WAL_VERSION: u32 = 1;
+/// magic + version + stream + d + first_id + header checksum
+const WAL_HEADER_LEN: u64 = 8 + 4 + 2 + 4 + 8 + 8;
+/// Refuse to decode WAL entries larger than this (corrupt length field).
+const WAL_MAX_ENTRY: u32 = 1 << 24;
+
+/// Append-only write-ahead log of unsealed index inserts.
+///
+/// Appends buffer in memory; [`Wal::flush`] writes + fsyncs them.  Drop
+/// loses the unflushed tail by design (crash semantics).  The header
+/// carries `first_id` — the global record id of the first entry — so
+/// recovery can discard entries that a completed seal already covers
+/// (the crash window between MANIFEST rename and WAL reset).
+struct Wal {
+    file: File,
+    d: usize,
+    stream: StreamId,
+    /// entries already written (and fsync'd) to the file
+    flushed: usize,
+    /// encoded-but-unflushed entries
+    pending: Vec<u8>,
+    pending_count: usize,
+}
+
+impl Wal {
+    /// Header with a trailing FNV64 of the preceding bytes: `first_id`
+    /// aligns replayed entries with the sealed watermark, so corrupting
+    /// it must be *detected* (and the log discarded), never silently
+    /// shift durably-flushed records to the wrong global ids.
+    fn header_bytes(stream: StreamId, d: usize, first_id: u64) -> Vec<u8> {
+        let mut h = Vec::with_capacity(WAL_HEADER_LEN as usize);
+        h.extend_from_slice(WAL_MAGIC);
+        put_u32(&mut h, WAL_VERSION);
+        put_u16(&mut h, stream.0);
+        put_u32(&mut h, d as u32);
+        put_u64(&mut h, first_id);
+        let sum = fnv1a64(&h);
+        put_u64(&mut h, sum);
+        h
+    }
+
+    /// Open (or create) the log, replaying its valid prefix.  Returns the
+    /// log positioned for appends plus the replayed tail `(first_id,
+    /// entries)`; a torn/corrupt tail is truncated away, never an error.
+    fn open(
+        path: PathBuf,
+        stream: StreamId,
+        d: usize,
+    ) -> Result<(Self, u64, Vec<(ClusterRecord, Vec<f32>)>)> {
+        let existing = std::fs::read(&path).unwrap_or_default();
+        let mut entries = Vec::new();
+        let mut first_id = 0u64;
+        let mut valid_len = 0u64;
+        if existing.len() as u64 >= WAL_HEADER_LEN {
+            let mut r = ByteReader::new(&existing);
+            let magic = r.take(8)?;
+            let version = r.u32()?;
+            let h_stream = r.u16()?;
+            let h_d = r.u32()? as usize;
+            if magic != WAL_MAGIC || version != WAL_VERSION {
+                bail!("{}: not a Venus WAL", path.display());
+            }
+            if h_stream != stream.0 || h_d != d {
+                bail!(
+                    "{}: WAL for stream s{h_stream} (d={h_d}), expected {stream} (d={d})",
+                    path.display()
+                );
+            }
+            first_id = r.u64()?;
+            let header_sum = r.u64()?;
+            if fnv1a64(&existing[..(WAL_HEADER_LEN - 8) as usize]) != header_sum {
+                // a corrupt first_id cannot be aligned with the sealed
+                // watermark — replaying would silently shift global ids,
+                // so the whole log is discarded (sealed state wins)
+                first_id = 0;
+                valid_len = 0;
+            } else {
+                valid_len = WAL_HEADER_LEN;
+            }
+            // replay: [len u32][fnv64 u64][payload] frames until the
+            // first torn or corrupt entry (skipped entirely when the
+            // header itself failed its checksum)
+            while valid_len > 0 {
+                if r.remaining() < 12 {
+                    break;
+                }
+                let len = r.u32()?;
+                let sum = r.u64()?;
+                if len == 0 || len > WAL_MAX_ENTRY || r.remaining() < len as usize {
+                    break;
+                }
+                let payload = r.take(len as usize)?;
+                if fnv1a64(payload) != sum {
+                    break;
+                }
+                let mut pr = ByteReader::new(payload);
+                match decode_insert(&mut pr, d, stream) {
+                    Ok(entry) if pr.remaining() == 0 => entries.push(entry),
+                    _ => break,
+                }
+                valid_len += 12 + len as u64;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        if valid_len == 0 {
+            // fresh (or unreadable-header) log: write a clean header
+            file.set_len(0)?;
+            file.write_all(&Self::header_bytes(stream, d, first_id))?;
+        } else {
+            // drop any torn tail so appends extend the valid prefix
+            file.set_len(valid_len)?;
+        }
+        file.seek(SeekFrom::End(0))?;
+        let flushed = entries.len();
+        Ok((
+            Self {
+                file,
+                d,
+                stream,
+                flushed,
+                pending: Vec::new(),
+                pending_count: 0,
+            },
+            first_id,
+            entries,
+        ))
+    }
+
+    /// Buffer one insert (becomes durable on the next flush or seal).
+    fn append(&mut self, rec: &ClusterRecord, vector: &[f32]) {
+        debug_assert_eq!(vector.len(), self.d);
+        let mut payload = Vec::with_capacity(24 + rec.members.len() * 8 + self.d * 4);
+        encode_insert(&mut payload, rec, vector);
+        put_u32(&mut self.pending, payload.len() as u32);
+        put_u64(&mut self.pending, fnv1a64(&payload));
+        self.pending.extend_from_slice(&payload);
+        self.pending_count += 1;
+    }
+
+    /// Write + fsync every buffered entry (a durability point).  A
+    /// failed write rewinds the file to its pre-flush length and keeps
+    /// `pending` intact, so a later retry cannot append valid entries
+    /// behind torn garbage that recovery would truncate away.
+    fn flush(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let start = self.file.stream_position()?;
+        let wrote = self
+            .file
+            .write_all(&self.pending)
+            .and_then(|()| self.file.sync_all());
+        if let Err(e) = wrote {
+            let _ = self.file.set_len(start);
+            let _ = self.file.seek(SeekFrom::Start(start));
+            return Err(e.into());
+        }
+        self.flushed += self.pending_count;
+        self.pending.clear();
+        self.pending_count = 0;
+        Ok(())
+    }
+
+    /// Entries in the current (unsealed) span: flushed + pending.
+    fn records(&self) -> usize {
+        self.flushed + self.pending_count
+    }
+
+    /// Reset after a seal: the new generation starts at `first_id`.
+    /// In-memory counters clear FIRST: once the caller's seal committed
+    /// (manifest renamed), the span must never be double-counted as
+    /// unsealed — even if the file ops below fail, recovery's
+    /// `first_id`/checksum machinery bounds whatever state the on-disk
+    /// log was left in, while a stale in-memory count would make the
+    /// next seal slice past the record vector.
+    fn reset(&mut self, first_id: u64) -> Result<()> {
+        self.flushed = 0;
+        self.pending.clear();
+        self.pending_count = 0;
+        self.file.set_len(0)?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file
+            .write_all(&Self::header_bytes(self.stream, self.d, first_id))?;
+        self.file.sync_all()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-stream manifest
+// ---------------------------------------------------------------------
+
+const STREAM_MANIFEST_HEADER: &str = "venus-stream-manifest v1";
+
+fn render_stream_manifest(stream: StreamId, d: usize, sealed: &[SegmentMeta]) -> String {
+    let mut out = String::new();
+    out.push_str(STREAM_MANIFEST_HEADER);
+    out.push('\n');
+    out.push_str(&format!("stream {}\n", stream.0));
+    out.push_str(&format!("d_embed {d}\n"));
+    out.push_str(&format!("sealed {}\n", sealed.len()));
+    for m in sealed {
+        out.push_str(&format!("seg {} {} {}\n", m.file_name, m.base, m.count));
+    }
+    out
+}
+
+/// Parse a stream manifest into `(file_name, base, count)` triples.
+fn parse_stream_manifest(text: &str, stream: StreamId, d: usize) -> Result<Vec<(String, usize, usize)>> {
+    let mut lines = text.lines();
+    if lines.next() != Some(STREAM_MANIFEST_HEADER) {
+        bail!("unrecognized stream manifest header");
+    }
+    let field = |line: Option<&str>, key: &str| -> Result<u64> {
+        let line = line.with_context(|| format!("manifest missing '{key}'"))?;
+        let rest = line
+            .strip_prefix(key)
+            .with_context(|| format!("manifest line '{line}' is not '{key} …'"))?;
+        Ok(rest.trim().parse::<u64>()?)
+    };
+    let m_stream = field(lines.next(), "stream")?;
+    let m_d = field(lines.next(), "d_embed")? as usize;
+    if m_stream != stream.0 as u64 || m_d != d {
+        bail!("manifest is for stream s{m_stream} (d={m_d}), expected {stream} (d={d})");
+    }
+    let n = field(lines.next(), "sealed")? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let line = lines.next().context("manifest truncated in segment list")?;
+        let mut parts = line.split_whitespace();
+        if parts.next() != Some("seg") {
+            bail!("manifest segment line '{line}' malformed");
+        }
+        let file = parts.next().context("segment file missing")?.to_string();
+        let base: usize = parts.next().context("segment base missing")?.parse()?;
+        let count: usize = parts.next().context("segment count missing")?.parse()?;
+        out.push((file, base, count));
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// stream storage: WAL + sealed segments + manifest, per shard
+// ---------------------------------------------------------------------
+
+/// What recovery reconstructed from one stream's directory.
+pub struct RecoveredStream {
+    /// record metadata from sealed segments, in global id order
+    /// (vectors stay on disk — the cold tier loads them on demand)
+    pub sealed_records: Vec<ClusterRecord>,
+    /// WAL tail beyond the sealed watermark: these become the hot tier
+    pub wal_tail: Vec<(ClusterRecord, Vec<f32>)>,
+}
+
+/// One stream's durable storage: the WAL for the unsealed span, the
+/// immutable sealed segments, and the manifest tying them together.
+pub struct StreamStorage {
+    dir: PathBuf,
+    stream: StreamId,
+    d: usize,
+    wal: Wal,
+    sealed: Vec<SegmentMeta>,
+    sealed_records: usize,
+}
+
+impl StreamStorage {
+    /// Open (creating or recovering) one stream's storage directory.
+    pub fn open(dir: &Path, stream: StreamId, d: usize) -> Result<(Self, RecoveredStream)> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating stream dir {}", dir.display()))?;
+
+        // 1. sealed segments, exactly as the manifest lists them
+        let mut sealed = Vec::new();
+        let mut sealed_meta = Vec::new();
+        let manifest_path = dir.join("MANIFEST");
+        if let Ok(text) = std::fs::read_to_string(&manifest_path) {
+            for (file, base, count) in parse_stream_manifest(&text, stream, d)? {
+                let path = dir.join(&file);
+                let (meta, records) = segment::open_segment(&path, stream, d)
+                    .with_context(|| format!("opening sealed segment {}", path.display()))?;
+                if meta.base != base || meta.count != count {
+                    bail!(
+                        "segment {} header ({}, {}) disagrees with manifest ({base}, {count})",
+                        file,
+                        meta.base,
+                        meta.count
+                    );
+                }
+                if meta.base != sealed_meta.len() {
+                    bail!(
+                        "segment {} base {} leaves a gap (recovered {} records so far)",
+                        file,
+                        meta.base,
+                        sealed_meta.len()
+                    );
+                }
+                sealed_meta.extend(records);
+                sealed.push(meta);
+            }
+        }
+        let sealed_records = sealed_meta.len();
+
+        // 2. WAL tail.  `first_id` lets us drop entries a completed seal
+        // already covers (crash between manifest rename and WAL reset).
+        let (mut wal, first_id, mut entries) =
+            Wal::open(dir.join("wal.log"), stream, d)?;
+        let mut wal_tail = Vec::new();
+        if (first_id as usize) <= sealed_records {
+            let skip = sealed_records - first_id as usize;
+            if skip < entries.len() {
+                wal_tail = entries.split_off(skip);
+            }
+        } else {
+            // WAL claims to start past the sealed watermark: a gap we
+            // cannot bridge — keep the sealed (manifest-durable) state.
+            entries.clear();
+        }
+        // normalize: after recovery the WAL holds exactly the unsealed
+        // tail, starting at the sealed watermark — so the next seal's
+        // bookkeeping (and the next recovery) sees a consistent log
+        if first_id != sealed_records as u64 || wal.records() != wal_tail.len() {
+            wal.reset(sealed_records as u64)?;
+            for (rec, v) in &wal_tail {
+                wal.append(rec, v);
+            }
+            wal.flush()?;
+        }
+
+        let storage = Self {
+            dir: dir.to_path_buf(),
+            stream,
+            d,
+            wal,
+            sealed,
+            sealed_records,
+        };
+        Ok((storage, RecoveredStream { sealed_records: sealed_meta, wal_tail }))
+    }
+
+    /// Sealed segments, ascending base order.
+    pub fn segments(&self) -> &[SegmentMeta] {
+        &self.sealed
+    }
+
+    /// Total records covered by sealed segments (the sealed watermark).
+    pub fn sealed_records(&self) -> usize {
+        self.sealed_records
+    }
+
+    /// Records in the unsealed (WAL) span.
+    pub fn unsealed_records(&self) -> usize {
+        self.wal.records()
+    }
+
+    /// Append one insert to the WAL (buffered until flush/seal).
+    pub fn append(&mut self, rec: &ClusterRecord, vector: &[f32]) {
+        self.wal.append(rec, vector);
+    }
+
+    /// Force the buffered WAL tail to disk (a durability point).
+    pub fn flush(&mut self) -> Result<()> {
+        self.wal.flush()
+    }
+
+    /// Seal the whole unsealed span into an immutable segment: write +
+    /// fsync the segment file, atomically update the manifest, reset the
+    /// WAL.  `records` / `vectors` are the span's canonical in-RAM state
+    /// (`vectors` is `records.len() * d` floats, row-major).
+    pub fn seal(&mut self, records: &[ClusterRecord], vectors: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            records.len() == self.wal.records(),
+            "seal of {} records but WAL holds {}",
+            records.len(),
+            self.wal.records()
+        );
+        anyhow::ensure!(records.len() * self.d == vectors.len(), "seal vector shape");
+        if records.is_empty() {
+            return Ok(());
+        }
+        let file_name = format!("seg-{:05}.seg", self.sealed.len());
+        let path = self.dir.join(&file_name);
+        let meta = segment::write_segment(
+            &path,
+            self.stream,
+            self.sealed_records,
+            records,
+            vectors,
+            self.d,
+        )?;
+        // the manifest rename is the commit point: in-memory state only
+        // mutates after every fallible step, so a failed seal leaves the
+        // WAL span intact for a later retry (the orphan segment file is
+        // inert until a manifest lists it, and the retry overwrites it)
+        let mut manifest_sealed = self.sealed.clone();
+        manifest_sealed.push(meta);
+        atomic_write(
+            &self.dir.join("MANIFEST"),
+            render_stream_manifest(self.stream, self.d, &manifest_sealed).as_bytes(),
+        )?;
+        self.sealed = manifest_sealed;
+        self.sealed_records += records.len();
+        self.wal.reset(self.sealed_records as u64)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// disk-backed raw store (the frame log)
+// ---------------------------------------------------------------------
+
+/// Raw frame archive on disk: u8-quantized RGB frames appended to
+/// fixed-size chunk files (`frames-%05d.dat`, `memory.segment_frames`
+/// frames each).  Fixed frame size makes addressing computed — no offset
+/// index, ~zero resident bytes.  Writes go straight to the fd, so a
+/// just-archived frame is immediately readable; recovery derives the
+/// archived watermark from the chunk file lengths (a torn trailing frame
+/// is truncated away).
+pub struct DiskRaw {
+    dir: PathBuf,
+    frame_size: usize,
+    frame_bytes: usize,
+    per_chunk: usize,
+    archived: u64,
+    /// open chunk for appends (chunk index, file)
+    write: Option<(usize, File)>,
+    /// single-slot read handle cache (queries touch one chunk at a time)
+    read_cache: Mutex<Option<(usize, Arc<File>)>>,
+}
+
+impl DiskRaw {
+    fn chunk_path(dir: &Path, chunk: usize) -> PathBuf {
+        dir.join(format!("frames-{chunk:05}.dat"))
+    }
+
+    /// Open (or create) the frame log in `dir`.
+    pub fn open(dir: &Path, frame_size: usize, per_chunk: usize) -> Result<Self> {
+        anyhow::ensure!(frame_size > 0 && per_chunk > 0, "DiskRaw shape");
+        std::fs::create_dir_all(dir)?;
+        let frame_bytes = frame_size * frame_size * 3;
+        // recover the archived watermark from chunk lengths
+        let mut archived = 0u64;
+        let mut chunk = 0usize;
+        loop {
+            let path = Self::chunk_path(dir, chunk);
+            let Ok(meta) = std::fs::metadata(&path) else { break };
+            let frames = (meta.len() / frame_bytes as u64).min(per_chunk as u64);
+            archived += frames;
+            if frames < per_chunk as u64 {
+                break; // partial chunk: nothing can follow it
+            }
+            chunk += 1;
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            frame_size,
+            frame_bytes,
+            per_chunk,
+            archived,
+            write: None,
+            read_cache: Mutex::new(None),
+        })
+    }
+
+    fn reader(&self, chunk: usize) -> Option<Arc<File>> {
+        let mut slot = self.read_cache.lock().unwrap();
+        if let Some((c, f)) = slot.as_ref() {
+            if *c == chunk {
+                return Some(Arc::clone(f));
+            }
+        }
+        let f = Arc::new(File::open(Self::chunk_path(&self.dir, chunk)).ok()?);
+        *slot = Some((chunk, Arc::clone(&f)));
+        Some(f)
+    }
+}
+
+impl RawStore for DiskRaw {
+    fn put(&mut self, id: u64, frame: &Frame) -> Result<()> {
+        if id < self.archived {
+            return Ok(()); // already durable (recovered stream replaying)
+        }
+        anyhow::ensure!(
+            id == self.archived,
+            "DiskRaw expects dense sequential ids (got {id}, next is {})",
+            self.archived
+        );
+        anyhow::ensure!(
+            frame.size() == self.frame_size,
+            "frame size {} != frame-log size {}",
+            frame.size(),
+            self.frame_size
+        );
+        let chunk = (id / self.per_chunk as u64) as usize;
+        let off = (id % self.per_chunk as u64) * self.frame_bytes as u64;
+        if self.write.as_ref().map(|(c, _)| *c) != Some(chunk) {
+            // rotating chunks: fsync the full one before moving on, so a
+            // completed chunk is durable without waiting for a flush
+            if let Some((_, old)) = self.write.take() {
+                old.sync_all().context("fsyncing rotated frame-log chunk")?;
+            }
+            let path = Self::chunk_path(&self.dir, chunk);
+            let file = OpenOptions::new()
+                .create(true)
+                .write(true)
+                .open(&path)
+                .with_context(|| format!("opening frame-log chunk {}", path.display()))?;
+            self.write = Some((chunk, file));
+        }
+        let q: Vec<u8> = frame
+            .data()
+            .iter()
+            .map(|&x| (x.clamp(0.0, 1.0) * 255.0).round() as u8)
+            .collect();
+        let (_, file) = self.write.as_ref().unwrap();
+        // a failed write (full SSD) is a typed error: the frame is simply
+        // not archived, the watermark does not advance, and the shard
+        // lock is never poisoned
+        file.write_all_at(&q, off)
+            .with_context(|| format!("appending frame {id} to the frame log"))?;
+        self.archived += 1;
+        Ok(())
+    }
+
+    fn get(&self, id: u64) -> Option<Frame> {
+        if id >= self.archived {
+            return None;
+        }
+        let chunk = (id / self.per_chunk as u64) as usize;
+        let off = (id % self.per_chunk as u64) * self.frame_bytes as u64;
+        let file = self.reader(chunk)?;
+        let mut q = vec![0u8; self.frame_bytes];
+        file.read_exact_at(&mut q, off).ok()?;
+        let data: Vec<f32> = q.iter().map(|&b| b as f32 / 255.0).collect();
+        Some(Frame::from_data(self.frame_size, data))
+    }
+
+    fn len(&self) -> u64 {
+        self.archived
+    }
+
+    fn sync(&mut self) -> Result<()> {
+        if let Some((_, file)) = self.write.as_ref() {
+            file.sync_all().context("fsyncing frame log")?;
+        }
+        Ok(())
+    }
+
+    fn resident_bytes(&self) -> usize {
+        0 // frames live on disk; handles + counters only
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// Unique per-test scratch dir, removed on drop.
+    pub(crate) struct TempDir(pub PathBuf);
+
+    impl TempDir {
+        pub(crate) fn new(tag: &str) -> Self {
+            let path = std::env::temp_dir().join(format!(
+                "venus-{tag}-{}-{:x}",
+                std::process::id(),
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .unwrap()
+                    .as_nanos()
+            ));
+            let _ = std::fs::remove_dir_all(&path);
+            std::fs::create_dir_all(&path).unwrap();
+            Self(path)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn rec(scene: usize, centroid: u64, members: Vec<u64>) -> ClusterRecord {
+        ClusterRecord {
+            stream: StreamId(0),
+            scene_id: scene,
+            centroid_frame: centroid,
+            members,
+        }
+    }
+
+    #[test]
+    fn insert_encoding_round_trips() {
+        let r = rec(7, 42, vec![40, 41, 42, 43]);
+        let v = vec![0.25f32, -0.5, 1.0];
+        let mut buf = Vec::new();
+        encode_insert(&mut buf, &r, &v);
+        let mut reader = ByteReader::new(&buf);
+        let (r2, v2) = decode_insert(&mut reader, 3, StreamId(0)).unwrap();
+        assert_eq!(r2.scene_id, 7);
+        assert_eq!(r2.centroid_frame, 42);
+        assert_eq!(r2.members, vec![40, 41, 42, 43]);
+        assert_eq!(v2, v);
+        assert_eq!(reader.remaining(), 0);
+    }
+
+    #[test]
+    fn wal_flush_then_reopen_replays_flushed_only() {
+        let tmp = TempDir::new("wal");
+        let path = tmp.0.join("wal.log");
+        {
+            let (mut wal, _, entries) = Wal::open(path.clone(), StreamId(0), 2).unwrap();
+            assert!(entries.is_empty());
+            wal.append(&rec(0, 0, vec![0]), &[1.0, 0.0]);
+            wal.append(&rec(1, 1, vec![1]), &[0.0, 1.0]);
+            wal.flush().unwrap();
+            // buffered but never flushed: lost on drop (crash semantics)
+            wal.append(&rec(2, 2, vec![2]), &[0.5, 0.5]);
+        }
+        let (wal, first, entries) = Wal::open(path, StreamId(0), 2).unwrap();
+        assert_eq!(first, 0);
+        assert_eq!(entries.len(), 2, "only the flushed prefix survives");
+        assert_eq!(entries[1].0.scene_id, 1);
+        assert_eq!(wal.records(), 2);
+    }
+
+    #[test]
+    fn wal_truncates_torn_tail() {
+        let tmp = TempDir::new("torn");
+        let path = tmp.0.join("wal.log");
+        {
+            let (mut wal, _, _) = Wal::open(path.clone(), StreamId(0), 2).unwrap();
+            wal.append(&rec(0, 0, vec![0]), &[1.0, 0.0]);
+            wal.append(&rec(1, 1, vec![1]), &[0.0, 1.0]);
+            wal.flush().unwrap();
+        }
+        // tear the last entry: chop 5 bytes off the file
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 5).unwrap();
+        drop(f);
+        let (_, _, entries) = Wal::open(path, StreamId(0), 2).unwrap();
+        assert_eq!(entries.len(), 1, "torn tail truncated, valid prefix kept");
+        assert_eq!(entries[0].0.scene_id, 0);
+    }
+
+    #[test]
+    fn wal_discards_log_on_header_corruption() {
+        let tmp = TempDir::new("walhdr");
+        let path = tmp.0.join("wal.log");
+        {
+            let (mut wal, _, _) = Wal::open(path.clone(), StreamId(0), 2).unwrap();
+            wal.append(&rec(0, 0, vec![0]), &[1.0, 0.0]);
+            wal.flush().unwrap();
+        }
+        // flip a bit in first_id (offset 18 = magic 8 + version 4 +
+        // stream 2 + d 4): entries can no longer be aligned with the
+        // sealed watermark, so the log must be discarded — NOT replayed
+        // at silently shifted global ids
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[18] ^= 1;
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, first, entries) = Wal::open(path, StreamId(0), 2).unwrap();
+        assert_eq!(first, 0, "corrupt header resets the log generation");
+        assert!(entries.is_empty(), "unalignable entries are discarded");
+    }
+
+    #[test]
+    fn wal_rejects_foreign_stream_or_dim() {
+        let tmp = TempDir::new("walmix");
+        let path = tmp.0.join("wal.log");
+        {
+            let (mut wal, _, _) = Wal::open(path.clone(), StreamId(0), 2).unwrap();
+            wal.append(&rec(0, 0, vec![0]), &[1.0, 0.0]);
+            wal.flush().unwrap();
+        }
+        assert!(Wal::open(path.clone(), StreamId(1), 2).is_err());
+        assert!(Wal::open(path, StreamId(0), 3).is_err());
+    }
+
+    #[test]
+    fn storage_seals_and_recovers_sealed_watermark() {
+        let tmp = TempDir::new("storage");
+        let d = 2usize;
+        {
+            let (mut st, recovered) = StreamStorage::open(&tmp.0, StreamId(0), d).unwrap();
+            assert!(recovered.sealed_records.is_empty());
+            let records: Vec<ClusterRecord> =
+                (0..4).map(|i| rec(i, i as u64, vec![i as u64])).collect();
+            let mut vecs = Vec::new();
+            for (rec, v) in records.iter().zip([[1.0f32, 0.0], [0.0, 1.0], [0.6, 0.8], [0.8, 0.6]])
+            {
+                st.append(rec, &v);
+                vecs.extend_from_slice(&v);
+            }
+            st.seal(&records, &vecs).unwrap();
+            assert_eq!(st.sealed_records(), 4);
+            assert_eq!(st.unsealed_records(), 0);
+            // two more inserts, never flushed: lost on drop
+            st.append(&rec(9, 9, vec![9]), &[1.0, 0.0]);
+            st.append(&rec(10, 10, vec![10]), &[0.0, 1.0]);
+        }
+        let (st, recovered) = StreamStorage::open(&tmp.0, StreamId(0), d).unwrap();
+        assert_eq!(st.sealed_records(), 4);
+        assert_eq!(recovered.sealed_records.len(), 4, "recovered to the sealed watermark");
+        assert!(recovered.wal_tail.is_empty(), "unflushed WAL tail is gone");
+        assert_eq!(recovered.sealed_records[2].scene_id, 2);
+    }
+
+    #[test]
+    fn storage_flushed_wal_tail_survives() {
+        let tmp = TempDir::new("waltail");
+        let d = 2usize;
+        {
+            let (mut st, _) = StreamStorage::open(&tmp.0, StreamId(0), d).unwrap();
+            st.append(&rec(0, 0, vec![0]), &[1.0, 0.0]);
+            st.flush().unwrap();
+        }
+        let (_, recovered) = StreamStorage::open(&tmp.0, StreamId(0), d).unwrap();
+        assert!(recovered.sealed_records.is_empty());
+        assert_eq!(recovered.wal_tail.len(), 1);
+        assert_eq!(recovered.wal_tail[0].1, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn disk_raw_round_trips_across_chunks() {
+        let tmp = TempDir::new("diskraw");
+        let mut raw = DiskRaw::open(&tmp.0, 8, 3).unwrap();
+        for i in 0..7u64 {
+            let shade = i as f32 / 10.0;
+            raw.put(i, &Frame::filled(8, [shade, 0.5, 0.25])).unwrap();
+        }
+        assert_eq!(raw.len(), 7);
+        assert_eq!(raw.resident_bytes(), 0);
+        // chunking: 3 frames per chunk ⇒ 3 files
+        assert!(DiskRaw::chunk_path(&tmp.0, 2).exists());
+        let f = raw.get(5).expect("archived frame");
+        assert!((f.data()[0] - 0.5).abs() <= 0.5 / 255.0 + 1e-6);
+        assert!(raw.get(7).is_none(), "hole reads as None");
+        // reopen: watermark recovered from chunk lengths
+        drop(raw);
+        let raw = DiskRaw::open(&tmp.0, 8, 3).unwrap();
+        assert_eq!(raw.len(), 7);
+        assert!(raw.get(6).is_some());
+    }
+
+    #[test]
+    fn atomic_write_replaces_content() {
+        let tmp = TempDir::new("atomic");
+        let path = tmp.0.join("MANIFEST");
+        atomic_write(&path, b"one").unwrap();
+        atomic_write(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        assert!(!path.with_extension("tmp").exists());
+    }
+}

@@ -47,6 +47,15 @@ impl VectorIndex for FlatIndex {
         Ok(id)
     }
 
+    fn insert_prepared(&mut self, v: &[f32]) -> Result<usize> {
+        if v.len() != self.dim {
+            bail!("insert_prepared: dim {} != index dim {}", v.len(), self.dim);
+        }
+        let id = self.len();
+        self.data.extend_from_slice(v);
+        Ok(id)
+    }
+
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
         assert_eq!(query.len(), self.dim);
         let q = normalized_query(query, self.metric);
@@ -152,6 +161,22 @@ mod tests {
     fn dim_mismatch_rejected() {
         let mut idx = FlatIndex::new(3, Metric::Cosine);
         assert!(idx.insert(&[1.0]).is_err());
+        assert!(idx.insert_prepared(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn insert_prepared_round_trips_stored_bytes() {
+        // the durable tier replays vector() bytes through insert_prepared:
+        // the stored row must be bit-identical (no re-normalization drift)
+        let mut a = FlatIndex::new(3, Metric::Cosine);
+        a.insert(&[3.0, 4.0, 0.3]).unwrap();
+        let stored = a.vector(0).to_vec();
+        let mut b = FlatIndex::new(3, Metric::Cosine);
+        b.insert_prepared(&stored).unwrap();
+        assert_eq!(
+            a.vector(0).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.vector(0).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
     }
 
     #[test]

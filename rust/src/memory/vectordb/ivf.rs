@@ -190,6 +190,20 @@ impl VectorIndex for IvfIndex {
         Ok(id)
     }
 
+    fn insert_prepared(&mut self, v: &[f32]) -> Result<usize> {
+        if v.len() != self.dim {
+            bail!("insert_prepared: dim {} != index dim {}", v.len(), self.dim);
+        }
+        let id = self.len();
+        self.data.extend_from_slice(v);
+        if self.trained() {
+            let cell = self.nearest_cell(self.row(id));
+            self.cells[cell].push(id);
+        }
+        self.maybe_retrain();
+        Ok(id)
+    }
+
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
         assert_eq!(query.len(), self.dim);
         let q = normalized_query(query, self.metric);

@@ -63,6 +63,15 @@ pub trait VectorIndex: Send + Sync {
     /// Insert a vector, returning its dense id.
     fn insert(&mut self, v: &[f32]) -> Result<usize>;
 
+    /// Insert a vector that is ALREADY metric-prepared — i.e. bytes read
+    /// back from [`VectorIndex::vector`] (or a durable copy of them).
+    /// Skips the insert-time preparation (cosine L2-normalization), so a
+    /// stored row round-trips bit-exactly through persistence and
+    /// hot-tier rebuilds: re-normalizing an already-normalized vector can
+    /// flip low-order bits, and the restart-equivalence guarantee of the
+    /// tiered memory needs the scored bytes to be identical.
+    fn insert_prepared(&mut self, v: &[f32]) -> Result<usize>;
+
     /// Top-k most similar vectors to the query.
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit>;
 

@@ -82,7 +82,9 @@ pub fn akr_retrieve<M: RecordSource + ?Sized>(
     }
     // stratified per-cluster expansion, same as fixed sampling
     for (idx, k) in counts {
-        let rec = memory.record(idx);
+        // a drawn index always has a record by construction; a stale one
+        // (evicted/compacted source) is skipped, not panicked on
+        let Some(rec) = memory.record(idx) else { continue };
         sel.frames.extend(
             super::sampler::expand_cluster(&rec.members, k, rng)
                 .into_iter()
@@ -108,7 +110,7 @@ mod tests {
         )
         .unwrap();
         for i in 0..(n_clusters as u64 * frames_per) {
-            h.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+            h.archive_frame(i, &Frame::filled(8, [0.5; 3])).unwrap();
         }
         for c in 0..n_clusters {
             let mut v = vec![0.0f32; 4];

@@ -29,10 +29,16 @@ use crate::memory::{ClusterRecord, FrameId, Hierarchy, StreamId};
 /// What a retrieval routine needs from the memory it selects over: the
 /// scored records, in score-vector order.  Implemented by a single shard
 /// and by the merged cross-shard record view.
+///
+/// `record` is total over `[0, len())` by construction (selectors only
+/// draw indices they scored), but returns `Option` so a stale id — e.g. a
+/// replayed selection that outlived an eviction/compaction pass — is a
+/// typed miss the caller can skip or surface, never a panic inside a
+/// serving worker.
 pub trait RecordSource {
     fn len(&self) -> usize;
 
-    fn record(&self, id: usize) -> &ClusterRecord;
+    fn record(&self, id: usize) -> Option<&ClusterRecord>;
 
     fn is_empty(&self) -> bool {
         self.len() == 0
@@ -44,7 +50,7 @@ impl RecordSource for Hierarchy {
         Hierarchy::len(self)
     }
 
-    fn record(&self, id: usize) -> &ClusterRecord {
+    fn record(&self, id: usize) -> Option<&ClusterRecord> {
         Hierarchy::record(self, id)
     }
 }
@@ -56,8 +62,8 @@ impl<'a> RecordSource for [&'a ClusterRecord] {
         <[&'a ClusterRecord]>::len(self)
     }
 
-    fn record(&self, id: usize) -> &ClusterRecord {
-        self[id]
+    fn record(&self, id: usize) -> Option<&ClusterRecord> {
+        self.get(id).copied()
     }
 }
 

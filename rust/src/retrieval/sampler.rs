@@ -69,7 +69,9 @@ pub fn sample_retrieve<M: RecordSource + ?Sized>(
         *counts.entry(idx).or_insert(0) += 1;
     }
     for (idx, k) in counts {
-        let rec = memory.record(idx);
+        // a drawn index always has a record by construction; a stale one
+        // (evicted/compacted source) is skipped, not panicked on
+        let Some(rec) = memory.record(idx) else { continue };
         sel.frames.extend(
             expand_cluster(&rec.members, k, rng)
                 .into_iter()
@@ -94,7 +96,7 @@ mod tests {
         )
         .unwrap();
         for i in 0..(n_clusters as u64 * frames_per) {
-            h.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+            h.archive_frame(i, &Frame::filled(8, [0.5; 3])).unwrap();
         }
         for c in 0..n_clusters {
             // orthogonal-ish unit vectors on 4 axes with sign flips
@@ -152,7 +154,7 @@ mod tests {
         )
         .unwrap();
         for i in 0..20u64 {
-            b.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+            b.archive_frame(i, &Frame::filled(8, [0.5; 3])).unwrap();
         }
         for c in 0..4usize {
             let mut v = vec![0.0f32; 4];

@@ -17,7 +17,7 @@ pub fn topk_retrieve<M: RecordSource + ?Sized>(
     order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
     let mut sel = Selection::default();
     for &idx in order.iter().take(k) {
-        let rec = memory.record(idx);
+        let Some(rec) = memory.record(idx) else { continue };
         sel.drawn_indices.push(idx);
         sel.frames.push(FrameId::new(rec.stream, rec.centroid_frame));
     }
@@ -39,7 +39,7 @@ mod tests {
         )
         .unwrap();
         for i in 0..n as u64 {
-            h.archive_frame(i, &Frame::filled(8, [0.5; 3]));
+            h.archive_frame(i, &Frame::filled(8, [0.5; 3])).unwrap();
         }
         for c in 0..n {
             let mut v = vec![0.0f32; 4];

@@ -12,7 +12,8 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::api::Priority;
-use crate::util::stats::{fmt_duration, Samples};
+use crate::memory::TierStats;
+use crate::util::stats::{fmt_bytes, fmt_duration, Samples};
 
 #[derive(Clone, Copy, Debug, Default)]
 struct LaneCounters {
@@ -81,6 +82,11 @@ pub struct Snapshot {
     pub total_p99_s: Option<f64>,
     pub mean_frames: f64,
     pub throughput_qps: f64,
+    /// Memory-pressure gauges of the fabric this service runs over (hot
+    /// bytes, cold segments, evictions, cold-hit rate, raw resident
+    /// bytes).  `None` for a bare `Metrics::snapshot()`; the service
+    /// fills it from its fabric — see `Service::snapshot`.
+    pub memory: Option<TierStats>,
 }
 
 impl Metrics {
@@ -154,6 +160,7 @@ impl Metrics {
             total_p99_s: pct(&m.total_latency, 99.0),
             mean_frames: m.frames_shipped.mean(),
             throughput_qps: if uptime > 0.0 { completed as f64 / uptime } else { 0.0 },
+            memory: None,
         }
     }
 
@@ -189,7 +196,7 @@ impl Snapshot {
 
     pub fn render(&self) -> String {
         let opt = |d: Option<f64>| d.map(fmt_duration).unwrap_or_else(|| "n/a".into());
-        format!(
+        let mut out = format!(
             "queries: {} ok / {} failed / {} rejected / {} deadline-shed / {} shutdown-raced | lanes: interactive {}/{} batch {}/{} (done/accepted) | p50 {} p95 {} p99 {} (edge p50 {} p95 {}) | {:.1} q/s | {:.1} frames/query",
             self.completed(),
             self.failed,
@@ -207,7 +214,24 @@ impl Snapshot {
             opt(self.edge_p95_s),
             self.throughput_qps,
             self.mean_frames,
-        )
+        );
+        if let Some(m) = &self.memory {
+            let hit = m
+                .cold_hit_rate()
+                .map(|r| format!("{:.0}%", r * 100.0))
+                .unwrap_or_else(|| "n/a".into());
+            out.push_str(&format!(
+                " | mem: hot {} ({} rec) / cold {} seg ({} rec, {} resident, hit {hit}) / raw {} / {} evicted",
+                fmt_bytes(m.hot_bytes),
+                m.hot_records,
+                m.cold_segments,
+                m.cold_records,
+                fmt_bytes(m.cold_resident_bytes),
+                fmt_bytes(m.raw_resident_bytes),
+                m.evictions,
+            ));
+        }
+        out
     }
 }
 
@@ -260,6 +284,30 @@ mod tests {
         assert_eq!(s.mean_frames, 0.0);
         assert!(s.render().contains("n/a"));
         assert!(m.conserved_after_drain());
+    }
+
+    #[test]
+    fn memory_gauges_render_when_present() {
+        let m = Metrics::default();
+        let mut s = m.snapshot();
+        assert!(s.memory.is_none(), "bare snapshot carries no fabric gauges");
+        assert!(!s.render().contains("mem:"));
+        s.memory = Some(TierStats {
+            hot_bytes: 2048,
+            hot_records: 10,
+            cold_records: 30,
+            cold_segments: 3,
+            cold_resident_bytes: 1024,
+            raw_resident_bytes: 0,
+            evictions: 30,
+            cold_hits: 9,
+            cold_misses: 1,
+        });
+        let text = s.render();
+        assert!(text.contains("mem: hot 2.0 KiB (10 rec)"), "{text}");
+        assert!(text.contains("cold 3 seg (30 rec"), "{text}");
+        assert!(text.contains("hit 90%"), "{text}");
+        assert!(text.contains("30 evicted"), "{text}");
     }
 
     #[test]

@@ -129,6 +129,9 @@ pub struct Service {
     pub metrics: Arc<Metrics>,
     /// The fabric-wide semantic query cache every worker shares.
     pub cache: Arc<QueryCache>,
+    /// The memory fabric the workers query — kept for memory-pressure
+    /// gauges in [`Service::snapshot`].
+    fabric: Arc<MemoryFabric>,
     next_id: AtomicU64,
 }
 
@@ -171,8 +174,17 @@ impl Service {
             workers,
             metrics,
             cache,
+            fabric,
             next_id: AtomicU64::new(0),
         })
+    }
+
+    /// Live metrics snapshot, including the fabric's memory-pressure
+    /// gauges (hot/cold tier residency, evictions, cold-hit rate).
+    pub fn snapshot(&self) -> Snapshot {
+        let mut snap = self.metrics.snapshot();
+        snap.memory = Some(self.fabric.tier_stats());
+        snap
     }
 
     /// Submit a typed request; returns a receiver for the structured
@@ -242,12 +254,12 @@ impl Service {
         self.call(QueryRequest::new(text))
     }
 
-    /// Drain and stop all workers; returns the final metrics snapshot.
-    /// Accepted work is always finished (or deadline-shed) before the
-    /// workers exit.
+    /// Drain and stop all workers; returns the final metrics snapshot
+    /// (memory-pressure gauges included).  Accepted work is always
+    /// finished (or deadline-shed) before the workers exit.
     pub fn shutdown(mut self) -> Snapshot {
         self.close_and_join();
-        self.metrics.snapshot()
+        self.snapshot()
     }
 
     fn close_and_join(&mut self) {

@@ -191,6 +191,20 @@ pub fn fmt_duration(secs: f64) -> String {
     }
 }
 
+/// Human-readable byte count (tier gauges, memory-growth output).
+pub fn fmt_bytes(bytes: usize) -> String {
+    let b = bytes as f64;
+    if b >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    } else if b >= 1024.0 * 1024.0 {
+        format!("{:.1} MiB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
 /// Simple fixed-width table printer for bench/eval output.
 pub struct Table {
     header: Vec<String>,
@@ -284,6 +298,9 @@ mod tests {
     fn duration_formatting() {
         assert_eq!(fmt_duration(120.0), "2.0 min");
         assert_eq!(fmt_duration(4.83), "4.83 s");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MiB");
         assert_eq!(fmt_duration(0.0124), "12.40 ms");
         assert_eq!(fmt_duration(3.8e-4), "380.0 µs");
     }

@@ -29,7 +29,7 @@ fn seeded_fabric(d: usize, streams: usize, clusters: u64, seed: u64) -> Arc<Memo
         let mut g = shard.write().unwrap();
         for c in 0..clusters {
             for f in c * 4..(c + 1) * 4 {
-                g.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+                g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
             }
             let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
             venus::util::l2_normalize(&mut v);
@@ -53,7 +53,7 @@ fn grow_shard(memory: &Arc<RwLock<Hierarchy>>, d: usize, rng: &mut Pcg64) {
     let mut g = memory.write().unwrap();
     let start = g.frames_ingested();
     for f in start..start + 4 {
-        g.archive_frame(f, &Frame::filled(8, [0.5; 3]));
+        g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
     }
     let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
     venus::util::l2_normalize(&mut v);

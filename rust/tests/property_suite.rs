@@ -30,7 +30,7 @@ fn random_memory(seed: u64) -> (Hierarchy, usize) {
         let len = rng.range(1, 12) as u64;
         let members: Vec<u64> = (frame_id..frame_id + len).collect();
         for &m in &members {
-            h.archive_frame(m, &Frame::filled(8, [0.5; 3]));
+            h.archive_frame(m, &Frame::filled(8, [0.5; 3])).unwrap();
         }
         records.push((c, members.clone()));
         frame_id += len;
