@@ -14,7 +14,7 @@
 #   3. `cargo test --features pjrt` — runs the cross-backend parity suite
 #      (rust/tests/native_vs_artifact.rs) against the artifacts.
 
-.PHONY: all build test bench lint verify artifacts fmt clean
+.PHONY: all build test bench lint verify loadtest artifacts fmt clean
 
 all: build
 
@@ -32,6 +32,27 @@ lint:
 
 # Tier-1 verification, exactly what CI runs.
 verify: build test
+
+# Wire load test: spawn a release server on a local port, drive it with
+# the open-loop load generator for a fixed duration, then stop it
+# gracefully over the wire (the server drains and flushes before exit).
+# Override: make loadtest LOADTEST_ADDR=127.0.0.1:7733 LOADTEST_SECS=30
+LOADTEST_ADDR ?= 127.0.0.1:7661
+LOADTEST_SECS ?= 10
+loadtest: build
+	@echo "starting venus serve --listen $(LOADTEST_ADDR) ..."
+	@./target/release/venus serve --listen $(LOADTEST_ADDR) --queries 16 < /dev/null & \
+	SERVER_PID=$$!; \
+	trap 'kill $$SERVER_PID 2>/dev/null || true' EXIT; \
+	for i in $$(seq 1 120); do \
+		kill -0 $$SERVER_PID 2>/dev/null || { echo "server exited before listening"; exit 1; }; \
+		./target/release/venus query --connect $(LOADTEST_ADDR) --ping >/dev/null 2>&1 && break; \
+		sleep 1; \
+	done; \
+	./target/release/venus loadgen --connect $(LOADTEST_ADDR) \
+		--clients 8 --rate 64 --duration-secs $(LOADTEST_SECS) --shutdown \
+		|| kill $$SERVER_PID 2>/dev/null; \
+	wait $$SERVER_PID
 
 # AOT-export the MEM entry points (embed_image_b{1,8,32}, embed_text_b1,
 # embed_fused_b8, scene_feat_b8, similarity_n1024), the concept side

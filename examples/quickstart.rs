@@ -21,6 +21,14 @@
 //! No artifacts or model files needed: the default native backend is
 //! self-contained (`make artifacts` + `--features pjrt` switches the
 //! embedding path to the AOT-compiled XLA runtime).
+//!
+//! The same service is reachable over TCP (DESIGN.md §Wire-Protocol) —
+//! two terminals:
+//!   terminal 1:  venus serve --listen 127.0.0.1:7661
+//!   terminal 2:  venus query --connect 127.0.0.1:7661 "what happened with concept01"
+//!                venus query --connect 127.0.0.1:7661 --stats
+//!                venus loadgen --connect 127.0.0.1:7661 --clients 8 --rate 64
+//! (`examples/wire_demo.rs` runs the whole wire path in one process.)
 
 use std::path::PathBuf;
 use std::sync::Arc;

@@ -1,0 +1,134 @@
+//! wire_throughput — sustained QPS and end-to-end wire-latency tails of
+//! the TCP gateway.
+//!
+//! Ingests a real stream, exposes it through a gateway on an ephemeral
+//! port, and drives it with the open-loop load generator at several
+//! client counts (latency measured from the *scheduled* arrival — the
+//! coordinated-omission-corrected number).  A second, single-flight pass
+//! compares cold wire queries with cache-hit repeats end to end.
+//! Acceptance targets: sustained QPS + p50/p95/p99 at ≥ 3 client counts,
+//! and cache-hit wire p50 under cold wire p50.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use venus::api::QueryRequest;
+use venus::config::VenusConfig;
+use venus::eval::prepare_case;
+use venus::net::wire::{Gateway, LoadGen, WireClient};
+use venus::server::Service;
+use venus::util::bench::{note, section};
+use venus::util::stats::{fmt_duration, Samples, Table};
+use venus::video::workload::DatasetPreset;
+
+const QUERIES: usize = 16;
+const CLIENT_COUNTS: [usize; 3] = [2, 4, 8];
+const PER_CLIENT_QPS: f64 = 24.0;
+const RUN_SECS: f64 = 2.0;
+const CACHE_ROUNDS: usize = 3;
+
+fn main() {
+    section("wire_throughput — TCP gateway: sustained QPS and wire-latency tails");
+    let mut cfg = VenusConfig::default();
+    cfg.wire.listen = "127.0.0.1:0".into();
+
+    eprintln!("  ingesting the stream...");
+    let case =
+        prepare_case(DatasetPreset::VideoMmeShort, &cfg, QUERIES, 0x31e1).expect("prepare case");
+    cfg.api.fps = case.synth.config().fps;
+    let service =
+        Arc::new(Service::start(&cfg, Arc::clone(&case.fabric), 0x7ea).expect("service"));
+    let gateway = Gateway::start(&cfg.wire, Arc::clone(&service)).expect("gateway");
+    let addr = gateway.local_addr();
+    note(&format!(
+        "gateway on {addr}: {} workers, {} conns max, {} distinct query texts",
+        cfg.server.workers,
+        cfg.wire.max_conns,
+        QUERIES
+    ));
+
+    let mut texts: Vec<String> = case.queries.iter().map(|q| q.text.clone()).collect();
+    texts.sort();
+    texts.dedup();
+
+    // --- open-loop sweep over client counts ---
+    let mut table = Table::new(vec![
+        "clients",
+        "target q/s",
+        "sustained q/s",
+        "p50",
+        "p95",
+        "p99",
+        "ok",
+        "rejected",
+        "shed",
+    ]);
+    for &clients in &CLIENT_COUNTS {
+        let mut lg = LoadGen::new(addr.to_string(), texts.clone());
+        lg.clients = clients;
+        lg.rate_qps = clients as f64 * PER_CLIENT_QPS;
+        lg.duration = Duration::from_secs_f64(RUN_SECS);
+        lg.wire = cfg.wire.clone();
+        let report = lg.run().expect("load run");
+        assert!(report.completed > 0, "{clients} clients completed nothing");
+        assert_eq!(report.transport_errors, 0, "gateway dropped connections under load");
+        table.row(vec![
+            clients.to_string(),
+            format!("{:.0}", report.target_qps),
+            format!("{:.1}", report.qps()),
+            fmt_duration(report.latency.percentile(50.0)),
+            fmt_duration(report.latency.percentile(95.0)),
+            fmt_duration(report.latency.percentile(99.0)),
+            report.completed.to_string(),
+            report.rejected.to_string(),
+            report.shed.to_string(),
+        ]);
+    }
+    print!("{table}");
+
+    // --- cold vs cache-hit, end to end over the wire (single flight) ---
+    let mut client = WireClient::connect_with(addr, &cfg.wire).expect("client");
+    let mut cold = Samples::default();
+    let mut hit = Samples::default();
+    for round in 0..CACHE_ROUNDS {
+        for (i, text) in texts.iter().enumerate() {
+            // fresh phrasing per round; only status-confirmed misses and
+            // hits are sampled, so semantic-tier near-matches of earlier
+            // rounds can't pollute either side
+            let fresh = format!("{text} cold round {round} {i}");
+            let t0 = Instant::now();
+            let response = client.query(QueryRequest::new(fresh.clone())).unwrap().unwrap();
+            if !response.cache.is_hit() {
+                cold.push(t0.elapsed().as_secs_f64());
+            }
+            let t0 = Instant::now();
+            let response = client.query(QueryRequest::new(fresh)).unwrap().unwrap();
+            if response.cache.is_hit() {
+                hit.push(t0.elapsed().as_secs_f64());
+            }
+        }
+    }
+    assert!(!cold.is_empty() && !hit.is_empty(), "need both cold and hit samples");
+    let speedup = cold.p50() / hit.p50().max(1e-12);
+    note(&format!(
+        "wire cache: cold p50 {} ({} samples) vs hit p50 {} ({} samples) — {speedup:.1}× lower",
+        fmt_duration(cold.p50()),
+        cold.len(),
+        fmt_duration(hit.p50()),
+        hit.len(),
+    ));
+    assert!(
+        hit.p50() < cold.p50(),
+        "cache-hit wire p50 ({}) must undercut cold wire p50 ({})",
+        fmt_duration(hit.p50()),
+        fmt_duration(cold.p50()),
+    );
+
+    // durability-safe teardown order: wire first, then the lanes
+    let wire = gateway.shutdown();
+    note(&wire.render());
+    let service = Arc::try_unwrap(service).ok().expect("gateway released the service");
+    let snap = service.shutdown();
+    note(&snap.render());
+    assert_eq!(snap.queued(), 0, "lanes drained");
+}

@@ -360,6 +360,41 @@ impl fmt::Display for ApiError {
     }
 }
 
+impl ApiError {
+    /// Serialize to the wire JSON encoding (the gateway's error frames).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        match self {
+            ApiError::Rejected { lane } => {
+                m.insert("kind".into(), Json::Str("rejected".into()));
+                m.insert("lane".into(), Json::Str(lane.name().into()));
+            }
+            ApiError::DeadlineExceeded => {
+                m.insert("kind".into(), Json::Str("deadline_exceeded".into()));
+            }
+            ApiError::Shutdown => {
+                m.insert("kind".into(), Json::Str("shutdown".into()));
+            }
+            ApiError::Engine(msg) => {
+                m.insert("kind".into(), Json::Str("engine".into()));
+                m.insert("message".into(), Json::Str(msg.clone()));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse the wire JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v.get("kind")?.as_str()? {
+            "rejected" => Ok(ApiError::Rejected { lane: priority_from_json(v.get("lane")?)? }),
+            "deadline_exceeded" => Ok(ApiError::DeadlineExceeded),
+            "shutdown" => Ok(ApiError::Shutdown),
+            "engine" => Ok(ApiError::Engine(v.get("message")?.as_str()?.to_string())),
+            other => bail!("unknown api error kind '{other}'"),
+        }
+    }
+}
+
 impl std::error::Error for ApiError {}
 
 // --- JSON helpers for the enum fields ---
@@ -543,5 +578,21 @@ mod tests {
         assert!(e.to_string().contains("batch lane full"));
         let any: anyhow::Error = ApiError::DeadlineExceeded.into();
         assert!(any.to_string().contains("deadline"));
+    }
+
+    #[test]
+    fn api_error_round_trips_through_json() {
+        for e in [
+            ApiError::Rejected { lane: Priority::Batch },
+            ApiError::Rejected { lane: Priority::Interactive },
+            ApiError::DeadlineExceeded,
+            ApiError::Shutdown,
+            ApiError::Engine("index poisoned".into()),
+        ] {
+            let wire = e.to_json().to_string();
+            let back = ApiError::from_json(&Json::parse(&wire).unwrap()).unwrap();
+            assert_eq!(back, e, "{wire}");
+        }
+        assert!(ApiError::from_json(&Json::parse(r#"{"kind":"nope"}"#).unwrap()).is_err());
     }
 }

@@ -7,12 +7,16 @@ mod args;
 pub use args::{ArgSpec, Args};
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::api::{ApiError, Priority, QueryRequest};
 use crate::backend::EmbedBackend;
 use crate::config::VenusConfig;
+use crate::coordinator::query::RetrievalMode;
+use crate::memory::{StreamId, StreamScope};
+use crate::net::wire::{Gateway, LoadGen, WireClient};
 use crate::util::stats::fmt_duration;
 use crate::video::workload::DatasetPreset;
 
@@ -24,6 +28,8 @@ pub fn run() -> Result<()> {
         "info" => info(&argv[1..]),
         "demo" => demo(&argv[1..]),
         "serve" => serve(&argv[1..]),
+        "query" => query(&argv[1..]),
+        "loadgen" => loadgen(&argv[1..]),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -44,7 +50,9 @@ fn print_help() {
          SUBCOMMANDS:\n\
            info     print artifact + runtime information\n\
            demo     ingest a synthetic stream and answer one query\n\
-           serve    run the online query service over an ingested stream\n\
+           serve    run the online query service (--listen ADDR opens the TCP gateway)\n\
+           query    send one query to a running gateway (venus query --connect ADDR \"...\")\n\
+           loadgen  drive a running gateway with open-loop concurrent load\n\
            help     this message\n\
          \n\
          Paper tables/figures: `cargo bench` (see DESIGN.md §4).\n"
@@ -173,6 +181,12 @@ fn serve(args: &[String]) -> Result<()> {
             "data-dir",
             "durable memory root: first run ingests + persists, later runs recover from disk",
             Some(""),
+        )
+        .flag(
+            "listen",
+            "expose the typed query protocol over TCP on this address (port 0 = ephemeral); \
+             the replay flags (--queries/--repeat/--deadline-ms) drive the closed loop only",
+            Some(""),
         );
     let parsed = spec.parse(args)?;
     let mut cfg = load_config(&parsed)?;
@@ -190,6 +204,7 @@ fn serve(args: &[String]) -> Result<()> {
         .get("data-dir")
         .filter(|p| !p.is_empty())
         .map(std::path::PathBuf::from);
+    let listen = parsed.get("listen").filter(|a| !a.is_empty()).map(String::from);
 
     // build the typed request mix: alternating priorities (even slots are
     // a waiting human, odd slots are batch analytics), optional deadline
@@ -260,6 +275,13 @@ fn serve(args: &[String]) -> Result<()> {
         fabric = case.fabric;
     }
 
+    if let Some(addr) = listen {
+        // wire mode: remote clients drive the service; the replay mix is
+        // not fired
+        cfg.wire.listen = addr;
+        return serve_wire(&cfg, service, &fabric);
+    }
+
     let mut shed = 0usize;
     for round in 0..repeat {
         let mut receivers = Vec::new();
@@ -282,6 +304,292 @@ fn serve(args: &[String]) -> Result<()> {
     if shed > 0 {
         eprintln!("{shed} queries shed at dequeue (deadline {deadline_ms} ms)");
     }
+    finish_serving(service, &fabric)
+}
+
+/// Wire mode: run the TCP gateway over the prepared service until a
+/// shutdown request arrives (a remote `Shutdown` message, or 'quit' on
+/// an interactive stdin), then tear everything down in durability-safe
+/// order.
+fn serve_wire(
+    cfg: &VenusConfig,
+    service: crate::server::Service,
+    fabric: &Arc<crate::memory::MemoryFabric>,
+) -> Result<()> {
+    use std::io::BufRead;
+
+    let service = Arc::new(service);
+    let gateway = Gateway::start(&cfg.wire, Arc::clone(&service))?;
+    let bound = gateway.local_addr();
+    println!(
+        "wire gateway listening on {bound} (protocol v{}, {} conns max)",
+        crate::net::wire::PROTOCOL_VERSION,
+        cfg.wire.max_conns
+    );
+    eprintln!("  venus query --connect {bound} \"what happened with concept01\"");
+    eprintln!("  venus loadgen --connect {bound} --clients 8 --rate 64");
+    eprintln!("  venus query --connect {bound} --shutdown   # graceful stop");
+    if std::io::IsTerminal::is_terminal(&std::io::stdin()) {
+        eprintln!("  (or type 'quit' here)");
+        let handle = gateway.shutdown_handle();
+        std::thread::spawn(move || {
+            for line in std::io::stdin().lock().lines() {
+                match line {
+                    Ok(l) if l.trim() == "quit" => break,
+                    Ok(_) => continue,
+                    Err(_) => break,
+                }
+            }
+            handle.request();
+        });
+    }
+    gateway.wait_for_shutdown_request();
+    eprintln!("shutdown requested: gateway first, then lane drain, then flush");
+    // ordering is load-bearing for durability: stop accepting and join
+    // every wire handler FIRST (no new work can arrive), THEN drain the
+    // lanes, and only then flush the fabric — so the WAL tail written at
+    // flush time covers every acknowledged query's ingest state
+    let wire = gateway.shutdown();
+    eprintln!("{}", wire.render());
+    let service = match Arc::try_unwrap(service) {
+        Ok(s) => s,
+        Err(arc) => {
+            // should be unreachable — gateway.shutdown() joined every
+            // thread holding a service handle, and ShutdownHandle holds
+            // only the signal.  Degrade gracefully rather than skipping
+            // the flush: whoever drops the last handle drains the lanes
+            // (Service::drop closes and joins the workers), and the
+            // flush below is safe either way — serving never ingests.
+            eprintln!("warning: service handle still shared after gateway shutdown");
+            println!("{}", arc.cache.stats().render());
+            println!("{}", arc.snapshot().render());
+            drop(arc);
+            if fabric.is_durable() {
+                fabric.flush()?;
+            }
+            return Ok(());
+        }
+    };
+    finish_serving(service, fabric)
+}
+
+/// `venus query --connect ADDR "..."` — one wire client, one session.
+fn query(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("venus query")
+        .flag("connect", "gateway address (host:port)", None)
+        .flag("config", "TOML config file (client timeouts come from [wire])", Some(""))
+        .flag("text", "query text (or pass it positionally)", Some(""))
+        .flag("stream", "restrict to one camera stream id (default: all streams)", Some(""))
+        .flag("mode", "retrieval mode override: akr | topk:K | sample:N", Some(""))
+        .flag("budget", "per-query sampling budget override (0 = engine default)", Some("0"))
+        .flag("priority", "admission lane: interactive | batch", Some("interactive"))
+        .flag("deadline-ms", "per-query deadline in milliseconds (0 = none)", Some("0"))
+        .flag("repeat", "send the query this many times (repeats exercise the cache)", Some("1"))
+        .switch("stats", "print the server's metrics snapshot instead of querying")
+        .switch("ping", "liveness probe instead of querying")
+        .switch("shutdown", "ask the server to shut down gracefully")
+        .switch("json", "print raw wire JSON instead of a summary");
+    let parsed = spec.parse(args)?;
+    let cfg = load_config(&parsed)?;
+    let addr = parsed.get("connect").unwrap().to_string();
+    let mut client = WireClient::connect_with(addr.as_str(), &cfg.wire)?;
+    eprintln!(
+        "connected to {addr}: session {} over {} stream(s)",
+        client.session_id(),
+        client.streams()
+    );
+
+    if parsed.on("ping") {
+        client.ping()?;
+        println!("pong");
+        return Ok(());
+    }
+    if parsed.on("stats") {
+        let snap = client.stats()?;
+        if parsed.on("json") {
+            println!("{}", snap.to_json());
+        } else {
+            println!("{}", snap.render());
+        }
+        return Ok(());
+    }
+    if parsed.on("shutdown") {
+        client.shutdown_server()?;
+        println!("server acknowledged shutdown");
+        return Ok(());
+    }
+
+    let text = match parsed.get("text") {
+        Some(t) if !t.is_empty() => t.to_string(),
+        _ => parsed.positional.join(" "),
+    };
+    if text.is_empty() {
+        anyhow::bail!("no query text (use --text or a positional argument)");
+    }
+    let mut request = QueryRequest::new(text);
+    if let Some(s) = parsed.get("stream").filter(|s| !s.is_empty()) {
+        let id: usize = s.parse()?;
+        if id >= client.streams() {
+            anyhow::bail!(
+                "stream {id} out of range: the server's fabric has {} stream(s)",
+                client.streams()
+            );
+        }
+        request = request.scope(StreamScope::One(StreamId(id as u16)));
+    }
+    if let Some(mode) = parse_mode(parsed.get("mode").unwrap())? {
+        request = request.mode(mode);
+    }
+    let budget = parsed.get_usize("budget")?;
+    if budget > 0 {
+        request = request.budget(budget);
+    }
+    request = request.priority(parse_priority(parsed.get("priority").unwrap())?);
+    let deadline_ms = parsed.get_usize("deadline-ms")?;
+    if deadline_ms > 0 {
+        request = request.deadline(Duration::from_millis(deadline_ms as u64));
+    }
+
+    let repeat = parsed.get_usize("repeat")?.max(1);
+    let mut typed_errors: Vec<ApiError> = Vec::new();
+    for _ in 0..repeat {
+        match client.query(request.clone())? {
+            Ok(resp) => {
+                if parsed.on("json") {
+                    println!("{}", resp.to_json());
+                } else {
+                    println!(
+                        "#{} [{}] {} frames in {} (cache {}) — {} draws",
+                        resp.id,
+                        resp.priority,
+                        resp.evidence.len(),
+                        fmt_duration(resp.total_s()),
+                        resp.cache,
+                        resp.draws,
+                    );
+                    for e in &resp.evidence {
+                        println!(
+                            "  stream {} frame {:>6} t={:>8} score {:.4}",
+                            e.frame.stream.0,
+                            e.frame.idx,
+                            fmt_duration(e.time_s),
+                            e.score,
+                        );
+                    }
+                }
+            }
+            Err(api) => {
+                eprintln!("typed error: {api}");
+                typed_errors.push(api);
+            }
+        }
+    }
+    // scripted callers must see failure as failure: a run where any
+    // query was refused/shed/failed exits non-zero
+    if let Some(last) = typed_errors.last() {
+        anyhow::bail!("{} of {repeat} queries failed (last: {last})", typed_errors.len());
+    }
+    Ok(())
+}
+
+/// `venus loadgen --connect ADDR` — open-loop concurrent load against a
+/// running gateway; queries come from the same synthetic workload
+/// generator the server was seeded with.
+fn loadgen(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("venus loadgen")
+        .flag("connect", "gateway address (host:port)", None)
+        .flag("config", "TOML config file (client timeouts come from [wire])", Some(""))
+        .flag("clients", "concurrent client connections", Some("8"))
+        .flag("rate", "aggregate arrival rate, queries/second (open-loop)", Some("64"))
+        .flag("duration-secs", "run length in seconds", Some("5"))
+        .flag(
+            "preset",
+            "dataset preset the server was seeded with (drives the query generator)",
+            Some("videomme-short"),
+        )
+        .flag("seed", "workload seed (match the server's for in-distribution queries)", Some("42"))
+        .flag("queries", "distinct query texts to rotate through", Some("16"))
+        .flag("interactive-share", "fraction of arrivals on the interactive lane", Some("0.5"))
+        .flag("deadline-ms", "per-query deadline in milliseconds (0 = none)", Some("0"))
+        .switch("shutdown", "gracefully stop the server after the run");
+    let parsed = spec.parse(args)?;
+    let cfg = load_config(&parsed)?;
+    let addr = parsed.get("connect").unwrap().to_string();
+    let preset = DatasetPreset::parse(parsed.get("preset").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown preset"))?;
+    let seed: u64 = parsed.get("seed").unwrap().parse()?;
+    let n_texts = parsed.get_usize("queries")?.max(1);
+
+    let synth = crate::eval::build_synth(preset, seed)?;
+    let texts: Vec<String> = crate::video::workload::WorkloadGen::new(seed, preset)
+        .generate(synth.script(), n_texts)
+        .into_iter()
+        .map(|q| q.text)
+        .collect();
+
+    let mut lg = LoadGen::new(addr.clone(), texts);
+    lg.clients = parsed.get_usize("clients")?.max(1);
+    lg.rate_qps = parsed.get_f64("rate")?;
+    let duration_secs = parsed.get_f64("duration-secs")?;
+    anyhow::ensure!(
+        duration_secs > 0.0 && duration_secs.is_finite(),
+        "duration-secs must be a positive number"
+    );
+    lg.duration = Duration::from_secs_f64(duration_secs);
+    lg.interactive_share = parsed.get_f64("interactive-share")?;
+    let deadline_ms = parsed.get_usize("deadline-ms")?;
+    if deadline_ms > 0 {
+        lg.deadline = Some(Duration::from_millis(deadline_ms as u64));
+    }
+    lg.wire = cfg.wire.clone();
+    eprintln!(
+        "driving {addr}: {} clients at {:.1} q/s for {:.1}s over {} texts",
+        lg.clients,
+        lg.rate_qps,
+        lg.duration.as_secs_f64(),
+        lg.texts.len()
+    );
+    let report = lg.run()?;
+    println!("{}", report.render());
+    if parsed.on("shutdown") {
+        let mut client = WireClient::connect_with(addr.as_str(), &cfg.wire)?;
+        client.shutdown_server()?;
+        eprintln!("server acknowledged shutdown");
+    }
+    Ok(())
+}
+
+fn parse_mode(s: &str) -> Result<Option<RetrievalMode>> {
+    if s.is_empty() {
+        return Ok(None);
+    }
+    if s == "akr" {
+        return Ok(Some(RetrievalMode::Akr));
+    }
+    if let Some(k) = s.strip_prefix("topk:") {
+        return Ok(Some(RetrievalMode::TopK(k.parse()?)));
+    }
+    if let Some(n) = s.strip_prefix("sample:") {
+        return Ok(Some(RetrievalMode::FixedSampling(n.parse()?)));
+    }
+    anyhow::bail!("unknown mode '{s}' (use akr | topk:K | sample:N)")
+}
+
+fn parse_priority(s: &str) -> Result<Priority> {
+    match s {
+        "interactive" => Ok(Priority::Interactive),
+        "batch" => Ok(Priority::Batch),
+        other => anyhow::bail!("unknown priority '{other}' (use interactive | batch)"),
+    }
+}
+
+/// Shared tail of every serve mode: print cache + serving stats, drain
+/// the worker lanes, and flush durable memory only after everything
+/// drained (clean exits leave no torn WAL tails behind).
+fn finish_serving(
+    service: crate::server::Service,
+    fabric: &Arc<crate::memory::MemoryFabric>,
+) -> Result<()> {
     println!("{}", service.cache.stats().render());
     let snap = service.shutdown();
     println!("{}", snap.render());

@@ -227,6 +227,40 @@ impl Default for ApiConfig {
     }
 }
 
+/// Wire-serving parameters: the TCP gateway that exposes the typed query
+/// protocol to remote clients (DESIGN.md §Wire-Protocol).
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    /// Default listen address for `venus serve --listen` (the CLI flag
+    /// overrides it; port 0 binds an ephemeral port).
+    pub listen: String,
+    /// Bounded connection budget: accepts beyond this are answered with a
+    /// typed capacity error and closed, never queued.
+    pub max_conns: usize,
+    /// Per-FRAME read budget in milliseconds: a frame that has not fully
+    /// arrived within this window fails its connection.  The budget
+    /// spans the whole frame (not each recv), so even a byte-trickling
+    /// peer cannot hold a handler or a connection slot forever.
+    pub read_timeout_ms: u64,
+    /// Per-connection socket write timeout in milliseconds.
+    pub write_timeout_ms: u64,
+    /// Largest accepted/emitted frame payload in bytes; an oversized
+    /// length prefix fails that one connection before allocating.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:7661".into(),
+            max_conns: 64,
+            read_timeout_ms: 30_000,
+            write_timeout_ms: 10_000,
+            max_frame_bytes: 1 << 20,
+        }
+    }
+}
+
 /// Multi-camera memory-fabric parameters.
 #[derive(Clone, Debug)]
 pub struct FabricConfig {
@@ -270,6 +304,7 @@ pub struct VenusConfig {
     pub cloud: CloudConfig,
     pub server: ServerConfig,
     pub api: ApiConfig,
+    pub wire: WireConfig,
     pub fabric: FabricConfig,
     /// Edge device profile name (see `edge::DeviceProfile`).
     pub device: String,
@@ -343,6 +378,15 @@ impl VenusConfig {
             cfg.api.batch_depth = Some(d.usize_or("api.batch_depth", 0)?);
         }
         cfg.api.fps = d.f64_or("api.fps", cfg.api.fps)?;
+
+        cfg.wire.listen = d.str_or("wire.listen", &cfg.wire.listen)?;
+        cfg.wire.max_conns = d.usize_or("wire.max_conns", cfg.wire.max_conns)?;
+        cfg.wire.read_timeout_ms =
+            d.usize_or("wire.read_timeout_ms", cfg.wire.read_timeout_ms as usize)? as u64;
+        cfg.wire.write_timeout_ms =
+            d.usize_or("wire.write_timeout_ms", cfg.wire.write_timeout_ms as usize)? as u64;
+        cfg.wire.max_frame_bytes =
+            d.usize_or("wire.max_frame_bytes", cfg.wire.max_frame_bytes)?;
 
         cfg.fabric.streams = d.usize_or("fabric.streams", cfg.fabric.streams)?;
         cfg.fabric.pool_workers =
@@ -427,6 +471,18 @@ impl VenusConfig {
         if self.api.fps <= 0.0 {
             bail!("api.fps must be positive");
         }
+        if self.wire.listen.is_empty() {
+            bail!("wire.listen must be a host:port address");
+        }
+        if self.wire.max_conns == 0 {
+            bail!("wire.max_conns must be >= 1");
+        }
+        if self.wire.read_timeout_ms == 0 || self.wire.write_timeout_ms == 0 {
+            bail!("wire read/write timeouts must be >= 1 ms");
+        }
+        if self.wire.max_frame_bytes < 1024 {
+            bail!("wire.max_frame_bytes must be >= 1024 (a QueryRequest must fit)");
+        }
         if self.fabric.streams == 0 {
             bail!("fabric.streams must be >= 1");
         }
@@ -477,6 +533,11 @@ const KNOWN_KEYS: &[&str] = &[
     "api.interactive_depth",
     "api.batch_depth",
     "api.fps",
+    "wire.listen",
+    "wire.max_conns",
+    "wire.read_timeout_ms",
+    "wire.write_timeout_ms",
+    "wire.max_frame_bytes",
     "fabric.streams",
     "fabric.pool_workers",
     "device",
@@ -576,6 +637,25 @@ mod tests {
         assert!(VenusConfig::from_toml("[memory]\nsegment_records = 0").is_err());
         assert!(VenusConfig::from_toml("[memory]\ncold_cache_segments = 0").is_err());
         assert!(VenusConfig::from_toml("[memory]\nsegment_frames = 0").is_err());
+    }
+
+    #[test]
+    fn wire_keys_parse_and_validate() {
+        let cfg = VenusConfig::from_toml(
+            "[wire]\nlisten = \"0.0.0.0:9000\"\nmax_conns = 8\nread_timeout_ms = 5000\nmax_frame_bytes = 4096",
+        )
+        .unwrap();
+        assert_eq!(cfg.wire.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.wire.max_conns, 8);
+        assert_eq!(cfg.wire.read_timeout_ms, 5000);
+        assert_eq!(cfg.wire.max_frame_bytes, 4096);
+        // untouched defaults survive
+        assert_eq!(cfg.wire.write_timeout_ms, 10_000);
+        // invalid values rejected
+        assert!(VenusConfig::from_toml("[wire]\nmax_conns = 0").is_err());
+        assert!(VenusConfig::from_toml("[wire]\nread_timeout_ms = 0").is_err());
+        assert!(VenusConfig::from_toml("[wire]\nmax_frame_bytes = 16").is_err());
+        assert!(VenusConfig::from_toml("[wire]\nlisten = \"\"").is_err());
     }
 
     #[test]

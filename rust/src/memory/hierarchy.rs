@@ -101,6 +101,37 @@ impl TierStats {
             Some(self.cold_hits as f64 / total as f64)
         }
     }
+
+    /// Serialize to the wire JSON encoding (the gateway's `Stats` reply).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("hot_bytes".into(), Json::Num(self.hot_bytes as f64));
+        m.insert("hot_records".into(), Json::Num(self.hot_records as f64));
+        m.insert("cold_records".into(), Json::Num(self.cold_records as f64));
+        m.insert("cold_segments".into(), Json::Num(self.cold_segments as f64));
+        m.insert("cold_resident_bytes".into(), Json::Num(self.cold_resident_bytes as f64));
+        m.insert("raw_resident_bytes".into(), Json::Num(self.raw_resident_bytes as f64));
+        m.insert("evictions".into(), Json::Num(self.evictions as f64));
+        m.insert("cold_hits".into(), Json::Num(self.cold_hits as f64));
+        m.insert("cold_misses".into(), Json::Num(self.cold_misses as f64));
+        Json::Obj(m)
+    }
+
+    /// Parse the wire JSON encoding.
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Self> {
+        Ok(Self {
+            hot_bytes: v.get("hot_bytes")?.as_usize()?,
+            hot_records: v.get("hot_records")?.as_usize()?,
+            cold_records: v.get("cold_records")?.as_usize()?,
+            cold_segments: v.get("cold_segments")?.as_usize()?,
+            cold_resident_bytes: v.get("cold_resident_bytes")?.as_usize()?,
+            raw_resident_bytes: v.get("raw_resident_bytes")?.as_usize()?,
+            evictions: v.get("evictions")?.as_usize()? as u64,
+            cold_hits: v.get("cold_hits")?.as_usize()? as u64,
+            cold_misses: v.get("cold_misses")?.as_usize()? as u64,
+        })
+    }
 }
 
 /// The hierarchical memory: vector index + cluster links + raw archive,

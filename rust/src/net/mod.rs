@@ -1,4 +1,5 @@
-//! Edge-cloud network simulator.
+//! Edge-cloud networking: the simulated uplink cost model ([`Link`])
+//! and the real TCP serving surface ([`wire`]).
 //!
 //! The paper fixes a 100 Mbps link between the Jetson edge and the L40S
 //! cloud (§V-A) and attributes up to 80% of baseline response latency to
@@ -9,6 +10,8 @@
 //! upload "the entire relevant video" ship the frames extracted at the
 //! evaluation rate (8 FPS, §V-A), which is what makes communication the
 //! dominant term in Fig. 2.
+
+pub mod wire;
 
 use crate::config::NetConfig;
 

@@ -1,0 +1,176 @@
+//! Blocking wire client over the typed query protocol.
+//!
+//! One [`WireClient`] is one TCP connection and one *session*: the
+//! gateway mints a session id at handshake time, and the client records
+//! every turn (request + typed response or error) with the same
+//! [`SessionTurn`] type the in-process [`crate::api::Session`] uses —
+//! so per-session history and cache-hit accounting read identically
+//! whether the service is a function call or a socket away.
+//!
+//! Error layering: transport problems (connect failure, protocol
+//! violation, oversized frame, server busy) surface as `anyhow` errors —
+//! the connection is dead or never existed.  Serving-layer refusals
+//! (admission rejection, deadline shed, engine failure) surface as
+//! `Ok(Err(ApiError))` — typed, retryable per the [`ApiError`] taxonomy,
+//! on a connection that remains usable.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::api::{ApiError, QueryRequest, QueryResponse, SessionTurn};
+use crate::config::WireConfig;
+use crate::server::Snapshot;
+
+use super::frame::{read_frame, write_frame};
+use super::proto::{ClientMsg, ServerMsg, WireError, PROTOCOL_VERSION};
+
+/// Session-history bound: the client keeps between this many and twice
+/// this many recent turns (amortized O(1) trimming).  Long-lived
+/// clients — the load generator fires hundreds of thousands of queries
+/// per connection — must not grow memory without bound for a history
+/// nothing reads back that far.
+const MAX_HISTORY_TURNS: usize = 1024;
+
+/// A connected, handshaken wire client.
+pub struct WireClient {
+    stream: TcpStream,
+    max_frame_bytes: usize,
+    session: u64,
+    streams: usize,
+    history: Vec<SessionTurn>,
+}
+
+impl WireClient {
+    /// Connect with the default [`WireConfig`] timeouts and frame bound.
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Self> {
+        Self::connect_with(addr, &WireConfig::default())
+    }
+
+    /// Connect, handshake, and return a ready client.  `cfg` supplies
+    /// the client-side read/write timeouts and frame bound (`listen` is
+    /// ignored — the address is explicit).
+    pub fn connect_with(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+        cfg: &WireConfig,
+    ) -> Result<Self> {
+        let stream = TcpStream::connect(&addr)
+            .with_context(|| format!("connecting to venus gateway at {addr:?}"))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms)))?;
+        stream.set_write_timeout(Some(Duration::from_millis(cfg.write_timeout_ms)))?;
+        let mut client = Self {
+            stream,
+            max_frame_bytes: cfg.max_frame_bytes,
+            session: 0,
+            streams: 0,
+            history: Vec::new(),
+        };
+        let hello = ClientMsg::Hello { version: PROTOCOL_VERSION };
+        match client.round_trip(&hello)? {
+            ServerMsg::HelloAck { version, session, streams } => {
+                if version != PROTOCOL_VERSION {
+                    bail!("server speaks protocol v{version}, this client v{PROTOCOL_VERSION}");
+                }
+                client.session = session;
+                client.streams = streams;
+                Ok(client)
+            }
+            ServerMsg::Error { error } => {
+                Err(anyhow::Error::new(error).context("handshake refused"))
+            }
+            other => bail!("expected hello_ack, got {other:?}"),
+        }
+    }
+
+    /// The session id the gateway minted for this connection.
+    pub fn session_id(&self) -> u64 {
+        self.session
+    }
+
+    /// Camera streams in the server's fabric (from the handshake).
+    pub fn streams(&self) -> usize {
+        self.streams
+    }
+
+    /// Send one typed query and block for the reply.  Outer error =
+    /// transport/protocol failure (connection unusable); inner error =
+    /// typed serving refusal (connection still fine).  The turn is
+    /// recorded in the session history either way the *serving* layer
+    /// answered.
+    pub fn query(
+        &mut self,
+        request: QueryRequest,
+    ) -> Result<std::result::Result<QueryResponse, ApiError>> {
+        let msg = ClientMsg::Query { request: request.clone() };
+        let response = match self.round_trip(&msg)? {
+            ServerMsg::Response { response } => Ok(response),
+            ServerMsg::Error { error: WireError::Api(api) } => Err(api),
+            ServerMsg::Error { error } => {
+                return Err(anyhow::Error::new(error).context("query failed at the wire layer"))
+            }
+            other => bail!("expected response, got {other:?}"),
+        };
+        if self.history.len() >= MAX_HISTORY_TURNS * 2 {
+            self.history.drain(..MAX_HISTORY_TURNS);
+        }
+        self.history.push(SessionTurn { request, response: response.clone() });
+        Ok(response)
+    }
+
+    /// Fetch the server's live metrics snapshot (per-lane counters and
+    /// queue-depth gauges, latency percentiles, memory gauges).
+    pub fn stats(&mut self) -> Result<Snapshot> {
+        match self.round_trip(&ClientMsg::Stats)? {
+            ServerMsg::Stats { snapshot } => Ok(*snapshot),
+            ServerMsg::Error { error } => Err(anyhow::Error::new(error).context("stats refused")),
+            other => bail!("expected stats, got {other:?}"),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.round_trip(&ClientMsg::Ping)? {
+            ServerMsg::Pong => Ok(()),
+            other => bail!("expected pong, got {other:?}"),
+        }
+    }
+
+    /// Ask the server to shut down gracefully.  The server acknowledges,
+    /// then closes this connection; the serve loop drains and flushes.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.round_trip(&ClientMsg::Shutdown)? {
+            ServerMsg::ShutdownAck => Ok(()),
+            other => bail!("expected shutdown_ack, got {other:?}"),
+        }
+    }
+
+    /// Recent turns of this session, in order (the same record type the
+    /// in-process [`crate::api::Session`] keeps).  Bounded: only the
+    /// most recent ~1024–2048 turns are retained.
+    pub fn history(&self) -> &[SessionTurn] {
+        &self.history
+    }
+
+    /// Retained turns served from the semantic query cache.
+    pub fn cache_hits(&self) -> usize {
+        self.history
+            .iter()
+            .filter(|t| t.response.as_ref().is_ok_and(|r| r.cache.is_hit()))
+            .count()
+    }
+
+    /// Retained turns that ended in a typed serving error (shed,
+    /// rejected, ...).
+    pub fn errors(&self) -> usize {
+        self.history.iter().filter(|t| t.response.is_err()).count()
+    }
+
+    fn round_trip(&mut self, msg: &ClientMsg) -> Result<ServerMsg> {
+        write_frame(&mut self.stream, &msg.to_json(), self.max_frame_bytes)?;
+        let frame = read_frame(&mut self.stream, self.max_frame_bytes)
+            .map_err(|e| anyhow::Error::new(e).context("reading server reply"))?;
+        ServerMsg::from_json(&frame)
+    }
+}

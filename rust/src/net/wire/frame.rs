@@ -1,0 +1,197 @@
+//! Length-prefixed JSON frame codec.
+//!
+//! One frame = a 4-byte big-endian payload length followed by that many
+//! bytes of UTF-8 JSON (the [`crate::util::json`] encoding).  The length
+//! bound is enforced *before* allocating, so a hostile 4 GiB prefix
+//! costs nothing; every failure mode is a typed [`FrameError`] the
+//! caller maps to "close this one connection".
+
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Bytes in the length prefix.
+pub const LEN_PREFIX_BYTES: usize = 4;
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The peer closed the connection cleanly between frames (EOF at a
+    /// frame boundary) — the normal end of a conversation.
+    Closed,
+    /// The length prefix exceeds the configured frame bound (or is 0).
+    /// Nothing was allocated; the connection is no longer in sync.
+    TooLarge { len: usize, max: usize },
+    /// Socket error, read timeout, or EOF *inside* a frame (a truncated
+    /// peer write).  The connection is no longer in sync.
+    Io(std::io::Error),
+    /// The payload was not valid JSON.
+    BadJson(String),
+}
+
+impl FrameError {
+    /// Did the read fail because the socket's read timeout elapsed?
+    /// (Unix reports `WouldBlock` for `SO_RCVTIMEO`, Windows `TimedOut`.)
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            self,
+            FrameError::Io(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+        )
+    }
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "peer closed the connection"),
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame of {len} bytes exceeds the {max}-byte bound")
+            }
+            FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
+            FrameError::BadJson(msg) => write!(f, "frame payload is not valid JSON: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Read one frame.  `max_bytes` bounds the payload length (a
+/// `TooLarge` error is returned before any payload allocation).
+pub fn read_frame(r: &mut impl Read, max_bytes: usize) -> std::result::Result<Json, FrameError> {
+    let mut prefix = [0u8; LEN_PREFIX_BYTES];
+    // the first byte is read separately so a clean close *between*
+    // frames (EOF before any prefix byte) is distinguishable from a
+    // truncated prefix
+    match r.read(&mut prefix[..1]) {
+        Ok(0) => return Err(FrameError::Closed),
+        Ok(_) => {}
+        Err(e) if e.kind() == ErrorKind::Interrupted => {
+            return read_frame(r, max_bytes);
+        }
+        Err(e) => return Err(FrameError::Io(e)),
+    }
+    r.read_exact(&mut prefix[1..]).map_err(FrameError::Io)?;
+    let len = u32::from_be_bytes(prefix) as usize;
+    if len == 0 || len > max_bytes {
+        return Err(FrameError::TooLarge { len, max: max_bytes });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(FrameError::Io)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|e| FrameError::BadJson(format!("invalid utf-8: {e}")))?;
+    Json::parse(text).map_err(|e| FrameError::BadJson(format!("{e:#}")))
+}
+
+/// Write one frame (length prefix + serialized JSON) and flush.  An
+/// encoding larger than `max_bytes` is an error — the peer would refuse
+/// it anyway, so it is never put on the wire.
+pub fn write_frame(w: &mut impl Write, msg: &Json, max_bytes: usize) -> Result<()> {
+    write_frame_text(w, &msg.to_string(), max_bytes)
+}
+
+/// Write an already-serialized JSON payload as one frame.  Lets callers
+/// that need the encoded size beforehand (e.g. to answer an oversized
+/// reply with a typed error) serialize exactly once.
+pub fn write_frame_text(w: &mut impl Write, payload: &str, max_bytes: usize) -> Result<()> {
+    let bytes = payload.as_bytes();
+    if bytes.is_empty() || bytes.len() > max_bytes {
+        bail!("frame of {} bytes exceeds the {max_bytes}-byte bound", bytes.len());
+    }
+    let prefix = (bytes.len() as u32).to_be_bytes();
+    w.write_all(&prefix)?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const MAX: usize = 4096;
+
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut buf = (payload.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(payload);
+        buf
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let msgs = [
+            Json::parse(r#"{"type":"ping"}"#).unwrap(),
+            Json::parse(r#"{"a":[1,2,3],"b":"héllo → 世界"}"#).unwrap(),
+            Json::Num(42.0),
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_frame(&mut buf, m, MAX).unwrap();
+        }
+        let mut r = Cursor::new(buf);
+        for m in &msgs {
+            assert_eq!(&read_frame(&mut r, MAX).unwrap(), m);
+        }
+        // EOF at the frame boundary is a clean close
+        assert!(matches!(read_frame(&mut r, MAX), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocating() {
+        // 4 GiB-scale prefix: must fail with TooLarge, never allocate
+        let mut r = Cursor::new(0xffff_ffffu32.to_be_bytes().to_vec());
+        match read_frame(&mut r, MAX) {
+            Err(FrameError::TooLarge { len, max }) => {
+                assert_eq!(len, 0xffff_ffff);
+                assert_eq!(max, MAX);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // zero-length frames are equally invalid
+        let mut r = Cursor::new(0u32.to_be_bytes().to_vec());
+        assert!(matches!(read_frame(&mut r, MAX), Err(FrameError::TooLarge { len: 0, .. })));
+    }
+
+    #[test]
+    fn truncations_are_io_errors_not_panics() {
+        // truncated mid-prefix
+        let mut r = Cursor::new(vec![0x00, 0x00]);
+        assert!(matches!(read_frame(&mut r, MAX), Err(FrameError::Io(_))));
+        // truncated mid-payload
+        let mut full = framed(br#"{"type":"ping"}"#);
+        full.truncate(LEN_PREFIX_BYTES + 3);
+        let mut r = Cursor::new(full);
+        assert!(matches!(read_frame(&mut r, MAX), Err(FrameError::Io(_))));
+    }
+
+    #[test]
+    fn garbage_payloads_are_typed_errors() {
+        for bad in [&b"not json at all"[..], b"{\"unterminated\":", b"\xff\xfe\x00"] {
+            let mut r = Cursor::new(framed(bad));
+            assert!(
+                matches!(read_frame(&mut r, MAX), Err(FrameError::BadJson(_))),
+                "payload {bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn writer_refuses_oversized_frames() {
+        let big = Json::Str("x".repeat(MAX));
+        let mut buf = Vec::new();
+        assert!(write_frame(&mut buf, &big, MAX).is_err());
+        assert!(buf.is_empty(), "nothing hit the wire");
+    }
+
+    #[test]
+    fn timeout_detection_covers_both_unix_and_windows_kinds() {
+        for kind in [ErrorKind::WouldBlock, ErrorKind::TimedOut] {
+            assert!(FrameError::Io(std::io::Error::from(kind)).is_timeout());
+        }
+        assert!(!FrameError::Io(std::io::Error::from(ErrorKind::BrokenPipe)).is_timeout());
+        assert!(!FrameError::Closed.is_timeout());
+    }
+}

@@ -1,0 +1,551 @@
+//! The TCP gateway: accepts connections and feeds remote queries into
+//! the in-process [`Service`] — so priority-lane admission, deadline
+//! shedding, the semantic query cache, and per-lane metrics apply to
+//! wire traffic exactly as they do to in-process callers.
+//!
+//! Threading model: one accept thread plus one handler thread per live
+//! connection (the protocol is strictly request/response per
+//! connection, so a handler is either blocked reading the next frame or
+//! executing one query inside [`Service::call`]).  The connection
+//! budget bounds handler count; accepts beyond it are answered with a
+//! typed `busy` error and closed — never queued, never dropped
+//! silently.
+//!
+//! Failure containment: every per-connection failure (malformed frame,
+//! oversized length prefix, handshake mismatch, socket error, idle
+//! timeout) ends at most that one connection.  The accept loop and
+//! every other handler keep serving; nothing panics across a socket.
+//!
+//! Shutdown is two-phase so durable memory can flush *after* the wire
+//! is quiet: [`Gateway::shutdown`] first stops the accept loop, then
+//! half-closes every live socket's read side — a handler blocked
+//! between frames wakes to a clean EOF, while a handler mid-query still
+//! writes its response before it sees the EOF.  Only after every
+//! handler has exited does the caller tear down the service (draining
+//! the lanes) and flush the fabric.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::WireConfig;
+use crate::server::Service;
+
+use super::frame::{read_frame, write_frame, write_frame_text, FrameError};
+use super::proto::{ClientMsg, ServerMsg, WireError, PROTOCOL_VERSION};
+
+/// Monotone wire-level traffic counters (connection plane only — query
+/// accounting lives in the service's per-lane [`crate::server::Metrics`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireStats {
+    /// connections admitted past the budget check
+    pub accepted_conns: u64,
+    /// connections answered with `busy` and closed at accept time
+    pub refused_conns: u64,
+    /// connections that ended on a protocol violation (bad frame, bad
+    /// message, handshake mismatch)
+    pub protocol_errors: u64,
+    /// connections that ended on an idle read timeout
+    pub idle_timeouts: u64,
+    /// admitted connections that have fully ended (any reason)
+    pub closed_conns: u64,
+}
+
+impl WireStats {
+    /// Admitted connections still live.
+    pub fn open_conns(&self) -> u64 {
+        self.accepted_conns.saturating_sub(self.closed_conns)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "wire: {} conns accepted ({} open) / {} refused at budget / {} protocol errors / {} idle timeouts",
+            self.accepted_conns,
+            self.open_conns(),
+            self.refused_conns,
+            self.protocol_errors,
+            self.idle_timeouts,
+        )
+    }
+}
+
+/// The shutdown request signal, deliberately its OWN allocation: a
+/// [`ShutdownHandle`] held by a long-lived thread (a stdin watcher)
+/// must not pin [`Shared`] — and through it the `Arc<Service>` — alive
+/// past [`Gateway::shutdown`], or the caller could never unwrap the
+/// service to drain and flush it.
+#[derive(Default)]
+struct ShutdownSignal {
+    flag: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl ShutdownSignal {
+    fn request(&self) {
+        *self.flag.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn requested(&self) -> bool {
+        *self.flag.lock().unwrap()
+    }
+
+    fn wait(&self) {
+        let mut flag = self.flag.lock().unwrap();
+        while !*flag {
+            flag = self.cv.wait(flag).unwrap();
+        }
+    }
+}
+
+struct Shared {
+    service: Arc<Service>,
+    cfg: WireConfig,
+    /// accept-loop gate: false once shutdown begins
+    accepting: AtomicBool,
+    /// set by a remote `Shutdown` message or `request_shutdown`
+    signal: Arc<ShutdownSignal>,
+    /// live handler registry: socket clones for the half-close nudge
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// refusal threads currently parked reading a hello (bounded)
+    refusals: std::sync::atomic::AtomicUsize,
+    next_conn: AtomicU64,
+    next_session: AtomicU64,
+    stats: Mutex<WireStats>,
+}
+
+/// A running TCP gateway over one [`Service`].
+pub struct Gateway {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+/// A cheap cloneable handle that can request gateway shutdown from
+/// another thread (e.g. a stdin watcher) while the main thread blocks
+/// in [`Gateway::wait_for_shutdown_request`].
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    signal: Arc<ShutdownSignal>,
+}
+
+impl ShutdownHandle {
+    /// Same effect as a remote `Shutdown` message.
+    pub fn request(&self) {
+        self.signal.request();
+    }
+}
+
+impl Gateway {
+    /// Bind `cfg.listen` (port 0 = ephemeral) and start accepting.
+    /// The gateway holds its own handle to the service; the caller keeps
+    /// one too and tears the service down *after* [`Gateway::shutdown`].
+    pub fn start(cfg: &WireConfig, service: Arc<Service>) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding wire listener on {}", cfg.listen))?;
+        let local_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            service,
+            cfg: cfg.clone(),
+            accepting: AtomicBool::new(true),
+            signal: Arc::new(ShutdownSignal::default()),
+            conns: Mutex::new(HashMap::new()),
+            refusals: std::sync::atomic::AtomicUsize::new(0),
+            next_conn: AtomicU64::new(0),
+            next_session: AtomicU64::new(0),
+            stats: Mutex::new(WireStats::default()),
+        });
+        let handlers = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let handlers = Arc::clone(&handlers);
+            std::thread::spawn(move || accept_loop(listener, shared, handlers))
+        };
+        Ok(Self { local_addr, shared, accept: Some(accept), handlers })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Wire-level traffic counters.
+    pub fn stats(&self) -> WireStats {
+        *self.shared.stats.lock().unwrap()
+    }
+
+    /// Ask the gateway to stop (same effect as a remote `Shutdown`
+    /// message): wakes [`Gateway::wait_for_shutdown_request`] waiters.
+    pub fn request_shutdown(&self) {
+        self.shared.signal.request();
+    }
+
+    /// A handle other threads can use to request shutdown.  It holds
+    /// only the signal — never the service — so a forgotten handle (a
+    /// stdin watcher parked on a read) cannot keep the service alive
+    /// after [`Gateway::shutdown`].
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { signal: Arc::clone(&self.shared.signal) }
+    }
+
+    /// Has anyone (remote client or local caller) requested shutdown?
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.signal.requested()
+    }
+
+    /// Block until a shutdown request arrives (remote `Shutdown` message
+    /// or [`Gateway::request_shutdown`]).
+    pub fn wait_for_shutdown_request(&self) {
+        self.shared.signal.wait();
+    }
+
+    /// Stop accepting, let in-flight queries finish, join every thread,
+    /// and return the final wire counters.  After this returns the wire
+    /// is quiet: the caller can tear down the service (draining the
+    /// lanes) and flush durable memory with nothing racing them.
+    pub fn shutdown(mut self) -> WireStats {
+        self.stop();
+        self.stats()
+    }
+
+    fn stop(&mut self) {
+        let accept = match self.accept.take() {
+            Some(h) => h,
+            None => return,
+        };
+        self.shared.accepting.store(false, Ordering::SeqCst);
+        self.shared.signal.request();
+        // the accept loop is blocked in accept(): nudge it with a
+        // throwaway connection so it observes the closed gate.  A
+        // wildcard bind (0.0.0.0 / ::) is not self-connectable on every
+        // platform — rewrite to loopback first
+        let mut nudge = self.local_addr;
+        if nudge.ip().is_unspecified() {
+            nudge.set_ip(match nudge.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let nudged = TcpStream::connect_timeout(&nudge, Duration::from_millis(250)).is_ok();
+        if nudged {
+            let _ = accept.join();
+        } else {
+            // self-connect blocked (hairpin-filtered interface, odd
+            // network policy): detaching the parked accept thread is
+            // better than wedging shutdown — the gate is closed, so it
+            // drops any later connection and exits; meanwhile the lane
+            // drain and durable flush below still happen
+            drop(accept);
+        }
+        // half-close every live socket's read side: handlers blocked
+        // between frames wake to a clean EOF; a handler mid-query still
+        // writes its response first
+        for stream in self.shared.conns.lock().unwrap().values() {
+            let _ = stream.shutdown(std::net::Shutdown::Read);
+        }
+        let handles: Vec<JoinHandle<()>> = self.handlers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Dropping a gateway without an explicit [`Gateway::shutdown`] (error
+/// paths, test teardown) must not leak blocked threads.
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    loop {
+        let (mut stream, _peer) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(_) if !shared.accepting.load(Ordering::SeqCst) => break,
+            Err(_) => {
+                // transient accept failure (fd pressure): back off instead
+                // of spinning hot; the gate is re-checked next iteration
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if !shared.accepting.load(Ordering::SeqCst) {
+            break; // the shutdown nudge (or a late client): drop it
+        }
+        // socket options + budget check happen here so the handler
+        // thread only ever exists for admitted connections
+        let cfg = &shared.cfg;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms)));
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(cfg.write_timeout_ms)));
+        {
+            let mut st = shared.stats.lock().unwrap();
+            if st.open_conns() >= cfg.max_conns as u64 {
+                st.refused_conns += 1;
+                drop(st);
+                refuse(&shared, &handlers, stream);
+                continue;
+            }
+            st.accepted_conns += 1;
+        }
+        let conn_id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+        match stream.try_clone() {
+            Ok(clone) => {
+                shared.conns.lock().unwrap().insert(conn_id, clone);
+            }
+            Err(_) => {
+                // fd pressure: a connection we cannot register for the
+                // shutdown half-close is a connection we cannot reliably
+                // wake — drop it now (rebalancing the open-conns gauge)
+                // rather than risk stalling shutdown on it
+                shared.stats.lock().unwrap().closed_conns += 1;
+                continue;
+            }
+        }
+        let shared2 = Arc::clone(&shared);
+        let handle = std::thread::spawn(move || {
+            conn_loop(stream, conn_id, shared2);
+        });
+        let mut hs = handlers.lock().unwrap();
+        // opportunistic reap: finished handlers are joined here, not
+        // accumulated for the gateway's whole lifetime
+        hs.retain(|h| !h.is_finished());
+        hs.push(handle);
+    }
+}
+
+/// Concurrent refusal-thread bound: the polite busy reply is best
+/// effort — a flood of silent excess connections gets dropped outright
+/// rather than parking one thread each.
+const MAX_REFUSAL_THREADS: usize = 8;
+
+/// How long a refusal thread waits for the excess client's hello before
+/// closing anyway (deliberately much shorter than the serving read
+/// timeout — this thread exists only to deliver one busy frame).
+const REFUSAL_READ_TIMEOUT: Duration = Duration::from_millis(1000);
+
+/// Budget refusal: answered in a short-lived thread (bounded by
+/// [`MAX_REFUSAL_THREADS`]) so the accept loop never blocks on a slow
+/// peer; registered in the conn registry so shutdown's half-close nudge
+/// reaches a silent one.
+fn refuse(shared: &Arc<Shared>, handlers: &Arc<Mutex<Vec<JoinHandle<()>>>>, stream: TcpStream) {
+    use std::sync::atomic::AtomicUsize;
+    let refusals: &AtomicUsize = &shared.refusals;
+    if refusals.fetch_add(1, Ordering::SeqCst) >= MAX_REFUSAL_THREADS {
+        // over the refusal bound: drop without the polite reply — the
+        // budget must bound total threads, not just serving handlers
+        refusals.fetch_sub(1, Ordering::SeqCst);
+        return;
+    }
+    let max_conns = shared.cfg.max_conns;
+    let max_frame_bytes = shared.cfg.max_frame_bytes;
+    let conn_id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+    if let Ok(clone) = stream.try_clone() {
+        shared.conns.lock().unwrap().insert(conn_id, clone);
+    }
+    let shared2 = Arc::clone(shared);
+    let handle = std::thread::spawn(move || {
+        refuse_conn(stream, max_conns, max_frame_bytes);
+        shared2.conns.lock().unwrap().remove(&conn_id);
+        shared2.refusals.fetch_sub(1, Ordering::SeqCst);
+    });
+    handlers.lock().unwrap().push(handle);
+}
+
+/// Read (and discard) the client's hello first so the busy reply is not
+/// lost to a TCP reset when the socket closes with unread data still
+/// buffered, then answer and close.
+fn refuse_conn(stream: TcpStream, max_conns: usize, max_frame_bytes: usize) {
+    let mut reader = DeadlineReader::new(&stream, REFUSAL_READ_TIMEOUT);
+    let _ = read_frame(&mut reader, max_frame_bytes);
+    let busy = ServerMsg::Error { error: WireError::Busy { max_conns } };
+    let mut w = &stream;
+    let _ = write_frame(&mut w, &busy.to_json(), max_frame_bytes);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Per-FRAME read deadline over a `TcpStream`.  A bare `SO_RCVTIMEO`
+/// re-arms on every received byte, so a peer trickling one byte per
+/// timeout window could hold a handler (and a `max_conns` slot)
+/// forever.  This wrapper gives each frame one total budget: before
+/// every recv it re-arms the socket timeout with the REMAINING budget,
+/// so a frame either completes or times out within ~one budget.
+struct DeadlineReader<'a> {
+    stream: &'a TcpStream,
+    budget: Duration,
+    deadline: Option<Instant>,
+}
+
+impl<'a> DeadlineReader<'a> {
+    fn new(stream: &'a TcpStream, budget: Duration) -> Self {
+        Self { stream, budget, deadline: None }
+    }
+
+    /// Reset the budget (call before each frame).  The clock starts at
+    /// the first recv, so idle time between frames is budgeted the same
+    /// way as a slow frame.
+    fn arm(&mut self) {
+        self.deadline = None;
+    }
+}
+
+impl Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let deadline = *self.deadline.get_or_insert_with(|| Instant::now() + self.budget);
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+        }
+        self.stream.set_read_timeout(Some(remaining.max(Duration::from_millis(1))))?;
+        let mut s = self.stream;
+        s.read(buf)
+    }
+}
+
+/// Outcome classification for the connection's end-of-life accounting.
+enum ConnEnd {
+    Clean,
+    ProtocolError,
+    IdleTimeout,
+}
+
+fn conn_loop(stream: TcpStream, conn_id: u64, shared: Arc<Shared>) {
+    let end = serve_conn(&stream, &shared);
+    {
+        let mut st = shared.stats.lock().unwrap();
+        st.closed_conns += 1;
+        match end {
+            ConnEnd::Clean => {}
+            ConnEnd::ProtocolError => st.protocol_errors += 1,
+            ConnEnd::IdleTimeout => st.idle_timeouts += 1,
+        }
+    }
+    shared.conns.lock().unwrap().remove(&conn_id);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Best-effort error reply; the connection is closing either way.
+fn send_error(stream: &TcpStream, error: WireError, max_frame_bytes: usize) {
+    let msg = ServerMsg::Error { error };
+    let mut w = stream;
+    let _ = write_frame(&mut w, &msg.to_json(), max_frame_bytes);
+}
+
+fn serve_conn(stream: &TcpStream, shared: &Shared) -> ConnEnd {
+    let max = shared.cfg.max_frame_bytes;
+    let mut reader =
+        DeadlineReader::new(stream, Duration::from_millis(shared.cfg.read_timeout_ms));
+    let mut w = stream;
+
+    // handshake: the first frame must be a version-matched Hello
+    let hello = match read_frame(&mut reader, max) {
+        Ok(v) => v,
+        Err(FrameError::Closed) => return ConnEnd::Clean,
+        Err(e) if e.is_timeout() => return ConnEnd::IdleTimeout,
+        Err(FrameError::Io(_)) => return ConnEnd::Clean,
+        Err(e) => {
+            send_error(stream, WireError::Protocol(e.to_string()), max);
+            return ConnEnd::ProtocolError;
+        }
+    };
+    match ClientMsg::from_json(&hello) {
+        Ok(ClientMsg::Hello { version }) if version == PROTOCOL_VERSION => {}
+        Ok(ClientMsg::Hello { version }) => {
+            let msg = format!(
+                "protocol version {version} not supported (this server speaks {PROTOCOL_VERSION})"
+            );
+            send_error(stream, WireError::Protocol(msg), max);
+            return ConnEnd::ProtocolError;
+        }
+        Ok(_) => {
+            let msg = "first frame must be a hello".to_string();
+            send_error(stream, WireError::Protocol(msg), max);
+            return ConnEnd::ProtocolError;
+        }
+        Err(e) => {
+            send_error(stream, WireError::Protocol(format!("{e:#}")), max);
+            return ConnEnd::ProtocolError;
+        }
+    }
+    let session = shared.next_session.fetch_add(1, Ordering::Relaxed);
+    let ack = ServerMsg::HelloAck {
+        version: PROTOCOL_VERSION,
+        session,
+        streams: shared.service.n_streams(),
+    };
+    if write_frame(&mut w, &ack.to_json(), max).is_err() {
+        return ConnEnd::Clean;
+    }
+
+    // request/response loop
+    loop {
+        reader.arm(); // fresh per-frame budget
+        let frame = match read_frame(&mut reader, max) {
+            Ok(v) => v,
+            Err(FrameError::Closed) => return ConnEnd::Clean,
+            Err(e) if e.is_timeout() => {
+                let msg = format!("idle for over {} ms", shared.cfg.read_timeout_ms);
+                send_error(stream, WireError::Protocol(msg), max);
+                return ConnEnd::IdleTimeout;
+            }
+            Err(FrameError::Io(_)) => return ConnEnd::Clean,
+            Err(e) => {
+                send_error(stream, WireError::Protocol(e.to_string()), max);
+                return ConnEnd::ProtocolError;
+            }
+        };
+        let reply = match ClientMsg::from_json(&frame) {
+            Ok(ClientMsg::Query { request }) => match shared.service.call(request) {
+                Ok(response) => ServerMsg::Response { response },
+                Err(api) => ServerMsg::Error { error: WireError::Api(api) },
+            },
+            Ok(ClientMsg::Stats) => {
+                ServerMsg::Stats { snapshot: Box::new(shared.service.snapshot()) }
+            }
+            Ok(ClientMsg::Ping) => ServerMsg::Pong,
+            Ok(ClientMsg::Shutdown) => {
+                let _ = write_frame(&mut w, &ServerMsg::ShutdownAck.to_json(), max);
+                shared.signal.request();
+                return ConnEnd::Clean;
+            }
+            Ok(ClientMsg::Hello { .. }) => {
+                let msg = "duplicate hello after handshake".to_string();
+                send_error(stream, WireError::Protocol(msg), max);
+                return ConnEnd::ProtocolError;
+            }
+            Err(e) => {
+                send_error(stream, WireError::Protocol(format!("{e:#}")), max);
+                return ConnEnd::ProtocolError;
+            }
+        };
+        // an oversized reply is OUR problem, not the peer's — but it
+        // still gets the typed error (nothing was written, so the frame
+        // stream is in sync to carry it) and then the documented
+        // protocol-error close, which is also what clients expect
+        let payload = reply.to_json().to_string();
+        if payload.len() > max {
+            let msg = format!(
+                "reply of {} bytes exceeds the {max}-byte frame bound \
+                 (raise [wire] max_frame_bytes or lower the query budget)",
+                payload.len()
+            );
+            send_error(stream, WireError::Protocol(msg), max);
+            return ConnEnd::ProtocolError;
+        }
+        if write_frame_text(&mut w, &payload, max).is_err() {
+            return ConnEnd::Clean; // peer gone mid-write
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! Multi-threaded open-loop load generator for the wire gateway.
+//!
+//! N client threads each own one connection and fire queries on a fixed
+//! arrival schedule (the aggregate rate split evenly across clients).
+//! Arrivals are *open-loop*: the schedule does not slow down because the
+//! server is slow — if a response is still outstanding when the next
+//! arrival comes due, the next send happens late and the lateness counts
+//! into that query's latency.  Latency is therefore measured from the
+//! *scheduled* arrival time, the standard correction for coordinated
+//! omission: a saturated server shows its real tail, not the tail of a
+//! politely waiting client.
+//!
+//! Every serving outcome is counted separately (completed / rejected /
+//! deadline-shed / failed), so admission control and shedding behavior
+//! under overload are first-class results, not noise.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::api::{ApiError, Priority, QueryRequest};
+use crate::config::WireConfig;
+use crate::util::stats::{fmt_duration, Samples};
+
+use super::client::WireClient;
+
+/// One load-generation run's parameters.
+#[derive(Clone, Debug)]
+pub struct LoadGen {
+    /// Gateway address ("host:port").
+    pub addr: String,
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Aggregate target arrival rate, queries/second, split evenly
+    /// across clients.
+    pub rate_qps: f64,
+    /// Run length (measured from the first scheduled arrival).
+    pub duration: Duration,
+    /// Query texts, rotated round-robin across the arrival sequence.
+    pub texts: Vec<String>,
+    /// Fraction of arrivals sent on the interactive lane (the rest are
+    /// batch), interleaved deterministically.
+    pub interactive_share: f64,
+    /// Optional per-query deadline (exercises shedding under overload).
+    pub deadline: Option<Duration>,
+    /// Client-side socket timeouts + frame bound.
+    pub wire: WireConfig,
+}
+
+impl LoadGen {
+    /// A small sane default aimed at `addr`; callers override fields.
+    pub fn new(addr: impl Into<String>, texts: Vec<String>) -> Self {
+        Self {
+            addr: addr.into(),
+            clients: 4,
+            rate_qps: 32.0,
+            duration: Duration::from_secs(5),
+            texts,
+            interactive_share: 0.5,
+            deadline: None,
+            wire: WireConfig::default(),
+        }
+    }
+
+    /// Run the load: connect all clients, fire the schedule, merge the
+    /// per-thread tallies.  Fails only if *no* client could connect or
+    /// the generator is misconfigured; per-query failures are counted,
+    /// not fatal.
+    pub fn run(&self) -> Result<LoadReport> {
+        anyhow::ensure!(self.clients > 0, "loadgen needs at least one client");
+        anyhow::ensure!(self.rate_qps > 0.0, "loadgen rate must be positive");
+        anyhow::ensure!(!self.texts.is_empty(), "loadgen needs at least one query text");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.interactive_share),
+            "interactive_share must be a fraction in [0, 1], got {}",
+            self.interactive_share
+        );
+        let interval = Duration::from_secs_f64(self.clients as f64 / self.rate_qps);
+        let tallies: Mutex<Vec<Tally>> = Mutex::new(Vec::new());
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..self.clients {
+                let tallies = &tallies;
+                scope.spawn(move || {
+                    let tally = self.drive_client(c, interval, t0);
+                    tallies.lock().unwrap().push(tally);
+                });
+            }
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut report = LoadReport {
+            clients: self.clients,
+            target_qps: self.rate_qps,
+            wall_s,
+            ..LoadReport::default()
+        };
+        for tally in tallies.into_inner().unwrap() {
+            report.sent += tally.sent;
+            report.completed += tally.completed;
+            report.cache_hits += tally.cache_hits;
+            report.rejected += tally.rejected;
+            report.shed += tally.shed;
+            report.failed += tally.failed;
+            report.transport_errors += tally.transport_errors;
+            for x in tally.latencies {
+                report.latency.push(x);
+            }
+        }
+        Ok(report)
+    }
+
+    /// One client thread: connect, then fire arrivals `c, c+K, c+2K, ...`
+    /// of the global schedule (K = client count).
+    fn drive_client(&self, c: usize, interval: Duration, t0: Instant) -> Tally {
+        let mut tally = Tally::default();
+        let mut client = match WireClient::connect_with(self.addr.as_str(), &self.wire) {
+            Ok(client) => client,
+            Err(_) => {
+                tally.transport_errors += 1;
+                return tally;
+            }
+        };
+        // client c's first arrival is staggered by c sub-intervals so the
+        // aggregate schedule is evenly spaced, not K-bursty
+        let offset = interval.mul_f64(c as f64 / self.clients.max(1) as f64);
+        let mut seq: u64 = 0;
+        loop {
+            let scheduled = t0 + offset + interval.mul_f64(seq as f64);
+            let since_start = scheduled.saturating_duration_since(t0);
+            if since_start >= self.duration {
+                break;
+            }
+            let now = Instant::now();
+            if let Some(wait) = scheduled.checked_duration_since(now) {
+                std::thread::sleep(wait);
+            }
+            let request = self.request_for(c, seq);
+            tally.sent += 1;
+            match client.query(request) {
+                Ok(Ok(response)) => {
+                    tally.completed += 1;
+                    if response.cache.is_hit() {
+                        tally.cache_hits += 1;
+                    }
+                    // open-loop latency: from the *scheduled* arrival
+                    tally.latencies.push(scheduled.elapsed().as_secs_f64());
+                }
+                Ok(Err(ApiError::Rejected { .. })) => tally.rejected += 1,
+                Ok(Err(ApiError::DeadlineExceeded)) => tally.shed += 1,
+                Ok(Err(_)) => tally.failed += 1,
+                Err(_) => {
+                    tally.transport_errors += 1;
+                    break; // connection unusable: this client is done
+                }
+            }
+            seq += 1;
+        }
+        tally
+    }
+
+    fn request_for(&self, c: usize, seq: u64) -> QueryRequest {
+        let global = seq as usize * self.clients + c;
+        let text = &self.texts[global % self.texts.len()];
+        // deterministic priority interleave: arrival g is interactive iff
+        // its position in a repeating 100-slot pattern is below the share
+        let slot = (global % 100) as f64 / 100.0;
+        let priority = if slot < self.interactive_share {
+            Priority::Interactive
+        } else {
+            Priority::Batch
+        };
+        let mut request = QueryRequest::new(text.clone()).priority(priority);
+        if let Some(d) = self.deadline {
+            request = request.deadline(d);
+        }
+        request
+    }
+}
+
+#[derive(Default)]
+struct Tally {
+    sent: u64,
+    completed: u64,
+    cache_hits: u64,
+    rejected: u64,
+    shed: u64,
+    failed: u64,
+    transport_errors: u64,
+    latencies: Vec<f64>,
+}
+
+/// Merged result of one load-generation run.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    pub clients: usize,
+    pub target_qps: f64,
+    pub wall_s: f64,
+    pub sent: u64,
+    pub completed: u64,
+    /// completions served from the semantic query cache
+    pub cache_hits: u64,
+    /// admission-control rejections (lane full)
+    pub rejected: u64,
+    /// deadline-shed at dequeue
+    pub shed: u64,
+    /// engine/shutdown failures
+    pub failed: u64,
+    /// connect failures + dead connections
+    pub transport_errors: u64,
+    /// end-to-end wire latency of completed queries, seconds, measured
+    /// from the scheduled arrival (coordinated-omission corrected)
+    pub latency: Samples,
+}
+
+impl LoadReport {
+    /// Sustained completion throughput over the run.
+    pub fn qps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let pct = |p: f64| {
+            if self.latency.is_empty() {
+                "n/a".to_string()
+            } else {
+                fmt_duration(self.latency.percentile(p))
+            }
+        };
+        format!(
+            "{} clients @ target {:.1} q/s: {} sent, {} ok ({} cache-hit) in {:.1}s -> {:.1} q/s sustained | wire p50 {} p95 {} p99 {} | {} rejected / {} shed / {} failed / {} transport",
+            self.clients,
+            self.target_qps,
+            self.sent,
+            self.completed,
+            self.cache_hits,
+            self.wall_s,
+            self.qps(),
+            pct(50.0),
+            pct(95.0),
+            pct(99.0),
+            self.rejected,
+            self.shed,
+            self.failed,
+            self.transport_errors,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn misconfiguration_is_rejected_before_connecting() {
+        let mut lg = LoadGen::new("127.0.0.1:1", vec!["q".into()]);
+        lg.clients = 0;
+        assert!(lg.run().is_err());
+        let mut lg = LoadGen::new("127.0.0.1:1", vec!["q".into()]);
+        lg.rate_qps = 0.0;
+        assert!(lg.run().is_err());
+        let lg = LoadGen::new("127.0.0.1:1", Vec::new());
+        assert!(lg.run().is_err());
+        // a "50%" share typed as 50 must error, not skew the whole mix
+        let mut lg = LoadGen::new("127.0.0.1:1", vec!["q".into()]);
+        lg.interactive_share = 50.0;
+        assert!(lg.run().is_err());
+    }
+
+    #[test]
+    fn unreachable_server_counts_transport_errors_not_panics() {
+        // port 1 is essentially never bound; every client fails to
+        // connect and the run still returns a merged report
+        let mut lg = LoadGen::new("127.0.0.1:1", vec!["q".into()]);
+        lg.clients = 3;
+        lg.duration = Duration::from_millis(50);
+        let report = lg.run().unwrap();
+        assert_eq!(report.transport_errors, 3);
+        assert_eq!(report.sent, 0);
+        assert_eq!(report.completed, 0);
+        assert!(report.render().contains("3 transport"));
+    }
+
+    #[test]
+    fn priority_interleave_follows_the_share() {
+        let mut lg = LoadGen::new("x", vec!["q".into()]);
+        lg.clients = 1;
+        lg.interactive_share = 0.3;
+        let interactive = (0..100)
+            .filter(|&i| lg.request_for(0, i as u64).priority == Priority::Interactive)
+            .count();
+        assert_eq!(interactive, 30);
+        lg.interactive_share = 0.0;
+        assert_eq!(lg.request_for(0, 7).priority, Priority::Batch);
+        lg.interactive_share = 1.0;
+        assert_eq!(lg.request_for(0, 7).priority, Priority::Interactive);
+    }
+}

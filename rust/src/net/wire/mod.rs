@@ -1,0 +1,44 @@
+//! Wire serving — the TCP surface over the typed query protocol.
+//!
+//! PR 3 made the query protocol *typed* ([`crate::api`]); this module
+//! makes it a *network protocol*, turning the edge box into the real
+//! disaggregated serving endpoint of the paper's §III architecture:
+//!
+//!  * [`frame`] — length-prefixed JSON frames over any `Read`/`Write`
+//!    pair, reusing the in-tree [`crate::util::json`] codec.  Every
+//!    decode failure is a typed [`frame::FrameError`]; a malformed or
+//!    oversized frame can fail one connection, never the process.
+//!  * [`proto`] — the message envelopes: `Hello`/`HelloAck` (protocol
+//!    version handshake + session-id assignment), `Query`/`Response`
+//!    (the PR 3 [`crate::api::QueryRequest`]/[`crate::api::QueryResponse`]
+//!    JSON encodings verbatim), `Stats` (a full
+//!    [`crate::server::Snapshot`] incl. live lane queue-depth gauges),
+//!    `Ping`/`Pong`, and `Shutdown` (remote graceful stop).
+//!  * [`gateway`] — the multi-threaded accept loop: bounded connection
+//!    budget, per-connection read/write timeouts, one handler thread per
+//!    connection feeding [`crate::server::Service`] — so priority-lane
+//!    admission, deadline shedding, and the semantic query cache apply
+//!    to remote traffic unchanged.
+//!  * [`client`] — the blocking [`WireClient`]: connect/handshake,
+//!    query, stats, ping, remote shutdown; per-connection session
+//!    history recorded with the same
+//!    [`crate::api::SessionTurn`] type the in-process sessions use.
+//!  * [`loadgen`] — a multi-threaded open-loop load generator (paced
+//!    arrivals, coordinated-omission-corrected latency) behind the
+//!    `wire_throughput` bench and `venus loadgen`.
+//!
+//! Surface: `venus serve --listen ADDR`, `venus query --connect ADDR`,
+//! `venus loadgen --connect ADDR`, and the `[wire]` config section.
+//! Protocol details: DESIGN.md §Wire-Protocol.
+
+pub mod client;
+pub mod frame;
+pub mod gateway;
+pub mod loadgen;
+pub mod proto;
+
+pub use client::WireClient;
+pub use frame::{read_frame, write_frame, write_frame_text, FrameError};
+pub use gateway::{Gateway, ShutdownHandle, WireStats};
+pub use loadgen::{LoadGen, LoadReport};
+pub use proto::{ClientMsg, ServerMsg, WireError, PROTOCOL_VERSION};

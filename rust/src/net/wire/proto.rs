@@ -1,0 +1,320 @@
+//! Wire message envelopes: what travels inside the frames.
+//!
+//! Every message is a JSON object with a `"type"` tag.  Query traffic
+//! reuses the PR 3 [`QueryRequest`]/[`QueryResponse`] JSON encodings
+//! verbatim (they were wire-round-trip tested before a wire existed);
+//! the control plane adds `hello`/`hello_ack` (version handshake +
+//! session assignment), `stats` (a full serving [`Snapshot`]), `ping`/
+//! `pong`, and `shutdown` (remote graceful stop).
+//!
+//! Versioning rule: the handshake carries a single integer protocol
+//! version; the gateway serves only its own version ([`PROTOCOL_VERSION`])
+//! and answers anything else with a typed protocol error before any
+//! query is accepted.  Encoding changes that break old clients must bump
+//! the version (see DESIGN.md §Wire-Protocol).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::api::{ApiError, QueryRequest, QueryResponse};
+use crate::server::Snapshot;
+use crate::util::json::Json;
+
+/// The one protocol version this build speaks.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Decode a protocol version, rejecting values that don't fit a `u32`
+/// instead of silently wrapping (2^32 + 1 must not pass the v1 check).
+fn version_from(v: &Json) -> Result<u32> {
+    let version = v.as_usize()?;
+    if version > u32::MAX as usize {
+        bail!("protocol version {version} out of range (max {})", u32::MAX);
+    }
+    Ok(version as u32)
+}
+
+/// Client → gateway messages.
+#[derive(Clone, Debug)]
+pub enum ClientMsg {
+    /// Must be the first frame on every connection.
+    Hello { version: u32 },
+    /// One typed query; the reply is `Response` or an `api`-scope
+    /// `Error` (the connection stays usable either way).
+    Query { request: QueryRequest },
+    /// Request a metrics snapshot (lane counters, live queue depths,
+    /// latency percentiles, memory gauges).
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Ask the server to shut down gracefully (stop accepting, drain
+    /// in-flight work, flush durable memory).
+    Shutdown,
+}
+
+/// Gateway → client messages.
+#[derive(Clone, Debug)]
+pub enum ServerMsg {
+    /// Handshake accept: the server's protocol version, the session id
+    /// minted for this connection, and the fabric's stream count.
+    HelloAck { version: u32, session: u64, streams: usize },
+    /// A completed query.
+    Response { response: QueryResponse },
+    /// A typed failure — `api` errors leave the connection usable,
+    /// `protocol` errors are followed by a close.
+    Error { error: WireError },
+    /// Metrics snapshot reply (boxed: a `Snapshot` is an order of
+    /// magnitude larger than the other variants).
+    Stats { snapshot: Box<Snapshot> },
+    /// Liveness reply.
+    Pong,
+    /// Graceful-shutdown acknowledgement (sent before the close).
+    ShutdownAck,
+}
+
+/// The wire-level error taxonomy.
+#[derive(Clone, Debug)]
+pub enum WireError {
+    /// The serving layer refused or failed the query (admission, deadline,
+    /// shutdown, engine) — retry semantics follow [`ApiError`]; the
+    /// connection itself is healthy.
+    Api(ApiError),
+    /// The peer violated the protocol (bad frame, bad message, handshake
+    /// mismatch).  The offending connection is closed; the process and
+    /// every other connection keep serving.
+    Protocol(String),
+    /// The gateway's connection budget is exhausted; try again later.
+    Busy { max_conns: usize },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Api(e) => write!(f, "api error: {e}"),
+            WireError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            WireError::Busy { max_conns } => {
+                write!(f, "server at its {max_conns}-connection budget")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn tagged(tag: &str) -> std::collections::BTreeMap<String, Json> {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("type".into(), Json::Str(tag.into()));
+    m
+}
+
+impl WireError {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        match self {
+            WireError::Api(e) => {
+                m.insert("scope".into(), Json::Str("api".into()));
+                m.insert("error".into(), e.to_json());
+            }
+            WireError::Protocol(msg) => {
+                m.insert("scope".into(), Json::Str("protocol".into()));
+                m.insert("message".into(), Json::Str(msg.clone()));
+            }
+            WireError::Busy { max_conns } => {
+                m.insert("scope".into(), Json::Str("busy".into()));
+                m.insert("max_conns".into(), Json::Num(*max_conns as f64));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v.get("scope")?.as_str()? {
+            "api" => Ok(WireError::Api(ApiError::from_json(v.get("error")?)?)),
+            "protocol" => Ok(WireError::Protocol(v.get("message")?.as_str()?.to_string())),
+            "busy" => Ok(WireError::Busy { max_conns: v.get("max_conns")?.as_usize()? }),
+            other => bail!("unknown wire error scope '{other}'"),
+        }
+    }
+}
+
+impl ClientMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClientMsg::Hello { version } => {
+                let mut m = tagged("hello");
+                m.insert("version".into(), Json::Num(*version as f64));
+                Json::Obj(m)
+            }
+            ClientMsg::Query { request } => {
+                let mut m = tagged("query");
+                m.insert("request".into(), request.to_json());
+                Json::Obj(m)
+            }
+            ClientMsg::Stats => Json::Obj(tagged("stats")),
+            ClientMsg::Ping => Json::Obj(tagged("ping")),
+            ClientMsg::Shutdown => Json::Obj(tagged("shutdown")),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v.get("type")?.as_str()? {
+            "hello" => Ok(ClientMsg::Hello { version: version_from(v.get("version")?)? }),
+            "query" => {
+                Ok(ClientMsg::Query { request: QueryRequest::from_json(v.get("request")?)? })
+            }
+            "stats" => Ok(ClientMsg::Stats),
+            "ping" => Ok(ClientMsg::Ping),
+            "shutdown" => Ok(ClientMsg::Shutdown),
+            other => bail!("unknown client message type '{other}'"),
+        }
+    }
+}
+
+impl ServerMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServerMsg::HelloAck { version, session, streams } => {
+                let mut m = tagged("hello_ack");
+                m.insert("version".into(), Json::Num(*version as f64));
+                m.insert("session".into(), Json::Num(*session as f64));
+                m.insert("streams".into(), Json::Num(*streams as f64));
+                Json::Obj(m)
+            }
+            ServerMsg::Response { response } => {
+                let mut m = tagged("response");
+                m.insert("response".into(), response.to_json());
+                Json::Obj(m)
+            }
+            ServerMsg::Error { error } => {
+                let mut m = tagged("error");
+                m.insert("error".into(), error.to_json());
+                Json::Obj(m)
+            }
+            ServerMsg::Stats { snapshot } => {
+                let mut m = tagged("stats");
+                m.insert("snapshot".into(), snapshot.to_json());
+                Json::Obj(m)
+            }
+            ServerMsg::Pong => Json::Obj(tagged("pong")),
+            ServerMsg::ShutdownAck => Json::Obj(tagged("shutdown_ack")),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        match v.get("type")?.as_str()? {
+            "hello_ack" => Ok(ServerMsg::HelloAck {
+                version: version_from(v.get("version")?)?,
+                session: v.get("session")?.as_usize()? as u64,
+                streams: v.get("streams")?.as_usize()?,
+            }),
+            "response" => {
+                Ok(ServerMsg::Response { response: QueryResponse::from_json(v.get("response")?)? })
+            }
+            "error" => Ok(ServerMsg::Error { error: WireError::from_json(v.get("error")?)? }),
+            "stats" => Ok(ServerMsg::Stats {
+                snapshot: Box::new(Snapshot::from_json(v.get("snapshot")?)?),
+            }),
+            "pong" => Ok(ServerMsg::Pong),
+            "shutdown_ack" => Ok(ServerMsg::ShutdownAck),
+            other => bail!("unknown server message type '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Priority;
+    use crate::server::Metrics;
+
+    #[test]
+    fn client_messages_round_trip() {
+        let msgs = [
+            ClientMsg::Hello { version: PROTOCOL_VERSION },
+            ClientMsg::Query {
+                request: QueryRequest::new("what happened with concept03").budget(8),
+            },
+            ClientMsg::Stats,
+            ClientMsg::Ping,
+            ClientMsg::Shutdown,
+        ];
+        for msg in msgs {
+            let wire = msg.to_json().to_string();
+            let back = ClientMsg::from_json(&Json::parse(&wire).unwrap()).unwrap();
+            match (&msg, &back) {
+                (ClientMsg::Hello { version: a }, ClientMsg::Hello { version: b }) => {
+                    assert_eq!(a, b)
+                }
+                (ClientMsg::Query { request: a }, ClientMsg::Query { request: b }) => {
+                    assert_eq!(a, b)
+                }
+                (ClientMsg::Stats, ClientMsg::Stats)
+                | (ClientMsg::Ping, ClientMsg::Ping)
+                | (ClientMsg::Shutdown, ClientMsg::Shutdown) => {}
+                other => panic!("variant changed across the wire: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn server_messages_round_trip() {
+        let m = Metrics::default();
+        m.on_accepted(Priority::Interactive);
+        let msgs = [
+            ServerMsg::HelloAck { version: 1, session: 7, streams: 4 },
+            ServerMsg::Error { error: WireError::Api(ApiError::DeadlineExceeded) },
+            ServerMsg::Error { error: WireError::Protocol("bad frame".into()) },
+            ServerMsg::Error { error: WireError::Busy { max_conns: 64 } },
+            ServerMsg::Stats { snapshot: Box::new(m.snapshot()) },
+            ServerMsg::Pong,
+            ServerMsg::ShutdownAck,
+        ];
+        for msg in msgs {
+            let wire = msg.to_json().to_string();
+            let back = ServerMsg::from_json(&Json::parse(&wire).unwrap()).unwrap();
+            match (&msg, &back) {
+                (
+                    ServerMsg::HelloAck { version: a, session: b, streams: c },
+                    ServerMsg::HelloAck { version: x, session: y, streams: z },
+                ) => {
+                    assert_eq!((a, b, c), (x, y, z));
+                }
+                (ServerMsg::Error { error: a }, ServerMsg::Error { error: b }) => {
+                    assert_eq!(a.to_string(), b.to_string());
+                }
+                (ServerMsg::Stats { snapshot: a }, ServerMsg::Stats { snapshot: b }) => {
+                    assert_eq!(a.interactive.accepted, b.interactive.accepted);
+                    assert_eq!(a.interactive.queued, b.interactive.queued);
+                }
+                (ServerMsg::Pong, ServerMsg::Pong)
+                | (ServerMsg::ShutdownAck, ServerMsg::ShutdownAck) => {}
+                other => panic!("variant changed across the wire: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_versions_rejected_not_wrapped() {
+        // 2^32 + 1 would wrap to 1 under a bare `as u32` and sneak past
+        // the v1 handshake; it must be a parse error instead
+        let wire = r#"{"type":"hello","version":4294967297}"#;
+        assert!(ClientMsg::from_json(&Json::parse(wire).unwrap()).is_err());
+        let wire = r#"{"type":"hello_ack","session":0,"streams":1,"version":4294967297}"#;
+        assert!(ServerMsg::from_json(&Json::parse(wire).unwrap()).is_err());
+        // the boundary value itself still parses
+        let wire = format!(r#"{{"type":"hello","version":{}}}"#, u32::MAX);
+        assert!(ClientMsg::from_json(&Json::parse(&wire).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn unknown_types_and_scopes_rejected() {
+        let bad = Json::parse(r#"{"type":"teleport"}"#).unwrap();
+        assert!(ClientMsg::from_json(&bad).is_err());
+        assert!(ServerMsg::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"type":"error","error":{"scope":"cosmic"}}"#).unwrap();
+        assert!(ServerMsg::from_json(&bad).is_err());
+        // a tag-less object is rejected, not a panic
+        assert!(ClientMsg::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(ClientMsg::from_json(&Json::parse("[1,2]").unwrap()).is_err());
+    }
+}

@@ -11,8 +11,11 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use anyhow::Result;
+
 use crate::api::Priority;
 use crate::memory::TierStats;
+use crate::util::json::Json;
 use crate::util::stats::{fmt_bytes, fmt_duration, Samples};
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -21,6 +24,9 @@ struct LaneCounters {
     rejected: u64,
     completed: u64,
     deadline_shed: u64,
+    /// popped off the lane by a worker (whatever happened next) — the
+    /// live queue-depth gauge is `accepted - dequeued`
+    dequeued: u64,
 }
 
 #[derive(Debug, Default)]
@@ -56,6 +62,9 @@ pub struct LaneSnapshot {
     pub completed: u64,
     /// accepted but shed unexecuted at dequeue time (deadline passed)
     pub deadline_shed: u64,
+    /// live occupancy gauge: accepted queries a worker has not yet popped
+    /// (current queue depth, not a lifetime counter)
+    pub queued: u64,
 }
 
 /// Immutable snapshot for reporting.  Latency percentiles are `None`
@@ -110,6 +119,12 @@ impl Metrics {
         self.inner.lock().unwrap().lanes[lane.index()].deadline_shed += 1;
     }
 
+    /// A worker popped a job off its lane (it will complete, fail, or be
+    /// deadline-shed next) — decrements the live queue-depth gauge.
+    pub fn on_dequeued(&self, lane: Priority) {
+        self.inner.lock().unwrap().lanes[lane.index()].dequeued += 1;
+    }
+
     pub fn on_completed(
         &self,
         lane: Priority,
@@ -141,6 +156,7 @@ impl Metrics {
             rejected: m.lanes[i].rejected,
             completed: m.lanes[i].completed,
             deadline_shed: m.lanes[i].deadline_shed,
+            queued: m.lanes[i].accepted.saturating_sub(m.lanes[i].dequeued),
         };
         let completed: u64 = m.lanes.iter().map(|l| l.completed).sum();
         Snapshot {
@@ -194,10 +210,15 @@ impl Snapshot {
         self.interactive.deadline_shed + self.batch.deadline_shed
     }
 
+    /// Live occupancy across both lanes (current queue depth).
+    pub fn queued(&self) -> u64 {
+        self.interactive.queued + self.batch.queued
+    }
+
     pub fn render(&self) -> String {
         let opt = |d: Option<f64>| d.map(fmt_duration).unwrap_or_else(|| "n/a".into());
         let mut out = format!(
-            "queries: {} ok / {} failed / {} rejected / {} deadline-shed / {} shutdown-raced | lanes: interactive {}/{} batch {}/{} (done/accepted) | p50 {} p95 {} p99 {} (edge p50 {} p95 {}) | {:.1} q/s | {:.1} frames/query",
+            "queries: {} ok / {} failed / {} rejected / {} deadline-shed / {} shutdown-raced | lanes: interactive {}/{} q{} batch {}/{} q{} (done/accepted/queued) | p50 {} p95 {} p99 {} (edge p50 {} p95 {}) | {:.1} q/s | {:.1} frames/query",
             self.completed(),
             self.failed,
             self.rejected(),
@@ -205,8 +226,10 @@ impl Snapshot {
             self.shutdown,
             self.interactive.completed,
             self.interactive.accepted,
+            self.interactive.queued,
             self.batch.completed,
             self.batch.accepted,
+            self.batch.queued,
             opt(self.total_p50_s),
             opt(self.total_p95_s),
             opt(self.total_p99_s),
@@ -232,6 +255,82 @@ impl Snapshot {
             ));
         }
         out
+    }
+
+    /// Serialize to the wire JSON encoding (the gateway's `Stats` reply).
+    /// Absent keys encode `None`; the live queue-depth gauges ride along
+    /// per lane.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        let lane_json = |l: &LaneSnapshot| {
+            let mut lm = std::collections::BTreeMap::new();
+            lm.insert("accepted".into(), Json::Num(l.accepted as f64));
+            lm.insert("rejected".into(), Json::Num(l.rejected as f64));
+            lm.insert("completed".into(), Json::Num(l.completed as f64));
+            lm.insert("deadline_shed".into(), Json::Num(l.deadline_shed as f64));
+            lm.insert("queued".into(), Json::Num(l.queued as f64));
+            Json::Obj(lm)
+        };
+        m.insert("interactive".into(), lane_json(&self.interactive));
+        m.insert("batch".into(), lane_json(&self.batch));
+        m.insert("shutdown".into(), Json::Num(self.shutdown as f64));
+        m.insert("failed".into(), Json::Num(self.failed as f64));
+        m.insert("uptime_s".into(), Json::Num(self.uptime_s));
+        let mut opt = |key: &str, v: Option<f64>| {
+            if let Some(x) = v {
+                m.insert(key.into(), Json::Num(x));
+            }
+        };
+        opt("queue_wait_p50_s", self.queue_wait_p50_s);
+        opt("queue_wait_p95_s", self.queue_wait_p95_s);
+        opt("queue_wait_p99_s", self.queue_wait_p99_s);
+        opt("edge_p50_s", self.edge_p50_s);
+        opt("edge_p95_s", self.edge_p95_s);
+        opt("edge_p99_s", self.edge_p99_s);
+        opt("total_p50_s", self.total_p50_s);
+        opt("total_p95_s", self.total_p95_s);
+        opt("total_p99_s", self.total_p99_s);
+        m.insert("mean_frames".into(), Json::Num(self.mean_frames));
+        m.insert("throughput_qps".into(), Json::Num(self.throughput_qps));
+        if let Some(mem) = &self.memory {
+            m.insert("memory".into(), mem.to_json());
+        }
+        Json::Obj(m)
+    }
+
+    /// Parse the wire JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let lane = |v: &Json| -> Result<LaneSnapshot> {
+            Ok(LaneSnapshot {
+                accepted: v.get("accepted")?.as_usize()? as u64,
+                rejected: v.get("rejected")?.as_usize()? as u64,
+                completed: v.get("completed")?.as_usize()? as u64,
+                deadline_shed: v.get("deadline_shed")?.as_usize()? as u64,
+                queued: v.get("queued")?.as_usize()? as u64,
+            })
+        };
+        let opt = |key: &str| -> Result<Option<f64>> {
+            v.opt(key).map(|x| x.as_f64()).transpose()
+        };
+        Ok(Self {
+            interactive: lane(v.get("interactive")?)?,
+            batch: lane(v.get("batch")?)?,
+            shutdown: v.get("shutdown")?.as_usize()? as u64,
+            failed: v.get("failed")?.as_usize()? as u64,
+            uptime_s: v.get("uptime_s")?.as_f64()?,
+            queue_wait_p50_s: opt("queue_wait_p50_s")?,
+            queue_wait_p95_s: opt("queue_wait_p95_s")?,
+            queue_wait_p99_s: opt("queue_wait_p99_s")?,
+            edge_p50_s: opt("edge_p50_s")?,
+            edge_p95_s: opt("edge_p95_s")?,
+            edge_p99_s: opt("edge_p99_s")?,
+            total_p50_s: opt("total_p50_s")?,
+            total_p95_s: opt("total_p95_s")?,
+            total_p99_s: opt("total_p99_s")?,
+            mean_frames: v.get("mean_frames")?.as_f64()?,
+            throughput_qps: v.get("throughput_qps")?.as_f64()?,
+            memory: v.opt("memory").map(TierStats::from_json).transpose()?,
+        })
     }
 }
 
@@ -308,6 +407,70 @@ mod tests {
         assert!(text.contains("cold 3 seg (30 rec"), "{text}");
         assert!(text.contains("hit 90%"), "{text}");
         assert!(text.contains("30 evicted"), "{text}");
+    }
+
+    #[test]
+    fn queue_depth_gauges_track_live_occupancy() {
+        let m = Metrics::default();
+        for _ in 0..3 {
+            m.on_accepted(Priority::Interactive);
+        }
+        m.on_accepted(Priority::Batch);
+        let s = m.snapshot();
+        assert_eq!(s.interactive.queued, 3, "accepted, not yet popped");
+        assert_eq!(s.batch.queued, 1);
+        assert_eq!(s.queued(), 4);
+        assert!(s.render().contains("interactive 0/3 q3"), "{}", s.render());
+
+        m.on_dequeued(Priority::Interactive);
+        m.on_completed(Priority::Interactive, 0.0, 0.01, 0.02, 4);
+        m.on_dequeued(Priority::Batch);
+        m.on_deadline_shed(Priority::Batch);
+        let s = m.snapshot();
+        assert_eq!(s.interactive.queued, 2, "one popped");
+        assert_eq!(s.batch.queued, 0, "shed queries left the queue too");
+        // rejected submissions never entered the queue: gauge unchanged
+        m.on_rejected(Priority::Interactive);
+        assert_eq!(m.snapshot().interactive.queued, 2);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let m = Metrics::default();
+        m.on_accepted(Priority::Interactive);
+        m.on_accepted(Priority::Interactive);
+        m.on_dequeued(Priority::Interactive);
+        m.on_completed(Priority::Interactive, 0.001, 0.01, 0.1, 16);
+        m.on_rejected(Priority::Batch);
+        let mut s = m.snapshot();
+        s.memory = Some(TierStats {
+            hot_bytes: 2048,
+            hot_records: 10,
+            cold_records: 30,
+            cold_segments: 3,
+            cold_resident_bytes: 1024,
+            raw_resident_bytes: 512,
+            evictions: 30,
+            cold_hits: 9,
+            cold_misses: 1,
+        });
+        let wire = s.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.interactive.accepted, 2);
+        assert_eq!(back.interactive.completed, 1);
+        assert_eq!(back.interactive.queued, 1);
+        assert_eq!(back.batch.rejected, 1);
+        assert_eq!(back.total_p50_s, s.total_p50_s);
+        assert_eq!(back.queue_wait_p99_s, s.queue_wait_p99_s);
+        let mem = back.memory.expect("memory gauges survive the wire");
+        assert_eq!(mem.hot_bytes, 2048);
+        assert_eq!(mem.cold_hits, 9);
+
+        // None percentiles stay None through the wire (absent keys)
+        let empty = Metrics::default().snapshot();
+        let back = Snapshot::from_json(&Json::parse(&empty.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.total_p50_s, None);
+        assert!(back.memory.is_none());
     }
 
     #[test]

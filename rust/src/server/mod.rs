@@ -44,7 +44,7 @@ use crate::cloud::VlmClient;
 use crate::config::VenusConfig;
 use crate::coordinator::query::{QueryEngine, QueryOutcome};
 use crate::embed::EmbedEngine;
-use crate::memory::{MemoryFabric, StreamScope};
+use crate::memory::MemoryFabric;
 use crate::net::{Link, Payload};
 
 struct Job {
@@ -187,6 +187,12 @@ impl Service {
         snap
     }
 
+    /// Camera streams in the fabric this service queries (the wire
+    /// handshake advertises it so clients can validate `One` scopes).
+    pub fn n_streams(&self) -> usize {
+        self.fabric.n_streams()
+    }
+
     /// Submit a typed request; returns a receiver for the structured
     /// response, or the typed reason admission turned it away.
     pub fn submit_request(
@@ -229,31 +235,6 @@ impl Service {
         }
     }
 
-    /// Deprecated stringly shim over [`Service::submit_request`].
-    #[deprecated(note = "build a typed `QueryRequest` and use `submit_request`")]
-    pub fn submit(
-        &self,
-        text: &str,
-    ) -> std::result::Result<Receiver<Result<QueryResponse, ApiError>>, ApiError> {
-        self.submit_request(QueryRequest::new(text))
-    }
-
-    /// Deprecated stringly shim over [`Service::submit_request`].
-    #[deprecated(note = "build a typed `QueryRequest` and use `submit_request`")]
-    pub fn submit_scoped(
-        &self,
-        text: &str,
-        scope: StreamScope,
-    ) -> std::result::Result<Receiver<Result<QueryResponse, ApiError>>, ApiError> {
-        self.submit_request(QueryRequest::new(text).scope(scope))
-    }
-
-    /// Deprecated stringly shim over [`Service::call`].
-    #[deprecated(note = "build a typed `QueryRequest` and use `call`")]
-    pub fn query(&self, text: &str) -> std::result::Result<QueryResponse, ApiError> {
-        self.call(QueryRequest::new(text))
-    }
-
     /// Drain and stop all workers; returns the final metrics snapshot
     /// (memory-pressure gauges included).  Accepted work is always
     /// finished (or deadline-shed) before the workers exit.
@@ -291,6 +272,7 @@ fn worker_loop(
 ) {
     while let Some(job) = lanes.pop() {
         let lane = job.request.priority;
+        metrics.on_dequeued(lane);
         // deadline-aware shedding: a query that aged out in the queue is
         // answered with the typed error instead of burning edge compute
         if let Some(deadline) = job.deadline {
@@ -439,11 +421,10 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn stringly_shims_forward_to_the_typed_path() {
-        // run the deprecated string entries against a live (empty-fabric)
-        // service: they must produce typed responses and share the
-        // service's query cache with the typed path
+    fn typed_entries_share_the_service_cache_and_drain_queue_gauges() {
+        // submit_request and call against a live (empty-fabric) service:
+        // typed responses, one shared query cache, and queue-depth gauges
+        // back at zero once everything drained
         let cfg = VenusConfig::default();
         let d = EmbedEngine::default_backend(false).unwrap().d_embed();
         let raws: Vec<Box<dyn crate::memory::RawStore>> =
@@ -451,20 +432,23 @@ mod tests {
         let fabric = Arc::new(MemoryFabric::new(&cfg.memory, d, raws).unwrap());
         let service = Service::start(&cfg, fabric, 3).unwrap();
 
-        let resp = service.submit("hello there").unwrap().recv().unwrap().unwrap();
-        assert!(resp.evidence.is_empty(), "empty fabric yields empty evidence");
-        let resp2 = service.query("hello there").unwrap();
-        assert!(resp2.cache.is_hit(), "shims share the service's query cache");
-        let resp3 = service
-            .submit_scoped("hello there", StreamScope::All)
+        let resp = service
+            .submit_request(QueryRequest::new("hello there"))
             .unwrap()
             .recv()
             .unwrap()
+            .unwrap();
+        assert!(resp.evidence.is_empty(), "empty fabric yields empty evidence");
+        let resp2 = service.call(QueryRequest::new("hello there")).unwrap();
+        assert!(resp2.cache.is_hit(), "both entries share the service's query cache");
+        let resp3 = service
+            .call(QueryRequest::new("hello there").scope(crate::memory::StreamScope::All))
             .unwrap();
         assert!(resp3.cache.is_hit());
 
         let snap = service.shutdown();
         assert_eq!(snap.completed(), 3);
         assert_eq!(snap.failed, 0);
+        assert_eq!(snap.queued(), 0, "drained lanes report empty gauges");
     }
 }

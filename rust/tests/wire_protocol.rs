@@ -1,0 +1,492 @@
+//! Wire-protocol integration suite: a real TCP gateway over an
+//! ephemeral port, concurrent clients, equivalence with the in-process
+//! serving path, lane priority + deadline shedding observed from the
+//! client side, connection-budget admission, and a malformed-frame
+//! robustness suite (every bad input fails one connection, never the
+//! process).
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use venus::api::{ApiError, CacheStatus, Priority, QueryRequest, QueryResponse};
+use venus::config::{MemoryConfig, VenusConfig};
+use venus::coordinator::query::RetrievalMode;
+use venus::memory::{
+    ClusterRecord, Hierarchy, InMemoryRaw, MemoryFabric, RawStore, StreamId, StreamScope,
+};
+use venus::net::wire::{read_frame, Gateway, ServerMsg, WireClient, WireError};
+use venus::server::Service;
+use venus::util::rng::Pcg64;
+use venus::video::frame::Frame;
+
+const MAX: usize = 1 << 20;
+
+/// A deterministic fabric: `streams` shards, each with `clusters`
+/// random-unit-vector records over 4-frame clusters (same construction
+/// as the api_protocol suite).
+fn seeded_fabric(d: usize, streams: usize, clusters: u64, seed: u64) -> Arc<MemoryFabric> {
+    let raws: Vec<Box<dyn RawStore>> =
+        (0..streams).map(|_| Box::new(InMemoryRaw::new(8)) as Box<dyn RawStore>).collect();
+    let fabric = Arc::new(MemoryFabric::new(&MemoryConfig::default(), d, raws).unwrap());
+    let mut rng = Pcg64::seeded(seed);
+    for sid in 0..streams as u16 {
+        let shard: &Arc<RwLock<Hierarchy>> = fabric.shard(StreamId(sid)).unwrap();
+        let mut g = shard.write().unwrap();
+        for c in 0..clusters {
+            for f in c * 4..(c + 1) * 4 {
+                g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
+            }
+            let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            venus::util::l2_normalize(&mut v);
+            g.insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(sid),
+                    scene_id: c as usize,
+                    centroid_frame: c * 4,
+                    members: (c * 4..(c + 1) * 4).collect(),
+                },
+            )
+            .unwrap();
+        }
+    }
+    fabric
+}
+
+fn embed_dim() -> usize {
+    venus::embed::EmbedEngine::default_backend(false).unwrap().d_embed()
+}
+
+/// Service + gateway over an ephemeral port.
+fn start_gateway(
+    cfg: &VenusConfig,
+    fabric: Arc<MemoryFabric>,
+    seed: u64,
+) -> (Arc<Service>, Gateway) {
+    let service = Arc::new(Service::start(cfg, fabric, seed).unwrap());
+    let gateway = Gateway::start(&cfg.wire, Arc::clone(&service)).unwrap();
+    (service, gateway)
+}
+
+fn wire_cfg(cfg: &mut VenusConfig) {
+    cfg.wire.listen = "127.0.0.1:0".into();
+}
+
+/// Tear down in the durability-safe order and return the final service.
+fn teardown(gateway: Gateway, service: Arc<Service>) -> Service {
+    gateway.shutdown();
+    Arc::try_unwrap(service).ok().expect("gateway released its service handle")
+}
+
+fn raw_conn(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(10))).unwrap();
+    s
+}
+
+fn send_raw(stream: &mut TcpStream, bytes: &[u8]) {
+    use std::io::Write;
+    let _ = stream.write_all(bytes);
+    let _ = stream.flush();
+}
+
+fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+    let mut out = (payload.len() as u32).to_be_bytes().to_vec();
+    out.extend_from_slice(payload);
+    out
+}
+
+/// A full health probe: fresh connection, handshake, one query.
+fn assert_healthy(addr: SocketAddr) {
+    let mut client = WireClient::connect(addr).expect("gateway accepts a healthy client");
+    let response = client
+        .query(QueryRequest::new("health probe").mode(RetrievalMode::TopK(2)))
+        .expect("transport healthy")
+        .expect("query served");
+    assert!(response.evidence.len() <= 2);
+}
+
+/// Acceptance: ≥8 concurrent clients over a real socket get responses
+/// byte-identical (evidence ids/timestamps/scores, cache status, draw
+/// count) to the in-process `Service::call` → `retrieve_request` path.
+#[test]
+fn eight_concurrent_clients_match_the_in_process_path() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 2, 10, 0x11fe);
+    let mut cfg = VenusConfig::default();
+    wire_cfg(&mut cfg);
+    // cache off: both paths run the full deterministic (TopK) edge path
+    cfg.api.cache_entries = 0;
+    let (service, gateway) = start_gateway(&cfg, fabric, 7);
+    let addr = gateway.local_addr();
+
+    let requests: Vec<QueryRequest> = (0..8)
+        .map(|i| {
+            let scope = if i % 3 == 0 {
+                StreamScope::All
+            } else {
+                StreamScope::One(StreamId((i % 2) as u16))
+            };
+            QueryRequest::new(format!("what happened with concept0{} variant {i}", i % 4))
+                .mode(RetrievalMode::TopK(4))
+                .scope(scope)
+        })
+        .collect();
+
+    // in-process ground truth through the very same service
+    let expected: Vec<QueryResponse> =
+        requests.iter().map(|r| service.call(r.clone()).unwrap()).collect();
+
+    // all 8 connections are live before any query flies
+    let barrier = Barrier::new(requests.len());
+    let wire: Vec<QueryResponse> = std::thread::scope(|s| {
+        let handles: Vec<_> = requests
+            .iter()
+            .map(|r| {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let mut client = WireClient::connect(addr).unwrap();
+                    barrier.wait();
+                    client.query(r.clone()).unwrap().unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for ((request, exp), got) in requests.iter().zip(&expected).zip(&wire) {
+        let exp_evidence = exp.to_json().get("evidence").unwrap().to_string();
+        let got_evidence = got.to_json().get("evidence").unwrap().to_string();
+        assert_eq!(got_evidence, exp_evidence, "evidence bytes differ for {request:?}");
+        assert_eq!(got.evidence, exp.evidence);
+        assert_eq!(got.cache, exp.cache);
+        assert_eq!(got.cache, CacheStatus::Bypass, "cache disabled on both paths");
+        assert_eq!(got.draws, exp.draws);
+    }
+
+    let stats = gateway.stats();
+    assert_eq!(stats.accepted_conns, 8);
+    assert_eq!(stats.refused_conns, 0);
+    assert_eq!(stats.protocol_errors, 0);
+
+    let service = teardown(gateway, service);
+    assert!(service.metrics.conserved_after_drain());
+    let snap = service.shutdown();
+    assert_eq!(snap.completed(), 16, "8 in-process + 8 wire");
+    assert_eq!(snap.queued(), 0);
+    assert_eq!(snap.failed, 0);
+}
+
+/// Acceptance: interactive-vs-batch priority and deadline shedding are
+/// observable from the client side of the socket.
+#[test]
+fn lane_priority_and_shedding_observable_from_clients() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 1, 12, 0x9a7e);
+    let mut cfg = VenusConfig::default();
+    wire_cfg(&mut cfg);
+    cfg.server.workers = 1; // one worker: queueing order is the schedule
+    cfg.api.cache_entries = 0;
+    // the pile below must QUEUE, not get rejected or refused: deepen the
+    // batch lane and the connection budget past the largest calibrated
+    // pile (+ blocker, interactive, and the doomed query)
+    cfg.api.batch_depth = Some(256);
+    cfg.wire.max_conns = 128;
+    let (service, gateway) = start_gateway(&cfg, fabric, 23);
+    let addr = gateway.local_addr();
+
+    // calibrate one cold query (connect + handshake + full edge path)
+    let t0 = Instant::now();
+    let mut probe = WireClient::connect(addr).unwrap();
+    probe.query(QueryRequest::new("calibration probe query")).unwrap().unwrap();
+    let cold = t0.elapsed().max(Duration::from_millis(1));
+    drop(probe);
+
+    // enough batch work to keep the single worker busy for >= ~200 ms
+    // even on machines much faster than the calibration run suggests
+    let batch_n = ((0.2 / cold.as_secs_f64()).ceil() as usize).clamp(8, 96);
+
+    let done: Mutex<Vec<(&'static str, Instant)>> = Mutex::new(Vec::new());
+    let shed_result: Mutex<Option<Result<QueryResponse, ApiError>>> = Mutex::new(None);
+    // declared before the scope: scoped threads borrow it for 'scope
+    let barrier = Barrier::new(batch_n);
+    std::thread::scope(|s| {
+        // blocker occupies the worker while the pile builds up
+        let done_ref = &done;
+        s.spawn(move || {
+            let mut c = WireClient::connect(addr).unwrap();
+            c.query(QueryRequest::new("blocker query zero").priority(Priority::Batch))
+                .unwrap()
+                .unwrap();
+            done_ref.lock().unwrap().push(("batch", Instant::now()));
+        });
+        std::thread::sleep(Duration::from_millis(10));
+
+        for i in 0..batch_n {
+            let barrier = &barrier;
+            let done_ref = &done;
+            s.spawn(move || {
+                let mut c = WireClient::connect(addr).unwrap();
+                barrier.wait();
+                c.query(
+                    QueryRequest::new(format!("batch analytics question number {i}"))
+                        .priority(Priority::Batch),
+                )
+                .unwrap()
+                .unwrap();
+                done_ref.lock().unwrap().push(("batch", Instant::now()));
+            });
+        }
+        std::thread::sleep(Duration::from_millis(10));
+
+        // the human arrives last — and must not wait out the batch pile
+        let done_ref = &done;
+        s.spawn(move || {
+            let mut c = WireClient::connect(addr).unwrap();
+            c.query(
+                QueryRequest::new("urgent interactive question").priority(Priority::Interactive),
+            )
+            .unwrap()
+            .unwrap();
+            done_ref.lock().unwrap().push(("interactive", Instant::now()));
+        });
+
+        // a doomed batch query behind >= 200 ms of queue with a 1 ms
+        // deadline: shed at dequeue, reported as the typed error
+        let shed_ref = &shed_result;
+        s.spawn(move || {
+            let mut c = WireClient::connect(addr).unwrap();
+            let r = c
+                .query(
+                    QueryRequest::new("doomed low priority question")
+                        .priority(Priority::Batch)
+                        .deadline(Duration::from_millis(1)),
+                )
+                .unwrap();
+            *shed_ref.lock().unwrap() = Some(r);
+            assert_eq!(c.errors(), 1, "the shed turn is recorded in the session history");
+        });
+    });
+
+    let done = done.into_inner().unwrap();
+    let interactive_done = done
+        .iter()
+        .find(|(k, _)| *k == "interactive")
+        .map(|(_, t)| *t)
+        .expect("interactive query completed");
+    let last_batch_done = done
+        .iter()
+        .filter(|(k, _)| *k == "batch")
+        .map(|(_, t)| *t)
+        .max()
+        .expect("batch queries completed");
+    assert!(
+        interactive_done < last_batch_done,
+        "interactive ({interactive_done:?}) must jump the batch queue ({last_batch_done:?})"
+    );
+    match shed_result.into_inner().unwrap() {
+        Some(Err(ApiError::DeadlineExceeded)) => {}
+        other => panic!("expected DeadlineExceeded over the wire, got {other:?}"),
+    }
+
+    let service = teardown(gateway, service);
+    assert!(service.metrics.conserved_after_drain());
+    let snap = service.shutdown();
+    assert_eq!(snap.deadline_shed(), 1);
+    assert_eq!(snap.interactive.completed, 2, "calibration probe + urgent query");
+    assert_eq!(snap.batch.completed, 1 + batch_n as u64, "blocker + pile");
+}
+
+/// Sessions, stats (with live queue-depth and memory gauges), scope and
+/// budget passthrough, and remote graceful shutdown.
+#[test]
+fn sessions_stats_and_remote_shutdown_over_the_wire() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 2, 8, 0x57a7);
+    let mut cfg = VenusConfig::default();
+    wire_cfg(&mut cfg);
+    let (service, gateway) = start_gateway(&cfg, fabric, 11);
+    let addr = gateway.local_addr();
+
+    let mut a = WireClient::connect(addr).unwrap();
+    let mut b = WireClient::connect(addr).unwrap();
+    assert_ne!(a.session_id(), b.session_id(), "each connection is its own session");
+    assert_eq!(a.streams(), 2, "handshake advertises the fabric size");
+    a.ping().unwrap();
+
+    let req = QueryRequest::new("what happened with concept01");
+    let cold = a.query(req.clone()).unwrap().unwrap();
+    assert_eq!(cold.cache, CacheStatus::Miss);
+    let warm = a.query(req).unwrap().unwrap();
+    assert_eq!(warm.cache, CacheStatus::HitExact, "the semantic cache serves wire traffic");
+    assert_eq!(warm.frame_indices(), cold.frame_indices());
+    assert_eq!(a.history().len(), 2);
+    assert_eq!(a.cache_hits(), 1);
+    assert_eq!(a.errors(), 0);
+
+    // scope + budget overrides reach the engine across the wire
+    let scoped = b
+        .query(
+            QueryRequest::new("what is on camera one")
+                .scope(StreamScope::One(StreamId(1)))
+                .mode(RetrievalMode::FixedSampling(6))
+                .budget(4),
+        )
+        .unwrap()
+        .unwrap();
+    assert_eq!(scoped.draws, 4, "budget override applied");
+    assert!(scoped.streams().iter().all(|&s| s == StreamId(1)), "scope respected");
+
+    let snap = b.stats().unwrap();
+    assert!(snap.completed() >= 3);
+    assert_eq!(snap.queued(), 0, "idle lanes report zero live occupancy");
+    assert!(snap.memory.is_some(), "fabric gauges ride the stats reply");
+    assert!(snap.total_p50_s.is_some());
+
+    assert!(!gateway.shutdown_requested());
+    b.shutdown_server().unwrap();
+    gateway.wait_for_shutdown_request();
+    assert!(gateway.shutdown_requested());
+
+    drop(a);
+    let service = teardown(gateway, service);
+    assert!(service.metrics.conserved_after_drain());
+    let snap = service.shutdown();
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.queued(), 0);
+}
+
+/// The connection budget bounds concurrent clients: the (N+1)-th gets a
+/// typed busy error, and the slot is reusable after a disconnect.
+#[test]
+fn connection_budget_refuses_politely_and_recovers() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 1, 4, 0xb0d9);
+    let mut cfg = VenusConfig::default();
+    wire_cfg(&mut cfg);
+    cfg.wire.max_conns = 2;
+    let (service, gateway) = start_gateway(&cfg, fabric, 3);
+    let addr = gateway.local_addr();
+
+    let c1 = WireClient::connect(addr).unwrap();
+    let mut c2 = WireClient::connect(addr).unwrap();
+    let refused = WireClient::connect(addr);
+    let msg = format!("{:#}", refused.err().expect("third client refused"));
+    assert!(msg.contains("connection budget"), "typed busy error, got: {msg}");
+
+    // freeing a slot makes room (the handler reaps the close first)
+    drop(c1);
+    let mut c3 = None;
+    for _ in 0..250 {
+        match WireClient::connect(addr) {
+            Ok(c) => {
+                c3 = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let mut c3 = c3.expect("slot freed after a client disconnected");
+    c3.ping().unwrap();
+    c2.ping().unwrap();
+    assert!(gateway.stats().refused_conns >= 1);
+
+    drop(c2);
+    drop(c3);
+    teardown(gateway, service).shutdown();
+}
+
+/// Robustness acceptance: truncated / oversized / garbage frames and
+/// malformed `QueryRequest` JSON each fail their one connection with a
+/// typed error (or a plain close) — the gateway keeps serving healthy
+/// clients after every single vector, and never panics or wedges.
+#[test]
+fn malformed_frames_fail_one_connection_never_the_gateway() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 1, 4, 0xbad5eed);
+    let mut cfg = VenusConfig::default();
+    wire_cfg(&mut cfg);
+    cfg.wire.max_frame_bytes = MAX;
+    let (service, gateway) = start_gateway(&cfg, fabric, 5);
+    let addr = gateway.local_addr();
+
+    let truncated = {
+        let mut v = 100u32.to_be_bytes().to_vec();
+        v.extend_from_slice(b"short");
+        v
+    };
+    let vectors: Vec<(&str, Vec<u8>)> = vec![
+        ("http request", b"GET / HTTP/1.1\r\nHost: venus\r\n\r\n".to_vec()),
+        ("4 GiB length prefix", 0xffff_ffffu32.to_be_bytes().to_vec()),
+        ("zero length prefix", 0u32.to_be_bytes().to_vec()),
+        ("garbage payload", frame_bytes(b"not json at all")),
+        ("tag-less object", frame_bytes(br#"{"no":"type"}"#)),
+        ("unknown message type", frame_bytes(br#"{"type":"teleport"}"#)),
+        ("future protocol version", frame_bytes(br#"{"type":"hello","version":99}"#)),
+        (
+            "query before hello",
+            frame_bytes(br#"{"type":"query","request":{"text":"hi","scope":"all"}}"#),
+        ),
+        ("truncated frame", truncated),
+    ];
+    for (name, bytes) in &vectors {
+        let mut s = raw_conn(addr);
+        send_raw(&mut s, bytes);
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        // the server must answer with a typed protocol error or close
+        // the connection — never hang, never take the process down
+        if let Ok(v) = read_frame(&mut s, MAX) {
+            let msg = ServerMsg::from_json(&v).unwrap();
+            assert!(
+                matches!(msg, ServerMsg::Error { error: WireError::Protocol(_) }),
+                "vector '{name}': expected a protocol error, got {msg:?}"
+            );
+        }
+        assert_healthy(addr);
+    }
+
+    // malformed QueryRequest JSON *after* a valid handshake: the typed
+    // error arrives on a live, handshaken connection
+    let mut s = raw_conn(addr);
+    send_raw(&mut s, &frame_bytes(br#"{"type":"hello","version":1}"#));
+    let ack = ServerMsg::from_json(&read_frame(&mut s, MAX).unwrap()).unwrap();
+    assert!(matches!(ack, ServerMsg::HelloAck { .. }));
+    send_raw(&mut s, &frame_bytes(br#"{"type":"query","request":{"scope":"all"}}"#));
+    let reply = ServerMsg::from_json(&read_frame(&mut s, MAX).unwrap()).unwrap();
+    assert!(
+        matches!(reply, ServerMsg::Error { error: WireError::Protocol(_) }),
+        "malformed QueryRequest must be a typed error, got {reply:?}"
+    );
+    drop(s);
+    assert_healthy(addr);
+
+    // property-style fuzz: random byte blobs, one connection each —
+    // every one dies alone
+    let mut rng = Pcg64::seeded(0xf077);
+    for round in 0..16 {
+        let n = rng.range(1, 64);
+        let blob: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        let mut s = raw_conn(addr);
+        send_raw(&mut s, &blob);
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        let _ = read_frame(&mut s, MAX); // whatever it says, it must say it promptly
+        drop(s);
+        if round % 4 == 3 {
+            assert_healthy(addr);
+        }
+    }
+    assert_healthy(addr);
+
+    let stats = gateway.stats();
+    assert!(
+        stats.protocol_errors >= 6,
+        "typed protocol errors were counted: {}",
+        stats.protocol_errors
+    );
+
+    let service = teardown(gateway, service);
+    assert!(service.metrics.conserved_after_drain(), "bad frames never leak lane work");
+    service.shutdown();
+}
