@@ -27,8 +27,13 @@ test:
 bench:
 	cargo bench
 
+# Invariant lint (tools/vlint: panic policy, lock discipline, config-key
+# hygiene, wire-tag coverage — see DESIGN.md §Static-Analysis), then
+# clippy, then formatting.
 lint:
+	cargo run --quiet --release -p vlint -- --root .
 	cargo clippy --all-targets -- -D warnings
+	cargo fmt --all -- --check
 
 # Tier-1 verification, exactly what CI runs.
 verify: build test

@@ -63,13 +63,13 @@ fn main() -> venus::Result<()> {
     let cfg = VenusConfig::default();
     let data_dir = data_dir_from_args();
     let case = prepare_case_at(DatasetPreset::VideoMmeShort, &cfg, 4, 42, Some(&data_dir))?;
-    let recovered = case.ingest_stats.frames == 0 && case.memory.read().unwrap().len() > 0;
+    let recovered = case.ingest_stats.frames == 0 && case.memory.read().len() > 0;
     println!(
         "stream: {:.0} s = {} frames -> {} index vectors ({}x compression){}",
         case.synth.config().duration_s,
         case.synth.total_frames(),
-        case.memory.read().unwrap().len(),
-        case.memory.read().unwrap().sparsity().round(),
+        case.memory.read().len(),
+        case.memory.read().sparsity().round(),
         if recovered {
             format!(" — recovered from {}", data_dir.display())
         } else {
@@ -165,7 +165,7 @@ fn main() -> venus::Result<()> {
     );
     println!(
         "after restart: recovered {} vectors from disk, same {} evidence frames selected",
-        reopened.memory.read().unwrap().len(),
+        reopened.memory.read().len(),
         after.evidence.len()
     );
     service.shutdown();

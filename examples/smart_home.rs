@@ -12,7 +12,7 @@
 //!
 //! Run: `cargo run --release --example smart_home`
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 use std::time::Duration;
 
 use venus::api::{Priority, QueryRequest};
@@ -24,6 +24,7 @@ use venus::ingest::Pipeline;
 use venus::memory::{Hierarchy, MemoryFabric, SynthBackedRaw};
 use venus::server::Service;
 use venus::util::stats::{fmt_duration, Samples, Table};
+use venus::util::sync::{ranks, OrderedRwLock};
 use venus::video::synth::{SynthConfig, VideoSynth};
 use venus::video::workload::{DatasetPreset, WorkloadGen};
 
@@ -53,11 +54,14 @@ fn main() -> venus::Result<()> {
     );
 
     // ---- ingestion stage (real pipeline) ----
-    let memory = Arc::new(RwLock::new(Hierarchy::new(
-        &cfg.memory,
-        d_embed,
-        Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
-    )?));
+    let memory = Arc::new(OrderedRwLock::new(
+        ranks::shard(0),
+        Hierarchy::new(
+            &cfg.memory,
+            d_embed,
+            Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
+        )?,
+    ));
     let engine = EmbedEngine::new(be, cfg.ingest.aux_models)?;
     let mut pipe =
         Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory))?;
@@ -77,7 +81,7 @@ fn main() -> venus::Result<()> {
         realtime_factor,
         fmt_duration(stats.mean_embed_batch_s),
     );
-    memory.read().unwrap().check_invariants()?;
+    memory.read().check_invariants()?;
 
     // ---- online querying stage ----
     let queries = WorkloadGen::new(77, DatasetPreset::VideoMmeShort)

@@ -11,7 +11,7 @@
 //!
 //! Run: `cargo run --release --example surveillance_marathon`
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use venus::backend::{self, EmbedBackend};
 use venus::config::VenusConfig;
@@ -20,6 +20,7 @@ use venus::embed::EmbedEngine;
 use venus::ingest::Pipeline;
 use venus::memory::{Hierarchy, SynthBackedRaw};
 use venus::util::stats::{fmt_duration, Table};
+use venus::util::sync::{ranks, OrderedRwLock};
 use venus::video::synth::{SynthConfig, VideoSynth};
 use venus::video::workload::{DatasetPreset, WorkloadGen};
 
@@ -47,11 +48,14 @@ fn main() -> venus::Result<()> {
     ));
     let total = synth.total_frames();
 
-    let memory = Arc::new(RwLock::new(Hierarchy::new(
-        &cfg.memory,
-        d_embed,
-        Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
-    )?));
+    let memory = Arc::new(OrderedRwLock::new(
+        ranks::shard(0),
+        Hierarchy::new(
+            &cfg.memory,
+            d_embed,
+            Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
+        )?,
+    ));
     let engine = EmbedEngine::new(be, cfg.ingest.aux_models)?;
     let mut pipe =
         Pipeline::new(&cfg.ingest, synth.config().fps, engine, Arc::clone(&memory))?;
@@ -87,7 +91,7 @@ fn main() -> venus::Result<()> {
             lat.push(out.timings.total_s());
         }
         let (n_index, sparsity, raw_bytes) = {
-            let m = memory.read().unwrap();
+            let m = memory.read();
             (m.len(), m.sparsity(), m.raw_resident_bytes())
         };
         let wall = started.elapsed().as_secs_f64();
@@ -111,6 +115,6 @@ fn main() -> venus::Result<()> {
         stats.embedded,
         fmt_duration(stats.wall_s)
     );
-    memory.read().unwrap().check_invariants()?;
+    memory.read().check_invariants()?;
     Ok(())
 }

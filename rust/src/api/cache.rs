@@ -21,11 +21,11 @@
 //! Entries are LRU-evicted beyond the configured capacity.
 
 use std::fmt;
-use std::sync::Mutex;
 
 use crate::coordinator::query::RetrievalMode;
 use crate::memory::{StreamId, StreamScope};
 use crate::retrieval::Selection;
+use crate::util::sync::{ranks, OrderedMutex};
 
 /// How the cache participated in answering one query.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -142,7 +142,7 @@ struct Inner {
 /// Thread-safe semantic query cache, shared by every serving worker
 /// (and usable standalone next to a bare [`crate::coordinator::query::QueryEngine`]).
 pub struct QueryCache {
-    inner: Mutex<Inner>,
+    inner: OrderedMutex<Inner>,
     capacity: usize,
     threshold: f32,
     max_stale: u64,
@@ -154,11 +154,10 @@ impl QueryCache {
     /// watermark advance beyond which an entry is invalid.
     pub fn new(capacity: usize, threshold: f32, max_stale: u64) -> Self {
         Self {
-            inner: Mutex::new(Inner {
-                entries: Vec::new(),
-                tick: 0,
-                stats: StatsInner::default(),
-            }),
+            inner: OrderedMutex::new(
+                ranks::QUERY_CACHE,
+                Inner { entries: Vec::new(), tick: 0, stats: StatsInner::default() },
+            ),
             capacity,
             threshold,
             max_stale,
@@ -207,7 +206,7 @@ impl QueryCache {
         if !self.enabled() {
             return None;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.tick += 1;
         let tick = inner.tick;
         let pos = inner.entries.iter().position(|e| {
@@ -243,7 +242,7 @@ impl QueryCache {
         if !self.enabled() {
             return None;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.tick += 1;
         let tick = inner.tick;
         // one pass under the shared mutex: each candidate's cosine is
@@ -313,7 +312,7 @@ impl QueryCache {
         if !self.enabled() {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(e) = inner.entries.iter_mut().find(|e| {
@@ -336,20 +335,22 @@ impl QueryCache {
             last_used: tick,
         });
         while inner.entries.len() > self.capacity {
-            let lru = inner
+            let Some(lru) = inner
                 .entries
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(i, _)| i)
-                .unwrap();
+            else {
+                break;
+            };
             inner.entries.swap_remove(lru);
             inner.stats.evicted += 1;
         }
     }
 
     pub fn stats(&self) -> CacheStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock();
         CacheStats {
             entries: inner.entries.len(),
             hits_exact: inner.stats.hits_exact,
@@ -362,7 +363,7 @@ impl QueryCache {
 
     /// Drop every entry (stats are kept).
     pub fn clear(&self) {
-        self.inner.lock().unwrap().entries.clear();
+        self.inner.lock().entries.clear();
     }
 }
 

@@ -22,7 +22,7 @@
 
 pub mod native;
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -164,8 +164,10 @@ pub fn load_default() -> Result<Arc<dyn EmbedBackend>> {
 /// so racing threads never build it twice), then handed out as `Arc`
 /// clones.  Construction errors are not cached — a later call retries.
 pub fn shared_default() -> Result<Arc<dyn EmbedBackend>> {
-    static SHARED: Mutex<Option<Arc<dyn EmbedBackend>>> = Mutex::new(None);
-    let mut slot = SHARED.lock().unwrap();
+    use crate::util::sync::{ranks, OrderedMutex};
+    static SHARED: OrderedMutex<Option<Arc<dyn EmbedBackend>>> =
+        OrderedMutex::new(ranks::BACKEND_SHARED, None);
+    let mut slot = SHARED.lock();
     if let Some(be) = slot.as_ref() {
         return Ok(Arc::clone(be));
     }

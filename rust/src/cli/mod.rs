@@ -227,17 +227,17 @@ fn serve(args: &[String]) -> Result<()> {
         // single-camera deployment: the paper's serving loop
         let case =
             crate::eval::prepare_case_at(preset, &cfg, n_queries, seed, data_dir.as_deref())?;
-        if case.ingest_stats.frames == 0 && case.memory.read().unwrap().len() > 0 {
+        if case.ingest_stats.frames == 0 && case.memory.read().len() > 0 {
             eprintln!(
                 "memory recovered from {}: {} index vectors over {} frames (ingest skipped)",
                 data_dir.as_deref().unwrap_or_else(|| std::path::Path::new("?")).display(),
-                case.memory.read().unwrap().len(),
-                case.memory.read().unwrap().frames_ingested()
+                case.memory.read().len(),
+                case.memory.read().frames_ingested()
             );
         } else {
             eprintln!(
                 "memory ready: {} index vectors over {} frames",
-                case.memory.read().unwrap().len(),
+                case.memory.read().len(),
                 case.ingest_stats.frames
             );
         }

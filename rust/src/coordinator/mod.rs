@@ -6,7 +6,7 @@ pub mod query;
 
 pub use query::{EdgeTimings, QueryEngine, QueryOutcome};
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -18,6 +18,7 @@ use crate::ingest::{IngestStats, Pipeline};
 use crate::memory::raw::RawStore;
 use crate::memory::{FrameId, Hierarchy, MemoryFabric};
 use crate::net::{Link, Payload};
+use crate::util::sync::OrderedRwLock;
 use crate::video::frame::Frame;
 use crate::video::synth::VideoSynth;
 
@@ -77,7 +78,7 @@ impl Venus {
     }
 
     /// Stream 0's shard — the whole memory in single-camera deployments.
-    pub fn memory(&self) -> &Arc<RwLock<Hierarchy>> {
+    pub fn memory(&self) -> &Arc<OrderedRwLock<Hierarchy>> {
         &self.fabric.shards()[0]
     }
 

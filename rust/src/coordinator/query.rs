@@ -12,7 +12,8 @@
 //! evidence frames from several cameras, and AKR's adaptive budget
 //! reflects total cross-camera evidence concentration.
 //!
-//! Locking: each shard sits behind its own `RwLock` — the query path is
+//! Locking: each shard sits behind its own rank-ordered `OrderedRwLock`
+//! (rank `ranks::shard(i)`, ascending by stream) — the query path is
 //! read-only, so concurrent query workers score/select in parallel and a
 //! stream's ingestion writer only excludes readers *of that stream* for
 //! its narrow insert/archive sections.  Query embedding runs before any
@@ -24,7 +25,7 @@
 //! guards, since selected frames are already archived and the raw layer
 //! is append-only.
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -35,6 +36,7 @@ use crate::embed::EmbedEngine;
 use crate::memory::{ClusterRecord, Hierarchy, MemoryFabric, StreamId, StreamScope};
 use crate::retrieval::{akr_retrieve, sample_retrieve, topk_retrieve, Selection};
 use crate::util::rng::Pcg64;
+use crate::util::sync::OrderedRwLock;
 
 /// Measured edge-side latencies for one query.
 #[derive(Clone, Copy, Debug, Default)]
@@ -104,7 +106,7 @@ impl QueryEngine {
     /// deployments, tests, benches).
     pub fn over_memory(
         engine: EmbedEngine,
-        memory: Arc<RwLock<Hierarchy>>,
+        memory: Arc<OrderedRwLock<Hierarchy>>,
         cfg: RetrievalConfig,
         seed: u64,
     ) -> Self {
@@ -239,7 +241,7 @@ impl QueryEngine {
         // from, across every shard at once
         let shards = self.fabric.scoped(scope)?;
         let (selection, draws, frame_scores, touched) = {
-            let guards: Vec<_> = shards.iter().map(|s| s.read().unwrap()).collect();
+            let guards: Vec<_> = shards.iter().map(|s| s.read()).collect();
             // watermarks captured under the same guards the selection
             // sees — exactly the index state a cached reuse would replay
             let touched: Vec<(StreamId, u64)> =
@@ -318,7 +320,7 @@ impl QueryEngine {
         let qvec = self.engine.embed_query(text)?;
         let mut merged = Vec::new();
         for shard in self.fabric.shards() {
-            let g = shard.read().unwrap();
+            let g = shard.read();
             g.score_all(&qvec, &mut self.scores_buf)?;
             merged.extend_from_slice(&self.scores_buf);
         }
@@ -375,7 +377,7 @@ fn frame_scores_for<M: crate::retrieval::RecordSource + ?Sized>(
                     })
                 })
                 .map(|&i| score_of(i))
-                .max_by(|a, b| a.partial_cmp(b).unwrap())
+                .max_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
                 .unwrap_or(0.0)
         })
         .collect()
@@ -419,6 +421,7 @@ mod tests {
     use super::*;
     use crate::config::MemoryConfig;
     use crate::memory::{ClusterRecord, InMemoryRaw, StreamId};
+    use crate::util::sync::ranks;
     use crate::video::frame::Frame;
 
     /// Ingest-while-query smoke test for the RwLock'd memory: a writer
@@ -429,7 +432,8 @@ mod tests {
     fn queries_run_while_writer_inserts() {
         let engine = EmbedEngine::default_backend(false).unwrap();
         let d = engine.d_embed();
-        let memory = Arc::new(RwLock::new(
+        let memory = Arc::new(OrderedRwLock::new(
+            ranks::shard(0),
             Hierarchy::new(&MemoryConfig::default(), d, Box::new(InMemoryRaw::new(8)))
                 .unwrap(),
         ));
@@ -438,7 +442,7 @@ mod tests {
         let writer = std::thread::spawn(move || {
             let mut rng = Pcg64::seeded(7);
             for c in 0..60u64 {
-                let mut mem = writer_mem.write().unwrap();
+                let mut mem = writer_mem.write();
                 for f in c * 4..(c + 1) * 4 {
                     mem.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
                 }
@@ -474,14 +478,14 @@ mod tests {
             let out = qe
                 .retrieve_with("what happened with concept01", mode)
                 .unwrap();
-            let archived = memory.read().unwrap().frames_ingested();
+            let archived = memory.read().frames_ingested();
             assert!(
                 out.selection.frames.iter().all(|f| f.idx < archived),
                 "selection referenced an unarchived frame"
             );
         }
         writer.join().unwrap();
-        memory.read().unwrap().check_invariants().unwrap();
+        memory.read().check_invariants().unwrap();
         // with the writer drained, the index is fully visible to queries
         let out = qe
             .retrieve_with("what happened with concept01", RetrievalMode::FixedSampling(8))
@@ -494,13 +498,14 @@ mod tests {
 
     /// Deterministic single-shard memory for the API-path tests (random
     /// unit vectors, 4 frames per cluster).
-    fn seeded_memory(d: usize, clusters: u64, seed: u64) -> Arc<RwLock<Hierarchy>> {
-        let memory = Arc::new(RwLock::new(
+    fn seeded_memory(d: usize, clusters: u64, seed: u64) -> Arc<OrderedRwLock<Hierarchy>> {
+        let memory = Arc::new(OrderedRwLock::new(
+            ranks::shard(0),
             Hierarchy::new(&MemoryConfig::default(), d, Box::new(InMemoryRaw::new(8)))
                 .unwrap(),
         ));
         let mut rng = Pcg64::seeded(seed);
-        let mut mem = memory.write().unwrap();
+        let mut mem = memory.write();
         for c in 0..clusters {
             for f in c * 4..(c + 1) * 4 {
                 mem.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
@@ -522,7 +527,7 @@ mod tests {
         memory
     }
 
-    fn engine_over(memory: &Arc<RwLock<Hierarchy>>, seed: u64) -> QueryEngine {
+    fn engine_over(memory: &Arc<OrderedRwLock<Hierarchy>>, seed: u64) -> QueryEngine {
         QueryEngine::over_memory(
             EmbedEngine::default_backend(false).unwrap(),
             Arc::clone(memory),
@@ -679,7 +684,7 @@ mod tests {
         let mut rng = Pcg64::seeded(99);
         for sid in 0..2u16 {
             let shard = fabric.shard(StreamId(sid)).unwrap();
-            let mut g = shard.write().unwrap();
+            let mut g = shard.write();
             for c in 0..8u64 {
                 for f in c * 4..(c + 1) * 4 {
                     g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();

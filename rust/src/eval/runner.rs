@@ -13,7 +13,7 @@
 //! the substrate for the fabric bench, the multi-stream serve path, and
 //! the cross-stream property tests.
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -27,6 +27,7 @@ use crate::ingest::{EmbedPool, IngestStats, Pipeline};
 use crate::memory::{
     Hierarchy, MemoryFabric, RawStore, StreamId, SynthBackedRaw,
 };
+use crate::util::sync::{ranks, OrderedRwLock};
 use crate::video::synth::{SynthConfig, VideoSynth};
 use crate::video::workload::{DatasetPreset, Query, WorkloadGen};
 
@@ -36,7 +37,7 @@ pub struct VideoCase {
     /// the single-stream fabric the query engines run against
     pub fabric: Arc<MemoryFabric>,
     /// stream 0's shard (== the whole memory for a single-stream case)
-    pub memory: Arc<RwLock<Hierarchy>>,
+    pub memory: Arc<OrderedRwLock<Hierarchy>>,
     pub queries: Vec<Query>,
     pub ingest_stats: IngestStats,
     pub preset: DatasetPreset,
@@ -129,21 +130,24 @@ pub fn prepare_case_at(
             (fabric, memory)
         }
         None => {
-            let memory = Arc::new(RwLock::new(Hierarchy::new(
-                &cfg.memory,
-                d_embed,
-                Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
-            )?));
+            let memory = Arc::new(OrderedRwLock::new(
+                ranks::shard(0),
+                Hierarchy::new(
+                    &cfg.memory,
+                    d_embed,
+                    Box::new(SynthBackedRaw::new(Arc::clone(&synth))),
+                )?,
+            ));
             let fabric = Arc::new(MemoryFabric::single(Arc::clone(&memory)));
             (fabric, memory)
         }
     };
-    let recovered = memory.read().unwrap().len() > 0;
+    let recovered = memory.read().len() > 0;
     let ingest_stats = if recovered {
         // honesty check: a dir left by a run killed mid-ingest recovers
         // to a truncated memory — serve it (it is self-consistent), but
         // never silently pretend it covers the whole stream
-        let frames = memory.read().unwrap().frames_ingested();
+        let frames = memory.read().frames_ingested();
         if frames < synth.total_frames() {
             eprintln!(
                 "warning: recovered memory covers {frames}/{} frames of the configured \
@@ -233,7 +237,7 @@ pub fn prepare_multi_case_at(
         // previous process — nothing to replay (but never silently
         // pretend a mid-ingest crash left complete coverage)
         for (i, synth) in synths.iter().enumerate() {
-            let frames = fabric.shard(StreamId(i as u16))?.read().unwrap().frames_ingested();
+            let frames = fabric.shard(StreamId(i as u16))?.read().frames_ingested();
             if frames < synth.total_frames() {
                 eprintln!(
                     "warning: stream {i} recovered {frames}/{} frames (a previous run \

@@ -20,7 +20,7 @@
 //! N pipelines to it with [`Pipeline::attach`].
 
 use std::sync::mpsc::SyncSender;
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -32,6 +32,7 @@ use crate::ingest::cluster::PartitionClusterer;
 use crate::ingest::pool::{EmbedPool, PoolJob, StreamProgress};
 use crate::ingest::scene::SceneSegmenter;
 use crate::memory::{Hierarchy, StreamId};
+use crate::util::sync::OrderedRwLock;
 use crate::video::frame::Frame;
 
 /// Ingestion statistics for the run.
@@ -55,7 +56,7 @@ pub struct IngestStats {
 pub struct Pipeline {
     cfg: IngestConfig,
     stream: StreamId,
-    shard: Arc<RwLock<Hierarchy>>,
+    shard: Arc<OrderedRwLock<Hierarchy>>,
     tx: Option<SyncSender<PoolJob>>,
     owned_pool: Option<EmbedPool>,
     progress: Arc<StreamProgress>,
@@ -80,7 +81,7 @@ impl Pipeline {
         cfg: &IngestConfig,
         fps: f64,
         engine: EmbedEngine,
-        memory: Arc<RwLock<Hierarchy>>,
+        memory: Arc<OrderedRwLock<Hierarchy>>,
     ) -> Result<Self> {
         let pool = EmbedPool::with_engine(engine, cfg.queue_capacity)?;
         let mut pipe = Self::attach(cfg, fps, &pool, memory)?;
@@ -95,9 +96,9 @@ impl Pipeline {
         cfg: &IngestConfig,
         fps: f64,
         pool: &EmbedPool,
-        memory: Arc<RwLock<Hierarchy>>,
+        memory: Arc<OrderedRwLock<Hierarchy>>,
     ) -> Result<Self> {
-        let stream = memory.read().unwrap().stream();
+        let stream = memory.read().stream();
         Ok(Self {
             cfg: cfg.clone(),
             stream,
@@ -141,7 +142,7 @@ impl Pipeline {
 
     /// Feed the next captured frame (stream-local ids, dense ascending).
     pub fn push_frame(&mut self, id: u64, frame: &Frame) -> Result<()> {
-        self.shard.write().unwrap().archive_frame(id, frame)?;
+        self.shard.write().archive_frame(id, frame)?;
         let feat = frame_features(frame);
         if let Some(part) = self.seg.push_features(feat) {
             self.submit_partition(part.id)?;
@@ -209,6 +210,7 @@ mod tests {
     use crate::backend::{EmbedBackend, ModelMeta};
     use crate::config::MemoryConfig;
     use crate::memory::{InMemoryRaw, MemoryFabric, RawStore};
+    use crate::util::sync::ranks;
 
     /// A backend whose warm-up fails — stands in for a broken artifact set.
     struct BrokenBackend(ModelMeta);
@@ -285,7 +287,8 @@ mod tests {
     #[test]
     fn broken_backend_fails_at_construction_not_mid_stream() {
         let engine = EmbedEngine::new(BrokenBackend::shared(), false).unwrap();
-        let memory = Arc::new(RwLock::new(
+        let memory = Arc::new(OrderedRwLock::new(
+            ranks::shard(0),
             Hierarchy::new(&MemoryConfig::default(), 8, Box::new(InMemoryRaw::new(16)))
                 .unwrap(),
         ));
@@ -301,7 +304,8 @@ mod tests {
     fn healthy_backend_constructs() {
         let engine = EmbedEngine::default_backend(false).unwrap();
         let d = engine.d_embed();
-        let memory = Arc::new(RwLock::new(
+        let memory = Arc::new(OrderedRwLock::new(
+            ranks::shard(0),
             Hierarchy::new(&MemoryConfig::default(), d, Box::new(InMemoryRaw::new(64)))
                 .unwrap(),
         ));
@@ -351,7 +355,7 @@ mod tests {
         fabric.check_invariants().unwrap();
         assert_eq!(fabric.total_indexed(), embedded);
         for shard in fabric.shards() {
-            let g = shard.read().unwrap();
+            let g = shard.read();
             assert!(!g.is_empty(), "each shard received its own partitions");
             assert_eq!(g.frames_ingested(), 64);
         }

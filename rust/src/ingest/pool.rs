@@ -21,7 +21,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -31,13 +31,14 @@ use crate::backend::EmbedBackend;
 use crate::embed::EmbedEngine;
 use crate::ingest::cluster::Cluster;
 use crate::memory::{ClusterRecord, Hierarchy, StreamId};
+use crate::util::sync::{ranks, OrderedCondvar, OrderedMutex, OrderedRwLock};
 
 /// One completed partition, routed to its stream's shard.
 pub(crate) struct PoolJob {
     pub stream: StreamId,
     pub scene_id: usize,
     pub clusters: Vec<Cluster>,
-    pub shard: Arc<RwLock<Hierarchy>>,
+    pub shard: Arc<OrderedRwLock<Hierarchy>>,
     pub progress: Arc<StreamProgress>,
 }
 
@@ -58,24 +59,27 @@ pub(crate) struct ProgressState {
 }
 
 pub(crate) struct StreamProgress {
-    state: Mutex<ProgressState>,
-    cv: Condvar,
+    state: OrderedMutex<ProgressState>,
+    cv: OrderedCondvar,
 }
 
 impl StreamProgress {
     pub fn new() -> Arc<Self> {
-        Arc::new(Self { state: Mutex::new(ProgressState::default()), cv: Condvar::new() })
+        Arc::new(Self {
+            state: OrderedMutex::new(ranks::STREAM_PROGRESS, ProgressState::default()),
+            cv: OrderedCondvar::new(),
+        })
     }
 
     fn update(&self, f: impl FnOnce(&mut ProgressState)) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         f(&mut st);
         drop(st);
         self.cv.notify_all();
     }
 
     pub fn snapshot(&self) -> ProgressState {
-        self.state.lock().unwrap().clone()
+        self.state.lock().clone()
     }
 
     /// Block until `n` partitions completed or an error was recorded —
@@ -83,7 +87,7 @@ impl StreamProgress {
     /// while partitions are still pending, give up instead of waiting
     /// forever on a condvar nobody will signal.
     pub fn wait_partitions(&self, n: usize, workers_alive: &AtomicUsize) -> ProgressState {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         while st.partitions_done < n && st.error.is_none() {
             if workers_alive.load(Ordering::Acquire) == 0 {
                 st.error
@@ -92,8 +96,7 @@ impl StreamProgress {
             }
             let (guard, _timeout) = self
                 .cv
-                .wait_timeout(st, std::time::Duration::from_millis(100))
-                .unwrap();
+                .wait_timeout(st, std::time::Duration::from_millis(100));
             st = guard;
         }
         st.clone()
@@ -145,7 +148,7 @@ impl EmbedPool {
             .warmup()
             .context("embed backend warm-up failed; refusing to start the pipeline")?;
         let (tx, rx) = sync_channel::<PoolJob>(queue_capacity.max(1));
-        let rx = Arc::new(Mutex::new(rx));
+        let rx = Arc::new(OrderedMutex::new(ranks::POOL_QUEUE, rx));
         let alive = Arc::new(AtomicUsize::new(engines.len()));
         let workers = engines
             .into_iter()
@@ -200,12 +203,12 @@ impl Drop for EmbedPool {
     }
 }
 
-fn worker_loop(mut engine: EmbedEngine, rx: Arc<Mutex<Receiver<PoolJob>>>) {
+fn worker_loop(mut engine: EmbedEngine, rx: Arc<OrderedMutex<Receiver<PoolJob>>>) {
     let target = engine.max_image_batch();
     loop {
         let mut jobs = Vec::new();
         {
-            let guard = rx.lock().unwrap();
+            let guard = rx.lock();
             match guard.recv() {
                 Ok(j) => jobs.push(j),
                 Err(_) => return, // channel closed: drain complete
@@ -278,7 +281,7 @@ fn process_jobs(engine: &mut EmbedEngine, jobs: Vec<PoolJob>) {
                 let job_embs: Vec<Vec<f32>> = it.by_ref().take(take).collect();
                 let mut err: Option<String> = None;
                 {
-                    let mut shard = j.shard.write().unwrap();
+                    let mut shard = j.shard.write();
                     for (c, emb) in j.clusters.iter().zip(&job_embs) {
                         if let Err(e) = shard.insert(
                             emb,

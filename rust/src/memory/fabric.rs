@@ -11,10 +11,12 @@
 //!
 //! Lock-order note: fabric operations acquire shard guards in ascending
 //! `StreamId` order while writers (ingestion pipelines) each hold at most
-//! one shard lock at a time — no cycle, no deadlock.
+//! one shard lock at a time — no cycle, no deadlock.  Shard `i` carries
+//! lock rank `ranks::shard(i)`, so debug builds enforce the ascending
+//! order mechanically (`util::sync`, DESIGN.md §Static-Analysis).
 
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -22,6 +24,7 @@ use crate::config::MemoryConfig;
 use crate::memory::hierarchy::{Hierarchy, TierStats};
 use crate::memory::raw::RawStore;
 use crate::memory::storage::atomic_write;
+use crate::util::sync::{ranks, OrderedRwLock};
 use crate::video::frame::Frame;
 
 /// Identifies one camera stream (== one shard) in the fabric.
@@ -82,7 +85,7 @@ pub enum StreamScope {
 /// The multi-camera memory fabric: per-stream shards, each independently
 /// locked.  Shard `i` owns `StreamId(i)`.
 pub struct MemoryFabric {
-    shards: Vec<Arc<RwLock<Hierarchy>>>,
+    shards: Vec<Arc<OrderedRwLock<Hierarchy>>>,
     /// root of the durable layout (`MANIFEST`, `s<K>/` per stream);
     /// `None` for a pure-RAM fabric
     data_dir: Option<PathBuf>,
@@ -106,12 +109,10 @@ impl MemoryFabric {
         );
         let mut shards = Vec::with_capacity(raws.len());
         for (i, raw) in raws.into_iter().enumerate() {
-            shards.push(Arc::new(RwLock::new(Hierarchy::for_stream(
-                cfg,
-                d_embed,
-                raw,
-                StreamId(i as u16),
-            )?)));
+            shards.push(Arc::new(OrderedRwLock::new(
+                ranks::shard(i),
+                Hierarchy::for_stream(cfg, d_embed, raw, StreamId(i as u16))?,
+            )));
         }
         Ok(Self { shards, data_dir: None })
     }
@@ -158,9 +159,10 @@ impl MemoryFabric {
         for i in 0..streams {
             let stream = StreamId(i as u16);
             let shard_dir = dir.join(format!("s{i}"));
-            shards.push(Arc::new(RwLock::new(Hierarchy::durable(
-                cfg, d_embed, stream, &shard_dir, frame_size,
-            )?)));
+            shards.push(Arc::new(OrderedRwLock::new(
+                ranks::shard(i),
+                Hierarchy::durable(cfg, d_embed, stream, &shard_dir, frame_size)?,
+            )));
         }
         Ok(Self { shards, data_dir: Some(dir.to_path_buf()) })
     }
@@ -206,8 +208,8 @@ impl MemoryFabric {
 
     /// Wrap an existing single shard (must own `StreamId(0)`) — the
     /// single-camera deployment and the test/bench convenience path.
-    pub fn single(shard: Arc<RwLock<Hierarchy>>) -> Self {
-        debug_assert_eq!(shard.read().unwrap().stream(), StreamId(0));
+    pub fn single(shard: Arc<OrderedRwLock<Hierarchy>>) -> Self {
+        debug_assert_eq!(shard.read().stream(), StreamId(0));
         Self { shards: vec![shard], data_dir: None }
     }
 
@@ -225,7 +227,7 @@ impl MemoryFabric {
     /// point — the clean-shutdown counterpart of drop-as-crash).
     pub fn flush(&self) -> Result<()> {
         for shard in &self.shards {
-            shard.write().unwrap().flush()?;
+            shard.write().flush()?;
         }
         Ok(())
     }
@@ -234,7 +236,7 @@ impl MemoryFabric {
     pub fn tier_stats(&self) -> TierStats {
         let mut total = TierStats::default();
         for shard in &self.shards {
-            total.merge(&shard.read().unwrap().tier_stats());
+            total.merge(&shard.read().tier_stats());
         }
         total
     }
@@ -248,19 +250,19 @@ impl MemoryFabric {
     }
 
     /// All shards, in `StreamId` order.
-    pub fn shards(&self) -> &[Arc<RwLock<Hierarchy>>] {
+    pub fn shards(&self) -> &[Arc<OrderedRwLock<Hierarchy>>] {
         &self.shards
     }
 
     /// One stream's shard.
-    pub fn shard(&self, stream: StreamId) -> Result<&Arc<RwLock<Hierarchy>>> {
+    pub fn shard(&self, stream: StreamId) -> Result<&Arc<OrderedRwLock<Hierarchy>>> {
         self.shards
             .get(stream.index())
             .ok_or_else(|| anyhow::anyhow!("unknown stream {stream} ({}-shard fabric)", self.shards.len()))
     }
 
     /// The shards a scope covers, in ascending `StreamId` order.
-    pub fn scoped(&self, scope: StreamScope) -> Result<Vec<&Arc<RwLock<Hierarchy>>>> {
+    pub fn scoped(&self, scope: StreamScope) -> Result<Vec<&Arc<OrderedRwLock<Hierarchy>>>> {
         match scope {
             StreamScope::One(s) => Ok(vec![self.shard(s)?]),
             StreamScope::All => Ok(self.shards.iter().collect()),
@@ -269,7 +271,7 @@ impl MemoryFabric {
 
     /// Fetch one raw frame by fabric-global address.
     pub fn fetch_frame(&self, id: FrameId) -> Result<Frame> {
-        self.shard(id.stream)?.read().unwrap().fetch_frame(id.idx)
+        self.shard(id.stream)?.read().fetch_frame(id.idx)
     }
 
     /// Fetch a batch of raw frames (the payload that ships to the cloud).
@@ -280,7 +282,7 @@ impl MemoryFabric {
         while i < ids.len() {
             let stream = ids[i].stream;
             let shard = self.shard(stream)?;
-            let guard = shard.read().unwrap();
+            let guard = shard.read();
             while i < ids.len() && ids[i].stream == stream {
                 out.push(guard.fetch_frame(ids[i].idx)?);
                 i += 1;
@@ -299,7 +301,7 @@ impl MemoryFabric {
             .scoped(scope)?
             .iter()
             .map(|s| {
-                let g = s.read().unwrap();
+                let g = s.read();
                 (g.stream(), g.watermark())
             })
             .collect())
@@ -307,21 +309,18 @@ impl MemoryFabric {
 
     /// Total indexed vectors across every shard.
     pub fn total_indexed(&self) -> usize {
-        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.read().len()).sum()
     }
 
     /// Total frames archived across every shard.
     pub fn total_frames(&self) -> u64 {
-        self.shards
-            .iter()
-            .map(|s| s.read().unwrap().frames_ingested())
-            .sum()
+        self.shards.iter().map(|s| s.read().frames_ingested()).sum()
     }
 
     /// Run `check_invariants` on every shard.
     pub fn check_invariants(&self) -> Result<()> {
         for shard in &self.shards {
-            shard.read().unwrap().check_invariants()?;
+            shard.read().check_invariants()?;
         }
         Ok(())
     }
@@ -345,7 +344,7 @@ mod tests {
         assert_eq!(f.n_streams(), 3);
         for (i, s) in f.stream_ids().enumerate() {
             assert_eq!(s, StreamId(i as u16));
-            assert_eq!(f.shard(s).unwrap().read().unwrap().stream(), s);
+            assert_eq!(f.shard(s).unwrap().read().stream(), s);
         }
         assert!(f.shard(StreamId(3)).is_err());
     }
@@ -363,7 +362,7 @@ mod tests {
         let f = fabric(2);
         for (sid, fill) in [(0u16, 0.25f32), (1, 0.75)] {
             let shard = f.shard(StreamId(sid)).unwrap();
-            let mut g = shard.write().unwrap();
+            let mut g = shard.write();
             for i in 0..4u64 {
                 g.archive_frame(i, &Frame::filled(8, [fill; 3])).unwrap();
             }
@@ -395,7 +394,7 @@ mod tests {
         );
         {
             let shard = f.shard(StreamId(1)).unwrap();
-            let mut g = shard.write().unwrap();
+            let mut g = shard.write();
             g.archive_frame(0, &Frame::filled(8, [0.5; 3])).unwrap();
             g.insert(
                 &[1.0, 0.0, 0.0, 0.0],
@@ -424,7 +423,7 @@ mod tests {
         let f = fabric(2);
         {
             let shard = f.shard(StreamId(1)).unwrap();
-            let mut g = shard.write().unwrap();
+            let mut g = shard.write();
             g.archive_frame(0, &Frame::filled(8, [0.5; 3])).unwrap();
             g.insert(
                 &[1.0, 0.0, 0.0, 0.0],
@@ -452,7 +451,7 @@ mod tests {
             assert_eq!(f.data_dir(), Some(tmp.0.as_path()));
             for sid in 0..2u16 {
                 let shard = f.shard(StreamId(sid)).unwrap();
-                let mut g = shard.write().unwrap();
+                let mut g = shard.write();
                 for i in 0..3u64 {
                     g.archive_frame(i, &Frame::filled(8, [0.5; 3])).unwrap();
                     let mut v = vec![0.0f32; 4];

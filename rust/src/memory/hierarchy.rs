@@ -197,7 +197,11 @@ impl Hierarchy {
         let raw = Box::new(DiskRaw::open(dir, frame_size, cfg.segment_frames)?);
         let (storage, recovered) = StreamStorage::open(dir, stream, d_embed)?;
         let mut h = Self::build(cfg, d_embed, raw, stream, Some(storage))?;
-        let metas = h.storage.as_ref().unwrap().segments().to_vec();
+        let metas = h
+            .storage
+            .as_ref()
+            .map(|st| st.segments().to_vec())
+            .unwrap_or_default();
         let sealed_meta = recovered.sealed_records;
 
         // choose the demoted prefix: walk segments newest-first, keeping
@@ -364,9 +368,10 @@ impl Hierarchy {
 
     /// Seal the whole unsealed WAL span into an immutable segment.
     fn seal_now(&mut self) -> Result<()> {
-        let Some(st) = self.storage.as_ref() else { return Ok(()) };
-        let base = st.sealed_records();
-        let count = st.unsealed_records();
+        let (base, count) = match self.storage.as_ref() {
+            Some(st) => (st.sealed_records(), st.unsealed_records()),
+            None => return Ok(()),
+        };
         if count == 0 {
             return Ok(());
         }
@@ -377,10 +382,10 @@ impl Hierarchy {
         for g in base..base + count {
             vecs.extend_from_slice(self.index.vector(g - self.hot_base));
         }
-        self.storage
-            .as_mut()
-            .unwrap()
-            .seal(&self.records[base..base + count], &vecs)
+        match self.storage.as_mut() {
+            Some(st) => st.seal(&self.records[base..base + count], &vecs),
+            None => Ok(()),
+        }
     }
 
     /// Demote oldest sealed segments until the hot tier fits its budget.
@@ -406,8 +411,17 @@ impl Hierarchy {
     /// rebuild the hot index over the surviving suffix (bit-exact:
     /// surviving rows re-enter via `insert_prepared`).
     fn demote_oldest(&mut self) -> Result<()> {
-        let meta =
-            self.storage.as_ref().unwrap().segments()[self.cold.segment_count()].clone();
+        let demoted = self.cold.segment_count();
+        let meta = self
+            .storage
+            .as_ref()
+            .and_then(|st| st.segments().get(demoted).cloned())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "demotion requested but shard {:?} has no sealed segment beyond {demoted}",
+                    self.stream
+                )
+            })?;
         let k = meta.count;
         let mut fresh = build_index(
             &self.cfg.index,
@@ -494,7 +508,10 @@ impl Hierarchy {
         self.score_all(query, &mut scores)?;
         let mut order: Vec<usize> = (0..scores.len()).collect();
         order.sort_by(|&a, &b| {
-            scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
         });
         Ok(order
             .into_iter()
@@ -637,7 +654,7 @@ impl Hierarchy {
                 "record {i} centroid not a member"
             );
             anyhow::ensure!(
-                *r.members.last().unwrap() < self.frames_ingested,
+                r.members.last().is_some_and(|m| *m < self.frames_ingested),
                 "record {i} references unarchived frame"
             );
         }

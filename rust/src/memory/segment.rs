@@ -25,13 +25,14 @@ use std::io::Write;
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::memory::fabric::StreamId;
 use crate::memory::hierarchy::ClusterRecord;
 use crate::memory::storage::{fnv1a64, put_u16, put_u32, put_u64, ByteReader};
+use crate::util::sync::{ranks, OrderedMutex};
 
 const SEG_MAGIC: &[u8; 8] = b"VENUSSEG";
 const SEG_VERSION: u32 = 1;
@@ -214,7 +215,7 @@ pub(crate) fn load_vectors(meta: &SegmentMeta) -> Result<Vec<f32>> {
     }
     let mut out = Vec::with_capacity(meta.count * meta.d);
     for chunk in raw.chunks_exact(4) {
-        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
     }
     Ok(out)
 }
@@ -232,8 +233,9 @@ pub(crate) fn load_vectors(meta: &SegmentMeta) -> Result<Vec<f32>> {
 pub struct ColdTier {
     segments: Vec<SegmentMeta>,
     records: usize,
-    /// MRU-front cache of (segment index, vector block)
-    cache: Mutex<Vec<(usize, Arc<Vec<f32>>)>>,
+    /// MRU-front cache of (segment index, vector block); ranked above the
+    /// shard band — the scan acquires it under a shard read guard
+    cache: OrderedMutex<Vec<(usize, Arc<Vec<f32>>)>>,
     cache_cap: usize,
     resident_bytes: AtomicUsize,
     hits: AtomicU64,
@@ -245,7 +247,7 @@ impl ColdTier {
         Self {
             segments: Vec::new(),
             records: 0,
-            cache: Mutex::new(Vec::new()),
+            cache: OrderedMutex::new(ranks::COLD_BLOCK_CACHE, Vec::new()),
             cache_cap: cache_cap.max(1),
             resident_bytes: AtomicUsize::new(0),
             hits: AtomicU64::new(0),
@@ -282,7 +284,7 @@ impl ColdTier {
 
     /// Vector block of segment `i`, through the LRU cache.
     fn block(&self, i: usize) -> Result<Arc<Vec<f32>>> {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = self.cache.lock();
         if let Some(pos) = cache.iter().position(|(s, _)| *s == i) {
             let entry = cache.remove(pos);
             let block = Arc::clone(&entry.1);
@@ -296,7 +298,7 @@ impl ColdTier {
             .fetch_add(block.len() * 4, Ordering::Relaxed);
         cache.insert(0, (i, Arc::clone(&block)));
         while cache.len() > self.cache_cap {
-            let (_, evicted) = cache.pop().unwrap();
+            let Some((_, evicted)) = cache.pop() else { break };
             self.resident_bytes
                 .fetch_sub(evicted.len() * 4, Ordering::Relaxed);
         }

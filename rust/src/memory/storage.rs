@@ -37,7 +37,7 @@ use std::fs::{File, OpenOptions};
 use std::io::{Seek, SeekFrom, Write};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -45,6 +45,7 @@ use crate::memory::fabric::StreamId;
 use crate::memory::hierarchy::ClusterRecord;
 use crate::memory::raw::RawStore;
 use crate::memory::segment::{self, SegmentMeta};
+use crate::util::sync::{ranks, OrderedMutex};
 use crate::video::frame::Frame;
 
 // ---------------------------------------------------------------------
@@ -99,19 +100,23 @@ impl<'a> ByteReader<'a> {
     }
 
     pub(crate) fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
     pub(crate) fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     pub(crate) fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     pub(crate) fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     pub(crate) fn remaining(&self) -> usize {
@@ -611,8 +616,9 @@ pub struct DiskRaw {
     archived: u64,
     /// open chunk for appends (chunk index, file)
     write: Option<(usize, File)>,
-    /// single-slot read handle cache (queries touch one chunk at a time)
-    read_cache: Mutex<Option<(usize, Arc<File>)>>,
+    /// single-slot read handle cache (queries touch one chunk at a time);
+    /// ranked above the shard band — fetches run under shard read guards
+    read_cache: OrderedMutex<Option<(usize, Arc<File>)>>,
 }
 
 impl DiskRaw {
@@ -645,12 +651,12 @@ impl DiskRaw {
             per_chunk,
             archived,
             write: None,
-            read_cache: Mutex::new(None),
+            read_cache: OrderedMutex::new(ranks::RAW_READ_CACHE, None),
         })
     }
 
     fn reader(&self, chunk: usize) -> Option<Arc<File>> {
-        let mut slot = self.read_cache.lock().unwrap();
+        let mut slot = self.read_cache.lock();
         if let Some((c, f)) = slot.as_ref() {
             if *c == chunk {
                 return Some(Arc::clone(f));
@@ -699,7 +705,9 @@ impl RawStore for DiskRaw {
             .iter()
             .map(|&x| (x.clamp(0.0, 1.0) * 255.0).round() as u8)
             .collect();
-        let (_, file) = self.write.as_ref().unwrap();
+        let Some((_, file)) = self.write.as_ref() else {
+            bail!("frame-log write handle missing after chunk rotation");
+        };
         // a failed write (full SSD) is a typed error: the frame is simply
         // not archived, the watermark does not advance, and the shard
         // lock is never poisoned

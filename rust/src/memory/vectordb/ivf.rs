@@ -222,7 +222,7 @@ impl VectorIndex for IvfIndex {
             .enumerate()
             .map(|(c, cen)| (c, metric_score(self.metric, &q, cen)))
             .collect();
-        cell_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        cell_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
         for &(c, _) in cell_scores.iter().take(self.nprobe) {
             for &id in &self.cells[c] {
                 push_topk(

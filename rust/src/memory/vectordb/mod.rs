@@ -111,7 +111,9 @@ pub(crate) fn push_topk(heap: &mut Vec<Hit>, k: usize, hit: Hit) {
     if heap.len() < k {
         heap.push(hit);
         if heap.len() == k {
-            heap.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+            heap.sort_by(|a, b| {
+                b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal)
+            });
         }
         return;
     }
@@ -121,7 +123,7 @@ pub(crate) fn push_topk(heap: &mut Vec<Hit>, k: usize, hit: Hit) {
             .binary_search_by(|h| {
                 hit.score
                     .partial_cmp(&h.score)
-                    .unwrap()
+                    .unwrap_or(std::cmp::Ordering::Equal)
                     .then(std::cmp::Ordering::Greater)
             })
             .unwrap_or_else(|p| p);
@@ -132,7 +134,12 @@ pub(crate) fn push_topk(heap: &mut Vec<Hit>, k: usize, hit: Hit) {
 
 /// Finalize an unsorted candidate list into a descending top-k.
 pub(crate) fn finish_topk(mut hits: Vec<Hit>, k: usize) -> Vec<Hit> {
-    hits.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap().then(a.id.cmp(&b.id)));
+    hits.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
     hits.truncate(k);
     hits
 }

@@ -28,7 +28,7 @@ use std::collections::HashMap;
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -36,6 +36,7 @@ use anyhow::{Context, Result};
 
 use crate::config::WireConfig;
 use crate::server::Service;
+use crate::util::sync::{ranks, OrderedCondvar, OrderedMutex};
 
 use super::frame::{read_frame, write_frame, write_frame_text, FrameError};
 use super::proto::{ClientMsg, ServerMsg, WireError, PROTOCOL_VERSION};
@@ -53,6 +54,10 @@ pub struct WireStats {
     pub protocol_errors: u64,
     /// connections that ended on an idle read timeout
     pub idle_timeouts: u64,
+    /// handler threads that panicked while serving a connection — the
+    /// panic is caught at the `conn_loop` boundary so it ends only that
+    /// connection (never the gateway, never a poisoned registry)
+    pub handler_panics: u64,
     /// admitted connections that have fully ended (any reason)
     pub closed_conns: u64,
 }
@@ -65,12 +70,13 @@ impl WireStats {
 
     pub fn render(&self) -> String {
         format!(
-            "wire: {} conns accepted ({} open) / {} refused at budget / {} protocol errors / {} idle timeouts",
+            "wire: {} conns accepted ({} open) / {} refused at budget / {} protocol errors / {} idle timeouts / {} handler panics",
             self.accepted_conns,
             self.open_conns(),
             self.refused_conns,
             self.protocol_errors,
             self.idle_timeouts,
+            self.handler_panics,
         )
     }
 }
@@ -80,26 +86,34 @@ impl WireStats {
 /// must not pin [`Shared`] — and through it the `Arc<Service>` — alive
 /// past [`Gateway::shutdown`], or the caller could never unwrap the
 /// service to drain and flush it.
-#[derive(Default)]
 struct ShutdownSignal {
-    flag: Mutex<bool>,
-    cv: Condvar,
+    flag: OrderedMutex<bool>,
+    cv: OrderedCondvar,
+}
+
+impl Default for ShutdownSignal {
+    fn default() -> Self {
+        Self {
+            flag: OrderedMutex::new(ranks::WIRE_SHUTDOWN_SIGNAL, false),
+            cv: OrderedCondvar::new(),
+        }
+    }
 }
 
 impl ShutdownSignal {
     fn request(&self) {
-        *self.flag.lock().unwrap() = true;
+        *self.flag.lock() = true;
         self.cv.notify_all();
     }
 
     fn requested(&self) -> bool {
-        *self.flag.lock().unwrap()
+        *self.flag.lock()
     }
 
     fn wait(&self) {
-        let mut flag = self.flag.lock().unwrap();
+        let mut flag = self.flag.lock();
         while !*flag {
-            flag = self.cv.wait(flag).unwrap();
+            flag = self.cv.wait(flag);
         }
     }
 }
@@ -112,12 +126,15 @@ struct Shared {
     /// set by a remote `Shutdown` message or `request_shutdown`
     signal: Arc<ShutdownSignal>,
     /// live handler registry: socket clones for the half-close nudge
-    conns: Mutex<HashMap<u64, TcpStream>>,
+    conns: OrderedMutex<HashMap<u64, TcpStream>>,
     /// refusal threads currently parked reading a hello (bounded)
     refusals: std::sync::atomic::AtomicUsize,
     next_conn: AtomicU64,
     next_session: AtomicU64,
-    stats: Mutex<WireStats>,
+    stats: OrderedMutex<WireStats>,
+    /// test hook: the next query served panics mid-handler (one-shot).
+    /// Exercises the catch-unwind containment path end to end.
+    panic_next_query: AtomicBool,
 }
 
 /// A running TCP gateway over one [`Service`].
@@ -125,7 +142,7 @@ pub struct Gateway {
     local_addr: SocketAddr,
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
-    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    handlers: Arc<OrderedMutex<Vec<JoinHandle<()>>>>,
 }
 
 /// A cheap cloneable handle that can request gateway shutdown from
@@ -156,13 +173,14 @@ impl Gateway {
             cfg: cfg.clone(),
             accepting: AtomicBool::new(true),
             signal: Arc::new(ShutdownSignal::default()),
-            conns: Mutex::new(HashMap::new()),
+            conns: OrderedMutex::new(ranks::WIRE_CONNS, HashMap::new()),
             refusals: std::sync::atomic::AtomicUsize::new(0),
             next_conn: AtomicU64::new(0),
             next_session: AtomicU64::new(0),
-            stats: Mutex::new(WireStats::default()),
+            stats: OrderedMutex::new(ranks::WIRE_STATS, WireStats::default()),
+            panic_next_query: AtomicBool::new(false),
         });
-        let handlers = Arc::new(Mutex::new(Vec::new()));
+        let handlers = Arc::new(OrderedMutex::new(ranks::WIRE_HANDLERS, Vec::new()));
         let accept = {
             let shared = Arc::clone(&shared);
             let handlers = Arc::clone(&handlers);
@@ -178,7 +196,16 @@ impl Gateway {
 
     /// Wire-level traffic counters.
     pub fn stats(&self) -> WireStats {
-        *self.shared.stats.lock().unwrap()
+        *self.shared.stats.lock()
+    }
+
+    /// Test hook: make the NEXT query served by any handler panic
+    /// mid-request.  One-shot; exists so the integration suite can prove
+    /// a panicking handler ends only its own connection (see
+    /// [`WireStats::handler_panics`]).
+    #[doc(hidden)]
+    pub fn inject_handler_panic(&self) {
+        self.shared.panic_next_query.store(true, Ordering::SeqCst);
     }
 
     /// Ask the gateway to stop (same effect as a remote `Shutdown`
@@ -247,10 +274,10 @@ impl Gateway {
         // half-close every live socket's read side: handlers blocked
         // between frames wake to a clean EOF; a handler mid-query still
         // writes its response first
-        for stream in self.shared.conns.lock().unwrap().values() {
+        for stream in self.shared.conns.lock().values() {
             let _ = stream.shutdown(std::net::Shutdown::Read);
         }
-        let handles: Vec<JoinHandle<()>> = self.handlers.lock().unwrap().drain(..).collect();
+        let handles: Vec<JoinHandle<()>> = self.handlers.lock().drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -268,7 +295,7 @@ impl Drop for Gateway {
 fn accept_loop(
     listener: TcpListener,
     shared: Arc<Shared>,
-    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    handlers: Arc<OrderedMutex<Vec<JoinHandle<()>>>>,
 ) {
     loop {
         let (mut stream, _peer) = match listener.accept() {
@@ -291,7 +318,7 @@ fn accept_loop(
         let _ = stream.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms)));
         let _ = stream.set_write_timeout(Some(Duration::from_millis(cfg.write_timeout_ms)));
         {
-            let mut st = shared.stats.lock().unwrap();
+            let mut st = shared.stats.lock();
             if st.open_conns() >= cfg.max_conns as u64 {
                 st.refused_conns += 1;
                 drop(st);
@@ -303,14 +330,14 @@ fn accept_loop(
         let conn_id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
         match stream.try_clone() {
             Ok(clone) => {
-                shared.conns.lock().unwrap().insert(conn_id, clone);
+                shared.conns.lock().insert(conn_id, clone);
             }
             Err(_) => {
                 // fd pressure: a connection we cannot register for the
                 // shutdown half-close is a connection we cannot reliably
                 // wake — drop it now (rebalancing the open-conns gauge)
                 // rather than risk stalling shutdown on it
-                shared.stats.lock().unwrap().closed_conns += 1;
+                shared.stats.lock().closed_conns += 1;
                 continue;
             }
         }
@@ -318,7 +345,7 @@ fn accept_loop(
         let handle = std::thread::spawn(move || {
             conn_loop(stream, conn_id, shared2);
         });
-        let mut hs = handlers.lock().unwrap();
+        let mut hs = handlers.lock();
         // opportunistic reap: finished handlers are joined here, not
         // accumulated for the gateway's whole lifetime
         hs.retain(|h| !h.is_finished());
@@ -340,7 +367,11 @@ const REFUSAL_READ_TIMEOUT: Duration = Duration::from_millis(1000);
 /// [`MAX_REFUSAL_THREADS`]) so the accept loop never blocks on a slow
 /// peer; registered in the conn registry so shutdown's half-close nudge
 /// reaches a silent one.
-fn refuse(shared: &Arc<Shared>, handlers: &Arc<Mutex<Vec<JoinHandle<()>>>>, stream: TcpStream) {
+fn refuse(
+    shared: &Arc<Shared>,
+    handlers: &Arc<OrderedMutex<Vec<JoinHandle<()>>>>,
+    stream: TcpStream,
+) {
     use std::sync::atomic::AtomicUsize;
     let refusals: &AtomicUsize = &shared.refusals;
     if refusals.fetch_add(1, Ordering::SeqCst) >= MAX_REFUSAL_THREADS {
@@ -353,15 +384,15 @@ fn refuse(shared: &Arc<Shared>, handlers: &Arc<Mutex<Vec<JoinHandle<()>>>>, stre
     let max_frame_bytes = shared.cfg.max_frame_bytes;
     let conn_id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
     if let Ok(clone) = stream.try_clone() {
-        shared.conns.lock().unwrap().insert(conn_id, clone);
+        shared.conns.lock().insert(conn_id, clone);
     }
     let shared2 = Arc::clone(shared);
     let handle = std::thread::spawn(move || {
         refuse_conn(stream, max_conns, max_frame_bytes);
-        shared2.conns.lock().unwrap().remove(&conn_id);
+        shared2.conns.lock().remove(&conn_id);
         shared2.refusals.fetch_sub(1, Ordering::SeqCst);
     });
-    handlers.lock().unwrap().push(handle);
+    handlers.lock().push(handle);
 }
 
 /// Read (and discard) the client's hello first so the busy reply is not
@@ -422,17 +453,26 @@ enum ConnEnd {
 }
 
 fn conn_loop(stream: TcpStream, conn_id: u64, shared: Arc<Shared>) {
-    let end = serve_conn(&stream, &shared);
+    // A panic inside the handler (a bug in query execution, or the
+    // injected test panic) must end exactly one connection.  Without
+    // this boundary the unwinding thread would die between the
+    // accounting below and the registry cleanup — leaking the conn
+    // entry, skewing the open-conns gauge, and (pre-`util::sync`)
+    // poisoning every lock it held for the rest of the process.
+    let end = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_conn(&stream, &shared)
+    }));
     {
-        let mut st = shared.stats.lock().unwrap();
+        let mut st = shared.stats.lock();
         st.closed_conns += 1;
         match end {
-            ConnEnd::Clean => {}
-            ConnEnd::ProtocolError => st.protocol_errors += 1,
-            ConnEnd::IdleTimeout => st.idle_timeouts += 1,
+            Ok(ConnEnd::Clean) => {}
+            Ok(ConnEnd::ProtocolError) => st.protocol_errors += 1,
+            Ok(ConnEnd::IdleTimeout) => st.idle_timeouts += 1,
+            Err(_) => st.handler_panics += 1,
         }
     }
-    shared.conns.lock().unwrap().remove(&conn_id);
+    shared.conns.lock().remove(&conn_id);
     let _ = stream.shutdown(std::net::Shutdown::Both);
 }
 
@@ -507,10 +547,15 @@ fn serve_conn(stream: &TcpStream, shared: &Shared) -> ConnEnd {
             }
         };
         let reply = match ClientMsg::from_json(&frame) {
-            Ok(ClientMsg::Query { request }) => match shared.service.call(request) {
-                Ok(response) => ServerMsg::Response { response },
-                Err(api) => ServerMsg::Error { error: WireError::Api(api) },
-            },
+            Ok(ClientMsg::Query { request }) => {
+                if shared.panic_next_query.swap(false, Ordering::SeqCst) {
+                    std::panic::panic_any("injected handler panic (test hook)");
+                }
+                match shared.service.call(request) {
+                    Ok(response) => ServerMsg::Response { response },
+                    Err(api) => ServerMsg::Error { error: WireError::Api(api) },
+                }
+            }
             Ok(ClientMsg::Stats) => {
                 ServerMsg::Stats { snapshot: Box::new(shared.service.snapshot()) }
             }

@@ -14,7 +14,6 @@
 //! deadline-shed / failed), so admission control and shedding behavior
 //! under overload are first-class results, not noise.
 
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -22,6 +21,7 @@ use anyhow::Result;
 use crate::api::{ApiError, Priority, QueryRequest};
 use crate::config::WireConfig;
 use crate::util::stats::{fmt_duration, Samples};
+use crate::util::sync::{ranks, OrderedMutex};
 
 use super::client::WireClient;
 
@@ -77,14 +77,15 @@ impl LoadGen {
             self.interactive_share
         );
         let interval = Duration::from_secs_f64(self.clients as f64 / self.rate_qps);
-        let tallies: Mutex<Vec<Tally>> = Mutex::new(Vec::new());
+        let tallies: OrderedMutex<Vec<Tally>> =
+            OrderedMutex::new(ranks::LOADGEN_TALLIES, Vec::new());
         let t0 = Instant::now();
         std::thread::scope(|scope| {
             for c in 0..self.clients {
                 let tallies = &tallies;
                 scope.spawn(move || {
                     let tally = self.drive_client(c, interval, t0);
-                    tallies.lock().unwrap().push(tally);
+                    tallies.lock().push(tally);
                 });
             }
         });
@@ -95,7 +96,7 @@ impl LoadGen {
             wall_s,
             ..LoadReport::default()
         };
-        for tally in tallies.into_inner().unwrap() {
+        for tally in tallies.into_inner() {
             report.sent += tally.sent;
             report.completed += tally.completed;
             report.cache_hits += tally.cache_hits;

@@ -14,7 +14,8 @@
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
+
+use crate::util::sync::{ranks, OrderedMutex};
 
 use anyhow::{bail, Context, Result};
 use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
@@ -40,7 +41,9 @@ use crate::runtime::manifest::Manifest;
 pub struct Runtime {
     client: PjRtClient,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    /// Ranked above the shard band: backend similarity calls can run
+    /// under a shard guard, so this lock must be acquirable there.
+    cache: OrderedMutex<HashMap<String, PjRtLoadedExecutable>>,
 }
 
 /// Build an f32 literal of the given shape from a host slice.
@@ -79,7 +82,11 @@ impl Runtime {
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(dir.as_ref())?;
         let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            client,
+            manifest,
+            cache: OrderedMutex::new(ranks::PJRT_EXEC_CACHE, HashMap::new()),
+        })
     }
 
     /// Locate the artifact directory: `$VENUS_ARTIFACTS`, else
@@ -110,7 +117,7 @@ impl Runtime {
 
     /// Compile (or fetch from cache) an entry point.
     fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.cache.lock().unwrap().contains_key(name) {
+        if self.cache.lock().contains_key(name) {
             return Ok(());
         }
         let entry = self.manifest.entry(name)?;
@@ -122,7 +129,7 @@ impl Runtime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling artifact '{name}'"))?;
-        self.cache.lock().unwrap().insert(name.to_string(), exe);
+        self.cache.lock().insert(name.to_string(), exe);
         Ok(())
     }
 
@@ -147,7 +154,7 @@ impl Runtime {
                 entry.inputs.len()
             );
         }
-        let cache = self.cache.lock().unwrap();
+        let cache = self.cache.lock();
         let exe = cache.get(name).unwrap();
         let result = exe.execute::<Literal>(inputs)?;
         let tuple = result[0][0].to_literal_sync()?;

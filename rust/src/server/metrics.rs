@@ -8,7 +8,6 @@
 //! (`accepted == completed + failed + deadline_shed` after drain) without
 //! polluting the rejection stats.
 
-use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -17,6 +16,7 @@ use crate::api::Priority;
 use crate::memory::TierStats;
 use crate::util::json::Json;
 use crate::util::stats::{fmt_bytes, fmt_duration, Samples};
+use crate::util::sync::{ranks, OrderedMutex};
 
 #[derive(Clone, Copy, Debug, Default)]
 struct LaneCounters {
@@ -43,13 +43,18 @@ struct Inner {
 /// Thread-safe metrics registry.
 #[derive(Debug)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    /// Top of the lock order: metrics are recorded after every other
+    /// guard is released, never while holding one.
+    inner: OrderedMutex<Inner>,
     started: Instant,
 }
 
 impl Default for Metrics {
     fn default() -> Self {
-        Self { inner: Mutex::new(Inner::default()), started: Instant::now() }
+        Self {
+            inner: OrderedMutex::new(ranks::SERVER_METRICS, Inner::default()),
+            started: Instant::now(),
+        }
     }
 }
 
@@ -100,29 +105,29 @@ pub struct Snapshot {
 
 impl Metrics {
     pub fn on_accepted(&self, lane: Priority) {
-        self.inner.lock().unwrap().lanes[lane.index()].accepted += 1;
+        self.inner.lock().lanes[lane.index()].accepted += 1;
     }
 
     pub fn on_rejected(&self, lane: Priority) {
-        self.inner.lock().unwrap().lanes[lane.index()].rejected += 1;
+        self.inner.lock().lanes[lane.index()].rejected += 1;
     }
 
     pub fn on_shutdown_race(&self) {
-        self.inner.lock().unwrap().shutdown += 1;
+        self.inner.lock().shutdown += 1;
     }
 
     pub fn on_failed(&self) {
-        self.inner.lock().unwrap().failed += 1;
+        self.inner.lock().failed += 1;
     }
 
     pub fn on_deadline_shed(&self, lane: Priority) {
-        self.inner.lock().unwrap().lanes[lane.index()].deadline_shed += 1;
+        self.inner.lock().lanes[lane.index()].deadline_shed += 1;
     }
 
     /// A worker popped a job off its lane (it will complete, fail, or be
     /// deadline-shed next) — decrements the live queue-depth gauge.
     pub fn on_dequeued(&self, lane: Priority) {
-        self.inner.lock().unwrap().lanes[lane.index()].dequeued += 1;
+        self.inner.lock().lanes[lane.index()].dequeued += 1;
     }
 
     pub fn on_completed(
@@ -133,7 +138,7 @@ impl Metrics {
         total_s: f64,
         frames: usize,
     ) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock();
         m.lanes[lane.index()].completed += 1;
         m.queue_wait.push(queue_wait_s);
         m.edge_latency.push(edge_s);
@@ -142,7 +147,7 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let m = self.inner.lock().unwrap();
+        let m = self.inner.lock();
         let uptime = self.started.elapsed().as_secs_f64();
         let pct = |s: &Samples, q: f64| -> Option<f64> {
             if s.is_empty() {
@@ -185,7 +190,7 @@ impl Metrics {
     /// rejected submissions were never accepted, so they don't
     /// participate.)
     pub fn conserved_after_drain(&self) -> bool {
-        let m = self.inner.lock().unwrap();
+        let m = self.inner.lock();
         let accepted: u64 = m.lanes.iter().map(|l| l.accepted).sum();
         let settled: u64 =
             m.lanes.iter().map(|l| l.completed + l.deadline_shed).sum::<u64>() + m.failed;

@@ -31,7 +31,7 @@ pub use metrics::{LaneSnapshot, Metrics, Snapshot};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -46,6 +46,7 @@ use crate::coordinator::query::{QueryEngine, QueryOutcome};
 use crate::embed::EmbedEngine;
 use crate::memory::MemoryFabric;
 use crate::net::{Link, Payload};
+use crate::util::sync::{ranks, OrderedCondvar, OrderedMutex};
 
 struct Job {
     id: u64,
@@ -57,9 +58,11 @@ struct Job {
 }
 
 /// Two bounded FIFO lanes under one condvar: interactive pops first.
+/// The lane mutex is a leaf in the lock order — nothing else is
+/// acquired while it is held.
 struct Lanes {
-    state: Mutex<LaneState>,
-    cv: Condvar,
+    state: OrderedMutex<LaneState>,
+    cv: OrderedCondvar,
     depth: [usize; 2],
 }
 
@@ -76,17 +79,17 @@ enum PushError {
 impl Lanes {
     fn new(interactive_depth: usize, batch_depth: usize) -> Self {
         Self {
-            state: Mutex::new(LaneState {
+            state: OrderedMutex::new(ranks::SERVER_LANES, LaneState {
                 queues: [VecDeque::new(), VecDeque::new()],
                 open: true,
             }),
-            cv: Condvar::new(),
+            cv: OrderedCondvar::new(),
             depth: [interactive_depth, batch_depth],
         }
     }
 
     fn push(&self, lane: usize, job: Job) -> std::result::Result<(), PushError> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         if !st.open {
             return Err(PushError::Closed);
         }
@@ -102,7 +105,7 @@ impl Lanes {
     /// Blocking pop: interactive lane first, then batch; `None` once the
     /// lanes are closed AND drained (accepted work is always finished).
     fn pop(&self) -> Option<Job> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         loop {
             for q in st.queues.iter_mut() {
                 if let Some(job) = q.pop_front() {
@@ -112,12 +115,12 @@ impl Lanes {
             if !st.open {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st);
         }
     }
 
     fn close(&self) {
-        self.state.lock().unwrap().open = false;
+        self.state.lock().open = false;
         self.cv.notify_all();
     }
 }

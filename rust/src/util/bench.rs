@@ -3,10 +3,17 @@
 //! Warm-up + timed iterations with mean / p50 / p99 reporting, plus a
 //! one-line `section` API the per-table benches use to print paper-style
 //! output.  Timings use `std::time::Instant` (monotonic).
+//!
+//! With `BENCH_JSON_DIR=<dir>` set, every `Bench` additionally appends
+//! its results to `<dir>/BENCH_<target>.json` (one JSON object per
+//! line, `<target>` = the bench binary's name) so CI can persist a
+//! machine-readable perf trajectory next to the printed tables.
 
 use std::hint::black_box;
+use std::io::Write;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::{fmt_duration, Samples};
 
 /// Result of a timed run.
@@ -30,6 +37,39 @@ impl BenchResult {
             fmt_duration(self.p99),
             self.iters
         )
+    }
+
+    /// One flat JSON object (seconds for all timings) — the unit CI's
+    /// `BENCH_*.json` artifacts are made of.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("iters".to_string(), Json::Num(self.iters as f64));
+        m.insert("mean_s".to_string(), Json::Num(self.mean));
+        m.insert("p50_s".to_string(), Json::Num(self.p50));
+        m.insert("p99_s".to_string(), Json::Num(self.p99));
+        m.insert("min_s".to_string(), Json::Num(self.min));
+        Json::Obj(m)
+    }
+}
+
+/// The bench target's name, recovered from the binary path (cargo names
+/// bench binaries `<target>-<metadata hash>`).
+fn bench_target_name() -> String {
+    let stem = std::env::args()
+        .next()
+        .and_then(|p| {
+            std::path::Path::new(&p).file_stem().map(|s| s.to_string_lossy().into_owned())
+        })
+        .unwrap_or_default();
+    match stem.rsplit_once('-') {
+        Some((base, hash))
+            if !base.is_empty() && hash.len() == 16 && hash.bytes().all(|b| b.is_ascii_hexdigit()) =>
+        {
+            base.to_string()
+        }
+        _ if stem.is_empty() => "bench".to_string(),
+        _ => stem,
     }
 }
 
@@ -95,6 +135,30 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    fn persist_json(&self) -> std::io::Result<()> {
+        let Ok(dir) = std::env::var("BENCH_JSON_DIR") else { return Ok(()) };
+        if dir.is_empty() || self.results.is_empty() {
+            return Ok(());
+        }
+        std::fs::create_dir_all(&dir)?;
+        let path =
+            std::path::Path::new(&dir).join(format!("BENCH_{}.json", bench_target_name()));
+        // append: one bench target often builds several Bench runners
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        for r in &self.results {
+            writeln!(f, "{}", r.to_json())?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        if let Err(e) = self.persist_json() {
+            eprintln!("warning: could not persist bench JSON: {e}");
+        }
+    }
 }
 
 /// Print a bench/eval section header (paper table/figure ids).
@@ -119,5 +183,27 @@ mod tests {
         assert!(r.iters > 10);
         assert!(r.mean >= 0.0);
         assert!(r.p99 >= r.p50);
+    }
+
+    #[test]
+    fn result_json_round_trips() {
+        let r = BenchResult {
+            name: "fused \"embed\" b8".to_string(),
+            iters: 42,
+            mean: 1.5e-3,
+            p50: 1.25e-3,
+            p99: 4.0e-3,
+            min: 1.0e-3,
+        };
+        let v = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "fused \"embed\" b8");
+        assert_eq!(v.get("iters").unwrap().as_usize().unwrap(), 42);
+        assert!((v.get("p99_s").unwrap().as_f64().unwrap() - 4.0e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn target_name_strips_cargo_metadata_hash() {
+        // (exercises the parsing helper; the real name comes from argv)
+        assert!(!bench_target_name().is_empty());
     }
 }

@@ -7,6 +7,7 @@ pub mod bench;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 /// L2-normalize a vector in place; returns the original norm.
 pub fn l2_normalize(v: &mut [f32]) -> f32 {

@@ -1,0 +1,480 @@
+//! Rank-ordered, poison-recovering lock layer — the one place in the
+//! tree that is allowed to touch `std::sync::{Mutex, RwLock}` (enforced
+//! by `tools/vlint` rule R2).
+//!
+//! Two failure classes motivated this layer (DESIGN.md §Static-Analysis):
+//!
+//! * **Poisoning cascades.**  `std` locks poison on a panic while held,
+//!   and every later `.lock().unwrap()` then panics too — one crashed
+//!   wire handler used to take the gateway's stats, the shutdown drain,
+//!   and eventually the process down with it.  These wrappers recover
+//!   the inner value instead (`PoisonError::into_inner`): all guarded
+//!   state here is either a plain counter/gauge, a registry whose
+//!   entries are reaped by owner threads, or protocol state that is
+//!   re-validated by its consumer, so observing a mid-panic value is
+//!   strictly better than cascading the panic.
+//!
+//! * **Undocumented lock order.**  The serving path nests up to three
+//!   lock layers (query cache → fabric shards → metrics/stats).  Every
+//!   lock in the tree now declares a numeric **rank** from the registry
+//!   in [`ranks`], and debug builds keep a per-thread stack of held
+//!   ranks: acquiring a lock whose rank is not strictly greater than
+//!   every rank already held panics immediately with both ranks named.
+//!   Inversions therefore fail deterministically in the tier-1 test run
+//!   (`[profile.dev]` keeps `debug_assertions` on) instead of deadlocking
+//!   once a year in production.  Release builds compile the bookkeeping
+//!   out entirely.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// The fabric-wide lock-rank registry.  Locks may only be acquired in
+/// strictly ascending rank order; the table below IS the documented
+/// acquisition order (mirrored in DESIGN.md §Static-Analysis).  Gaps are
+/// deliberate — future locks slot in without renumbering.
+pub mod ranks {
+    /// Serving admission lanes (`server::Lanes`) — a leaf: held only
+    /// across push/pop bookkeeping and condvar waits.
+    pub const SERVER_LANES: u32 = 10;
+    /// Gateway shutdown signal flag (`net::wire::gateway`).
+    pub const WIRE_SHUTDOWN_SIGNAL: u32 = 11;
+    /// Shared embed-pool job receiver (`ingest::pool`).
+    pub const POOL_QUEUE: u32 = 12;
+    /// Process-wide shared-backend once-cache (`backend::shared_default`).
+    pub const BACKEND_SHARED: u32 = 13;
+    /// Load-generator tally merge (`net::wire::loadgen`).
+    pub const LOADGEN_TALLIES: u32 = 15;
+    /// Semantic query cache (`api::cache`) — below the shard band: a
+    /// cache probe must never be attempted while scoring holds shards.
+    pub const QUERY_CACHE: u32 = 100;
+    /// First fabric shard.  Shard `i` has rank `SHARD_BASE + i`, so the
+    /// query path's "acquire scoped shards in ascending `StreamId`
+    /// order" rule is exactly the ascending-rank rule.
+    pub const SHARD_BASE: u32 = 200;
+    /// Cold-tier segment block cache (`memory::segment`) — above the
+    /// shard band: cold scoring runs under a shard read guard.
+    pub const COLD_BLOCK_CACHE: u32 = 1_000_000;
+    /// Durable raw-layer read-handle cache (`memory::storage::DiskRaw`)
+    /// — above the shard band: frame fetches run under shard guards.
+    pub const RAW_READ_CACHE: u32 = 1_000_010;
+    /// PJRT compiled-executable cache (`runtime::pjrt`) — above the
+    /// shard band: backend entry points may be invoked under a guard.
+    pub const PJRT_EXEC_CACHE: u32 = 1_000_015;
+    /// Per-stream ingest progress tracker (`ingest::pool`).
+    pub const STREAM_PROGRESS: u32 = 1_000_020;
+    /// Serving metrics (`server::metrics`) — the top band: counters are
+    /// updated after all retrieval locks are released.
+    pub const SERVER_METRICS: u32 = 2_000_000;
+    /// Gateway wire counters (`net::wire::gateway::WireStats`).
+    pub const WIRE_STATS: u32 = 2_000_010;
+    /// Gateway live-connection registry.
+    pub const WIRE_CONNS: u32 = 2_000_020;
+    /// Gateway handler-thread join list.
+    pub const WIRE_HANDLERS: u32 = 2_000_030;
+
+    /// Rank of fabric shard `index` (ascending `StreamId` order).  The
+    /// fabric caps streams at `u16::MAX`, so the shard band never
+    /// reaches [`COLD_BLOCK_CACHE`].
+    pub fn shard(index: usize) -> u32 {
+        SHARD_BASE + index as u32
+    }
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Ranks of every ordered lock this thread currently holds, in
+    /// acquisition order.  A Vec, not a stack discipline: guards may be
+    /// dropped out of acquisition order, so release removes the newest
+    /// matching entry rather than popping.
+    static HELD_RANKS: std::cell::RefCell<Vec<u32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+#[cfg(debug_assertions)]
+fn acquire_rank(rank: u32) {
+    HELD_RANKS.with(|cell| {
+        let mut held = cell.borrow_mut();
+        if let Some(&max) = held.iter().max() {
+            assert!(
+                rank > max,
+                "lock-rank inversion: acquiring rank {rank} while holding rank {max} \
+                 (held: {held:?}) — locks must be taken in strictly ascending rank \
+                 order, see util::sync::ranks and DESIGN.md §Static-Analysis"
+            );
+        }
+        held.push(rank);
+    });
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn acquire_rank(_rank: u32) {}
+
+#[cfg(debug_assertions)]
+fn release_rank(rank: u32) {
+    HELD_RANKS.with(|cell| {
+        let mut held = cell.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|&r| r == rank) {
+            held.remove(pos);
+        }
+    });
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn release_rank(_rank: u32) {}
+
+/// A `Mutex` with a declared lock rank and poison recovery.
+///
+/// `lock()` returns the guard directly (not a `Result`): a poisoned
+/// inner mutex is recovered, never cascaded.  Debug builds assert the
+/// per-thread rank order on every acquisition.
+pub struct OrderedMutex<T> {
+    rank: u32,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    /// `const` so ordered locks can back `static` once-caches.
+    pub const fn new(rank: u32, value: T) -> Self {
+        Self { rank, inner: Mutex::new(value) }
+    }
+
+    /// Acquire, recovering from poisoning.  Panics (debug builds only)
+    /// if `self.rank` is not strictly above every rank this thread holds.
+    pub fn lock(&self) -> OrderedMutexGuard<'_, T> {
+        acquire_rank(self.rank);
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        OrderedMutexGuard { inner: Some(inner), rank: self.rank }
+    }
+
+    /// Consume the lock, recovering the value even if poisoned.
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrderedMutex").field("rank", &self.rank).field("inner", &self.inner).finish()
+    }
+}
+
+/// Guard for [`OrderedMutex`].  The inner guard sits in an `Option`
+/// solely so [`OrderedCondvar`] can take it across a wait without
+/// running this guard's rank release.
+pub struct OrderedMutexGuard<'a, T> {
+    inner: Option<MutexGuard<'a, T>>,
+    rank: u32,
+}
+
+impl<T> Deref for OrderedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard consumed by a condvar wait")
+    }
+}
+
+impl<T> DerefMut for OrderedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard consumed by a condvar wait")
+    }
+}
+
+impl<T> Drop for OrderedMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.take().is_some() {
+            release_rank(self.rank);
+        }
+    }
+}
+
+/// An `RwLock` with a declared lock rank and poison recovery, mirroring
+/// [`OrderedMutex`].  Reader/writer distinction is unchanged from `std`.
+pub struct OrderedRwLock<T> {
+    rank: u32,
+    inner: RwLock<T>,
+}
+
+impl<T> OrderedRwLock<T> {
+    pub const fn new(rank: u32, value: T) -> Self {
+        Self { rank, inner: RwLock::new(value) }
+    }
+
+    /// Shared acquire, recovering from poisoning.
+    pub fn read(&self) -> OrderedReadGuard<'_, T> {
+        acquire_rank(self.rank);
+        let inner = self.inner.read().unwrap_or_else(PoisonError::into_inner);
+        OrderedReadGuard { inner, rank: self.rank }
+    }
+
+    /// Exclusive acquire, recovering from poisoning.
+    pub fn write(&self) -> OrderedWriteGuard<'_, T> {
+        acquire_rank(self.rank);
+        let inner = self.inner.write().unwrap_or_else(PoisonError::into_inner);
+        OrderedWriteGuard { inner, rank: self.rank }
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for OrderedRwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OrderedRwLock")
+            .field("rank", &self.rank)
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+/// Shared guard for [`OrderedRwLock`].
+pub struct OrderedReadGuard<'a, T> {
+    inner: RwLockReadGuard<'a, T>,
+    rank: u32,
+}
+
+impl<T> Deref for OrderedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> Drop for OrderedReadGuard<'_, T> {
+    fn drop(&mut self) {
+        release_rank(self.rank);
+    }
+}
+
+/// Exclusive guard for [`OrderedRwLock`].
+pub struct OrderedWriteGuard<'a, T> {
+    inner: RwLockWriteGuard<'a, T>,
+    rank: u32,
+}
+
+impl<T> Deref for OrderedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for OrderedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T> Drop for OrderedWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        release_rank(self.rank);
+    }
+}
+
+/// A `Condvar` that waits on [`OrderedMutex`] guards.
+///
+/// The waiter's rank stays registered for the whole wait: the thread is
+/// blocked and cannot acquire anything anyway, and keeping it held means
+/// the guard handed back after wake carries the same bookkeeping it went
+/// to sleep with.  Poisoning during the wait is recovered like every
+/// other acquisition in this module.
+pub struct OrderedCondvar {
+    cv: Condvar,
+}
+
+impl OrderedCondvar {
+    pub const fn new() -> Self {
+        Self { cv: Condvar::new() }
+    }
+
+    /// Block until notified; the re-acquired guard is handed back.
+    pub fn wait<'a, T>(&self, mut guard: OrderedMutexGuard<'a, T>) -> OrderedMutexGuard<'a, T> {
+        let rank = guard.rank;
+        let inner = guard.inner.take().expect("guard consumed by a condvar wait");
+        let inner = self.cv.wait(inner).unwrap_or_else(PoisonError::into_inner);
+        OrderedMutexGuard { inner: Some(inner), rank }
+    }
+
+    /// Block until notified or `dur` elapses.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: OrderedMutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (OrderedMutexGuard<'a, T>, WaitTimeoutResult) {
+        let rank = guard.rank;
+        let inner = guard.inner.take().expect("guard consumed by a condvar wait");
+        let (inner, timeout) = match self.cv.wait_timeout(inner, dur) {
+            Ok(pair) => pair,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        (OrderedMutexGuard { inner: Some(inner), rank }, timeout)
+    }
+
+    pub fn notify_one(&self) {
+        self.cv.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+}
+
+impl Default for OrderedCondvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_guards_mutation() {
+        let m = OrderedMutex::new(10, 0u64);
+        *m.lock() += 41;
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 42);
+        assert_eq!(m.rank(), 10);
+        assert_eq!(m.into_inner(), 42);
+    }
+
+    #[test]
+    fn rwlock_readers_and_writer() {
+        let l = OrderedRwLock::new(200, vec![1, 2, 3]);
+        {
+            let a = l.read();
+            assert_eq!(a.len(), 3);
+        }
+        l.write().push(4);
+        assert_eq!(*l.read(), vec![1, 2, 3, 4]);
+        assert_eq!(l.into_inner(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn poisoned_mutex_recovers_instead_of_cascading() {
+        let m = Arc::new(OrderedMutex::new(10, 7u32));
+        let m2 = Arc::clone(&m);
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("die while holding the lock");
+        });
+        assert!(t.join().is_err(), "the injected panic propagated");
+        // the poisoned state is recovered, not re-panicked
+        assert_eq!(*m.lock(), 7);
+        *m.lock() = 8;
+        assert_eq!(*m.lock(), 8);
+    }
+
+    #[test]
+    fn poisoned_rwlock_and_into_inner_recover() {
+        let l = Arc::new(OrderedRwLock::new(200, 3u32));
+        let l2 = Arc::clone(&l);
+        let t = std::thread::spawn(move || {
+            let _g = l2.write();
+            panic!("die while holding the write lock");
+        });
+        assert!(t.join().is_err());
+        assert_eq!(*l.read(), 3);
+        let l = Arc::try_unwrap(l).ok().expect("sole owner");
+        assert_eq!(l.into_inner(), 3);
+    }
+
+    #[test]
+    fn ascending_rank_acquisition_is_allowed() {
+        let low = OrderedMutex::new(100, ());
+        let shard = OrderedRwLock::new(ranks::shard(0), ());
+        let high = OrderedMutex::new(ranks::SERVER_METRICS, ());
+        let _a = low.lock();
+        let _b = shard.read();
+        let _c = high.lock();
+    }
+
+    #[test]
+    fn out_of_order_drop_keeps_the_ledger_consistent() {
+        let a = OrderedMutex::new(10, ());
+        let b = OrderedMutex::new(20, ());
+        let c = OrderedMutex::new(30, ());
+        let ga = a.lock();
+        let gb = b.lock();
+        let gc = c.lock();
+        // drop the middle guard first: release must remove rank 20, not
+        // blindly pop rank 30
+        drop(gb);
+        drop(ga);
+        drop(gc);
+        // a fresh ascending chain still works
+        let _ga = a.lock();
+        let _gc = c.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn rank_inversion_panics_deterministically_in_debug() {
+        let shard = OrderedRwLock::new(ranks::shard(1), ());
+        let cache = OrderedMutex::new(ranks::QUERY_CACHE, ());
+        let guard = shard.read();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // cache (100) under a shard guard (201): an inversion
+            let _g = cache.lock();
+        }));
+        let err = result.expect_err("inversion must panic in debug builds");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()).unwrap_or_default());
+        assert!(msg.contains("lock-rank inversion"), "panic names the inversion: {msg}");
+        drop(guard);
+        // the failed acquisition left no stale held-rank entry behind
+        let _g = cache.lock();
+    }
+
+    #[test]
+    fn condvar_wakes_and_times_out() {
+        let pair = Arc::new((OrderedMutex::new(ranks::STREAM_PROGRESS, false), OrderedCondvar::new()));
+        // timeout path
+        let (flag, cv) = (&pair.0, &pair.1);
+        let (g, timeout) = cv.wait_timeout(flag.lock(), Duration::from_millis(5));
+        assert!(timeout.timed_out());
+        assert!(!*g);
+        drop(g);
+        // notify path
+        let pair2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (flag, cv) = (&pair2.0, &pair2.1);
+            *flag.lock() = true;
+            cv.notify_all();
+        });
+        let (flag, cv) = (&pair.0, &pair.1);
+        let mut g = flag.lock();
+        while !*g {
+            let (g2, _) = cv.wait_timeout(g, Duration::from_millis(50));
+            g = g2;
+        }
+        t.join().expect("notifier thread");
+    }
+
+    #[test]
+    fn const_new_backs_a_static() {
+        static ONCE: OrderedMutex<Option<u32>> = OrderedMutex::new(ranks::BACKEND_SHARED, None);
+        let mut slot = ONCE.lock();
+        let v = *slot.get_or_insert(9);
+        assert_eq!(v, 9);
+    }
+}

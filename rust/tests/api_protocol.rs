@@ -3,7 +3,9 @@
 //! invalidation, scope isolation), deadline shedding, and priority-lane
 //! accounting — all over the real native embed backend.
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
+
+use venus::util::sync::OrderedRwLock;
 use std::time::Duration;
 
 use venus::api::{ApiError, CacheStatus, Client, Priority, QueryCache, QueryRequest};
@@ -26,7 +28,7 @@ fn seeded_fabric(d: usize, streams: usize, clusters: u64, seed: u64) -> Arc<Memo
     let mut rng = Pcg64::seeded(seed);
     for sid in 0..streams as u16 {
         let shard = fabric.shard(StreamId(sid)).unwrap();
-        let mut g = shard.write().unwrap();
+        let mut g = shard.write();
         for c in 0..clusters {
             for f in c * 4..(c + 1) * 4 {
                 g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
@@ -49,8 +51,8 @@ fn seeded_fabric(d: usize, streams: usize, clusters: u64, seed: u64) -> Arc<Memo
 }
 
 /// Append one extra cluster to a shard (advances its ingest watermark).
-fn grow_shard(memory: &Arc<RwLock<Hierarchy>>, d: usize, rng: &mut Pcg64) {
-    let mut g = memory.write().unwrap();
+fn grow_shard(memory: &Arc<OrderedRwLock<Hierarchy>>, d: usize, rng: &mut Pcg64) {
+    let mut g = memory.write();
     let start = g.frames_ingested();
     for f in start..start + 4 {
         g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();

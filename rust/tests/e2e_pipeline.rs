@@ -5,7 +5,9 @@
 //! self-contained native MEM unless a pjrt build finds artifacts — shared
 //! process-wide through `backend::shared_default`.
 
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
+
+use venus::util::sync::{ranks, OrderedRwLock};
 
 use venus::api::{ApiError, Priority, QueryRequest};
 use venus::backend::{self, EmbedBackend};
@@ -33,10 +35,11 @@ fn build_synth(duration_s: f64, seed: u64) -> VideoSynth {
 fn ingest_all(
     synth: &VideoSynth,
     cfg: &VenusConfig,
-) -> (Arc<RwLock<Hierarchy>>, venus::ingest::IngestStats) {
+) -> (Arc<OrderedRwLock<Hierarchy>>, venus::ingest::IngestStats) {
     let be = backend::shared_default().unwrap();
     let d = be.model().d_embed;
-    let memory = Arc::new(RwLock::new(
+    let memory = Arc::new(OrderedRwLock::new(
+        ranks::shard(0),
         Hierarchy::new(&cfg.memory, d, Box::new(InMemoryRaw::new(synth.config().frame_size)))
             .unwrap(),
     ));
@@ -54,7 +57,7 @@ fn ingest_all(
 fn pipeline_builds_sparse_consistent_memory() {
     let synth = build_synth(40.0, 7);
     let (memory, stats) = ingest_all(&synth, &VenusConfig::default());
-    let mem = memory.read().unwrap();
+    let mem = memory.read();
 
     assert_eq!(stats.frames, synth.total_frames());
     assert_eq!(stats.embedded, mem.len());
@@ -216,13 +219,14 @@ fn queries_succeed_while_ingestion_is_live() {
     // concurrency property: the query path reads the shared memory while
     // the pipeline's embed pool is still inserting — no deadlock, no
     // invariant violation, and late queries see a larger index.  With the
-    // RwLock'd hierarchy the readers only exclude the writer for the
+    // rank-ordered RwLock'd hierarchy the readers only exclude the writer for the
     // narrow score+select window.
     let synth = build_synth(40.0, 31);
     let cfg = VenusConfig::default();
     let be = backend::shared_default().unwrap();
     let d = be.model().d_embed;
-    let memory = Arc::new(RwLock::new(
+    let memory = Arc::new(OrderedRwLock::new(
+        ranks::shard(0),
         Hierarchy::new(
             &cfg.memory,
             d,
@@ -250,22 +254,22 @@ fn queries_succeed_while_ingestion_is_live() {
             let out = qe
                 .retrieve_with("what is happening with concept01", RetrievalMode::Akr)
                 .unwrap();
-            let len = memory.read().unwrap().len();
+            let len = memory.read().len();
             sizes.push(len);
             // selection only references archived frames
-            let ingested = memory.read().unwrap().frames_ingested();
+            let ingested = memory.read().frames_ingested();
             assert!(out.selection.frames.iter().all(|f| f.idx < ingested));
         }
     }
     pipe.finish().unwrap();
-    memory.read().unwrap().check_invariants().unwrap();
+    memory.read().check_invariants().unwrap();
     // the index grew while we were querying (mid-stream, not just at end)
     assert!(
         sizes.iter().any(|&s| s > 0),
         "index never visible mid-stream: {sizes:?}"
     );
     assert!(
-        memory.read().unwrap().len() >= *sizes.last().unwrap(),
+        memory.read().len() >= *sizes.last().unwrap(),
         "{sizes:?}"
     );
 }

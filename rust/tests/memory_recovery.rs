@@ -57,7 +57,7 @@ fn unit(rng: &mut Pcg64, d: usize) -> Vec<f32> {
 /// Fill one shard with `n` 4-frame clusters of seeded random embeddings.
 fn fill_shard(fabric: &MemoryFabric, sid: u16, n: u64, d: usize, seed: u64) {
     let shard = fabric.shard(StreamId(sid)).unwrap();
-    let mut g = shard.write().unwrap();
+    let mut g = shard.write();
     let mut rng = Pcg64::seeded(seed);
     for c in 0..n {
         for f in c * 4..(c + 1) * 4 {
@@ -107,7 +107,7 @@ fn crash_recovers_to_last_sealed_watermark() {
     // extend past the lost tail, FLUSH this time: the tail must survive
     {
         let shard = fabric.shard(StreamId(0)).unwrap();
-        let mut g = shard.write().unwrap();
+        let mut g = shard.write();
         let mut rng = Pcg64::seeded(1);
         for c in 8..10u64 {
             let v = unit(&mut rng, d);
@@ -279,7 +279,7 @@ fn eviction_under_live_queries_stays_bounded_and_correct() {
         let mut rng = Pcg64::seeded(77);
         for c in 0..150u64 {
             {
-                let mut g = shard.write().unwrap();
+                let mut g = shard.write();
                 for f in c * 2..(c + 1) * 2 {
                     g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
                 }
@@ -298,7 +298,7 @@ fn eviction_under_live_queries_stays_bounded_and_correct() {
             }
             // the acceptance bound: resident hot bytes never exceed the
             // budget, at any point of the sustained ingest
-            let hot = shard.read().unwrap().hot_bytes();
+            let hot = shard.read().hot_bytes();
             assert!(hot <= budget, "hot tier {hot} B over the {budget} B budget");
             std::thread::yield_now();
         }
@@ -315,7 +315,7 @@ fn eviction_under_live_queries_stays_bounded_and_correct() {
         let out = qe
             .retrieve_scoped_with("what happened with concept01", StreamScope::All, mode)
             .unwrap();
-        let archived = fabric.shard(StreamId(0)).unwrap().read().unwrap().frames_ingested();
+        let archived = fabric.shard(StreamId(0)).unwrap().read().frames_ingested();
         assert!(
             out.selection.frames.iter().all(|f| f.idx < archived),
             "selection referenced an unarchived frame"

@@ -6,7 +6,7 @@
 //! process).
 
 use std::net::{SocketAddr, TcpStream};
-use std::sync::{Arc, Barrier, Mutex, RwLock};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 use venus::api::{ApiError, CacheStatus, Priority, QueryRequest, QueryResponse};
@@ -18,6 +18,7 @@ use venus::memory::{
 use venus::net::wire::{read_frame, Gateway, ServerMsg, WireClient, WireError};
 use venus::server::Service;
 use venus::util::rng::Pcg64;
+use venus::util::sync::OrderedRwLock;
 use venus::video::frame::Frame;
 
 const MAX: usize = 1 << 20;
@@ -31,8 +32,8 @@ fn seeded_fabric(d: usize, streams: usize, clusters: u64, seed: u64) -> Arc<Memo
     let fabric = Arc::new(MemoryFabric::new(&MemoryConfig::default(), d, raws).unwrap());
     let mut rng = Pcg64::seeded(seed);
     for sid in 0..streams as u16 {
-        let shard: &Arc<RwLock<Hierarchy>> = fabric.shard(StreamId(sid)).unwrap();
-        let mut g = shard.write().unwrap();
+        let shard: &Arc<OrderedRwLock<Hierarchy>> = fabric.shard(StreamId(sid)).unwrap();
+        let mut g = shard.write();
         for c in 0..clusters {
             for f in c * 4..(c + 1) * 4 {
                 g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
@@ -489,4 +490,95 @@ fn malformed_frames_fail_one_connection_never_the_gateway() {
     let service = teardown(gateway, service);
     assert!(service.metrics.conserved_after_drain(), "bad frames never leak lane work");
     service.shutdown();
+}
+
+/// Per-tag robustness: every `"type"` tag the protocol defines (both
+/// directions) has a malformed-frame vector here — a frame that carries
+/// the tag but violates the envelope contract.  Client-side tags arrive
+/// broken or out of order; server-side tags arrive on the wrong
+/// direction entirely.  Each vector fails its one connection with a
+/// typed error or a close, and the gateway keeps serving afterwards.
+///
+/// vlint's R4 rule cross-checks this list against `net/wire/proto.rs`:
+/// a new envelope tag without a vector below is a lint error.
+#[test]
+fn every_envelope_tag_has_a_malformed_frame_vector() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 1, 4, 0x7a95);
+    let mut cfg = VenusConfig::default();
+    wire_cfg(&mut cfg);
+    cfg.wire.max_frame_bytes = MAX;
+    let (service, gateway) = start_gateway(&cfg, fabric, 29);
+    let addr = gateway.local_addr();
+
+    let vectors: Vec<(&str, &[u8])> = vec![
+        // client-direction tags, each violating its own contract
+        ("hello without a version", br#"{"type":"hello"}"#),
+        ("query before the handshake", br#"{"type":"query","request":{"text":"hi","scope":"all"}}"#),
+        ("stats before the handshake", br#"{"type":"stats"}"#),
+        ("ping before the handshake", br#"{"type":"ping"}"#),
+        ("shutdown before the handshake", br#"{"type":"shutdown"}"#),
+        // server-direction tags sent *to* the server: wrong direction
+        ("hello_ack from a client", br#"{"type":"hello_ack","session":1,"streams":1,"version":1}"#),
+        ("response from a client", br#"{"type":"response","response":{}}"#),
+        ("error from a client", br#"{"type":"error","error":{"scope":"protocol","detail":"x"}}"#),
+        ("pong from a client", br#"{"type":"pong"}"#),
+        ("shutdown_ack from a client", br#"{"type":"shutdown_ack"}"#),
+    ];
+    for (name, payload) in &vectors {
+        let mut s = raw_conn(addr);
+        send_raw(&mut s, &frame_bytes(payload));
+        let _ = s.shutdown(std::net::Shutdown::Write);
+        if let Ok(v) = read_frame(&mut s, MAX) {
+            let msg = ServerMsg::from_json(&v).unwrap();
+            assert!(
+                matches!(msg, ServerMsg::Error { error: WireError::Protocol(_) }),
+                "vector '{name}': expected a typed protocol error, got {msg:?}"
+            );
+        }
+        drop(s);
+        assert_healthy(addr);
+    }
+
+    let stats = gateway.stats();
+    assert!(stats.protocol_errors >= vectors.len() as u64 - 1);
+    let service = teardown(gateway, service);
+    assert!(service.metrics.conserved_after_drain());
+    service.shutdown();
+}
+
+/// Regression for the poisoning cascade: a panic inside the query
+/// handler must fail exactly that connection.  Before the gateway
+/// switched to poison-recovering locks + `catch_unwind`, the first
+/// handler panic poisoned the shared stats/conns mutexes and every
+/// later `.lock().unwrap()` — in the accept loop included — cascaded,
+/// wedging the whole gateway.
+#[test]
+fn handler_panic_fails_one_connection_never_the_gateway() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 1, 4, 0x9a71c);
+    let mut cfg = VenusConfig::default();
+    wire_cfg(&mut cfg);
+    let (service, gateway) = start_gateway(&cfg, fabric, 31);
+    let addr = gateway.local_addr();
+
+    let mut victim = WireClient::connect(addr).unwrap();
+    victim.ping().unwrap();
+    gateway.inject_handler_panic();
+    let lost = victim.query(QueryRequest::new("this query panics its handler"));
+    assert!(lost.is_err(), "the panicking handler's connection dies, got {lost:?}");
+
+    // the gateway is still alive: fresh connections handshake and serve,
+    // and the shared stats lock is readable (i.e. not poisoned-and-fatal)
+    assert_healthy(addr);
+    let stats = gateway.stats();
+    assert_eq!(stats.handler_panics, 1, "the panic is accounted, once");
+    assert!(stats.accepted_conns >= 2);
+
+    // ...and it still shuts down cleanly, with no leaked lane work (the
+    // injected panic fires before the request reaches the service)
+    let service = teardown(gateway, service);
+    assert!(service.metrics.conserved_after_drain());
+    let snap = service.shutdown();
+    assert_eq!(snap.failed, 0);
 }

@@ -1,0 +1,1112 @@
+//! vlint — Venus's repo-specific invariant linter.
+//!
+//! Clippy checks Rust; vlint checks *Venus*: the cross-file invariants
+//! this codebase promises and a generic linter cannot see.  It walks
+//! `rust/src` with a hand-written Rust-token lexer (comments, strings,
+//! raw strings, char-vs-lifetime — no syn, no proc-macro, no deps) and
+//! enforces five rules:
+//!
+//!   R1  No `.unwrap()` / `.expect()` / `panic!` / `unreachable!` in
+//!       non-test code under `net/`, `server/`, `memory/`, `api/` — the
+//!       serving hot paths return typed errors.  (`unwrap_or*`,
+//!       `assert!`, indexing, and `std::panic::panic_any` in test hooks
+//!       are fine: the rule targets the panic-on-Err/None family.)
+//!   R2  Lock discipline: every shared lock goes through
+//!       `util::sync::{OrderedMutex, OrderedRwLock, OrderedCondvar}`
+//!       (poison-recovering, rank-checked in debug builds).  Any bare
+//!       `Mutex` / `RwLock` / `Condvar` identifier outside
+//!       `util/sync.rs` is an error.
+//!   R3  Config-key hygiene: every `[section] key` string read in
+//!       `config/mod.rs` must be declared in `KNOWN_KEYS` (the
+//!       unknown-key rejection path), every `KNOWN_KEYS` entry must be
+//!       read, and every entry must be documented in DESIGN.md (as a
+//!       backticked `` `section.key` ``).
+//!   R4  Wire-protocol coverage: every `"type"` envelope tag built via
+//!       `tagged("...")` in `net/wire/proto.rs` must have a
+//!       malformed-frame vector in `rust/tests/wire_protocol.rs`
+//!       containing the literal `"type":"<tag>"`.
+//!   R5  No `println!` / `process::exit` outside `cli/` (examples and
+//!       benches live outside `rust/src`): library code reports through
+//!       return values, diagnostics go to stderr.
+//!
+//! Violations resolve against the checked-in `vlint.toml` waiver file;
+//! each waiver names one (rule, file) pair and carries a one-line
+//! justification.  Waivers that match nothing are *errors* (staleness),
+//! and R1/R2 waivers in the hot-path directories are rejected outright:
+//! the panic and lock contracts there are not waivable.
+//!
+//! Test code is exempt everywhere: items annotated `#[test]` /
+//! `#[cfg(test)]` (but not `#[cfg(not(test))]`) are masked out before
+//! the rules run.
+//!
+//! Usage: `vlint [--root DIR] [--waivers FILE] [--design FILE]
+//!         [--proto-tests FILE]` — run from the repo root (`make lint`
+//!         does).  Exit 0 clean, 1 on violations, 2 on usage/IO errors.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+// --------------------------------------------------------------------
+// Lexer
+// --------------------------------------------------------------------
+
+/// One Rust token, as coarse as the rules need.  String literals keep
+/// their (uncooked) contents; numbers and chars keep nothing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Tok {
+    Ident(String),
+    Str(String),
+    Char,
+    Lifetime,
+    Num,
+    Punct(u8),
+}
+
+#[derive(Clone, Debug)]
+struct Token {
+    tok: Tok,
+    line: u32,
+}
+
+impl Token {
+    fn is_punct(&self, c: u8) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+
+    fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_char(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Tokenize Rust source.  Comments (line, nested block, doc) vanish;
+/// string/char/lifetime/number forms are recognized so their contents
+/// can never masquerade as identifiers.  Unterminated forms lex to the
+/// end of input rather than erroring: a lint pass must never die on the
+/// file it is judging.
+fn lex(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            let ident = &src[start..i];
+            // string-literal prefixes: r"", r#""#, b"", br#""#, rb…
+            let raw = matches!(ident, "r" | "br" | "rb");
+            let bytes_only = ident == "b";
+            if raw && i < n && (b[i] == b'"' || b[i] == b'#') {
+                let mut hashes = 0usize;
+                let mut j = i;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == b'"' {
+                    j += 1;
+                    let body_start = j;
+                    let term = format!("\"{}", "#".repeat(hashes));
+                    let end = src[body_start..].find(&term).map(|p| body_start + p).unwrap_or(n);
+                    let body = &src[body_start..end];
+                    toks.push(Token { tok: Tok::Str(body.to_string()), line });
+                    line += body.bytes().filter(|&x| x == b'\n').count() as u32;
+                    i = (end + term.len()).min(n);
+                    continue;
+                }
+                // `r` / `br` not actually starting a raw string: plain ident
+            }
+            if bytes_only && i < n && b[i] == b'"' {
+                let (tok, nl, next) = lex_quoted(src, i, line);
+                toks.push(tok);
+                line = nl;
+                i = next;
+                continue;
+            }
+            toks.push(Token { tok: Tok::Ident(ident.to_string()), line });
+        } else if c == b'"' {
+            let (tok, nl, next) = lex_quoted(src, i, line);
+            toks.push(tok);
+            line = nl;
+            i = next;
+        } else if c == b'\'' {
+            // lifetime ('a not followed by ') vs char literal ('a', '\n')
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_char(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' {
+                    toks.push(Token { tok: Tok::Char, line });
+                    i = j + 1;
+                } else {
+                    toks.push(Token { tok: Tok::Lifetime, line });
+                    i = j;
+                }
+            } else {
+                let mut j = i + 1;
+                if j < n && b[j] == b'\\' {
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                toks.push(Token { tok: Tok::Char, line });
+                i = (j + 1).min(n);
+            }
+        } else if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_ident_char(b[j]) {
+                j += 1;
+            }
+            // a fraction dot belongs to the number ONLY when a digit
+            // follows — `pair.0.unwrap()` must stay three tokens so R1
+            // still sees the `.unwrap`
+            if j < n && b[j] == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_ident_char(b[j]) {
+                    j += 1;
+                }
+            }
+            // exponent sign: `1e-3`
+            if j < n
+                && (b[j] == b'+' || b[j] == b'-')
+                && matches!(b[j - 1], b'e' | b'E')
+                && j + 1 < n
+                && b[j + 1].is_ascii_digit()
+            {
+                j += 1;
+                while j < n && is_ident_char(b[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Token { tok: Tok::Num, line });
+            i = j;
+        } else {
+            toks.push(Token { tok: Tok::Punct(c), line });
+            i += 1;
+        }
+    }
+    toks
+}
+
+/// Lex a `"…"` (or `b"…"`) literal starting at the opening quote.
+/// Returns (token, updated line, index past the closing quote).
+fn lex_quoted(src: &str, i: usize, mut line: u32) -> (Token, u32, usize) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let start_line = line;
+    let mut j = i + 1;
+    let mut body = String::new();
+    while j < n && b[j] != b'"' {
+        if b[j] == b'\\' && j + 1 < n {
+            body.push_str(&src[j..(j + 2).min(n)]);
+            j += 2;
+        } else {
+            if b[j] == b'\n' {
+                line += 1;
+            }
+            body.push(b[j] as char);
+            j += 1;
+        }
+    }
+    (Token { tok: Tok::Str(body), line: start_line }, line, (j + 1).min(n))
+}
+
+// --------------------------------------------------------------------
+// Test-region masking
+// --------------------------------------------------------------------
+
+/// Scan an attribute starting at `toks[i] == '#'`, `toks[i+1] == '['`.
+/// Returns (index of the closing `]`, whether the attribute marks test
+/// code).  `#[cfg(not(test))]` is *production* code.
+fn scan_attr(toks: &[Token], i: usize) -> (usize, bool) {
+    let mut depth = 0usize;
+    let mut has_test = false;
+    let mut has_not = false;
+    let mut j = i + 1;
+    while j < toks.len() {
+        match &toks[j].tok {
+            Tok::Punct(b'[') => depth += 1,
+            Tok::Punct(b']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return (j, has_test && !has_not);
+                }
+            }
+            Tok::Ident(s) if s == "test" => has_test = true,
+            Tok::Ident(s) if s == "not" => has_not = true,
+            _ => {}
+        }
+        j += 1;
+    }
+    (toks.len().saturating_sub(1), false)
+}
+
+/// `mask[k] == true` ⇔ token `k` lives in a `#[test]` / `#[cfg(test)]`
+/// item (the whole following item: attribute through the matching
+/// closing brace, or the `;` for brace-less items).
+fn test_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        let starts_attr =
+            toks[i].is_punct(b'#') && i + 1 < toks.len() && toks[i + 1].is_punct(b'[');
+        if !starts_attr {
+            i += 1;
+            continue;
+        }
+        let (end, is_test) = scan_attr(toks, i);
+        if !is_test {
+            i = end + 1;
+            continue;
+        }
+        // swallow any further attributes stacked on the same item
+        let mut j = end + 1;
+        while j + 1 < toks.len() && toks[j].is_punct(b'#') && toks[j + 1].is_punct(b'[') {
+            let (e, _) = scan_attr(toks, j);
+            j = e + 1;
+        }
+        // the item body: to the matching `}` or a top-level `;`.  A `}`
+        // with no `{` open means the attribute sat on a field/variant
+        // and the enclosing item just closed — stop before it.
+        let mut brace = 0u32;
+        let mut include_j = true;
+        while j < toks.len() {
+            match &toks[j].tok {
+                Tok::Punct(b'{') => brace += 1,
+                Tok::Punct(b'}') => {
+                    if brace == 0 {
+                        include_j = false;
+                        break;
+                    }
+                    brace -= 1;
+                    if brace == 0 {
+                        break;
+                    }
+                }
+                Tok::Punct(b';') if brace == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let stop = if include_j { (j + 1).min(toks.len()) } else { j };
+        for m in &mut mask[i..stop] {
+            *m = true;
+        }
+        i = stop;
+    }
+    mask
+}
+
+// --------------------------------------------------------------------
+// Violations
+// --------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct Violation {
+    rule: &'static str,
+    /// Repo-relative path, forward slashes.
+    path: String,
+    line: u32,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Directories under `rust/src/` where R1's panic ban applies.
+const R1_SCOPE: [&str; 4] = ["net/", "server/", "memory/", "api/"];
+
+fn in_r1_scope(rel: &str) -> bool {
+    R1_SCOPE.iter().any(|d| rel.starts_with(d))
+}
+
+// --------------------------------------------------------------------
+// R1 + R2 + R5: the per-file token rules
+// --------------------------------------------------------------------
+
+/// Run the per-file rules over one `rust/src` file.  `rel` is the path
+/// relative to `rust/src` (forward slashes).
+fn check_tokens(rel: &str, toks: &[Token], mask: &[bool]) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let path = format!("rust/src/{rel}");
+    let hot = in_r1_scope(rel);
+    let is_sync = rel == "util/sync.rs";
+    let in_cli = rel.starts_with("cli/");
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let Some(id) = t.ident() else { continue };
+        let prev = |k: usize| i.checked_sub(k).map(|p| &toks[p]);
+        let next = i + 1 < toks.len();
+        if hot {
+            if matches!(id, "unwrap" | "expect") && prev(1).is_some_and(|p| p.is_punct(b'.')) {
+                out.push(Violation {
+                    rule: "R1",
+                    path: path.clone(),
+                    line: t.line,
+                    msg: format!(
+                        ".{id}() in a serving hot path — return a typed error \
+                         (or use the poison-recovering util::sync guards)"
+                    ),
+                });
+            }
+            if matches!(id, "panic" | "unreachable") && next && toks[i + 1].is_punct(b'!') {
+                out.push(Violation {
+                    rule: "R1",
+                    path: path.clone(),
+                    line: t.line,
+                    msg: format!("{id}! in a serving hot path — return a typed error"),
+                });
+            }
+        }
+        if !is_sync && matches!(id, "Mutex" | "RwLock" | "Condvar") {
+            out.push(Violation {
+                rule: "R2",
+                path: path.clone(),
+                line: t.line,
+                msg: format!(
+                    "raw std::sync::{id} — use util::sync::Ordered{id} with a declared \
+                     rank (see util::sync::ranks)"
+                ),
+            });
+        }
+        if !in_cli {
+            if id == "println" && next && toks[i + 1].is_punct(b'!') {
+                out.push(Violation {
+                    rule: "R5",
+                    path: path.clone(),
+                    line: t.line,
+                    msg: "println! outside cli/ — return values or eprintln! for diagnostics"
+                        .to_string(),
+                });
+            }
+            if id == "exit"
+                && prev(1).is_some_and(|p| p.is_punct(b':'))
+                && prev(2).is_some_and(|p| p.is_punct(b':'))
+                && prev(3).and_then(|p| p.ident()) == Some("process")
+            {
+                out.push(Violation {
+                    rule: "R5",
+                    path: path.clone(),
+                    line: t.line,
+                    msg: "process::exit outside cli/ — bubble a Result to main".to_string(),
+                });
+            }
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------------------
+// R3: config-key hygiene
+// --------------------------------------------------------------------
+
+const CONFIG_ACCESSORS: [&str; 5] = ["f64_or", "usize_or", "bool_or", "str_or", "get"];
+
+/// Cross-check `config/mod.rs` against itself and DESIGN.md: reads vs
+/// the `KNOWN_KEYS` declaration vs the documented key table.
+fn check_config(toks: &[Token], mask: &[bool], design: &str) -> Vec<Violation> {
+    let path = "rust/src/config/mod.rs";
+    let mut known: Vec<(String, u32)> = Vec::new();
+    let mut reads: Vec<(String, u32)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if mask[i] {
+            i += 1;
+            continue;
+        }
+        // the declaration: `const KNOWN_KEYS: … = &[ "…", … ];`
+        if toks[i].ident() == Some("KNOWN_KEYS")
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct(b':')
+        {
+            let mut j = i + 1;
+            while j < toks.len() && !toks[j].is_punct(b'=') {
+                j += 1;
+            }
+            while j < toks.len() && !toks[j].is_punct(b';') {
+                if let Tok::Str(s) = &toks[j].tok {
+                    known.push((s.clone(), toks[j].line));
+                }
+                j += 1;
+            }
+            i = j + 1;
+            continue;
+        }
+        // a read: `accessor("section.key", …)` with a literal first arg
+        if let Some(id) = toks[i].ident() {
+            if CONFIG_ACCESSORS.contains(&id)
+                && i + 2 < toks.len()
+                && toks[i + 1].is_punct(b'(')
+            {
+                if let Tok::Str(s) = &toks[i + 2].tok {
+                    reads.push((s.clone(), toks[i + 2].line));
+                }
+            }
+        }
+        i += 1;
+    }
+    let known_set: BTreeSet<&str> = known.iter().map(|(k, _)| k.as_str()).collect();
+    let read_set: BTreeSet<&str> = reads.iter().map(|(k, _)| k.as_str()).collect();
+    let mut out = Vec::new();
+    for (key, line) in &reads {
+        if !known_set.contains(key.as_str()) {
+            out.push(Violation {
+                rule: "R3",
+                path: path.to_string(),
+                line: *line,
+                msg: format!(
+                    "config key '{key}' is read but not declared in KNOWN_KEYS \
+                     (the unknown-key rejection would never accept it)"
+                ),
+            });
+        }
+    }
+    for (key, line) in &known {
+        if !design.contains(&format!("`{key}`")) {
+            out.push(Violation {
+                rule: "R3",
+                path: path.to_string(),
+                line: *line,
+                msg: format!("config key '{key}' is not documented in DESIGN.md (`{key}`)"),
+            });
+        }
+        if !read_set.contains(key.as_str()) {
+            out.push(Violation {
+                rule: "R3",
+                path: path.to_string(),
+                line: *line,
+                msg: format!("KNOWN_KEYS entry '{key}' is never read — stale declaration"),
+            });
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------------------
+// R4: wire-protocol tag coverage
+// --------------------------------------------------------------------
+
+/// Every `tagged("…")` envelope tag in proto.rs needs a malformed-frame
+/// vector (the literal `"type":"<tag>"`) in the wire integration suite.
+fn check_proto(toks: &[Token], mask: &[bool], wire_tests: &str) -> Vec<Violation> {
+    let mut tags: Vec<(String, u32)> = Vec::new();
+    let mut seen = BTreeSet::new();
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] || t.ident() != Some("tagged") {
+            continue;
+        }
+        if i + 2 < toks.len() && toks[i + 1].is_punct(b'(') {
+            if let Tok::Str(s) = &toks[i + 2].tok {
+                if seen.insert(s.clone()) {
+                    tags.push((s.clone(), toks[i + 2].line));
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (tag, line) in tags {
+        if !wire_tests.contains(&format!("\"type\":\"{tag}\"")) {
+            out.push(Violation {
+                rule: "R4",
+                path: "rust/src/net/wire/proto.rs".to_string(),
+                line,
+                msg: format!(
+                    "envelope tag '{tag}' has no malformed-frame vector in \
+                     rust/tests/wire_protocol.rs (need a literal \"type\":\"{tag}\" case)"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------------------
+// Waivers
+// --------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct Waiver {
+    rule: String,
+    path: String,
+    reason: String,
+    line: u32,
+}
+
+/// Parse the `vlint.toml` waiver file: `[[waiver]]` entries with
+/// `rule = "…"`, `path = "…"`, `reason = "…"` string fields.  (A tiny
+/// purpose-built parser — the format is fixed, not general TOML.)
+fn parse_waivers(text: &str) -> Result<Vec<Waiver>, String> {
+    let mut out: Vec<Waiver> = Vec::new();
+    let mut cur: Option<(Waiver, u32)> = None;
+    let finish = |cur: Option<(Waiver, u32)>, out: &mut Vec<Waiver>| -> Result<(), String> {
+        if let Some((w, line)) = cur {
+            if w.rule.is_empty() || w.path.is_empty() {
+                return Err(format!("vlint.toml:{line}: waiver needs rule and path"));
+            }
+            if w.reason.trim().is_empty() {
+                return Err(format!(
+                    "vlint.toml:{line}: waiver for {} on {} has no justification \
+                     (a one-line reason is required)",
+                    w.rule, w.path
+                ));
+            }
+            out.push(w);
+        }
+        Ok(())
+    };
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx as u32 + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[waiver]]" {
+            finish(cur.take(), &mut out)?;
+            cur = Some((
+                Waiver {
+                    rule: String::new(),
+                    path: String::new(),
+                    reason: String::new(),
+                    line: lineno,
+                },
+                lineno,
+            ));
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("vlint.toml:{lineno}: expected `key = \"value\"`, got: {line}"));
+        };
+        let value = value.trim();
+        if !(value.starts_with('"') && value.ends_with('"') && value.len() >= 2) {
+            return Err(format!("vlint.toml:{lineno}: value must be a quoted string"));
+        }
+        let value = &value[1..value.len() - 1];
+        let Some((w, _)) = cur.as_mut() else {
+            return Err(format!("vlint.toml:{lineno}: field outside a [[waiver]] block"));
+        };
+        match key.trim() {
+            "rule" => w.rule = value.to_string(),
+            "path" => w.path = value.to_string(),
+            "reason" => w.reason = value.to_string(),
+            other => return Err(format!("vlint.toml:{lineno}: unknown field '{other}'")),
+        }
+    }
+    finish(cur.take(), &mut out)?;
+    Ok(out)
+}
+
+/// Resolve violations against the waiver list.  Returns the surviving
+/// violations plus configuration errors (stale waivers, and R1/R2
+/// waivers in the hot-path directories, which are never allowed).
+fn apply_waivers(
+    violations: Vec<Violation>,
+    waivers: &[Waiver],
+) -> (Vec<Violation>, Vec<String>) {
+    let mut errors = Vec::new();
+    for w in waivers {
+        if matches!(w.rule.as_str(), "R1" | "R2") {
+            let rel = w.path.strip_prefix("rust/src/").unwrap_or(&w.path);
+            if in_r1_scope(rel) {
+                errors.push(format!(
+                    "vlint.toml:{}: {} waiver on {} rejected — the panic/lock contract \
+                     in net/, server/, memory/, api/ is not waivable",
+                    w.line, w.rule, w.path
+                ));
+            }
+        }
+    }
+    let mut used = vec![false; waivers.len()];
+    let surviving: Vec<Violation> = violations
+        .into_iter()
+        .filter(|v| {
+            for (i, w) in waivers.iter().enumerate() {
+                if w.rule == v.rule && w.path == v.path {
+                    used[i] = true;
+                    return false;
+                }
+            }
+            true
+        })
+        .collect();
+    for (i, w) in waivers.iter().enumerate() {
+        if !used[i] {
+            errors.push(format!(
+                "vlint.toml:{}: stale waiver — {} on {} matches no violation; delete it",
+                w.line, w.rule, w.path
+            ));
+        }
+    }
+    (surviving, errors)
+}
+
+// --------------------------------------------------------------------
+// Driver
+// --------------------------------------------------------------------
+
+struct Options {
+    root: PathBuf,
+    waivers: Option<PathBuf>,
+    design: Option<PathBuf>,
+    proto_tests: Option<PathBuf>,
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> =
+        entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn read(path: &Path) -> Result<String, String> {
+    std::fs::read_to_string(path).map_err(|e| format!("reading {}: {e}", path.display()))
+}
+
+/// Run the whole pass.  Returns (files checked, surviving violations,
+/// configuration errors).
+fn run(opts: &Options) -> Result<(usize, Vec<Violation>, Vec<String>), String> {
+    let src_root = opts.root.join("rust/src");
+    let design_path =
+        opts.design.clone().unwrap_or_else(|| opts.root.join("DESIGN.md"));
+    let proto_tests_path = opts
+        .proto_tests
+        .clone()
+        .unwrap_or_else(|| opts.root.join("rust/tests/wire_protocol.rs"));
+    let waiver_path = opts.waivers.clone().unwrap_or_else(|| opts.root.join("vlint.toml"));
+
+    let design = read(&design_path)?;
+    let wire_tests = read(&proto_tests_path)?;
+    let waivers = if waiver_path.exists() {
+        parse_waivers(&read(&waiver_path)?)?
+    } else {
+        Vec::new()
+    };
+
+    let mut files = Vec::new();
+    collect_rs_files(&src_root, &mut files)?;
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", src_root.display()));
+    }
+
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .map_err(|_| "path outside src root".to_string())?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = read(path)?;
+        let toks = lex(&src);
+        let mask = test_mask(&toks);
+        violations.extend(check_tokens(&rel, &toks, &mask));
+        if rel == "config/mod.rs" {
+            violations.extend(check_config(&toks, &mask, &design));
+        }
+        if rel == "net/wire/proto.rs" {
+            violations.extend(check_proto(&toks, &mask, &wire_tests));
+        }
+    }
+    let (surviving, errors) = apply_waivers(violations, &waivers);
+    Ok((files.len(), surviving, errors))
+}
+
+fn parse_args(args: &[String]) -> Result<Options, String> {
+    let mut opts = Options {
+        root: PathBuf::from("."),
+        waivers: None,
+        design: None,
+        proto_tests: None,
+    };
+    let mut i = 0usize;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        let value = |i: usize| -> Result<PathBuf, String> {
+            args.get(i + 1)
+                .map(PathBuf::from)
+                .ok_or_else(|| format!("{flag} needs a value"))
+        };
+        match flag {
+            "--root" => opts.root = value(i)?,
+            "--waivers" => opts.waivers = Some(value(i)?),
+            "--design" => opts.design = Some(value(i)?),
+            "--proto-tests" => opts.proto_tests = Some(value(i)?),
+            other => return Err(format!("unknown flag '{other}' (see the crate docs)")),
+        }
+        i += 2;
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = match parse_args(&args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("vlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    match run(&opts) {
+        Ok((nfiles, violations, errors)) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            for e in &errors {
+                println!("{e}");
+            }
+            if violations.is_empty() && errors.is_empty() {
+                println!("vlint: {nfiles} files clean");
+                ExitCode::SUCCESS
+            } else {
+                println!(
+                    "vlint: {} violation(s), {} waiver error(s) across {nfiles} files",
+                    violations.len(),
+                    errors.len()
+                );
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("vlint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Fixture tests: one violating + one clean snippet per rule, waiver
+// resolution, and staleness.
+// --------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(rel: &str, src: &str) -> Vec<Violation> {
+        let toks = lex(src);
+        let mask = test_mask(&toks);
+        check_tokens(rel, &toks, &mask)
+    }
+
+    fn rules(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    // ---------------- lexer ----------------
+
+    #[test]
+    fn lexer_skips_comments_and_strings() {
+        let toks = lex(concat!(
+            "// unwrap in a comment\n",
+            "/* panic! in /* nested */ block */\n",
+            "let s = \"call .unwrap() here\";\n",
+            "let r = r#\"Mutex::new\"#;\n",
+        ));
+        assert!(!toks.iter().any(|t| t.ident() == Some("unwrap")));
+        assert!(!toks.iter().any(|t| t.ident() == Some("Mutex")));
+        // but the string CONTENTS are retained for the rules that need them
+        assert!(toks.iter().any(|t| matches!(&t.tok, Tok::Str(s) if s.contains("Mutex"))));
+    }
+
+    #[test]
+    fn lexer_keeps_tuple_field_unwrap_visible() {
+        // `pair.0.unwrap()`: the `0.` must not swallow the method dot
+        let toks = lex("let x = pair.0.unwrap();");
+        let idx = toks.iter().position(|t| t.ident() == Some("unwrap")).unwrap();
+        assert!(toks[idx - 1].is_punct(b'.'));
+    }
+
+    #[test]
+    fn lexer_separates_lifetimes_from_chars() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert_eq!(toks.iter().filter(|t| t.tok == Tok::Lifetime).count(), 2);
+        assert_eq!(toks.iter().filter(|t| t.tok == Tok::Char).count(), 1);
+    }
+
+    #[test]
+    fn lexer_tracks_lines() {
+        let toks = lex("a\n\nb\n");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 3);
+    }
+
+    // ---------------- R1 ----------------
+
+    #[test]
+    fn r1_flags_the_panic_family_in_hot_paths() {
+        let src = r#"
+            fn f(x: Option<u32>) -> u32 {
+                let v = x.unwrap();
+                let w = compute().expect("boom");
+                if v > w { panic!("no"); }
+                unreachable!()
+            }
+        "#;
+        let v = check("net/wire/gateway.rs", src);
+        assert_eq!(rules(&v), vec!["R1", "R1", "R1", "R1"]);
+    }
+
+    #[test]
+    fn r1_allows_recovery_combinators_and_test_code() {
+        let src = r#"
+            fn f(x: Option<u32>) -> u32 {
+                std::panic::panic_any("test hook");
+                x.unwrap_or_else(|| 7) + x.unwrap_or_default()
+            }
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn g() { None::<u32>.unwrap(); panic!("fine in tests"); }
+            }
+        "#;
+        assert!(check("memory/fabric.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r1_ignores_files_outside_the_hot_dirs() {
+        let v = check("coordinator/query.rs", "fn f() { x.unwrap(); }");
+        assert!(v.is_empty());
+    }
+
+    // ---------------- R2 ----------------
+
+    #[test]
+    fn r2_flags_raw_locks_everywhere_but_sync() {
+        let src = "use std::sync::Mutex;\nstatic L: RwLock<u8> = RwLock::new(0);";
+        let v = check("coordinator/query.rs", src);
+        assert_eq!(rules(&v), vec!["R2", "R2", "R2"]);
+        assert!(check("util/sync.rs", src).is_empty(), "the sync layer itself is exempt");
+    }
+
+    #[test]
+    fn r2_accepts_the_ordered_wrappers() {
+        let src = "use crate::util::sync::{OrderedMutex, OrderedRwLock, OrderedCondvar};";
+        assert!(check("server/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r2_skips_cfg_test_items_but_not_cfg_not_test() {
+        let test_only = "#[cfg(test)]\nmod tests { use std::sync::Mutex; }";
+        assert!(check("api/cache.rs", test_only).is_empty());
+        let prod = "#[cfg(not(test))]\nfn f() { let m = Mutex::new(0); }";
+        assert_eq!(rules(&check("api/cache.rs", prod)), vec!["R2"]);
+    }
+
+    // ---------------- R3 ----------------
+
+    const CONFIG_FIXTURE: &str = r#"
+        const KNOWN_KEYS: &[&str] = &["a.x", "a.y"];
+        fn load(d: &TomlDoc) {
+            let _ = d.f64_or("a.x", 0.0);
+            let _ = d.usize_or("a.y", 1);
+        }
+    "#;
+
+    fn r3(src: &str, design: &str) -> Vec<Violation> {
+        let toks = lex(src);
+        let mask = test_mask(&toks);
+        check_config(&toks, &mask, design)
+    }
+
+    #[test]
+    fn r3_clean_when_reads_known_and_design_agree() {
+        assert!(r3(CONFIG_FIXTURE, "table: `a.x` and `a.y`").is_empty());
+    }
+
+    #[test]
+    fn r3_flags_reads_missing_from_known_keys() {
+        let src = r#"
+            const KNOWN_KEYS: &[&str] = &["a.x"];
+            fn load(d: &TomlDoc) {
+                let _ = d.f64_or("a.x", 0.0);
+                let _ = d.bool_or("a.ghost", false);
+            }
+        "#;
+        let v = r3(src, "`a.x`");
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("a.ghost"));
+    }
+
+    #[test]
+    fn r3_flags_undocumented_and_unread_keys() {
+        let src = r#"
+            const KNOWN_KEYS: &[&str] = &["a.x", "a.stale"];
+            fn load(d: &TomlDoc) { let _ = d.f64_or("a.x", 0.0); }
+        "#;
+        let v = r3(src, "`a.x` only");
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().any(|x| x.msg.contains("not documented")));
+        assert!(v.iter().any(|x| x.msg.contains("never read")));
+    }
+
+    // ---------------- R4 ----------------
+
+    const PROTO_FIXTURE: &str = r#"
+        fn to_json(&self) -> Json {
+            let m = tagged("hello");
+            let e = tagged("error");
+        }
+    "#;
+
+    fn r4(proto: &str, tests: &str) -> Vec<Violation> {
+        let toks = lex(proto);
+        let mask = test_mask(&toks);
+        check_proto(&toks, &mask, tests)
+    }
+
+    #[test]
+    fn r4_requires_a_vector_per_tag() {
+        let tests = r##"send(br#"{"type":"hello"}"#);"##;
+        let v = r4(PROTO_FIXTURE, tests);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].msg.contains("'error'"));
+    }
+
+    #[test]
+    fn r4_clean_when_every_tag_is_covered() {
+        let tests = r##"
+            send(br#"{"type":"hello"}"#);
+            send(br#"{"type":"error","error":{}}"#);
+        "##;
+        assert!(r4(PROTO_FIXTURE, tests).is_empty());
+    }
+
+    // ---------------- R5 ----------------
+
+    #[test]
+    fn r5_flags_prints_and_exits_outside_cli() {
+        let src = "fn f() { println!(\"hi\"); std::process::exit(1); }";
+        assert_eq!(rules(&check("server/mod.rs", src)), vec!["R5", "R5"]);
+        assert!(check("cli/mod.rs", src).is_empty(), "cli/ may print and exit");
+    }
+
+    #[test]
+    fn r5_allows_eprintln_diagnostics() {
+        assert!(check("eval/runner.rs", "fn f() { eprintln!(\"warn\"); }").is_empty());
+    }
+
+    // ---------------- waivers ----------------
+
+    const WAIVER_FIXTURE: &str = r#"
+        # justified waivers
+        [[waiver]]
+        rule = "R5"
+        path = "rust/src/util/bench.rs"
+        reason = "bench harness prints paper tables by design"
+    "#;
+
+    fn fake(rule: &'static str, path: &str) -> Violation {
+        Violation { rule, path: path.to_string(), line: 1, msg: "x".to_string() }
+    }
+
+    #[test]
+    fn waivers_suppress_matching_violations() {
+        let ws = parse_waivers(WAIVER_FIXTURE).unwrap();
+        let (left, errors) = apply_waivers(
+            vec![fake("R5", "rust/src/util/bench.rs"), fake("R5", "rust/src/eval/runner.rs")],
+            &ws,
+        );
+        assert_eq!(left.len(), 1, "only the un-waived violation survives");
+        assert_eq!(left[0].path, "rust/src/eval/runner.rs");
+        assert!(errors.is_empty());
+    }
+
+    #[test]
+    fn stale_waivers_are_errors() {
+        let ws = parse_waivers(WAIVER_FIXTURE).unwrap();
+        let (left, errors) = apply_waivers(Vec::new(), &ws);
+        assert!(left.is_empty());
+        assert_eq!(errors.len(), 1);
+        assert!(errors[0].contains("stale waiver"));
+    }
+
+    #[test]
+    fn hot_path_lock_and_panic_waivers_are_rejected() {
+        for rule in ["R1", "R2"] {
+            let toml = format!(
+                "[[waiver]]\nrule = \"{rule}\"\npath = \"rust/src/net/wire/gateway.rs\"\n\
+                 reason = \"tempting but forbidden\"\n"
+            );
+            let ws = parse_waivers(&toml).unwrap();
+            let (_, errors) =
+                apply_waivers(vec![fake("R1", "rust/src/net/wire/gateway.rs")], &ws);
+            assert!(
+                errors.iter().any(|e| e.contains("not waivable")),
+                "{rule} hot-path waiver must be rejected: {errors:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn waivers_without_a_reason_fail_to_parse() {
+        let toml = "[[waiver]]\nrule = \"R5\"\npath = \"rust/src/main.rs\"\nreason = \"  \"\n";
+        let err = parse_waivers(toml).unwrap_err();
+        assert!(err.contains("justification"), "{err}");
+    }
+
+    #[test]
+    fn unknown_waiver_fields_fail_to_parse() {
+        let toml = "[[waiver]]\nrule = \"R5\"\npath = \"x\"\nseverity = \"low\"\n";
+        assert!(parse_waivers(toml).is_err());
+    }
+}
