@@ -14,7 +14,7 @@
 #   3. `cargo test --features pjrt` — runs the cross-backend parity suite
 #      (rust/tests/native_vs_artifact.rs) against the artifacts.
 
-.PHONY: all build test bench lint verify loadtest artifacts fmt clean
+.PHONY: all build test bench bench-json lint verify loadtest artifacts fmt clean
 
 all: build
 
@@ -26,6 +26,17 @@ test:
 
 bench:
 	cargo bench
+
+# Machine-readable perf snapshots: run the hot-path, lifecycle, and
+# ANN-scale benches with JSON persistence enabled.  Each target appends
+# BENCH_<target>.json under $(BENCH_JSON_DIR) (see util/bench.rs and
+# benchmarks/baselines/README.md for the trajectory workflow).
+BENCH_JSON_DIR ?= benchmarks/out
+bench-json:
+	mkdir -p $(BENCH_JSON_DIR)
+	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench hotpath_micro
+	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench memory_lifecycle
+	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench ann_scale
 
 # Invariant lint (tools/vlint: panic policy, lock discipline, config-key
 # hygiene, wire-tag coverage — see DESIGN.md §Static-Analysis), then

@@ -1,0 +1,247 @@
+//! ANN-scale bench: what SQ8 quantization + coarse segment-skipping buy
+//! on a cold-heavy shard at ~10⁵ records.
+//!
+//! Two durable shards ingest the same cluster-coherent stream (the
+//! camera dwells on one scene per segment-sized run, so sealed segments
+//! have structure the coarse index can route on), with a hot budget of
+//! ~2 segments so ≳95% of records score through the cold tier:
+//!
+//!  * exact     — `quantization = "none"`, `coarse_nprobe = 0`: the
+//!    selection-bit-identical baseline (full f32 scan of every segment);
+//!  * sq8+coarse — `quantization = "sq8"`,
+//!    `coarse_centroids_per_segment = 8`, `coarse_nprobe = 8`: u8 codes
+//!    scored asymmetrically, only the top-8 segments by centroid score
+//!    fully scanned.
+//!
+//! Reported: recall@k of the approximate scan against exact selection
+//! (k = the retrieval sampling budget — the gate the tier-1
+//! `ann_quantization` test enforces at smaller scale), score-throughput
+//! speedup, and the p50/p95 latency ratio.
+//!
+//! Run: `cargo bench --bench ann_scale`  (`make bench-json` persists
+//! `BENCH_ann_scale.json`).  Env knobs:
+//!  * `ANN_SCALE_N`       record count (default 100_000; CI uses less)
+//!  * `ANN_SCALE_ASSERT=1` enforce the ≥4× throughput / ≥2× p95 /
+//!    ≥0.95 recall acceptance thresholds (off by default: shared CI
+//!    runners make wall-clock ratios noisy)
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use venus::config::{MemoryConfig, RetrievalConfig};
+use venus::memory::{ClusterRecord, Hierarchy, StreamId};
+use venus::util::bench::{note, section, Bench};
+use venus::util::rng::Pcg64;
+use venus::util::stats::{fmt_bytes, Samples};
+use venus::video::frame::Frame;
+
+const D: usize = 64;
+const FRAME: usize = 8;
+const CLUSTERS: usize = 64;
+const SEG: usize = 1024; // records per sealed segment == cluster run length
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let path = std::env::temp_dir()
+            .join(format!("venus-annscale-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).unwrap();
+        Self(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn centers(rng: &mut Pcg64) -> Vec<Vec<f32>> {
+    (0..CLUSTERS)
+        .map(|_| {
+            let mut c: Vec<f32> = (0..D).map(|_| rng.normal()).collect();
+            venus::util::l2_normalize(&mut c);
+            c
+        })
+        .collect()
+}
+
+fn cfg(quantized: bool) -> MemoryConfig {
+    let rec_bytes = D * 4 + std::mem::size_of::<ClusterRecord>() + 8;
+    MemoryConfig {
+        segment_records: SEG,
+        hot_budget_bytes: 2 * SEG * rec_bytes,
+        // every cold block stays resident: the comparison is CPU-bound
+        // kernels + segment skipping, not cache-miss IO
+        cold_cache_segments: 256,
+        quantization: if quantized { "sq8".into() } else { "none".into() },
+        coarse_nprobe: if quantized { 8 } else { 0 },
+        coarse_centroids_per_segment: if quantized { 8 } else { 0 },
+        ..Default::default()
+    }
+}
+
+/// Ingest `n` records in segment-aligned cluster runs; returns inserts/s.
+fn ingest(h: &mut Hierarchy, n: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::seeded(seed);
+    let cs = centers(&mut rng);
+    let t0 = Instant::now();
+    for i in 0..n {
+        let c = &cs[(i / SEG) % CLUSTERS];
+        let mut v: Vec<f32> = c.iter().map(|x| x + 0.15 * rng.normal()).collect();
+        venus::util::l2_normalize(&mut v);
+        h.archive_frame(i as u64, &Frame::filled(FRAME, [0.5; 3])).unwrap();
+        h.insert(
+            &v,
+            ClusterRecord {
+                stream: StreamId(0),
+                scene_id: i,
+                centroid_frame: i as u64,
+                members: vec![i as u64],
+            },
+        )
+        .unwrap();
+    }
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn topk(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order.truncate(k);
+    order
+}
+
+fn main() {
+    let n: usize = std::env::var("ANN_SCALE_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    let enforce = std::env::var("ANN_SCALE_ASSERT").as_deref() == Ok("1");
+    let k = RetrievalConfig::default().budget;
+
+    section("ann_scale — quantized cold tier + coarse segment skipping");
+    note(&format!(
+        "{n} records, d={D}, {CLUSTERS} scene clusters, segment={SEG} records"
+    ));
+
+    let tmp = TempDir::new("bench");
+    let mut exact =
+        Hierarchy::durable(&cfg(false), D, StreamId(0), &tmp.0.join("exact"), FRAME).unwrap();
+    let exact_ips = ingest(&mut exact, n, 42);
+    let mut approx =
+        Hierarchy::durable(&cfg(true), D, StreamId(0), &tmp.0.join("approx"), FRAME).unwrap();
+    let approx_ips = ingest(&mut approx, n, 42);
+    let ts = approx.tier_stats();
+    note(&format!(
+        "ingest: exact {exact_ips:.0}/s, sq8+coarse {approx_ips:.0}/s \
+         (seal-time quantization + centroid training cost)"
+    ));
+    note(&format!(
+        "tier split: {} hot / {} cold in {} segments; cold resident {} (sq8) vs {} (exact)",
+        ts.hot_records,
+        ts.cold_records,
+        ts.cold_segments,
+        fmt_bytes(ts.cold_resident_bytes),
+        fmt_bytes(exact.tier_stats().cold_resident_bytes),
+    ));
+
+    // fixed query set near cluster centers (what real queries look like:
+    // "the forklift scene", not isotropic noise)
+    let cs = centers(&mut Pcg64::seeded(42));
+    let mut qrng = Pcg64::seeded(7);
+    let queries: Vec<Vec<f32>> = (0..64)
+        .map(|qi| {
+            let mut q: Vec<f32> =
+                cs[qi % CLUSTERS].iter().map(|x| x + 0.1 * qrng.normal()).collect();
+            venus::util::l2_normalize(&mut q);
+            q
+        })
+        .collect();
+
+    // recall@k of approximate selection vs exact selection
+    let (mut se, mut sa) = (Vec::new(), Vec::new());
+    let mut overlap = 0usize;
+    for q in &queries {
+        exact.score_all(q, &mut se).unwrap();
+        approx.score_all(q, &mut sa).unwrap();
+        let want = topk(&se, k);
+        let got = topk(&sa, k);
+        overlap += want.iter().filter(|id| got.contains(id)).count();
+    }
+    let recall = overlap as f64 / (queries.len() * k) as f64;
+
+    // latency distributions (per-query full score_all)
+    let mut scores = Vec::new();
+    let mut run = |h: &Hierarchy| {
+        let mut lat = Samples::default();
+        for _ in 0..3 {
+            for q in &queries {
+                let t0 = Instant::now();
+                h.score_all(q, &mut scores).unwrap();
+                std::hint::black_box(scores.len());
+                lat.push(t0.elapsed().as_secs_f64());
+            }
+        }
+        lat
+    };
+    let le = run(&exact);
+    let la = run(&approx);
+    let speedup = le.mean() / la.mean();
+    let p95_ratio = le.p95() / la.p95();
+
+    println!();
+    println!(
+        "  exact       p50 {:>9.1} µs   p95 {:>9.1} µs   {:>12.0} rows/s",
+        le.p50() * 1e6,
+        le.p95() * 1e6,
+        n as f64 / le.mean()
+    );
+    println!(
+        "  sq8+coarse  p50 {:>9.1} µs   p95 {:>9.1} µs   {:>12.0} rows/s (vs full scan)",
+        la.p50() * 1e6,
+        la.p95() * 1e6,
+        n as f64 / la.mean()
+    );
+    let ts = approx.tier_stats();
+    println!(
+        "  recall@{k} {recall:.4}   throughput x{speedup:.1}   p95 x{p95_ratio:.1}   \
+         scanned {}/{} segment probes",
+        ts.cold_probe_segments, ts.cold_probe_candidates
+    );
+
+    // the Bench runner persists the machine-readable trajectory
+    // (BENCH_ann_scale.json) when BENCH_JSON_DIR is set
+    let mut b = Bench::quick();
+    let q = &queries[0];
+    b.run("score_all exact (full f32 scan)", || {
+        exact.score_all(q, &mut scores).unwrap();
+        scores.len()
+    });
+    b.run("score_all sq8+coarse (nprobe=8)", || {
+        approx.score_all(q, &mut scores).unwrap();
+        scores.len()
+    });
+
+    assert!(
+        recall >= 0.95,
+        "recall@{k} = {recall:.3} below the 0.95 gate"
+    );
+    if enforce {
+        assert!(
+            speedup >= 4.0,
+            "score throughput x{speedup:.2} below the 4x acceptance bar"
+        );
+        assert!(
+            p95_ratio >= 2.0,
+            "p95 ratio x{p95_ratio:.2} below the 2x acceptance bar"
+        );
+    }
+}

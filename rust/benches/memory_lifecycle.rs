@@ -18,6 +18,7 @@ use std::time::Instant;
 use venus::config::MemoryConfig;
 use venus::memory::{ClusterRecord, Hierarchy, InMemoryRaw, StreamId};
 use venus::retrieval::{sample_retrieve, shortlist_mask};
+use venus::util::bench::Bench;
 use venus::util::rng::Pcg64;
 use venus::util::stats::{fmt_bytes, Samples};
 use venus::video::frame::Frame;
@@ -157,4 +158,22 @@ fn main() {
             .map(|r| format!("{:.0}%", r * 100.0))
             .unwrap_or_else(|| "n/a".into())
     );
+
+    // machine-readable trajectory (BENCH_memory_lifecycle.json under
+    // BENCH_JSON_DIR): the score+sample query stage per tier shape
+    println!();
+    let mut b = Bench::quick();
+    let mut rng = Pcg64::seeded(17);
+    let q = unit(&mut rng);
+    let mut scores = Vec::new();
+    b.run("score+sample all-hot", || {
+        hot.score_all(&q, &mut scores).unwrap();
+        let masked = shortlist_mask(&scores, 128);
+        sample_retrieve(&hot, &masked, 0.12, 16, &mut rng).frames.len()
+    });
+    b.run("score+sample mostly-cold", || {
+        cold.score_all(&q, &mut scores).unwrap();
+        let masked = shortlist_mask(&scores, 128);
+        sample_retrieve(&cold, &masked, 0.12, 16, &mut rng).frames.len()
+    });
 }

@@ -104,6 +104,18 @@ pub struct MemoryConfig {
     /// Cold-tier block cache: how many sealed segments' vector blocks may
     /// stay resident at once (LRU).
     pub cold_cache_segments: usize,
+    /// Sealed-segment scan quantization: "none" (exact f32, the default)
+    /// or "sq8" (per-dimension scalar u8 codes written at seal time and
+    /// scored asymmetrically — ~4× more vectors per cache slot, bounded
+    /// approximation gated by the recall@k ≥ 0.95 test).
+    pub quantization: String,
+    /// Coarse-probe budget for cold queries: fully scan only the
+    /// top-`coarse_nprobe` sealed segments by centroid score (segments
+    /// without centroids always scan).  0 = scan all (exact).
+    pub coarse_nprobe: usize,
+    /// K-means centroids trained per sealed segment at seal time (the
+    /// coarse index `coarse_nprobe` routes on).  0 = none.
+    pub coarse_centroids_per_segment: usize,
 }
 
 impl Default for MemoryConfig {
@@ -116,6 +128,9 @@ impl Default for MemoryConfig {
             segment_records: 256,
             hot_budget_bytes: 0,
             cold_cache_segments: 4,
+            quantization: "none".into(),
+            coarse_nprobe: 0,
+            coarse_centroids_per_segment: 0,
         }
     }
 }
@@ -349,6 +364,12 @@ impl VenusConfig {
             d.usize_or("memory.hot_budget_bytes", cfg.memory.hot_budget_bytes)?;
         cfg.memory.cold_cache_segments =
             d.usize_or("memory.cold_cache_segments", cfg.memory.cold_cache_segments)?;
+        cfg.memory.quantization = d.str_or("memory.quantization", &cfg.memory.quantization)?;
+        cfg.memory.coarse_nprobe = d.usize_or("memory.coarse_nprobe", cfg.memory.coarse_nprobe)?;
+        cfg.memory.coarse_centroids_per_segment = d.usize_or(
+            "memory.coarse_centroids_per_segment",
+            cfg.memory.coarse_centroids_per_segment,
+        )?;
 
         cfg.net.bandwidth_mbps = d.f64_or("net.bandwidth_mbps", cfg.net.bandwidth_mbps)?;
         cfg.net.rtt_ms = d.f64_or("net.rtt_ms", cfg.net.rtt_ms)?;
@@ -452,6 +473,15 @@ impl VenusConfig {
         if self.memory.cold_cache_segments == 0 {
             bail!("memory.cold_cache_segments must be >= 1");
         }
+        if self.memory.quantization != "none" && self.memory.quantization != "sq8" {
+            bail!("memory.quantization must be 'none' or 'sq8'");
+        }
+        if self.memory.coarse_nprobe > 0 && self.memory.coarse_centroids_per_segment == 0 {
+            bail!(
+                "memory.coarse_nprobe > 0 needs memory.coarse_centroids_per_segment >= 1 \
+                 (segments sealed without centroids are never pruned)"
+            );
+        }
         if self.net.bandwidth_mbps <= 0.0 || self.net.frame_kb <= 0.0 {
             bail!("net parameters must be positive");
         }
@@ -516,6 +546,9 @@ const KNOWN_KEYS: &[&str] = &[
     "memory.segment_records",
     "memory.hot_budget_bytes",
     "memory.cold_cache_segments",
+    "memory.quantization",
+    "memory.coarse_nprobe",
+    "memory.coarse_centroids_per_segment",
     "net.bandwidth_mbps",
     "net.rtt_ms",
     "net.frame_kb",
@@ -637,6 +670,25 @@ mod tests {
         assert!(VenusConfig::from_toml("[memory]\nsegment_records = 0").is_err());
         assert!(VenusConfig::from_toml("[memory]\ncold_cache_segments = 0").is_err());
         assert!(VenusConfig::from_toml("[memory]\nsegment_frames = 0").is_err());
+    }
+
+    #[test]
+    fn quantization_and_coarse_keys_parse_and_validate() {
+        let cfg = VenusConfig::from_toml(
+            "[memory]\nquantization = \"sq8\"\ncoarse_nprobe = 4\ncoarse_centroids_per_segment = 8",
+        )
+        .unwrap();
+        assert_eq!(cfg.memory.quantization, "sq8");
+        assert_eq!(cfg.memory.coarse_nprobe, 4);
+        assert_eq!(cfg.memory.coarse_centroids_per_segment, 8);
+        // defaults: exact mode, no coarse index
+        let cfg = VenusConfig::default();
+        assert_eq!(cfg.memory.quantization, "none");
+        assert_eq!(cfg.memory.coarse_nprobe, 0);
+        assert_eq!(cfg.memory.coarse_centroids_per_segment, 0);
+        // invalid: unknown scheme, probing without centroids
+        assert!(VenusConfig::from_toml("[memory]\nquantization = \"pq\"").is_err());
+        assert!(VenusConfig::from_toml("[memory]\ncoarse_nprobe = 2").is_err());
     }
 
     #[test]

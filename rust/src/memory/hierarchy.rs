@@ -40,7 +40,7 @@ use anyhow::Result;
 use crate::config::MemoryConfig;
 use crate::memory::fabric::StreamId;
 use crate::memory::raw::RawStore;
-use crate::memory::segment::ColdTier;
+use crate::memory::segment::{ColdTier, SegmentOptions};
 use crate::memory::storage::{DiskRaw, StreamStorage};
 use crate::memory::vectordb::{build_index, Hit, Metric, VectorIndex};
 
@@ -76,6 +76,14 @@ pub struct TierStats {
     /// cold block-cache hits / misses (the cold-hit rate gauge)
     pub cold_hits: u64,
     pub cold_misses: u64,
+    /// cold segments fully scanned vs considered, across all cold
+    /// queries (equal unless coarse probing is pruning)
+    pub cold_probe_segments: u64,
+    pub cold_probe_candidates: u64,
+    /// cold rows actually scored (pruned segments score nothing)
+    pub cold_rows_scored: u64,
+    /// whether cold scans use the SQ8 representation (OR across shards)
+    pub cold_quantized: bool,
 }
 
 impl TierStats {
@@ -90,6 +98,10 @@ impl TierStats {
         self.evictions += o.evictions;
         self.cold_hits += o.cold_hits;
         self.cold_misses += o.cold_misses;
+        self.cold_probe_segments += o.cold_probe_segments;
+        self.cold_probe_candidates += o.cold_probe_candidates;
+        self.cold_rows_scored += o.cold_rows_scored;
+        self.cold_quantized |= o.cold_quantized;
     }
 
     /// Block-cache hit rate over cold-tier accesses, if any happened.
@@ -115,11 +127,28 @@ impl TierStats {
         m.insert("evictions".into(), Json::Num(self.evictions as f64));
         m.insert("cold_hits".into(), Json::Num(self.cold_hits as f64));
         m.insert("cold_misses".into(), Json::Num(self.cold_misses as f64));
+        m.insert(
+            "cold_probe_segments".into(),
+            Json::Num(self.cold_probe_segments as f64),
+        );
+        m.insert(
+            "cold_probe_candidates".into(),
+            Json::Num(self.cold_probe_candidates as f64),
+        );
+        m.insert("cold_rows_scored".into(), Json::Num(self.cold_rows_scored as f64));
+        m.insert("cold_quantized".into(), Json::Bool(self.cold_quantized));
         Json::Obj(m)
     }
 
-    /// Parse the wire JSON encoding.
+    /// Parse the wire JSON encoding.  The scan-observability fields are
+    /// optional so a newer client can read an older server's reply.
     pub fn from_json(v: &crate::util::json::Json) -> Result<Self> {
+        let opt_u64 = |key: &str| -> Result<u64> {
+            match v.opt(key) {
+                Some(x) => Ok(x.as_usize()? as u64),
+                None => Ok(0),
+            }
+        };
         Ok(Self {
             hot_bytes: v.get("hot_bytes")?.as_usize()?,
             hot_records: v.get("hot_records")?.as_usize()?,
@@ -130,6 +159,13 @@ impl TierStats {
             evictions: v.get("evictions")?.as_usize()? as u64,
             cold_hits: v.get("cold_hits")?.as_usize()? as u64,
             cold_misses: v.get("cold_misses")?.as_usize()? as u64,
+            cold_probe_segments: opt_u64("cold_probe_segments")?,
+            cold_probe_candidates: opt_u64("cold_probe_candidates")?,
+            cold_rows_scored: opt_u64("cold_rows_scored")?,
+            cold_quantized: match v.opt("cold_quantized") {
+                Some(x) => x.as_bool()?,
+                None => false,
+            },
         })
     }
 }
@@ -195,7 +231,8 @@ impl Hierarchy {
         frame_size: usize,
     ) -> Result<Self> {
         let raw = Box::new(DiskRaw::open(dir, frame_size, cfg.segment_frames)?);
-        let (storage, recovered) = StreamStorage::open(dir, stream, d_embed)?;
+        let (storage, recovered) =
+            StreamStorage::open(dir, stream, d_embed, Self::segment_options(cfg))?;
         let mut h = Self::build(cfg, d_embed, raw, stream, Some(storage))?;
         let metas = h
             .storage
@@ -260,6 +297,16 @@ impl Hierarchy {
         Ok(h)
     }
 
+    /// Seal-time segment layout implied by the `[memory]` config: SQ8
+    /// when `memory.quantization = "sq8"`, coarse centroids when
+    /// `memory.coarse_centroids_per_segment > 0`.
+    fn segment_options(cfg: &MemoryConfig) -> SegmentOptions {
+        SegmentOptions {
+            sq8: cfg.quantization == "sq8",
+            centroids: cfg.coarse_centroids_per_segment,
+        }
+    }
+
     fn build(
         cfg: &MemoryConfig,
         d_embed: usize,
@@ -287,7 +334,11 @@ impl Hierarchy {
             hot_base: 0,
             hot_meta_bytes: 0,
             records: Vec::new(),
-            cold: ColdTier::new(cfg.cold_cache_segments),
+            cold: ColdTier::new(
+                cfg.cold_cache_segments,
+                cfg.quantization == "sq8",
+                cfg.coarse_nprobe,
+            ),
             storage,
             raw,
             frames_ingested: 0,
@@ -592,6 +643,7 @@ impl Hierarchy {
     /// Per-tier residency and traffic gauges.
     pub fn tier_stats(&self) -> TierStats {
         let (cold_resident, hits, misses) = self.cold.cache_stats();
+        let (probed, candidates, rows) = self.cold.scan_stats();
         TierStats {
             hot_bytes: self.hot_bytes(),
             hot_records: self.records.len() - self.hot_base,
@@ -602,6 +654,10 @@ impl Hierarchy {
             evictions: self.evictions,
             cold_hits: hits,
             cold_misses: misses,
+            cold_probe_segments: probed,
+            cold_probe_candidates: candidates,
+            cold_rows_scored: rows,
+            cold_quantized: self.cold.quantized(),
         }
     }
 

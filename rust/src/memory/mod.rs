@@ -14,6 +14,6 @@ pub mod vectordb;
 pub use fabric::{FrameId, MemoryFabric, StreamId, StreamScope};
 pub use hierarchy::{ClusterRecord, Hierarchy, TierStats};
 pub use raw::{InMemoryRaw, RawStore, SynthBackedRaw};
-pub use segment::{ColdTier, SegmentMeta};
+pub use segment::{ColdTier, SegmentMeta, SegmentOptions};
 pub use storage::{DiskRaw, StreamStorage};
 pub use vectordb::{build_index, FlatIndex, Hit, IvfIndex, Metric, VectorIndex};

@@ -1,24 +1,42 @@
 //! Immutable sealed segments + the cold tier that scores them.
 //!
 //! A sealed segment is one contiguous span of a stream's index inserts,
-//! frozen into a single file by the WAL compactor:
+//! frozen into a single file by the WAL compactor.  Two on-disk layouts
+//! exist (see `DESIGN.md` §Quantization-and-ANN):
 //!
 //! ```text
-//! header : magic "VENUSSEG" | version u32 | stream u16 | base u64
+//! v1 (plain):
+//! header : magic "VENUSSEG" | version=1 u32 | stream u16 | base u64
 //!          | count u32 | d u32 | vec_off u64 | rec_sum u64 | vec_sum u64
 //! records: count × (scene u64 | centroid u64 | n u32 | members u64×n)
 //! vectors: count × d little-endian f32, row-major, at vec_off
+//!
+//! v2 (extended — written when SQ8 and/or coarse centroids are enabled):
+//! header : v1 fields | flags u32 | cen_k u32 | cen_sum u64
+//!          | sq8_off u64 | sq8_sum u64
+//! records: as v1
+//! cen    : cen_k × d f32 coarse k-means centroids (resident at open)
+//! vectors: count × d f32 at vec_off (always present — recovery and
+//!          exact mode need the bit-exact rows)
+//! sq8    : d f32 mins | d f32 steps | count × d u8 codes, at sq8_off
+//!          (flags bit 0; paged through the block cache like vectors)
 //! ```
 //!
-//! The two regions carry independent FNV-64 checksums: record metadata is
-//! validated once at recovery (it becomes resident), vector blocks are
-//! validated on each load (they page in and out of the LRU cache).
+//! Every region carries an independent FNV-64 checksum: record metadata
+//! and centroids are validated once at recovery (they become resident);
+//! vector and SQ8 blocks are validated on each load (they page in and
+//! out of the LRU cache).  A v1 file opens unchanged under the v2
+//! reader, and the f32 region is never dropped — SQ8 is a *scan-time*
+//! representation, ~4× denser in cache, not a replacement for the
+//! stored rows.
 //!
 //! The stored vector bytes are the index's *post-normalization* rows
-//! (read back via `VectorIndex::vector` before sealing), and the cold
-//! scan scores them with the same dot product the hot index uses — so a
-//! record's Eq. 4 score is bit-identical whether its vector is resident
-//! in the hot tier, demoted to a segment, or recovered after restart.
+//! (read back via `VectorIndex::vector` before sealing), and the exact
+//! cold scan scores them with the same batch dot kernel the hot index
+//! uses — so a record's Eq. 4 score is bit-identical whether its vector
+//! is resident in the hot tier, demoted to a segment, or recovered
+//! after restart.  Quantized/coarse scanning is a strictly opt-in
+//! approximation (`memory.quantization` / `memory.coarse_nprobe`).
 
 use std::fs::File;
 use std::io::Write;
@@ -35,9 +53,24 @@ use crate::memory::storage::{fnv1a64, put_u16, put_u32, put_u64, ByteReader};
 use crate::util::sync::{ranks, OrderedMutex};
 
 const SEG_MAGIC: &[u8; 8] = b"VENUSSEG";
-const SEG_VERSION: u32 = 1;
+const SEG_VERSION_V1: u32 = 1;
+const SEG_VERSION_V2: u32 = 2;
 /// magic + version + stream + base + count + d + vec_off + rec_sum + vec_sum
 const SEG_HEADER_LEN: usize = 8 + 4 + 2 + 8 + 4 + 4 + 8 + 8 + 8;
+/// v2 extension: flags + cen_k + cen_sum + sq8_off + sq8_sum
+const SEG_V2_EXT_LEN: usize = 4 + 4 + 8 + 8 + 8;
+/// flags bit 0: the segment carries an SQ8 region
+const SEG_FLAG_SQ8: u32 = 1;
+
+/// Seal-time options: which optional v2 regions to write.  The default
+/// (all off) writes the v1 layout byte-identically to pre-v2 code.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SegmentOptions {
+    /// Write the SQ8 region (per-dimension min/step + u8 codes).
+    pub sq8: bool,
+    /// Coarse k-means centroids per segment (0 = none).
+    pub centroids: usize,
+}
 
 /// Metadata of one sealed, immutable segment file.
 #[derive(Clone, Debug)]
@@ -53,10 +86,120 @@ pub struct SegmentMeta {
     pub d: usize,
     vec_off: u64,
     vec_sum: u64,
+    /// resident coarse centroids (k × d row-major; empty when the
+    /// segment was sealed without a coarse index)
+    pub centroids: Arc<Vec<f32>>,
+    /// SQ8 region (offset, checksum) when the segment carries one
+    sq8: Option<(u64, u64)>,
 }
 
-/// Write one sealed segment: records region + vector region, fsync'd.
-/// `vectors` is `records.len() * d` floats, row-major, in record order.
+impl SegmentMeta {
+    /// Whether the segment carries an SQ8 scan representation.
+    pub fn has_sq8(&self) -> bool {
+        self.sq8.is_some()
+    }
+
+    /// Coarse centroids recorded for this segment (0 = always scanned).
+    pub fn centroid_count(&self) -> usize {
+        if self.d == 0 {
+            0
+        } else {
+            self.centroids.len() / self.d
+        }
+    }
+}
+
+/// Deterministic mini k-means over one segment's rows (spherical: the
+/// hierarchy stores the cosine index's post-normalization unit rows).
+/// Strided init — every n/k-th row — exploits the stream's temporal
+/// locality (consecutive rows come from the same scenes) and keeps
+/// sealing reproducible without an RNG.  An emptied cell keeps its
+/// previous centroid; 4 Lloyd iterations suffice for a coarse router.
+pub(crate) fn train_centroids(vectors: &[f32], d: usize, k: usize) -> Vec<f32> {
+    if d == 0 {
+        return Vec::new();
+    }
+    let n = vectors.len() / d;
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut cents = Vec::with_capacity(k * d);
+    for c in 0..k {
+        let r = c * n / k;
+        cents.extend_from_slice(&vectors[r * d..(r + 1) * d]);
+    }
+    let mut scores = Vec::with_capacity(k);
+    for _ in 0..4 {
+        let mut sums = vec![0.0f32; k * d];
+        let mut counts = vec![0usize; k];
+        for row in vectors.chunks_exact(d) {
+            scores.clear();
+            crate::util::simd::dot_batch(row, &cents, d, &mut scores);
+            let mut best = 0usize;
+            let mut best_s = f32::NEG_INFINITY;
+            for (c, &s) in scores.iter().enumerate() {
+                if s > best_s {
+                    best_s = s;
+                    best = c;
+                }
+            }
+            counts[best] += 1;
+            for (a, x) in sums[best * d..(best + 1) * d].iter_mut().zip(row) {
+                *a += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                continue;
+            }
+            let cen = &mut sums[c * d..(c + 1) * d];
+            let inv = 1.0 / counts[c] as f32;
+            for x in cen.iter_mut() {
+                *x *= inv;
+            }
+            crate::util::l2_normalize(cen);
+            cents[c * d..(c + 1) * d].copy_from_slice(cen);
+        }
+    }
+    cents
+}
+
+/// Per-dimension affine SQ8 quantization of a row-major block:
+/// `code = round((x - min) / step)` with `step = (max - min) / 255`.
+/// Returns `(mins, steps, codes)`.
+fn sq8_encode(vectors: &[f32], d: usize) -> (Vec<f32>, Vec<f32>, Vec<u8>) {
+    let mut mins = vec![f32::INFINITY; d];
+    let mut maxs = vec![f32::NEG_INFINITY; d];
+    for row in vectors.chunks_exact(d) {
+        for j in 0..d {
+            mins[j] = mins[j].min(row[j]);
+            maxs[j] = maxs[j].max(row[j]);
+        }
+    }
+    let steps: Vec<f32> = mins
+        .iter()
+        .zip(&maxs)
+        .map(|(lo, hi)| (hi - lo) / 255.0)
+        .collect();
+    let mut codes = Vec::with_capacity(vectors.len());
+    for row in vectors.chunks_exact(d) {
+        for j in 0..d {
+            let c = if steps[j] > 0.0 {
+                ((row[j] - mins[j]) / steps[j]).round().clamp(0.0, 255.0)
+            } else {
+                0.0
+            };
+            codes.push(c as u8);
+        }
+    }
+    (mins, steps, codes)
+}
+
+/// Write one sealed segment: records region + optional centroid/SQ8
+/// regions + vector region, fsync'd.  `vectors` is `records.len() * d`
+/// floats, row-major, in record order.  Default options write the v1
+/// layout byte-for-byte; SQ8/centroids select the versioned v2 layout.
 pub fn write_segment(
     path: &Path,
     stream: StreamId,
@@ -64,6 +207,7 @@ pub fn write_segment(
     records: &[ClusterRecord],
     vectors: &[f32],
     d: usize,
+    opts: SegmentOptions,
 ) -> Result<SegmentMeta> {
     anyhow::ensure!(!records.is_empty(), "empty segment");
     anyhow::ensure!(records.len() * d == vectors.len(), "segment vector shape");
@@ -81,13 +225,42 @@ pub fn write_segment(
     for &x in vectors {
         vec_region.extend_from_slice(&x.to_le_bytes());
     }
-    let vec_off = (SEG_HEADER_LEN + rec_region.len()) as u64;
     let rec_sum = fnv1a64(&rec_region);
     let vec_sum = fnv1a64(&vec_region);
 
-    let mut header = Vec::with_capacity(SEG_HEADER_LEN);
+    let centroids = if opts.centroids > 0 {
+        train_centroids(vectors, d, opts.centroids)
+    } else {
+        Vec::new()
+    };
+    let v2 = opts.sq8 || !centroids.is_empty();
+    let header_len = if v2 {
+        SEG_HEADER_LEN + SEG_V2_EXT_LEN
+    } else {
+        SEG_HEADER_LEN
+    };
+    let mut cen_region = Vec::with_capacity(centroids.len() * 4);
+    for &x in &centroids {
+        cen_region.extend_from_slice(&x.to_le_bytes());
+    }
+    let vec_off = (header_len + rec_region.len() + cen_region.len()) as u64;
+
+    let mut sq8_region = Vec::new();
+    let mut sq8 = None;
+    if opts.sq8 {
+        let (mins, steps, codes) = sq8_encode(vectors, d);
+        sq8_region.reserve(d * 8 + codes.len());
+        for &x in mins.iter().chain(&steps) {
+            sq8_region.extend_from_slice(&x.to_le_bytes());
+        }
+        sq8_region.extend_from_slice(&codes);
+        let sq8_off = vec_off + vec_region.len() as u64;
+        sq8 = Some((sq8_off, fnv1a64(&sq8_region)));
+    }
+
+    let mut header = Vec::with_capacity(header_len);
     header.extend_from_slice(SEG_MAGIC);
-    put_u32(&mut header, SEG_VERSION);
+    put_u32(&mut header, if v2 { SEG_VERSION_V2 } else { SEG_VERSION_V1 });
     put_u16(&mut header, stream.0);
     put_u64(&mut header, base as u64);
     put_u32(&mut header, records.len() as u32);
@@ -95,13 +268,24 @@ pub fn write_segment(
     put_u64(&mut header, vec_off);
     put_u64(&mut header, rec_sum);
     put_u64(&mut header, vec_sum);
-    debug_assert_eq!(header.len(), SEG_HEADER_LEN);
+    if v2 {
+        let flags = if opts.sq8 { SEG_FLAG_SQ8 } else { 0 };
+        put_u32(&mut header, flags);
+        put_u32(&mut header, (centroids.len() / d.max(1)) as u32);
+        put_u64(&mut header, fnv1a64(&cen_region));
+        let (sq8_off, sq8_sum) = sq8.unwrap_or((0, 0));
+        put_u64(&mut header, sq8_off);
+        put_u64(&mut header, sq8_sum);
+    }
+    debug_assert_eq!(header.len(), header_len);
 
     let mut f = File::create(path)
         .with_context(|| format!("creating segment {}", path.display()))?;
     f.write_all(&header)?;
     f.write_all(&rec_region)?;
+    f.write_all(&cen_region)?;
     f.write_all(&vec_region)?;
+    f.write_all(&sq8_region)?;
     f.sync_all()?;
 
     Ok(SegmentMeta {
@@ -115,14 +299,17 @@ pub fn write_segment(
         d,
         vec_off,
         vec_sum,
+        centroids: Arc::new(centroids),
+        sq8,
     })
 }
 
-/// Open a sealed segment: validate the header + record-region checksum
-/// and return its metadata plus the (resident) record metadata.  Only
-/// the header and record region are read — the vector region stays on
-/// disk (recovery must not page in the whole cold tier; its checksum is
-/// verified lazily on each [`ColdTier`] block load).
+/// Open a sealed segment (v1 or v2): validate the header, record-region
+/// and centroid checksums, and return its metadata plus the (resident)
+/// record metadata.  Only the header, records, and centroids are read —
+/// the vector and SQ8 regions stay on disk (recovery must not page in
+/// the whole cold tier; their checksums are verified lazily on each
+/// [`ColdTier`] block load).
 pub fn open_segment(
     path: &Path,
     stream: StreamId,
@@ -141,8 +328,9 @@ pub fn open_segment(
     if r.take(8)? != SEG_MAGIC {
         bail!("not a Venus segment");
     }
-    if r.u32()? != SEG_VERSION {
-        bail!("unsupported segment version");
+    let version = r.u32()?;
+    if version != SEG_VERSION_V1 && version != SEG_VERSION_V2 {
+        bail!("unsupported segment version {version}");
     }
     let h_stream = r.u16()?;
     let base = r.u64()? as usize;
@@ -154,11 +342,41 @@ pub fn open_segment(
     if h_stream != stream.0 || h_d != d {
         bail!("segment is for stream s{h_stream} (d={h_d}), expected {stream} (d={d})");
     }
-    if (vec_off as usize) < SEG_HEADER_LEN || vec_off > file_len {
+    let mut header_len = SEG_HEADER_LEN;
+    let mut cen_k = 0usize;
+    let mut cen_sum = 0u64;
+    let mut sq8 = None;
+    if version == SEG_VERSION_V2 {
+        header_len += SEG_V2_EXT_LEN;
+        if file_len < header_len as u64 {
+            bail!("segment {} shorter than its v2 header", path.display());
+        }
+        let mut ext = vec![0u8; SEG_V2_EXT_LEN];
+        file.read_exact_at(&mut ext, SEG_HEADER_LEN as u64)
+            .with_context(|| format!("reading v2 header of {}", path.display()))?;
+        let mut er = ByteReader::new(&ext);
+        let flags = er.u32()?;
+        cen_k = er.u32()? as usize;
+        cen_sum = er.u64()?;
+        let sq8_off = er.u64()?;
+        let sq8_sum = er.u64()?;
+        if flags & SEG_FLAG_SQ8 != 0 {
+            // bounds-check the SQ8 region up front: a truncated file is
+            // a typed open error, never a wrong score later
+            let sq8_len = (d * 8 + count * d) as u64;
+            if sq8_off < vec_off || sq8_off + sq8_len > file_len {
+                bail!("segment {} SQ8 region out of bounds", path.display());
+            }
+            sq8 = Some((sq8_off, sq8_sum));
+        }
+    }
+    let cen_bytes = cen_k * d * 4;
+    if (vec_off as usize) < header_len + cen_bytes || vec_off > file_len {
         bail!("segment vector offset out of bounds");
     }
-    let mut rec_region = vec![0u8; vec_off as usize - SEG_HEADER_LEN];
-    file.read_exact_at(&mut rec_region, SEG_HEADER_LEN as u64)
+    let rec_len = vec_off as usize - header_len - cen_bytes;
+    let mut rec_region = vec![0u8; rec_len];
+    file.read_exact_at(&mut rec_region, header_len as u64)
         .with_context(|| format!("reading record region of {}", path.display()))?;
     let rec_region = &rec_region[..];
     if fnv1a64(rec_region) != rec_sum {
@@ -182,6 +400,19 @@ pub fn open_segment(
     if rr.remaining() != 0 {
         bail!("segment record region has trailing bytes");
     }
+    // centroids are resident: read + verify them now
+    let mut centroids = Vec::with_capacity(cen_k * d);
+    if cen_k > 0 {
+        let mut cen_region = vec![0u8; cen_bytes];
+        file.read_exact_at(&mut cen_region, (header_len + rec_len) as u64)
+            .with_context(|| format!("reading centroids of {}", path.display()))?;
+        if fnv1a64(&cen_region) != cen_sum {
+            bail!("segment centroid region checksum mismatch");
+        }
+        for chunk in cen_region.chunks_exact(4) {
+            centroids.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+    }
     if file_len < vec_off + (count * d * 4) as u64 {
         bail!("segment vector region truncated");
     }
@@ -197,6 +428,8 @@ pub fn open_segment(
             d,
             vec_off,
             vec_sum,
+            centroids: Arc::new(centroids),
+            sq8,
         },
         records,
     ))
@@ -220,11 +453,78 @@ pub(crate) fn load_vectors(meta: &SegmentMeta) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+/// One segment's SQ8 scan block: the per-dimension affine map + codes.
+pub(crate) struct Sq8Block {
+    pub(crate) mins: Vec<f32>,
+    pub(crate) steps: Vec<f32>,
+    pub(crate) codes: Vec<u8>,
+}
+
+impl Sq8Block {
+    fn bytes(&self) -> usize {
+        (self.mins.len() + self.steps.len()) * 4 + self.codes.len()
+    }
+}
+
+/// Load (and checksum-verify) a segment's SQ8 region.  A segment without
+/// one, a truncated read, or a checksum mismatch are all typed errors —
+/// quantized scanning never produces a silently-wrong score.
+pub(crate) fn load_sq8(meta: &SegmentMeta) -> Result<Sq8Block> {
+    let Some((off, sum)) = meta.sq8 else {
+        bail!("segment {} has no SQ8 region", meta.path.display());
+    };
+    let file = File::open(&meta.path)
+        .with_context(|| format!("opening segment {}", meta.path.display()))?;
+    let mut raw = vec![0u8; meta.d * 8 + meta.count * meta.d];
+    file.read_exact_at(&mut raw, off)
+        .with_context(|| format!("reading SQ8 region of {}", meta.path.display()))?;
+    if fnv1a64(&raw) != sum {
+        bail!("segment {} SQ8 checksum mismatch", meta.path.display());
+    }
+    let mut floats = Vec::with_capacity(meta.d * 2);
+    for chunk in raw[..meta.d * 8].chunks_exact(4) {
+        floats.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    let steps = floats.split_off(meta.d);
+    Ok(Sq8Block { mins: floats, steps, codes: raw[meta.d * 8..].to_vec() })
+}
+
+/// Which representation of a segment a cache entry holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BlockKind {
+    F32,
+    Sq8,
+}
+
+/// A cached block: full-precision rows or the SQ8 scan representation.
+#[derive(Clone)]
+enum BlockData {
+    F32(Arc<Vec<f32>>),
+    Sq8(Arc<Sq8Block>),
+}
+
+impl BlockData {
+    fn bytes(&self) -> usize {
+        match self {
+            BlockData::F32(b) => b.len() * 4,
+            BlockData::Sq8(b) => b.bytes(),
+        }
+    }
+}
+
 /// The cold tier of one memory shard: the demoted prefix of its record
-/// space, held as sealed segments whose vector blocks page through a
-/// bounded LRU cache.  Scoring walks the segments in base order, so the
-/// concatenated cold scores land in global id order — exactly the prefix
-/// the hot tier's in-place scores continue.
+/// space, held as sealed segments whose vector (or SQ8) blocks page
+/// through a bounded LRU cache.  Scoring walks the segments in base
+/// order, so the concatenated cold scores land in global id order —
+/// exactly the prefix the hot tier's in-place scores continue.
+///
+/// Two opt-in approximations (`DESIGN.md` §Quantization-and-ANN):
+/// `quantized` scans SQ8 codes instead of f32 rows (~4× more vectors
+/// resident per cache slot), and `nprobe > 0` routes each query through
+/// the segments' coarse centroids, fully scanning only the best
+/// `nprobe` segments and filling the rest with `NEG_INFINITY` (softmax
+/// mass 0, never selected).  Both off ⇒ the scan is bit-identical to
+/// the exact legacy path.
 ///
 /// Interior mutability: the scan runs under the shard's *read* lock, so
 /// the LRU lives behind its own mutex (held across a miss's disk load —
@@ -233,25 +533,40 @@ pub(crate) fn load_vectors(meta: &SegmentMeta) -> Result<Vec<f32>> {
 pub struct ColdTier {
     segments: Vec<SegmentMeta>,
     records: usize,
-    /// MRU-front cache of (segment index, vector block); ranked above the
+    /// MRU-front cache of (segment index, kind, block); ranked above the
     /// shard band — the scan acquires it under a shard read guard
-    cache: OrderedMutex<Vec<(usize, Arc<Vec<f32>>)>>,
+    cache: OrderedMutex<Vec<(usize, BlockKind, BlockData)>>,
     cache_cap: usize,
+    /// scan SQ8 codes where available (falls back to f32 for v1 segments)
+    quantized: bool,
+    /// coarse-probe budget: fully scan only the top-`nprobe` segments by
+    /// centroid score (0 = scan all; centroid-less segments always scan)
+    nprobe: usize,
     resident_bytes: AtomicUsize,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// cumulative scan gauges (segments actually scanned / segments
+    /// considered / rows scored) — the cold-scan observability feed
+    probed_segments: AtomicU64,
+    probe_candidates: AtomicU64,
+    rows_scored: AtomicU64,
 }
 
 impl ColdTier {
-    pub fn new(cache_cap: usize) -> Self {
+    pub fn new(cache_cap: usize, quantized: bool, nprobe: usize) -> Self {
         Self {
             segments: Vec::new(),
             records: 0,
             cache: OrderedMutex::new(ranks::COLD_BLOCK_CACHE, Vec::new()),
             cache_cap: cache_cap.max(1),
+            quantized,
+            nprobe,
             resident_bytes: AtomicUsize::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            probed_segments: AtomicU64::new(0),
+            probe_candidates: AtomicU64::new(0),
+            rows_scored: AtomicU64::new(0),
         }
     }
 
@@ -282,47 +597,124 @@ impl ColdTier {
         self.records
     }
 
-    /// Vector block of segment `i`, through the LRU cache.
-    fn block(&self, i: usize) -> Result<Arc<Vec<f32>>> {
+    /// Whether scans use the SQ8 representation where available.
+    pub fn quantized(&self) -> bool {
+        self.quantized
+    }
+
+    /// Block of segment `i` in the requested representation, through the
+    /// LRU cache.
+    fn cached(&self, i: usize, kind: BlockKind) -> Result<BlockData> {
         let mut cache = self.cache.lock();
-        if let Some(pos) = cache.iter().position(|(s, _)| *s == i) {
+        if let Some(pos) = cache.iter().position(|(s, k, _)| *s == i && *k == kind) {
             let entry = cache.remove(pos);
-            let block = Arc::clone(&entry.1);
+            let block = entry.2.clone();
             cache.insert(0, entry); // MRU to front
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(block);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let block = Arc::new(load_vectors(&self.segments[i])?);
-        self.resident_bytes
-            .fetch_add(block.len() * 4, Ordering::Relaxed);
-        cache.insert(0, (i, Arc::clone(&block)));
+        let block = match kind {
+            BlockKind::F32 => BlockData::F32(Arc::new(load_vectors(&self.segments[i])?)),
+            BlockKind::Sq8 => BlockData::Sq8(Arc::new(load_sq8(&self.segments[i])?)),
+        };
+        self.resident_bytes.fetch_add(block.bytes(), Ordering::Relaxed);
+        cache.insert(0, (i, kind, block.clone()));
         while cache.len() > self.cache_cap {
-            let Some((_, evicted)) = cache.pop() else { break };
+            let Some((_, _, evicted)) = cache.pop() else { break };
             self.resident_bytes
-                .fetch_sub(evicted.len() * 4, Ordering::Relaxed);
+                .fetch_sub(evicted.bytes(), Ordering::Relaxed);
         }
         Ok(block)
     }
 
-    /// Score the query against every cold vector, appending to `out` in
+    /// Full-precision vector block of segment `i`, through the LRU cache.
+    fn block(&self, i: usize) -> Result<Arc<Vec<f32>>> {
+        match self.cached(i, BlockKind::F32)? {
+            BlockData::F32(b) => Ok(b),
+            BlockData::Sq8(_) => bail!("cold cache returned SQ8 for an f32 request"),
+        }
+    }
+
+    /// SQ8 block of segment `i`, through the LRU cache.
+    fn sq8_block(&self, i: usize) -> Result<Arc<Sq8Block>> {
+        match self.cached(i, BlockKind::Sq8)? {
+            BlockData::Sq8(b) => Ok(b),
+            BlockData::F32(_) => bail!("cold cache returned f32 for an SQ8 request"),
+        }
+    }
+
+    /// Choose which segments the query fully scans.  `nprobe == 0` (or
+    /// ≥ the segment count) scans everything; otherwise segments that
+    /// carry centroids are ranked by their best centroid score and only
+    /// the top `nprobe` scan — centroid-less (v1) segments always scan.
+    fn select_probes(&self, qn: &[f32]) -> Vec<bool> {
+        let nseg = self.segments.len();
+        if self.nprobe == 0 || self.nprobe >= nseg {
+            return vec![true; nseg];
+        }
+        let mut probe = vec![false; nseg];
+        let mut ranked: Vec<(usize, f32)> = Vec::new();
+        let mut scratch = Vec::new();
+        for (i, m) in self.segments.iter().enumerate() {
+            if m.centroids.is_empty() {
+                probe[i] = true;
+                continue;
+            }
+            scratch.clear();
+            crate::util::simd::dot_batch(qn, &m.centroids, m.d, &mut scratch);
+            let best = scratch.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            ranked.push((i, best));
+        }
+        ranked.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        for &(i, _) in ranked.iter().take(self.nprobe) {
+            probe[i] = true;
+        }
+        probe
+    }
+
+    /// Score the query against the cold tier, appending to `out` in
     /// global id order.  `qn` must already be metric-prepared (the
-    /// hierarchy L2-normalizes it, matching the hot index's cosine path),
-    /// and the row scorer is the same dot product — Eq. 4 values are
-    /// bit-identical to scoring the same vector hot.
+    /// hierarchy L2-normalizes it, matching the hot index's cosine
+    /// path).  With both approximations off, every row is scored with
+    /// the same batch dot kernel the hot index uses — Eq. 4 values are
+    /// bit-identical to scoring the same vector hot.  In quantized mode
+    /// SQ8 segments score via the asymmetric kernel; coarse-pruned
+    /// segments contribute `NEG_INFINITY` per row.
     pub fn score_into(&self, qn: &[f32], out: &mut Vec<f32>) -> Result<()> {
-        for i in 0..self.segments.len() {
-            let d = self.segments[i].d;
-            let block = self.block(i)?;
-            for row in block.chunks_exact(d) {
-                out.push(crate::util::dot(qn, row));
+        let probe = self.select_probes(qn);
+        self.probe_candidates
+            .fetch_add(self.segments.len() as u64, Ordering::Relaxed);
+        for (i, meta) in self.segments.iter().enumerate() {
+            if !probe[i] {
+                out.resize(out.len() + meta.count, f32::NEG_INFINITY);
+                continue;
+            }
+            self.probed_segments.fetch_add(1, Ordering::Relaxed);
+            self.rows_scored
+                .fetch_add(meta.count as u64, Ordering::Relaxed);
+            if self.quantized && meta.has_sq8() {
+                let blk = self.sq8_block(i)?;
+                // fold the affine dequantization into the query once per
+                // (query, segment): score = dot(q, min) + Σ (q·step)·code
+                let offset = crate::util::dot(qn, &blk.mins);
+                let w: Vec<f32> =
+                    qn.iter().zip(&blk.steps).map(|(q, s)| q * s).collect();
+                crate::util::simd::dot_batch_sq8(&w, &blk.codes, meta.d, offset, out);
+            } else {
+                let block = self.block(i)?;
+                crate::util::simd::dot_batch(qn, &block, meta.d, out);
             }
         }
         Ok(())
     }
 
     /// Copy of the stored vector for global id `id` (must be < the cold
-    /// record count).
+    /// record count).  Always reads the full-precision region.
     pub fn vector(&self, id: usize) -> Result<Vec<f32>> {
         anyhow::ensure!(id < self.records, "id {id} is not in the cold tier");
         let i = match self
@@ -346,6 +738,16 @@ impl ColdTier {
             self.misses.load(Ordering::Relaxed),
         )
     }
+
+    /// Cumulative scan gauges: (segments scanned, segments considered,
+    /// rows scored) across every cold query so far.
+    pub fn scan_stats(&self) -> (u64, u64, u64) {
+        (
+            self.probed_segments.load(Ordering::Relaxed),
+            self.probe_candidates.load(Ordering::Relaxed),
+            self.rows_scored.load(Ordering::Relaxed),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -367,14 +769,35 @@ mod tests {
             .collect()
     }
 
+    fn unit_rows(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        let mut out = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            crate::util::l2_normalize(&mut v);
+            out.extend_from_slice(&v);
+        }
+        out
+    }
+
     #[test]
     fn segment_round_trips_records_and_vectors() {
         let dir = tmp("seg");
         let path = dir.0.join("seg-00000.seg");
         let records = seg_records(3, 0);
         let vectors = vec![1.0f32, 0.0, 0.0, 1.0, 0.6, 0.8];
-        let meta = write_segment(&path, StreamId(0), 0, &records, &vectors, 2).unwrap();
+        let meta = write_segment(
+            &path,
+            StreamId(0),
+            0,
+            &records,
+            &vectors,
+            2,
+            SegmentOptions::default(),
+        )
+        .unwrap();
         assert_eq!(meta.count, 3);
+        assert!(!meta.has_sq8());
         let (meta2, recs2) = open_segment(&path, StreamId(0), 2).unwrap();
         assert_eq!(meta2.base, 0);
         assert_eq!(recs2.len(), 3);
@@ -387,24 +810,91 @@ mod tests {
     }
 
     #[test]
-    fn segment_detects_corruption() {
-        let dir = tmp("segcorrupt");
+    fn plain_options_write_the_v1_layout_byte_identically() {
+        // the exactness contract's foundation: default options reproduce
+        // the pre-v2 writer exactly, so old and new sealed files match
+        let dir = tmp("segv1");
         let path = dir.0.join("seg-00000.seg");
         let records = seg_records(2, 0);
-        write_segment(&path, StreamId(0), 0, &records, &[1.0, 0.0, 0.0, 1.0], 2).unwrap();
-        // flip a byte in the vector region (the tail of the file)
+        write_segment(
+            &path,
+            StreamId(0),
+            0,
+            &records,
+            &[1.0, 0.0, 0.0, 1.0],
+            2,
+            SegmentOptions::default(),
+        )
+        .unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // v1 header: version field (offset 8) is 1, no extension
+        assert_eq!(&bytes[..8], SEG_MAGIC);
+        assert_eq!(u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]), 1);
+        let rec_len = 2 * (8 + 8 + 4 + 8);
+        assert_eq!(bytes.len(), SEG_HEADER_LEN + rec_len + 4 * 2 * 4);
+    }
+
+    #[test]
+    fn v2_round_trips_sq8_and_centroids() {
+        let dir = tmp("segv2");
+        let path = dir.0.join("seg-00000.seg");
+        let (n, d) = (32usize, 16usize);
+        let records = seg_records(n, 0);
+        let vectors = unit_rows(n, d, 11);
+        let opts = SegmentOptions { sq8: true, centroids: 4 };
+        let meta = write_segment(&path, StreamId(0), 0, &records, &vectors, d, opts).unwrap();
+        assert!(meta.has_sq8());
+        assert_eq!(meta.centroid_count(), 4);
+        let (meta2, recs2) = open_segment(&path, StreamId(0), d).unwrap();
+        assert_eq!(recs2.len(), n);
+        assert!(meta2.has_sq8());
+        assert_eq!(meta2.centroid_count(), 4);
+        assert_eq!(meta2.centroids, meta.centroids, "centroids survive reopen");
+        // f32 region still bit-exact under v2
+        assert_eq!(load_vectors(&meta2).unwrap(), vectors);
+        // SQ8 reconstruction stays within half a step per dimension
+        let blk = load_sq8(&meta2).unwrap();
+        for (r, row) in vectors.chunks_exact(d).enumerate() {
+            for j in 0..d {
+                let deq = blk.mins[j] + blk.steps[j] * blk.codes[r * d + j] as f32;
+                assert!(
+                    (deq - row[j]).abs() <= blk.steps[j] / 2.0 + 1e-6,
+                    "row {r} dim {j}: dequant {deq} vs {}",
+                    row[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_sq8_region_is_a_typed_error() {
+        let dir = tmp("segsq8bad");
+        let path = dir.0.join("seg-00000.seg");
+        let (n, d) = (8usize, 4usize);
+        let records = seg_records(n, 0);
+        let vectors = unit_rows(n, d, 3);
+        let opts = SegmentOptions { sq8: true, centroids: 0 };
+        write_segment(&path, StreamId(0), 0, &records, &vectors, d, opts).unwrap();
+        // flip the last byte (inside the SQ8 code block at the tail)
         let mut bytes = std::fs::read(&path).unwrap();
-        let n = bytes.len();
-        bytes[n - 1] ^= 0xff;
+        let len = bytes.len();
+        bytes[len - 1] ^= 0xff;
         std::fs::write(&path, &bytes).unwrap();
-        let (meta, _) = open_segment(&path, StreamId(0), 2).unwrap();
-        assert!(load_vectors(&meta).is_err(), "vector checksum must catch the flip");
+        let (meta, _) = open_segment(&path, StreamId(0), d).unwrap();
+        assert!(load_sq8(&meta).is_err(), "SQ8 checksum must catch the flip");
+        // the f32 region is untouched and still loads
+        assert!(load_vectors(&meta).is_ok());
+        // truncating into the SQ8 region is a typed OPEN error
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len as u64 - 3).unwrap();
+        drop(f);
+        assert!(open_segment(&path, StreamId(0), d).is_err());
     }
 
     #[test]
     fn cold_tier_scores_in_global_order_with_lru() {
         let dir = tmp("cold");
-        let mut tier = ColdTier::new(1); // capacity 1 forces paging
+        let mut tier = ColdTier::new(1, false, 0); // capacity 1 forces paging
         // two segments: ids 0..2 and 2..4, orthogonal unit vectors
         let v = [[1.0f32, 0.0], [0.0, 1.0], [-1.0, 0.0], [0.0, -1.0]];
         for (s, base) in [(0usize, 0usize), (1, 2)] {
@@ -414,7 +904,16 @@ mod tests {
             for row in &v[base..base + 2] {
                 vecs.extend_from_slice(row);
             }
-            let meta = write_segment(&path, StreamId(0), base, &records, &vecs, 2).unwrap();
+            let meta = write_segment(
+                &path,
+                StreamId(0),
+                base,
+                &records,
+                &vecs,
+                2,
+                SegmentOptions::default(),
+            )
+            .unwrap();
             tier.push(meta).unwrap();
         }
         assert_eq!(tier.record_count(), 4);
@@ -429,6 +928,114 @@ mod tests {
         assert!(misses >= 2, "both blocks were loaded at least once");
         assert!(resident <= 2 * 2 * 4, "at most one block resident");
         let _ = hits;
+        // scan gauges: one query over 2 segments, all probed
+        let (probed, candidates, rows) = tier.scan_stats();
+        assert_eq!((probed, candidates, rows), (2, 2, 4));
+    }
+
+    #[test]
+    fn quantized_scan_tracks_exact_within_bound() {
+        let dir = tmp("coldsq8");
+        let (n, d) = (24usize, 8usize);
+        let vectors = unit_rows(n, d, 21);
+        let mk_tier = |quantized: bool, tag: &str| {
+            let path = dir.0.join(format!("seg-{tag}.seg"));
+            let meta = write_segment(
+                &path,
+                StreamId(0),
+                0,
+                &seg_records(n, 0),
+                &vectors,
+                d,
+                SegmentOptions { sq8: true, centroids: 0 },
+            )
+            .unwrap();
+            let mut tier = ColdTier::new(2, quantized, 0);
+            tier.push(meta).unwrap();
+            tier
+        };
+        let exact = mk_tier(false, "a");
+        let quant = mk_tier(true, "b");
+        let mut q: Vec<f32> = vectors[..d].to_vec();
+        crate::util::l2_normalize(&mut q);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        exact.score_into(&q, &mut a).unwrap();
+        quant.score_into(&q, &mut b).unwrap();
+        assert_eq!(a.len(), n);
+        assert_eq!(b.len(), n);
+        for i in 0..n {
+            assert!(
+                (a[i] - b[i]).abs() < 0.05,
+                "row {i}: exact {} vs sq8 {}",
+                a[i],
+                b[i]
+            );
+        }
+        // SQ8 resident bytes ≈ codes + 2·d f32 ≪ the f32 block
+        let (resident_q, _, _) = quant.cache_stats();
+        let (resident_f, _, _) = exact.cache_stats();
+        assert!(
+            resident_q < resident_f / 2,
+            "SQ8 block ({resident_q} B) should be far smaller than f32 ({resident_f} B)"
+        );
+    }
+
+    #[test]
+    fn coarse_probe_skips_far_segments_with_neg_infinity() {
+        let dir = tmp("coldprobe");
+        let d = 4usize;
+        // 3 cluster-coherent segments along distinct axes
+        let axes = [[1.0f32, 0.0, 0.0, 0.0], [0.0, 1.0, 0.0, 0.0], [0.0, 0.0, 1.0, 0.0]];
+        let mut tier = ColdTier::new(4, false, 1); // probe exactly 1 segment
+        for (s, axis) in axes.iter().enumerate() {
+            let mut vecs = Vec::new();
+            for _ in 0..4 {
+                vecs.extend_from_slice(axis);
+            }
+            let meta = write_segment(
+                &dir.0.join(format!("seg-{s:05}.seg")),
+                StreamId(0),
+                s * 4,
+                &seg_records(4, s * 4),
+                &vecs,
+                d,
+                SegmentOptions { sq8: false, centroids: 1 },
+            )
+            .unwrap();
+            assert_eq!(meta.centroid_count(), 1);
+            tier.push(meta).unwrap();
+        }
+        let mut out = Vec::new();
+        tier.score_into(&[0.0, 1.0, 0.0, 0.0], &mut out).unwrap();
+        assert_eq!(out.len(), 12);
+        // segment 1 scanned exactly; 0 and 2 pruned to NEG_INFINITY
+        assert!(out[..4].iter().all(|s| *s == f32::NEG_INFINITY));
+        assert!(out[4..8].iter().all(|s| (*s - 1.0).abs() < 1e-6));
+        assert!(out[8..].iter().all(|s| *s == f32::NEG_INFINITY));
+        let (probed, candidates, rows) = tier.scan_stats();
+        assert_eq!((probed, candidates, rows), (1, 3, 4));
+        // nprobe ≥ segment count degrades to the exact scan
+        let mut all = ColdTier::new(4, false, 99);
+        for (s, axis) in axes.iter().enumerate() {
+            let mut vecs = Vec::new();
+            for _ in 0..4 {
+                vecs.extend_from_slice(axis);
+            }
+            let meta = write_segment(
+                &dir.0.join(format!("seg2-{s:05}.seg")),
+                StreamId(0),
+                s * 4,
+                &seg_records(4, s * 4),
+                &vecs,
+                d,
+                SegmentOptions { sq8: false, centroids: 1 },
+            )
+            .unwrap();
+            all.push(meta).unwrap();
+        }
+        let mut full = Vec::new();
+        all.score_into(&[0.0, 1.0, 0.0, 0.0], &mut full).unwrap();
+        assert!(full.iter().all(|s| s.is_finite()), "nprobe=all scans everything");
     }
 
     #[test]
@@ -436,9 +1043,58 @@ mod tests {
         let dir = tmp("coldgap");
         let path = dir.0.join("seg-00000.seg");
         let records = seg_records(2, 5);
-        let meta = write_segment(&path, StreamId(0), 5, &records, &[1.0, 0.0, 0.0, 1.0], 2)
-            .unwrap();
-        let mut tier = ColdTier::new(2);
+        let meta = write_segment(
+            &path,
+            StreamId(0),
+            5,
+            &records,
+            &[1.0, 0.0, 0.0, 1.0],
+            2,
+            SegmentOptions::default(),
+        )
+        .unwrap();
+        let mut tier = ColdTier::new(2, false, 0);
         assert!(tier.push(meta).is_err(), "segment base 5 cannot start the tier");
+    }
+
+    #[test]
+    fn segment_detects_corruption() {
+        let dir = tmp("segcorrupt");
+        let path = dir.0.join("seg-00000.seg");
+        let records = seg_records(2, 0);
+        write_segment(
+            &path,
+            StreamId(0),
+            0,
+            &records,
+            &[1.0, 0.0, 0.0, 1.0],
+            2,
+            SegmentOptions::default(),
+        )
+        .unwrap();
+        // flip a byte in the vector region (the tail of the file)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let (meta, _) = open_segment(&path, StreamId(0), 2).unwrap();
+        assert!(load_vectors(&meta).is_err(), "vector checksum must catch the flip");
+    }
+
+    #[test]
+    fn centroid_training_is_deterministic_and_normalized() {
+        let (n, d, k) = (40usize, 8usize, 4usize);
+        let vectors = unit_rows(n, d, 77);
+        let a = train_centroids(&vectors, d, k);
+        let b = train_centroids(&vectors, d, k);
+        assert_eq!(a.len(), k * d);
+        assert_eq!(a, b, "training must be deterministic");
+        for cen in a.chunks_exact(d) {
+            let norm: f32 = cen.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4, "centroid norm {norm}");
+        }
+        // k capped by the row count
+        assert_eq!(train_centroids(&vectors[..2 * d], d, 8).len(), 2 * d);
+        assert!(train_centroids(&vectors, d, 0).is_empty());
     }
 }

@@ -44,7 +44,7 @@ use anyhow::{bail, Context, Result};
 use crate::memory::fabric::StreamId;
 use crate::memory::hierarchy::ClusterRecord;
 use crate::memory::raw::RawStore;
-use crate::memory::segment::{self, SegmentMeta};
+use crate::memory::segment::{self, SegmentMeta, SegmentOptions};
 use crate::util::sync::{ranks, OrderedMutex};
 use crate::video::frame::Frame;
 
@@ -393,13 +393,33 @@ fn render_stream_manifest(stream: StreamId, d: usize, sealed: &[SegmentMeta]) ->
     out.push_str(&format!("d_embed {d}\n"));
     out.push_str(&format!("sealed {}\n", sealed.len()));
     for m in sealed {
-        out.push_str(&format!("seg {} {} {}\n", m.file_name, m.base, m.count));
+        // v2 segments with a coarse index list their centroid count as an
+        // optional 4th field; plain lines stay byte-identical to v1 (and
+        // old parsers ignored trailing tokens, so the field is forward-
+        // compatible too)
+        if m.centroid_count() > 0 {
+            out.push_str(&format!(
+                "seg {} {} {} {}\n",
+                m.file_name,
+                m.base,
+                m.count,
+                m.centroid_count()
+            ));
+        } else {
+            out.push_str(&format!("seg {} {} {}\n", m.file_name, m.base, m.count));
+        }
     }
     out
 }
 
-/// Parse a stream manifest into `(file_name, base, count)` triples.
-fn parse_stream_manifest(text: &str, stream: StreamId, d: usize) -> Result<Vec<(String, usize, usize)>> {
+/// Parse a stream manifest into `(file_name, base, count, centroids)`
+/// tuples; the centroid count is `None` on legacy 3-field lines.
+#[allow(clippy::type_complexity)]
+fn parse_stream_manifest(
+    text: &str,
+    stream: StreamId,
+    d: usize,
+) -> Result<Vec<(String, usize, usize, Option<usize>)>> {
     let mut lines = text.lines();
     if lines.next() != Some(STREAM_MANIFEST_HEADER) {
         bail!("unrecognized stream manifest header");
@@ -427,7 +447,13 @@ fn parse_stream_manifest(text: &str, stream: StreamId, d: usize) -> Result<Vec<(
         let file = parts.next().context("segment file missing")?.to_string();
         let base: usize = parts.next().context("segment base missing")?.parse()?;
         let count: usize = parts.next().context("segment count missing")?.parse()?;
-        out.push((file, base, count));
+        let centroids = match parts.next() {
+            Some(tok) => Some(tok.parse::<usize>().with_context(|| {
+                format!("segment centroid count '{tok}' malformed")
+            })?),
+            None => None,
+        };
+        out.push((file, base, count, centroids));
     }
     Ok(out)
 }
@@ -454,11 +480,21 @@ pub struct StreamStorage {
     wal: Wal,
     sealed: Vec<SegmentMeta>,
     sealed_records: usize,
+    /// optional v2 regions written at seal time (SQ8, coarse centroids);
+    /// existing segments keep whatever layout they were sealed with
+    opts: SegmentOptions,
 }
 
 impl StreamStorage {
     /// Open (creating or recovering) one stream's storage directory.
-    pub fn open(dir: &Path, stream: StreamId, d: usize) -> Result<(Self, RecoveredStream)> {
+    /// `opts` applies to *future* seals; already-sealed segments open
+    /// as whatever version they were written with.
+    pub fn open(
+        dir: &Path,
+        stream: StreamId,
+        d: usize,
+        opts: SegmentOptions,
+    ) -> Result<(Self, RecoveredStream)> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating stream dir {}", dir.display()))?;
 
@@ -467,7 +503,7 @@ impl StreamStorage {
         let mut sealed_meta = Vec::new();
         let manifest_path = dir.join("MANIFEST");
         if let Ok(text) = std::fs::read_to_string(&manifest_path) {
-            for (file, base, count) in parse_stream_manifest(&text, stream, d)? {
+            for (file, base, count, centroids) in parse_stream_manifest(&text, stream, d)? {
                 let path = dir.join(&file);
                 let (meta, records) = segment::open_segment(&path, stream, d)
                     .with_context(|| format!("opening sealed segment {}", path.display()))?;
@@ -478,6 +514,15 @@ impl StreamStorage {
                         meta.base,
                         meta.count
                     );
+                }
+                if let Some(k) = centroids {
+                    if meta.centroid_count() != k {
+                        bail!(
+                            "segment {} has {} centroids but manifest lists {k}",
+                            file,
+                            meta.centroid_count()
+                        );
+                    }
                 }
                 if meta.base != sealed_meta.len() {
                     bail!(
@@ -526,6 +571,7 @@ impl StreamStorage {
             wal,
             sealed,
             sealed_records,
+            opts,
         };
         Ok((storage, RecoveredStream { sealed_records: sealed_meta, wal_tail }))
     }
@@ -579,6 +625,7 @@ impl StreamStorage {
             records,
             vectors,
             self.d,
+            self.opts,
         )?;
         // the manifest rename is the commit point: in-memory state only
         // mutates after every fallible step, so a failed seal leaves the
@@ -878,7 +925,7 @@ pub(crate) mod tests {
         let tmp = TempDir::new("storage");
         let d = 2usize;
         {
-            let (mut st, recovered) = StreamStorage::open(&tmp.0, StreamId(0), d).unwrap();
+            let (mut st, recovered) = StreamStorage::open(&tmp.0, StreamId(0), d, SegmentOptions::default()).unwrap();
             assert!(recovered.sealed_records.is_empty());
             let records: Vec<ClusterRecord> =
                 (0..4).map(|i| rec(i, i as u64, vec![i as u64])).collect();
@@ -895,7 +942,7 @@ pub(crate) mod tests {
             st.append(&rec(9, 9, vec![9]), &[1.0, 0.0]);
             st.append(&rec(10, 10, vec![10]), &[0.0, 1.0]);
         }
-        let (st, recovered) = StreamStorage::open(&tmp.0, StreamId(0), d).unwrap();
+        let (st, recovered) = StreamStorage::open(&tmp.0, StreamId(0), d, SegmentOptions::default()).unwrap();
         assert_eq!(st.sealed_records(), 4);
         assert_eq!(recovered.sealed_records.len(), 4, "recovered to the sealed watermark");
         assert!(recovered.wal_tail.is_empty(), "unflushed WAL tail is gone");
@@ -903,15 +950,52 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn storage_seals_v2_and_manifest_lists_centroids() {
+        let tmp = TempDir::new("storagev2");
+        let d = 2usize;
+        let opts = SegmentOptions { sq8: true, centroids: 2 };
+        {
+            let (mut st, _) = StreamStorage::open(&tmp.0, StreamId(0), d, opts).unwrap();
+            let records: Vec<ClusterRecord> =
+                (0..4).map(|i| rec(i, i as u64, vec![i as u64])).collect();
+            let mut vecs = Vec::new();
+            for (rec, v) in records.iter().zip([[1.0f32, 0.0], [0.0, 1.0], [0.6, 0.8], [0.8, 0.6]])
+            {
+                st.append(rec, &v);
+                vecs.extend_from_slice(&v);
+            }
+            st.seal(&records, &vecs).unwrap();
+            assert!(st.segments()[0].has_sq8());
+            assert_eq!(st.segments()[0].centroid_count(), 2);
+        }
+        // the seg line carries the centroid count as a 4th field
+        let manifest = std::fs::read_to_string(tmp.0.join("MANIFEST")).unwrap();
+        let seg_line = manifest.lines().find(|l| l.starts_with("seg ")).unwrap();
+        assert_eq!(seg_line.split_whitespace().count(), 5, "seg line: {seg_line}");
+        assert!(seg_line.ends_with(" 2"), "centroid count recorded: {seg_line}");
+        // reopening with *default* options still reads the v2 segment —
+        // options govern future seals, not existing files
+        let (st, recovered) =
+            StreamStorage::open(&tmp.0, StreamId(0), d, SegmentOptions::default()).unwrap();
+        assert_eq!(recovered.sealed_records.len(), 4);
+        assert!(st.segments()[0].has_sq8());
+        assert_eq!(st.segments()[0].centroid_count(), 2);
+        // a manifest/header centroid-count disagreement is a typed error
+        let tampered = manifest.replace(" 2\n", " 3\n");
+        atomic_write(&tmp.0.join("MANIFEST"), tampered.as_bytes()).unwrap();
+        assert!(StreamStorage::open(&tmp.0, StreamId(0), d, SegmentOptions::default()).is_err());
+    }
+
+    #[test]
     fn storage_flushed_wal_tail_survives() {
         let tmp = TempDir::new("waltail");
         let d = 2usize;
         {
-            let (mut st, _) = StreamStorage::open(&tmp.0, StreamId(0), d).unwrap();
+            let (mut st, _) = StreamStorage::open(&tmp.0, StreamId(0), d, SegmentOptions::default()).unwrap();
             st.append(&rec(0, 0, vec![0]), &[1.0, 0.0]);
             st.flush().unwrap();
         }
-        let (_, recovered) = StreamStorage::open(&tmp.0, StreamId(0), d).unwrap();
+        let (_, recovered) = StreamStorage::open(&tmp.0, StreamId(0), d, SegmentOptions::default()).unwrap();
         assert!(recovered.sealed_records.is_empty());
         assert_eq!(recovered.wal_tail.len(), 1);
         assert_eq!(recovered.wal_tail[0].1, vec![1.0, 0.0]);

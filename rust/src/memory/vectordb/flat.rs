@@ -71,8 +71,16 @@ impl VectorIndex for FlatIndex {
         let q = normalized_query(query, self.metric);
         out.clear();
         out.reserve(self.len());
-        for row in self.data.chunks_exact(self.dim) {
-            out.push(metric_score(self.metric, &q, row));
+        match self.metric {
+            // dot-metric scan via the batch kernel (bit-identical per row)
+            Metric::Cosine | Metric::InnerProduct => {
+                crate::util::simd::dot_batch(&q, &self.data, self.dim, out);
+            }
+            Metric::L2 => {
+                for row in self.data.chunks_exact(self.dim) {
+                    out.push(metric_score(self.metric, &q, row));
+                }
+            }
         }
     }
 

@@ -215,13 +215,22 @@ impl VectorIndex for IvfIndex {
             }
             return finish_topk(buf, k);
         }
-        // rank cells by centroid similarity UNDER THE METRIC, probe top-nprobe
-        let mut cell_scores: Vec<(usize, f32)> = self
-            .centroids
-            .chunks_exact(self.dim)
-            .enumerate()
-            .map(|(c, cen)| (c, metric_score(self.metric, &q, cen)))
-            .collect();
+        // rank cells by centroid similarity UNDER THE METRIC, probe
+        // top-nprobe; the dot metrics rank via the batch kernel (the
+        // centroid block is contiguous), L2 stays scalar
+        let mut cell_scores: Vec<(usize, f32)> = match self.metric {
+            Metric::Cosine | Metric::InnerProduct => {
+                let mut s = Vec::new();
+                crate::util::simd::dot_batch(&q, &self.centroids, self.dim, &mut s);
+                s.into_iter().enumerate().collect()
+            }
+            Metric::L2 => self
+                .centroids
+                .chunks_exact(self.dim)
+                .enumerate()
+                .map(|(c, cen)| (c, metric_score(self.metric, &q, cen)))
+                .collect(),
+        };
         cell_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
         for &(c, _) in cell_scores.iter().take(self.nprobe) {
             for &id in &self.cells[c] {
@@ -244,8 +253,15 @@ impl VectorIndex for IvfIndex {
         let q = normalized_query(query, self.metric);
         out.clear();
         out.reserve(self.len());
-        for row in self.data.chunks_exact(self.dim) {
-            out.push(metric_score(self.metric, &q, row));
+        match self.metric {
+            Metric::Cosine | Metric::InnerProduct => {
+                crate::util::simd::dot_batch(&q, &self.data, self.dim, out);
+            }
+            Metric::L2 => {
+                for row in self.data.chunks_exact(self.dim) {
+                    out.push(metric_score(self.metric, &q, row));
+                }
+            }
         }
     }
 

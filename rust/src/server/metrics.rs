@@ -258,6 +258,17 @@ impl Snapshot {
                 fmt_bytes(m.raw_resident_bytes),
                 m.evictions,
             ));
+            // cold-scan observability: probe selectivity + rows scored +
+            // the scan representation (exact f32 vs quantized SQ8)
+            if m.cold_probe_candidates > 0 {
+                out.push_str(&format!(
+                    " / scan {}/{} seg, {} rows, {}",
+                    m.cold_probe_segments,
+                    m.cold_probe_candidates,
+                    m.cold_rows_scored,
+                    if m.cold_quantized { "sq8" } else { "exact" },
+                ));
+            }
         }
         out
     }
@@ -406,12 +417,17 @@ mod tests {
             evictions: 30,
             cold_hits: 9,
             cold_misses: 1,
+            cold_probe_segments: 4,
+            cold_probe_candidates: 12,
+            cold_rows_scored: 120,
+            cold_quantized: true,
         });
         let text = s.render();
         assert!(text.contains("mem: hot 2.0 KiB (10 rec)"), "{text}");
         assert!(text.contains("cold 3 seg (30 rec"), "{text}");
         assert!(text.contains("hit 90%"), "{text}");
         assert!(text.contains("30 evicted"), "{text}");
+        assert!(text.contains("scan 4/12 seg, 120 rows, sq8"), "{text}");
     }
 
     #[test]
@@ -458,6 +474,10 @@ mod tests {
             evictions: 30,
             cold_hits: 9,
             cold_misses: 1,
+            cold_probe_segments: 4,
+            cold_probe_candidates: 12,
+            cold_rows_scored: 120,
+            cold_quantized: true,
         });
         let wire = s.to_json().to_string();
         let back = Snapshot::from_json(&Json::parse(&wire).unwrap()).unwrap();
@@ -470,6 +490,10 @@ mod tests {
         let mem = back.memory.expect("memory gauges survive the wire");
         assert_eq!(mem.hot_bytes, 2048);
         assert_eq!(mem.cold_hits, 9);
+        assert_eq!(mem.cold_probe_segments, 4);
+        assert_eq!(mem.cold_probe_candidates, 12);
+        assert_eq!(mem.cold_rows_scored, 120);
+        assert!(mem.cold_quantized);
 
         // None percentiles stay None through the wire (absent keys)
         let empty = Metrics::default().snapshot();

@@ -62,6 +62,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a boolean: {self:?}"),
+        }
+    }
+
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {

@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod json;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod sync;
 

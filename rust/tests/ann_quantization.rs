@@ -1,0 +1,277 @@
+//! Recall gate + format-compat suite for the quantized/coarse cold tier
+//! (tier-1: `cargo test` runs this; DESIGN.md §Quantization-and-ANN).
+//!
+//! The exactness contract has two halves:
+//!  * exact mode (`quantization = "none"`, `coarse_nprobe = 0`) stays
+//!    selection-bit-identical — covered here by the v1-compat test and
+//!    by the restart-equivalence suite in `memory_recovery.rs`;
+//!  * quantized+coarse mode is an opt-in approximation gated on
+//!    recall@k ≥ 0.95 against exact-mode selection (k = the retrieval
+//!    sampling budget) — covered by `recall_gate_holds` below.
+
+use std::path::PathBuf;
+
+use venus::config::{MemoryConfig, RetrievalConfig};
+use venus::memory::{ClusterRecord, Hierarchy, StreamId};
+use venus::util::rng::Pcg64;
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let path = std::env::temp_dir().join(format!(
+            "venus-annq-{tag}-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).unwrap();
+        Self(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+const D: usize = 32;
+const CLUSTERS: usize = 8;
+
+/// Unit-norm cluster centers, deterministic.
+fn centers(rng: &mut Pcg64) -> Vec<Vec<f32>> {
+    (0..CLUSTERS)
+        .map(|_| {
+            let mut c: Vec<f32> = (0..D).map(|_| rng.normal()).collect();
+            venus::util::l2_normalize(&mut c);
+            c
+        })
+        .collect()
+}
+
+/// Fill a shard with `n` records in cluster-coherent *runs* (the stream
+/// dwells on one scene before moving on — what temporal locality gives a
+/// real camera), so sealed segments are cluster-coherent and the coarse
+/// index has structure to route on.
+fn fill(h: &mut Hierarchy, n: usize, run: usize, seed: u64) {
+    let mut rng = Pcg64::seeded(seed);
+    let cs = centers(&mut rng);
+    for i in 0..n {
+        let c = &cs[(i / run) % CLUSTERS];
+        let mut v: Vec<f32> = c
+            .iter()
+            .map(|x| x + 0.15 * rng.normal())
+            .collect();
+        venus::util::l2_normalize(&mut v);
+        h.archive_frame(i as u64, &venus::video::frame::Frame::filled(8, [0.5; 3]))
+            .unwrap();
+        h.insert(
+            &v,
+            ClusterRecord {
+                stream: StreamId(0),
+                scene_id: i,
+                centroid_frame: i as u64,
+                members: vec![i as u64],
+            },
+        )
+        .unwrap();
+    }
+}
+
+/// Top-k ids by score, deterministic tie-break on id.
+fn topk(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order.truncate(k);
+    order
+}
+
+/// Cold-heavy config: segments of 256 records, hot budget ≈ 2 segments.
+fn cold_heavy(quantized: bool, nprobe: usize, centroids: usize) -> MemoryConfig {
+    let rec_bytes = D * 4 + std::mem::size_of::<ClusterRecord>() + 8;
+    MemoryConfig {
+        segment_records: 256,
+        hot_budget_bytes: 2 * 256 * rec_bytes,
+        cold_cache_segments: 64,
+        quantization: if quantized { "sq8".into() } else { "none".into() },
+        coarse_nprobe: nprobe,
+        coarse_centroids_per_segment: centroids,
+        ..Default::default()
+    }
+}
+
+/// The gate the ISSUE's acceptance criterion names: quantized+coarse
+/// selection keeps recall@k ≥ 0.95 against exact-mode selection, k =
+/// the retrieval sampling budget.
+#[test]
+fn recall_gate_holds() {
+    let tmp = TempDir::new("recall");
+    let n = 4096;
+    let run = 256; // one segment per cluster dwell
+    let k = RetrievalConfig::default().budget; // the sampling budget
+
+    let mut exact =
+        Hierarchy::durable(&cold_heavy(false, 0, 0), D, StreamId(0), &tmp.0.join("exact"), 8)
+            .unwrap();
+    fill(&mut exact, n, run, 42);
+    let mut approx =
+        Hierarchy::durable(&cold_heavy(true, 4, 8), D, StreamId(0), &tmp.0.join("approx"), 8)
+            .unwrap();
+    fill(&mut approx, n, run, 42);
+
+    let ts = approx.tier_stats();
+    assert!(
+        ts.cold_records > 3 * n / 4,
+        "tier split is not cold-heavy: {ts:?}"
+    );
+    assert!(ts.cold_quantized, "approx shard must report quantized scans");
+
+    let mut rng = Pcg64::seeded(7);
+    let cs = centers(&mut Pcg64::seeded(42)); // same centers fill() used
+    let mut total_overlap = 0usize;
+    let queries = 32;
+    let (mut se, mut sa) = (Vec::new(), Vec::new());
+    for qi in 0..queries {
+        let c = &cs[qi % CLUSTERS];
+        let mut q: Vec<f32> = c.iter().map(|x| x + 0.1 * rng.normal()).collect();
+        venus::util::l2_normalize(&mut q);
+        exact.score_all(&q, &mut se).unwrap();
+        approx.score_all(&q, &mut sa).unwrap();
+        assert_eq!(se.len(), sa.len());
+        let want = topk(&se, k);
+        let got = topk(&sa, k);
+        total_overlap += want.iter().filter(|id| got.contains(id)).count();
+    }
+    let recall = total_overlap as f64 / (queries * k) as f64;
+    assert!(
+        recall >= 0.95,
+        "recall@{k} = {recall:.3} under sq8 + coarse_nprobe=4 (need >= 0.95)"
+    );
+
+    // the observability gauges saw the pruning: far fewer segments
+    // scanned than considered
+    let ts = approx.tier_stats();
+    assert!(
+        ts.cold_probe_segments < ts.cold_probe_candidates / 2,
+        "coarse probing never pruned: {ts:?}"
+    );
+}
+
+/// Segments sealed by the v1 (plain f32) code path — i.e. with default
+/// options — must open and score **bit-identically** when the shard is
+/// reopened with quantization and coarse probing configured: new
+/// options only shape *future* seals, and v1 segments have no SQ8
+/// region to scan and no centroids to prune on.
+#[test]
+fn v1_segments_score_identically_under_quantized_config() {
+    let tmp = TempDir::new("v1compat");
+    let n = 1024;
+    let run = 256;
+
+    // seal everything with the v1 layout
+    {
+        let mut h =
+            Hierarchy::durable(&cold_heavy(false, 0, 0), D, StreamId(0), &tmp.0, 8).unwrap();
+        fill(&mut h, n, run, 9);
+        h.flush().unwrap();
+    }
+    let queries: Vec<Vec<f32>> = {
+        let mut rng = Pcg64::seeded(11);
+        (0..8)
+            .map(|_| {
+                let mut q: Vec<f32> = (0..D).map(|_| rng.normal()).collect();
+                venus::util::l2_normalize(&mut q);
+                q
+            })
+            .collect()
+    };
+    // ground truth: reopen in exact mode
+    let mut ground = Vec::new();
+    {
+        let exact =
+            Hierarchy::durable(&cold_heavy(false, 0, 0), D, StreamId(0), &tmp.0, 8).unwrap();
+        assert_eq!(exact.len(), n);
+        for q in &queries {
+            let mut s = Vec::new();
+            exact.score_all(q, &mut s).unwrap();
+            ground.push(s);
+        }
+    }
+    // reopen the SAME directory in quantized+coarse mode
+    let approx = Hierarchy::durable(&cold_heavy(true, 2, 8), D, StreamId(0), &tmp.0, 8).unwrap();
+    assert_eq!(approx.len(), n);
+    let mut sa = Vec::new();
+    for (q, se) in queries.iter().zip(&ground) {
+        approx.score_all(q, &mut sa).unwrap();
+        assert_eq!(se.len(), sa.len());
+        for (i, (x, y)) in se.iter().zip(&sa).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "score {i} drifts on a v1 segment under quantized config"
+            );
+        }
+    }
+}
+
+/// Mixed-format stream: v1 segments sealed by the old path stay exact
+/// while *new* seals pick up SQ8 + centroids — and the shard keeps
+/// recovering across restarts with the mixed manifest.
+#[test]
+fn mixed_v1_v2_stream_recovers_and_scores() {
+    let tmp = TempDir::new("mixed");
+    let run = 256;
+    {
+        let mut h =
+            Hierarchy::durable(&cold_heavy(false, 0, 0), D, StreamId(0), &tmp.0, 8).unwrap();
+        fill(&mut h, 1024, run, 5); // 4 v1 segments (some demoted)
+        h.flush().unwrap();
+    }
+    {
+        // reopen quantized: extend the stream with v2 seals
+        let mut h =
+            Hierarchy::durable(&cold_heavy(true, 0, 8), D, StreamId(0), &tmp.0, 8).unwrap();
+        let mut rng = Pcg64::seeded(6);
+        let cs = centers(&mut Pcg64::seeded(5));
+        for i in 1024..2048usize {
+            let c = &cs[(i / run) % CLUSTERS];
+            let mut v: Vec<f32> = c.iter().map(|x| x + 0.15 * rng.normal()).collect();
+            venus::util::l2_normalize(&mut v);
+            h.archive_frame(i as u64, &venus::video::frame::Frame::filled(8, [0.5; 3]))
+                .unwrap();
+            h.insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(0),
+                    scene_id: i,
+                    centroid_frame: i as u64,
+                    members: vec![i as u64],
+                },
+            )
+            .unwrap();
+        }
+        h.flush().unwrap();
+        h.check_invariants().unwrap();
+    }
+    // restart once more: the mixed manifest (3-field v1 lines + 4-field
+    // v2 lines) recovers, and queries span both formats
+    let h = Hierarchy::durable(&cold_heavy(true, 0, 8), D, StreamId(0), &tmp.0, 8).unwrap();
+    assert_eq!(h.len(), 2048);
+    h.check_invariants().unwrap();
+    let mut rng = Pcg64::seeded(12);
+    let mut q: Vec<f32> = (0..D).map(|_| rng.normal()).collect();
+    venus::util::l2_normalize(&mut q);
+    let mut scores = Vec::new();
+    h.score_all(&q, &mut scores).unwrap();
+    assert_eq!(scores.len(), 2048);
+    assert!(scores.iter().all(|s| s.is_finite()), "nprobe=0 must scan everything");
+}
