@@ -14,7 +14,7 @@
 #   3. `cargo test --features pjrt` — runs the cross-backend parity suite
 #      (rust/tests/native_vs_artifact.rs) against the artifacts.
 
-.PHONY: all build test bench bench-json lint verify loadtest artifacts fmt clean
+.PHONY: all build test bench bench-json lint verify loadtest camtest artifacts fmt clean
 
 all: build
 
@@ -37,6 +37,8 @@ bench-json:
 	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench hotpath_micro
 	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench memory_lifecycle
 	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench ann_scale
+	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench wire_throughput
+	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench ingest_wire
 
 # Invariant lint (tools/vlint: panic policy, lock discipline, config-key
 # hygiene, wire-tag coverage — see DESIGN.md §Static-Analysis), then
@@ -68,6 +70,48 @@ loadtest: build
 	./target/release/venus loadgen --connect $(LOADTEST_ADDR) \
 		--clients 8 --rate 64 --duration-secs $(LOADTEST_SECS) --shutdown \
 		|| kill $$SERVER_PID 2>/dev/null; \
+	wait $$SERVER_PID
+
+# Live-ingest smoke test: spawn a release server, push frames through a
+# real `venus camera` client WHILE `venus loadgen` drives query traffic
+# at the same gateway, then assert the freshness gauges surfaced over
+# the wire and stop the server gracefully.  The camera opens stream 0 on
+# top of the preset the server pre-ingested (`--frames` counts from the
+# stream's current watermark); `--fps 64` with a 1 s partition bound
+# seals a partition every 64 frames so freshness tails appear mid-run.
+# Override: make camtest CAMTEST_ADDR=127.0.0.1:7734
+CAMTEST_ADDR ?= 127.0.0.1:7662
+camtest: build
+	@echo "starting venus serve --listen $(CAMTEST_ADDR) ..."
+	@printf '[ingest]\nmax_partition_s = 1.0\n' > target/camtest.toml; \
+	./target/release/venus serve --listen $(CAMTEST_ADDR) \
+		--config target/camtest.toml --queries 16 < /dev/null & \
+	SERVER_PID=$$!; \
+	trap 'kill $$SERVER_PID 2>/dev/null || true' EXIT; \
+	for i in $$(seq 1 120); do \
+		kill -0 $$SERVER_PID 2>/dev/null || { echo "server exited before listening"; exit 1; }; \
+		./target/release/venus query --connect $(CAMTEST_ADDR) --ping >/dev/null 2>&1 && break; \
+		sleep 1; \
+	done; \
+	./target/release/venus camera --connect $(CAMTEST_ADDR) \
+		--config target/camtest.toml --stream 0 --fps 64 --frames 192 --batch 16 & \
+	CAMERA_PID=$$!; \
+	./target/release/venus loadgen --connect $(CAMTEST_ADDR) \
+		--clients 4 --rate 32 --duration-secs 5 \
+		|| { echo "loadgen failed under live ingest"; exit 1; }; \
+	wait $$CAMERA_PID || { echo "camera failed"; exit 1; }; \
+	for i in $$(seq 1 60); do \
+		./target/release/venus query --connect $(CAMTEST_ADDR) --stats --json \
+			| grep -q '"freshness_p95_ms"' && break; \
+		[ $$i -lt 60 ] || { echo "freshness gauges never appeared in stats"; exit 1; }; \
+		sleep 1; \
+	done; \
+	FRESH=$$(./target/release/venus query --connect $(CAMTEST_ADDR) --stats --json \
+		| sed -n 's/.*"freshness_p95_ms":\([0-9.eE+-]*\).*/\1/p' | head -1); \
+	echo "capture->queryable freshness p95: $$FRESH ms"; \
+	awk -v f="$$FRESH" 'BEGIN { exit !(f > 0 && f < 30000) }' \
+		|| { echo "freshness p95 $$FRESH ms outside (0, 30000)"; exit 1; }; \
+	./target/release/venus query --connect $(CAMTEST_ADDR) --shutdown; \
 	wait $$SERVER_PID
 
 # AOT-export the MEM entry points (embed_image_b{1,8,32}, embed_text_b1,

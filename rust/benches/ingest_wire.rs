@@ -1,0 +1,184 @@
+//! ingest_wire — live camera ingest over TCP × concurrent query load.
+//!
+//! Starts a hub-enabled gateway over an EMPTY fabric, pushes two paced
+//! `Camera` clients through it (the real wire envelopes, not in-process
+//! calls), and drives query traffic against the same gateway while the
+//! frames land: a steady phase for the headline numbers and an overload
+//! burst that queues the Interactive lane so the admission controller's
+//! backpressure verdicts show up in the camera reports.
+//!
+//! Headline: sustained ingest FPS × served QPS, query p95 under live
+//! ingest, and capture→queryable freshness p50/p95 — persisted via
+//! `BENCH_JSON_DIR` as flat metrics alongside the printed tables.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use venus::config::VenusConfig;
+use venus::memory::{InMemoryRaw, MemoryFabric, RawStore};
+use venus::net::wire::{Camera, CameraReport, Gateway, IngestHub, LoadGen};
+use venus::server::Service;
+use venus::util::bench::{note, persist_metric, section};
+use venus::util::stats::fmt_duration;
+use venus::video::synth::{SynthConfig, VideoSynth};
+
+const STREAMS: usize = 2;
+/// Pacing rate the cameras declare and enforce — 4× the synth's native
+/// 8 fps so the run finishes in seconds while staying genuinely paced.
+const CAMERA_FPS: f64 = 32.0;
+/// Stream time at the synth's native rate (240 frames per camera).
+const DURATION_S: f64 = 30.0;
+
+fn main() {
+    section("ingest_wire — live camera ingest over TCP × concurrent query load");
+    let be = venus::backend::shared_default().expect("backend");
+    let synth = Arc::new(VideoSynth::new(
+        SynthConfig { duration_s: DURATION_S, seed: 5, ..Default::default() },
+        be.concept_codes().expect("concept codes"),
+        be.model().patch,
+    ));
+    let frames = synth.total_frames();
+
+    let mut cfg = VenusConfig::default();
+    cfg.wire.listen = "127.0.0.1:0".into();
+    // one partition per second of stream time: freshness samples appear
+    // continuously instead of only at drain
+    cfg.ingest.max_partition_s = 1.0;
+
+    let raws: Vec<Box<dyn RawStore>> = (0..STREAMS)
+        .map(|_| Box::new(InMemoryRaw::new(synth.config().frame_size)) as Box<dyn RawStore>)
+        .collect();
+    let fabric =
+        Arc::new(MemoryFabric::new(&cfg.memory, be.model().d_embed, raws).expect("fabric"));
+    let service = Arc::new(Service::start(&cfg, Arc::clone(&fabric), 0x1f).expect("service"));
+    let hub = Arc::new(
+        IngestHub::new(&cfg, Arc::clone(&fabric), Arc::clone(&service.metrics), STREAMS)
+            .expect("hub"),
+    );
+    let gateway = Gateway::start_with(&cfg.wire, Arc::clone(&service), Some(Arc::clone(&hub)))
+        .expect("gateway");
+    let addr = gateway.local_addr();
+    note(&format!(
+        "gateway on {addr}: {STREAMS} cameras × {frames} frames at {CAMERA_FPS} fps declared"
+    ));
+
+    let t0 = Instant::now();
+    let cams: Vec<thread::JoinHandle<CameraReport>> = (0..STREAMS)
+        .map(|sid| {
+            let synth = Arc::clone(&synth);
+            let wire = cfg.wire.clone();
+            let addr = addr.to_string();
+            thread::spawn(move || {
+                let mut cam = Camera::new(addr, sid as u16, synth);
+                cam.fps = CAMERA_FPS;
+                cam.wire = wire;
+                cam.run().expect("camera run")
+            })
+        })
+        .collect();
+
+    // let the fabric fill before measuring queries against it
+    thread::sleep(Duration::from_secs(2));
+    let texts: Vec<String> =
+        (0..8).map(|i| format!("what happened with concept0{} variant {i}", i % 4)).collect();
+
+    // --- steady phase: the headline coexistence numbers ---
+    let mut lg = LoadGen::new(addr.to_string(), texts.clone());
+    lg.clients = 4;
+    lg.rate_qps = 48.0;
+    lg.duration = Duration::from_secs(3);
+    lg.wire = cfg.wire.clone();
+    let steady = lg.run().expect("steady load");
+    assert!(steady.completed > 0, "no query completed under live ingest");
+    assert_eq!(steady.transport_errors, 0, "gateway dropped connections under load");
+
+    // --- overload burst: queue the Interactive lane so the admission
+    // controller yields ingest (SlowDown verdicts under the default
+    // policy) while the cameras are still pushing ---
+    let mut lg = LoadGen::new(addr.to_string(), texts);
+    lg.clients = 8;
+    lg.rate_qps = 400.0;
+    lg.duration = Duration::from_secs(2);
+    lg.wire = cfg.wire.clone();
+    let burst = lg.run().expect("burst load");
+
+    let reports: Vec<CameraReport> =
+        cams.into_iter().map(|h| h.join().expect("camera thread")).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    for r in &reports {
+        note(&r.render());
+    }
+    let accepted: u64 = reports.iter().map(|r| r.accepted).sum();
+    let slowed: u64 = reports.iter().map(|r| r.slowed_batches).sum();
+    let dropped: u64 = reports.iter().map(|r| r.dropped).sum();
+    assert_eq!(
+        accepted,
+        STREAMS as u64 * frames,
+        "the default slowdown policy must land every frame"
+    );
+    assert_eq!(dropped, 0);
+    // the staleness bound held: a camera may run behind its paced
+    // schedule (burst slowdowns are the point), but never further than
+    // the admission controller's starvation guard allows
+    let schedule_s = frames as f64 / CAMERA_FPS;
+    let bound_s = cfg.ingest.staleness_bound_ms as f64 / 1000.0;
+    for r in &reports {
+        assert!(
+            r.wall_s < schedule_s + bound_s,
+            "camera s{} starved past the staleness bound: {:.1}s wall vs {schedule_s:.1}s \
+             schedule + {bound_s:.1}s bound",
+            r.stream,
+            r.wall_s,
+        );
+    }
+
+    // wait out the embed pool so the freshness tails cover the whole run
+    let mut snap = hub.snapshot();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while snap.pool_queue_depth > 0 {
+        assert!(Instant::now() < deadline, "embed pool never drained");
+        thread::sleep(Duration::from_millis(50));
+        snap = hub.snapshot();
+    }
+    note(&snap.render());
+    let p50s: Vec<f64> = snap.streams.iter().filter_map(|s| s.freshness_p50_ms).collect();
+    let p95s: Vec<f64> = snap.streams.iter().filter_map(|s| s.freshness_p95_ms).collect();
+    assert_eq!(p50s.len(), STREAMS, "every stream must become queryable during the run");
+    let fresh_p50 = p50s.iter().fold(f64::MIN, |a, &b| a.max(b));
+    let fresh_p95 = p95s.iter().fold(f64::MIN, |a, &b| a.max(b));
+
+    let ingest_fps = accepted as f64 / wall;
+    note(&format!(
+        "headline: {ingest_fps:.1} fps ingested × {:.1} q/s served; query p95 {} under live \
+         ingest; freshness p50 {fresh_p50:.0} ms / p95 {fresh_p95:.0} ms (worst stream); \
+         burst: {} ok / {} rejected / {} shed, {slowed} slowed batches",
+        steady.qps(),
+        fmt_duration(steady.latency.percentile(95.0)),
+        burst.completed,
+        burst.rejected,
+        burst.shed,
+    ));
+    persist_metric("ingest_sustained_fps", ingest_fps, "fps");
+    persist_metric("steady_query_qps", steady.qps(), "qps");
+    persist_metric("query_p95_under_ingest_s", steady.latency.percentile(95.0), "s");
+    persist_metric("freshness_p50_ms", fresh_p50, "ms");
+    persist_metric("freshness_p95_ms", fresh_p95, "ms");
+    persist_metric("overload_slowed_batches", slowed as f64, "count");
+
+    // durability-safe teardown order: wire, then the hub drain, then lanes
+    let wire = gateway.shutdown();
+    note(&wire.render());
+    for (sid, stats) in hub.finish_all().expect("ingest drain") {
+        note(&format!(
+            "stream {sid}: {} frames -> {} index vectors across {} partitions",
+            stats.frames, stats.clusters, stats.partitions
+        ));
+        assert_eq!(stats.frames, frames);
+    }
+    drop(hub); // joins the embed pool workers
+    let service = Arc::try_unwrap(service).ok().expect("gateway released the service");
+    let snap = service.shutdown();
+    note(&snap.render());
+    assert_eq!(snap.queued(), 0, "lanes drained");
+}

@@ -17,7 +17,7 @@ use venus::config::VenusConfig;
 use venus::eval::prepare_case;
 use venus::net::wire::{Gateway, LoadGen, WireClient};
 use venus::server::Service;
-use venus::util::bench::{note, section};
+use venus::util::bench::{note, persist_metric, section};
 use venus::util::stats::{fmt_duration, Samples, Table};
 use venus::video::workload::DatasetPreset;
 
@@ -72,6 +72,12 @@ fn main() {
         let report = lg.run().expect("load run");
         assert!(report.completed > 0, "{clients} clients completed nothing");
         assert_eq!(report.transport_errors, 0, "gateway dropped connections under load");
+        persist_metric(&format!("sustained_qps_c{clients}"), report.qps(), "qps");
+        persist_metric(
+            &format!("wire_p95_c{clients}_s"),
+            report.latency.percentile(95.0),
+            "s",
+        );
         table.row(vec![
             clients.to_string(),
             format!("{:.0}", report.target_qps),
@@ -123,6 +129,8 @@ fn main() {
         fmt_duration(hit.p50()),
         fmt_duration(cold.p50()),
     );
+    persist_metric("cold_wire_p50_s", cold.p50(), "s");
+    persist_metric("cache_hit_wire_p50_s", hit.p50(), "s");
 
     // durability-safe teardown order: wire first, then the lanes
     let wire = gateway.shutdown();

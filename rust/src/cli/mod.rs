@@ -16,7 +16,7 @@ use crate::backend::EmbedBackend;
 use crate::config::VenusConfig;
 use crate::coordinator::query::RetrievalMode;
 use crate::memory::{StreamId, StreamScope};
-use crate::net::wire::{Gateway, LoadGen, WireClient};
+use crate::net::wire::{Camera, Gateway, IngestHub, LoadGen, WireClient};
 use crate::util::stats::fmt_duration;
 use crate::video::workload::DatasetPreset;
 
@@ -30,6 +30,7 @@ pub fn run() -> Result<()> {
         "serve" => serve(&argv[1..]),
         "query" => query(&argv[1..]),
         "loadgen" => loadgen(&argv[1..]),
+        "camera" => camera(&argv[1..]),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -53,6 +54,7 @@ fn print_help() {
            serve    run the online query service (--listen ADDR opens the TCP gateway)\n\
            query    send one query to a running gateway (venus query --connect ADDR \"...\")\n\
            loadgen  drive a running gateway with open-loop concurrent load\n\
+           camera   push live frames into a running gateway (venus camera --connect ADDR)\n\
            help     this message\n\
          \n\
          Paper tables/figures: `cargo bench` (see DESIGN.md §4).\n"
@@ -319,7 +321,16 @@ fn serve_wire(
     use std::io::BufRead;
 
     let service = Arc::new(service);
-    let gateway = Gateway::start(&cfg.wire, Arc::clone(&service))?;
+    // the ingest hub shares the serving metrics (its admission controller
+    // reads the Interactive lane's live queue depth) and the fabric the
+    // queries run over — a camera's frames become queryable in place
+    let hub = Arc::new(IngestHub::new(
+        cfg,
+        Arc::clone(fabric),
+        Arc::clone(&service.metrics),
+        2,
+    )?);
+    let gateway = Gateway::start_with(&cfg.wire, Arc::clone(&service), Some(Arc::clone(&hub)))?;
     let bound = gateway.local_addr();
     println!(
         "wire gateway listening on {bound} (protocol v{}, {} conns max)",
@@ -328,6 +339,7 @@ fn serve_wire(
     );
     eprintln!("  venus query --connect {bound} \"what happened with concept01\"");
     eprintln!("  venus loadgen --connect {bound} --clients 8 --rate 64");
+    eprintln!("  venus camera --connect {bound} --stream 0   # live push ingest");
     eprintln!("  venus query --connect {bound} --shutdown   # graceful stop");
     if std::io::IsTerminal::is_terminal(&std::io::stdin()) {
         eprintln!("  (or type 'quit' here)");
@@ -344,13 +356,27 @@ fn serve_wire(
         });
     }
     gateway.wait_for_shutdown_request();
-    eprintln!("shutdown requested: gateway first, then lane drain, then flush");
+    eprintln!("shutdown requested: gateway, then ingest drain, then lane drain, then flush");
     // ordering is load-bearing for durability: stop accepting and join
-    // every wire handler FIRST (no new work can arrive), THEN drain the
-    // lanes, and only then flush the fabric — so the WAL tail written at
-    // flush time covers every acknowledged query's ingest state
+    // every wire handler FIRST (no new work can arrive), THEN finish the
+    // ingest pipelines (flush open partitions through the embed pool),
+    // THEN drain the lanes, and only then flush the fabric — so the WAL
+    // tail written at flush time covers every acknowledged frame
     let wire = gateway.shutdown();
     eprintln!("{}", wire.render());
+    eprintln!("{}", hub.snapshot().render());
+    match hub.finish_all() {
+        Ok(finished) => {
+            for (id, st) in &finished {
+                eprintln!(
+                    "ingest stream {id}: {} frames -> {} index vectors across {} partitions",
+                    st.frames, st.embedded, st.partitions
+                );
+            }
+        }
+        Err(e) => eprintln!("ingest drain failed: {e:#}"),
+    }
+    drop(hub);
     let service = match Arc::try_unwrap(service) {
         Ok(s) => s,
         Err(arc) => {
@@ -556,6 +582,56 @@ fn loadgen(args: &[String]) -> Result<()> {
         client.shutdown_server()?;
         eprintln!("server acknowledged shutdown");
     }
+    Ok(())
+}
+
+/// `venus camera --connect ADDR --stream N` — one paced push-ingest
+/// client: frames from the synthetic preset, typed backpressure obeyed,
+/// reconnect-with-resume on transport failures.
+fn camera(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("venus camera")
+        .flag("connect", "gateway address (host:port)", None)
+        .flag("config", "TOML config file (client timeouts come from [wire])", Some(""))
+        .flag("stream", "fabric stream id to claim", Some("0"))
+        .flag("preset", "dataset preset generating the frames", Some("videomme-short"))
+        .flag("seed", "stream seed", Some("42"))
+        .flag("fps", "capture rate override (0 = preset rate)", Some("0"))
+        .flag(
+            "frames",
+            "frames to push on top of the stream's current watermark (0 = one preset pass; \
+             the synth loops)",
+            Some("0"),
+        )
+        .flag("batch", "frames per ingest_frames envelope", Some("8"))
+        .flag("reconnects", "transport-failure budget before giving up", Some("5"));
+    let parsed = spec.parse(args)?;
+    let cfg = load_config(&parsed)?;
+    let addr = parsed.get("connect").unwrap().to_string();
+    let preset = DatasetPreset::parse(parsed.get("preset").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown preset"))?;
+    let seed: u64 = parsed.get("seed").unwrap().parse()?;
+    let stream = parsed.get_usize("stream")?;
+    anyhow::ensure!(stream <= u16::MAX as usize, "stream id {stream} out of range");
+
+    let synth = crate::eval::build_synth(preset, seed)?;
+    let mut cam = Camera::new(addr, stream as u16, synth);
+    cam.wire = cfg.wire.clone();
+    let fps = parsed.get_f64("fps")?;
+    if fps > 0.0 {
+        cam.fps = fps;
+    }
+    let frames = parsed.get_usize("frames")?;
+    if frames > 0 {
+        cam.frames = frames as u64;
+    }
+    cam.batch_frames = parsed.get_usize("batch")?.max(1);
+    cam.max_reconnects = parsed.get_usize("reconnects")?;
+    eprintln!(
+        "pushing {} frames at {:.1} fps to {} as stream {} ({}-frame batches)",
+        cam.frames, cam.fps, cam.addr, cam.stream, cam.batch_frames
+    );
+    let report = cam.run()?;
+    println!("{}", report.render());
     Ok(())
 }
 

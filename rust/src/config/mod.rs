@@ -26,6 +26,26 @@ pub struct IngestConfig {
     pub queue_capacity: usize,
     /// Enable auxiliary models (simulated OCR/YOLO) for index prompts.
     pub aux_models: bool,
+    /// Wire-ingest overload policy: "slowdown" paces cameras down with
+    /// `SlowDown{delay_ms}` replies (no frame is lost); "drop" sheds
+    /// whole batches with `Dropped{from_seq,count}` (fresher at the cost
+    /// of archive holes).  See DESIGN.md §Ingest-Wire.
+    pub drop_policy: String,
+    /// Admission-controller staleness bound in milliseconds: once any
+    /// ingest stream's capture→queryable lag exceeds this, its batches
+    /// are admitted even while interactive queries are queued (ingest
+    /// yields under load but is never starved past the bound).
+    pub staleness_bound_ms: u64,
+    /// Delay carried in `SlowDown` replies (and the pause a yielding
+    /// camera is asked to take), milliseconds.
+    pub slowdown_ms: u64,
+    /// Largest accepted `ingest_frames` batch; bigger batches are a
+    /// protocol error (bounds per-batch decode work next to the wire's
+    /// byte-level `max_frame_bytes`).
+    pub max_batch_frames: usize,
+    /// Interactive-lane queue depth above which ingest yields (the
+    /// admission controller's contention signal).
+    pub yield_queue_depth: usize,
 }
 
 impl Default for IngestConfig {
@@ -38,6 +58,11 @@ impl Default for IngestConfig {
             embed_batch: 8,
             queue_capacity: 256,
             aux_models: true,
+            drop_policy: "slowdown".into(),
+            staleness_bound_ms: 5_000,
+            slowdown_ms: 250,
+            max_batch_frames: 64,
+            yield_queue_depth: 2,
         }
     }
 }
@@ -345,6 +370,15 @@ impl VenusConfig {
         cfg.ingest.embed_batch = d.usize_or("ingest.embed_batch", cfg.ingest.embed_batch)?;
         cfg.ingest.queue_capacity = d.usize_or("ingest.queue_capacity", cfg.ingest.queue_capacity)?;
         cfg.ingest.aux_models = d.bool_or("ingest.aux_models", cfg.ingest.aux_models)?;
+        cfg.ingest.drop_policy = d.str_or("ingest.drop_policy", &cfg.ingest.drop_policy)?;
+        cfg.ingest.staleness_bound_ms =
+            d.usize_or("ingest.staleness_bound_ms", cfg.ingest.staleness_bound_ms as usize)? as u64;
+        cfg.ingest.slowdown_ms =
+            d.usize_or("ingest.slowdown_ms", cfg.ingest.slowdown_ms as usize)? as u64;
+        cfg.ingest.max_batch_frames =
+            d.usize_or("ingest.max_batch_frames", cfg.ingest.max_batch_frames)?;
+        cfg.ingest.yield_queue_depth =
+            d.usize_or("ingest.yield_queue_depth", cfg.ingest.yield_queue_depth)?;
 
         cfg.retrieval.tau = d.f64_or("retrieval.tau", cfg.retrieval.tau as f64)? as f32;
         cfg.retrieval.budget = d.usize_or("retrieval.budget", cfg.retrieval.budget)?;
@@ -452,6 +486,18 @@ impl VenusConfig {
         if self.ingest.cluster_threshold <= 0.0 {
             bail!("ingest.cluster_threshold must be positive");
         }
+        if self.ingest.drop_policy != "slowdown" && self.ingest.drop_policy != "drop" {
+            bail!("ingest.drop_policy must be 'slowdown' or 'drop'");
+        }
+        if self.ingest.staleness_bound_ms == 0 {
+            bail!("ingest.staleness_bound_ms must be >= 1");
+        }
+        if self.ingest.slowdown_ms == 0 {
+            bail!("ingest.slowdown_ms must be >= 1");
+        }
+        if self.ingest.max_batch_frames == 0 {
+            bail!("ingest.max_batch_frames must be >= 1");
+        }
         if self.retrieval.tau <= 0.0 {
             bail!("retrieval.tau must be positive");
         }
@@ -532,6 +578,11 @@ const KNOWN_KEYS: &[&str] = &[
     "ingest.embed_batch",
     "ingest.queue_capacity",
     "ingest.aux_models",
+    "ingest.drop_policy",
+    "ingest.staleness_bound_ms",
+    "ingest.slowdown_ms",
+    "ingest.max_batch_frames",
+    "ingest.yield_queue_depth",
     "retrieval.tau",
     "retrieval.budget",
     "retrieval.akr",
@@ -708,6 +759,29 @@ mod tests {
         assert!(VenusConfig::from_toml("[wire]\nread_timeout_ms = 0").is_err());
         assert!(VenusConfig::from_toml("[wire]\nmax_frame_bytes = 16").is_err());
         assert!(VenusConfig::from_toml("[wire]\nlisten = \"\"").is_err());
+    }
+
+    #[test]
+    fn ingest_wire_keys_parse_and_validate() {
+        let cfg = VenusConfig::from_toml(
+            "[ingest]\ndrop_policy = \"drop\"\nstaleness_bound_ms = 1500\nslowdown_ms = 40\n\
+             max_batch_frames = 16\nyield_queue_depth = 4",
+        )
+        .unwrap();
+        assert_eq!(cfg.ingest.drop_policy, "drop");
+        assert_eq!(cfg.ingest.staleness_bound_ms, 1500);
+        assert_eq!(cfg.ingest.slowdown_ms, 40);
+        assert_eq!(cfg.ingest.max_batch_frames, 16);
+        assert_eq!(cfg.ingest.yield_queue_depth, 4);
+        // defaults: pace down rather than shed, generous bound
+        let cfg = VenusConfig::default();
+        assert_eq!(cfg.ingest.drop_policy, "slowdown");
+        assert_eq!(cfg.ingest.staleness_bound_ms, 5_000);
+        // invalid values rejected
+        assert!(VenusConfig::from_toml("[ingest]\ndrop_policy = \"panic\"").is_err());
+        assert!(VenusConfig::from_toml("[ingest]\nstaleness_bound_ms = 0").is_err());
+        assert!(VenusConfig::from_toml("[ingest]\nslowdown_ms = 0").is_err());
+        assert!(VenusConfig::from_toml("[ingest]\nmax_batch_frames = 0").is_err());
     }
 
     #[test]

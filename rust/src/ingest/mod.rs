@@ -9,5 +9,5 @@ pub mod scene;
 
 pub use cluster::{Cluster, PartitionClusterer};
 pub use pipeline::{IngestStats, Pipeline};
-pub use pool::EmbedPool;
+pub use pool::{EmbedPool, PoolGaugeSnapshot, PoolGauges};
 pub use scene::{Partition, SceneSegmenter};

@@ -19,7 +19,6 @@
 //! thread).  Multi-camera deployments build one [`EmbedPool`] and attach
 //! N pipelines to it with [`Pipeline::attach`].
 
-use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -29,7 +28,7 @@ use crate::config::IngestConfig;
 use crate::embed::EmbedEngine;
 use crate::features::frame_features;
 use crate::ingest::cluster::PartitionClusterer;
-use crate::ingest::pool::{EmbedPool, PoolJob, StreamProgress};
+use crate::ingest::pool::{EmbedPool, PoolJob, PoolSender, StreamProgress};
 use crate::ingest::scene::SceneSegmenter;
 use crate::memory::{Hierarchy, StreamId};
 use crate::util::sync::OrderedRwLock;
@@ -57,7 +56,7 @@ pub struct Pipeline {
     cfg: IngestConfig,
     stream: StreamId,
     shard: Arc<OrderedRwLock<Hierarchy>>,
-    tx: Option<SyncSender<PoolJob>>,
+    tx: Option<PoolSender>,
     owned_pool: Option<EmbedPool>,
     progress: Arc<StreamProgress>,
     /// pool liveness (worker count) — guards the drain wait in `finish`
@@ -126,18 +125,13 @@ impl Pipeline {
             PartitionClusterer::new(self.cfg.cluster_threshold),
         );
         self.partitions += 1;
-        self.tx
-            .as_ref()
-            .unwrap()
-            .send(PoolJob {
-                stream: self.stream,
-                scene_id,
-                clusters: done.finish(),
-                shard: Arc::clone(&self.shard),
-                progress: Arc::clone(&self.progress),
-            })
-            .map_err(|_| anyhow::anyhow!("embed pool died"))?;
-        Ok(())
+        self.tx.as_ref().unwrap().send(PoolJob {
+            stream: self.stream,
+            scene_id,
+            clusters: done.finish(),
+            shard: Arc::clone(&self.shard),
+            progress: Arc::clone(&self.progress),
+        })
     }
 
     /// Feed the next captured frame (stream-local ids, dense ascending).
@@ -201,6 +195,20 @@ impl Pipeline {
 
     pub fn frames_pushed(&self) -> u64 {
         self.frames
+    }
+
+    /// Partitions handed to the pool so far (the denominator the ingest
+    /// hub polls [`progress`](Self::progress_snapshot) against).
+    pub fn partitions_submitted(&self) -> usize {
+        self.partitions
+    }
+
+    /// Completed-partition count from the pool side: how many of this
+    /// stream's submitted partitions are embedded, inserted, and thus
+    /// queryable.  The wire-ingest freshness metric is derived from the
+    /// delta between submissions and this number.
+    pub fn partitions_completed(&self) -> usize {
+        self.progress.snapshot().partitions_done
     }
 }
 

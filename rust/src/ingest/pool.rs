@@ -33,6 +33,88 @@ use crate::ingest::cluster::Cluster;
 use crate::memory::{ClusterRecord, Hierarchy, StreamId};
 use crate::util::sync::{ranks, OrderedCondvar, OrderedMutex, OrderedRwLock};
 
+/// Live pool observability, shared lock-free between submitters, workers,
+/// and the metrics snapshot path.  `queue_depth` counts submitted-but-not-
+/// picked-up jobs (including a submitter currently blocked on the bounded
+/// channel); the batch counters describe worker pickups — how well
+/// cross-stream (and, over the wire, cross-connection) coalescing is
+/// filling MEM batches.  The admission controller and the `ingest_wire`
+/// bench both read these.
+#[derive(Debug, Default)]
+pub struct PoolGauges {
+    queue_depth: AtomicUsize,
+    pickups: AtomicUsize,
+    picked_jobs: AtomicUsize,
+    picked_clusters: AtomicUsize,
+    max_pickup_clusters: AtomicUsize,
+}
+
+/// One point-in-time reading of [`PoolGauges`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolGaugeSnapshot {
+    /// Jobs submitted but not yet picked up by a worker.
+    pub queue_depth: usize,
+    /// Worker pickups (each = one coalesced embed call).
+    pub batches: usize,
+    /// Mean partitions coalesced per pickup.
+    pub mean_batch_jobs: f64,
+    /// Mean clusters (index embeds) per pickup.
+    pub mean_batch_clusters: f64,
+    /// Largest single pickup, in clusters.
+    pub max_batch_clusters: usize,
+}
+
+impl PoolGauges {
+    /// Jobs submitted but not yet picked up by a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Acquire)
+    }
+
+    fn on_pickup(&self, jobs: usize, clusters: usize) {
+        // never underflows: every picked-up job was counted by its
+        // sender before the channel send that delivered it here
+        self.queue_depth.fetch_sub(jobs, Ordering::AcqRel);
+        self.pickups.fetch_add(1, Ordering::AcqRel);
+        self.picked_jobs.fetch_add(jobs, Ordering::AcqRel);
+        self.picked_clusters.fetch_add(clusters, Ordering::AcqRel);
+        self.max_pickup_clusters.fetch_max(clusters, Ordering::AcqRel);
+    }
+
+    pub fn snapshot(&self) -> PoolGaugeSnapshot {
+        let batches = self.pickups.load(Ordering::Acquire);
+        let denom = batches.max(1) as f64;
+        PoolGaugeSnapshot {
+            queue_depth: self.queue_depth(),
+            batches,
+            mean_batch_jobs: self.picked_jobs.load(Ordering::Acquire) as f64 / denom,
+            mean_batch_clusters: self.picked_clusters.load(Ordering::Acquire) as f64 / denom,
+            max_batch_clusters: self.max_pickup_clusters.load(Ordering::Acquire),
+        }
+    }
+}
+
+/// A pipeline's handle into the pool queue: a bounded sender plus the
+/// shared gauges, so queue depth counts submissions at the source.
+pub(crate) struct PoolSender {
+    tx: SyncSender<PoolJob>,
+    gauges: Arc<PoolGauges>,
+}
+
+impl PoolSender {
+    /// Blocking submit (the bounded channel is the ingest backpressure).
+    pub fn send(&self, job: PoolJob) -> Result<()> {
+        // count before the potentially-blocking send: a submitter stuck
+        // on a full queue IS queue pressure the admission controller
+        // must see
+        self.gauges.queue_depth.fetch_add(1, Ordering::AcqRel);
+        if self.tx.send(job).is_err() {
+            self.gauges.queue_depth.fetch_sub(1, Ordering::AcqRel);
+            anyhow::bail!("embed pool died");
+        }
+        Ok(())
+    }
+}
+
 /// One completed partition, routed to its stream's shard.
 pub(crate) struct PoolJob {
     pub stream: StreamId,
@@ -118,6 +200,7 @@ pub struct EmbedPool {
     tx: Option<SyncSender<PoolJob>>,
     workers: Vec<JoinHandle<()>>,
     alive: Arc<AtomicUsize>,
+    gauges: Arc<PoolGauges>,
 }
 
 impl EmbedPool {
@@ -150,23 +233,33 @@ impl EmbedPool {
         let (tx, rx) = sync_channel::<PoolJob>(queue_capacity.max(1));
         let rx = Arc::new(OrderedMutex::new(ranks::POOL_QUEUE, rx));
         let alive = Arc::new(AtomicUsize::new(engines.len()));
+        let gauges = Arc::new(PoolGauges::default());
         let workers = engines
             .into_iter()
             .map(|engine| {
                 let rx = Arc::clone(&rx);
                 let guard = WorkerAliveGuard(Arc::clone(&alive));
+                let gauges = Arc::clone(&gauges);
                 std::thread::spawn(move || {
                     let _guard = guard;
-                    worker_loop(engine, rx)
+                    worker_loop(engine, rx, gauges)
                 })
             })
             .collect();
-        Ok(Self { tx: Some(tx), workers, alive })
+        Ok(Self { tx: Some(tx), workers, alive, gauges })
     }
 
     /// A job sender for one pipeline front-end.
-    pub(crate) fn sender(&self) -> SyncSender<PoolJob> {
-        self.tx.as_ref().expect("pool already shut down").clone()
+    pub(crate) fn sender(&self) -> PoolSender {
+        PoolSender {
+            tx: self.tx.as_ref().expect("pool already shut down").clone(),
+            gauges: Arc::clone(&self.gauges),
+        }
+    }
+
+    /// The shared queue-depth / coalescing gauges.
+    pub fn gauges(&self) -> Arc<PoolGauges> {
+        Arc::clone(&self.gauges)
     }
 
     /// Shared alive-worker counter (pipelines use it as a liveness guard
@@ -203,19 +296,26 @@ impl Drop for EmbedPool {
     }
 }
 
-fn worker_loop(mut engine: EmbedEngine, rx: Arc<OrderedMutex<Receiver<PoolJob>>>) {
+fn worker_loop(
+    mut engine: EmbedEngine,
+    rx: Arc<OrderedMutex<Receiver<PoolJob>>>,
+    gauges: Arc<PoolGauges>,
+) {
     let target = engine.max_image_batch();
     loop {
         let mut jobs = Vec::new();
+        let mut pending: usize = 0;
         {
             let guard = rx.lock();
             match guard.recv() {
-                Ok(j) => jobs.push(j),
+                Ok(j) => {
+                    pending = j.clusters.len();
+                    jobs.push(j);
+                }
                 Err(_) => return, // channel closed: drain complete
             }
             // coalesce across streams up to one full MEM batch; stop the
             // moment the queue runs dry so latency never waits on traffic
-            let mut pending: usize = jobs[0].clusters.len();
             while pending < target {
                 match guard.try_recv() {
                     Ok(j) => {
@@ -226,6 +326,7 @@ fn worker_loop(mut engine: EmbedEngine, rx: Arc<OrderedMutex<Receiver<PoolJob>>>
                 }
             }
         } // release the receiver before the slow embed stage
+        gauges.on_pickup(jobs.len(), pending);
         process_jobs(&mut engine, jobs);
     }
 }

@@ -1,0 +1,329 @@
+//! The camera client: paced push-ingest over the wire, with typed
+//! backpressure obedience and reconnect-with-resume.
+//!
+//! A [`Camera`] generates frames from a synthetic stream preset (the
+//! same [`VideoSynth`] the in-process ingest path uses), batches them,
+//! and pushes `ingest_frames` envelopes at the declared frame rate.
+//! Sequencing is server-authoritative end to end:
+//!
+//!  * on every (re)connect the camera sends `ingest_open` and resumes
+//!    from the acked `next_seq` — never from local history, so a dropped
+//!    connection can neither duplicate nor silently lose frames against
+//!    a durable fabric;
+//!  * a `SlowDown{delay_ms}` verdict is obeyed by sleeping before the
+//!    next batch; a `Dropped{from_seq,count}` verdict is tallied and the
+//!    camera resumes from the advanced watermark (the server kept the
+//!    hole deliberately);
+//!  * transport errors trigger bounded-backoff reconnects
+//!    ([`Camera::max_reconnects`]); protocol errors are fatal — they
+//!    mean a bug or a stale lease, not a flaky network.
+//!
+//! Surface: `venus camera --connect ADDR --stream N` and the
+//! `ingest_wire` bench/integration tests.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::WireConfig;
+use crate::util::b64::encode_f32s;
+use crate::video::synth::VideoSynth;
+
+use super::frame::{read_frame, write_frame};
+use super::ingest::unix_ms_now;
+use super::proto::{Backpressure, ClientMsg, IngestFrame, ServerMsg, PROTOCOL_VERSION};
+
+/// A paced push-ingest client for one camera stream.
+pub struct Camera {
+    /// Gateway address (host:port).
+    pub addr: String,
+    /// Fabric stream id to claim.
+    pub stream: u16,
+    /// Frame source; geometry and default pacing come from its config.
+    pub synth: Arc<VideoSynth>,
+    /// Declared (and enforced, by pacing) capture rate.
+    pub fps: f64,
+    /// Frames to push this run, on top of the stream's watermark at the
+    /// FIRST open (the synth loops as needed).  The absolute target is
+    /// pinned there, so mid-run reconnects resume toward the same goal
+    /// instead of extending it.
+    pub frames: u64,
+    /// Frames per `ingest_frames` envelope.
+    pub batch_frames: usize,
+    /// Client-side socket timeouts ([`WireConfig`] `[wire]` section).
+    pub wire: WireConfig,
+    /// Transport-failure budget before the run gives up.
+    pub max_reconnects: usize,
+}
+
+/// What one camera run did, for CLI output and test assertions.
+#[derive(Clone, Debug, Default)]
+pub struct CameraReport {
+    pub stream: u16,
+    /// Frames the server accepted into the pipeline.
+    pub accepted: u64,
+    /// Frames the server shed (`Dropped` verdicts, `drop` policy).
+    pub dropped: u64,
+    /// Batches answered with a `SlowDown` verdict.
+    pub slowed_batches: u64,
+    /// The final acked high-watermark (next expected sequence number).
+    pub watermark: u64,
+    /// Transport failures survived by reconnect-with-resume.
+    pub reconnects: usize,
+    pub wall_s: f64,
+    /// Accepted frames per wall second.
+    pub sustained_fps: f64,
+}
+
+impl CameraReport {
+    pub fn render(&self) -> String {
+        format!(
+            "camera s{}: {} accepted / {} dropped / {} slowed batches; \
+             watermark {} after {:.1}s ({:.1} fps sustained, {} reconnects)",
+            self.stream,
+            self.accepted,
+            self.dropped,
+            self.slowed_batches,
+            self.watermark,
+            self.wall_s,
+            self.sustained_fps,
+            self.reconnects,
+        )
+    }
+}
+
+/// One connected, handshaken ingest connection.
+struct Conn {
+    stream: TcpStream,
+    max_frame_bytes: usize,
+}
+
+impl Conn {
+    fn connect(addr: &str, wire: &WireConfig) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting camera to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(wire.read_timeout_ms)));
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(wire.write_timeout_ms)));
+        let mut conn = Self { stream, max_frame_bytes: wire.max_frame_bytes };
+        match conn.round_trip(&ClientMsg::Hello { version: PROTOCOL_VERSION })? {
+            ServerMsg::HelloAck { version: PROTOCOL_VERSION, .. } => Ok(conn),
+            ServerMsg::HelloAck { version, .. } => {
+                bail!("server speaks protocol v{version}, this camera speaks v{PROTOCOL_VERSION}")
+            }
+            ServerMsg::Error { error } => bail!("handshake refused: {error}"),
+            other => bail!("unexpected handshake reply: {other:?}"),
+        }
+    }
+
+    fn round_trip(&mut self, msg: &ClientMsg) -> Result<ServerMsg> {
+        let mut w = &self.stream;
+        write_frame(&mut w, &msg.to_json(), self.max_frame_bytes)
+            .map_err(|e| anyhow::anyhow!("camera write failed: {e}"))?;
+        let mut r = &self.stream;
+        let reply = read_frame(&mut r, self.max_frame_bytes)
+            .map_err(|e| anyhow::anyhow!("camera read failed: {e}"))?;
+        ServerMsg::from_json(&reply)
+    }
+}
+
+/// Build one batch of wire frames: seqs `from..from+n`, pixels from the
+/// (looping) synth, capture stamped now.
+fn batch_payload(synth: &VideoSynth, from: u64, n: u64) -> Vec<IngestFrame> {
+    let total = synth.total_frames().max(1);
+    (from..from + n)
+        .map(|seq| IngestFrame {
+            seq,
+            captured_unix_ms: unix_ms_now(),
+            data_b64: encode_f32s(synth.frame(seq % total).data()),
+        })
+        .collect()
+}
+
+impl Camera {
+    /// A camera over `synth` with the synth's native pacing and length.
+    pub fn new(addr: impl Into<String>, stream: u16, synth: Arc<VideoSynth>) -> Self {
+        let fps = synth.config().fps;
+        let frames = synth.total_frames();
+        Self {
+            addr: addr.into(),
+            stream,
+            synth,
+            fps,
+            frames,
+            batch_frames: 8,
+            wire: WireConfig::default(),
+            max_reconnects: 5,
+        }
+    }
+
+    /// Run to completion: push frames until the acked watermark reaches
+    /// the goal pinned at the first open (its `next_seq` plus
+    /// [`Camera::frames`]).  Dropped batches count toward completion
+    /// (the server advanced the watermark past them on purpose);
+    /// transport failures reconnect and resume; protocol errors are
+    /// fatal.
+    pub fn run(&self) -> Result<CameraReport> {
+        anyhow::ensure!(self.fps > 0.0 && self.fps.is_finite(), "fps must be positive");
+        anyhow::ensure!(self.batch_frames > 0, "batch_frames must be at least 1");
+        let started = Instant::now();
+        let mut report = CameraReport { stream: self.stream, ..Default::default() };
+        let frame_size = self.synth.config().frame_size;
+        // (base, goal) watermarks, pinned at the FIRST successful open —
+        // reconnects resume toward the same goal and pacing stays on the
+        // capture clock of the frames THIS run owns
+        let mut span: Option<(u64, u64)> = None;
+
+        'connection: loop {
+            let mut conn = match Conn::connect(&self.addr, &self.wire) {
+                Ok(c) => c,
+                Err(e) => {
+                    self.backoff(&mut report, e)?;
+                    continue 'connection;
+                }
+            };
+            let open = ClientMsg::IngestOpen {
+                stream: self.stream,
+                frame_size,
+                fps: self.fps,
+            };
+            let mut next_seq = match conn.round_trip(&open) {
+                Ok(ServerMsg::IngestOpenAck { stream, next_seq }) if stream == self.stream => {
+                    next_seq
+                }
+                Ok(ServerMsg::Error { error }) => bail!("ingest_open refused: {error}"),
+                Ok(other) => bail!("unexpected reply to ingest_open: {other:?}"),
+                Err(e) => {
+                    self.backoff(&mut report, e)?;
+                    continue 'connection;
+                }
+            };
+            let (base, goal) = *span.get_or_insert((next_seq, next_seq + self.frames));
+            // the open ack is itself an authoritative watermark report
+            // (a reconnect may discover the goal was already reached)
+            report.watermark = report.watermark.max(next_seq);
+
+            while next_seq < goal {
+                let n = (goal - next_seq).min(self.batch_frames as u64);
+                // open-loop pacing: the last frame of this batch is due at
+                // (seq - base)/fps on this run's capture clock
+                let due_s = (next_seq + n - base) as f64 / self.fps;
+                let elapsed = started.elapsed().as_secs_f64();
+                if due_s > elapsed {
+                    std::thread::sleep(Duration::from_secs_f64(due_s - elapsed));
+                }
+                let frames = batch_payload(&self.synth, next_seq, n);
+                match conn.round_trip(&ClientMsg::IngestFrames { stream: self.stream, frames }) {
+                    Ok(ServerMsg::IngestAck { high_watermark, backpressure, .. }) => {
+                        next_seq = high_watermark;
+                        report.watermark = high_watermark;
+                        match backpressure {
+                            Backpressure::None => report.accepted += n,
+                            Backpressure::SlowDown { delay_ms } => {
+                                report.accepted += n;
+                                report.slowed_batches += 1;
+                                std::thread::sleep(Duration::from_millis(delay_ms));
+                            }
+                            Backpressure::Dropped { count, .. } => report.dropped += count,
+                        }
+                    }
+                    Ok(ServerMsg::Error { error }) => bail!("ingest rejected: {error}"),
+                    Ok(other) => bail!("unexpected reply to ingest_frames: {other:?}"),
+                    Err(e) => {
+                        // transport failure mid-batch: the server may or
+                        // may not have applied it — re-open and let the
+                        // authoritative next_seq arbitrate (exactly-once
+                        // against a durable fabric)
+                        self.backoff(&mut report, e)?;
+                        continue 'connection;
+                    }
+                }
+            }
+            break;
+        }
+        report.wall_s = started.elapsed().as_secs_f64();
+        report.sustained_fps = if report.wall_s > 0.0 {
+            report.accepted as f64 / report.wall_s
+        } else {
+            0.0
+        };
+        Ok(report)
+    }
+
+    /// Count a transport failure against the reconnect budget and sleep
+    /// a linearly growing backoff.
+    fn backoff(&self, report: &mut CameraReport, err: anyhow::Error) -> Result<()> {
+        report.reconnects += 1;
+        if report.reconnects > self.max_reconnects {
+            return Err(err.context(format!(
+                "camera gave up after {} reconnect attempts",
+                self.max_reconnects
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(50 * report.reconnects as u64));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::b64::decode_f32s;
+    use crate::video::synth::SynthConfig;
+
+    fn tiny_synth() -> Arc<VideoSynth> {
+        let be = crate::backend::shared_default().unwrap();
+        let cfg = SynthConfig { duration_s: 4.0, ..Default::default() };
+        Arc::new(VideoSynth::new(cfg, be.concept_codes().unwrap(), be.model().patch))
+    }
+
+    #[test]
+    fn batch_payload_is_contiguous_and_bit_exact() {
+        let synth = tiny_synth();
+        let total = synth.total_frames();
+        assert!(total >= 4);
+        // a batch that wraps the synth's end keeps seqs contiguous while
+        // looping pixel content
+        let from = total - 2;
+        let frames = batch_payload(&synth, from, 4);
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(f.seq, from + i as u64);
+            let px = decode_f32s(&f.data_b64).unwrap();
+            let want = synth.frame(f.seq % total);
+            assert_eq!(px.len(), want.data().len());
+            for (a, b) in px.iter().zip(want.data()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn unreachable_server_exhausts_the_reconnect_budget() {
+        let synth = tiny_synth();
+        // reserved port on localhost with nothing listening
+        let mut cam = Camera::new("127.0.0.1:1", 0, synth);
+        cam.max_reconnects = 2;
+        let err = cam.run().unwrap_err();
+        assert!(format!("{err:#}").contains("gave up"), "{err:#}");
+    }
+
+    #[test]
+    fn report_renders_the_headline_numbers() {
+        let r = CameraReport {
+            stream: 3,
+            accepted: 960,
+            dropped: 64,
+            slowed_batches: 2,
+            watermark: 1024,
+            reconnects: 1,
+            wall_s: 120.0,
+            sustained_fps: 8.0,
+        };
+        let s = r.render();
+        for needle in ["s3", "960 accepted", "64 dropped", "watermark 1024", "1 reconnects"] {
+            assert!(s.contains(needle), "missing {needle} in {s}");
+        }
+    }
+}

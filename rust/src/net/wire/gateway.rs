@@ -39,6 +39,7 @@ use crate::server::Service;
 use crate::util::sync::{ranks, OrderedCondvar, OrderedMutex};
 
 use super::frame::{read_frame, write_frame, write_frame_text, FrameError};
+use super::ingest::IngestHub;
 use super::proto::{ClientMsg, ServerMsg, WireError, PROTOCOL_VERSION};
 
 /// Monotone wire-level traffic counters (connection plane only — query
@@ -120,6 +121,10 @@ impl ShutdownSignal {
 
 struct Shared {
     service: Arc<Service>,
+    /// Push-ingest state (per-stream sessions + the shared embed pool);
+    /// `None` on query-only gateways — ingest envelopes are then a
+    /// typed protocol error.
+    hub: Option<Arc<IngestHub>>,
     cfg: WireConfig,
     /// accept-loop gate: false once shutdown begins
     accepting: AtomicBool,
@@ -165,11 +170,24 @@ impl Gateway {
     /// The gateway holds its own handle to the service; the caller keeps
     /// one too and tears the service down *after* [`Gateway::shutdown`].
     pub fn start(cfg: &WireConfig, service: Arc<Service>) -> Result<Self> {
+        Self::start_with(cfg, service, None)
+    }
+
+    /// [`Gateway::start`] plus an optional ingest hub: with `Some`,
+    /// camera connections can push frames (`ingest_open`/`ingest_frames`)
+    /// and `stats` replies carry the live [`IngestSnapshot`]
+    /// (`crate::server::IngestSnapshot`) gauges.
+    pub fn start_with(
+        cfg: &WireConfig,
+        service: Arc<Service>,
+        hub: Option<Arc<IngestHub>>,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(&cfg.listen)
             .with_context(|| format!("binding wire listener on {}", cfg.listen))?;
         let local_addr = listener.local_addr()?;
         let shared = Arc::new(Shared {
             service,
+            hub,
             cfg: cfg.clone(),
             accepting: AtomicBool::new(true),
             signal: Arc::new(ShutdownSignal::default()),
@@ -460,7 +478,7 @@ fn conn_loop(stream: TcpStream, conn_id: u64, shared: Arc<Shared>) {
     // entry, skewing the open-conns gauge, and (pre-`util::sync`)
     // poisoning every lock it held for the rest of the process.
     let end = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        serve_conn(&stream, &shared)
+        serve_conn(&stream, conn_id, &shared)
     }));
     {
         let mut st = shared.stats.lock();
@@ -483,7 +501,7 @@ fn send_error(stream: &TcpStream, error: WireError, max_frame_bytes: usize) {
     let _ = write_frame(&mut w, &msg.to_json(), max_frame_bytes);
 }
 
-fn serve_conn(stream: &TcpStream, shared: &Shared) -> ConnEnd {
+fn serve_conn(stream: &TcpStream, conn_id: u64, shared: &Shared) -> ConnEnd {
     let max = shared.cfg.max_frame_bytes;
     let mut reader =
         DeadlineReader::new(stream, Duration::from_millis(shared.cfg.read_timeout_ms));
@@ -557,7 +575,49 @@ fn serve_conn(stream: &TcpStream, shared: &Shared) -> ConnEnd {
                 }
             }
             Ok(ClientMsg::Stats) => {
-                ServerMsg::Stats { snapshot: Box::new(shared.service.snapshot()) }
+                let mut snapshot = shared.service.snapshot();
+                if let Some(hub) = &shared.hub {
+                    snapshot.ingest = Some(hub.snapshot());
+                }
+                ServerMsg::Stats { snapshot: Box::new(snapshot) }
+            }
+            Ok(ClientMsg::IngestOpen { stream: sid, frame_size, fps }) => {
+                let hub = match &shared.hub {
+                    Some(h) => h,
+                    None => {
+                        let msg = "ingest not enabled on this server".to_string();
+                        send_error(stream, WireError::Protocol(msg), max);
+                        return ConnEnd::ProtocolError;
+                    }
+                };
+                match hub.open(sid, frame_size, fps, conn_id) {
+                    Ok(next_seq) => ServerMsg::IngestOpenAck { stream: sid, next_seq },
+                    Err(e) => {
+                        send_error(stream, WireError::Protocol(format!("{e:#}")), max);
+                        return ConnEnd::ProtocolError;
+                    }
+                }
+            }
+            Ok(ClientMsg::IngestFrames { stream: sid, frames }) => {
+                let hub = match &shared.hub {
+                    Some(h) => h,
+                    None => {
+                        let msg = "ingest not enabled on this server".to_string();
+                        send_error(stream, WireError::Protocol(msg), max);
+                        return ConnEnd::ProtocolError;
+                    }
+                };
+                match hub.push_batch(sid, conn_id, &frames) {
+                    Ok((high_watermark, backpressure)) => {
+                        ServerMsg::IngestAck { stream: sid, high_watermark, backpressure }
+                    }
+                    Err(e) => {
+                        // the connection dies, the SESSION does not: the
+                        // camera re-opens and resumes from the watermark
+                        send_error(stream, WireError::Protocol(format!("{e:#}")), max);
+                        return ConnEnd::ProtocolError;
+                    }
+                }
             }
             Ok(ClientMsg::Ping) => ServerMsg::Pong,
             Ok(ClientMsg::Shutdown) => {

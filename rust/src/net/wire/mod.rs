@@ -26,19 +26,33 @@
 //!  * [`loadgen`] — a multi-threaded open-loop load generator (paced
 //!    arrivals, coordinated-omission-corrected latency) behind the
 //!    `wire_throughput` bench and `venus loadgen`.
+//!  * [`ingest`] — the push-ingest hub (PR 8): per-stream sessions that
+//!    outlive connections, server-authoritative sequence numbers,
+//!    cross-connection batch coalescing through one shared
+//!    [`crate::ingest::EmbedPool`], and an admission controller that
+//!    yields to the Interactive lane under load without starving any
+//!    stream past `[ingest] staleness_bound_ms`.
+//!  * [`camera`] — the paced camera client: frame generation from the
+//!    synthetic presets, typed-backpressure obedience, and
+//!    reconnect-with-resume (`venus camera`).
 //!
 //! Surface: `venus serve --listen ADDR`, `venus query --connect ADDR`,
-//! `venus loadgen --connect ADDR`, and the `[wire]` config section.
-//! Protocol details: DESIGN.md §Wire-Protocol.
+//! `venus loadgen --connect ADDR`, `venus camera --connect ADDR`, and
+//! the `[wire]`/`[ingest]` config sections.  Protocol details:
+//! DESIGN.md §Wire-Protocol and §Ingest-Wire.
 
+pub mod camera;
 pub mod client;
 pub mod frame;
 pub mod gateway;
+pub mod ingest;
 pub mod loadgen;
 pub mod proto;
 
+pub use camera::{Camera, CameraReport};
 pub use client::WireClient;
 pub use frame::{read_frame, write_frame, write_frame_text, FrameError};
 pub use gateway::{Gateway, ShutdownHandle, WireStats};
+pub use ingest::IngestHub;
 pub use loadgen::{LoadGen, LoadReport};
-pub use proto::{ClientMsg, ServerMsg, WireError, PROTOCOL_VERSION};
+pub use proto::{Backpressure, ClientMsg, IngestFrame, ServerMsg, WireError, PROTOCOL_VERSION};

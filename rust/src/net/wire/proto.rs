@@ -7,6 +7,16 @@
 //! session assignment), `stats` (a full serving [`Snapshot`]), `ping`/
 //! `pong`, and `shutdown` (remote graceful stop).
 //!
+//! The ingest plane (PR 8) adds push-style envelopes: `ingest_open`
+//! declares a stream plus its frame geometry and pacing, `ingest_frames`
+//! carries a batch of sequence-numbered base64 frames, and every batch
+//! is answered by `ingest_ack` carrying the stream's durable
+//! high-watermark plus a typed [`Backpressure`] verdict (`SlowDown` vs
+//! `Dropped` per the configured drop policy).  Sequence numbers are
+//! server-authoritative: `ingest_open_ack` tells the camera exactly
+//! which frame to send next, which is what makes reconnect-with-resume
+//! duplicate-free against a durable fabric.
+//!
 //! Versioning rule: the handshake carries a single integer protocol
 //! version; the gateway serves only its own version ([`PROTOCOL_VERSION`])
 //! and answers anything else with a typed protocol error before any
@@ -34,6 +44,100 @@ fn version_from(v: &Json) -> Result<u32> {
     Ok(version as u32)
 }
 
+/// Decode a stream id, rejecting values past the `u16` shard-id space.
+fn stream_from(v: &Json) -> Result<u16> {
+    let stream = v.as_usize()?;
+    if stream > u16::MAX as usize {
+        bail!("stream id {stream} out of range (max {})", u16::MAX);
+    }
+    Ok(stream as u16)
+}
+
+/// Decode a non-negative integer that must fit the 2^53 exactly-
+/// representable band (sequence numbers, unix milliseconds, counts).
+fn u64_from(v: &Json) -> Result<u64> {
+    Ok(v.as_usize()? as u64)
+}
+
+/// One frame inside an [`ClientMsg::IngestFrames`] batch: its position
+/// in the stream, the capture timestamp the freshness metric is measured
+/// from, and the pixel payload (base64 over little-endian `f32` bytes —
+/// bit-exact, see [`crate::util::b64`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IngestFrame {
+    pub seq: u64,
+    pub captured_unix_ms: u64,
+    pub data_b64: String,
+}
+
+impl IngestFrame {
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("seq".into(), Json::Num(self.seq as f64));
+        m.insert("captured_unix_ms".into(), Json::Num(self.captured_unix_ms as f64));
+        m.insert("data".into(), Json::Str(self.data_b64.clone()));
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(IngestFrame {
+            seq: u64_from(v.get("seq")?)?,
+            captured_unix_ms: u64_from(v.get("captured_unix_ms")?)?,
+            data_b64: v.get("data")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// The admission controller's per-batch verdict, carried in every
+/// [`ServerMsg::IngestAck`].  `SlowDown` means the batch was accepted
+/// but the camera must pace down; `Dropped` means the batch was shed
+/// whole (the high-watermark advanced past it — the archive tolerates
+/// the hole) and the camera must resume from the acked watermark.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Backpressure {
+    /// Healthy: keep the declared pace.
+    None,
+    /// Accepted, but interactive queries are contending for the embed
+    /// backend — insert this delay before the next batch.
+    SlowDown { delay_ms: u64 },
+    /// Shed under the `drop` policy: `count` frames starting at
+    /// `from_seq` were discarded without entering the pipeline.
+    Dropped { from_seq: u64, count: u64 },
+}
+
+impl Backpressure {
+    fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        match self {
+            Backpressure::None => {
+                m.insert("kind".into(), Json::Str("none".into()));
+            }
+            Backpressure::SlowDown { delay_ms } => {
+                m.insert("kind".into(), Json::Str("slow_down".into()));
+                m.insert("delay_ms".into(), Json::Num(*delay_ms as f64));
+            }
+            Backpressure::Dropped { from_seq, count } => {
+                m.insert("kind".into(), Json::Str("dropped".into()));
+                m.insert("from_seq".into(), Json::Num(*from_seq as f64));
+                m.insert("count".into(), Json::Num(*count as f64));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        match v.get("kind")?.as_str()? {
+            "none" => Ok(Backpressure::None),
+            "slow_down" => Ok(Backpressure::SlowDown { delay_ms: u64_from(v.get("delay_ms")?)? }),
+            "dropped" => Ok(Backpressure::Dropped {
+                from_seq: u64_from(v.get("from_seq")?)?,
+                count: u64_from(v.get("count")?)?,
+            }),
+            other => bail!("unknown backpressure kind '{other}'"),
+        }
+    }
+}
+
 /// Client → gateway messages.
 #[derive(Clone, Debug)]
 pub enum ClientMsg {
@@ -50,6 +154,16 @@ pub enum ClientMsg {
     /// Ask the server to shut down gracefully (stop accepting, drain
     /// in-flight work, flush durable memory).
     Shutdown,
+    /// Claim a stream for push ingest, declaring the frame geometry
+    /// (`frame_size` pixels per side) and intended pacing.  The reply's
+    /// `next_seq` is authoritative: resume from there, not from local
+    /// history.  Re-opening an already-open stream steals ownership
+    /// (newest camera wins — it is the reconnecting one).
+    IngestOpen { stream: u16, frame_size: usize, fps: f64 },
+    /// A batch of frames for an opened stream.  Sequence numbers must be
+    /// exactly contiguous from the server's watermark; anything else is
+    /// a protocol error (the camera should re-open and resume).
+    IngestFrames { stream: u16, frames: Vec<IngestFrame> },
 }
 
 /// Gateway → client messages.
@@ -70,6 +184,14 @@ pub enum ServerMsg {
     Pong,
     /// Graceful-shutdown acknowledgement (sent before the close).
     ShutdownAck,
+    /// Ingest-open accept: the exact sequence number the server expects
+    /// next on this stream (its durable frame count — on a recovered
+    /// fabric this is where the previous life stopped).
+    IngestOpenAck { stream: u16, next_seq: u64 },
+    /// Per-batch acknowledgement: `high_watermark` is the next sequence
+    /// number the server expects (every frame below it is archived or
+    /// deliberately dropped), plus the admission verdict.
+    IngestAck { stream: u16, high_watermark: u64, backpressure: Backpressure },
 }
 
 /// The wire-level error taxonomy.
@@ -153,6 +275,19 @@ impl ClientMsg {
             ClientMsg::Stats => Json::Obj(tagged("stats")),
             ClientMsg::Ping => Json::Obj(tagged("ping")),
             ClientMsg::Shutdown => Json::Obj(tagged("shutdown")),
+            ClientMsg::IngestOpen { stream, frame_size, fps } => {
+                let mut m = tagged("ingest_open");
+                m.insert("stream".into(), Json::Num(*stream as f64));
+                m.insert("frame_size".into(), Json::Num(*frame_size as f64));
+                m.insert("fps".into(), Json::Num(*fps));
+                Json::Obj(m)
+            }
+            ClientMsg::IngestFrames { stream, frames } => {
+                let mut m = tagged("ingest_frames");
+                m.insert("stream".into(), Json::Num(*stream as f64));
+                m.insert("frames".into(), Json::Arr(frames.iter().map(|f| f.to_json()).collect()));
+                Json::Obj(m)
+            }
         }
     }
 
@@ -165,6 +300,20 @@ impl ClientMsg {
             "stats" => Ok(ClientMsg::Stats),
             "ping" => Ok(ClientMsg::Ping),
             "shutdown" => Ok(ClientMsg::Shutdown),
+            "ingest_open" => Ok(ClientMsg::IngestOpen {
+                stream: stream_from(v.get("stream")?)?,
+                frame_size: v.get("frame_size")?.as_usize()?,
+                fps: v.get("fps")?.as_f64()?,
+            }),
+            "ingest_frames" => Ok(ClientMsg::IngestFrames {
+                stream: stream_from(v.get("stream")?)?,
+                frames: v
+                    .get("frames")?
+                    .as_arr()?
+                    .iter()
+                    .map(IngestFrame::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            }),
             other => bail!("unknown client message type '{other}'"),
         }
     }
@@ -197,6 +346,19 @@ impl ServerMsg {
             }
             ServerMsg::Pong => Json::Obj(tagged("pong")),
             ServerMsg::ShutdownAck => Json::Obj(tagged("shutdown_ack")),
+            ServerMsg::IngestOpenAck { stream, next_seq } => {
+                let mut m = tagged("ingest_open_ack");
+                m.insert("stream".into(), Json::Num(*stream as f64));
+                m.insert("next_seq".into(), Json::Num(*next_seq as f64));
+                Json::Obj(m)
+            }
+            ServerMsg::IngestAck { stream, high_watermark, backpressure } => {
+                let mut m = tagged("ingest_ack");
+                m.insert("stream".into(), Json::Num(*stream as f64));
+                m.insert("high_watermark".into(), Json::Num(*high_watermark as f64));
+                m.insert("backpressure".into(), backpressure.to_json());
+                Json::Obj(m)
+            }
         }
     }
 
@@ -216,6 +378,15 @@ impl ServerMsg {
             }),
             "pong" => Ok(ServerMsg::Pong),
             "shutdown_ack" => Ok(ServerMsg::ShutdownAck),
+            "ingest_open_ack" => Ok(ServerMsg::IngestOpenAck {
+                stream: stream_from(v.get("stream")?)?,
+                next_seq: u64_from(v.get("next_seq")?)?,
+            }),
+            "ingest_ack" => Ok(ServerMsg::IngestAck {
+                stream: stream_from(v.get("stream")?)?,
+                high_watermark: u64_from(v.get("high_watermark")?)?,
+                backpressure: Backpressure::from_json(v.get("backpressure")?)?,
+            }),
             other => bail!("unknown server message type '{other}'"),
         }
     }
@@ -254,6 +425,87 @@ mod tests {
                 other => panic!("variant changed across the wire: {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn ingest_messages_round_trip() {
+        use crate::util::b64::{decode_f32s, encode_f32s};
+
+        let pixels = vec![0.25f32, -1.0, 3.5e-5, f32::MIN_POSITIVE];
+        let frames = vec![
+            IngestFrame { seq: 41, captured_unix_ms: 1_754_000_000_123, data_b64: encode_f32s(&pixels) },
+            IngestFrame { seq: 42, captured_unix_ms: 1_754_000_000_165, data_b64: String::new() },
+        ];
+        let open = ClientMsg::IngestOpen { stream: 3, frame_size: 64, fps: 24.0 };
+        let wire = open.to_json().to_string();
+        match ClientMsg::from_json(&Json::parse(&wire).unwrap()).unwrap() {
+            ClientMsg::IngestOpen { stream, frame_size, fps } => {
+                assert_eq!((stream, frame_size, fps), (3, 64, 24.0));
+            }
+            other => panic!("variant changed across the wire: {other:?}"),
+        }
+        let batch = ClientMsg::IngestFrames { stream: 3, frames: frames.clone() };
+        let wire = batch.to_json().to_string();
+        match ClientMsg::from_json(&Json::parse(&wire).unwrap()).unwrap() {
+            ClientMsg::IngestFrames { stream, frames: back } => {
+                assert_eq!(stream, 3);
+                assert_eq!(back, frames);
+                // the pixel payload is bit-exact after the full JSON trip
+                let decoded = decode_f32s(&back[0].data_b64).unwrap();
+                for (a, b) in pixels.iter().zip(&decoded) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("variant changed across the wire: {other:?}"),
+        }
+
+        let acks = [
+            ServerMsg::IngestOpenAck { stream: 3, next_seq: 41 },
+            ServerMsg::IngestAck { stream: 3, high_watermark: 43, backpressure: Backpressure::None },
+            ServerMsg::IngestAck {
+                stream: 0,
+                high_watermark: 43,
+                backpressure: Backpressure::SlowDown { delay_ms: 125 },
+            },
+            ServerMsg::IngestAck {
+                stream: 9,
+                high_watermark: 50,
+                backpressure: Backpressure::Dropped { from_seq: 43, count: 7 },
+            },
+        ];
+        for msg in acks {
+            let wire = msg.to_json().to_string();
+            match (&msg, &ServerMsg::from_json(&Json::parse(&wire).unwrap()).unwrap()) {
+                (
+                    ServerMsg::IngestOpenAck { stream: a, next_seq: b },
+                    ServerMsg::IngestOpenAck { stream: x, next_seq: y },
+                ) => assert_eq!((a, b), (x, y)),
+                (
+                    ServerMsg::IngestAck { stream: a, high_watermark: b, backpressure: c },
+                    ServerMsg::IngestAck { stream: x, high_watermark: y, backpressure: z },
+                ) => assert_eq!((a, b, c), (x, y, z)),
+                other => panic!("variant changed across the wire: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_ingest_payloads_rejected() {
+        for wire in [
+            // stream id past the u16 shard space
+            r#"{"type":"ingest_open","stream":65536,"frame_size":64,"fps":24.0}"#,
+            // missing geometry
+            r#"{"type":"ingest_open","stream":0}"#,
+            // frames must be an array of objects
+            r#"{"type":"ingest_frames","stream":0,"frames":7}"#,
+            r#"{"type":"ingest_frames","stream":0,"frames":[{"seq":1}]}"#,
+            // negative sequence number
+            r#"{"type":"ingest_frames","stream":0,"frames":[{"seq":-1,"captured_unix_ms":0,"data":""}]}"#,
+        ] {
+            assert!(ClientMsg::from_json(&Json::parse(wire).unwrap()).is_err(), "accepted {wire}");
+        }
+        let bad = r#"{"type":"ingest_ack","stream":0,"high_watermark":1,"backpressure":{"kind":"warp"}}"#;
+        assert!(ServerMsg::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -101,6 +101,141 @@ pub struct Snapshot {
     /// bytes).  `None` for a bare `Metrics::snapshot()`; the service
     /// fills it from its fabric — see `Service::snapshot`.
     pub memory: Option<TierStats>,
+    /// Live-ingest gauges (per-stream wire counters + embed-pool queue
+    /// depth and coalescing).  `None` unless the process runs a wire
+    /// ingest hub; the gateway fills it into `stats` replies.
+    pub ingest: Option<IngestSnapshot>,
+}
+
+/// One wire-ingest stream's counters and freshness tails, as reported in
+/// `stats` replies and `venus serve` output.  Populated by the ingest
+/// hub (`net::wire::ingest`); defined here so `server` stays independent
+/// of `net`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IngestStreamSnapshot {
+    pub stream: u16,
+    /// Frames accepted into the pipeline (includes not-yet-queryable).
+    pub accepted: u64,
+    /// The durable high-watermark: next expected sequence number.
+    pub acked: u64,
+    /// Frames shed under the `drop` policy (archive holes).
+    pub dropped: u64,
+    /// Batches answered with a `SlowDown` verdict.
+    pub slowed: u64,
+    /// Capture → queryable freshness percentiles, milliseconds.  `None`
+    /// until the first partition of the stream becomes queryable.
+    pub freshness_p50_ms: Option<f64>,
+    pub freshness_p95_ms: Option<f64>,
+}
+
+/// Wire-ingest gauges: every open stream plus the shared embed pool.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IngestSnapshot {
+    pub streams: Vec<IngestStreamSnapshot>,
+    /// Partitions submitted to the pool but not yet picked up.
+    pub pool_queue_depth: usize,
+    /// Coalesced pickups (one embed call each) since start.
+    pub pool_batches: usize,
+    /// Mean clusters per coalesced pickup.
+    pub pool_mean_batch_clusters: f64,
+    /// Largest single pickup, in clusters.
+    pub pool_max_batch_clusters: usize,
+}
+
+impl IngestSnapshot {
+    /// Totals across streams: (accepted, dropped, slowed).
+    pub fn totals(&self) -> (u64, u64, u64) {
+        self.streams.iter().fold((0, 0, 0), |(a, d, s), st| {
+            (a + st.accepted, d + st.dropped, s + st.slowed)
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        let streams: Vec<Json> = self
+            .streams
+            .iter()
+            .map(|s| {
+                let mut sm = std::collections::BTreeMap::new();
+                sm.insert("stream".into(), Json::Num(s.stream as f64));
+                sm.insert("accepted".into(), Json::Num(s.accepted as f64));
+                sm.insert("acked".into(), Json::Num(s.acked as f64));
+                sm.insert("dropped".into(), Json::Num(s.dropped as f64));
+                sm.insert("slowed".into(), Json::Num(s.slowed as f64));
+                if let Some(x) = s.freshness_p50_ms {
+                    sm.insert("freshness_p50_ms".into(), Json::Num(x));
+                }
+                if let Some(x) = s.freshness_p95_ms {
+                    sm.insert("freshness_p95_ms".into(), Json::Num(x));
+                }
+                Json::Obj(sm)
+            })
+            .collect();
+        m.insert("streams".into(), Json::Arr(streams));
+        m.insert("pool_queue_depth".into(), Json::Num(self.pool_queue_depth as f64));
+        m.insert("pool_batches".into(), Json::Num(self.pool_batches as f64));
+        m.insert(
+            "pool_mean_batch_clusters".into(),
+            Json::Num(self.pool_mean_batch_clusters),
+        );
+        m.insert(
+            "pool_max_batch_clusters".into(),
+            Json::Num(self.pool_max_batch_clusters as f64),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let streams = v
+            .get("streams")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(IngestStreamSnapshot {
+                    stream: s.get("stream")?.as_usize()? as u16,
+                    accepted: s.get("accepted")?.as_usize()? as u64,
+                    acked: s.get("acked")?.as_usize()? as u64,
+                    dropped: s.get("dropped")?.as_usize()? as u64,
+                    slowed: s.get("slowed")?.as_usize()? as u64,
+                    freshness_p50_ms: s.opt("freshness_p50_ms").map(|x| x.as_f64()).transpose()?,
+                    freshness_p95_ms: s.opt("freshness_p95_ms").map(|x| x.as_f64()).transpose()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            streams,
+            pool_queue_depth: v.get("pool_queue_depth")?.as_usize()?,
+            pool_batches: v.get("pool_batches")?.as_usize()?,
+            pool_mean_batch_clusters: v.get("pool_mean_batch_clusters")?.as_f64()?,
+            pool_max_batch_clusters: v.get("pool_max_batch_clusters")?.as_usize()?,
+        })
+    }
+
+    pub fn render(&self) -> String {
+        let opt = |x: Option<f64>| {
+            x.map(|v| format!("{v:.0}ms")).unwrap_or_else(|| "n/a".into())
+        };
+        let mut out = format!(
+            "ingest: pool q{} / {} batches (mean {:.1}, max {} clusters)",
+            self.pool_queue_depth,
+            self.pool_batches,
+            self.pool_mean_batch_clusters,
+            self.pool_max_batch_clusters,
+        );
+        for s in &self.streams {
+            out.push_str(&format!(
+                " | s{}: {} acc, {} ack, {} drop, {} slow, fresh p50 {} p95 {}",
+                s.stream,
+                s.accepted,
+                s.acked,
+                s.dropped,
+                s.slowed,
+                opt(s.freshness_p50_ms),
+                opt(s.freshness_p95_ms),
+            ));
+        }
+        out
+    }
 }
 
 impl Metrics {
@@ -182,7 +317,17 @@ impl Metrics {
             mean_frames: m.frames_shipped.mean(),
             throughput_qps: if uptime > 0.0 { completed as f64 / uptime } else { 0.0 },
             memory: None,
+            ingest: None,
         }
+    }
+
+    /// Live queue depth of one lane (accepted − dequeued): the cheap
+    /// contention signal the wire-ingest admission controller polls per
+    /// batch — a full snapshot would clone every latency sample ring.
+    pub fn queued_depth(&self, lane: Priority) -> u64 {
+        let m = self.inner.lock();
+        let l = &m.lanes[lane.index()];
+        l.accepted.saturating_sub(l.dequeued)
     }
 
     /// Conservation invariant after drain: every accepted query either
@@ -270,6 +415,10 @@ impl Snapshot {
                 ));
             }
         }
+        if let Some(ing) = &self.ingest {
+            out.push_str(" | ");
+            out.push_str(&ing.render());
+        }
         out
     }
 
@@ -311,6 +460,9 @@ impl Snapshot {
         if let Some(mem) = &self.memory {
             m.insert("memory".into(), mem.to_json());
         }
+        if let Some(ing) = &self.ingest {
+            m.insert("ingest".into(), ing.to_json());
+        }
         Json::Obj(m)
     }
 
@@ -346,6 +498,7 @@ impl Snapshot {
             mean_frames: v.get("mean_frames")?.as_f64()?,
             throughput_qps: v.get("throughput_qps")?.as_f64()?,
             memory: v.opt("memory").map(TierStats::from_json).transpose()?,
+            ingest: v.opt("ingest").map(IngestSnapshot::from_json).transpose()?,
         })
     }
 }
@@ -500,6 +653,65 @@ mod tests {
         let back = Snapshot::from_json(&Json::parse(&empty.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(back.total_p50_s, None);
         assert!(back.memory.is_none());
+    }
+
+    #[test]
+    fn ingest_gauges_render_and_round_trip() {
+        let m = Metrics::default();
+        let mut s = m.snapshot();
+        assert!(s.ingest.is_none(), "bare snapshot carries no ingest gauges");
+        assert!(!s.render().contains("ingest:"));
+        s.ingest = Some(IngestSnapshot {
+            streams: vec![
+                IngestStreamSnapshot {
+                    stream: 0,
+                    accepted: 480,
+                    acked: 480,
+                    dropped: 0,
+                    slowed: 3,
+                    freshness_p50_ms: Some(850.0),
+                    freshness_p95_ms: Some(2100.0),
+                },
+                IngestStreamSnapshot {
+                    stream: 1,
+                    accepted: 100,
+                    acked: 132,
+                    dropped: 32,
+                    slowed: 0,
+                    freshness_p50_ms: None,
+                    freshness_p95_ms: None,
+                },
+            ],
+            pool_queue_depth: 2,
+            pool_batches: 17,
+            pool_mean_batch_clusters: 6.5,
+            pool_max_batch_clusters: 8,
+        });
+        let text = s.render();
+        assert!(text.contains("ingest: pool q2 / 17 batches"), "{text}");
+        assert!(text.contains("s0: 480 acc, 480 ack, 0 drop, 3 slow"), "{text}");
+        assert!(text.contains("fresh p50 850ms p95 2100ms"), "{text}");
+        assert!(text.contains("s1: 100 acc, 132 ack, 32 drop, 0 slow"), "{text}");
+        assert!(text.contains("p50 n/a"), "{text}");
+
+        let wire = s.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        let ing = back.ingest.expect("ingest gauges survive the wire");
+        assert_eq!(ing, s.ingest.unwrap());
+        assert_eq!(ing.totals(), (580, 32, 3));
+    }
+
+    #[test]
+    fn queued_depth_is_the_live_lane_gauge() {
+        let m = Metrics::default();
+        assert_eq!(m.queued_depth(Priority::Interactive), 0);
+        m.on_accepted(Priority::Interactive);
+        m.on_accepted(Priority::Interactive);
+        m.on_accepted(Priority::Batch);
+        assert_eq!(m.queued_depth(Priority::Interactive), 2);
+        assert_eq!(m.queued_depth(Priority::Batch), 1);
+        m.on_dequeued(Priority::Interactive);
+        assert_eq!(m.queued_depth(Priority::Interactive), 1);
     }
 
     #[test]

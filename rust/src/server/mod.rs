@@ -26,7 +26,7 @@
 
 pub mod metrics;
 
-pub use metrics::{LaneSnapshot, Metrics, Snapshot};
+pub use metrics::{IngestSnapshot, IngestStreamSnapshot, LaneSnapshot, Metrics, Snapshot};
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};

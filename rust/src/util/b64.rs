@@ -1,0 +1,194 @@
+//! Std-only base64 (RFC 4648, standard alphabet, `=` padding) plus
+//! little-endian `f32` slab helpers.
+//!
+//! The ingest wire carries raw frame pixels as base64 text inside JSON
+//! envelopes.  Frames must survive the trip *bit-exactly* — scene
+//! segmentation and clustering decisions hang on float comparisons, and
+//! the reconnect test asserts selection-bit-identical recovery — so the
+//! f32 helpers serialize the IEEE-754 bytes verbatim (little-endian)
+//! rather than going through decimal formatting.
+
+use anyhow::{bail, Result};
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Decode table: 255 = invalid, 254 = padding (`=`).
+const fn build_rev() -> [u8; 256] {
+    let mut rev = [255u8; 256];
+    let mut i = 0;
+    while i < 64 {
+        rev[ALPHABET[i] as usize] = i as u8;
+        i += 1;
+    }
+    rev[b'=' as usize] = 254;
+    rev
+}
+
+const REV: [u8; 256] = build_rev();
+
+/// Encode bytes as standard base64 with padding.
+pub fn encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    let mut chunks = bytes.chunks_exact(3);
+    for c in &mut chunks {
+        let n = ((c[0] as u32) << 16) | ((c[1] as u32) << 8) | c[2] as u32;
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 6) as usize & 63] as char);
+        out.push(ALPHABET[n as usize & 63] as char);
+    }
+    match *chunks.remainder() {
+        [a] => {
+            let n = (a as u32) << 16;
+            out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+            out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+            out.push_str("==");
+        }
+        [a, b] => {
+            let n = ((a as u32) << 16) | ((b as u32) << 8);
+            out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+            out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+            out.push(ALPHABET[(n >> 6) as usize & 63] as char);
+            out.push('=');
+        }
+        _ => {}
+    }
+    out
+}
+
+/// Decode standard base64 (padding required, no whitespace).  Wire input
+/// is attacker-shaped: every malformed form is a typed error, never a
+/// panic.
+pub fn decode(s: &str) -> Result<Vec<u8>> {
+    let b = s.as_bytes();
+    if b.len() % 4 != 0 {
+        bail!("base64 length {} is not a multiple of 4", b.len());
+    }
+    let mut out = Vec::with_capacity(b.len() / 4 * 3);
+    for (i, quad) in b.chunks_exact(4).enumerate() {
+        let last = (i + 1) * 4 == b.len();
+        let mut vals = [0u32; 4];
+        let mut pad = 0usize;
+        for (j, &ch) in quad.iter().enumerate() {
+            match REV[ch as usize] {
+                255 => bail!("invalid base64 byte 0x{ch:02x} at offset {}", i * 4 + j),
+                254 => {
+                    // padding: only in the final quad, only the tail,
+                    // at most two
+                    if !last || j < 2 {
+                        bail!("misplaced base64 padding at offset {}", i * 4 + j);
+                    }
+                    pad += 1;
+                }
+                v => {
+                    if pad > 0 {
+                        bail!("base64 data after padding at offset {}", i * 4 + j);
+                    }
+                    vals[j] = v as u32;
+                }
+            }
+        }
+        let n = (vals[0] << 18) | (vals[1] << 12) | (vals[2] << 6) | vals[3];
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+/// Encode an `f32` slice as base64 over its little-endian bytes.
+pub fn encode_f32s(v: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    encode(&bytes)
+}
+
+/// Decode base64 back to `f32`s; bit-exact inverse of [`encode_f32s`].
+pub fn decode_f32s(s: &str) -> Result<Vec<f32>> {
+    let bytes = decode(s)?;
+    if bytes.len() % 4 != 0 {
+        bail!("f32 payload is {} bytes, not a multiple of 4", bytes.len());
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for q in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([q[0], q[1], q[2], q[3]]));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, b64) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), b64);
+            assert_eq!(decode(b64).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn round_trips_every_byte_value() {
+        let all: Vec<u8> = (0..=255u8).collect();
+        for end in [0, 1, 2, 3, 17, 255, 256] {
+            let slice = &all[..end];
+            assert_eq!(decode(&encode(slice)).unwrap(), slice);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        for bad in [
+            "A",        // not a multiple of 4
+            "AAA=extra", // length ok but data after the padded quad
+            "AA=A",     // data after padding inside a quad
+            "=AAA",     // padding in the head
+            "AAAA\n",   // whitespace is not tolerated
+            "AA!A",     // alphabet violation
+            "====",     // all padding
+        ] {
+            assert!(decode(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn f32s_bit_exact_including_specials() {
+        let v = vec![
+            0.0f32,
+            -0.0,
+            1.5,
+            -3.25e-7,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+        ];
+        let back = decode_f32s(&encode_f32s(&v)).unwrap();
+        assert_eq!(back.len(), v.len());
+        for (a, b) in v.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit pattern drifted");
+        }
+    }
+
+    #[test]
+    fn f32s_reject_ragged_payloads() {
+        // 3 bytes decoded: not a whole f32
+        assert!(decode_f32s(&encode(&[1, 2, 3])).is_err());
+    }
+}

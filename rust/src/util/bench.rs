@@ -153,6 +153,32 @@ impl Bench {
     }
 }
 
+/// Append one headline scalar (a throughput, a tail latency, a freshness
+/// bound...) to this target's `BENCH_<target>.json` line stream — the
+/// non-[`Bench`] counterpart for end-to-end benches whose numbers are
+/// aggregates of a whole run rather than per-iteration timings.  Same
+/// contract as [`Bench`]: a no-op unless `BENCH_JSON_DIR` is set.
+pub fn persist_metric(name: &str, value: f64, unit: &str) {
+    let Ok(dir) = std::env::var("BENCH_JSON_DIR") else { return };
+    if dir.is_empty() {
+        return;
+    }
+    let write = || -> std::io::Result<()> {
+        std::fs::create_dir_all(&dir)?;
+        let path =
+            std::path::Path::new(&dir).join(format!("BENCH_{}.json", bench_target_name()));
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(name.to_string()));
+        m.insert("value".to_string(), Json::Num(value));
+        m.insert("unit".to_string(), Json::Str(unit.to_string()));
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        writeln!(f, "{}", Json::Obj(m))
+    };
+    if let Err(e) = write() {
+        eprintln!("warning: could not persist bench metric {name}: {e}");
+    }
+}
+
 impl Drop for Bench {
     fn drop(&mut self) {
         if let Err(e) = self.persist_json() {

@@ -3,6 +3,7 @@
 //! micro-benchmark harness used by `cargo bench` (criterion is not
 //! available offline).
 
+pub mod b64;
 pub mod bench;
 pub mod json;
 pub mod rng;

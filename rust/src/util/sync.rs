@@ -49,6 +49,13 @@ pub mod ranks {
     pub const BACKEND_SHARED: u32 = 13;
     /// Load-generator tally merge (`net::wire::loadgen`).
     pub const LOADGEN_TALLIES: u32 = 15;
+    /// Ingest-hub stream registry (`net::wire::ingest`) — below the
+    /// shard band: a registry probe precedes every per-stream lock.
+    pub const WIRE_INGEST_STREAMS: u32 = 16;
+    /// One ingest stream's session (`net::wire::ingest`) — below the
+    /// shard band: the session lock is held across `Pipeline::push_frame`,
+    /// which takes its shard's write guard (rank `SHARD_BASE + i`).
+    pub const WIRE_INGEST_SESSION: u32 = 17;
     /// Semantic query cache (`api::cache`) — below the shard band: a
     /// cache probe must never be attempted while scoring holds shards.
     pub const QUERY_CACHE: u32 = 100;

@@ -1,0 +1,482 @@
+//! Live-ingest integration suite: cameras as wire clients against a real
+//! TCP gateway with an [`IngestHub`].
+//!
+//! Covers the four contract points of DESIGN.md §Ingest-Wire:
+//!   * **reconnect-with-resume** — killing a camera connection mid-batch
+//!     and reconnecting loses nothing and duplicates nothing against a
+//!     durable fabric: the server-authoritative `next_seq` arbitrates,
+//!     and retrieval selections are bit-identical to an unfaulted run
+//!     (before AND after a crash-recovery restart of the fabric);
+//!   * **typed backpressure observed client-side** — `Dropped` verdicts
+//!     under Interactive-lane pressure advance the watermark past the
+//!     hole without archiving; `SlowDown` verdicts accept while pacing;
+//!   * **protocol violations fail the connection, never the session** —
+//!     stale leases, out-of-order batches, and oversized batches each
+//!     get a typed error and a close, and the next `ingest_open` resumes
+//!     exactly at the surviving watermark;
+//!   * **ingest gauges on the wire** — the `stats` reply round-trips
+//!     per-stream counters, freshness percentiles, and the embed pool's
+//!     queue/coalescing gauges.
+
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use venus::api::Priority;
+use venus::config::{MemoryConfig, RetrievalConfig, VenusConfig};
+use venus::coordinator::query::{QueryEngine, RetrievalMode};
+use venus::embed::EmbedEngine;
+use venus::ingest::IngestStats;
+use venus::memory::{FrameId, InMemoryRaw, MemoryFabric, RawStore, StreamId, StreamScope};
+use venus::net::wire::{
+    read_frame, write_frame, Backpressure, Camera, ClientMsg, Gateway, IngestFrame, IngestHub,
+    ServerMsg, WireClient, WireError, PROTOCOL_VERSION,
+};
+use venus::server::Service;
+use venus::util::b64::encode_f32s;
+use venus::video::frame::Frame;
+use venus::video::synth::{SynthConfig, VideoSynth};
+
+const SIZE: usize = 64;
+const MAX: usize = 1 << 20;
+
+/// Unique scratch dir, removed on drop (durable-fabric tests).
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let path = std::env::temp_dir().join(format!(
+            "venus-ingest-wire-{tag}-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).unwrap();
+        Self(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn embed_dim() -> usize {
+    venus::embed::EmbedEngine::default_backend(false).unwrap().d_embed()
+}
+
+fn ram_fabric(streams: usize) -> Arc<MemoryFabric> {
+    let raws: Vec<Box<dyn RawStore>> =
+        (0..streams).map(|_| Box::new(InMemoryRaw::new(SIZE)) as Box<dyn RawStore>).collect();
+    Arc::new(MemoryFabric::new(&MemoryConfig::default(), embed_dim(), raws).unwrap())
+}
+
+/// Service + hub + gateway over an ephemeral port.
+fn hub_gateway(
+    cfg: &VenusConfig,
+    fabric: &Arc<MemoryFabric>,
+    workers: usize,
+) -> (Arc<Service>, Arc<IngestHub>, Gateway) {
+    let service = Arc::new(Service::start(cfg, Arc::clone(fabric), 7).unwrap());
+    let hub = Arc::new(
+        IngestHub::new(cfg, Arc::clone(fabric), Arc::clone(&service.metrics), workers).unwrap(),
+    );
+    let gateway =
+        Gateway::start_with(&cfg.wire, Arc::clone(&service), Some(Arc::clone(&hub))).unwrap();
+    (service, hub, gateway)
+}
+
+/// Tear down in the durability-safe order: gateway first (no connection
+/// can race new batches in), then the hub drain, then the service.
+fn teardown(
+    gateway: Gateway,
+    hub: Arc<IngestHub>,
+    service: Arc<Service>,
+) -> Vec<(u16, IngestStats)> {
+    gateway.shutdown();
+    let stats = hub.finish_all().unwrap();
+    drop(hub); // last hub handle: the embed pool drains and joins here
+    let service = Arc::try_unwrap(service).ok().expect("gateway released its service handle");
+    service.shutdown();
+    stats
+}
+
+/// A hand-driven camera connection speaking the raw typed protocol, so
+/// tests can violate it deliberately and die mid-batch.
+struct RawCam {
+    s: TcpStream,
+}
+
+impl RawCam {
+    fn connect(addr: SocketAddr) -> Self {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.set_write_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut cam = Self { s };
+        match cam.round_trip(&ClientMsg::Hello { version: PROTOCOL_VERSION }) {
+            ServerMsg::HelloAck { .. } => cam,
+            other => panic!("handshake failed: {other:?}"),
+        }
+    }
+
+    fn send(&mut self, msg: &ClientMsg) {
+        let mut w = &self.s;
+        write_frame(&mut w, &msg.to_json(), MAX).unwrap();
+    }
+
+    fn round_trip(&mut self, msg: &ClientMsg) -> ServerMsg {
+        self.send(msg);
+        let mut r = &self.s;
+        ServerMsg::from_json(&read_frame(&mut r, MAX).unwrap()).unwrap()
+    }
+
+    fn open(&mut self, stream: u16, fps: f64) -> u64 {
+        match self.round_trip(&ClientMsg::IngestOpen { stream, frame_size: SIZE, fps }) {
+            ServerMsg::IngestOpenAck { stream: sid, next_seq } => {
+                assert_eq!(sid, stream);
+                next_seq
+            }
+            other => panic!("ingest_open failed: {other:?}"),
+        }
+    }
+
+    fn push(&mut self, stream: u16, frames: Vec<IngestFrame>) -> (u64, Backpressure) {
+        match self.round_trip(&ClientMsg::IngestFrames { stream, frames }) {
+            ServerMsg::IngestAck { stream: sid, high_watermark, backpressure } => {
+                assert_eq!(sid, stream);
+                (high_watermark, backpressure)
+            }
+            other => panic!("ingest_frames failed: {other:?}"),
+        }
+    }
+
+    /// Push a batch the server must refuse; returns the typed message.
+    fn push_refused(&mut self, stream: u16, frames: Vec<IngestFrame>) -> String {
+        match self.round_trip(&ClientMsg::IngestFrames { stream, frames }) {
+            ServerMsg::Error { error: WireError::Protocol(msg) } => msg,
+            other => panic!("expected a typed protocol error, got {other:?}"),
+        }
+    }
+}
+
+fn wire_frame(seq: u64) -> IngestFrame {
+    let f = Frame::filled(SIZE, [(seq % 8) as f32 / 8.0, 0.2, 0.2]);
+    IngestFrame {
+        seq,
+        captured_unix_ms: venus::net::wire::ingest::unix_ms_now(),
+        data_b64: encode_f32s(f.data()),
+    }
+}
+
+fn batch(from: u64, n: u64) -> Vec<IngestFrame> {
+    (from..from + n).map(wire_frame).collect()
+}
+
+/// Acceptance: the `stats` wire reply round-trips per-stream ingest
+/// counters, capture→queryable freshness percentiles, and the shared
+/// embed pool's coalescing gauges, live while cameras push.
+#[test]
+fn stats_reply_carries_ingest_gauges_and_freshness() {
+    let fabric = ram_fabric(2);
+    let mut cfg = VenusConfig::default();
+    cfg.wire.listen = "127.0.0.1:0".into();
+    // seal a partition every 4 frames of stream time so freshness
+    // samples appear while the cameras are still pushing
+    cfg.ingest.max_partition_s = 0.5;
+    let (service, hub, gateway) = hub_gateway(&cfg, &fabric, 2);
+    let addr = gateway.local_addr();
+
+    let mut cams: Vec<RawCam> = (0..2u16).map(|_| RawCam::connect(addr)).collect();
+    for (sid, cam) in cams.iter_mut().enumerate() {
+        assert_eq!(cam.open(sid as u16, 8.0), 0);
+    }
+    for b in 0..4u64 {
+        for (sid, cam) in cams.iter_mut().enumerate() {
+            let (hw, bp) = cam.push(sid as u16, batch(b * 8, 8));
+            assert_eq!(hw, (b + 1) * 8);
+            assert_eq!(bp, Backpressure::None, "unloaded server must not push back");
+        }
+    }
+
+    // poll the WIRE stats reply (exercising the snapshot's JSON
+    // round-trip) until the async embed pool makes partitions queryable
+    let mut client = WireClient::connect(addr).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let snap = client.stats().unwrap();
+        let ing = snap.ingest.expect("hub-enabled gateway always reports ingest gauges");
+        assert_eq!(ing.streams.len(), 2);
+        for s in &ing.streams {
+            assert_eq!(s.accepted, 32);
+            assert_eq!(s.acked, 32);
+            assert_eq!(s.dropped, 0);
+        }
+        if ing.pool_batches > 0 && ing.streams.iter().all(|s| s.freshness_p50_ms.is_some()) {
+            for s in &ing.streams {
+                let (p50, p95) = (s.freshness_p50_ms.unwrap(), s.freshness_p95_ms.unwrap());
+                assert!(p50 >= 0.0 && p95 >= p50, "freshness tails out of order: {s:?}");
+            }
+            assert!(ing.pool_mean_batch_clusters > 0.0);
+            break;
+        }
+        assert!(Instant::now() < deadline, "freshness gauges never converged: {ing:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    drop(client);
+    drop(cams);
+
+    let stats = teardown(gateway, hub, service);
+    assert_eq!(stats.len(), 2);
+    for (_, s) in &stats {
+        assert_eq!(s.frames, 32);
+    }
+}
+
+/// Acceptance: backpressure verdicts reach the client typed.  Under
+/// Interactive-lane pressure the `drop` policy sheds whole batches and
+/// advances the watermark past the hole (nothing archived); the
+/// `slowdown` policy accepts while telling the camera to pace down.
+#[test]
+fn backpressure_verdicts_reach_the_client() {
+    // drop policy
+    let fabric = ram_fabric(1);
+    let mut cfg = VenusConfig::default();
+    cfg.wire.listen = "127.0.0.1:0".into();
+    cfg.ingest.drop_policy = "drop".into();
+    cfg.ingest.yield_queue_depth = 0;
+    cfg.ingest.staleness_bound_ms = 3_600_000; // keep the starvation guard out
+    let (service, hub, gateway) = hub_gateway(&cfg, &fabric, 1);
+
+    let mut cam = RawCam::connect(gateway.local_addr());
+    assert_eq!(cam.open(0, 8.0), 0);
+    let (hw, bp) = cam.push(0, batch(0, 4));
+    assert_eq!((hw, bp), (4, Backpressure::None));
+
+    // a queued interactive query flips the admission controller
+    service.metrics.on_accepted(Priority::Interactive);
+    let (hw, bp) = cam.push(0, batch(4, 4));
+    assert_eq!(hw, 8, "the watermark advances past the hole");
+    assert_eq!(bp, Backpressure::Dropped { from_seq: 4, count: 4 });
+    service.metrics.on_dequeued(Priority::Interactive);
+
+    // lane drained: admitted again, resuming AFTER the hole
+    let (hw, bp) = cam.push(0, batch(8, 4));
+    assert_eq!((hw, bp), (12, Backpressure::None));
+    assert_eq!(
+        fabric.shard(StreamId(0)).unwrap().read().frames_ingested(),
+        8,
+        "dropped frames must never reach the archive"
+    );
+    drop(cam);
+    let stats = teardown(gateway, hub, service);
+    assert_eq!(stats[0].1.frames, 8);
+
+    // slowdown policy: same pressure, nothing lost
+    let fabric = ram_fabric(1);
+    let mut cfg = VenusConfig::default();
+    cfg.wire.listen = "127.0.0.1:0".into();
+    cfg.ingest.drop_policy = "slowdown".into();
+    cfg.ingest.yield_queue_depth = 0;
+    cfg.ingest.slowdown_ms = 25;
+    cfg.ingest.staleness_bound_ms = 3_600_000;
+    let (service, hub, gateway) = hub_gateway(&cfg, &fabric, 1);
+    let mut cam = RawCam::connect(gateway.local_addr());
+    assert_eq!(cam.open(0, 8.0), 0);
+    service.metrics.on_accepted(Priority::Interactive);
+    let (hw, bp) = cam.push(0, batch(0, 4));
+    assert_eq!(hw, 4);
+    assert_eq!(bp, Backpressure::SlowDown { delay_ms: 25 });
+    service.metrics.on_dequeued(Priority::Interactive);
+    assert_eq!(
+        fabric.shard(StreamId(0)).unwrap().read().frames_ingested(),
+        4,
+        "slowdown accepts every frame"
+    );
+    drop(cam);
+    let stats = teardown(gateway, hub, service);
+    assert_eq!(stats[0].1.frames, 4);
+}
+
+/// Acceptance: a protocol violation kills exactly one connection with a
+/// typed error; the stream session and its watermark survive for the
+/// next `ingest_open`.
+#[test]
+fn violations_fail_the_connection_never_the_session() {
+    let fabric = ram_fabric(1);
+    let mut cfg = VenusConfig::default();
+    cfg.wire.listen = "127.0.0.1:0".into();
+    cfg.ingest.max_batch_frames = 8;
+    let (service, hub, gateway) = hub_gateway(&cfg, &fabric, 1);
+    let addr = gateway.local_addr();
+
+    let mut a = RawCam::connect(addr);
+    assert_eq!(a.open(0, 8.0), 0);
+    a.push(0, batch(0, 4));
+
+    // a reconnecting camera steals the lease and resumes at the watermark
+    let mut b = RawCam::connect(addr);
+    assert_eq!(b.open(0, 8.0), 4);
+    // ...so the stale connection's next push is refused (and closed)
+    let msg = a.push_refused(0, batch(4, 4));
+    assert!(msg.contains("stale"), "{msg}");
+
+    // out-of-order seq against the live watermark
+    let msg = b.push_refused(0, batch(20, 4));
+    assert!(msg.contains("out-of-order"), "{msg}");
+
+    // oversized batch (b is dead; fresh connection, fresh open)
+    let mut c = RawCam::connect(addr);
+    assert_eq!(c.open(0, 8.0), 4, "the watermark survived both violations");
+    let msg = c.push_refused(0, batch(4, 9));
+    assert!(msg.contains("max_batch_frames"), "{msg}");
+
+    // and after three failed connections the stream still ingests
+    let mut d = RawCam::connect(addr);
+    assert_eq!(d.open(0, 8.0), 4);
+    let (hw, _) = d.push(0, batch(4, 4));
+    assert_eq!(hw, 8);
+    drop((a, b, c, d));
+
+    assert!(gateway.stats().protocol_errors >= 3);
+    let stats = teardown(gateway, hub, service);
+    assert_eq!(stats[0].1.frames, 8, "exactly the accepted frames, no ghosts");
+}
+
+/// Frames for seqs `from..from+n` with pixels from the shared synth (the
+/// exact payloads `Camera` itself would send).
+fn synth_batch(synth: &VideoSynth, from: u64, n: u64) -> Vec<IngestFrame> {
+    let total = synth.total_frames().max(1);
+    (from..from + n)
+        .map(|seq| IngestFrame {
+            seq,
+            captured_unix_ms: venus::net::wire::ingest::unix_ms_now(),
+            data_b64: encode_f32s(synth.frame(seq % total).data()),
+        })
+        .collect()
+}
+
+/// The selection fingerprint used for bit-identity claims: frame ids,
+/// score bits, and draw counts across the retrieval modes.
+fn selection_matrix(fabric: &Arc<MemoryFabric>) -> Vec<(Vec<FrameId>, Vec<u32>, usize)> {
+    let mut qe = QueryEngine::new(
+        EmbedEngine::default_backend(false).unwrap(),
+        Arc::clone(fabric),
+        RetrievalConfig::default(),
+        11,
+    );
+    let mut out = Vec::new();
+    for mode in [RetrievalMode::Akr, RetrievalMode::FixedSampling(8), RetrievalMode::TopK(4)] {
+        let o = qe
+            .retrieve_scoped_with("what happened with concept01", StreamScope::All, mode)
+            .unwrap();
+        out.push((
+            o.selection.frames.clone(),
+            o.frame_scores.iter().map(|s| s.to_bits()).collect(),
+            o.draws,
+        ));
+    }
+    out
+}
+
+fn test_synth() -> Arc<VideoSynth> {
+    let be = venus::backend::shared_default().unwrap();
+    let cfg = SynthConfig { duration_s: 6.0, seed: 3, ..Default::default() };
+    Arc::new(VideoSynth::new(cfg, be.concept_codes().unwrap(), be.model().patch))
+}
+
+/// Acceptance (tentpole): kill a camera connection mid-batch against a
+/// DURABLE fabric, reconnect, and resume from the server-authoritative
+/// watermark.  No frame is duplicated or lost — the faulted run's
+/// retrieval selections are bit-identical to an unfaulted control run,
+/// and stay bit-identical after a flush + crash-recovery restart.
+#[test]
+fn camera_reconnect_is_exactly_once_against_a_durable_fabric() {
+    let synth = test_synth();
+    let frames = synth.total_frames();
+    assert!(frames >= 32, "need room for a mid-stream fault, got {frames}");
+    let d = embed_dim();
+    let mem_cfg = MemoryConfig::default();
+    let mut cfg = VenusConfig::default();
+    cfg.wire.listen = "127.0.0.1:0".into();
+    // one camera per run, one pool worker, a single partition sealed at
+    // finish: every source of cross-run reordering is pinned down, so
+    // bit-identity is the only acceptable outcome
+    let fps = 240.0;
+
+    let run = |tmp: &TempDir, fault: bool| -> (Arc<MemoryFabric>, u64) {
+        let fabric =
+            Arc::new(MemoryFabric::open(&mem_cfg, d, 1, SIZE, &tmp.0).unwrap());
+        let (service, hub, gateway) = hub_gateway(&cfg, &fabric, 1);
+        let addr = gateway.local_addr();
+
+        let mut camera = Camera::new(addr.to_string(), 0, Arc::clone(&synth));
+        camera.fps = fps;
+        if fault {
+            // push the first stretch by hand, then die mid-batch: the
+            // last envelope is written but the ack is never read, so the
+            // CLIENT cannot know whether it was applied
+            let mut cam = RawCam::connect(addr);
+            assert_eq!(cam.open(0, fps), 0);
+            cam.push(0, synth_batch(&synth, 0, 8));
+            cam.push(0, synth_batch(&synth, 8, 8));
+            cam.send(&ClientMsg::IngestFrames { stream: 0, frames: synth_batch(&synth, 16, 8) });
+            drop(cam); // hard kill, ack abandoned in flight
+            // the envelope was fully flushed before the close, so the
+            // server WILL apply it — wait for that so the resume point
+            // is pinned and both runs push frames `24..48` identically
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while hub.snapshot().streams[0].acked < 24 {
+                assert!(Instant::now() < deadline, "abandoned batch never applied");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            // `Camera::frames` counts from the watermark at first open
+            camera.frames = frames - 24;
+        }
+        let report = camera.run().unwrap();
+        assert_eq!(report.watermark, frames);
+        assert_eq!(report.dropped, 0);
+
+        let snap = hub.snapshot();
+        assert_eq!(snap.streams[0].accepted, frames, "every frame applied exactly once");
+        assert_eq!(snap.streams[0].acked, frames);
+
+        let stats = teardown(gateway, hub, service);
+        assert_eq!(stats[0].1.frames, frames);
+        let ingested = fabric.shard(StreamId(0)).unwrap().read().frames_ingested();
+        (fabric, ingested)
+    };
+
+    let control_tmp = TempDir::new("control");
+    let (control, control_ingested) = run(&control_tmp, false);
+    let faulted_tmp = TempDir::new("faulted");
+    let (faulted, faulted_ingested) = run(&faulted_tmp, true);
+    assert_eq!(control_ingested, frames);
+    assert_eq!(faulted_ingested, frames, "reconnect neither lost nor duplicated frames");
+
+    let expected = selection_matrix(&control);
+    assert_eq!(
+        expected,
+        selection_matrix(&faulted),
+        "a mid-batch fault must be invisible to retrieval"
+    );
+
+    // durable means durable: flush, drop every handle, recover from disk
+    faulted.flush().unwrap();
+    drop(control);
+    let faulted = Arc::try_unwrap(faulted).ok().expect("all fabric handles released");
+    drop(faulted);
+    let recovered =
+        Arc::new(MemoryFabric::recover(&mem_cfg, d, 1, SIZE, &faulted_tmp.0).unwrap());
+    assert_eq!(recovered.total_frames(), frames);
+    recovered.check_invariants().unwrap();
+    assert_eq!(
+        expected,
+        selection_matrix(&recovered),
+        "recovery must reproduce the faulted run's selections byte-for-byte"
+    );
+}

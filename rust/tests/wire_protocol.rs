@@ -524,6 +524,27 @@ fn every_envelope_tag_has_a_malformed_frame_vector() {
         ("error from a client", br#"{"type":"error","error":{"scope":"protocol","detail":"x"}}"#),
         ("pong from a client", br#"{"type":"pong"}"#),
         ("shutdown_ack from a client", br#"{"type":"shutdown_ack"}"#),
+        // ingest-plane tags: pre-handshake they die like everything else
+        // (the deeper violations — stale lease, out-of-order seq against
+        // a live watermark, oversized batch — need an ingest hub and are
+        // exercised end to end in tests/ingest_wire.rs)
+        (
+            "ingest_open before the handshake",
+            br#"{"type":"ingest_open","stream":0,"frame_size":64,"fps":8.0}"#,
+        ),
+        (
+            "ingest_frames before the handshake, out-of-order seq",
+            br#"{"type":"ingest_frames","stream":0,"frames":[{"seq":5,"captured_unix_ms":0,"data":""}]}"#,
+        ),
+        // server-direction ingest tags sent *to* the server
+        (
+            "ingest_open_ack from a client",
+            br#"{"type":"ingest_open_ack","stream":0,"next_seq":0}"#,
+        ),
+        (
+            "ingest_ack from a client",
+            br#"{"type":"ingest_ack","stream":0,"high_watermark":0,"backpressure":{"kind":"none"}}"#,
+        ),
     ];
     for (name, payload) in &vectors {
         let mut s = raw_conn(addr);
@@ -539,6 +560,26 @@ fn every_envelope_tag_has_a_malformed_frame_vector() {
         drop(s);
         assert_healthy(addr);
     }
+
+    // after a valid handshake, ingest on a hub-less (query-only) gateway
+    // is a typed protocol error — not a hang, not a crash
+    let mut s = raw_conn(addr);
+    send_raw(&mut s, &frame_bytes(br#"{"type":"hello","version":1}"#));
+    let ack = ServerMsg::from_json(&read_frame(&mut s, MAX).unwrap()).unwrap();
+    assert!(matches!(ack, ServerMsg::HelloAck { .. }));
+    send_raw(
+        &mut s,
+        &frame_bytes(br#"{"type":"ingest_open","stream":0,"frame_size":64,"fps":8.0}"#),
+    );
+    let reply = ServerMsg::from_json(&read_frame(&mut s, MAX).unwrap()).unwrap();
+    match reply {
+        ServerMsg::Error { error: WireError::Protocol(msg) } => {
+            assert!(msg.contains("ingest not enabled"), "{msg}")
+        }
+        other => panic!("expected a typed protocol error, got {other:?}"),
+    }
+    drop(s);
+    assert_healthy(addr);
 
     let stats = gateway.stats();
     assert!(stats.protocol_errors >= vectors.len() as u64 - 1);
