@@ -14,7 +14,7 @@
 #   3. `cargo test --features pjrt` — runs the cross-backend parity suite
 #      (rust/tests/native_vs_artifact.rs) against the artifacts.
 
-.PHONY: all build test bench bench-json lint verify loadtest camtest artifacts fmt clean
+.PHONY: all build test bench bench-json bench-diff bench-accept lint verify loadtest camtest artifacts fmt clean
 
 all: build
 
@@ -39,6 +39,22 @@ bench-json:
 	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench ann_scale
 	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench wire_throughput
 	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench ingest_wire
+	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench fabric_scaling
+
+# Compare fresh headline scalars in $(BENCH_JSON_DIR) against the
+# committed baselines with a relative tolerance (benchmarks/bench_diff.py;
+# exits 0 with a note when no baselines are committed yet).  Accept a
+# fresh run as the new baseline with bench-accept.
+BENCH_DIFF_TOL ?= 0.25
+bench-diff:
+	python3 benchmarks/bench_diff.py --fresh $(BENCH_JSON_DIR) \
+		--baselines benchmarks/baselines --tolerance $(BENCH_DIFF_TOL)
+
+bench-accept:
+	@ls $(BENCH_JSON_DIR)/BENCH_*.json >/dev/null 2>&1 \
+		|| { echo "no snapshots in $(BENCH_JSON_DIR); run make bench-json first"; exit 1; }
+	cp $(BENCH_JSON_DIR)/BENCH_*.json benchmarks/baselines/
+	@echo "accepted $$(ls $(BENCH_JSON_DIR)/BENCH_*.json | wc -l) snapshot(s) into benchmarks/baselines/"
 
 # Invariant lint (tools/vlint: panic policy, lock discipline, config-key
 # hygiene, wire-tag coverage — see DESIGN.md §Static-Analysis), then

@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Compare fresh BENCH_*.json snapshots against committed baselines.
+
+Usage:
+    python3 benchmarks/bench_diff.py [--fresh benchmarks/out] \
+        [--baselines benchmarks/baselines] [--tolerance 0.25]
+
+Both directories hold one `BENCH_<target>.json` per bench target, one
+JSON object per line (see rust/src/util/bench.rs).  Two line shapes
+share the stream:
+
+  * per-iteration timings: {"name", "iters", "mean_s", "p50_s", ...}
+  * headline scalars:      {"name", "value", "unit"}
+
+For every (target, name) present in both trees, the fresh number must
+not be WORSE than the baseline by more than the relative tolerance.
+Direction comes from the unit: timings (`*_s` rows and `us`/`ms`/`s`
+scalars) regress upward; rates (`fps`/`qps`/`x`) regress downward.
+Improvements and new/retired rows never fail — only regressions do.
+
+Exit status: 0 = no regressions (including "no baselines committed
+yet"), 1 = at least one regression, 2 = usage/parse error.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+LOWER_IS_BETTER_UNITS = {"us", "ms", "s", "ns"}
+HIGHER_IS_BETTER_UNITS = {"fps", "qps", "x", "hz", "rows/s", "inserts/s"}
+
+
+def load_dir(path):
+    """{target: {name: (value, lower_is_better, label)}} for a JSON dir."""
+    out = {}
+    for fp in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+        target = os.path.basename(fp)[len("BENCH_"):-len(".json")]
+        rows = {}
+        with open(fp, encoding="utf-8") as f:
+            for ln, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    obj = json.loads(line)
+                except json.JSONDecodeError as e:
+                    print(f"error: {fp}:{ln}: {e}", file=sys.stderr)
+                    sys.exit(2)
+                name = obj.get("name")
+                if not isinstance(name, str):
+                    continue
+                if "value" in obj:  # headline scalar
+                    unit = str(obj.get("unit", ""))
+                    if unit in HIGHER_IS_BETTER_UNITS:
+                        lower = False
+                    elif unit in LOWER_IS_BETTER_UNITS:
+                        lower = True
+                    else:
+                        # unknown unit: treat like a timing (conservative)
+                        lower = True
+                    rows[name] = (float(obj["value"]), lower, unit or "?")
+                elif "mean_s" in obj:  # Bench per-iteration timing
+                    rows[name] = (float(obj["mean_s"]), True, "mean_s")
+        if rows:
+            out[target] = rows
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="benchmarks/out")
+    ap.add_argument("--baselines", default="benchmarks/baselines")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed relative regression (0.25 = 25%%)",
+    )
+    args = ap.parse_args()
+
+    base = load_dir(args.baselines)
+    fresh = load_dir(args.fresh)
+    if not base:
+        print(
+            f"bench-diff: no baselines under {args.baselines} — nothing to "
+            "compare.\nSeed them on the target hardware with: "
+            "make bench-json && make bench-accept"
+        )
+        return 0
+    if not fresh:
+        print(
+            f"bench-diff: no fresh snapshots under {args.fresh} — run "
+            "`make bench-json` first",
+            file=sys.stderr,
+        )
+        return 2
+
+    regressions = []
+    compared = 0
+    for target, names in sorted(base.items()):
+        if target not in fresh:
+            print(f"  ~ {target}: no fresh snapshot (bench not run) — skipped")
+            continue
+        for name, (bval, lower, unit) in sorted(names.items()):
+            got = fresh[target].get(name)
+            if got is None:
+                print(f"  ~ {target}/{name}: retired (absent from fresh run)")
+                continue
+            fval = got[0]
+            compared += 1
+            if bval == 0:
+                continue
+            change = (fval - bval) / abs(bval)
+            worse = change if lower else -change
+            marker = "REGRESSED" if worse > args.tolerance else "ok"
+            if marker == "REGRESSED" or abs(change) > args.tolerance:
+                print(
+                    f"  {'!' if marker == 'REGRESSED' else '+'} {target}/{name}: "
+                    f"{bval:.6g} -> {fval:.6g} {unit} ({change:+.1%}) {marker}"
+                )
+            if marker == "REGRESSED":
+                regressions.append((target, name, bval, fval, unit, change))
+
+    print(
+        f"bench-diff: {compared} scalars compared against {args.baselines} "
+        f"(tolerance {args.tolerance:.0%}): {len(regressions)} regression(s)"
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,8 +18,9 @@ use std::time::Instant;
 use venus::config::MemoryConfig;
 use venus::memory::{ClusterRecord, Hierarchy, InMemoryRaw, StreamId};
 use venus::retrieval::{sample_retrieve, shortlist_mask};
-use venus::util::bench::Bench;
+use venus::util::bench::{persist_metric, Bench};
 use venus::util::rng::Pcg64;
+use venus::util::scorer::ScorePool;
 use venus::util::stats::{fmt_bytes, Samples};
 use venus::video::frame::Frame;
 
@@ -76,15 +77,20 @@ fn ingest(h: &mut Hierarchy, seed: u64) -> f64 {
     N as f64 / t0.elapsed().as_secs_f64()
 }
 
-/// p50/p95 of the score+sample query stage over a shard.
-fn query_latency(h: &Hierarchy, queries: usize, seed: u64) -> (f64, f64) {
+/// p50/p95 of the score+sample query stage over a shard.  With a pool,
+/// cold segments + the hot index score as parallel disjoint-slice tasks
+/// (bit-identical output — see DESIGN.md §Parallel-Query).
+fn query_latency(h: &Hierarchy, pool: Option<&ScorePool>, queries: usize, seed: u64) -> (f64, f64) {
     let mut rng = Pcg64::seeded(seed);
     let mut lat = Samples::default();
     let mut scores = Vec::new();
     for _ in 0..queries {
         let q = unit(&mut rng);
         let t0 = Instant::now();
-        h.score_all(&q, &mut scores).unwrap();
+        match pool {
+            Some(p) => h.score_all_pooled(p, &q, &mut scores).unwrap(),
+            None => h.score_all(&q, &mut scores).unwrap(),
+        }
         let masked = shortlist_mask(&scores, 128);
         let sel = sample_retrieve(h, &masked, 0.12, 16, &mut rng);
         std::hint::black_box(sel.frames.len());
@@ -145,8 +151,8 @@ fn main() {
     assert!(ts.hot_bytes <= budget, "hot tier exceeded its budget");
     println!();
 
-    let (hp50, hp95) = query_latency(&hot, 100, 9);
-    let (cp50, cp95) = query_latency(&cold, 100, 9);
+    let (hp50, hp95) = query_latency(&hot, None, 100, 9);
+    let (cp50, cp95) = query_latency(&cold, None, 100, 9);
     let ts = cold.tier_stats();
     println!("query score+sample latency over {N} records:");
     println!("  all-hot     p50 {:>9.1} µs   p95 {:>9.1} µs", hp50 * 1e6, hp95 * 1e6);
@@ -158,6 +164,25 @@ fn main() {
             .map(|r| format!("{:.0}%", r * 100.0))
             .unwrap_or_else(|| "n/a".into())
     );
+    persist_metric("cold_query_p50_us_serial", cp50 * 1e6, "us");
+    persist_metric("cold_query_p95_us_serial", cp95 * 1e6, "us");
+
+    // the same mostly-cold shard through the scoring pool: segment scans
+    // fan out as disjoint-slice tasks and the next block prefetches
+    // while the current one scores
+    for workers in [2usize, 4] {
+        let pool = ScorePool::new(workers);
+        let (pp50, pp95) = query_latency(&cold, Some(&pool), 100, 9);
+        println!(
+            "  mostly-cold p50 {:>9.1} µs   p95 {:>9.1} µs   ({workers}-worker pool, {:.2}× p50, {} pool tasks)",
+            pp50 * 1e6,
+            pp95 * 1e6,
+            cp50 / pp50.max(1e-12),
+            pool.gauges().tasks_total,
+        );
+        persist_metric(&format!("cold_query_p50_us_{workers}w"), pp50 * 1e6, "us");
+        persist_metric(&format!("cold_query_p95_us_{workers}w"), pp95 * 1e6, "us");
+    }
 
     // machine-readable trajectory (BENCH_memory_lifecycle.json under
     // BENCH_JSON_DIR): the score+sample query stage per tier shape

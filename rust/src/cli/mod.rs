@@ -577,6 +577,17 @@ fn loadgen(args: &[String]) -> Result<()> {
     );
     let report = lg.run()?;
     println!("{}", report.render());
+    // server-side parallel efficiency next to the client-side QPS: pull
+    // the scoring-pool gauges over the same `stats` envelope operators
+    // use (absent when driving an older server — from_json tolerates it)
+    match WireClient::connect_with(addr.as_str(), &cfg.wire).and_then(|mut c| c.stats()) {
+        Ok(snap) => {
+            if let Some(sc) = &snap.scoring {
+                println!("server {}", sc.render());
+            }
+        }
+        Err(e) => eprintln!("stats fetch failed: {e:#}"),
+    }
     if parsed.on("shutdown") {
         let mut client = WireClient::connect_with(addr.as_str(), &cfg.wire)?;
         client.shutdown_server()?;

@@ -217,11 +217,31 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Query worker threads.
     pub workers: usize,
+    /// Scoring-pool threads shared by every query worker
+    /// (DESIGN.md §Parallel-Query).  `0` (the default) resolves to the
+    /// host's available parallelism — see
+    /// [`ServerConfig::resolved_score_workers`].
+    pub score_workers: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { queue_depth: 64, workers: 2 }
+        Self { queue_depth: 64, workers: 2, score_workers: 0 }
+    }
+}
+
+impl ServerConfig {
+    /// Resolve `score_workers = 0` to the auto heuristic: one scoring
+    /// thread per core.  Scoring tasks are compute-bound row scans, so
+    /// unlike the embed pool there is no per-stream cap — an All-scope
+    /// query over few shards still fans out per cold segment.
+    pub fn resolved_score_workers(&self) -> usize {
+        if self.score_workers > 0 {
+            return self.score_workers;
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
     }
 }
 
@@ -418,6 +438,8 @@ impl VenusConfig {
 
         cfg.server.queue_depth = d.usize_or("server.queue_depth", cfg.server.queue_depth)?;
         cfg.server.workers = d.usize_or("server.workers", cfg.server.workers)?;
+        cfg.server.score_workers =
+            d.usize_or("server.score_workers", cfg.server.score_workers)?;
 
         cfg.api.cache_entries = d.usize_or("api.cache_entries", cfg.api.cache_entries)?;
         cfg.api.cache_threshold = d.f64_or("api.cache_threshold", cfg.api.cache_threshold)?;
@@ -610,6 +632,7 @@ const KNOWN_KEYS: &[&str] = &[
     "cloud.answer_tokens",
     "cloud.overhead_s",
     "server.queue_depth",
+    "server.score_workers",
     "server.workers",
     "api.cache_entries",
     "api.cache_threshold",
@@ -702,6 +725,20 @@ mod tests {
         assert!(VenusConfig::from_toml("[api]\ninteractive_depth = 0").is_err());
         assert!(VenusConfig::from_toml("[server]\nqueue_depth = 0").is_err());
         assert!(VenusConfig::from_toml("[api]\nfps = 0.0").is_err());
+    }
+
+    #[test]
+    fn score_workers_parses_and_resolves() {
+        // explicit value is used verbatim
+        let cfg = VenusConfig::from_toml("[server]\nscore_workers = 3").unwrap();
+        assert_eq!(cfg.server.score_workers, 3);
+        assert_eq!(cfg.server.resolved_score_workers(), 3);
+        // default 0 = auto: resolves to the host's parallelism, >= 1
+        let cfg = VenusConfig::default();
+        assert_eq!(cfg.server.score_workers, 0);
+        assert!(cfg.server.resolved_score_workers() >= 1);
+        // an unknown sibling key is still caught by the typo guard
+        assert!(VenusConfig::from_toml("[server]\nscore_wrokers = 3").is_err());
     }
 
     #[test]

@@ -34,9 +34,10 @@ use crate::api::cache::{CacheStatus, CachedQuery, QueryCache};
 use crate::config::RetrievalConfig;
 use crate::embed::EmbedEngine;
 use crate::memory::{ClusterRecord, Hierarchy, MemoryFabric, StreamId, StreamScope};
-use crate::retrieval::{akr_retrieve, sample_retrieve, topk_retrieve, Selection};
+use crate::retrieval::{akr_retrieve, sample_retrieve, topk_retrieve, RecordSource, Selection};
 use crate::util::rng::Pcg64;
-use crate::util::sync::OrderedRwLock;
+use crate::util::scorer::ScorePool;
+use crate::util::sync::{OrderedReadGuard, OrderedRwLock};
 
 /// Measured edge-side latencies for one query.
 #[derive(Clone, Copy, Debug, Default)]
@@ -84,6 +85,15 @@ pub struct QueryEngine {
     cfg: RetrievalConfig,
     rng: Pcg64,
     scores_buf: Vec<f32>,
+    /// Engine-owned merged score buffer for the All path — reused across
+    /// queries (it grows to the fabric's total row count and stays
+    /// there), replacing the per-query `Vec<f32>` allocation.
+    merged_buf: Vec<f32>,
+    /// Shared scoring pool.  `None` ⇒ serial scoring (embedded and
+    /// legacy callers); the server attaches one pool to every worker's
+    /// engine.  Output is bit-identical either way
+    /// (DESIGN.md §Parallel-Query).
+    pool: Option<Arc<ScorePool>>,
 }
 
 impl QueryEngine {
@@ -99,7 +109,17 @@ impl QueryEngine {
             cfg,
             rng: Pcg64::new(seed, 0x9e4),
             scores_buf: Vec::new(),
+            merged_buf: Vec::new(),
+            pool: None,
         }
+    }
+
+    /// Attach a shared scoring pool (builder style): scoring fans out as
+    /// row-disjoint tasks across shards and cold segments, bit-identical
+    /// to the serial path at any worker count.
+    pub fn with_pool(mut self, pool: Arc<ScorePool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 
     /// Convenience: a query engine over one bare shard (single-camera
@@ -250,10 +270,15 @@ impl QueryEngine {
             if guards.len() == 1 {
                 // single-shard fast path (One scope, or a single-camera
                 // fabric): select straight off the shard — no merged
-                // score copy, no per-record reference vec
+                // score copy, no per-record reference vec.  With a pool
+                // attached, cold segments and the hot index still score
+                // in parallel within the shard.
                 let g = &guards[0];
                 let t0 = Instant::now();
-                g.score_all(&qvec, &mut self.scores_buf)?;
+                match self.pool.as_deref() {
+                    Some(pool) => g.score_all_pooled(pool, &qvec, &mut self.scores_buf)?,
+                    None => g.score_all(&qvec, &mut self.scores_buf)?,
+                }
                 t.search_s = t0.elapsed().as_secs_f64();
 
                 let t0 = Instant::now();
@@ -263,20 +288,43 @@ impl QueryEngine {
                 t.select_s = t0.elapsed().as_secs_f64();
                 (sel, draws, fs, touched)
             } else {
+                // All-scope scatter-gather into one engine-owned merged
+                // buffer.  With a pool: one row-disjoint task per shard
+                // × {cold segment, hot index} (+ readahead tasks), each
+                // writing its pre-carved slice — concatenated
+                // cold-then-hot, shard-ordered output is bit-identical
+                // to the serial walk below.
                 let t0 = Instant::now();
-                let mut merged: Vec<f32> = Vec::new();
-                let mut records: Vec<&ClusterRecord> = Vec::new();
-                for g in &guards {
-                    g.score_all(&qvec, &mut self.scores_buf)?;
-                    merged.extend_from_slice(&self.scores_buf);
-                    records.extend(g.records().iter());
+                self.merged_buf.clear();
+                match self.pool.as_deref() {
+                    Some(pool) => {
+                        let plans: Vec<_> =
+                            guards.iter().map(|g| g.plan_score(&qvec)).collect();
+                        let total: usize = plans.iter().map(|p| p.rows()).sum();
+                        self.merged_buf.resize(total, 0.0);
+                        let mut tasks = Vec::new();
+                        let mut rest = self.merged_buf.as_mut_slice();
+                        for (g, plan) in guards.iter().zip(&plans) {
+                            let (slice, r) = rest.split_at_mut(plan.rows());
+                            rest = r;
+                            g.push_score_tasks(plan, &qvec, slice, pool, &mut tasks);
+                        }
+                        pool.run_batch(tasks)?;
+                    }
+                    None => {
+                        for g in &guards {
+                            g.score_all(&qvec, &mut self.scores_buf)?;
+                            self.merged_buf.extend_from_slice(&self.scores_buf);
+                        }
+                    }
                 }
                 t.search_s = t0.elapsed().as_secs_f64();
 
                 let t0 = Instant::now();
+                let view = MergedView::over(&guards);
                 let (sel, draws) =
-                    select_over(&records[..], &merged, &cfg, &mut self.rng, mode);
-                let fs = frame_scores_for(&records[..], &sel, &merged);
+                    select_over(&view, &self.merged_buf, &cfg, &mut self.rng, mode);
+                let fs = frame_scores_for(&view, &sel, &self.merged_buf);
                 t.select_s = t0.elapsed().as_secs_f64();
                 (sel, draws, fs, touched)
             }
@@ -342,6 +390,45 @@ fn outcome_from_cached(hit: CachedQuery, timings: EdgeTimings) -> QueryOutcome {
         timings,
         draws: hit.draws,
         frame_scores: hit.frame_scores,
+    }
+}
+
+/// Zero-copy merged record view over the scoped shards' read guards:
+/// per-shard record slices concatenated in shard order, addressed by the
+/// same global offsets the merged score buffer uses.  Replaces the
+/// per-record `Vec<&ClusterRecord>` the All path used to assemble on
+/// every query (fabric-sized, rebuilt per request) with a per-shard
+/// offset table.
+struct MergedView<'a> {
+    /// (shard, its first row's offset in the merged buffer), shard order
+    shards: Vec<(&'a Hierarchy, usize)>,
+    total: usize,
+}
+
+impl<'a> MergedView<'a> {
+    fn over(guards: &'a [OrderedReadGuard<'a, Hierarchy>]) -> Self {
+        let mut shards = Vec::with_capacity(guards.len());
+        let mut off = 0usize;
+        for g in guards {
+            shards.push((&**g, off));
+            off += Hierarchy::len(g);
+        }
+        Self { shards, total: off }
+    }
+}
+
+impl RecordSource for MergedView<'_> {
+    fn len(&self) -> usize {
+        self.total
+    }
+
+    fn record(&self, id: usize) -> Option<&ClusterRecord> {
+        if id >= self.total {
+            return None;
+        }
+        let i = self.shards.partition_point(|&(_, off)| off <= id) - 1;
+        let (shard, off) = self.shards[i];
+        shard.record(id - off)
     }
 }
 

@@ -40,9 +40,10 @@ use anyhow::Result;
 use crate::config::MemoryConfig;
 use crate::memory::fabric::StreamId;
 use crate::memory::raw::RawStore;
-use crate::memory::segment::{ColdTier, SegmentOptions};
+use crate::memory::segment::{ColdSpan, ColdTier, SegmentOptions};
 use crate::memory::storage::{DiskRaw, StreamStorage};
 use crate::memory::vectordb::{build_index, Hit, Metric, VectorIndex};
+use crate::util::scorer::{ScorePool, ScoreTask};
 
 /// Index-layer record: one indexed (centroid) frame and its cluster.
 #[derive(Clone, Debug)]
@@ -55,6 +56,27 @@ pub struct ClusterRecord {
     pub centroid_frame: u64,
     /// member frame ids (stream-local), ascending
     pub members: Vec<u64>,
+}
+
+/// Row-disjoint decomposition of one shard's scan: built under the
+/// shard's read guard by [`Hierarchy::plan_score`], turned into scoring
+/// tasks by [`Hierarchy::push_score_tasks`].  The plan records the probe
+/// decision, so building it already bumps the shard's scan gauges —
+/// callers must follow through and run the tasks.
+pub struct ShardScorePlan {
+    /// L2-normalized copy of the query for the cold scan (empty when the
+    /// shard has no cold tier)
+    qn: Vec<f32>,
+    spans: Vec<ColdSpan>,
+    cold_rows: usize,
+    hot_rows: usize,
+}
+
+impl ShardScorePlan {
+    /// Total rows this shard contributes to the merged score buffer.
+    pub fn rows(&self) -> usize {
+        self.cold_rows + self.hot_rows
+    }
 }
 
 /// Per-tier residency and traffic gauges of one shard (or, merged, the
@@ -541,6 +563,112 @@ impl Hierarchy {
         self.index.score_all(query, &mut hot);
         out.extend_from_slice(&hot);
         Ok(())
+    }
+
+    /// Decompose this shard's next scan into a row-disjoint plan for the
+    /// scoring pool (DESIGN.md §Parallel-Query).  Mirrors
+    /// [`Hierarchy::score_all`] exactly: the cold tier sees an
+    /// L2-normalized copy of the query, the hot tier the raw query (the
+    /// index normalizes internally — `l2_normalize` is not
+    /// bit-idempotent), and the probe decision + scan gauges are the
+    /// ones a serial walk of the same query would produce.
+    pub fn plan_score(&self, query: &[f32]) -> ShardScorePlan {
+        if self.cold.is_empty() {
+            return ShardScorePlan {
+                qn: Vec::new(),
+                spans: Vec::new(),
+                cold_rows: 0,
+                hot_rows: self.index.len(),
+            };
+        }
+        let mut qn = query.to_vec();
+        crate::util::l2_normalize(&mut qn);
+        let spans = self.cold.plan(&qn);
+        ShardScorePlan {
+            qn,
+            spans,
+            cold_rows: self.cold.record_count(),
+            hot_rows: self.index.len(),
+        }
+    }
+
+    /// Turn a [`ShardScorePlan`] into pool tasks, each owning a disjoint
+    /// slice of `out` (`out.len()` must equal `plan.rows()`): one task
+    /// per scanned cold segment, a readahead task warming each *next*
+    /// scanned segment's block while its predecessor scores, and one
+    /// task for the hot index.  Coarse-pruned spans are filled with
+    /// `NEG_INFINITY` inline (same value the serial path writes).
+    /// Concatenated cold-then-hot output is bit-identical to
+    /// [`Hierarchy::score_all`] — parallelism is across segments only,
+    /// never inside a row's FP accumulation order.
+    pub fn push_score_tasks<'a>(
+        &'a self,
+        plan: &'a ShardScorePlan,
+        query: &'a [f32],
+        out: &'a mut [f32],
+        pool: &'a ScorePool,
+        tasks: &mut Vec<ScoreTask<'a>>,
+    ) {
+        debug_assert_eq!(out.len(), plan.rows(), "score slice mis-sized for plan");
+        let (cold_out, hot_out) = out.split_at_mut(plan.cold_rows);
+        // next scanned segment after position k, for readahead pairing
+        let mut next_scanned = vec![None; plan.spans.len()];
+        let mut next = None;
+        for k in (0..plan.spans.len()).rev() {
+            next_scanned[k] = next;
+            if plan.spans[k].scanned {
+                next = Some(plan.spans[k].seg);
+            }
+        }
+        let mut rest = cold_out;
+        for (k, span) in plan.spans.iter().enumerate() {
+            let (slice, r) = rest.split_at_mut(span.count);
+            rest = r;
+            if !span.scanned {
+                slice.fill(f32::NEG_INFINITY);
+                continue;
+            }
+            if let Some(next_seg) = next_scanned[k] {
+                let cold = &self.cold;
+                tasks.push(Box::new(move || cold.prefetch(next_seg)));
+            }
+            let cold = &self.cold;
+            let qn = &plan.qn;
+            let seg = span.seg;
+            tasks.push(Box::new(move || {
+                let t0 = std::time::Instant::now();
+                let res = cold.score_segment_into(qn, seg, slice);
+                pool.note_cold_ns(t0.elapsed().as_nanos() as u64);
+                res
+            }));
+        }
+        if plan.hot_rows > 0 {
+            let index = &self.index;
+            tasks.push(Box::new(move || {
+                let t0 = std::time::Instant::now();
+                index.score_into(query, hot_out);
+                pool.note_hot_ns(t0.elapsed().as_nanos() as u64);
+                Ok(())
+            }));
+        }
+    }
+
+    /// Parallel counterpart of [`Hierarchy::score_all`]: run this
+    /// shard's decomposed scan on the scoring pool.  Output (and the rng
+    /// draws any selector makes over it) is bit-identical to the serial
+    /// path at every `score_workers` count.
+    pub fn score_all_pooled(
+        &self,
+        pool: &ScorePool,
+        query: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let plan = self.plan_score(query);
+        out.clear();
+        out.resize(plan.rows(), 0.0);
+        let mut tasks = Vec::new();
+        self.push_score_tasks(&plan, query, &mut out[..], pool, &mut tasks);
+        pool.run_batch(tasks)
     }
 
     /// Top-k indexed frames (vanilla greedy retrieval), tier-aware.

@@ -12,7 +12,7 @@ pub mod storage;
 pub mod vectordb;
 
 pub use fabric::{FrameId, MemoryFabric, StreamId, StreamScope};
-pub use hierarchy::{ClusterRecord, Hierarchy, TierStats};
+pub use hierarchy::{ClusterRecord, Hierarchy, ShardScorePlan, TierStats};
 pub use raw::{InMemoryRaw, RawStore, SynthBackedRaw};
 pub use segment::{ColdTier, SegmentMeta, SegmentOptions};
 pub use storage::{DiskRaw, StreamStorage};

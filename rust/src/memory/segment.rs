@@ -550,6 +550,20 @@ pub struct ColdTier {
     probed_segments: AtomicU64,
     probe_candidates: AtomicU64,
     rows_scored: AtomicU64,
+    /// blocks warmed by readahead (neither a hit nor a miss)
+    prefetches: AtomicU64,
+}
+
+/// One segment's share of a cold scan, as planned by [`ColdTier::plan`]:
+/// rows `[offset, offset + count)` of the shard's cold region.  A
+/// non-`scanned` span was coarse-pruned and is filled with
+/// `NEG_INFINITY` instead of scored.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ColdSpan {
+    pub seg: usize,
+    pub offset: usize,
+    pub count: usize,
+    pub scanned: bool,
 }
 
 impl ColdTier {
@@ -567,6 +581,7 @@ impl ColdTier {
             probed_segments: AtomicU64::new(0),
             probe_candidates: AtomicU64::new(0),
             rows_scored: AtomicU64::new(0),
+            prefetches: AtomicU64::new(0),
         }
     }
 
@@ -711,6 +726,89 @@ impl ColdTier {
             }
         }
         Ok(())
+    }
+
+    /// Row-disjoint decomposition of one cold scan, for the parallel
+    /// scoring pool (DESIGN.md §Parallel-Query): one span per segment,
+    /// in base order, carrying the same probe decision — and bumping the
+    /// same scan gauges — as a serial [`ColdTier::score_into`] walk of
+    /// the same query would.
+    pub(crate) fn plan(&self, qn: &[f32]) -> Vec<ColdSpan> {
+        let probe = self.select_probes(qn);
+        self.probe_candidates
+            .fetch_add(self.segments.len() as u64, Ordering::Relaxed);
+        let mut spans = Vec::with_capacity(self.segments.len());
+        let mut offset = 0usize;
+        for (i, meta) in self.segments.iter().enumerate() {
+            if probe[i] {
+                self.probed_segments.fetch_add(1, Ordering::Relaxed);
+                self.rows_scored
+                    .fetch_add(meta.count as u64, Ordering::Relaxed);
+            }
+            spans.push(ColdSpan { seg: i, offset, count: meta.count, scanned: probe[i] });
+            offset += meta.count;
+        }
+        spans
+    }
+
+    /// Score one scanned segment into its pre-sliced disjoint region of
+    /// the merged buffer (`out.len() == the segment's row count`).  The
+    /// per-row math is the same kernel call [`ColdTier::score_into`]
+    /// makes, so the filled slice is bit-identical to the serial scan's
+    /// corresponding rows.
+    pub(crate) fn score_segment_into(&self, qn: &[f32], seg: usize, out: &mut [f32]) -> Result<()> {
+        let meta = &self.segments[seg];
+        debug_assert_eq!(out.len(), meta.count, "segment slice mis-sized");
+        if self.quantized && meta.has_sq8() {
+            let blk = self.sq8_block(seg)?;
+            let offset = crate::util::dot(qn, &blk.mins);
+            let w: Vec<f32> = qn.iter().zip(&blk.steps).map(|(q, s)| q * s).collect();
+            crate::util::simd::dot_batch_sq8_into(&w, &blk.codes, meta.d, offset, out);
+        } else {
+            let block = self.block(seg)?;
+            crate::util::simd::dot_batch_into(qn, &block, meta.d, out);
+        }
+        Ok(())
+    }
+
+    /// Readahead: warm segment `seg`'s block (in the representation the
+    /// next scan would request) into the LRU cache.  Unlike
+    /// [`ColdTier::cached`], the disk load runs **outside** the cache
+    /// mutex so a prefetch never stalls a concurrent scoring task; the
+    /// price is that a racing demand load may duplicate the I/O, in
+    /// which case the later arrival is simply dropped.  Counts neither a
+    /// hit nor a miss — the demand path's gauges keep their meaning.
+    pub(crate) fn prefetch(&self, seg: usize) -> Result<()> {
+        let meta = &self.segments[seg];
+        let kind = if self.quantized && meta.has_sq8() { BlockKind::Sq8 } else { BlockKind::F32 };
+        {
+            let cache = self.cache.lock();
+            if cache.iter().any(|(s, k, _)| *s == seg && *k == kind) {
+                return Ok(());
+            }
+        }
+        let block = match kind {
+            BlockKind::F32 => BlockData::F32(Arc::new(load_vectors(meta)?)),
+            BlockKind::Sq8 => BlockData::Sq8(Arc::new(load_sq8(meta)?)),
+        };
+        let mut cache = self.cache.lock();
+        if cache.iter().any(|(s, k, _)| *s == seg && *k == kind) {
+            return Ok(()); // a demand load won the race; keep its entry
+        }
+        self.prefetches.fetch_add(1, Ordering::Relaxed);
+        self.resident_bytes.fetch_add(block.bytes(), Ordering::Relaxed);
+        cache.insert(0, (seg, kind, block));
+        while cache.len() > self.cache_cap {
+            let Some((_, _, evicted)) = cache.pop() else { break };
+            self.resident_bytes
+                .fetch_sub(evicted.bytes(), Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Blocks warmed by readahead (`prefetch`) so far.
+    pub fn prefetch_count(&self) -> u64 {
+        self.prefetches.load(Ordering::Relaxed)
     }
 
     /// Copy of the stored vector for global id `id` (must be < the cold

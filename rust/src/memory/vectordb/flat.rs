@@ -84,6 +84,22 @@ impl VectorIndex for FlatIndex {
         }
     }
 
+    fn score_into(&self, query: &[f32], out: &mut [f32]) {
+        assert_eq!(query.len(), self.dim);
+        assert_eq!(out.len(), self.len());
+        let q = normalized_query(query, self.metric);
+        match self.metric {
+            Metric::Cosine | Metric::InnerProduct => {
+                crate::util::simd::dot_batch_into(&q, &self.data, self.dim, out);
+            }
+            Metric::L2 => {
+                for (o, row) in out.iter_mut().zip(self.data.chunks_exact(self.dim)) {
+                    *o = metric_score(self.metric, &q, row);
+                }
+            }
+        }
+    }
+
     fn len(&self) -> usize {
         self.data.len() / self.dim
     }

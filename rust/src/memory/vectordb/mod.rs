@@ -79,6 +79,18 @@ pub trait VectorIndex: Send + Sync {
     /// (Venus's sampling retrieval needs the full score vector, Eq. 4).
     fn score_all(&self, query: &[f32], out: &mut Vec<f32>);
 
+    /// Slice form of [`VectorIndex::score_all`]: fill a pre-sized
+    /// disjoint region of a merged score buffer (`out.len()` must equal
+    /// `self.len()`), bit-identical per row to `score_all`.  The
+    /// parallel scoring pool writes hot-tier scores through this; the
+    /// default falls back through a temporary vector so third-party
+    /// indexes stay correct without opting in.
+    fn score_into(&self, query: &[f32], out: &mut [f32]) {
+        let mut tmp = Vec::with_capacity(out.len());
+        self.score_all(query, &mut tmp);
+        out.copy_from_slice(&tmp);
+    }
+
     fn len(&self) -> usize;
 
     fn is_empty(&self) -> bool {

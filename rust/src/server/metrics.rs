@@ -105,6 +105,11 @@ pub struct Snapshot {
     /// depth and coalescing).  `None` unless the process runs a wire
     /// ingest hub; the gateway fills it into `stats` replies.
     pub ingest: Option<IngestSnapshot>,
+    /// Scoring-pool gauges (worker utilization, queue depth, hot/cold
+    /// scoring-time split).  `None` for a bare `Metrics::snapshot()`;
+    /// the service fills it from its shared `ScorePool` — see
+    /// `Service::snapshot`.
+    pub scoring: Option<ScorePoolSnapshot>,
 }
 
 /// One wire-ingest stream's counters and freshness tails, as reported in
@@ -238,6 +243,80 @@ impl IngestSnapshot {
     }
 }
 
+/// Scoring-pool gauges: worker count and live load, lifetime task
+/// counters, and the hot-vs-cold scoring-time split.  Mirrors
+/// `util::scorer::PoolGauges`; defined here so `server` owns its wire
+/// schema and `util` stays wire-agnostic.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScorePoolSnapshot {
+    /// Fixed worker-thread count the pool was built with.
+    pub workers: u64,
+    /// Tasks enqueued but not yet picked up (live gauge).
+    pub queue_depth: u64,
+    /// Tasks currently executing on workers or helpers (live gauge).
+    pub in_flight: u64,
+    /// Tasks executed since start (includes prefetches).
+    pub tasks_total: u64,
+    /// Tasks the submitting thread drained itself while waiting.
+    pub helped_total: u64,
+    /// Scatter-gather batches (one per pooled query scoring pass).
+    pub batches_total: u64,
+    /// Cumulative milliseconds spent scoring hot-index rows.
+    pub hot_score_ms: f64,
+    /// Cumulative milliseconds spent scoring cold-segment rows.
+    pub cold_score_ms: f64,
+}
+
+impl ScorePoolSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        m.insert("in_flight".into(), Json::Num(self.in_flight as f64));
+        m.insert("tasks_total".into(), Json::Num(self.tasks_total as f64));
+        m.insert("helped_total".into(), Json::Num(self.helped_total as f64));
+        m.insert("batches_total".into(), Json::Num(self.batches_total as f64));
+        m.insert("hot_score_ms".into(), Json::Num(self.hot_score_ms));
+        m.insert("cold_score_ms".into(), Json::Num(self.cold_score_ms));
+        Json::Obj(m)
+    }
+
+    /// Tolerant parse: every key optional, so a new client can read an
+    /// old server's `stats` reply (and vice versa) without erroring.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let num = |key: &str| -> Result<u64> {
+            Ok(v.opt(key).map(|x| x.as_usize()).transpose()?.unwrap_or(0) as u64)
+        };
+        let fnum = |key: &str| -> Result<f64> {
+            Ok(v.opt(key).map(|x| x.as_f64()).transpose()?.unwrap_or(0.0))
+        };
+        Ok(Self {
+            workers: num("workers")?,
+            queue_depth: num("queue_depth")?,
+            in_flight: num("in_flight")?,
+            tasks_total: num("tasks_total")?,
+            helped_total: num("helped_total")?,
+            batches_total: num("batches_total")?,
+            hot_score_ms: fnum("hot_score_ms")?,
+            cold_score_ms: fnum("cold_score_ms")?,
+        })
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "scoring: {}w q{} / {} in-flight / {} tasks ({} helped) / {} batches / hot {:.1}ms cold {:.1}ms",
+            self.workers,
+            self.queue_depth,
+            self.in_flight,
+            self.tasks_total,
+            self.helped_total,
+            self.batches_total,
+            self.hot_score_ms,
+            self.cold_score_ms,
+        )
+    }
+}
+
 impl Metrics {
     pub fn on_accepted(&self, lane: Priority) {
         self.inner.lock().lanes[lane.index()].accepted += 1;
@@ -318,6 +397,7 @@ impl Metrics {
             throughput_qps: if uptime > 0.0 { completed as f64 / uptime } else { 0.0 },
             memory: None,
             ingest: None,
+            scoring: None,
         }
     }
 
@@ -419,6 +499,10 @@ impl Snapshot {
             out.push_str(" | ");
             out.push_str(&ing.render());
         }
+        if let Some(sc) = &self.scoring {
+            out.push_str(" | ");
+            out.push_str(&sc.render());
+        }
         out
     }
 
@@ -463,6 +547,9 @@ impl Snapshot {
         if let Some(ing) = &self.ingest {
             m.insert("ingest".into(), ing.to_json());
         }
+        if let Some(sc) = &self.scoring {
+            m.insert("scoring".into(), sc.to_json());
+        }
         Json::Obj(m)
     }
 
@@ -499,6 +586,7 @@ impl Snapshot {
             throughput_qps: v.get("throughput_qps")?.as_f64()?,
             memory: v.opt("memory").map(TierStats::from_json).transpose()?,
             ingest: v.opt("ingest").map(IngestSnapshot::from_json).transpose()?,
+            scoring: v.opt("scoring").map(ScorePoolSnapshot::from_json).transpose()?,
         })
     }
 }
@@ -699,6 +787,41 @@ mod tests {
         let ing = back.ingest.expect("ingest gauges survive the wire");
         assert_eq!(ing, s.ingest.unwrap());
         assert_eq!(ing.totals(), (580, 32, 3));
+    }
+
+    #[test]
+    fn scoring_gauges_render_and_round_trip() {
+        let m = Metrics::default();
+        let mut s = m.snapshot();
+        assert!(s.scoring.is_none(), "bare snapshot carries no pool gauges");
+        assert!(!s.render().contains("scoring:"));
+        s.scoring = Some(ScorePoolSnapshot {
+            workers: 4,
+            queue_depth: 2,
+            in_flight: 3,
+            tasks_total: 960,
+            helped_total: 41,
+            batches_total: 120,
+            hot_score_ms: 12.5,
+            cold_score_ms: 340.0,
+        });
+        let text = s.render();
+        assert!(text.contains("scoring: 4w q2 / 3 in-flight"), "{text}");
+        assert!(text.contains("960 tasks (41 helped)"), "{text}");
+        assert!(text.contains("hot 12.5ms cold 340.0ms"), "{text}");
+
+        let wire = s.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        let sc = back.scoring.expect("pool gauges survive the wire");
+        assert_eq!(sc, s.scoring.unwrap());
+
+        // tolerance: an old server's reply lacks newer keys entirely —
+        // parse yields zeros instead of an error
+        let sparse = Json::parse(r#"{"workers": 2}"#).unwrap();
+        let sc = ScorePoolSnapshot::from_json(&sparse).unwrap();
+        assert_eq!(sc.workers, 2);
+        assert_eq!(sc.tasks_total, 0);
+        assert_eq!(sc.cold_score_ms, 0.0);
     }
 
     #[test]

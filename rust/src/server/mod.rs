@@ -26,7 +26,9 @@
 
 pub mod metrics;
 
-pub use metrics::{IngestSnapshot, IngestStreamSnapshot, LaneSnapshot, Metrics, Snapshot};
+pub use metrics::{
+    IngestSnapshot, IngestStreamSnapshot, LaneSnapshot, Metrics, ScorePoolSnapshot, Snapshot,
+};
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -46,6 +48,7 @@ use crate::coordinator::query::{QueryEngine, QueryOutcome};
 use crate::embed::EmbedEngine;
 use crate::memory::MemoryFabric;
 use crate::net::{Link, Payload};
+use crate::util::scorer::ScorePool;
 use crate::util::sync::{ranks, OrderedCondvar, OrderedMutex};
 
 struct Job {
@@ -135,6 +138,10 @@ pub struct Service {
     /// The memory fabric the workers query — kept for memory-pressure
     /// gauges in [`Service::snapshot`].
     fabric: Arc<MemoryFabric>,
+    /// The ONE process-wide scoring pool every worker's engine fans its
+    /// scatter-gather scoring out to — kept for the utilization gauges
+    /// in [`Service::snapshot`].
+    pool: Arc<ScorePool>,
     next_id: AtomicU64,
 }
 
@@ -151,14 +158,20 @@ impl Service {
         // build every engine BEFORE spawning any thread: a fallible step
         // after the first spawn would strand already-started workers on
         // the lane condvar with no Service to close it
+        // ONE scoring pool shared by every worker's engine: a per-worker
+        // pool would oversubscribe cores `workers`-fold under load
+        let pool = Arc::new(ScorePool::new(cfg.server.resolved_score_workers()));
         let mut engines = Vec::new();
         for w in 0..cfg.server.workers {
-            engines.push(QueryEngine::new(
-                EmbedEngine::new(Arc::clone(&be), cfg.ingest.aux_models)?,
-                Arc::clone(&fabric),
-                cfg.retrieval.clone(),
-                seed ^ ((w as u64) << 8),
-            ));
+            engines.push(
+                QueryEngine::new(
+                    EmbedEngine::new(Arc::clone(&be), cfg.ingest.aux_models)?,
+                    Arc::clone(&fabric),
+                    cfg.retrieval.clone(),
+                    seed ^ ((w as u64) << 8),
+                )
+                .with_pool(Arc::clone(&pool)),
+            );
         }
         let mut workers = Vec::new();
         for (w, engine) in engines.into_iter().enumerate() {
@@ -178,15 +191,28 @@ impl Service {
             metrics,
             cache,
             fabric,
+            pool,
             next_id: AtomicU64::new(0),
         })
     }
 
     /// Live metrics snapshot, including the fabric's memory-pressure
-    /// gauges (hot/cold tier residency, evictions, cold-hit rate).
+    /// gauges (hot/cold tier residency, evictions, cold-hit rate) and
+    /// the scoring pool's utilization + hot/cold time split.
     pub fn snapshot(&self) -> Snapshot {
         let mut snap = self.metrics.snapshot();
         snap.memory = Some(self.fabric.tier_stats());
+        let g = self.pool.gauges();
+        snap.scoring = Some(ScorePoolSnapshot {
+            workers: g.workers,
+            queue_depth: g.queue_depth,
+            in_flight: g.in_flight,
+            tasks_total: g.tasks_total,
+            helped_total: g.helped_total,
+            batches_total: g.batches_total,
+            hot_score_ms: g.hot_score_ms,
+            cold_score_ms: g.cold_score_ms,
+        });
         snap
     }
 
@@ -453,5 +479,8 @@ mod tests {
         assert_eq!(snap.completed(), 3);
         assert_eq!(snap.failed, 0);
         assert_eq!(snap.queued(), 0, "drained lanes report empty gauges");
+        let sc = snap.scoring.expect("service snapshots carry pool gauges");
+        assert!(sc.workers >= 1);
+        assert_eq!(sc.queue_depth, 0, "idle pool reports an empty queue");
     }
 }

@@ -7,6 +7,7 @@ pub mod b64;
 pub mod bench;
 pub mod json;
 pub mod rng;
+pub mod scorer;
 pub mod simd;
 pub mod stats;
 pub mod sync;

@@ -1,0 +1,436 @@
+//! The process-wide **scoring pool**: a fixed set of worker threads that
+//! fan one query's scoring work out as row-disjoint tasks (DESIGN.md
+//! §Parallel-Query).
+//!
+//! Determinism is structural, not scheduled: every task writes into a
+//! **pre-sliced disjoint region** of the merged score buffer that the
+//! submitter carved up before submission, and each task runs the exact
+//! per-row kernels of the serial path (`dot_batch*`), so the concatenated
+//! output is bit-identical to serial scoring no matter how the pool
+//! interleaves tasks.  Parallelism exists only *across* rows/segments —
+//! never inside a row's FP accumulation order.
+//!
+//! Scheduling is **helping**: `run_batch` enqueues its tasks and then the
+//! submitting thread drains the shared queue alongside the workers until
+//! its batch's completion latch hits zero.  That gives three properties
+//! at once: `score_workers = 1` degrades gracefully toward inline serial
+//! execution (the submitter does the work itself), concurrent submitters
+//! can never deadlock waiting on a fully-busy pool (the waiter is itself
+//! a worker), and there is no idle hand-off latency for tiny batches.
+//!
+//! Lock discipline (vlint R2-clean — all locks are ordered wrappers):
+//! the submitter holds its scoped shard read guards (ranks `SHARD_BASE+i`)
+//! while touching the pool, so both pool locks rank above the shard band:
+//! [`ranks::SCORE_POOL_QUEUE`] for the task queue and
+//! [`ranks::SCORE_POOL_LATCH`] for the per-batch latch/error slot.  Tasks
+//! themselves may acquire the cold block cache
+//! ([`ranks::COLD_BLOCK_CACHE`]), which ranks above both.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::anyhow;
+
+use crate::util::sync::{ranks, OrderedCondvar, OrderedMutex};
+use crate::Result;
+
+/// One unit of scoring work: a closure that fills its pre-assigned
+/// disjoint slice of the merged score buffer (or prefetches a cold block)
+/// and reports I/O failures.  Borrows are allowed (`'a`): `run_batch`
+/// blocks until every task of the batch has fully executed, so the
+/// borrows outlive all use.
+pub type ScoreTask<'a> = Box<dyn FnOnce() -> Result<()> + Send + 'a>;
+
+type StaticTask = Box<dyn FnOnce() -> Result<()> + Send + 'static>;
+
+/// Completion latch + first-error slot for one `run_batch` call.
+struct BatchState {
+    /// Tasks not yet finished.  Decremented with `Release` after the
+    /// task closure has been consumed, so a submitter observing zero
+    /// (`Acquire`) happens-after every write the tasks performed.
+    remaining: AtomicUsize,
+    /// First task error (I/O failure or caught panic), if any.
+    fail: OrderedMutex<Option<anyhow::Error>>,
+    cv: OrderedCondvar,
+}
+
+struct QueueItem {
+    task: StaticTask,
+    batch: Arc<BatchState>,
+}
+
+struct Queue {
+    items: VecDeque<QueueItem>,
+    shutdown: bool,
+}
+
+/// State shared between the pool handle and its worker threads.
+struct Shared {
+    queue: OrderedMutex<Queue>,
+    cv: OrderedCondvar,
+    /// Tasks currently executing (workers + helping submitters).
+    in_flight: AtomicUsize,
+    tasks_total: AtomicU64,
+    /// Tasks executed by helping submitters rather than pool workers.
+    helped_total: AtomicU64,
+    batches_total: AtomicU64,
+    /// Cumulative nanoseconds spent in hot-index scoring tasks.
+    hot_ns: AtomicU64,
+    /// Cumulative nanoseconds spent in cold-segment scoring tasks.
+    cold_ns: AtomicU64,
+}
+
+/// Instantaneous + cumulative pool gauges, consumed by
+/// `server::metrics::ScorePoolSnapshot`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolGauges {
+    pub workers: u64,
+    /// Tasks queued but not yet claimed, at snapshot time.
+    pub queue_depth: u64,
+    /// Tasks executing right now (workers + helping submitters).
+    pub in_flight: u64,
+    pub tasks_total: u64,
+    pub helped_total: u64,
+    pub batches_total: u64,
+    /// Cumulative milliseconds in hot-index scoring tasks.
+    pub hot_score_ms: f64,
+    /// Cumulative milliseconds in cold-segment scoring tasks.
+    pub cold_score_ms: f64,
+}
+
+/// Fixed-size scoring thread pool.  One per process (the server builds a
+/// single pool shared by every query worker); benches and tests build
+/// their own.
+pub struct ScorePool {
+    shared: Arc<Shared>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ScorePool {
+    /// Spawn a pool with `workers` threads (clamped to at least one).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: OrderedMutex::new(
+                ranks::SCORE_POOL_QUEUE,
+                Queue { items: VecDeque::new(), shutdown: false },
+            ),
+            cv: OrderedCondvar::new(),
+            in_flight: AtomicUsize::new(0),
+            tasks_total: AtomicU64::new(0),
+            helped_total: AtomicU64::new(0),
+            batches_total: AtomicU64::new(0),
+            hot_ns: AtomicU64::new(0),
+            cold_ns: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("venus-score-{i}"))
+                    .spawn(move || worker_loop(&s))
+                    .expect("spawn scoring worker")
+            })
+            .collect();
+        Self { shared, workers, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run every task of one query's scoring batch to completion,
+    /// returning the first task error (if any).  Blocks — helping drain
+    /// the queue — until the whole batch has executed, which is what
+    /// makes lending stack borrows to the tasks sound.
+    pub fn run_batch(&self, tasks: Vec<ScoreTask<'_>>) -> Result<()> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(());
+        }
+        self.shared.batches_total.fetch_add(1, Ordering::Relaxed);
+        let batch = Arc::new(BatchState {
+            remaining: AtomicUsize::new(n),
+            fail: OrderedMutex::new(ranks::SCORE_POOL_LATCH, None),
+            cv: OrderedCondvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock();
+            for task in tasks {
+                // SAFETY: lifetime erasure only.  `run_batch` does not
+                // return until `remaining` reaches zero, and an executor
+                // decrements `remaining` (Release) only after the FnOnce
+                // has been consumed — so every `'a` borrow captured by
+                // the task strictly outlives its last use, and the
+                // Acquire load below orders the submitter after all of
+                // the tasks' writes.
+                let task: StaticTask =
+                    unsafe { std::mem::transmute::<ScoreTask<'_>, StaticTask>(task) };
+                q.items.push_back(QueueItem { task, batch: Arc::clone(&batch) });
+            }
+        }
+        self.shared.cv.notify_all();
+        while batch.remaining.load(Ordering::Acquire) > 0 {
+            let item = self.shared.queue.lock().items.pop_front();
+            match item {
+                Some(item) => {
+                    // Help: drain any queued task (not necessarily ours)
+                    // instead of sleeping.
+                    self.shared.helped_total.fetch_add(1, Ordering::Relaxed);
+                    execute(&self.shared, item);
+                }
+                None => {
+                    let g = batch.fail.lock();
+                    if batch.remaining.load(Ordering::Acquire) == 0 {
+                        break;
+                    }
+                    // Re-checked under the latch mutex, so the executor's
+                    // locked notify cannot slip between check and wait;
+                    // the timeout is belt-and-braces.
+                    let _ = batch.cv.wait_timeout(g, Duration::from_millis(2));
+                }
+            }
+        }
+        let err = batch.fail.lock().take();
+        match err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Attribute `ns` nanoseconds to hot-index scoring (called from
+    /// inside hot tasks).
+    pub fn note_hot_ns(&self, ns: u64) {
+        self.shared.hot_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Attribute `ns` nanoseconds to cold-segment scoring (called from
+    /// inside cold tasks).
+    pub fn note_cold_ns(&self, ns: u64) {
+        self.shared.cold_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Snapshot the pool gauges (queue depth is instantaneous).
+    pub fn gauges(&self) -> PoolGauges {
+        let queue_depth = self.shared.queue.lock().items.len() as u64;
+        PoolGauges {
+            workers: self.workers as u64,
+            queue_depth,
+            in_flight: self.shared.in_flight.load(Ordering::Relaxed) as u64,
+            tasks_total: self.shared.tasks_total.load(Ordering::Relaxed),
+            helped_total: self.shared.helped_total.load(Ordering::Relaxed),
+            batches_total: self.shared.batches_total.load(Ordering::Relaxed),
+            hot_score_ms: self.shared.hot_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            cold_score_ms: self.shared.cold_ns.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+impl Drop for ScorePool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().shutdown = true;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for ScorePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScorePool").field("workers", &self.workers).finish()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let item = {
+            let mut q = shared.queue.lock();
+            loop {
+                if let Some(item) = q.items.pop_front() {
+                    break Some(item);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.cv.wait(q);
+            }
+        };
+        match item {
+            Some(item) => execute(shared, item),
+            None => return,
+        }
+    }
+}
+
+/// Run one task with no locks held, then record its outcome on the batch.
+/// A panicking task (unreachable for the in-tree tasks, which funnel
+/// errors through `Result`) is converted into a batch error rather than
+/// killing the worker or hanging the submitter.
+fn execute(shared: &Shared, item: QueueItem) {
+    let QueueItem { task, batch } = item;
+    shared.in_flight.fetch_add(1, Ordering::Relaxed);
+    shared.tasks_total.fetch_add(1, Ordering::Relaxed);
+    let outcome = catch_unwind(AssertUnwindSafe(task));
+    shared.in_flight.fetch_sub(1, Ordering::Relaxed);
+    let err = match outcome {
+        Ok(Ok(())) => None,
+        Ok(Err(e)) => Some(e),
+        Err(_) => Some(anyhow!("scoring task panicked")),
+    };
+    if let Some(e) = err {
+        let mut slot = batch.fail.lock();
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+    }
+    if batch.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // Last task out: notify under the latch mutex so a submitter
+        // between its remaining-check and wait cannot miss the wake.
+        let _g = batch.fail.lock();
+        batch.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn disjoint_slices_fill_completely() {
+        let pool = ScorePool::new(4);
+        let mut buf = vec![0.0f32; 64];
+        let mut tasks: Vec<ScoreTask<'_>> = Vec::new();
+        let mut rest = buf.as_mut_slice();
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = rest.len().min(7);
+            let (chunk, r) = rest.split_at_mut(take);
+            rest = r;
+            let start = base;
+            base += take;
+            tasks.push(Box::new(move || {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = (start + i) as f32;
+                }
+                Ok(())
+            }));
+        }
+        pool.run_batch(tasks).expect("batch succeeds");
+        for (i, x) in buf.iter().enumerate() {
+            assert_eq!(*x, i as f32);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = ScorePool::new(2);
+        pool.run_batch(Vec::new()).expect("empty batch");
+        assert_eq!(pool.gauges().batches_total, 0);
+    }
+
+    #[test]
+    fn first_error_is_surfaced() {
+        let pool = ScorePool::new(2);
+        let ran = AtomicU32::new(0);
+        let tasks: Vec<ScoreTask<'_>> = (0..8)
+            .map(|i| {
+                let ran = &ran;
+                Box::new(move || {
+                    ran.fetch_add(1, Ordering::Relaxed);
+                    if i == 3 {
+                        anyhow::bail!("segment {i} checksum mismatch");
+                    }
+                    Ok(())
+                }) as ScoreTask<'_>
+            })
+            .collect();
+        let err = pool.run_batch(tasks).expect_err("task 3 fails the batch");
+        assert!(err.to_string().contains("checksum mismatch"));
+        // every task still ran to completion (the latch drained)
+        assert_eq!(ran.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn panicking_task_fails_the_batch_without_hanging() {
+        let pool = ScorePool::new(2);
+        let tasks: Vec<ScoreTask<'_>> = vec![
+            Box::new(|| Ok(())),
+            Box::new(|| panic!("injected")),
+            Box::new(|| Ok(())),
+        ];
+        let err = pool.run_batch(tasks).expect_err("panic becomes an error");
+        assert!(err.to_string().contains("panicked"));
+        // the pool survives and keeps executing later batches
+        pool.run_batch(vec![Box::new(|| Ok(())) as ScoreTask<'_>]).expect("pool alive");
+    }
+
+    #[test]
+    fn concurrent_submitters_make_progress_on_one_worker() {
+        // With a single worker, every submitter must help drain or this
+        // would starve; four threads × many tasks each all complete.
+        let pool = std::sync::Arc::new(ScorePool::new(1));
+        let total = AtomicU32::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = std::sync::Arc::clone(&pool);
+                let total = &total;
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        let tasks: Vec<ScoreTask<'_>> = (0..16)
+                            .map(|_| {
+                                Box::new(move || {
+                                    total.fetch_add(1, Ordering::Relaxed);
+                                    Ok(())
+                                }) as ScoreTask<'_>
+                            })
+                            .collect();
+                        pool.run_batch(tasks).expect("batch");
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 10 * 16);
+        let g = pool.gauges();
+        assert_eq!(g.tasks_total, 4 * 10 * 16);
+        assert_eq!(g.batches_total, 40);
+        assert_eq!(g.queue_depth, 0);
+        assert_eq!(g.in_flight, 0);
+    }
+
+    #[test]
+    fn gauges_track_timing_notes() {
+        let pool = ScorePool::new(1);
+        pool.note_hot_ns(2_000_000);
+        pool.note_cold_ns(500_000);
+        let g = pool.gauges();
+        assert!((g.hot_score_ms - 2.0).abs() < 1e-9);
+        assert!((g.cold_score_ms - 0.5).abs() < 1e-9);
+        assert_eq!(g.workers, 1);
+    }
+
+    #[test]
+    fn submitter_may_hold_a_shard_guard_while_running_a_batch() {
+        // Mirrors the query path's lock discipline: shard read guard
+        // (rank SHARD_BASE) held across run_batch.  Debug builds assert
+        // rank order, so this test fails loudly on an inversion.
+        use crate::util::sync::{ranks, OrderedRwLock};
+        let pool = ScorePool::new(2);
+        let shard = OrderedRwLock::new(ranks::shard(3), vec![1.0f32; 8]);
+        let g = shard.read();
+        let data: &[f32] = &g;
+        let mut out = vec![0.0f32; 8];
+        let tasks: Vec<ScoreTask<'_>> = vec![Box::new(|| {
+            out.copy_from_slice(data);
+            Ok(())
+        })];
+        pool.run_batch(tasks).expect("batch under shard guard");
+        assert_eq!(out, vec![1.0f32; 8]);
+    }
+}

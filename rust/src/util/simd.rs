@@ -26,12 +26,24 @@ const ROW_BLOCK: usize = 4;
 
 /// Score `q` against every `d`-wide row of the contiguous block `rows`,
 /// appending one score per row to `out` in row order.  Each row's value
-/// is bit-identical to `crate::util::dot(q, row)`.
+/// is bit-identical to `crate::util::dot(q, row)`.  Thin wrapper over
+/// [`dot_batch_into`] — the slice form the parallel scoring pool writes
+/// through — so both entry points share one per-row op order.
 pub fn dot_batch(q: &[f32], rows: &[f32], d: usize, out: &mut Vec<f32>) {
+    let start = out.len();
+    out.resize(start + rows.len() / d.max(1), 0.0);
+    dot_batch_into(q, rows, d, &mut out[start..]);
+}
+
+/// Slice form of [`dot_batch`]: write one score per row into the
+/// pre-sized `out` (`out.len()` must equal the row count).  Used by the
+/// scoring pool, whose tasks fill disjoint regions of one merged buffer.
+pub fn dot_batch_into(q: &[f32], rows: &[f32], d: usize, out: &mut [f32]) {
     debug_assert!(d > 0, "dot_batch: zero dimension");
     debug_assert_eq!(q.len(), d, "dot_batch: query length != d");
     debug_assert_eq!(rows.len() % d, 0, "dot_batch: ragged row block");
-    out.reserve(rows.len() / d.max(1));
+    debug_assert_eq!(out.len(), rows.len() / d.max(1), "dot_batch: mis-sized out slice");
+    let mut w = 0usize;
     let split = d & !7;
     let (qc, qr) = q.split_at(split);
     let mut quads = rows.chunks_exact(ROW_BLOCK * d);
@@ -70,10 +82,12 @@ pub fn dot_batch(q: &[f32], rows: &[f32], d: usize, out: &mut Vec<f32>) {
             acc[2] += x * y2;
             acc[3] += x * y3;
         }
-        out.extend_from_slice(&acc);
+        out[w..w + ROW_BLOCK].copy_from_slice(&acc);
+        w += ROW_BLOCK;
     }
     for row in quads.remainder().chunks_exact(d) {
-        out.push(crate::util::dot(q, row));
+        out[w] = crate::util::dot(q, row);
+        w += 1;
     }
 }
 
@@ -87,10 +101,19 @@ pub fn dot_batch(q: &[f32], rows: &[f32], d: usize, out: &mut Vec<f32>) {
 /// `offset = dot(q, min)` and `w[j] = q[j]·step[j]`, and the inner loop
 /// is a single fused u8→f32 multiply-accumulate per element.
 pub fn dot_batch_sq8(w: &[f32], codes: &[u8], d: usize, offset: f32, out: &mut Vec<f32>) {
+    let start = out.len();
+    out.resize(start + codes.len() / d.max(1), 0.0);
+    dot_batch_sq8_into(w, codes, d, offset, &mut out[start..]);
+}
+
+/// Slice form of [`dot_batch_sq8`] (see [`dot_batch_into`] for why the
+/// pool needs it): writes into the pre-sized `out` instead of appending.
+pub fn dot_batch_sq8_into(w: &[f32], codes: &[u8], d: usize, offset: f32, out: &mut [f32]) {
     debug_assert!(d > 0, "dot_batch_sq8: zero dimension");
     debug_assert_eq!(w.len(), d, "dot_batch_sq8: weight length != d");
     debug_assert_eq!(codes.len() % d, 0, "dot_batch_sq8: ragged code block");
-    out.reserve(codes.len() / d.max(1));
+    debug_assert_eq!(out.len(), codes.len() / d.max(1), "dot_batch_sq8: mis-sized out slice");
+    let mut wi = 0usize;
     let split = d & !7;
     let (wc, wr) = w.split_at(split);
     let mut quads = codes.chunks_exact(ROW_BLOCK * d);
@@ -129,7 +152,8 @@ pub fn dot_batch_sq8(w: &[f32], codes: &[u8], d: usize, offset: f32, out: &mut V
             acc[2] += x * *y2 as f32;
             acc[3] += x * *y3 as f32;
         }
-        out.extend_from_slice(&acc);
+        out[wi..wi + ROW_BLOCK].copy_from_slice(&acc);
+        wi += ROW_BLOCK;
     }
     for row in quads.remainder().chunks_exact(d) {
         let mut lanes = [0.0f32; 8];
@@ -143,7 +167,8 @@ pub fn dot_batch_sq8(w: &[f32], codes: &[u8], d: usize, offset: f32, out: &mut V
         for (x, y) in wr.iter().zip(rt) {
             acc += x * *y as f32;
         }
-        out.push(acc);
+        out[wi] = acc;
+        wi += 1;
     }
 }
 

@@ -63,8 +63,18 @@ pub mod ranks {
     /// query path's "acquire scoped shards in ascending `StreamId`
     /// order" rule is exactly the ascending-rank rule.
     pub const SHARD_BASE: u32 = 200;
+    /// Scoring-pool task queue (`util::scorer`) — above the shard band:
+    /// the query path enqueues (and helps drain) scoring tasks while
+    /// holding its scoped shard read guards.
+    pub const SCORE_POOL_QUEUE: u32 = 900_000;
+    /// Scoring-pool per-batch completion latch / first-error slot
+    /// (`util::scorer`) — just above the queue: executors record
+    /// completion after releasing the queue lock, and the submitter
+    /// waits on it holding only shard guards.
+    pub const SCORE_POOL_LATCH: u32 = 900_010;
     /// Cold-tier segment block cache (`memory::segment`) — above the
-    /// shard band: cold scoring runs under a shard read guard.
+    /// shard band AND the scoring-pool locks: cold scoring runs under a
+    /// shard read guard, possibly inside a pool task.
     pub const COLD_BLOCK_CACHE: u32 = 1_000_000;
     /// Durable raw-layer read-handle cache (`memory::storage::DiskRaw`)
     /// — above the shard band: frame fetches run under shard guards.

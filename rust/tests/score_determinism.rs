@@ -1,0 +1,274 @@
+//! Determinism gate for the parallel scoring pool (tier-1; DESIGN.md
+//! §Parallel-Query): pooled scatter-gather scoring — and the selections
+//! built on top of it — is **bit-identical** to the serial path at every
+//! worker count, across stream scopes × retrieval modes × tier mixes
+//! (hot-only / cold-heavy / recovered-from-disk) × segment formats
+//! (v1 plain-f32 / SQ8 + coarse probing).
+//!
+//! The pool parallelizes across rows and segments only: each task writes
+//! a pre-carved disjoint slice of the merged buffer and the per-row FP
+//! op order inside `dot_batch_into` is the serial kernel's, so equality
+//! here is exact bit equality, not tolerance.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use venus::backend::{self, EmbedBackend};
+use venus::config::{MemoryConfig, RetrievalConfig};
+use venus::coordinator::query::{QueryEngine, RetrievalMode};
+use venus::embed::EmbedEngine;
+use venus::memory::{ClusterRecord, Hierarchy, MemoryFabric, StreamId, StreamScope};
+use venus::util::rng::Pcg64;
+use venus::util::scorer::ScorePool;
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let path = std::env::temp_dir().join(format!(
+            "venus-scoredet-{tag}-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).unwrap();
+        Self(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const CLUSTERS: usize = 8;
+
+/// Unit-norm cluster centers, deterministic for a given rng.
+fn centers(rng: &mut Pcg64, d: usize) -> Vec<Vec<f32>> {
+    (0..CLUSTERS)
+        .map(|_| {
+            let mut c: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            venus::util::l2_normalize(&mut c);
+            c
+        })
+        .collect()
+}
+
+/// Fill a shard with cluster-coherent runs (temporal locality), sealing
+/// segments as the hot budget overflows.
+fn fill(h: &mut Hierarchy, d: usize, n: usize, run: usize, seed: u64) {
+    let stream = h.stream();
+    let mut rng = Pcg64::seeded(seed);
+    let cs = centers(&mut rng, d);
+    for i in 0..n {
+        let c = &cs[(i / run) % CLUSTERS];
+        let mut v: Vec<f32> = c.iter().map(|x| x + 0.15 * rng.normal()).collect();
+        venus::util::l2_normalize(&mut v);
+        h.archive_frame(i as u64, &venus::video::frame::Frame::filled(8, [0.5; 3]))
+            .unwrap();
+        h.insert(
+            &v,
+            ClusterRecord {
+                stream,
+                scene_id: i,
+                centroid_frame: i as u64,
+                members: vec![i as u64],
+            },
+        )
+        .unwrap();
+    }
+}
+
+/// Cold-heavy config: 256-record segments, hot budget ≈ 2 segments.
+fn cold_heavy(d: usize, quantized: bool, nprobe: usize, centroids: usize) -> MemoryConfig {
+    let rec_bytes = d * 4 + std::mem::size_of::<ClusterRecord>() + 8;
+    MemoryConfig {
+        segment_records: 256,
+        hot_budget_bytes: 2 * 256 * rec_bytes,
+        cold_cache_segments: 64,
+        quantization: if quantized { "sq8".into() } else { "none".into() },
+        coarse_nprobe: nprobe,
+        coarse_centroids_per_segment: centroids,
+        ..Default::default()
+    }
+}
+
+/// Hot-only config: budget so large nothing ever demotes.
+fn hot_only(_d: usize) -> MemoryConfig {
+    MemoryConfig {
+        hot_budget_bytes: usize::MAX / 2,
+        ..Default::default()
+    }
+}
+
+fn unit_queries(d: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let mut q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            venus::util::l2_normalize(&mut q);
+            q
+        })
+        .collect()
+}
+
+/// Assert pooled scoring is bit-identical to serial scoring on one shard
+/// at every worker count.
+fn assert_shard_bit_identical(h: &Hierarchy, d: usize, tag: &str) {
+    let queries = unit_queries(d, 6, 0xdead ^ h.len() as u64);
+    let mut serial = Vec::new();
+    let mut pooled = Vec::new();
+    for workers in WORKER_COUNTS {
+        let pool = ScorePool::new(workers);
+        for (qi, q) in queries.iter().enumerate() {
+            h.score_all(q, &mut serial).unwrap();
+            h.score_all_pooled(&pool, q, &mut pooled).unwrap();
+            assert_eq!(serial.len(), pooled.len(), "{tag}: row count (q{qi})");
+            for (i, (s, p)) in serial.iter().zip(&pooled).enumerate() {
+                assert_eq!(
+                    s.to_bits(),
+                    p.to_bits(),
+                    "{tag}: score {i} drifts under {workers} workers (q{qi}): {s} vs {p}"
+                );
+            }
+        }
+        assert!(
+            pool.gauges().tasks_total > 0,
+            "{tag}: pooled path never reached the pool at {workers} workers"
+        );
+    }
+}
+
+/// Shard-level bit-identity across tier mixes and segment formats.
+#[test]
+fn pooled_shard_scores_are_bit_identical_to_serial() {
+    let d = 32;
+    let tmp = TempDir::new("shard");
+    let n = 1024;
+    let run = 256;
+
+    // hot-only: the pool degenerates to one hot-index task
+    let mut hot =
+        Hierarchy::durable(&hot_only(d), d, StreamId(0), &tmp.0.join("hot"), 8).unwrap();
+    fill(&mut hot, d, 512, run, 3);
+    assert_eq!(hot.tier_stats().cold_records, 0, "shard must stay hot-only");
+    assert_shard_bit_identical(&hot, d, "hot-only");
+
+    // cold-heavy, v1 plain-f32 segments, no pruning
+    let v1_dir = tmp.0.join("v1");
+    let mut v1 =
+        Hierarchy::durable(&cold_heavy(d, false, 0, 0), d, StreamId(0), &v1_dir, 8).unwrap();
+    fill(&mut v1, d, n, run, 42);
+    assert!(v1.tier_stats().cold_records > n / 2, "tier split not cold-heavy");
+    assert_shard_bit_identical(&v1, d, "cold-v1");
+
+    // cold-heavy, SQ8-quantized segments with coarse probing (pruned
+    // segments are NEG_INFINITY-filled on both paths)
+    let mut sq8 =
+        Hierarchy::durable(&cold_heavy(d, true, 4, 8), d, StreamId(0), &tmp.0.join("sq8"), 8)
+            .unwrap();
+    fill(&mut sq8, d, n, run, 42);
+    assert!(sq8.tier_stats().cold_quantized, "shard must scan SQ8");
+    assert_shard_bit_identical(&sq8, d, "cold-sq8");
+
+    // recovered: flush + reopen the v1 shard from disk (cold tier comes
+    // back from sealed segments, hot tier from the WAL tail)
+    v1.flush().unwrap();
+    drop(v1);
+    let recovered =
+        Hierarchy::durable(&cold_heavy(d, false, 0, 0), d, StreamId(0), &v1_dir, 8).unwrap();
+    assert_eq!(recovered.len(), n, "recovery must restore every record");
+    assert_shard_bit_identical(&recovered, d, "recovered");
+}
+
+/// Build a 2-stream durable fabric, fill both shards, flush, and reopen
+/// it so the engine test also runs over recovered segments.
+fn reopened_fabric(cfg: &MemoryConfig, d: usize, dir: &std::path::Path) -> Arc<MemoryFabric> {
+    let fabric = MemoryFabric::open(cfg, d, 2, 8, dir).unwrap();
+    for (i, shard) in fabric.shards().iter().enumerate() {
+        let mut g = shard.write();
+        fill(&mut g, d, 768, 256, 0x51ed + i as u64);
+    }
+    fabric.flush().unwrap();
+    drop(fabric);
+    Arc::new(MemoryFabric::open(cfg, d, 2, 8, dir).unwrap())
+}
+
+/// Engine-level gate: with a pool attached, `retrieve_scoped_with`
+/// selections (frames, scores, draw counts) are bit-identical to the
+/// serial engine at every worker count, across scopes × modes, over a
+/// recovered 2-shard fabric — in both plain-f32 and SQ8 fabrics.
+#[test]
+fn pooled_selections_match_serial_across_scopes_and_modes() {
+    let be = backend::shared_default().unwrap();
+    let d = be.model().d_embed;
+    let retrieval = RetrievalConfig::default();
+    let budget = retrieval.budget;
+
+    let scopes = [StreamScope::All, StreamScope::One(StreamId(0)), StreamScope::One(StreamId(1))];
+    let modes = [
+        RetrievalMode::Akr,
+        RetrievalMode::FixedSampling(budget),
+        RetrievalMode::TopK(budget),
+    ];
+    let texts = ["what happened with concept01", "person near the red car"];
+
+    for quantized in [false, true] {
+        let tmp = TempDir::new(if quantized { "engine-sq8" } else { "engine-v1" });
+        let cfg = cold_heavy(d, quantized, if quantized { 4 } else { 0 }, if quantized { 8 } else { 0 });
+        let fabric = reopened_fabric(&cfg, d, &tmp.0);
+
+        for workers in WORKER_COUNTS {
+            let pool = Arc::new(ScorePool::new(workers));
+            // fresh engines per worker count: identical seeds ⇒ identical
+            // rng streams ⇒ any divergence below is a scoring difference
+            let mut serial = QueryEngine::new(
+                EmbedEngine::default_backend(false).unwrap(),
+                Arc::clone(&fabric),
+                retrieval.clone(),
+                7,
+            );
+            let mut pooled = QueryEngine::new(
+                EmbedEngine::default_backend(false).unwrap(),
+                Arc::clone(&fabric),
+                retrieval.clone(),
+                7,
+            )
+            .with_pool(Arc::clone(&pool));
+
+            for scope in scopes {
+                for mode in modes {
+                    for text in texts {
+                        let a = serial.retrieve_scoped_with(text, scope, mode).unwrap();
+                        let b = pooled.retrieve_scoped_with(text, scope, mode).unwrap();
+                        assert_eq!(
+                            a.selection.frames, b.selection.frames,
+                            "selection drifts: sq8={quantized} {workers}w {scope:?} {mode:?}"
+                        );
+                        assert_eq!(
+                            a.draws, b.draws,
+                            "draw count drifts: sq8={quantized} {workers}w {scope:?} {mode:?}"
+                        );
+                        assert_eq!(a.frame_scores.len(), b.frame_scores.len());
+                        for (x, y) in a.frame_scores.iter().zip(&b.frame_scores) {
+                            assert_eq!(
+                                x.to_bits(),
+                                y.to_bits(),
+                                "frame score drifts: sq8={quantized} {workers}w {scope:?} {mode:?}"
+                            );
+                        }
+                    }
+                }
+            }
+            assert!(
+                pool.gauges().tasks_total > 0,
+                "pooled engine never reached the pool at {workers} workers"
+            );
+        }
+    }
+}
