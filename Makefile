@@ -40,6 +40,7 @@ bench-json:
 	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench wire_throughput
 	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench ingest_wire
 	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench fabric_scaling
+	BENCH_JSON_DIR=$(BENCH_JSON_DIR) cargo bench --bench fig2_latency_breakdown
 
 # Compare fresh headline scalars in $(BENCH_JSON_DIR) against the
 # committed baselines with a relative tolerance (benchmarks/bench_diff.py;

@@ -2,15 +2,26 @@
 //! on-device) for Video-RAG, BOLT, and AKS under Cloud-Only and
 //! Edge-Cloud deployment, on an EgoSchema-like clip at 8 FPS with 32
 //! selected frames — the motivation figure.
+//!
+//! A second, MEASURED section drives the served engine with tracing at
+//! sample rate 1 and rebuilds the same per-stage breakdown from real
+//! span trees (DESIGN.md §Observability), persisting `fig2_e2e_*`
+//! scalars so `make bench-json` carries a per-stage perf trajectory.
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use venus::api::QueryRequest;
 use venus::baselines::Method;
 use venus::cloud::VlmClient;
-use venus::config::{CloudConfig, NetConfig};
+use venus::config::{CloudConfig, NetConfig, VenusConfig};
 use venus::edge::AGX_ORIN;
-use venus::eval::{Deployment, LatencyModel};
+use venus::eval::{prepare_case, Deployment, LatencyModel};
 use venus::net::Link;
-use venus::util::bench::{note, section};
-use venus::util::stats::{fmt_duration, Table};
+use venus::obs::stage;
+use venus::server::Service;
+use venus::util::bench::{note, persist_metric, section};
+use venus::util::stats::{fmt_duration, Samples, Table};
 use venus::video::workload::DatasetPreset;
 
 fn main() {
@@ -50,4 +61,67 @@ fn main() {
     ]);
     print!("{table}");
     note("paper shape: Cloud-Only comm ≈ 80% of total; Edge-Cloud on-device ≈ 900 s");
+
+    measured_stage_breakdown();
+}
+
+/// The span-derived counterpart: ingest a preset, run every distinct
+/// query against the served engine with tracing at sample rate 1, and
+/// rebuild the Fig. 2 stage split from the recorded span trees.
+fn measured_stage_breakdown() {
+    section("Fig. 2 (measured) — span-derived Venus per-stage breakdown");
+    let mut cfg = VenusConfig::default();
+    // no semantic cache: a hit would short-circuit embed/score/select
+    // and the split would mix two very different pipelines
+    cfg.api.cache_entries = 0;
+
+    eprintln!("  ingesting the stream...");
+    let case =
+        prepare_case(DatasetPreset::VideoMmeShort, &cfg, 16, 0xf162).expect("prepare case");
+    cfg.api.fps = case.synth.config().fps;
+    let service = Service::start(&cfg, Arc::clone(&case.fabric), 0xf162).expect("service");
+
+    let mut texts: Vec<String> = case.queries.iter().map(|q| q.text.clone()).collect();
+    texts.sort();
+    texts.dedup();
+    for text in &texts {
+        service.call(QueryRequest::new(text.clone())).expect("traced query");
+    }
+
+    let traces = service.tracer.recent(usize::MAX);
+    assert!(!traces.is_empty(), "default sampling must trace every query");
+    let mut totals = Samples::default();
+    let mut per_stage: BTreeMap<String, Samples> = BTreeMap::new();
+    for t in &traces {
+        totals.push(t.total_us as f64 / 1e3);
+        for s in t.spans.iter().filter(|s| !s.is_child()) {
+            per_stage.entry(s.stage.clone()).or_default().push(s.dur_us as f64 / 1e3);
+        }
+    }
+
+    let mut table = Table::new(vec!["Stage", "p50", "p95", "share of p50 total"]);
+    for st in stage::QUERY_ORDER {
+        let Some(s) = per_stage.get(*st) else { continue };
+        table.row(vec![
+            st.to_string(),
+            fmt_duration(s.p50() / 1e3),
+            fmt_duration(s.p95() / 1e3),
+            format!("{:.1}%", 100.0 * s.p50() / totals.p50()),
+        ]);
+        persist_metric(&format!("fig2_e2e_{st}_p50_ms"), s.p50(), "ms");
+    }
+    table.row(vec![
+        "total".to_string(),
+        fmt_duration(totals.p50() / 1e3),
+        fmt_duration(totals.p95() / 1e3),
+        "100%".to_string(),
+    ]);
+    persist_metric("fig2_e2e_total_p50_ms", totals.p50(), "ms");
+    print!("{table}");
+    note(&format!(
+        "{} traced queries; modeled upload+vlm dominate — the on-device stages are the ones \
+         this trajectory watches",
+        traces.len()
+    ));
+    service.shutdown();
 }

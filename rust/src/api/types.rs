@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::query::{EdgeTimings, RetrievalMode};
 use crate::memory::{FrameId, StreamId, StreamScope};
+use crate::obs::TraceId;
 use crate::util::json::Json;
 
 use super::cache::CacheStatus;
@@ -232,6 +233,12 @@ pub struct QueryResponse {
     pub edge: EdgeTimings,
     pub upload_s: f64,
     pub vlm_s: f64,
+    /// Trace id of this query's span tree when the service head-sampled
+    /// it — fetch the per-stage breakdown through the `trace` wire
+    /// envelope (`venus query --connect --trace`).  `None` when tracing
+    /// is disabled, the request was not sampled, or the reply came from
+    /// an older server that predates tracing.
+    pub trace_id: Option<TraceId>,
 }
 
 impl QueryResponse {
@@ -284,7 +291,14 @@ impl QueryResponse {
         lat.insert("fetch_s".into(), Json::Num(self.edge.fetch_s));
         lat.insert("upload_s".into(), Json::Num(self.upload_s));
         lat.insert("vlm_s".into(), Json::Num(self.vlm_s));
+        // finer-grained gauges (PR: query tracing) — decoders treat them
+        // as optional so replies interoperate across versions
+        lat.insert("cache_probe_ms".into(), Json::Num(self.edge.cache_probe_s * 1e3));
+        lat.insert("score_ms".into(), Json::Num(self.edge.score_s * 1e3));
         m.insert("latency".into(), Json::Obj(lat));
+        if let Some(id) = self.trace_id {
+            m.insert("trace_id".into(), Json::Str(id.to_string()));
+        }
         Json::Obj(m)
     }
 
@@ -318,9 +332,23 @@ impl QueryResponse {
                 search_s: lat.get("search_s")?.as_f64()?,
                 select_s: lat.get("select_s")?.as_f64()?,
                 fetch_s: lat.get("fetch_s")?.as_f64()?,
+                // absent on replies from pre-tracing servers: default 0
+                cache_probe_s: lat
+                    .opt("cache_probe_ms")
+                    .map(|x| x.as_f64())
+                    .transpose()?
+                    .unwrap_or(0.0)
+                    / 1e3,
+                score_s: lat.opt("score_ms").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0)
+                    / 1e3,
             },
             upload_s: lat.get("upload_s")?.as_f64()?,
             vlm_s: lat.get("vlm_s")?.as_f64()?,
+            trace_id: v
+                .opt("trace_id")
+                .map(|x| x.as_str())
+                .transpose()?
+                .and_then(TraceId::parse),
         })
     }
 
@@ -540,9 +568,12 @@ mod tests {
                 search_s: 0.003,
                 select_s: 0.004,
                 fetch_s: 0.005,
+                cache_probe_s: 0.000125,
+                score_s: 0.0025,
             },
             upload_s: 0.5,
             vlm_s: 1.25,
+            trace_id: Some(TraceId(0xabcd_1234)),
         };
         let back = QueryResponse::from_json_str(&resp.to_json().to_string()).unwrap();
         assert_eq!(back.id, resp.id);
@@ -552,6 +583,47 @@ mod tests {
         assert_eq!(back.total_s(), resp.total_s());
         assert_eq!(back.frame_indices(), vec![12, 7]);
         assert_eq!(back.streams(), vec![StreamId(0), StreamId(3)]);
+        assert_eq!(back.trace_id, resp.trace_id);
+        assert!((back.edge.cache_probe_s - resp.edge.cache_probe_s).abs() < 1e-12);
+        assert!((back.edge.score_s - resp.edge.score_s).abs() < 1e-12);
+    }
+
+    /// Interop across versions: a reply written by a server that predates
+    /// tracing (no `trace_id`, no `score_ms` / `cache_probe_ms` latency
+    /// keys) still decodes, with the new fields at their defaults.
+    #[test]
+    fn legacy_responses_without_trace_fields_still_decode() {
+        let mut v = QueryResponse {
+            id: 7,
+            priority: Priority::Batch,
+            cache: CacheStatus::Miss,
+            evidence: vec![],
+            draws: 1,
+            queue_wait_s: 0.0,
+            edge: EdgeTimings::default(),
+            upload_s: 0.1,
+            vlm_s: 0.2,
+            trace_id: Some(TraceId(9)),
+        }
+        .to_json();
+        if let Json::Obj(m) = &mut v {
+            m.remove("trace_id");
+            let Some(Json::Obj(lat)) = m.get_mut("latency") else {
+                panic!("latency must be an object")
+            };
+            lat.remove("score_ms");
+            lat.remove("cache_probe_ms");
+        }
+        let back = QueryResponse::from_json_str(&v.to_string()).unwrap();
+        assert_eq!(back.trace_id, None);
+        assert_eq!(back.edge.score_s, 0.0);
+        assert_eq!(back.edge.cache_probe_s, 0.0);
+        // and an unparseable trace id degrades to None, not an error
+        if let Json::Obj(m) = &mut v {
+            m.insert("trace_id".into(), Json::Str("not-hex".into()));
+        }
+        let back = QueryResponse::from_json_str(&v.to_string()).unwrap();
+        assert_eq!(back.trace_id, None);
     }
 
     #[test]

@@ -29,6 +29,8 @@ pub fn run() -> Result<()> {
         "demo" => demo(&argv[1..]),
         "serve" => serve(&argv[1..]),
         "query" => query(&argv[1..]),
+        "stats" => stats(&argv[1..]),
+        "top" => top(&argv[1..]),
         "loadgen" => loadgen(&argv[1..]),
         "camera" => camera(&argv[1..]),
         "help" | "--help" | "-h" => {
@@ -53,6 +55,8 @@ fn print_help() {
            demo     ingest a synthetic stream and answer one query\n\
            serve    run the online query service (--listen ADDR opens the TCP gateway)\n\
            query    send one query to a running gateway (venus query --connect ADDR \"...\")\n\
+           stats    fetch a running gateway's metrics (--prom for Prometheus text format)\n\
+           top      periodically poll a gateway's stats and recent query traces\n\
            loadgen  drive a running gateway with open-loop concurrent load\n\
            camera   push live frames into a running gateway (venus camera --connect ADDR)\n\
            help     this message\n\
@@ -324,12 +328,10 @@ fn serve_wire(
     // the ingest hub shares the serving metrics (its admission controller
     // reads the Interactive lane's live queue depth) and the fabric the
     // queries run over — a camera's frames become queryable in place
-    let hub = Arc::new(IngestHub::new(
-        cfg,
-        Arc::clone(fabric),
-        Arc::clone(&service.metrics),
-        2,
-    )?);
+    let hub = Arc::new(
+        IngestHub::new(cfg, Arc::clone(fabric), Arc::clone(&service.metrics), 2)?
+            .with_tracer(Arc::clone(&service.tracer)),
+    );
     let gateway = Gateway::start_with(&cfg.wire, Arc::clone(&service), Some(Arc::clone(&hub)))?;
     let bound = gateway.local_addr();
     println!(
@@ -388,6 +390,7 @@ fn serve_wire(
             // flush below is safe either way — serving never ingests.
             eprintln!("warning: service handle still shared after gateway shutdown");
             println!("{}", arc.cache.stats().render());
+            println!("{}", arc.tracer.render());
             println!("{}", arc.snapshot().render());
             drop(arc);
             if fabric.is_durable() {
@@ -414,6 +417,7 @@ fn query(args: &[String]) -> Result<()> {
         .switch("stats", "print the server's metrics snapshot instead of querying")
         .switch("ping", "liveness probe instead of querying")
         .switch("shutdown", "ask the server to shut down gracefully")
+        .switch("trace", "fetch and print this query's per-stage span tree")
         .switch("json", "print raw wire JSON instead of a summary");
     let parsed = spec.parse(args)?;
     let cfg = load_config(&parsed)?;
@@ -503,6 +507,18 @@ fn query(args: &[String]) -> Result<()> {
                         );
                     }
                 }
+                if parsed.on("trace") {
+                    match resp.trace_id {
+                        Some(id) => match client.trace(id)? {
+                            Some(t) => println!("{}", t.render()),
+                            None => eprintln!("trace {id} already evicted from the server's ring"),
+                        },
+                        None => eprintln!(
+                            "server did not sample this query (tracing disabled, \
+                             not sampled under [obs] trace_sample_n, or an older server)"
+                        ),
+                    }
+                }
             }
             Err(api) => {
                 eprintln!("typed error: {api}");
@@ -516,6 +532,84 @@ fn query(args: &[String]) -> Result<()> {
         anyhow::bail!("{} of {repeat} queries failed (last: {last})", typed_errors.len());
     }
     Ok(())
+}
+
+/// `venus stats --connect ADDR` — one metrics fetch from a running
+/// gateway, as a human summary, raw wire JSON, or Prometheus text.
+fn stats(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("venus stats")
+        .flag("connect", "gateway address (host:port)", None)
+        .flag("config", "TOML config file (client timeouts come from [wire])", Some(""))
+        .switch("prom", "Prometheus text exposition format (the metrics_text envelope)")
+        .switch("json", "print raw wire JSON instead of a summary");
+    let parsed = spec.parse(args)?;
+    let cfg = load_config(&parsed)?;
+    let addr = parsed.get("connect").unwrap().to_string();
+    let mut client = WireClient::connect_with(addr.as_str(), &cfg.wire)?;
+    if parsed.on("prom") {
+        print!("{}", client.metrics_text()?);
+        return Ok(());
+    }
+    let snap = client.stats()?;
+    if parsed.on("json") {
+        println!("{}", snap.to_json());
+    } else {
+        println!("{}", snap.render());
+        println!("lifetime {:.1} q/s over {:.1}s up", snap.derived_qps(), snap.uptime_s);
+    }
+    Ok(())
+}
+
+/// `venus top --connect ADDR` — periodically poll a gateway's metrics
+/// snapshot and its most recent (or slowest) query traces.
+fn top(args: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("venus top")
+        .flag("connect", "gateway address (host:port)", None)
+        .flag("config", "TOML config file (client timeouts come from [wire])", Some(""))
+        .flag("interval-ms", "refresh interval in milliseconds", Some("1000"))
+        .flag("iterations", "refreshes before exiting (0 = until interrupted)", Some("0"))
+        .flag("traces", "traces listed per refresh", Some("5"))
+        .switch("slow", "list the slow-query ring instead of the most recent traces")
+        .switch("tree", "print each listed trace's full span tree");
+    let parsed = spec.parse(args)?;
+    let cfg = load_config(&parsed)?;
+    let addr = parsed.get("connect").unwrap().to_string();
+    let interval = Duration::from_millis(parsed.get_usize("interval-ms")?.max(1) as u64);
+    let iterations = parsed.get_usize("iterations")?;
+    let n_traces = parsed.get_usize("traces")?;
+    let slow = parsed.on("slow");
+    let mut client = WireClient::connect_with(addr.as_str(), &cfg.wire)?;
+    let mut round = 0usize;
+    loop {
+        let snap = client.stats()?;
+        println!("{}", snap.render());
+        println!("lifetime {:.1} q/s over {:.1}s up", snap.derived_qps(), snap.uptime_s);
+        if n_traces > 0 {
+            let traces = client.recent_traces(n_traces, slow)?;
+            if traces.is_empty() {
+                println!("  no {} traces yet", if slow { "slow" } else { "recent" });
+            }
+            for t in &traces {
+                if parsed.on("tree") {
+                    print!("{}", t.render());
+                } else {
+                    println!(
+                        "  {} {} {:>9} \"{}\"",
+                        t.id,
+                        t.kind,
+                        fmt_duration(t.total_us as f64 / 1e6),
+                        t.label,
+                    );
+                }
+            }
+        }
+        round += 1;
+        if iterations > 0 && round >= iterations {
+            return Ok(());
+        }
+        println!();
+        std::thread::sleep(interval);
+    }
 }
 
 /// `venus loadgen --connect ADDR` — open-loop concurrent load against a
@@ -678,8 +772,18 @@ fn finish_serving(
     fabric: &Arc<crate::memory::MemoryFabric>,
 ) -> Result<()> {
     println!("{}", service.cache.stats().render());
+    println!("{}", service.tracer.render());
+    for t in service.tracer.slow_recent(3) {
+        println!(
+            "  slow {} {} \"{}\"",
+            t.id,
+            fmt_duration(t.total_us as f64 / 1e6),
+            t.label
+        );
+    }
     let snap = service.shutdown();
     println!("{}", snap.render());
+    println!("lifetime {:.1} q/s over {:.1}s up", snap.derived_qps(), snap.uptime_s);
     if fabric.is_durable() {
         // clean shutdown: flush the WAL tails so the next `--data-dir`
         // run recovers everything, not just the sealed segments

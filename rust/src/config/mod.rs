@@ -321,6 +321,30 @@ impl Default for WireConfig {
     }
 }
 
+/// Observability parameters: per-query span tracing + slow-query log
+/// (DESIGN.md §Observability).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Head-sampling rate: trace every Nth query/ingest batch (1 = every
+    /// request, the default — spans are cheap `Instant` pairs).  0
+    /// disables tracing entirely; the disabled path allocates nothing.
+    pub trace_sample_n: usize,
+    /// Queries whose total latency meets or exceeds this many
+    /// milliseconds have their span tree retained in the slow-query ring
+    /// (0 disables the slow log).
+    pub slow_query_ms: u64,
+    /// Bounded capacity of the completed-trace ring (oldest evicted).
+    pub trace_ring: usize,
+    /// Bounded capacity of the slow-query ring (oldest evicted).
+    pub slow_ring: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self { trace_sample_n: 1, slow_query_ms: 500, trace_ring: 256, slow_ring: 64 }
+    }
+}
+
 /// Multi-camera memory-fabric parameters.
 #[derive(Clone, Debug)]
 pub struct FabricConfig {
@@ -365,6 +389,7 @@ pub struct VenusConfig {
     pub server: ServerConfig,
     pub api: ApiConfig,
     pub wire: WireConfig,
+    pub obs: ObsConfig,
     pub fabric: FabricConfig,
     /// Edge device profile name (see `edge::DeviceProfile`).
     pub device: String,
@@ -464,6 +489,13 @@ impl VenusConfig {
             d.usize_or("wire.write_timeout_ms", cfg.wire.write_timeout_ms as usize)? as u64;
         cfg.wire.max_frame_bytes =
             d.usize_or("wire.max_frame_bytes", cfg.wire.max_frame_bytes)?;
+
+        cfg.obs.trace_sample_n =
+            d.usize_or("obs.trace_sample_n", cfg.obs.trace_sample_n)?;
+        cfg.obs.slow_query_ms =
+            d.usize_or("obs.slow_query_ms", cfg.obs.slow_query_ms as usize)? as u64;
+        cfg.obs.trace_ring = d.usize_or("obs.trace_ring", cfg.obs.trace_ring)?;
+        cfg.obs.slow_ring = d.usize_or("obs.slow_ring", cfg.obs.slow_ring)?;
 
         cfg.fabric.streams = d.usize_or("fabric.streams", cfg.fabric.streams)?;
         cfg.fabric.pool_workers =
@@ -581,6 +613,9 @@ impl VenusConfig {
         if self.wire.max_frame_bytes < 1024 {
             bail!("wire.max_frame_bytes must be >= 1024 (a QueryRequest must fit)");
         }
+        if self.obs.trace_sample_n > 0 && (self.obs.trace_ring == 0 || self.obs.slow_ring == 0) {
+            bail!("obs.trace_ring / obs.slow_ring must be >= 1 while tracing is enabled");
+        }
         if self.fabric.streams == 0 {
             bail!("fabric.streams must be >= 1");
         }
@@ -645,6 +680,10 @@ const KNOWN_KEYS: &[&str] = &[
     "wire.read_timeout_ms",
     "wire.write_timeout_ms",
     "wire.max_frame_bytes",
+    "obs.trace_sample_n",
+    "obs.slow_query_ms",
+    "obs.trace_ring",
+    "obs.slow_ring",
     "fabric.streams",
     "fabric.pool_workers",
     "device",
@@ -819,6 +858,26 @@ mod tests {
         assert!(VenusConfig::from_toml("[ingest]\nstaleness_bound_ms = 0").is_err());
         assert!(VenusConfig::from_toml("[ingest]\nslowdown_ms = 0").is_err());
         assert!(VenusConfig::from_toml("[ingest]\nmax_batch_frames = 0").is_err());
+    }
+
+    #[test]
+    fn obs_keys_parse_and_validate() {
+        let cfg = VenusConfig::from_toml(
+            "[obs]\ntrace_sample_n = 4\nslow_query_ms = 250\ntrace_ring = 32\nslow_ring = 8",
+        )
+        .unwrap();
+        assert_eq!(cfg.obs.trace_sample_n, 4);
+        assert_eq!(cfg.obs.slow_query_ms, 250);
+        assert_eq!(cfg.obs.trace_ring, 32);
+        assert_eq!(cfg.obs.slow_ring, 8);
+        // defaults: trace everything, 500 ms slow bar
+        let cfg = VenusConfig::default();
+        assert_eq!(cfg.obs.trace_sample_n, 1);
+        assert_eq!(cfg.obs.slow_query_ms, 500);
+        // sampling off is valid even with zero rings; on requires capacity
+        assert!(VenusConfig::from_toml("[obs]\ntrace_sample_n = 0\ntrace_ring = 0").is_ok());
+        assert!(VenusConfig::from_toml("[obs]\ntrace_ring = 0").is_err());
+        assert!(VenusConfig::from_toml("[obs]\nslow_ring = 0").is_err());
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //! is append-only.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -34,6 +34,7 @@ use crate::api::cache::{CacheStatus, CachedQuery, QueryCache};
 use crate::config::RetrievalConfig;
 use crate::embed::EmbedEngine;
 use crate::memory::{ClusterRecord, Hierarchy, MemoryFabric, StreamId, StreamScope};
+use crate::obs::{stage, TraceCtx};
 use crate::retrieval::{akr_retrieve, sample_retrieve, topk_retrieve, RecordSource, Selection};
 use crate::util::rng::Pcg64;
 use crate::util::scorer::ScorePool;
@@ -46,6 +47,15 @@ pub struct EdgeTimings {
     pub search_s: f64,
     pub select_s: f64,
     pub fetch_s: f64,
+    /// Query-cache lookup time (exact + semantic tiers).  *Not* part of
+    /// [`EdgeTimings::total_s`] — the probe runs before the edge stages
+    /// and is reported separately (`latency.cache_probe_ms`).
+    pub cache_probe_s: f64,
+    /// Pure scoring time inside `search_s`: the pool-attributed hot +
+    /// cold task milliseconds when a scoring pool ran the scan, else the
+    /// serial scan wall time.  A subset of `search_s`, so also excluded
+    /// from [`EdgeTimings::total_s`].
+    pub score_s: f64,
 }
 
 impl EdgeTimings {
@@ -218,6 +228,25 @@ impl QueryEngine {
         budget: Option<usize>,
         cache: Option<&QueryCache>,
     ) -> Result<(QueryOutcome, CacheStatus)> {
+        self.retrieve_request_traced(text, scope, mode, budget, cache, None)
+    }
+
+    /// [`QueryEngine::retrieve_request`] with per-stage span capture: when
+    /// a [`TraceCtx`] is supplied, every edge stage (cache probe, embed,
+    /// score — with per-shard children, hot/cold split and probe gauges —
+    /// select, fetch) records a span into it.  Tracing never perturbs the
+    /// retrieval itself: spans carry only `Instant` timings and counters,
+    /// no RNG is consumed and no FP evaluation order changes, so scored
+    /// output stays bit-identical with tracing on or off.
+    pub fn retrieve_request_traced(
+        &mut self,
+        text: &str,
+        scope: StreamScope,
+        mode: Option<RetrievalMode>,
+        budget: Option<usize>,
+        cache: Option<&QueryCache>,
+        mut trace: Option<&mut TraceCtx>,
+    ) -> Result<(QueryOutcome, CacheStatus)> {
         let mode = self.effective_mode(mode, budget);
         // AKR takes its budget from cfg.n_max: cap it for this query only
         let cfg = match (mode, budget) {
@@ -236,9 +265,21 @@ impl QueryEngine {
         // override, which `mode` alone does not encode.
         let mut lookup_state = None;
         if let Some(c) = cache {
+            let t0 = Instant::now();
             let wms = self.fabric.watermarks(scope)?;
             let key = QueryCache::text_key(text);
-            if let Some(hit) = c.lookup_exact(key, scope, mode, cfg.n_max, &wms) {
+            let hit = c.lookup_exact(key, scope, mode, cfg.n_max, &wms);
+            let d = t0.elapsed();
+            t.cache_probe_s += d.as_secs_f64();
+            if let Some(tc) = trace.as_deref_mut() {
+                tc.record_counters(
+                    stage::CACHE_PROBE,
+                    t0,
+                    d,
+                    &[("tier", 1.0), ("hit", if hit.is_some() { 1.0 } else { 0.0 })],
+                );
+            }
+            if let Some(hit) = hit {
                 return Ok((outcome_from_cached(hit, t), CacheStatus::HitExact));
             }
             lookup_state = Some((key, wms));
@@ -247,11 +288,27 @@ impl QueryEngine {
         // query embedding: pure compute, no lock held
         let t0 = Instant::now();
         let qvec = self.engine.embed_query(text)?;
-        t.embed_query_s = t0.elapsed().as_secs_f64();
+        let embed_d = t0.elapsed();
+        t.embed_query_s = embed_d.as_secs_f64();
+        if let Some(tc) = trace.as_deref_mut() {
+            tc.record(stage::EMBED, t0, embed_d);
+        }
 
         // cache tier 2: embedding similarity (skips scoring + selection)
         if let (Some(c), Some((_, wms))) = (cache, lookup_state.as_ref()) {
-            if let Some(hit) = c.lookup_semantic(&qvec, scope, mode, cfg.n_max, wms) {
+            let t0 = Instant::now();
+            let hit = c.lookup_semantic(&qvec, scope, mode, cfg.n_max, wms);
+            let d = t0.elapsed();
+            t.cache_probe_s += d.as_secs_f64();
+            if let Some(tc) = trace.as_deref_mut() {
+                tc.record_counters(
+                    stage::CACHE_PROBE_SEMANTIC,
+                    t0,
+                    d,
+                    &[("tier", 2.0), ("hit", if hit.is_some() { 1.0 } else { 0.0 })],
+                );
+            }
+            if let Some(hit) = hit {
                 return Ok((outcome_from_cached(hit, t), CacheStatus::HitSemantic));
             }
         }
@@ -274,18 +331,76 @@ impl QueryEngine {
                 // attached, cold segments and the hot index still score
                 // in parallel within the shard.
                 let g = &guards[0];
+                // probe gauges + pool hot/cold attribution are cumulative
+                // process-wide counters: capture them around the scan so
+                // the span carries this query's deltas (telemetry-grade —
+                // a concurrent query on the same shard may bleed in).
+                let ts0 = trace.as_deref_mut().map(|_| g.tier_stats());
+                let g0 = self.pool.as_deref().map(|p| p.gauges());
                 let t0 = Instant::now();
                 match self.pool.as_deref() {
                     Some(pool) => g.score_all_pooled(pool, &qvec, &mut self.scores_buf)?,
                     None => g.score_all(&qvec, &mut self.scores_buf)?,
                 }
-                t.search_s = t0.elapsed().as_secs_f64();
+                let search_d = t0.elapsed();
+                t.search_s = search_d.as_secs_f64();
+                let (hot_ms, cold_ms) = match (g0, self.pool.as_deref()) {
+                    (Some(g0), Some(p)) => {
+                        let g1 = p.gauges();
+                        (g1.hot_score_ms - g0.hot_score_ms, g1.cold_score_ms - g0.cold_score_ms)
+                    }
+                    _ => (0.0, 0.0),
+                };
+                t.score_s = if self.pool.is_some() {
+                    (hot_ms + cold_ms) / 1e3
+                } else {
+                    t.search_s
+                };
+                if let Some(tc) = trace.as_deref_mut() {
+                    let ts1 = g.tier_stats();
+                    let ts0 = ts0.unwrap_or(ts1);
+                    let probed =
+                        ts1.cold_probe_segments.saturating_sub(ts0.cold_probe_segments);
+                    let candidates =
+                        ts1.cold_probe_candidates.saturating_sub(ts0.cold_probe_candidates);
+                    tc.record_counters(
+                        stage::SCORE,
+                        t0,
+                        search_d,
+                        &[
+                            ("shards", 1.0),
+                            ("rows", self.scores_buf.len() as f64),
+                            ("hot_ms", hot_ms),
+                            ("cold_ms", cold_ms),
+                            ("probed_segments", probed as f64),
+                            ("pruned_segments", candidates.saturating_sub(probed) as f64),
+                        ],
+                    );
+                    tc.record_counters(
+                        stage::SCORE_SHARD,
+                        t0,
+                        search_d,
+                        &[
+                            ("shard", g.stream().0 as f64),
+                            ("rows", self.scores_buf.len() as f64),
+                        ],
+                    );
+                }
 
                 let t0 = Instant::now();
                 let (sel, draws) =
                     select_over(&**g, &self.scores_buf, &cfg, &mut self.rng, mode);
                 let fs = frame_scores_for(&**g, &sel, &self.scores_buf);
-                t.select_s = t0.elapsed().as_secs_f64();
+                let select_d = t0.elapsed();
+                t.select_s = select_d.as_secs_f64();
+                if let Some(tc) = trace.as_deref_mut() {
+                    tc.record_counters(
+                        stage::SELECT,
+                        t0,
+                        select_d,
+                        &[("frames", sel.frames.len() as f64), ("draws", draws as f64)],
+                    );
+                }
                 (sel, draws, fs, touched)
             } else {
                 // All-scope scatter-gather into one engine-owned merged
@@ -294,12 +409,27 @@ impl QueryEngine {
                 // writing its pre-carved slice — concatenated
                 // cold-then-hot, shard-ordered output is bit-identical
                 // to the serial walk below.
+                let g0 = self.pool.as_deref().map(|p| p.gauges());
+                // (stream, rows, probed, pruned) per shard, filled from
+                // the pooled path's plans — the serial path records
+                // per-shard spans with real wall times instead
+                let mut shard_plans: Vec<(StreamId, usize, usize, usize)> = Vec::new();
                 let t0 = Instant::now();
                 self.merged_buf.clear();
                 match self.pool.as_deref() {
                     Some(pool) => {
                         let plans: Vec<_> =
                             guards.iter().map(|g| g.plan_score(&qvec)).collect();
+                        if trace.is_some() {
+                            for (g, plan) in guards.iter().zip(&plans) {
+                                shard_plans.push((
+                                    g.stream(),
+                                    plan.rows(),
+                                    plan.probed_segments(),
+                                    plan.pruned_segments(),
+                                ));
+                            }
+                        }
                         let total: usize = plans.iter().map(|p| p.rows()).sum();
                         self.merged_buf.resize(total, 0.0);
                         let mut tasks = Vec::new();
@@ -313,19 +443,89 @@ impl QueryEngine {
                     }
                     None => {
                         for g in &guards {
+                            let ts0 = Instant::now();
                             g.score_all(&qvec, &mut self.scores_buf)?;
+                            if let Some(tc) = trace.as_deref_mut() {
+                                tc.record_counters(
+                                    stage::SCORE_SHARD,
+                                    ts0,
+                                    ts0.elapsed(),
+                                    &[
+                                        ("shard", g.stream().0 as f64),
+                                        ("rows", self.scores_buf.len() as f64),
+                                    ],
+                                );
+                            }
                             self.merged_buf.extend_from_slice(&self.scores_buf);
                         }
                     }
                 }
-                t.search_s = t0.elapsed().as_secs_f64();
+                let search_d = t0.elapsed();
+                t.search_s = search_d.as_secs_f64();
+                let (hot_ms, cold_ms) = match (g0, self.pool.as_deref()) {
+                    (Some(g0), Some(p)) => {
+                        let g1 = p.gauges();
+                        (g1.hot_score_ms - g0.hot_score_ms, g1.cold_score_ms - g0.cold_score_ms)
+                    }
+                    _ => (0.0, 0.0),
+                };
+                t.score_s = if self.pool.is_some() {
+                    (hot_ms + cold_ms) / 1e3
+                } else {
+                    t.search_s
+                };
+                if let Some(tc) = trace.as_deref_mut() {
+                    // pooled shards scan concurrently, so their child
+                    // spans carry counters only (no per-shard wall time)
+                    for &(sid, rows, probed, pruned) in &shard_plans {
+                        tc.record_counters(
+                            stage::SCORE_SHARD,
+                            t0,
+                            Duration::ZERO,
+                            &[
+                                ("shard", sid.0 as f64),
+                                ("rows", rows as f64),
+                                ("probed_segments", probed as f64),
+                                ("pruned_segments", pruned as f64),
+                            ],
+                        );
+                    }
+                    tc.record_counters(
+                        stage::SCORE,
+                        t0,
+                        search_d,
+                        &[
+                            ("shards", guards.len() as f64),
+                            ("rows", self.merged_buf.len() as f64),
+                            ("hot_ms", hot_ms),
+                            ("cold_ms", cold_ms),
+                            (
+                                "probed_segments",
+                                shard_plans.iter().map(|p| p.2 as f64).sum(),
+                            ),
+                            (
+                                "pruned_segments",
+                                shard_plans.iter().map(|p| p.3 as f64).sum(),
+                            ),
+                        ],
+                    );
+                }
 
                 let t0 = Instant::now();
                 let view = MergedView::over(&guards);
                 let (sel, draws) =
                     select_over(&view, &self.merged_buf, &cfg, &mut self.rng, mode);
                 let fs = frame_scores_for(&view, &sel, &self.merged_buf);
-                t.select_s = t0.elapsed().as_secs_f64();
+                let select_d = t0.elapsed();
+                t.select_s = select_d.as_secs_f64();
+                if let Some(tc) = trace.as_deref_mut() {
+                    tc.record_counters(
+                        stage::SELECT,
+                        t0,
+                        select_d,
+                        &[("frames", sel.frames.len() as f64), ("draws", draws as f64)],
+                    );
+                }
                 (sel, draws, fs, touched)
             }
         };
@@ -338,7 +538,16 @@ impl QueryEngine {
         for frame in self.fabric.fetch_frames(&selection.frames)? {
             std::hint::black_box(frame);
         }
-        t.fetch_s = t0.elapsed().as_secs_f64();
+        let fetch_d = t0.elapsed();
+        t.fetch_s = fetch_d.as_secs_f64();
+        if let Some(tc) = trace.as_deref_mut() {
+            tc.record_counters(
+                stage::FETCH,
+                t0,
+                fetch_d,
+                &[("frames", selection.frames.len() as f64)],
+            );
+        }
 
         let status = if let (Some(c), Some((key, _))) = (cache, lookup_state) {
             c.insert(

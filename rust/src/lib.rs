@@ -61,6 +61,7 @@ pub mod features;
 pub mod ingest;
 pub mod memory;
 pub mod net;
+pub mod obs;
 pub mod retrieval;
 pub mod runtime;
 pub mod server;

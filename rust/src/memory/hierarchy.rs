@@ -77,6 +77,26 @@ impl ShardScorePlan {
     pub fn rows(&self) -> usize {
         self.cold_rows + self.hot_rows
     }
+
+    /// Rows served by the cold tier under this plan.
+    pub fn cold_rows(&self) -> usize {
+        self.cold_rows
+    }
+
+    /// Rows served by the hot index under this plan.
+    pub fn hot_rows(&self) -> usize {
+        self.hot_rows
+    }
+
+    /// Cold segments the coarse probe decided to scan.
+    pub fn probed_segments(&self) -> usize {
+        self.spans.iter().filter(|s| s.scanned).count()
+    }
+
+    /// Cold segments the coarse probe pruned (filled with `-inf`).
+    pub fn pruned_segments(&self) -> usize {
+        self.spans.iter().filter(|s| !s.scanned).count()
+    }
 }
 
 /// Per-tier residency and traffic gauges of one shard (or, merged, the

@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::api::{ApiError, QueryRequest, QueryResponse, SessionTurn};
 use crate::config::WireConfig;
+use crate::obs::{Trace, TraceId};
 use crate::server::Snapshot;
 
 use super::frame::{read_frame, write_frame};
@@ -126,6 +127,41 @@ impl WireClient {
             ServerMsg::Stats { snapshot } => Ok(*snapshot),
             ServerMsg::Error { error } => Err(anyhow::Error::new(error).context("stats refused")),
             other => bail!("expected stats, got {other:?}"),
+        }
+    }
+
+    /// Fetch one query's span tree by id.  `Ok(None)` when the server
+    /// no longer holds it (bounded ring, evicted) or never sampled it.
+    pub fn trace(&mut self, id: TraceId) -> Result<Option<Trace>> {
+        let msg = ClientMsg::Trace { id: Some(id), last: 1, slow: false };
+        match self.round_trip(&msg)? {
+            ServerMsg::Trace { traces } => Ok(traces.into_iter().next()),
+            ServerMsg::Error { error } => Err(anyhow::Error::new(error).context("trace refused")),
+            other => bail!("expected trace, got {other:?}"),
+        }
+    }
+
+    /// Fetch the last `n` completed traces, or — with `slow` — the last
+    /// `n` entries of the slow-query ring (newest first in both cases).
+    pub fn recent_traces(&mut self, n: usize, slow: bool) -> Result<Vec<Trace>> {
+        let msg = ClientMsg::Trace { id: None, last: n, slow };
+        match self.round_trip(&msg)? {
+            ServerMsg::Trace { traces } => Ok(traces),
+            ServerMsg::Error { error } => Err(anyhow::Error::new(error).context("trace refused")),
+            other => bail!("expected trace, got {other:?}"),
+        }
+    }
+
+    /// Fetch the server's metrics in Prometheus text exposition format
+    /// (the same counters as [`WireClient::stats`], plus span-derived
+    /// per-stage histograms).
+    pub fn metrics_text(&mut self) -> Result<String> {
+        match self.round_trip(&ClientMsg::MetricsText)? {
+            ServerMsg::MetricsText { text } => Ok(text),
+            ServerMsg::Error { error } => {
+                Err(anyhow::Error::new(error).context("metrics refused"))
+            }
+            other => bail!("expected metrics_text, got {other:?}"),
         }
     }
 

@@ -24,7 +24,7 @@
 //! handler has exited does the caller tear down the service (draining
 //! the lanes) and flush the fabric.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::config::WireConfig;
+use crate::obs::{stage, Span, TraceId};
 use crate::server::Service;
 use crate::util::sync::{ranks, OrderedCondvar, OrderedMutex};
 
@@ -550,6 +551,7 @@ fn serve_conn(stream: &TcpStream, conn_id: u64, shared: &Shared) -> ConnEnd {
     // request/response loop
     loop {
         reader.arm(); // fresh per-frame budget
+        let t_read = Instant::now();
         let frame = match read_frame(&mut reader, max) {
             Ok(v) => v,
             Err(FrameError::Closed) => return ConnEnd::Clean,
@@ -564,15 +566,52 @@ fn serve_conn(stream: &TcpStream, conn_id: u64, shared: &Shared) -> ConnEnd {
                 return ConnEnd::ProtocolError;
             }
         };
+        let read_us = t_read.elapsed().as_micros() as u64;
+        // traced query replies get their wire I/O appended post-hoc as
+        // child spans (`gateway/read` before the trace was born at
+        // offset 0, `gateway/write` after the write below completes)
+        let mut io_trace: Option<(TraceId, u64)> = None;
         let reply = match ClientMsg::from_json(&frame) {
             Ok(ClientMsg::Query { request }) => {
                 if shared.panic_next_query.swap(false, Ordering::SeqCst) {
                     std::panic::panic_any("injected handler panic (test hook)");
                 }
                 match shared.service.call(request) {
-                    Ok(response) => ServerMsg::Response { response },
+                    Ok(response) => {
+                        if let Some(id) = response.trace_id {
+                            io_trace = Some((id, (response.total_s() * 1e6) as u64));
+                            shared.service.tracer.append_span(
+                                id,
+                                Span {
+                                    stage: stage::GATEWAY_READ.into(),
+                                    start_us: 0,
+                                    dur_us: read_us,
+                                    counters: BTreeMap::new(),
+                                },
+                            );
+                        }
+                        ServerMsg::Response { response }
+                    }
                     Err(api) => ServerMsg::Error { error: WireError::Api(api) },
                 }
+            }
+            Ok(ClientMsg::Trace { id, last, slow }) => {
+                let tracer = &shared.service.tracer;
+                let traces = match id {
+                    Some(id) => tracer.lookup(id).into_iter().collect(),
+                    None if slow => tracer.slow_recent(last),
+                    None => tracer.recent(last),
+                };
+                ServerMsg::Trace { traces }
+            }
+            Ok(ClientMsg::MetricsText) => {
+                let mut snapshot = shared.service.snapshot();
+                if let Some(hub) = &shared.hub {
+                    snapshot.ingest = Some(hub.snapshot());
+                }
+                let text =
+                    crate::obs::prometheus_text(&snapshot, Some(shared.service.tracer.as_ref()));
+                ServerMsg::MetricsText { text }
             }
             Ok(ClientMsg::Stats) => {
                 let mut snapshot = shared.service.snapshot();
@@ -649,8 +688,22 @@ fn serve_conn(stream: &TcpStream, conn_id: u64, shared: &Shared) -> ConnEnd {
             send_error(stream, WireError::Protocol(msg), max);
             return ConnEnd::ProtocolError;
         }
+        let t_write = Instant::now();
         if write_frame_text(&mut w, &payload, max).is_err() {
             return ConnEnd::Clean; // peer gone mid-write
+        }
+        if let Some((id, start_us)) = io_trace {
+            let mut counters = BTreeMap::new();
+            counters.insert("bytes".to_string(), payload.len() as f64);
+            shared.service.tracer.append_span(
+                id,
+                Span {
+                    stage: stage::GATEWAY_WRITE.into(),
+                    start_us,
+                    dur_us: t_write.elapsed().as_micros() as u64,
+                    counters,
+                },
+            );
         }
     }
 }

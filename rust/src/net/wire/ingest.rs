@@ -37,12 +37,14 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::api::Priority;
 use crate::config::{IngestConfig, VenusConfig};
 use crate::ingest::{EmbedPool, IngestStats, Pipeline};
+use crate::obs::{stage, Tracer};
 use crate::memory::MemoryFabric;
 use crate::server::{IngestSnapshot, IngestStreamSnapshot, Metrics};
 use crate::util::b64;
@@ -107,6 +109,10 @@ pub struct IngestHub {
     metrics: Arc<Metrics>,
     pool: EmbedPool,
     streams: OrderedMutex<HashMap<u16, Arc<StreamEntry>>>,
+    /// `Some` when the co-located service's tracer should head-sample
+    /// ingest batches alongside queries (wired by `venus serve` via
+    /// [`IngestHub::with_tracer`]); `None` leaves ingest untraced.
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl IngestHub {
@@ -134,7 +140,16 @@ impl IngestHub {
             metrics,
             pool,
             streams: OrderedMutex::new(ranks::WIRE_INGEST_STREAMS, HashMap::new()),
+            tracer: None,
         })
+    }
+
+    /// Attach the serving tracer so sampled ingest batches publish
+    /// `ingest_decode`/`ingest_push` span trees (kind `"ingest"`) into
+    /// the same rings the query traces land in.
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Self {
+        self.tracer = Some(tracer);
+        self
     }
 
     /// Handle `ingest_open`: attach (or re-claim) the stream and return
@@ -222,6 +237,11 @@ impl IngestHub {
                 );
             }
         }
+        let mut trace = self
+            .tracer
+            .as_ref()
+            .and_then(|t| t.mint("ingest", &format!("stream {stream} x{}", frames.len())));
+        let t_decode = Instant::now();
         // decode before the admission decision: a malformed payload is a
         // protocol error regardless of whether the batch would be shed
         let size = sess.frame_size;
@@ -240,8 +260,17 @@ impl IngestHub {
             }
             decoded.push(Frame::from_data(sess.frame_size, data));
         }
+        if let Some(tc) = trace.as_mut() {
+            tc.record_counters(
+                stage::INGEST_DECODE,
+                t_decode,
+                t_decode.elapsed(),
+                &[("frames", frames.len() as f64)],
+            );
+        }
 
         let now_ms = unix_ms_now();
+        let t_push = Instant::now();
         let verdict = match self.admit(&sess, now_ms) {
             Admission::Proceed => {
                 self.apply(&mut sess, frames, &decoded)?;
@@ -266,6 +295,22 @@ impl IngestHub {
             }
         };
         Self::poll_freshness(&mut sess, unix_ms_now());
+        if let Some(mut tc) = trace {
+            let dropped = match &verdict {
+                Backpressure::Dropped { count, .. } => *count as f64,
+                _ => 0.0,
+            };
+            tc.record_counters(
+                stage::INGEST_PUSH,
+                t_push,
+                t_push.elapsed(),
+                &[("frames", frames.len() as f64), ("dropped", dropped)],
+            );
+            if let Some(tr) = &self.tracer {
+                let total = tc.started().elapsed();
+                tr.finish(tc, total);
+            }
+        }
         Ok((sess.next_seq, verdict))
     }
 
@@ -589,6 +634,23 @@ mod tests {
         let snap = hub.snapshot();
         assert_eq!(snap.streams[0].accepted, 2);
         assert_eq!(snap.streams[0].slowed, 1);
+        hub.finish_all().unwrap();
+    }
+
+    #[test]
+    fn traced_batches_publish_ingest_span_trees() {
+        let tracer = Arc::new(Tracer::new(&crate::config::ObsConfig::default()));
+        let hub = hub_with(|_| {}).with_tracer(Arc::clone(&tracer));
+        hub.open(0, SIZE, 8.0, 1).unwrap();
+        hub.push_batch(0, 1, &batch(0, 4)).unwrap();
+        let recent = tracer.recent(1);
+        assert_eq!(recent.len(), 1, "default sampling traces the batch");
+        let t = &recent[0];
+        assert_eq!(t.kind, "ingest");
+        assert!(t.span(stage::INGEST_DECODE).is_some());
+        let push = t.span(stage::INGEST_PUSH).expect("push span");
+        assert_eq!(push.counters["frames"], 4.0);
+        assert_eq!(push.counters["dropped"], 0.0);
         hub.finish_all().unwrap();
     }
 

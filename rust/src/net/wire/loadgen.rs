@@ -108,6 +108,14 @@ impl LoadGen {
                 report.latency.push(x);
             }
         }
+        // one post-run stats round trip: the server's own lifetime
+        // throughput (completions over uptime) rides along so the report
+        // can show sustained-run QPS next to the server's view of itself
+        if let Ok(mut probe) = WireClient::connect_with(self.addr.as_str(), &self.wire) {
+            if let Ok(snap) = probe.stats() {
+                report.server_qps = Some(snap.derived_qps());
+            }
+        }
         Ok(report)
     }
 
@@ -212,6 +220,9 @@ pub struct LoadReport {
     /// end-to-end wire latency of completed queries, seconds, measured
     /// from the scheduled arrival (coordinated-omission corrected)
     pub latency: Samples,
+    /// the server's lifetime queries/second (completions over uptime)
+    /// from a post-run stats probe; `None` if the probe failed
+    pub server_qps: Option<f64>,
 }
 
 impl LoadReport {
@@ -232,8 +243,12 @@ impl LoadReport {
                 fmt_duration(self.latency.percentile(p))
             }
         };
+        let server = match self.server_qps {
+            Some(q) => format!(" | server lifetime {q:.1} q/s"),
+            None => String::new(),
+        };
         format!(
-            "{} clients @ target {:.1} q/s: {} sent, {} ok ({} cache-hit) in {:.1}s -> {:.1} q/s sustained | wire p50 {} p95 {} p99 {} | {} rejected / {} shed / {} failed / {} transport",
+            "{} clients @ target {:.1} q/s: {} sent, {} ok ({} cache-hit) in {:.1}s -> {:.1} q/s sustained | wire p50 {} p95 {} p99 {} | {} rejected / {} shed / {} failed / {} transport{}",
             self.clients,
             self.target_qps,
             self.sent,
@@ -248,6 +263,7 @@ impl LoadReport {
             self.shed,
             self.failed,
             self.transport_errors,
+            server,
         )
     }
 }

@@ -28,6 +28,7 @@ use std::fmt;
 use anyhow::{bail, Result};
 
 use crate::api::{ApiError, QueryRequest, QueryResponse};
+use crate::obs::{Trace, TraceId};
 use crate::server::Snapshot;
 use crate::util::json::Json;
 
@@ -164,6 +165,14 @@ pub enum ClientMsg {
     /// exactly contiguous from the server's watermark; anything else is
     /// a protocol error (the camera should re-open and resume).
     IngestFrames { stream: u16, frames: Vec<IngestFrame> },
+    /// Fetch span trees from the server's trace rings: a specific trace
+    /// by id (the `trace_id` echoed in a [`QueryResponse`]), or the
+    /// last-`last` completed traces; `slow` reads the slow-query ring
+    /// instead of the completed ring.
+    Trace { id: Option<TraceId>, last: usize, slow: bool },
+    /// Fetch the Prometheus text-format rendering of the serving
+    /// snapshot + span-derived per-stage histograms.
+    MetricsText,
 }
 
 /// Gateway → client messages.
@@ -192,6 +201,11 @@ pub enum ServerMsg {
     /// number the server expects (every frame below it is archived or
     /// deliberately dropped), plus the admission verdict.
     IngestAck { stream: u16, high_watermark: u64, backpressure: Backpressure },
+    /// Trace reply: the requested span trees, newest first (empty when
+    /// the id was never sampled or already evicted from the ring).
+    Trace { traces: Vec<Trace> },
+    /// Prometheus text-format metrics reply.
+    MetricsText { text: String },
 }
 
 /// The wire-level error taxonomy.
@@ -288,6 +302,18 @@ impl ClientMsg {
                 m.insert("frames".into(), Json::Arr(frames.iter().map(|f| f.to_json()).collect()));
                 Json::Obj(m)
             }
+            ClientMsg::Trace { id, last, slow } => {
+                let mut m = tagged("trace");
+                if let Some(id) = id {
+                    m.insert("id".into(), Json::Str(id.to_string()));
+                }
+                m.insert("last".into(), Json::Num(*last as f64));
+                if *slow {
+                    m.insert("slow".into(), Json::Bool(true));
+                }
+                Json::Obj(m)
+            }
+            ClientMsg::MetricsText => Json::Obj(tagged("metrics_text")),
         }
     }
 
@@ -314,6 +340,24 @@ impl ClientMsg {
                     .map(IngestFrame::from_json)
                     .collect::<Result<Vec<_>>>()?,
             }),
+            "trace" => {
+                let id = match v.opt("id") {
+                    Some(x) => {
+                        let s = x.as_str()?;
+                        match TraceId::parse(s) {
+                            Some(id) => Some(id),
+                            None => bail!("unparseable trace id '{s}'"),
+                        }
+                    }
+                    None => None,
+                };
+                Ok(ClientMsg::Trace {
+                    id,
+                    last: v.opt("last").map(|x| x.as_usize()).transpose()?.unwrap_or(1),
+                    slow: v.opt("slow").map(|x| x.as_bool()).transpose()?.unwrap_or(false),
+                })
+            }
+            "metrics_text" => Ok(ClientMsg::MetricsText),
             other => bail!("unknown client message type '{other}'"),
         }
     }
@@ -359,6 +403,16 @@ impl ServerMsg {
                 m.insert("backpressure".into(), backpressure.to_json());
                 Json::Obj(m)
             }
+            ServerMsg::Trace { traces } => {
+                let mut m = tagged("trace");
+                m.insert("traces".into(), Json::Arr(traces.iter().map(|t| t.to_json()).collect()));
+                Json::Obj(m)
+            }
+            ServerMsg::MetricsText { text } => {
+                let mut m = tagged("metrics_text");
+                m.insert("text".into(), Json::Str(text.clone()));
+                Json::Obj(m)
+            }
         }
     }
 
@@ -387,6 +441,17 @@ impl ServerMsg {
                 high_watermark: u64_from(v.get("high_watermark")?)?,
                 backpressure: Backpressure::from_json(v.get("backpressure")?)?,
             }),
+            "trace" => Ok(ServerMsg::Trace {
+                traces: v
+                    .get("traces")?
+                    .as_arr()?
+                    .iter()
+                    .map(Trace::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            }),
+            "metrics_text" => {
+                Ok(ServerMsg::MetricsText { text: v.get("text")?.as_str()?.to_string() })
+            }
             other => bail!("unknown server message type '{other}'"),
         }
     }
@@ -542,6 +607,92 @@ mod tests {
                 | (ServerMsg::ShutdownAck, ServerMsg::ShutdownAck) => {}
                 other => panic!("variant changed across the wire: {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn trace_and_metrics_envelopes_round_trip() {
+        use crate::obs::{Span, Trace, TraceId};
+
+        for msg in [
+            ClientMsg::Trace { id: Some(TraceId(0xbeef)), last: 1, slow: false },
+            ClientMsg::Trace { id: None, last: 5, slow: true },
+            ClientMsg::MetricsText,
+        ] {
+            let wire = msg.to_json().to_string();
+            match (&msg, &ClientMsg::from_json(&Json::parse(&wire).unwrap()).unwrap()) {
+                (
+                    ClientMsg::Trace { id: a, last: b, slow: c },
+                    ClientMsg::Trace { id: x, last: y, slow: z },
+                ) => assert_eq!((a, b, c), (x, y, z)),
+                (ClientMsg::MetricsText, ClientMsg::MetricsText) => {}
+                other => panic!("variant changed across the wire: {other:?}"),
+            }
+        }
+        // a bare {"type":"trace"} defaults to last-1, completed ring
+        let min = ClientMsg::from_json(&Json::parse(r#"{"type":"trace"}"#).unwrap()).unwrap();
+        assert!(matches!(min, ClientMsg::Trace { id: None, last: 1, slow: false }));
+
+        let tr = Trace {
+            id: TraceId(77),
+            kind: "query".into(),
+            label: "what happened".into(),
+            unix_ms: 1_754_000_000_000,
+            total_us: 1_500,
+            spans: vec![Span {
+                stage: "embed".into(),
+                start_us: 10,
+                dur_us: 90,
+                counters: std::collections::BTreeMap::new(),
+            }],
+        };
+        for msg in [
+            ServerMsg::Trace { traces: vec![tr.clone()] },
+            ServerMsg::Trace { traces: vec![] },
+            ServerMsg::MetricsText { text: "venus_uptime_seconds 1\n".into() },
+        ] {
+            let wire = msg.to_json().to_string();
+            match (&msg, &ServerMsg::from_json(&Json::parse(&wire).unwrap()).unwrap()) {
+                (ServerMsg::Trace { traces: a }, ServerMsg::Trace { traces: b }) => {
+                    assert_eq!(a.len(), b.len());
+                    if let (Some(a), Some(b)) = (a.first(), b.first()) {
+                        assert_eq!(a.id, b.id);
+                        assert_eq!(a.spans.len(), b.spans.len());
+                        assert_eq!(a.total_us, b.total_us);
+                    }
+                }
+                (ServerMsg::MetricsText { text: a }, ServerMsg::MetricsText { text: b }) => {
+                    assert_eq!(a, b);
+                }
+                other => panic!("variant changed across the wire: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_trace_and_metrics_payloads_rejected() {
+        for wire in [
+            // unparseable trace id (not hex)
+            r#"{"type":"trace","id":"not-a-trace-id"}"#,
+            // id must be a string, not a number
+            r#"{"type":"trace","id":123}"#,
+            // negative ring size
+            r#"{"type":"trace","last":-3}"#,
+            // slow must be a boolean
+            r#"{"type":"trace","slow":"yes"}"#,
+        ] {
+            assert!(ClientMsg::from_json(&Json::parse(wire).unwrap()).is_err(), "accepted {wire}");
+        }
+        for wire in [
+            // traces must be an array of span-tree objects
+            r#"{"type":"trace","traces":7}"#,
+            // a trace object without its id is unusable
+            r#"{"type":"trace","traces":[{"kind":"query"}]}"#,
+            // metrics text body is required
+            r#"{"type":"metrics_text"}"#,
+            r#"{"type":"metrics_text","text":42}"#,
+        ] {
+            assert!(ServerMsg::from_json(&Json::parse(wire).unwrap()).is_err(), "accepted {wire}");
         }
     }
 

@@ -1,0 +1,901 @@
+//! End-to-end query tracing (DESIGN.md §Observability).
+//!
+//! Every served query (and ingest batch) can carry a minted [`TraceId`];
+//! instrumented stages record typed [`Span`]s into a per-request
+//! [`TraceCtx`] that is **owned by the request** — it moves with the job
+//! across threads and is touched without any lock, so instrumentation
+//! adds only `Instant` reads to the hot path and cannot perturb
+//! selection (no RNG consumption, no float-order changes; the
+//! `score_determinism` suite runs with tracing at sample rate 1).
+//!
+//! Finished span trees are published into the central [`Tracer`]: two
+//! bounded rings (all completed traces + the slow-query log) and
+//! per-stage latency histograms behind a single [`OrderedMutex`] at rank
+//! [`ranks::OBS_TRACER`] — the very top of the lock order, taken only
+//! after every other guard is released.  Head-sampling
+//! (`[obs] trace_sample_n`) keeps the cost bounded under load, and the
+//! disabled path (`trace_sample_n = 0`) allocates nothing and takes no
+//! lock.
+//!
+//! The data is served three ways (see `net::wire`): the `trace` envelope
+//! returns span trees by id or recency, `QueryResponse` echoes the trace
+//! id so `venus query --trace` can fetch its own breakdown, and the
+//! `metrics_text` envelope renders the whole serving [`Snapshot`] plus
+//! the span-derived histograms in Prometheus text exposition format.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::ObsConfig;
+use crate::server::Snapshot;
+use crate::util::json::Json;
+use crate::util::sync::{ranks, OrderedMutex};
+
+/// Canonical stage names, in pipeline order.  Per-shard scoring spans
+/// use the `score/shard` child name (a `/` marks a child of the stage
+/// before the slash); everything else is a top-level stage whose
+/// durations are disjoint, so their sum approximates the query total.
+pub mod stage {
+    /// Wire-gateway frame read + decode.  Deliberately a *child* stage
+    /// (`/` convention): it happens before the trace is minted, so its
+    /// span is appended post-hoc at offset 0 and must not count toward
+    /// (or overlap-check against) the top-level stage timeline.
+    pub const GATEWAY_READ: &str = "gateway/read";
+    pub const QUEUE_WAIT: &str = "queue_wait";
+    pub const CACHE_PROBE: &str = "cache_probe";
+    /// Semantic (tier-2) probe — runs after the embed, so it is recorded
+    /// as a child rather than widening the top-level `cache_probe` span.
+    pub const CACHE_PROBE_SEMANTIC: &str = "cache_probe/semantic";
+    pub const EMBED: &str = "embed";
+    pub const SCORE: &str = "score";
+    pub const SCORE_SHARD: &str = "score/shard";
+    pub const SELECT: &str = "select";
+    pub const FETCH: &str = "fetch";
+    pub const UPLOAD: &str = "upload";
+    pub const VLM: &str = "vlm";
+    /// Wire-gateway reply serialization + socket write; appended after
+    /// `finish()`, so a child stage like [`GATEWAY_READ`].
+    pub const GATEWAY_WRITE: &str = "gateway/write";
+    pub const INGEST_DECODE: &str = "ingest_decode";
+    pub const INGEST_PUSH: &str = "ingest_push";
+
+    /// Top-level query stages in pipeline order (for rendering tables).
+    pub const QUERY_ORDER: &[&str] = &[
+        GATEWAY_READ,
+        QUEUE_WAIT,
+        CACHE_PROBE,
+        EMBED,
+        SCORE,
+        SELECT,
+        FETCH,
+        UPLOAD,
+        VLM,
+        GATEWAY_WRITE,
+    ];
+}
+
+/// Process-unique trace identifier, rendered as 16 hex digits on the
+/// wire and in CLI output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+impl fmt::Display for TraceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+impl TraceId {
+    /// Parse the 16-hex-digit wire form (also accepts shorter hex).
+    pub fn parse(s: &str) -> Option<TraceId> {
+        u64::from_str_radix(s.trim(), 16).ok().map(TraceId)
+    }
+}
+
+/// One timed stage of one request.  `start_us` is the offset from the
+/// trace's birth; counters carry stage-specific gauges (rows scored,
+/// segments probed/pruned, hot/cold split…) — numbers only, so the wire
+/// encoding stays schema-free and tolerant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub stage: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub counters: BTreeMap<String, f64>,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("stage".into(), Json::Str(self.stage.clone()));
+        m.insert("start_us".into(), Json::Num(self.start_us as f64));
+        m.insert("dur_us".into(), Json::Num(self.dur_us as f64));
+        if !self.counters.is_empty() {
+            let cm = self
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect::<BTreeMap<_, _>>();
+            m.insert("counters".into(), Json::Obj(cm));
+        }
+        Json::Obj(m)
+    }
+
+    /// Tolerant parse: only `stage` is required; offsets, durations and
+    /// counters default when absent so old clients read new servers (and
+    /// vice versa).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let counters = match v.opt("counters") {
+            Some(c) => c
+                .as_obj()?
+                .iter()
+                .map(|(k, x)| Ok((k.clone(), x.as_f64()?)))
+                .collect::<Result<BTreeMap<_, _>>>()?,
+            None => BTreeMap::new(),
+        };
+        Ok(Span {
+            stage: v.get("stage")?.as_str()?.to_string(),
+            start_us: v.opt("start_us").map(|x| x.as_usize()).transpose()?.unwrap_or(0) as u64,
+            dur_us: v.opt("dur_us").map(|x| x.as_usize()).transpose()?.unwrap_or(0) as u64,
+            counters,
+        })
+    }
+
+    /// Is this a child span (`score/shard` under `score`)?
+    pub fn is_child(&self) -> bool {
+        self.stage.contains('/')
+    }
+}
+
+/// A completed request's span tree, as retained in the tracer rings and
+/// served over the `trace` envelope.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub id: TraceId,
+    /// `"query"` or `"ingest"`.
+    pub kind: String,
+    /// Short human label (query text prefix / `stream N`).
+    pub label: String,
+    /// Wall-clock birth time, unix milliseconds.
+    pub unix_ms: u64,
+    /// End-to-end duration as reported by the finishing stage.
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    /// Sum of the top-level stage durations (children excluded — their
+    /// time is already inside their parent stage).
+    pub fn stage_sum_us(&self) -> u64 {
+        self.spans.iter().filter(|s| !s.is_child()).map(|s| s.dur_us).sum()
+    }
+
+    pub fn span(&self, stage: &str) -> Option<&Span> {
+        self.spans.iter().find(|s| s.stage == stage)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("id".into(), Json::Str(self.id.to_string()));
+        m.insert("kind".into(), Json::Str(self.kind.clone()));
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("unix_ms".into(), Json::Num(self.unix_ms as f64));
+        m.insert("total_us".into(), Json::Num(self.total_us as f64));
+        m.insert("spans".into(), Json::Arr(self.spans.iter().map(|s| s.to_json()).collect()));
+        Json::Obj(m)
+    }
+
+    /// Tolerant parse: `id` is required, everything else defaults.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let id = TraceId::parse(v.get("id")?.as_str()?)
+            .ok_or_else(|| anyhow::anyhow!("trace id is not hex"))?;
+        let spans = match v.opt("spans") {
+            Some(arr) => arr.as_arr()?.iter().map(Span::from_json).collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        Ok(Trace {
+            id,
+            kind: v
+                .opt("kind")
+                .map(|x| x.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_else(|| "query".into()),
+            label: v
+                .opt("label")
+                .map(|x| x.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+            unix_ms: v.opt("unix_ms").map(|x| x.as_usize()).transpose()?.unwrap_or(0) as u64,
+            total_us: v.opt("total_us").map(|x| x.as_usize()).transpose()?.unwrap_or(0) as u64,
+            spans,
+        })
+    }
+
+    /// Pretty-print the span tree (the `venus query --trace` breakdown):
+    /// one line per span, children indented under their parent, with
+    /// percentages of the total and the counters inline.
+    pub fn render(&self) -> String {
+        let total_ms = self.total_us as f64 / 1000.0;
+        let mut out = format!(
+            "trace {} {} \"{}\" total {:.2}ms ({} spans, stage sum {:.2}ms)\n",
+            self.id,
+            self.kind,
+            self.label,
+            total_ms,
+            self.spans.len(),
+            self.stage_sum_us() as f64 / 1000.0,
+        );
+        for s in &self.spans {
+            let pct = if self.total_us > 0 {
+                s.dur_us as f64 * 100.0 / self.total_us as f64
+            } else {
+                0.0
+            };
+            let indent = if s.is_child() { "    " } else { "  " };
+            let mut line = format!(
+                "{indent}{:<14} {:>9.2}ms {:>5.1}%",
+                s.stage,
+                s.dur_us as f64 / 1000.0,
+                pct
+            );
+            for (k, v) in &s.counters {
+                if (v.fract()).abs() < f64::EPSILON {
+                    line.push_str(&format!(" {k}={v:.0}"));
+                } else {
+                    line.push_str(&format!(" {k}={v:.2}"));
+                }
+            }
+            line.push('\n');
+            out.push_str(&line);
+        }
+        out
+    }
+}
+
+/// Per-request span scratch.  Owned by the job (no lock, no sharing):
+/// stages record into it as the request flows through the pipeline, and
+/// `Tracer::finish` publishes the result.
+#[derive(Debug)]
+pub struct TraceCtx {
+    id: TraceId,
+    kind: &'static str,
+    label: String,
+    started: Instant,
+    unix_ms: u64,
+    spans: Vec<Span>,
+}
+
+impl TraceCtx {
+    pub fn id(&self) -> TraceId {
+        self.id
+    }
+
+    /// The trace's birth instant — span offsets are measured from here.
+    pub fn started(&self) -> Instant {
+        self.started
+    }
+
+    /// Record a stage that ran from `from` for `dur`.
+    pub fn record(&mut self, stage: &str, from: Instant, dur: Duration) {
+        self.record_counters(stage, from, dur, &[]);
+    }
+
+    /// Record a stage with stage-specific counters attached.
+    pub fn record_counters(
+        &mut self,
+        stage: &str,
+        from: Instant,
+        dur: Duration,
+        counters: &[(&str, f64)],
+    ) {
+        let start_us = from.saturating_duration_since(self.started).as_micros() as u64;
+        self.record_at(stage, start_us, dur.as_micros() as u64, counters);
+    }
+
+    /// Record a stage at an explicit microsecond offset.  Used for
+    /// *modeled* stages (uplink transfer, cloud VLM inference) whose
+    /// simulated latency never elapses on the wall clock: the worker
+    /// places them after the measured edge stages so the span tree stays
+    /// non-overlapping and its top-level sum still tracks the reported
+    /// end-to-end total.
+    pub fn record_at(&mut self, stage: &str, start_us: u64, dur_us: u64, counters: &[(&str, f64)]) {
+        self.spans.push(Span {
+            stage: stage.to_string(),
+            start_us,
+            dur_us,
+            counters: counters.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+}
+
+/// Microsecond bucket bounds for the per-stage latency histograms
+/// (upper-inclusive, Prometheus `le` convention; a 16th +Inf bucket is
+/// implicit).  Log-spaced from 100µs to 5s — the serving range between
+/// a cache hit and a pathological cold scan.
+pub const HIST_BOUNDS_US: [u64; 15] = [
+    100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 500_000,
+    1_000_000, 2_500_000, 5_000_000,
+];
+
+/// One stage's latency histogram (fixed buckets + sum/count).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    /// Per-bucket counts aligned with [`HIST_BOUNDS_US`]; the final
+    /// element is the +Inf bucket.
+    pub buckets: [u64; 16],
+    pub sum_us: u64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    fn observe(&mut self, us: u64) {
+        let idx = HIST_BOUNDS_US.iter().position(|&b| us <= b).unwrap_or(HIST_BOUNDS_US.len());
+        self.buckets[idx] += 1;
+        self.sum_us += us;
+        self.count += 1;
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+}
+
+/// Tracer counters surfaced in `venus serve` status output.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ObsCounts {
+    /// Traces minted (sampled in).
+    pub minted: u64,
+    /// Traces finished and published into the completed ring.
+    pub finished: u64,
+    /// Finished traces that crossed the slow-query bar.
+    pub slow: u64,
+}
+
+#[derive(Debug, Default)]
+struct Rings {
+    completed: VecDeque<Trace>,
+    slow: VecDeque<Trace>,
+    hist: BTreeMap<String, HistSnapshot>,
+    finished_total: u64,
+    slow_total: u64,
+}
+
+/// The central trace collector: sampling decision, bounded rings, and
+/// per-stage histograms.  One per serving process, shared by workers,
+/// the gateway, and the ingest hub.
+#[derive(Debug)]
+pub struct Tracer {
+    sample_n: usize,
+    slow_us: u64,
+    trace_ring: usize,
+    slow_ring: usize,
+    minted: AtomicU64,
+    seen: AtomicU64,
+    inner: OrderedMutex<Rings>,
+}
+
+impl Tracer {
+    pub fn new(cfg: &ObsConfig) -> Self {
+        Self {
+            sample_n: cfg.trace_sample_n,
+            slow_us: cfg.slow_query_ms.saturating_mul(1000),
+            trace_ring: cfg.trace_ring.max(1),
+            slow_ring: cfg.slow_ring.max(1),
+            minted: AtomicU64::new(0),
+            seen: AtomicU64::new(0),
+            inner: OrderedMutex::new(ranks::OBS_TRACER, Rings::default()),
+        }
+    }
+
+    /// The configured head-sampling rate (0 = disabled).
+    pub fn sample_n(&self) -> usize {
+        self.sample_n
+    }
+
+    /// The slow-query bar in milliseconds (0 = slow log disabled).
+    pub fn slow_query_ms(&self) -> u64 {
+        self.slow_us / 1000
+    }
+
+    /// Head-sampling mint: every `sample_n`-th request gets a ctx; the
+    /// rest (and everything when disabled) get `None`.  The disabled
+    /// path returns before touching any atomic — zero allocation, zero
+    /// contention.
+    pub fn mint(&self, kind: &'static str, label: &str) -> Option<TraceCtx> {
+        if self.sample_n == 0 {
+            return None;
+        }
+        let n = self.seen.fetch_add(1, Ordering::Relaxed);
+        if n % self.sample_n as u64 != 0 {
+            return None;
+        }
+        let id = TraceId(self.minted.fetch_add(1, Ordering::Relaxed) + 1);
+        let mut label = label.to_string();
+        if label.len() > 80 {
+            let cut = (0..=80).rev().find(|&i| label.is_char_boundary(i)).unwrap_or(0);
+            label.truncate(cut);
+        }
+        Some(TraceCtx {
+            id,
+            kind,
+            label,
+            started: Instant::now(),
+            unix_ms: crate::server::now_unix_ms(),
+            spans: Vec::with_capacity(12),
+        })
+    }
+
+    /// Publish a finished request: push into the completed ring (bounded,
+    /// oldest evicted), retain in the slow ring if it crossed the bar,
+    /// and fold every top-level span into the per-stage histograms.
+    pub fn finish(&self, ctx: TraceCtx, total: Duration) -> TraceId {
+        let trace = Trace {
+            id: ctx.id,
+            kind: ctx.kind.to_string(),
+            label: ctx.label,
+            unix_ms: ctx.unix_ms,
+            total_us: total.as_micros() as u64,
+            spans: ctx.spans,
+        };
+        let id = trace.id;
+        let mut r = self.inner.lock();
+        r.finished_total += 1;
+        for s in trace.spans.iter().filter(|s| !s.is_child()) {
+            r.hist.entry(s.stage.clone()).or_default().observe(s.dur_us);
+        }
+        r.hist.entry("total".into()).or_default().observe(trace.total_us);
+        if self.slow_us > 0 && trace.total_us >= self.slow_us {
+            r.slow_total += 1;
+            if r.slow.len() >= self.slow_ring {
+                r.slow.pop_front();
+            }
+            r.slow.push_back(trace.clone());
+        }
+        if r.completed.len() >= self.trace_ring {
+            r.completed.pop_front();
+        }
+        r.completed.push_back(trace);
+        id
+    }
+
+    /// Attach a span to an already-finished trace (the gateway's write
+    /// span is only measurable after the response left the socket).
+    /// No-op if the trace has already been evicted from both rings.
+    pub fn append_span(&self, id: TraceId, span: Span) {
+        let mut r = self.inner.lock();
+        if !span.is_child() {
+            r.hist.entry(span.stage.clone()).or_default().observe(span.dur_us);
+        }
+        if let Some(t) = r.slow.iter_mut().rev().find(|t| t.id == id) {
+            t.spans.push(span.clone());
+        }
+        if let Some(t) = r.completed.iter_mut().rev().find(|t| t.id == id) {
+            t.spans.push(span);
+        }
+    }
+
+    /// Fetch one trace by id (completed ring first, then the slow ring —
+    /// a slow trace outlives its completed-ring copy).
+    pub fn lookup(&self, id: TraceId) -> Option<Trace> {
+        let r = self.inner.lock();
+        r.completed
+            .iter()
+            .rev()
+            .find(|t| t.id == id)
+            .or_else(|| r.slow.iter().rev().find(|t| t.id == id))
+            .cloned()
+    }
+
+    /// The most recent `n` completed traces, newest first.
+    pub fn recent(&self, n: usize) -> Vec<Trace> {
+        let r = self.inner.lock();
+        r.completed.iter().rev().take(n).cloned().collect()
+    }
+
+    /// The most recent `n` slow traces, newest first.
+    pub fn slow_recent(&self, n: usize) -> Vec<Trace> {
+        let r = self.inner.lock();
+        r.slow.iter().rev().take(n).cloned().collect()
+    }
+
+    pub fn counts(&self) -> ObsCounts {
+        let r = self.inner.lock();
+        ObsCounts {
+            minted: self.minted.load(Ordering::Relaxed),
+            finished: r.finished_total,
+            slow: r.slow_total,
+        }
+    }
+
+    /// Per-stage histograms (stage name → snapshot), `total` included.
+    pub fn stage_histograms(&self) -> BTreeMap<String, HistSnapshot> {
+        self.inner.lock().hist.clone()
+    }
+
+    /// One-line summary for `venus serve` status output.
+    pub fn render(&self) -> String {
+        let c = self.counts();
+        format!(
+            "obs: 1/{} sampled / {} traced / {} slow (>{}ms)",
+            self.sample_n.max(1),
+            c.finished,
+            c.slow,
+            self.slow_query_ms(),
+        )
+    }
+}
+
+fn prom_escape(label: &str) -> String {
+    label.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render the serving [`Snapshot`] (plus, when a tracer is present, the
+/// span-derived per-stage histograms) in Prometheus text exposition
+/// format — the `metrics_text` wire envelope and `venus stats --prom`.
+pub fn prometheus_text(snap: &Snapshot, tracer: Option<&Tracer>) -> String {
+    let mut out = String::with_capacity(4096);
+    let mut gauge = |name: &str, help: &str, v: f64| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+    };
+    gauge("venus_uptime_seconds", "Serving process uptime.", snap.uptime_s);
+    gauge(
+        "venus_started_unix_ms",
+        "Wall-clock unix milliseconds the serving process started.",
+        snap.started_unix_ms as f64,
+    );
+    gauge("venus_throughput_qps", "Completed queries per second since start.", snap.throughput_qps);
+    gauge("venus_mean_frames_per_query", "Mean evidence frames shipped per query.", snap.mean_frames);
+    gauge("venus_queries_failed_total", "Queries that failed in the engine.", snap.failed as f64);
+    gauge(
+        "venus_queries_shutdown_raced_total",
+        "Submissions that raced service shutdown.",
+        snap.shutdown as f64,
+    );
+
+    out.push_str("# HELP venus_lane_queries_total Per-lane admission counters.\n");
+    out.push_str("# TYPE venus_lane_queries_total counter\n");
+    out.push_str("# HELP venus_lane_queue_depth Live per-lane queue occupancy.\n");
+    out.push_str("# TYPE venus_lane_queue_depth gauge\n");
+    for (lane, l) in [("interactive", &snap.interactive), ("batch", &snap.batch)] {
+        for (event, v) in [
+            ("accepted", l.accepted),
+            ("rejected", l.rejected),
+            ("completed", l.completed),
+            ("deadline_shed", l.deadline_shed),
+        ] {
+            out.push_str(&format!(
+                "venus_lane_queries_total{{lane=\"{lane}\",event=\"{event}\"}} {v}\n"
+            ));
+        }
+        out.push_str(&format!("venus_lane_queue_depth{{lane=\"{lane}\"}} {}\n", l.queued));
+    }
+
+    out.push_str("# HELP venus_latency_seconds Serving latency percentiles.\n");
+    out.push_str("# TYPE venus_latency_seconds gauge\n");
+    for (kind, q, v) in [
+        ("queue_wait", "0.5", snap.queue_wait_p50_s),
+        ("queue_wait", "0.95", snap.queue_wait_p95_s),
+        ("queue_wait", "0.99", snap.queue_wait_p99_s),
+        ("edge", "0.5", snap.edge_p50_s),
+        ("edge", "0.95", snap.edge_p95_s),
+        ("edge", "0.99", snap.edge_p99_s),
+        ("total", "0.5", snap.total_p50_s),
+        ("total", "0.95", snap.total_p95_s),
+        ("total", "0.99", snap.total_p99_s),
+    ] {
+        if let Some(x) = v {
+            out.push_str(&format!(
+                "venus_latency_seconds{{kind=\"{kind}\",quantile=\"{q}\"}} {x}\n"
+            ));
+        }
+    }
+
+    if let Some(m) = &snap.memory {
+        let mut mg = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+        };
+        mg("venus_memory_hot_bytes", "Hot-tier resident bytes.", m.hot_bytes as f64);
+        mg("venus_memory_hot_records", "Hot-tier index records.", m.hot_records as f64);
+        mg("venus_memory_cold_records", "Cold-tier index records.", m.cold_records as f64);
+        mg("venus_memory_cold_segments", "Cold-tier sealed segments.", m.cold_segments as f64);
+        mg(
+            "venus_memory_cold_resident_bytes",
+            "Cold-tier block-cache resident bytes.",
+            m.cold_resident_bytes as f64,
+        );
+        mg("venus_memory_evictions_total", "Hot-to-cold segment demotions.", m.evictions as f64);
+        mg("venus_memory_cold_hits_total", "Cold block-cache hits.", m.cold_hits as f64);
+        mg("venus_memory_cold_misses_total", "Cold block-cache misses.", m.cold_misses as f64);
+        mg(
+            "venus_memory_cold_probe_segments_total",
+            "Cold segments actually scanned (coarse probe survivors).",
+            m.cold_probe_segments as f64,
+        );
+        mg(
+            "venus_memory_cold_probe_candidates_total",
+            "Cold segments considered by the coarse probe.",
+            m.cold_probe_candidates as f64,
+        );
+        mg("venus_memory_cold_rows_scored_total", "Cold rows scored.", m.cold_rows_scored as f64);
+    }
+
+    if let Some(sc) = &snap.scoring {
+        let mut sg = |name: &str, help: &str, v: f64| {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+        };
+        sg("venus_score_pool_workers", "Scoring-pool worker threads.", sc.workers as f64);
+        sg("venus_score_pool_queue_depth", "Scoring tasks queued.", sc.queue_depth as f64);
+        sg("venus_score_pool_in_flight", "Scoring tasks executing.", sc.in_flight as f64);
+        sg("venus_score_pool_tasks_total", "Scoring tasks executed.", sc.tasks_total as f64);
+        sg("venus_score_pool_helped_total", "Tasks drained by submitters.", sc.helped_total as f64);
+        sg("venus_score_pool_batches_total", "Scatter-gather batches.", sc.batches_total as f64);
+        sg("venus_score_hot_ms_total", "Cumulative hot-tier scoring ms.", sc.hot_score_ms);
+        sg("venus_score_cold_ms_total", "Cumulative cold-tier scoring ms.", sc.cold_score_ms);
+    }
+
+    if let Some(tr) = tracer {
+        let c = tr.counts();
+        out.push_str(&format!(
+            "# HELP venus_traces_finished_total Traces published by the tracer.\n\
+             # TYPE venus_traces_finished_total counter\n\
+             venus_traces_finished_total {}\n",
+            c.finished
+        ));
+        out.push_str(&format!(
+            "# HELP venus_traces_slow_total Traces over the slow-query bar.\n\
+             # TYPE venus_traces_slow_total counter\n\
+             venus_traces_slow_total {}\n",
+            c.slow
+        ));
+        out.push_str(
+            "# HELP venus_stage_duration_seconds Span-derived per-stage latency histogram.\n\
+             # TYPE venus_stage_duration_seconds histogram\n",
+        );
+        for (name, h) in tr.stage_histograms() {
+            let stage = prom_escape(&name);
+            let mut cum = 0u64;
+            for (i, &bound) in HIST_BOUNDS_US.iter().enumerate() {
+                cum += h.buckets[i];
+                out.push_str(&format!(
+                    "venus_stage_duration_seconds_bucket{{stage=\"{stage}\",le=\"{}\"}} {cum}\n",
+                    bound as f64 / 1_000_000.0,
+                ));
+            }
+            cum += h.buckets[HIST_BOUNDS_US.len()];
+            out.push_str(&format!(
+                "venus_stage_duration_seconds_bucket{{stage=\"{stage}\",le=\"+Inf\"}} {cum}\n"
+            ));
+            out.push_str(&format!(
+                "venus_stage_duration_seconds_sum{{stage=\"{stage}\"}} {}\n",
+                h.sum_us as f64 / 1_000_000.0,
+            ));
+            out.push_str(&format!(
+                "venus_stage_duration_seconds_count{{stage=\"{stage}\"}} {}\n",
+                h.count
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::Metrics;
+
+    fn cfg(sample_n: usize, slow_ms: u64, ring: usize, slow_ring: usize) -> ObsConfig {
+        ObsConfig { trace_sample_n: sample_n, slow_query_ms: slow_ms, trace_ring: ring, slow_ring }
+    }
+
+    fn finish_one(tr: &Tracer, label: &str, total: Duration) -> Option<TraceId> {
+        let mut ctx = tr.mint("query", label)?;
+        let t0 = ctx.started();
+        ctx.record(stage::EMBED, t0, Duration::from_micros(300));
+        ctx.record_counters(
+            stage::SCORE,
+            t0,
+            Duration::from_micros(900),
+            &[("rows", 128.0), ("hot_ms", 0.4)],
+        );
+        ctx.record_counters(stage::SCORE_SHARD, t0, Duration::from_micros(800), &[("shard", 0.0)]);
+        ctx.record(stage::SELECT, t0, Duration::from_micros(50));
+        Some(tr.finish(ctx, total))
+    }
+
+    #[test]
+    fn trace_ids_render_and_parse() {
+        let id = TraceId(42);
+        assert_eq!(id.to_string(), "000000000000002a");
+        assert_eq!(TraceId::parse("000000000000002a"), Some(id));
+        assert_eq!(TraceId::parse("2a"), Some(id));
+        assert_eq!(TraceId::parse("not hex"), None);
+    }
+
+    #[test]
+    fn disabled_tracer_mints_nothing() {
+        let tr = Tracer::new(&cfg(0, 500, 8, 4));
+        for _ in 0..32 {
+            assert!(tr.mint("query", "q").is_none());
+        }
+        assert_eq!(tr.counts(), ObsCounts::default());
+    }
+
+    #[test]
+    fn head_sampling_honors_every_nth() {
+        let tr = Tracer::new(&cfg(4, 0, 64, 4));
+        let minted: Vec<bool> = (0..12).map(|_| tr.mint("query", "q").is_some()).collect();
+        assert_eq!(minted.iter().filter(|&&m| m).count(), 3, "{minted:?}");
+        assert!(minted[0], "the first request is always sampled");
+        // sample rate 1 traces everything
+        let tr = Tracer::new(&cfg(1, 0, 64, 4));
+        assert!((0..8).all(|_| tr.mint("query", "q").is_some()));
+    }
+
+    #[test]
+    fn finish_publishes_and_lookup_finds() {
+        let tr = Tracer::new(&cfg(1, 500, 8, 4));
+        let id = finish_one(&tr, "what happened", Duration::from_micros(1300)).unwrap();
+        let t = tr.lookup(id).expect("published");
+        assert_eq!(t.kind, "query");
+        assert_eq!(t.label, "what happened");
+        assert_eq!(t.total_us, 1300);
+        assert_eq!(t.spans.len(), 4);
+        // child spans don't count toward the stage sum
+        assert_eq!(t.stage_sum_us(), 300 + 900 + 50);
+        assert_eq!(t.span(stage::SCORE).unwrap().counters["rows"], 128.0);
+        assert!(tr.lookup(TraceId(9999)).is_none());
+        assert_eq!(tr.counts().finished, 1);
+        // fast query (1.3ms) stays out of the 500ms slow ring
+        assert!(tr.slow_recent(8).is_empty());
+        // histograms observed embed/score/select/total, not score/shard
+        let h = tr.stage_histograms();
+        assert_eq!(h["embed"].count, 1);
+        assert_eq!(h["score"].count, 1);
+        assert_eq!(h["total"].count, 1);
+        assert!(!h.contains_key("score/shard"));
+        assert_eq!(h["embed"].sum_us, 300);
+        assert!(h["embed"].mean_us() > 0.0);
+    }
+
+    #[test]
+    fn rings_stay_bounded_under_flood() {
+        let tr = Tracer::new(&cfg(1, 1, 8, 4));
+        let mut first = None;
+        for i in 0..100 {
+            let id = finish_one(&tr, &format!("q{i}"), Duration::from_millis(2)).unwrap();
+            first.get_or_insert(id);
+        }
+        assert_eq!(tr.recent(usize::MAX).len(), 8, "completed ring bounded");
+        assert_eq!(tr.slow_recent(usize::MAX).len(), 4, "slow ring bounded");
+        assert_eq!(tr.counts().finished, 100);
+        assert_eq!(tr.counts().slow, 100, "all crossed the 1ms bar");
+        // oldest evicted, newest retained
+        assert!(tr.lookup(first.unwrap()).is_none());
+        assert_eq!(tr.recent(1)[0].label, "q99");
+        assert_eq!(tr.slow_recent(1)[0].label, "q99");
+    }
+
+    #[test]
+    fn append_span_reaches_both_rings() {
+        let tr = Tracer::new(&cfg(1, 1, 8, 4));
+        let id = finish_one(&tr, "slow one", Duration::from_millis(5)).unwrap();
+        tr.append_span(
+            id,
+            Span {
+                stage: stage::GATEWAY_WRITE.into(),
+                start_us: 1300,
+                dur_us: 90,
+                counters: BTreeMap::new(),
+            },
+        );
+        assert!(tr.lookup(id).unwrap().span(stage::GATEWAY_WRITE).is_some());
+        assert!(tr.slow_recent(1)[0].span(stage::GATEWAY_WRITE).is_some());
+        // gateway I/O stages are children: rings carry them, the
+        // top-level stage histograms do not
+        assert!(!tr.stage_histograms().contains_key(stage::GATEWAY_WRITE));
+        tr.append_span(
+            id,
+            Span { stage: "flush".into(), start_us: 1400, dur_us: 30, counters: BTreeMap::new() },
+        );
+        assert_eq!(tr.stage_histograms()["flush"].count, 1);
+        // appending to an evicted/unknown id is a silent no-op
+        tr.append_span(
+            TraceId(77777),
+            Span { stage: "x".into(), start_us: 0, dur_us: 1, counters: BTreeMap::new() },
+        );
+    }
+
+    #[test]
+    fn trace_json_round_trips_and_tolerates_absent_keys() {
+        let tr = Tracer::new(&cfg(1, 500, 8, 4));
+        let id = finish_one(&tr, "round trip", Duration::from_micros(1300)).unwrap();
+        let t = tr.lookup(id).unwrap();
+        let wire = t.to_json().to_string();
+        let back = Trace::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, t);
+        // a minimal object from an older peer still parses
+        let sparse = Json::parse(r#"{"id":"2a","spans":[{"stage":"embed"}]}"#).unwrap();
+        let t = Trace::from_json(&sparse).unwrap();
+        assert_eq!(t.id, TraceId(42));
+        assert_eq!(t.kind, "query");
+        assert_eq!(t.total_us, 0);
+        assert_eq!(t.spans[0].stage, "embed");
+        assert_eq!(t.spans[0].dur_us, 0);
+        assert!(t.spans[0].counters.is_empty());
+        // missing id is the one hard error
+        assert!(Trace::from_json(&Json::parse(r#"{"spans":[]}"#).unwrap()).is_err());
+        assert!(Trace::from_json(&Json::parse(r#"{"id":"zz"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn render_shows_the_breakdown_tree() {
+        let tr = Tracer::new(&cfg(1, 500, 8, 4));
+        let id = finish_one(&tr, "render me", Duration::from_micros(1300)).unwrap();
+        let text = tr.lookup(id).unwrap().render();
+        assert!(text.contains("render me"), "{text}");
+        assert!(text.contains("embed"), "{text}");
+        assert!(text.contains("    score/shard"), "child indented: {text}");
+        assert!(text.contains("rows=128"), "{text}");
+        assert!(text.contains("total 1.30ms"), "{text}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_prom_output() {
+        let mut h = HistSnapshot::default();
+        h.observe(50); // <= 100us bucket
+        h.observe(200); // <= 250us
+        h.observe(7_000_000); // +Inf
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 1);
+        assert_eq!(h.buckets[15], 1);
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum_us, 7_000_250);
+    }
+
+    #[test]
+    fn prometheus_text_renders_snapshot_and_histograms() {
+        let m = Metrics::default();
+        m.on_accepted(crate::api::Priority::Interactive);
+        m.on_dequeued(crate::api::Priority::Interactive);
+        m.on_completed(crate::api::Priority::Interactive, 0.001, 0.01, 0.1, 16);
+        let snap = m.snapshot();
+        let tr = Tracer::new(&cfg(1, 500, 8, 4));
+        finish_one(&tr, "prom", Duration::from_micros(1300)).unwrap();
+        let text = prometheus_text(&snap, Some(&tr));
+        assert!(text.contains("# TYPE venus_uptime_seconds gauge"), "{text}");
+        assert!(text.contains("venus_lane_queries_total{lane=\"interactive\",event=\"completed\"} 1"));
+        assert!(text.contains("venus_latency_seconds{kind=\"total\",quantile=\"0.5\"}"));
+        assert!(text.contains("venus_started_unix_ms"));
+        assert!(text.contains("# TYPE venus_stage_duration_seconds histogram"));
+        assert!(text.contains("venus_stage_duration_seconds_bucket{stage=\"embed\",le=\"0.0001\"}"));
+        assert!(text.contains("venus_stage_duration_seconds_bucket{stage=\"total\",le=\"+Inf\"} 1"));
+        assert!(text.contains("venus_stage_duration_seconds_count{stage=\"score\"} 1"));
+        // every line is either a comment or `name{labels} value`
+        for line in text.lines() {
+            assert!(!line.is_empty());
+            assert!(line.starts_with('#') || line.starts_with("venus_"), "odd line: {line}");
+        }
+        // without a tracer the histogram family is absent but the
+        // snapshot gauges still render
+        let text = prometheus_text(&snap, None);
+        assert!(text.contains("venus_throughput_qps"));
+        assert!(!text.contains("venus_stage_duration_seconds"));
+    }
+
+    #[test]
+    fn labels_are_truncated_and_escaped() {
+        let tr = Tracer::new(&cfg(1, 0, 8, 4));
+        let long = "x".repeat(200);
+        let ctx = tr.mint("query", &long).unwrap();
+        assert_eq!(ctx.label.len(), 80);
+        assert_eq!(prom_escape("a\"b\\c"), "a\\\"b\\\\c");
+    }
+}

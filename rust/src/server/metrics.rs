@@ -47,6 +47,9 @@ pub struct Metrics {
     /// guard is released, never while holding one.
     inner: OrderedMutex<Inner>,
     started: Instant,
+    /// Wall-clock birth time (unix ms): lets a single `stats` reply
+    /// anchor rates (QPS, ingest FPS) without a second poll.
+    started_unix_ms: u64,
 }
 
 impl Default for Metrics {
@@ -54,8 +57,18 @@ impl Default for Metrics {
         Self {
             inner: OrderedMutex::new(ranks::SERVER_METRICS, Inner::default()),
             started: Instant::now(),
+            started_unix_ms: now_unix_ms(),
         }
     }
+}
+
+/// Current wall-clock time in unix milliseconds (0 if the clock is
+/// before the epoch — never panics on a skewed clock).
+pub fn now_unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 /// One lane's admission/completion counters.
@@ -85,6 +98,12 @@ pub struct Snapshot {
     pub shutdown: u64,
     pub failed: u64,
     pub uptime_s: f64,
+    /// Uptime in integer milliseconds (same clock as `uptime_s`; rate
+    /// math on the client side should prefer this).
+    pub uptime_ms: u64,
+    /// Wall-clock unix ms the serving process started (0 when unknown,
+    /// e.g. a reply from a pre-obs server).
+    pub started_unix_ms: u64,
     pub queue_wait_p50_s: Option<f64>,
     pub queue_wait_p95_s: Option<f64>,
     pub queue_wait_p99_s: Option<f64>,
@@ -362,7 +381,8 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Snapshot {
         let m = self.inner.lock();
-        let uptime = self.started.elapsed().as_secs_f64();
+        let elapsed = self.started.elapsed();
+        let uptime = elapsed.as_secs_f64();
         let pct = |s: &Samples, q: f64| -> Option<f64> {
             if s.is_empty() {
                 None
@@ -384,6 +404,8 @@ impl Metrics {
             shutdown: m.shutdown,
             failed: m.failed,
             uptime_s: uptime,
+            uptime_ms: elapsed.as_millis() as u64,
+            started_unix_ms: self.started_unix_ms,
             queue_wait_p50_s: pct(&m.queue_wait, 50.0),
             queue_wait_p95_s: pct(&m.queue_wait, 95.0),
             queue_wait_p99_s: pct(&m.queue_wait, 99.0),
@@ -443,6 +465,17 @@ impl Snapshot {
     /// Live occupancy across both lanes (current queue depth).
     pub fn queued(&self) -> u64 {
         self.interactive.queued + self.batch.queued
+    }
+
+    /// QPS derived from this one reply (completed ÷ uptime), preferring
+    /// the integer millisecond clock.  Falls back to the server-computed
+    /// `throughput_qps` when the reply predates `uptime_ms`.
+    pub fn derived_qps(&self) -> f64 {
+        if self.uptime_ms > 0 {
+            self.completed() as f64 / (self.uptime_ms as f64 / 1000.0)
+        } else {
+            self.throughput_qps
+        }
     }
 
     pub fn render(&self) -> String {
@@ -525,6 +558,8 @@ impl Snapshot {
         m.insert("shutdown".into(), Json::Num(self.shutdown as f64));
         m.insert("failed".into(), Json::Num(self.failed as f64));
         m.insert("uptime_s".into(), Json::Num(self.uptime_s));
+        m.insert("uptime_ms".into(), Json::Num(self.uptime_ms as f64));
+        m.insert("started_unix_ms".into(), Json::Num(self.started_unix_ms as f64));
         let mut opt = |key: &str, v: Option<f64>| {
             if let Some(x) = v {
                 m.insert(key.into(), Json::Num(x));
@@ -573,6 +608,13 @@ impl Snapshot {
             shutdown: v.get("shutdown")?.as_usize()? as u64,
             failed: v.get("failed")?.as_usize()? as u64,
             uptime_s: v.get("uptime_s")?.as_f64()?,
+            // absent on pre-obs servers: tolerate, don't error
+            uptime_ms: v.opt("uptime_ms").map(|x| x.as_usize()).transpose()?.unwrap_or(0) as u64,
+            started_unix_ms: v
+                .opt("started_unix_ms")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(0) as u64,
             queue_wait_p50_s: opt("queue_wait_p50_s")?,
             queue_wait_p95_s: opt("queue_wait_p95_s")?,
             queue_wait_p99_s: opt("queue_wait_p99_s")?,
@@ -822,6 +864,34 @@ mod tests {
         assert_eq!(sc.workers, 2);
         assert_eq!(sc.tasks_total, 0);
         assert_eq!(sc.cold_score_ms, 0.0);
+    }
+
+    #[test]
+    fn uptime_clock_survives_the_wire_and_derives_qps() {
+        let m = Metrics::default();
+        m.on_accepted(Priority::Interactive);
+        m.on_dequeued(Priority::Interactive);
+        m.on_completed(Priority::Interactive, 0.0, 0.01, 0.02, 4);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let s = m.snapshot();
+        assert!(s.uptime_ms >= 5, "uptime_ms tracks the monotonic clock: {}", s.uptime_ms);
+        assert!(s.started_unix_ms > 0, "wall-clock birth time is stamped");
+        assert!(s.derived_qps() > 0.0);
+        let wire = s.to_json().to_string();
+        let back = Snapshot::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.uptime_ms, s.uptime_ms);
+        assert_eq!(back.started_unix_ms, s.started_unix_ms);
+        // a pre-obs server's reply lacks both keys: parse tolerates and
+        // derived_qps falls back to the server-computed rate
+        let mut legacy = s.to_json();
+        if let Json::Obj(map) = &mut legacy {
+            map.remove("uptime_ms");
+            map.remove("started_unix_ms");
+        }
+        let back = Snapshot::from_json(&Json::parse(&legacy.to_string()).unwrap()).unwrap();
+        assert_eq!(back.uptime_ms, 0);
+        assert_eq!(back.started_unix_ms, 0);
+        assert_eq!(back.derived_qps(), back.throughput_qps);
     }
 
     #[test]

@@ -27,7 +27,8 @@
 pub mod metrics;
 
 pub use metrics::{
-    IngestSnapshot, IngestStreamSnapshot, LaneSnapshot, Metrics, ScorePoolSnapshot, Snapshot,
+    now_unix_ms, IngestSnapshot, IngestStreamSnapshot, LaneSnapshot, Metrics, ScorePoolSnapshot,
+    Snapshot,
 };
 
 use std::collections::VecDeque;
@@ -35,7 +36,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -48,6 +49,7 @@ use crate::coordinator::query::{QueryEngine, QueryOutcome};
 use crate::embed::EmbedEngine;
 use crate::memory::MemoryFabric;
 use crate::net::{Link, Payload};
+use crate::obs::{stage, TraceCtx, TraceId, Tracer};
 use crate::util::scorer::ScorePool;
 use crate::util::sync::{ranks, OrderedCondvar, OrderedMutex};
 
@@ -58,6 +60,9 @@ struct Job {
     /// absolute deadline resolved at submission
     deadline: Option<Instant>,
     reply: SyncSender<Result<QueryResponse, ApiError>>,
+    /// per-request span collector, minted at admission when this request
+    /// was head-sampled (`None` ⇒ untraced, zero overhead downstream)
+    trace: Option<TraceCtx>,
 }
 
 /// Two bounded FIFO lanes under one condvar: interactive pops first.
@@ -142,6 +147,10 @@ pub struct Service {
     /// scatter-gather scoring out to — kept for the utilization gauges
     /// in [`Service::snapshot`].
     pool: Arc<ScorePool>,
+    /// Per-stage span capture + slow-query log (DESIGN.md
+    /// §Observability): the wire gateway serves its rings through the
+    /// `trace` / `metrics_text` envelopes.
+    pub tracer: Arc<Tracer>,
     next_id: AtomicU64,
 }
 
@@ -161,6 +170,7 @@ impl Service {
         // ONE scoring pool shared by every worker's engine: a per-worker
         // pool would oversubscribe cores `workers`-fold under load
         let pool = Arc::new(ScorePool::new(cfg.server.resolved_score_workers()));
+        let tracer = Arc::new(Tracer::new(&cfg.obs));
         let mut engines = Vec::new();
         for w in 0..cfg.server.workers {
             engines.push(
@@ -178,11 +188,12 @@ impl Service {
             let lanes2 = Arc::clone(&lanes);
             let met = Arc::clone(&metrics);
             let cache2 = Arc::clone(&cache);
+            let tracer2 = Arc::clone(&tracer);
             let link = Link::new(cfg.net.clone());
             let vlm = VlmClient::new(cfg.cloud.clone(), seed ^ 0xf00d ^ w as u64);
             let fps = cfg.api.fps;
             workers.push(std::thread::spawn(move || {
-                worker_loop(engine, lanes2, met, link, vlm, cache2, fps)
+                worker_loop(engine, lanes2, met, tracer2, link, vlm, cache2, fps)
             }));
         }
         Ok(Self {
@@ -192,6 +203,7 @@ impl Service {
             cache,
             fabric,
             pool,
+            tracer,
             next_id: AtomicU64::new(0),
         })
     }
@@ -229,6 +241,9 @@ impl Service {
         request: QueryRequest,
     ) -> std::result::Result<Receiver<Result<QueryResponse, ApiError>>, ApiError> {
         let lane = request.priority;
+        // mint the trace before enqueueing so span offsets (queue wait
+        // included) are measured from a birth instant that precedes them
+        let trace = self.tracer.mint("query", &request.text);
         let (reply_tx, reply_rx) = sync_channel(1);
         let now = Instant::now();
         let job = Job {
@@ -237,6 +252,7 @@ impl Service {
             request,
             enqueued: now,
             reply: reply_tx,
+            trace,
         };
         match self.lanes.push(lane.index(), job) {
             Ok(()) => {
@@ -294,16 +310,18 @@ fn worker_loop(
     mut engine: QueryEngine,
     lanes: Arc<Lanes>,
     metrics: Arc<Metrics>,
+    tracer: Arc<Tracer>,
     link: Link,
     vlm: VlmClient,
     cache: Arc<QueryCache>,
     fps: f64,
 ) {
-    while let Some(job) = lanes.pop() {
+    while let Some(mut job) = lanes.pop() {
         let lane = job.request.priority;
         metrics.on_dequeued(lane);
         // deadline-aware shedding: a query that aged out in the queue is
         // answered with the typed error instead of burning edge compute
+        // (its trace context, if any, is dropped unfinished)
         if let Some(deadline) = job.deadline {
             if Instant::now() > deadline {
                 metrics.on_deadline_shed(lane);
@@ -311,19 +329,41 @@ fn worker_loop(
                 continue;
             }
         }
-        let queue_wait_s = job.enqueued.elapsed().as_secs_f64();
-        let result = engine.retrieve_request(
+        let queue_wait = job.enqueued.elapsed();
+        let queue_wait_s = queue_wait.as_secs_f64();
+        let mut trace = job.trace.take();
+        if let Some(tc) = trace.as_mut() {
+            tc.record(stage::QUEUE_WAIT, job.enqueued, queue_wait);
+        }
+        let result = engine.retrieve_request_traced(
             &job.request.text,
             job.request.scope,
             job.request.mode,
             job.request.budget,
             Some(cache.as_ref()),
+            trace.as_mut(),
         );
         match result {
             Ok((outcome, cache_status)) => {
                 let n = outcome.selection.frames.len();
                 let upload_s = link.round_trip_s(Payload::Frames(n));
                 let vlm_s = vlm.infer_latency_s(n, job.request.approx_tokens());
+                // publish the trace BEFORE replying, so the submitting
+                // client can fetch its own span tree the moment it holds
+                // the response
+                let trace_id = trace.map(|mut tc| {
+                    // upload + VLM latencies are modeled (the simulated
+                    // link/VLM compute them instantly): place their spans
+                    // after the measured edge stages at the simulated
+                    // durations, keeping the span tree non-overlapping
+                    // and its top-level sum tracking the reported total
+                    let edge_end_us = tc.started().elapsed().as_micros() as u64;
+                    let upload_us = (upload_s * 1e6) as u64;
+                    tc.record_at(stage::UPLOAD, edge_end_us, upload_us, &[("frames", n as f64)]);
+                    tc.record_at(stage::VLM, edge_end_us + upload_us, (vlm_s * 1e6) as u64, &[]);
+                    let total = queue_wait_s + outcome.timings.total_s() + upload_s + vlm_s;
+                    tracer.finish(tc, Duration::from_secs_f64(total))
+                });
                 let response = build_response(
                     job.id,
                     lane,
@@ -333,6 +373,7 @@ fn worker_loop(
                     queue_wait_s,
                     upload_s,
                     vlm_s,
+                    trace_id,
                 );
                 metrics.on_completed(
                     lane,
@@ -344,6 +385,10 @@ fn worker_loop(
                 let _ = job.reply.send(Ok(response));
             }
             Err(e) => {
+                if let Some(tc) = trace {
+                    let elapsed = tc.started().elapsed();
+                    tracer.finish(tc, elapsed);
+                }
                 metrics.on_failed();
                 let _ = job.reply.send(Err(ApiError::Engine(format!("{e:#}"))));
             }
@@ -354,6 +399,7 @@ fn worker_loop(
 /// Assemble the wire response from an edge outcome: evidence entries
 /// carry the fabric-global frame id, its wall-clock position in the
 /// stream (`idx / fps`), and the Eq. 4–5 score that drew it.
+#[allow(clippy::too_many_arguments)]
 fn build_response(
     id: u64,
     priority: Priority,
@@ -363,6 +409,7 @@ fn build_response(
     queue_wait_s: f64,
     upload_s: f64,
     vlm_s: f64,
+    trace_id: Option<TraceId>,
 ) -> QueryResponse {
     let evidence = outcome
         .selection
@@ -385,6 +432,7 @@ fn build_response(
         edge: outcome.timings,
         upload_s,
         vlm_s,
+        trace_id,
     }
 }
 
@@ -400,6 +448,7 @@ mod tests {
             enqueued: Instant::now(),
             deadline: None,
             reply: tx,
+            trace: None,
         };
         (job, rx)
     }
@@ -482,5 +531,29 @@ mod tests {
         let sc = snap.scoring.expect("service snapshots carry pool gauges");
         assert!(sc.workers >= 1);
         assert_eq!(sc.queue_depth, 0, "idle pool reports an empty queue");
+    }
+
+    #[test]
+    fn default_sampling_traces_every_query_and_publishes_before_reply() {
+        let cfg = VenusConfig::default();
+        let d = EmbedEngine::default_backend(false).unwrap().d_embed();
+        let raws: Vec<Box<dyn crate::memory::RawStore>> =
+            vec![Box::new(crate::memory::InMemoryRaw::new(8))];
+        let fabric = Arc::new(MemoryFabric::new(&cfg.memory, d, raws).unwrap());
+        let service = Service::start(&cfg, fabric, 3).unwrap();
+
+        let resp = service.call(QueryRequest::new("trace me please")).unwrap();
+        let id = resp.trace_id.expect("default obs config samples 1/1");
+        // finish() runs before the reply is sent: the trace must already
+        // be in the ring by the time the caller holds the response
+        let tr = service.tracer.lookup(id).expect("trace published before reply");
+        assert_eq!(tr.kind, "query");
+        for st in [stage::QUEUE_WAIT, stage::EMBED, stage::SCORE, stage::VLM] {
+            assert!(tr.span(st).is_some(), "missing span {st:?}");
+        }
+        // cold path over an empty fabric still reports a coherent total:
+        // top-level stages fit inside it
+        assert!(tr.stage_sum_us() <= tr.total_us.max(1) * 2);
+        service.shutdown();
     }
 }

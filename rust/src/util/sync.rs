@@ -93,6 +93,12 @@ pub mod ranks {
     pub const WIRE_CONNS: u32 = 2_000_020;
     /// Gateway handler-thread join list.
     pub const WIRE_HANDLERS: u32 = 2_000_030;
+    /// Central trace collector rings (`obs::Tracer`) — the very top:
+    /// finished span trees are published after every other lock is
+    /// released (workers finish a trace only once guards, metrics and
+    /// wire locks are gone), and readers (the `trace` / `metrics_text`
+    /// wire arms) take it with nothing else held.
+    pub const OBS_TRACER: u32 = 2_000_040;
 
     /// Rank of fabric shard `index` (ascending `StreamId` order).  The
     /// fabric caps streams at `u16::MAX`, so the shard band never

@@ -1,0 +1,267 @@
+//! End-to-end query-tracing suite: span-tree completeness over a live
+//! wire gateway, trace JSON round-trip tolerance, head-sampling
+//! honored, slow-ring bounds under flood, and the disabled-path
+//! overhead guard (opt-in via `OBS_OVERHEAD_ASSERT=1` — wall-clock
+//! bounds are hostile to loaded CI machines).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use venus::api::QueryRequest;
+use venus::config::{MemoryConfig, ObsConfig, VenusConfig};
+use venus::memory::{ClusterRecord, Hierarchy, InMemoryRaw, MemoryFabric, RawStore, StreamId};
+use venus::net::wire::{Gateway, WireClient};
+use venus::obs::{stage, Trace, Tracer};
+use venus::server::Service;
+use venus::util::json::Json;
+use venus::util::rng::Pcg64;
+use venus::util::sync::OrderedRwLock;
+use venus::video::frame::Frame;
+
+/// A deterministic fabric: `streams` shards, each with `clusters`
+/// random-unit-vector records over 4-frame clusters (same construction
+/// as the wire_protocol suite).
+fn seeded_fabric(d: usize, streams: usize, clusters: u64, seed: u64) -> Arc<MemoryFabric> {
+    let raws: Vec<Box<dyn RawStore>> =
+        (0..streams).map(|_| Box::new(InMemoryRaw::new(8)) as Box<dyn RawStore>).collect();
+    let fabric = Arc::new(MemoryFabric::new(&MemoryConfig::default(), d, raws).unwrap());
+    let mut rng = Pcg64::seeded(seed);
+    for sid in 0..streams as u16 {
+        let shard: &Arc<OrderedRwLock<Hierarchy>> = fabric.shard(StreamId(sid)).unwrap();
+        let mut g = shard.write();
+        for c in 0..clusters {
+            for f in c * 4..(c + 1) * 4 {
+                g.archive_frame(f, &Frame::filled(8, [0.5; 3])).unwrap();
+            }
+            let mut v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            venus::util::l2_normalize(&mut v);
+            g.insert(
+                &v,
+                ClusterRecord {
+                    stream: StreamId(sid),
+                    scene_id: c as usize,
+                    centroid_frame: c * 4,
+                    members: (c * 4..(c + 1) * 4).collect(),
+                },
+            )
+            .unwrap();
+        }
+    }
+    fabric
+}
+
+fn embed_dim() -> usize {
+    venus::embed::EmbedEngine::default_backend(false).unwrap().d_embed()
+}
+
+/// Acceptance: a traced wire query's span tree carries every pipeline
+/// stage (gateway I/O included), top-level spans tile the timeline
+/// without overlap, the stage sum lands within 10% of the reported
+/// total, and the tree survives a JSON round trip.
+#[test]
+fn wire_query_trace_is_complete_and_sums_to_the_total() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 2, 8, 0x0b5e);
+    let mut cfg = VenusConfig::default();
+    cfg.wire.listen = "127.0.0.1:0".into();
+    let service = Arc::new(Service::start(&cfg, fabric, 17).unwrap());
+    let gateway = Gateway::start(&cfg.wire, Arc::clone(&service)).unwrap();
+    let mut client = WireClient::connect(gateway.local_addr()).unwrap();
+
+    let resp = client
+        .query(QueryRequest::new("what happened with concept02"))
+        .unwrap()
+        .unwrap();
+    let id = resp.trace_id.expect("default config samples every query");
+
+    // fetched over the SAME connection: the handler appended the
+    // gateway/write span before it could read this trace request
+    let t = client.trace(id).unwrap().expect("trace still in the ring");
+    assert_eq!(t.id, id);
+    assert_eq!(t.kind, "query");
+    for s in [
+        stage::GATEWAY_READ,
+        stage::QUEUE_WAIT,
+        stage::CACHE_PROBE,
+        stage::EMBED,
+        stage::SCORE,
+        stage::SELECT,
+        stage::FETCH,
+        stage::UPLOAD,
+        stage::VLM,
+        stage::GATEWAY_WRITE,
+    ] {
+        assert!(t.span(s).is_some(), "stage '{s}' missing from {t:?}");
+    }
+
+    // top-level spans tile the timeline: sorted by start, each begins no
+    // earlier than the previous one ended (±500 µs clock-read slack)
+    let mut tops: Vec<_> = t.spans.iter().filter(|s| !s.is_child()).collect();
+    tops.sort_by_key(|s| s.start_us);
+    for w in tops.windows(2) {
+        let prev_end = w[0].start_us + w[0].dur_us;
+        assert!(
+            w[1].start_us + 500 >= prev_end,
+            "'{}' (ends {prev_end}) overlaps '{}' (starts {})",
+            w[0].stage,
+            w[1].stage,
+            w[1].start_us
+        );
+    }
+
+    // the --trace contract: stage sum within 10% of the reported total
+    let sum = t.stage_sum_us() as f64;
+    let total = t.total_us as f64;
+    assert!(total > 0.0);
+    assert!(
+        (sum - total).abs() <= total * 0.10,
+        "stage sum {sum}us vs total {total}us drifts past 10%: {}",
+        t.render()
+    );
+    // ...and the wire response's own clock agrees with the trace
+    let resp_total_us = resp.total_s() * 1e6;
+    assert!(
+        (total - resp_total_us).abs() <= resp_total_us * 0.10 + 2_000.0,
+        "trace total {total}us vs response total {resp_total_us}us"
+    );
+
+    // scoring counters ride the span tree
+    let score = t.span(stage::SCORE).unwrap();
+    assert!(score.counters.contains_key("rows"), "{score:?}");
+    assert!(score.counters.contains_key("shards"), "{score:?}");
+
+    // JSON round trip is lossless for a live trace
+    let wire_json = t.to_json().to_string();
+    let back = Trace::from_json(&Json::parse(&wire_json).unwrap()).unwrap();
+    assert_eq!(back, t);
+
+    drop(client);
+    gateway.shutdown();
+    Arc::try_unwrap(service).ok().expect("service released").shutdown();
+}
+
+/// The telemetry surface: `metrics_text` renders Prometheus text with
+/// span-derived histograms, and the recent/slow trace listings answer
+/// over the same connection.
+#[test]
+fn metrics_text_and_trace_listings_over_the_wire() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 1, 6, 0x3e7a);
+    let mut cfg = VenusConfig::default();
+    cfg.wire.listen = "127.0.0.1:0".into();
+    let service = Arc::new(Service::start(&cfg, fabric, 5).unwrap());
+    let gateway = Gateway::start(&cfg.wire, Arc::clone(&service)).unwrap();
+    let mut client = WireClient::connect(gateway.local_addr()).unwrap();
+
+    for i in 0..3 {
+        client.query(QueryRequest::new(format!("metrics warmup query {i}"))).unwrap().unwrap();
+    }
+
+    let text = client.metrics_text().unwrap();
+    for needle in [
+        "venus_uptime_seconds",
+        "venus_throughput_qps",
+        "venus_lane_queries_total",
+        "venus_traces_finished_total",
+        "venus_stage_duration_seconds_bucket",
+        "stage=\"embed\"",
+        "stage=\"total\"",
+    ] {
+        assert!(text.contains(needle), "metrics text missing '{needle}':\n{text}");
+    }
+
+    let recent = client.recent_traces(10, false).unwrap();
+    assert!(recent.len() >= 3, "3 queries traced, got {}", recent.len());
+    assert!(recent.iter().all(|t| t.kind == "query"));
+    // newest first
+    assert!(recent[0].label.contains("query 2"), "{}", recent[0].label);
+    // the slow listing answers (contents depend on machine speed)
+    let _slow = client.recent_traces(10, true).unwrap();
+    // an unknown id is an empty listing, not an error
+    assert!(client.trace(venus::obs::TraceId(0xdead_beef)).unwrap().is_none());
+
+    drop(client);
+    gateway.shutdown();
+    Arc::try_unwrap(service).ok().expect("service released").shutdown();
+}
+
+/// Head sampling: `trace_sample_n = 2` traces every other query;
+/// `trace_sample_n = 0` mints nothing and echoes no ids.
+#[test]
+fn sampling_rate_is_honored_and_disabled_means_no_ids() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 1, 6, 0x5a11);
+    let mut cfg = VenusConfig::default();
+    cfg.obs.trace_sample_n = 2;
+    let service = Service::start(&cfg, Arc::clone(&fabric), 3).unwrap();
+    let sampled: Vec<bool> = (0..4)
+        .map(|i| {
+            let r = service.call(QueryRequest::new(format!("sampling probe {i}"))).unwrap();
+            r.trace_id.is_some()
+        })
+        .collect();
+    assert_eq!(sampled, vec![true, false, true, false], "1-in-2 head sampling");
+    assert_eq!(service.tracer.counts().finished, 2);
+    service.shutdown();
+
+    let mut cfg = VenusConfig::default();
+    cfg.obs.trace_sample_n = 0;
+    let service = Service::start(&cfg, fabric, 3).unwrap();
+    for i in 0..4 {
+        let r = service.call(QueryRequest::new(format!("untraced probe {i}"))).unwrap();
+        assert!(r.trace_id.is_none(), "tracing disabled must echo no id");
+    }
+    assert_eq!(service.tracer.counts().finished, 0);
+    assert!(service.tracer.recent(usize::MAX).is_empty());
+    service.shutdown();
+}
+
+/// Flood: with a 1 ms slow bar every query is "slow", yet both rings
+/// hold their configured bounds and the monotone counters keep the
+/// full tally.
+#[test]
+fn slow_ring_stays_bounded_under_flood() {
+    let d = embed_dim();
+    let fabric = seeded_fabric(d, 1, 6, 0xf10d);
+    let mut cfg = VenusConfig::default();
+    cfg.obs.slow_query_ms = 1; // the modeled VLM stage alone is >100 ms
+    cfg.obs.trace_ring = 8;
+    cfg.obs.slow_ring = 4;
+    let service = Service::start(&cfg, fabric, 9).unwrap();
+    for i in 0..20 {
+        service.call(QueryRequest::new(format!("flood query number {i}"))).unwrap();
+    }
+    assert_eq!(service.tracer.recent(usize::MAX).len(), 8, "completed ring bounded");
+    assert_eq!(service.tracer.slow_recent(usize::MAX).len(), 4, "slow ring bounded");
+    let c = service.tracer.counts();
+    assert_eq!(c.finished, 20);
+    assert_eq!(c.slow, 20, "every query crossed the 1 ms bar");
+    service.shutdown();
+}
+
+/// Opt-in overhead guard (`OBS_OVERHEAD_ASSERT=1`): the disabled-path
+/// mint is a single branch — no atomics, no allocation — so even ten
+/// million calls must finish in well under a second.
+#[test]
+fn disabled_path_mint_overhead_guard() {
+    if std::env::var("OBS_OVERHEAD_ASSERT").ok().as_deref() != Some("1") {
+        return; // wall-clock assertions are opt-in (loaded CI machines)
+    }
+    let tracer = Tracer::new(&ObsConfig {
+        trace_sample_n: 0,
+        ..ObsConfig::default()
+    });
+    let t0 = Instant::now();
+    let mut minted = 0u64;
+    for _ in 0..10_000_000u64 {
+        if tracer.mint("query", "overhead probe").is_some() {
+            minted += 1;
+        }
+    }
+    assert_eq!(minted, 0);
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed.as_millis() < 1000,
+        "10M disabled mints took {elapsed:?} — the disabled path must stay branch-cheap"
+    );
+}

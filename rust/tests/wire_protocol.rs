@@ -518,6 +518,8 @@ fn every_envelope_tag_has_a_malformed_frame_vector() {
         ("stats before the handshake", br#"{"type":"stats"}"#),
         ("ping before the handshake", br#"{"type":"ping"}"#),
         ("shutdown before the handshake", br#"{"type":"shutdown"}"#),
+        ("trace with an unparseable id", br#"{"type":"trace","id":"not-hex"}"#),
+        ("metrics_text before the handshake", br#"{"type":"metrics_text"}"#),
         // server-direction tags sent *to* the server: wrong direction
         ("hello_ack from a client", br#"{"type":"hello_ack","session":1,"streams":1,"version":1}"#),
         ("response from a client", br#"{"type":"response","response":{}}"#),
@@ -578,6 +580,21 @@ fn every_envelope_tag_has_a_malformed_frame_vector() {
         }
         other => panic!("expected a typed protocol error, got {other:?}"),
     }
+    drop(s);
+    assert_healthy(addr);
+
+    // after a valid handshake, a trace fetch with a garbage id is a
+    // typed protocol error on that connection
+    let mut s = raw_conn(addr);
+    send_raw(&mut s, &frame_bytes(br#"{"type":"hello","version":1}"#));
+    let ack = ServerMsg::from_json(&read_frame(&mut s, MAX).unwrap()).unwrap();
+    assert!(matches!(ack, ServerMsg::HelloAck { .. }));
+    send_raw(&mut s, &frame_bytes(br#"{"type":"trace","id":"zzz"}"#));
+    let reply = ServerMsg::from_json(&read_frame(&mut s, MAX).unwrap()).unwrap();
+    assert!(
+        matches!(reply, ServerMsg::Error { error: WireError::Protocol(_) }),
+        "unparseable trace id must be a typed error, got {reply:?}"
+    );
     drop(s);
     assert_healthy(addr);
 
